@@ -1,0 +1,104 @@
+//! Netflix Prize case study (paper §6.2).
+//!
+//!   cargo run --release --example netflix_ratings
+//!
+//! Joins a Netflix-shaped training_set with the qualifying probes on the
+//! movie key — a join with extreme per-movie multiplicity skew — and
+//! compares ApproxJoin against repartition and native joins at several
+//! sampling fractions (the Fig 13b latency story), plus an AVG-rating
+//! query with an error budget to show the estimator on skewed strata.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::data::netflix::{generate, NetflixSpec};
+use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
+use approxjoin::join::native::native_join;
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::query::parse;
+use approxjoin::row;
+use approxjoin::stats::EstimatorKind;
+use approxjoin::util::{fmt, Table};
+use std::collections::HashMap;
+
+fn main() -> anyhow::Result<()> {
+    // 1/300 scale: the movie-key join's output is quadratic in per-movie
+    // multiplicities (popular movies contribute ratings x probes pairs)
+    let spec = NetflixSpec {
+        training_ratings: 300_000,
+        qualifying_probes: 10_000,
+        ..Default::default()
+    };
+    let ds = generate(&spec);
+    println!(
+        "dataset: {} training ratings over {} movies, {} qualifying probes\n",
+        fmt::count(ds[0].len()),
+        fmt::count(spec.movies),
+        fmt::count(ds[1].len())
+    );
+
+    let mk = || SimCluster::new(10, TimeModel::paper_cluster());
+
+    // exact joins: the latency comparison of Fig 13a
+    let nat = native_join(&mut mk(), &ds, CombineOp::Left, u64::MAX)?;
+    let rep = repartition_join(&mut mk(), &ds, CombineOp::Left);
+    let mut t = Table::new(&["system", "cluster time", "shuffled", "output pairs"]);
+    t.row(row![
+        "native spark join",
+        fmt::duration(nat.metrics.total_sim_secs()),
+        fmt::bytes(nat.metrics.total_shuffled_bytes()),
+        fmt::count(nat.output_cardinality() as u64)
+    ]);
+    t.row(row![
+        "spark repartition join",
+        fmt::duration(rep.metrics.total_sim_secs()),
+        fmt::bytes(rep.metrics.total_shuffled_bytes()),
+        fmt::count(rep.output_cardinality() as u64)
+    ]);
+    t.print();
+
+    // sampling fractions: Fig 13b
+    println!("\nsampling during the join (rating x probe pairs):\n");
+    let mut t = Table::new(&["fraction", "cluster time", "sampled pairs", "speedup vs native"]);
+    for fraction in [0.05, 0.1, 0.4] {
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            estimator: EstimatorKind::Clt,
+            seed: 9,
+        };
+        let run = approx_join(
+            &mut mk(),
+            &ds,
+            CombineOp::Left,
+            FilterConfig::for_inputs(&ds, 0.01),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )?;
+        let sampled: f64 = run.strata.values().map(|s| s.count).sum();
+        t.row(row![
+            fmt::pct(fraction),
+            fmt::duration(run.metrics.total_sim_secs()),
+            fmt::count(sampled as u64),
+            fmt::speedup(nat.metrics.total_sim_secs() / run.metrics.total_sim_secs())
+        ]);
+    }
+    t.print();
+
+    // an AVG-rating query with an error budget through the full engine
+    let mut named = HashMap::new();
+    named.insert("training".to_string(), ds[0].clone());
+    named.insert("qualifying".to_string(), ds[1].clone());
+    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
+    let q = parse(
+        "SELECT AVG(training.rating) FROM training, qualifying \
+         WHERE training.movie = qualifying.movie ERROR 0.05 CONFIDENCE 95%",
+    )?;
+    let out = engine.execute(&q, &named)?;
+    println!(
+        "\nAVG rating of probed movies: {:.4} \u{b1} {:.4} (95%), {} samples, mode {:?}",
+        out.result.estimate, out.result.error_bound, out.result.samples, out.mode
+    );
+    Ok(())
+}

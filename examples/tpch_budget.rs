@@ -1,0 +1,94 @@
+//! TPC-H with query budgets (paper §5.5).
+//!
+//!   cargo run --release --example tpch_budget
+//!
+//! Generates a mini TPC-H database, then answers the paper's question —
+//! "what is the total amount of money the customers had before ordering?"
+//! (SUM(o_totalprice + c_acctbal) over CUSTOMER ⋈ ORDERS) — exactly and
+//! under latency/error budgets, and runs the join-only Q3/Q4/Q10 latency
+//! comparison of Fig 12a.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::data::tpch::{self, TpchQuery};
+use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::query::parse;
+use approxjoin::row;
+use approxjoin::util::{fmt, Table};
+use std::collections::HashMap;
+
+fn main() -> anyhow::Result<()> {
+    let sf = 0.02;
+    let db = tpch::generate(sf, 42);
+    println!(
+        "TPC-H SF={sf}: {} customers, {} orders, {} lineitems\n",
+        fmt::count(db.customers.len() as u64),
+        fmt::count(db.orders.len() as u64),
+        fmt::count(db.lineitems.len() as u64)
+    );
+
+    // Fig 12a: join-only queries
+    let mk = || SimCluster::new(10, TimeModel::paper_cluster());
+    let mut t = Table::new(&["query", "approxjoin", "snappy-like", "speedup"]);
+    for q in [TpchQuery::Q3, TpchQuery::Q4, TpchQuery::Q10] {
+        let mut aj_total = 0.0;
+        let mut sd_total = 0.0;
+        for (left, right) in q.join_steps(&db, 20) {
+            let ins = [left, right];
+            let aj = bloom_join(
+                &mut mk(),
+                &ins,
+                CombineOp::Sum,
+                FilterConfig::for_inputs(&ins, 0.01),
+                &mut NativeProber,
+            )?;
+            aj_total += aj.metrics.total_sim_secs();
+            sd_total += repartition_join(&mut mk(), &ins, CombineOp::Sum)
+                .metrics
+                .total_sim_secs();
+        }
+        t.row(row![
+            q.name(),
+            fmt::duration(aj_total),
+            fmt::duration(sd_total),
+            fmt::speedup(sd_total / aj_total)
+        ]);
+    }
+    t.print();
+
+    // the §5.5 aggregation query through the engine, exact + budgeted
+    let mut named = HashMap::new();
+    named.insert("customer".to_string(), db.customer_by_custkey(20));
+    named.insert("orders".to_string(), db.orders_by_custkey(20));
+    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
+
+    let base = "SELECT SUM(customer.acctbal + orders.totalprice) FROM customer, orders \
+                WHERE customer.custkey = orders.custkey";
+    println!("\nquery: total money the customers had before ordering\n");
+    let mut t = Table::new(&["budget", "mode", "estimate ± bound", "cluster time"]);
+    let exact = engine.execute(&parse(base)?, &named)?;
+    t.row(row![
+        "none",
+        format!("{:?}", exact.mode),
+        format!("{:.4e}", exact.result.estimate),
+        fmt::duration(exact.sim_secs)
+    ]);
+    for budget in ["WITHIN 2 SECONDS", "WITHIN 5 SECONDS"] {
+        let out = engine.execute(&parse(&format!("{base} {budget}"))?, &named)?;
+        t.row(row![
+            budget,
+            format!("{:?}", out.mode),
+            format!(
+                "{:.4e} \u{b1} {:.2e} ({})",
+                out.result.estimate,
+                out.result.error_bound,
+                fmt::pct(((out.result.estimate - exact.result.estimate) / exact.result.estimate).abs())
+            ),
+            fmt::duration(out.sim_secs)
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the Rust side unwraps with
+``to_tuple*``.
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts
+Makefile target ``artifacts`` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all() -> dict[str, str]:
+    """Lower every artifact; returns {name: hlo_text}."""
+    b, s, w = model.BATCH, model.STRATA, model.NWORDS
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    arts = {}
+
+    arts["join_agg"] = to_hlo_text(jax.jit(model.join_agg).lower(
+        _spec((b,), f32), _spec((b,), f32), _spec((b,), i32),
+        _spec((b,), f32), _spec((4,), f32)))
+
+    arts["bloom_probe"] = to_hlo_text(jax.jit(model.bloom_probe).lower(
+        _spec((w,), u32), _spec((b,), u32)))
+
+    arts["clt_estimate"] = to_hlo_text(jax.jit(model.clt_estimate).lower(
+        _spec((s,), f32), _spec((s,), f32), _spec((s,), f32), _spec((s,), f32)))
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = lower_all()
+    manifest = {
+        "geometry": {
+            "batch": model.BATCH,
+            "strata": model.STRATA,
+            "num_hashes": model.NUM_HASHES,
+            "log2_bits": model.LOG2_BITS,
+            "nwords": model.NWORDS,
+        },
+        "artifacts": {},
+    }
+    for name, text in arts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

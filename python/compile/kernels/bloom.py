@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: Bloom-filter membership probe over a packed bit array.
+
+The filtering stage of ApproxJoin (paper §3.1, Alg 1) checks every tuple key
+of every input against the broadcast *join filter*. That membership probe is
+the per-tuple hot spot of stage 1, so it is expressed as a Pallas kernel:
+the full packed bit array (m = 2^20 bits = 128 KiB of u32 words) stays
+resident in VMEM while 4096-key batches stream through; each key computes
+its ``h`` probe positions with the Kirsch-Mitzenmacher double hash (same
+constants as rust/src/bloom/hashing.rs) and gathers+tests the bits.
+
+This is a memory/VPU kernel, not an MXU kernel — the relevant TPU insight
+is keeping the filter in scratchpad across the whole batch stream, which
+BlockSpec expresses by mapping the words operand to the same (whole) block
+on every grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _bloom_probe_kernel(words_ref, keys_ref, out_ref, *, num_hashes: int,
+                        log2_bits: int):
+    words = words_ref[...]                       # (W,) u32, whole filter
+    keys = keys_ref[...].astype(jnp.uint32)      # (BLK,)
+    mask = jnp.uint32((1 << log2_bits) - 1)
+    h1 = ref.mix32(keys ^ jnp.uint32(ref.SEED1))
+    h2 = ref.mix32(keys ^ jnp.uint32(ref.SEED2)) | jnp.uint32(1)
+    member = jnp.ones(keys.shape, dtype=jnp.bool_)
+    for i in range(num_hashes):
+        pos = (h1 + jnp.uint32(i) * h2) & mask
+        word = jnp.take(words, (pos >> 5).astype(jnp.int32))
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        member = member & (bit == jnp.uint32(1))
+    out_ref[...] = member.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "log2_bits", "block"))
+def bloom_probe(words: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int,
+                log2_bits: int, block: int = 1024) -> jnp.ndarray:
+    """int32[B] mask: 1 where key may be in the filter, 0 where definitely not.
+
+    words: uint32[2^log2_bits / 32] packed bit array (bit p at word p>>5,
+    bit p&31). keys: uint32[B], B a multiple of ``block``.
+    """
+    (b,) = keys.shape
+    nwords = (1 << log2_bits) // 32
+    if words.shape != (nwords,):
+        raise ValueError(f"words shape {words.shape} != ({nwords},)")
+    if b % block != 0:
+        raise ValueError(f"batch {b} must be a multiple of block {block}")
+    grid = (b // block,)
+    return pl.pallas_call(
+        functools.partial(_bloom_probe_kernel, num_hashes=num_hashes,
+                          log2_bits=log2_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nwords,), lambda i: (0,)),   # filter resident
+            pl.BlockSpec((block,), lambda i: (i,)),    # key stream
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(words, keys)

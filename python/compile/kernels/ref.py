@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle bit-for-bit (integer paths) or to float tolerance
+(accumulation paths). pytest sweeps shapes/dtypes with hypothesis against
+these functions.
+
+The 32-bit hash family here is mirrored *exactly* (same constants, same
+wrapping arithmetic) by ``rust/src/bloom/hashing.rs``; golden values are
+pinned on both sides so the two implementations cannot drift.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Seeds for the double-hash family. Mirrored in rust/src/bloom/hashing.rs.
+SEED1 = 0x9E3779B9
+SEED2 = 0x85EBCA77
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (wrapping u32 arithmetic)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bloom_hashes(keys: jnp.ndarray, num_hashes: int, log2_bits: int) -> jnp.ndarray:
+    """Positions of the ``num_hashes`` probe bits for each key.
+
+    Double hashing (Kirsch-Mitzenmacher): pos_i = (h1 + i*h2) mod m with m a
+    power of two and h2 forced odd so the probe sequence spans the table.
+
+    Returns uint32[..., num_hashes].
+    """
+    keys = keys.astype(jnp.uint32)
+    mask = jnp.uint32((1 << log2_bits) - 1)
+    h1 = mix32(keys ^ jnp.uint32(SEED1))
+    h2 = mix32(keys ^ jnp.uint32(SEED2)) | jnp.uint32(1)
+    i = jnp.arange(num_hashes, dtype=jnp.uint32)
+    return (h1[..., None] + i * h2[..., None]) & mask
+
+
+def bloom_probe_ref(words: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int,
+                    log2_bits: int) -> jnp.ndarray:
+    """Membership mask (int32 0/1) of ``keys`` against a packed bit array.
+
+    ``words`` is uint32[m/32]; bit ``p`` lives at words[p >> 5] bit (p & 31).
+    """
+    pos = bloom_hashes(keys, num_hashes, log2_bits)          # (B, H) u32
+    word = jnp.take(words, (pos >> 5).astype(jnp.int32), axis=0)
+    bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+    return jnp.all(bit == 1, axis=-1).astype(jnp.int32)
+
+
+def bloom_build_ref(keys: jnp.ndarray, *, num_hashes: int, log2_bits: int) -> jnp.ndarray:
+    """Packed bit array (uint32[m/32]) with all probe bits of ``keys`` set."""
+    pos = bloom_hashes(keys, num_hashes, log2_bits).reshape(-1)
+    nwords = (1 << log2_bits) // 32
+    bits = jnp.zeros((1 << log2_bits,), dtype=jnp.uint32)
+    bits = bits.at[(pos).astype(jnp.int32)].set(jnp.uint32(1))
+    # pack: bit p -> word p>>5, bit p&31
+    bits = bits.reshape(nwords, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+
+
+def seg_agg_ref(seg: jnp.ndarray, stack: jnp.ndarray, *, num_strata: int) -> jnp.ndarray:
+    """Segment aggregation oracle: out[s, c] = sum_{i: seg[i]==s} stack[i, c].
+
+    seg: int32[B]; stack: f32[B, C]; returns f32[num_strata, C].
+    """
+    onehot = (seg[:, None] == jnp.arange(num_strata)[None, :]).astype(stack.dtype)
+    return onehot.T @ stack
+
+
+def join_agg_ref(v1, v2, seg, mask, op, *, num_strata: int):
+    """Oracle for the L2 join_agg model (combine + segment aggregate).
+
+    op is a one-hot-ish f32[4] selector over combine ops:
+      op[0]: v1 + v2   op[1]: v1 * v2   op[2]: v1   op[3]: v2
+    Masked-out rows (mask==0) contribute nothing, including to counts.
+    Returns (counts, sums, sumsqs) each f32[num_strata].
+    """
+    combined = op[0] * (v1 + v2) + op[1] * (v1 * v2) + op[2] * v1 + op[3] * v2
+    combined = combined * mask
+    stack = jnp.stack([mask, combined, combined * combined], axis=1)
+    out = seg_agg_ref(seg, stack, num_strata=num_strata)
+    return out[:, 0], out[:, 1], out[:, 2]
+
+
+def clt_estimate_ref(big_b, small_b, sums, sumsqs):
+    """Oracle for the CLT stratified estimator (paper eq 12-14).
+
+    big_b:  f32[S]  B_i, population size (bipartite-product size) per stratum
+    small_b:f32[S]  b_i, number of samples drawn per stratum
+    sums:   f32[S]  sum of sampled combined values per stratum
+    sumsqs: f32[S]  sum of squares of sampled combined values per stratum
+
+    tau_hat = sum_i B_i/b_i * sum_i            (eq 12 text)
+    var_hat = sum_i B_i (B_i - b_i) s_i^2/b_i  (eq 14, s_i^2 sample variance)
+
+    Strata with b_i == 0 contribute nothing; b_i == 1 contributes to the
+    total but not the variance (s_i^2 undefined); the (B_i - b_i) finite
+    population correction is clamped at 0 for with-replacement oversampling.
+    """
+    safe_b = jnp.maximum(small_b, 1.0)
+    mean = sums / safe_b
+    s2 = jnp.where(small_b > 1,
+                   jnp.maximum(sumsqs - safe_b * mean * mean, 0.0)
+                   / jnp.maximum(safe_b - 1.0, 1.0),
+                   0.0)
+    tau = jnp.sum(jnp.where(small_b > 0, big_b / safe_b * sums, 0.0))
+    fpc = jnp.maximum(big_b - small_b, 0.0)
+    var = jnp.sum(jnp.where(small_b > 1, big_b * fpc * s2 / safe_b, 0.0))
+    return tau, var

@@ -1,0 +1,68 @@
+"""L2 JAX model: the compute graphs ApproxJoin's Rust coordinator executes.
+
+Three graphs, each AOT-lowered to HLO text by aot.py and loaded by
+``rust/src/runtime``:
+
+* ``join_agg``     — the sampling-stage hot path (Alg 2 line 25): combine the
+                     two sampled endpoint values per the query's aggregate
+                     expression, then segment-aggregate per stratum via the
+                     L1 Pallas kernel. Output feeds the CLT estimator.
+* ``bloom_probe``  — the filtering-stage hot path (Alg 1 / §3.1): batched
+                     membership of tuple keys in the broadcast join filter
+                     (L1 Pallas kernel).
+* ``clt_estimate`` — paper eq 12-14: per-stratum aggregates -> (total
+                     estimate, variance estimate). The t-quantile and the
+                     final ± bound stay in Rust (stats::distributions).
+
+Everything is shape-static: the Rust side pads the last batch and masks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.bloom import bloom_probe as _bloom_probe_kernel
+from .kernels.stratified import seg_agg
+
+# Artifact geometry — mirrored in rust/src/runtime/mod.rs (ArtifactGeometry).
+BATCH = 4096          # rows per join_agg / bloom_probe execution
+STRATA = 256          # stratum slots per join_agg execution
+NUM_HASHES = 5        # h, probe bits per key
+LOG2_BITS = 20        # m = 2^20 bits -> 32768 u32 words (128 KiB)
+NWORDS = (1 << LOG2_BITS) // 32
+
+# Combine-op one-hot indices (order pinned; mirrored in runtime/batch.rs).
+OP_ADD, OP_MUL, OP_LEFT, OP_RIGHT = 0, 1, 2, 3
+
+
+def join_agg(v1, v2, seg, mask, op):
+    """Combine sampled pair values and aggregate per stratum.
+
+    v1, v2: f32[BATCH] sampled endpoint values (left/right side of the edge)
+    seg:    i32[BATCH] stratum slot in [0, STRATA)
+    mask:   f32[BATCH] 1.0 for real rows, 0.0 for padding
+    op:     f32[4] one-hot combine selector (OP_*)
+
+    Returns (counts, sums, sumsqs) each f32[STRATA].
+    """
+    combined = op[0] * (v1 + v2) + op[1] * (v1 * v2) + op[2] * v1 + op[3] * v2
+    combined = combined * mask
+    stack = jnp.stack([mask, combined, combined * combined], axis=1)
+    # CPU-artifact lowering: scatter body, single grid step. The matmul
+    # body is the TPU lowering (MXU); on CPU-XLA the scatter is ~60x
+    # faster at identical numerics — see EXPERIMENTS.md §Perf iter 1-2 and
+    # kernels/stratified.py for the two bodies.
+    out = seg_agg(seg, stack, num_strata=STRATA, block=BATCH, method="scatter")
+    return out[:, 0], out[:, 1], out[:, 2]
+
+
+def bloom_probe(words, keys):
+    """int32[BATCH] membership mask of keys against the packed join filter."""
+    return _bloom_probe_kernel(words, keys, num_hashes=NUM_HASHES,
+                               log2_bits=LOG2_BITS)
+
+
+def clt_estimate(big_b, small_b, sums, sumsqs):
+    """(tau_hat, var_hat) for the stratified CLT estimator (eq 12-14)."""
+    return ref.clt_estimate_ref(big_b, small_b, sums, sumsqs)

@@ -1,0 +1,53 @@
+"""AOT path: lowering produces parseable HLO text with the pinned geometry."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def arts():
+    return aot.lower_all()
+
+
+def test_all_artifacts_lower(arts):
+    assert set(arts) == {"join_agg", "bloom_probe", "clt_estimate"}
+    for name, text in arts.items():
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+
+
+def test_join_agg_signature_shapes(arts):
+    text = arts["join_agg"]
+    # entry params: 4 f32[BATCH] + f32[4]; outputs 3x f32[STRATA]
+    assert f"f32[{model.BATCH}]" in text
+    assert f"f32[{model.STRATA}]" in text
+
+
+def test_bloom_probe_signature_shapes(arts):
+    text = arts["bloom_probe"]
+    assert f"u32[{model.NWORDS}]" in text
+    assert f"u32[{model.BATCH}]" in text
+    assert f"s32[{model.BATCH}]" in text
+
+
+def test_manifest_written(tmp_path, monkeypatch):
+    monkeypatch.setattr("sys.argv", ["aot", "--out-dir", str(tmp_path)])
+    aot.main()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["geometry"]["batch"] == model.BATCH
+    assert man["geometry"]["strata"] == model.STRATA
+    assert man["geometry"]["log2_bits"] == model.LOG2_BITS
+    for name, meta in man["artifacts"].items():
+        p = tmp_path / meta["file"]
+        assert p.exists(), name
+        assert p.stat().st_size == meta["bytes"]
+
+
+def test_geometry_constants_are_consistent():
+    assert model.NWORDS * 32 == (1 << model.LOG2_BITS)
+    assert model.BATCH % 512 == 0  # seg_agg default block
+    assert model.BATCH % 1024 == 0  # bloom_probe default block

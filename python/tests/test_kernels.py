@@ -1,0 +1,162 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes per the repo's test policy; golden hash
+values pin the Rust<->Python hash family.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bloom import bloom_probe
+from compile.kernels.stratified import seg_agg
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- hash family
+
+# Golden values pinned against rust/src/bloom/hashing.rs (tests there pin the
+# same constants). If either side changes, both tests fail.
+GOLDEN_MIX32 = {
+    0: 0x0,
+    1: 0x514E28B7,
+    42: 0x087FCD5C,
+    0xDEADBEEF: 0x0DE5C6A9,
+    123456789: 0xBA60D89A,
+}
+GOLDEN_POS_42 = [650960, 828291, 1005622, 134377, 311708]
+GOLDEN_POS_0 = [667406, 868387, 20792, 221773, 422754]
+
+
+def test_mix32_golden():
+    keys = jnp.asarray(np.array(list(GOLDEN_MIX32), dtype=np.uint32))
+    got = [int(v) for v in ref.mix32(keys)]
+    assert got == list(GOLDEN_MIX32.values())
+
+
+def test_bloom_positions_golden():
+    pos = ref.bloom_hashes(jnp.uint32(42), 5, 20)
+    assert [int(p) for p in pos] == GOLDEN_POS_42
+    pos = ref.bloom_hashes(jnp.uint32(0), 5, 20)
+    assert [int(p) for p in pos] == GOLDEN_POS_0
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_mix32_is_a_bijection_roundtrip_free(k):
+    # finalizer must be deterministic + stay in u32 range
+    v = int(ref.mix32(jnp.uint32(k)))
+    assert 0 <= v < 2**32
+    assert int(ref.mix32(jnp.uint32(k))) == v
+
+
+@given(st.integers(1, 8), st.integers(10, 20), st.integers(0, 2**32 - 1))
+def test_bloom_hashes_in_range(h, log2_bits, key):
+    pos = np.asarray(ref.bloom_hashes(jnp.uint32(key), h, log2_bits))
+    assert pos.shape == (h,)
+    assert (pos < (1 << log2_bits)).all()
+
+
+# ---------------------------------------------------------- seg_agg (Pallas)
+
+@given(
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 64, 128]),
+    strata=st.sampled_from([4, 32, 256]),
+    cols=st.integers(1, 4),
+    method=st.sampled_from(["matmul", "scatter"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seg_agg_matches_ref(blocks, block, strata, cols, method, seed):
+    rng = np.random.default_rng(seed)
+    b = blocks * block
+    seg = rng.integers(0, strata, b).astype(np.int32)
+    stack = rng.normal(size=(b, cols)).astype(np.float32)
+    got = seg_agg(jnp.asarray(seg), jnp.asarray(stack),
+                  num_strata=strata, block=block, method=method)
+    want = ref.seg_agg_ref(jnp.asarray(seg), jnp.asarray(stack),
+                           num_strata=strata)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_seg_agg_methods_agree():
+    rng = np.random.default_rng(3)
+    seg = jnp.asarray(rng.integers(0, 64, 512).astype(np.int32))
+    stack = jnp.asarray(rng.normal(size=(512, 3)).astype(np.float32))
+    a = seg_agg(seg, stack, num_strata=64, block=128, method="matmul")
+    b = seg_agg(seg, stack, num_strata=64, block=128, method="scatter")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+def test_seg_agg_rejects_ragged_batch():
+    with pytest.raises(ValueError):
+        seg_agg(jnp.zeros(100, jnp.int32), jnp.zeros((100, 3), jnp.float32),
+                num_strata=8, block=64)
+
+
+def test_seg_agg_empty_strata_are_zero():
+    seg = jnp.zeros(128, jnp.int32)  # everything in stratum 0
+    stack = jnp.ones((128, 2), jnp.float32)
+    out = np.asarray(seg_agg(seg, stack, num_strata=16, block=64))
+    assert out[0, 0] == 128.0
+    assert (out[1:] == 0).all()
+
+
+# ------------------------------------------------------- bloom_probe (Pallas)
+
+@given(
+    log2_bits=st.sampled_from([14, 17, 20]),
+    h=st.integers(1, 7),
+    n_members=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bloom_probe_no_false_negatives(log2_bits, h, n_members, seed):
+    rng = np.random.default_rng(seed)
+    members = rng.integers(0, 2**32, n_members, dtype=np.uint32)
+    words = ref.bloom_build_ref(jnp.asarray(members), num_hashes=h,
+                                log2_bits=log2_bits)
+    batch = 1024
+    keys = np.zeros(batch, dtype=np.uint32)
+    keys[: min(n_members, batch)] = members[:batch]
+    got = np.asarray(bloom_probe(words, jnp.asarray(keys), num_hashes=h,
+                                 log2_bits=log2_bits, block=256))
+    assert (got[: min(n_members, batch)] == 1).all()
+    want = np.asarray(ref.bloom_probe_ref(words, jnp.asarray(keys),
+                                          num_hashes=h, log2_bits=log2_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bloom_probe_false_positive_rate_sane():
+    rng = np.random.default_rng(7)
+    members = rng.integers(0, 2**32, 50_000, dtype=np.uint32)
+    words = ref.bloom_build_ref(jnp.asarray(members), num_hashes=5,
+                                log2_bits=20)
+    others = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+    got = np.asarray(bloom_probe(words, jnp.asarray(others), num_hashes=5,
+                                 log2_bits=20))
+    # theoretical fp ~ (1 - e^{-hn/m})^h ~ 0.00066 at n=50k, m=2^20, h=5.
+    assert got.mean() < 0.01
+
+
+def test_bloom_probe_rejects_bad_words_shape():
+    with pytest.raises(ValueError):
+        bloom_probe(jnp.zeros(100, jnp.uint32), jnp.zeros(1024, jnp.uint32),
+                    num_hashes=5, log2_bits=20)
+
+
+def test_empty_filter_rejects_everything():
+    words = jnp.zeros(1 << 15, jnp.uint32)  # log2_bits=20 -> 32768 words
+    keys = jnp.arange(1024, dtype=jnp.uint32)
+    got = np.asarray(bloom_probe(words, keys, num_hashes=5, log2_bits=20))
+    assert (got == 0).all()
+
+
+def test_full_filter_accepts_everything():
+    words = jnp.full((1 << 15,), 0xFFFFFFFF, jnp.uint32)
+    keys = jnp.arange(1024, dtype=jnp.uint32)
+    got = np.asarray(bloom_probe(words, keys, num_hashes=5, log2_bits=20))
+    assert (got == 1).all()

@@ -1,0 +1,51 @@
+//! Figure 4: shuffled data size, analytic model (Appendix A.1).
+//! (a) varying number of inputs at 1% overlap; (b) varying overlap
+//! fraction with three inputs. Broadcast vs repartition vs Bloom join.
+
+use approxjoin::row;
+use approxjoin::simulation::ShuffleModel;
+use approxjoin::util::{fmt, Table};
+
+fn model(n_inputs: usize, overlap: f64) -> ShuffleModel {
+    ShuffleModel {
+        input_sizes: vec![1_000_000; n_inputs],
+        record_bytes: 1000,
+        k: 100,
+        overlap_fraction: overlap,
+        fp_rate: 0.01,
+    }
+}
+
+fn main() {
+    println!("== Figure 4a: shuffled size vs #inputs (overlap 1%) ==\n");
+    let mut t = Table::new(&["#inputs", "broadcast", "repartition", "approxjoin", "rep/aj"]);
+    for n in 2..=8usize {
+        let m = model(n, 0.01);
+        t.row(row![
+            n,
+            fmt::bytes(m.broadcast_bytes()),
+            fmt::bytes(m.repartition_bytes()),
+            fmt::bytes(m.bloom_bytes()),
+            fmt::speedup(m.repartition_bytes() as f64 / m.bloom_bytes() as f64)
+        ]);
+    }
+    t.print();
+
+    println!("\n== Figure 4b: shuffled size vs overlap fraction (3 inputs) ==\n");
+    let mut t = Table::new(&["overlap", "broadcast", "repartition", "approxjoin", "rep/aj"]);
+    for overlap in [0.01, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let m = model(3, overlap);
+        t.row(row![
+            fmt::pct(overlap),
+            fmt::bytes(m.broadcast_bytes()),
+            fmt::bytes(m.repartition_bytes()),
+            fmt::bytes(m.bloom_bytes()),
+            fmt::speedup(m.repartition_bytes() as f64 / m.bloom_bytes() as f64)
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: approxjoin's volume stays low as #inputs grows (4a);\n\
+         by ~40% overlap it approaches repartition's volume (4b)."
+    );
+}

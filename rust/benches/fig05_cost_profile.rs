@@ -1,0 +1,43 @@
+//! Figure 5: the latency cost function — offline profiling of cross-product
+//! latency vs input size, and the fitted β_compute (eq 5). The paper
+//! measured β = 4.16e-9 s/pair on its 2008-era cluster; this host is
+//! faster, but the *linearity* is the claim.
+
+use approxjoin::cost::CostModel;
+use approxjoin::row;
+use approxjoin::util::{fmt, Table};
+
+fn main() {
+    println!("== Figure 5: cross-product latency vs input size ==\n");
+    let sizes = [
+        50_000u64,
+        200_000,
+        800_000,
+        3_200_000,
+        12_800_000,
+        51_200_000,
+    ];
+    let (model, curve) = CostModel::profile_host(&sizes);
+    let mut t = Table::new(&["pairs", "measured", "model fit", "fit error"]);
+    for (pairs, secs) in &curve {
+        let pred = model.cp_latency(*pairs as f64);
+        t.row(row![
+            fmt::count(*pairs),
+            fmt::duration(*secs),
+            fmt::duration(pred),
+            fmt::pct(((pred - secs) / secs).abs())
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbeta_compute = {:.3e} s/pair (paper's cluster: 4.16e-9)   epsilon = {:.4}s",
+        model.beta_compute, model.epsilon
+    );
+    // persist for the engine + fig11
+    std::fs::create_dir_all("artifacts").ok();
+    model
+        .save(std::path::Path::new("artifacts/cost_profile.json"))
+        .expect("save cost profile");
+    println!("saved artifacts/cost_profile.json");
+    println!("\npaper shape: latency is linear in the number of cross products.");
+}

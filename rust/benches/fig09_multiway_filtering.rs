@@ -1,0 +1,120 @@
+//! Figure 9: benefits of filtering in MULTI-way joins.
+//! (a) three-way latency across overlap fractions — native Spark join runs
+//!     out of memory at 8-10% (reproduced via the memory guard);
+//! (b) three-way shuffled size across overlap fractions;
+//! (c) latency + shuffled size for 2/3/4-way joins at overlap 1%/0.33%/0.25%.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
+use approxjoin::join::native::native_join;
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::row;
+use approxjoin::util::{fmt, Table};
+
+fn cluster() -> SimCluster {
+    SimCluster::new(10, TimeModel::paper_cluster())
+}
+
+// keep the native join honest but bounded: per-worker budget that trips at
+// roughly the same relative point the paper's 8GB nodes did
+const NATIVE_BUDGET: u64 = 96 << 20;
+
+fn inputs(n: usize, overlap: f64, seed: u64) -> Vec<approxjoin::data::Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        num_inputs: n,
+        items_per_input: 150_000,
+        overlap_fraction: overlap,
+        lambda: 500.0,
+        record_bytes: 1000,
+        partitions: 20,
+        seed,
+        ..Default::default()
+    })
+}
+
+fn main() {
+    println!("== Figure 9a/9b: three-way joins across overlap fractions ==\n");
+    let mut t = Table::new(&[
+        "overlap",
+        "aj lat",
+        "repart lat",
+        "native lat",
+        "aj shuffle",
+        "repart shuffle",
+        "native shuffle",
+    ]);
+    for overlap in [0.01, 0.02, 0.04, 0.06, 0.08, 0.10] {
+        let ins = inputs(3, overlap, 99);
+        let aj = bloom_join(
+            &mut cluster(),
+            &ins,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&ins, 0.01),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let rep = repartition_join(&mut cluster(), &ins, CombineOp::Sum);
+        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, NATIVE_BUDGET);
+        let (nat_lat, nat_sh) = match &nat {
+            Ok(run) => (
+                fmt::duration(run.metrics.total_sim_secs()),
+                fmt::bytes(run.metrics.total_shuffled_bytes()),
+            ),
+            Err(_) => ("OOM".to_string(), "OOM".to_string()),
+        };
+        t.row(row![
+            fmt::pct(overlap),
+            fmt::duration(aj.metrics.total_sim_secs()),
+            fmt::duration(rep.metrics.total_sim_secs()),
+            nat_lat,
+            fmt::bytes(aj.metrics.total_shuffled_bytes()),
+            fmt::bytes(rep.metrics.total_shuffled_bytes()),
+            nat_sh
+        ]);
+    }
+    t.print();
+
+    println!("\n== Figure 9c: varying the number of inputs ==\n");
+    let mut t = Table::new(&[
+        "#inputs",
+        "overlap",
+        "aj lat",
+        "repart lat",
+        "native lat",
+        "aj shuffle",
+        "repart shuffle",
+    ]);
+    for (n, overlap) in [(2usize, 0.01), (3, 0.0033), (4, 0.0025)] {
+        let ins = inputs(n, overlap, 7);
+        let aj = bloom_join(
+            &mut cluster(),
+            &ins,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&ins, 0.01),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let rep = repartition_join(&mut cluster(), &ins, CombineOp::Sum);
+        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, NATIVE_BUDGET);
+        let nat_lat = match &nat {
+            Ok(run) => fmt::duration(run.metrics.total_sim_secs()),
+            Err(_) => "OOM".to_string(),
+        };
+        t.row(row![
+            n,
+            fmt::pct(overlap),
+            fmt::duration(aj.metrics.total_sim_secs()),
+            fmt::duration(rep.metrics.total_sim_secs()),
+            nat_lat,
+            fmt::bytes(aj.metrics.total_shuffled_bytes()),
+            fmt::bytes(rep.metrics.total_shuffled_bytes())
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: approxjoin leads at small overlap and its lead GROWS\n\
+         with more inputs; native join OOMs at high overlap 3-way."
+    );
+}

@@ -1,0 +1,105 @@
+//! Figure 10: (a) scalability with cluster size at 1% overlap;
+//! (b) latency vs sampling fraction — ApproxJoin vs the extended
+//! repartition join (post-join sampleByKey); (c) accuracy loss vs fraction.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::baselines::post_join_sampling;
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
+use approxjoin::join::native::native_join;
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::row;
+use approxjoin::stats::{clt_sum, EstimatorKind};
+use approxjoin::util::{fmt, Table};
+
+fn main() {
+    println!("== Figure 10a: scalability (latency vs #workers, overlap 1%) ==\n");
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 300_000,
+        overlap_fraction: 0.01,
+        lambda: 500.0,
+        record_bytes: 1000,
+        partitions: 16,
+        seed: 55,
+        ..Default::default()
+    });
+    let mut t = Table::new(&["workers", "approxjoin", "repartition", "native", "aj/rep", "aj/nat"]);
+    for k in [2usize, 4, 6, 8] {
+        let mk = || SimCluster::new(k, TimeModel::paper_cluster());
+        let aj = bloom_join(
+            &mut mk(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let rep = repartition_join(&mut mk(), &inputs, CombineOp::Sum);
+        let nat = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX).unwrap();
+        t.row(row![
+            k,
+            fmt::duration(aj.metrics.total_sim_secs()),
+            fmt::duration(rep.metrics.total_sim_secs()),
+            fmt::duration(nat.metrics.total_sim_secs()),
+            fmt::speedup(rep.metrics.total_sim_secs() / aj.metrics.total_sim_secs()),
+            fmt::speedup(nat.metrics.total_sim_secs() / aj.metrics.total_sim_secs())
+        ]);
+    }
+    t.print();
+
+    println!("\n== Figure 10b/10c: sampling stage vs extended repartition join ==\n");
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 150_000,
+        overlap_fraction: 0.2, // big overlap: sampling stage active
+        lambda: 500.0,
+        record_bytes: 1000,
+        partitions: 20,
+        seed: 56,
+        ..Default::default()
+    });
+    let mk = || SimCluster::new(10, TimeModel::paper_cluster());
+    let exact = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX)
+        .unwrap()
+        .exact_sum();
+    let mut t = Table::new(&[
+        "fraction",
+        "aj latency",
+        "ext-repart latency",
+        "aj accuracy loss",
+        "ext-repart accuracy loss",
+    ]);
+    for fraction in [0.1, 0.2, 0.4, 0.6, 0.8] {
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            estimator: EstimatorKind::Clt,
+            seed: 1,
+        };
+        let aj = approx_join(
+            &mut mk(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let aj_est = clt_sum(&aj.strata_vec(), 0.95).estimate;
+        let ext = post_join_sampling(&mut mk(), &inputs, CombineOp::Sum, fraction, 0.95, 1);
+        t.row(row![
+            fmt::pct(fraction),
+            fmt::duration(aj.metrics.total_sim_secs()),
+            fmt::duration(ext.metrics.total_sim_secs()),
+            fmt::pct(((aj_est - exact) / exact).abs()),
+            fmt::pct(((ext.estimate.estimate - exact) / exact).abs())
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: 10a speedups 1.7-1.8x over repartition, 6-10x over\n\
+         native; 10b approxjoin latency ~flat and far below ext-repartition;\n\
+         10c both accuracies improve with fraction, approxjoin slightly worse."
+    );
+}

@@ -1,0 +1,106 @@
+//! Figure 11: effectiveness of the cost function — submit latency budgets,
+//! let the engine's cost function (eq 6/7) pick the sampling fraction, and
+//! compare the achieved (simulated-cluster) latency against the budget;
+//! plus the resulting accuracy vs the extended repartition join.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::baselines::post_join_sampling;
+use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig, ExecutionMode};
+use approxjoin::cost::CostModel;
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::join::native::native_join;
+use approxjoin::join::CombineOp;
+use approxjoin::query::parse;
+use approxjoin::row;
+use approxjoin::util::{fmt, Table};
+use std::collections::HashMap;
+
+fn main() {
+    println!("== Figure 11: cost-function effectiveness ==\n");
+    // calibrate beta on the *sampling* path of this host (the unit of work
+    // eq 6's fraction buys) and fold the per-stage scheduling latency of
+    // the time model into epsilon
+    let (mut cost, _) = CostModel::profile_sampling_host(&[200_000, 800_000, 3_200_000]);
+    cost.epsilon += TimeModel::default().stage_latency;
+    println!(
+        "profiled beta_compute = {:.3e} s/draw, epsilon = {:.3}s\n",
+        cost.beta_compute, cost.epsilon
+    );
+
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 100_000,
+        overlap_fraction: 0.25,
+        lambda: 2000.0, // deep strata: the exact cross product is ~5e7 pairs
+        record_bytes: 1000,
+        partitions: 20,
+        seed: 66,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("a".to_string(), inputs[0].clone());
+    named.insert("b".to_string(), inputs[1].clone());
+
+    let mk = || SimCluster::new(10, TimeModel::paper_cluster());
+    let exact = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX)
+        .unwrap()
+        .exact_sum();
+
+    let mut engine = ApproxJoinEngine::without_runtime(EngineConfig {
+        workers: 10,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_cost_model(cost);
+
+    // budgets pinned relative to the measured filter time + the predicted
+    // exact cross-product time, so the sweep spans the sampled regime and
+    // crosses into the exact regime — the paper's Fig 11 x-axis
+    let probe = engine
+        .execute(
+            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap(),
+            &named,
+        )
+        .unwrap();
+    let cp_pred = engine.cost.cp_latency(probe.output_cardinality);
+    let budgets: Vec<f64> = [0.15, 0.3, 0.5, 0.8, 1.5]
+        .iter()
+        .map(|frac| probe.d_dt + frac * cp_pred)
+        .collect();
+
+    let mut t = Table::new(&[
+        "desired lat",
+        "achieved lat",
+        "miss",
+        "chosen fraction",
+        "aj accuracy loss",
+        "ext-repart loss (same frac)",
+    ]);
+    for desired in budgets {
+        let q = parse(&format!(
+            "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN {desired} SECONDS"
+        ))
+        .unwrap();
+        let out = engine.execute(&q, &named).unwrap();
+        let fraction = match out.mode {
+            ExecutionMode::Sampled { fraction } => fraction,
+            ExecutionMode::Exact => 1.0,
+        };
+        let loss = ((out.result.estimate - exact) / exact).abs();
+        let ext = post_join_sampling(&mut mk(), &inputs, CombineOp::Sum, fraction.min(1.0), 0.95, 3);
+        let ext_loss = ((ext.estimate.estimate - exact) / exact).abs();
+        t.row(row![
+            fmt::duration(desired),
+            fmt::duration(out.sim_secs),
+            fmt::duration(out.sim_secs - desired),
+            format!("{:.3}", fraction),
+            fmt::pct(loss),
+            fmt::pct(ext_loss)
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: achieved latency tracks the budget (max miss < 12s on\n\
+         the paper's cluster); accuracy similar to ext-repartition at the\n\
+         same fraction, at far lower cost."
+    );
+}

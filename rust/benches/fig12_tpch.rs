@@ -1,0 +1,104 @@
+//! Figure 12: TPC-H comparison against a SnappyData-like baseline.
+//! (a) join-only Q3/Q4/Q10 latency: ApproxJoin (filtering, exact) vs the
+//!     baseline exact repartition join (SnappyData executes exact joins —
+//!     its approximation samples only outside the join);
+//! (b) CUSTOMER⋈ORDERS "money before ordering" query latency vs sampling
+//!     fraction: sampling-during-join vs SnappyData-style post-join;
+//! (c) the same query's accuracy loss.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::baselines::post_join_sampling;
+use approxjoin::data::tpch::{self, TpchQuery};
+use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::row;
+use approxjoin::stats::{clt_sum, EstimatorKind};
+use approxjoin::util::{fmt, Table};
+
+fn mk() -> SimCluster {
+    SimCluster::new(10, TimeModel::paper_cluster())
+}
+
+fn main() {
+    let sf = 0.02; // scaled-down dbgen (paper: SF=10 on 10 nodes)
+    let db = tpch::generate(sf, 1234);
+    println!(
+        "== Figure 12a: TPC-H join-only queries, SF={sf} ({} orders, {} lineitems) ==\n",
+        db.orders.len(),
+        db.lineitems.len()
+    );
+    let mut t = Table::new(&["query", "approxjoin", "snappy-like", "speedup"]);
+    for q in [TpchQuery::Q3, TpchQuery::Q4, TpchQuery::Q10] {
+        let mut aj_total = 0.0;
+        let mut sd_total = 0.0;
+        for (left, right) in q.join_steps(&db, 20) {
+            let ins = [left, right];
+            let aj = bloom_join(
+                &mut mk(),
+                &ins,
+                CombineOp::Sum,
+                FilterConfig::for_inputs(&ins, 0.01),
+                &mut NativeProber,
+            )
+            .unwrap();
+            aj_total += aj.metrics.total_sim_secs();
+            let sd = repartition_join(&mut mk(), &ins, CombineOp::Sum);
+            sd_total += sd.metrics.total_sim_secs();
+        }
+        t.row(row![
+            q.name(),
+            fmt::duration(aj_total),
+            fmt::duration(sd_total),
+            fmt::speedup(sd_total / aj_total)
+        ]);
+    }
+    t.print();
+
+    println!("\n== Figure 12b/12c: CUSTOMER x ORDERS with sampling ==\n");
+    // "total money the customers had before ordering":
+    // SUM(o_totalprice + c_acctbal) over customer ⋈ orders
+    let ins = [db.customer_by_custkey(20), db.orders_by_custkey(20)];
+    let exact_run = repartition_join(&mut mk(), &ins, CombineOp::Sum);
+    let exact = exact_run.exact_sum();
+    let mut t = Table::new(&[
+        "fraction",
+        "aj latency",
+        "snappy-like latency",
+        "aj accuracy loss",
+        "snappy-like loss",
+    ]);
+    for fraction in [0.2, 0.4, 0.6, 0.8, 1.0] {
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            estimator: EstimatorKind::Clt,
+            seed: 2,
+        };
+        let aj = approx_join(
+            &mut mk(),
+            &ins,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&ins, 0.01),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let aj_est = clt_sum(&aj.strata_vec(), 0.95).estimate;
+        let sd = post_join_sampling(&mut mk(), &ins, CombineOp::Sum, fraction, 0.95, 2);
+        t.row(row![
+            fmt::pct(fraction),
+            fmt::duration(aj.metrics.total_sim_secs()),
+            fmt::duration(sd.metrics.total_sim_secs()),
+            fmt::pct(((aj_est - exact) / exact).abs()),
+            fmt::pct(((sd.estimate.estimate - exact) / exact).abs())
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: 12a approxjoin 1.2-1.8x faster; 12b snappy-like pays\n\
+         the full join before sampling (1.77x at 60%); 12c accuracies similar\n\
+         (paper: 0.021% vs 0.016% at 60%)."
+    );
+}

@@ -1,0 +1,42 @@
+//! Figure 14: shuffled data volume vs the Bloom filter's false-positive
+//! rate (Appendix A.1 simulation: |R1|=1e4, |R2|=1e6, |R3|=1e7, 1% overlap,
+//! k=100). "Optimal ApproxJoin" is the zero-false-positive envelope; the
+//! paper's finding: fp <= 0.01 reaches it.
+
+use approxjoin::row;
+use approxjoin::simulation::ShuffleModel;
+use approxjoin::util::{fmt, Table};
+
+fn main() {
+    println!("== Figure 14: shuffle volume vs false-positive rate ==\n");
+    let mut t = Table::new(&[
+        "fp rate",
+        "broadcast",
+        "repartition",
+        "approxjoin",
+        "optimal aj",
+        "aj/optimal",
+    ]);
+    for fp in [0.5, 0.3, 0.2, 0.1, 0.05, 0.01, 0.005, 0.001, 0.0001] {
+        let m = ShuffleModel {
+            input_sizes: vec![10_000, 1_000_000, 10_000_000],
+            record_bytes: 1000,
+            k: 100,
+            overlap_fraction: 0.01,
+            fp_rate: fp,
+        };
+        t.row(row![
+            fp,
+            fmt::bytes(m.broadcast_bytes()),
+            fmt::bytes(m.repartition_bytes()),
+            fmt::bytes(m.bloom_bytes()),
+            fmt::bytes(m.bloom_bytes_optimal()),
+            format!(
+                "{:.3}",
+                m.bloom_bytes() as f64 / m.bloom_bytes_optimal() as f64
+            )
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: at fp <= 0.01 approxjoin sits on the optimal envelope.");
+}

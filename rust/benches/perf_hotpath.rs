@@ -1,0 +1,178 @@
+//! §Perf: hot-path microbenchmarks for the optimization pass — throughput
+//! of (1) the stratified edge sampler, (2) Bloom probing native vs the AOT
+//! XLA artifact, (3) per-stratum aggregation native vs XLA, (4) the exact
+//! cross product, and (5) end-to-end approx_join. Results feed
+//! EXPERIMENTS.md §Perf (before/after log).
+
+use approxjoin::bloom::BloomFilter;
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::join::approx::{
+    approx_join, ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams,
+};
+use approxjoin::join::bloom_join::{FilterConfig, KeyProber, NativeProber};
+use approxjoin::join::{cross_product_agg, CombineOp};
+use approxjoin::row;
+use approxjoin::runtime::PjrtRuntime;
+use approxjoin::sampling::edge_sampling::sample_edges_with_replacement;
+use approxjoin::stats::EstimatorKind;
+use approxjoin::util::{fmt, Rng, Table};
+use std::time::Instant;
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("== perf: hot-path throughput ==\n");
+    let mut t = Table::new(&["path", "work", "time", "throughput"]);
+    let mut r = Rng::new(1);
+
+    // 1) edge sampler
+    let sides = vec![
+        (0..200).map(|i| i as f64).collect::<Vec<_>>(),
+        (0..200).map(|i| i as f64 * 0.5).collect::<Vec<_>>(),
+    ];
+    let draws = 2_000_000u64;
+    let (_, dt) = time(|| {
+        let mut acc = 0.0;
+        for _ in 0..20 {
+            let agg = sample_edges_with_replacement(&mut r, &sides, draws / 20, CombineOp::Sum);
+            acc += agg.sum;
+        }
+        acc
+    });
+    t.row(row![
+        "edge sampler (draws)",
+        fmt::count(draws),
+        fmt::duration(dt),
+        format!("{}/s", fmt::count((draws as f64 / dt) as u64))
+    ]);
+
+    // 2) bloom probe: native vs XLA
+    let mut filter = BloomFilter::new(20, 5);
+    for _ in 0..100_000 {
+        filter.insert(r.next_u32());
+    }
+    let keys: Vec<u32> = (0..1_048_576).map(|_| r.next_u32()).collect();
+    let (_, dt) = time(|| {
+        let mut hits = 0u64;
+        for &k in &keys {
+            hits += filter.contains(k) as u64;
+        }
+        hits
+    });
+    t.row(row![
+        "bloom probe (native)",
+        fmt::count(keys.len() as u64),
+        fmt::duration(dt),
+        format!("{}/s", fmt::count((keys.len() as f64 / dt) as u64))
+    ]);
+
+    let runtime = PjrtRuntime::open(
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .ok();
+    if let Some(rt) = &runtime {
+        let mut prober = rt.bloom_probe().unwrap();
+        let (_, dt) = time(|| prober.probe(&filter, &keys).unwrap());
+        t.row(row![
+            "bloom probe (xla artifact)",
+            fmt::count(keys.len() as u64),
+            fmt::duration(dt),
+            format!("{}/s", fmt::count((keys.len() as f64 / dt) as u64))
+        ]);
+    }
+
+    // 3) join_agg batches: native vs XLA
+    let b = runtime
+        .as_ref()
+        .map(|rt| rt.geometry.batch)
+        .unwrap_or(4096);
+    let left: Vec<f64> = (0..b).map(|_| r.f64()).collect();
+    let right: Vec<f64> = (0..b).map(|_| r.f64()).collect();
+    let seg: Vec<i32> = (0..b).map(|_| r.index(256) as i32).collect();
+    let mask = vec![1.0f64; b];
+    let batches = 200u64;
+    let mut native = NativeAggregator::default();
+    let (_, dt) = time(|| {
+        for _ in 0..batches {
+            native
+                .run(&left, &right, &seg, &mask, CombineOp::Sum)
+                .unwrap();
+        }
+    });
+    t.row(row![
+        "join_agg (native)",
+        format!("{batches} batches x {b}"),
+        fmt::duration(dt),
+        format!("{}/s rows", fmt::count((batches as f64 * b as f64 / dt) as u64))
+    ]);
+    if let Some(rt) = &runtime {
+        let mut xla = rt.join_agg().unwrap();
+        let (_, dt) = time(|| {
+            for _ in 0..batches {
+                xla.run(&left, &right, &seg, &mask, CombineOp::Sum).unwrap();
+            }
+        });
+        t.row(row![
+            "join_agg (xla artifact)",
+            format!("{batches} batches x {b}"),
+            fmt::duration(dt),
+            format!("{}/s rows", fmt::count((batches as f64 * b as f64 / dt) as u64))
+        ]);
+    }
+
+    // 4) exact cross product
+    let big = vec![1.0f64; 2000];
+    let (agg, dt) = time(|| cross_product_agg(&[big.clone(), big.clone()], CombineOp::Sum));
+    t.row(row![
+        "cross product (pairs)",
+        fmt::count(agg.population as u64),
+        fmt::duration(dt),
+        format!("{}/s", fmt::count((agg.population / dt) as u64))
+    ]);
+
+    // 5) end-to-end approx_join wall time
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 100_000,
+        overlap_fraction: 0.2,
+        lambda: 100.0,
+        partitions: 20,
+        seed: 77,
+        ..Default::default()
+    });
+    let cfg = ApproxConfig {
+        params: SamplingParams::Fraction(0.1),
+        estimator: EstimatorKind::Clt,
+        seed: 1,
+    };
+    let mut prober: Box<dyn KeyProber> = Box::new(NativeProber);
+    let mut agg: Box<dyn BatchAggregator> = match &runtime {
+        Some(rt) => Box::new(rt.join_agg().unwrap()),
+        None => Box::new(NativeAggregator::default()),
+    };
+    let (run, dt) = time(|| {
+        approx_join(
+            &mut SimCluster::new(10, TimeModel::default()),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &cfg,
+            prober.as_mut(),
+            agg.as_mut(),
+        )
+        .unwrap()
+    });
+    let sampled: f64 = run.strata.values().map(|s| s.count).sum();
+    t.row(row![
+        "approx_join end-to-end (wall)",
+        format!("{} samples", fmt::count(sampled as u64)),
+        fmt::duration(dt),
+        format!("{}/s", fmt::count((sampled / dt) as u64))
+    ]);
+
+    t.print();
+}

@@ -1,0 +1,133 @@
+//! The hash family shared by every filter variant — and, crucially, by the
+//! AOT `bloom_probe` Pallas kernel: `python/compile/kernels/ref.py::mix32 /
+//! bloom_hashes` implements the *same* constants and wrapping u32
+//! arithmetic. Golden values are pinned on both sides (see tests below and
+//! python/tests/test_kernels.py) so Rust-built filters are probeable by the
+//! XLA artifact bit-for-bit.
+
+/// Seeds for the double-hash family (mirrored in kernels/ref.py).
+pub const SEED1: u32 = 0x9E37_79B9;
+pub const SEED2: u32 = 0x85EB_CA77;
+
+/// murmur3 32-bit finalizer.
+#[inline]
+pub fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Fold a 64-bit join key into the 32-bit hash domain. The kernels operate
+/// on u32 keys; 64-bit keys are pre-folded with this before either side
+/// hashes them, so both sides agree.
+#[inline]
+pub fn fold_key(key: u64) -> u32 {
+    // xor-fold then mix once so high bits influence the result
+    mix32((key as u32) ^ ((key >> 32) as u32).wrapping_mul(0x9E37_79B9))
+}
+
+/// Kirsch-Mitzenmacher double hashing: the i-th probe position of `key` in
+/// a table of 2^log2_bits bits.
+#[inline]
+pub fn probe_positions(key: u32, num_hashes: u32, log2_bits: u32) -> impl Iterator<Item = u32> {
+    let mask = (1u32 << log2_bits) - 1;
+    let h1 = mix32(key ^ SEED1);
+    let h2 = mix32(key ^ SEED2) | 1;
+    (0..num_hashes).map(move |i| h1.wrapping_add(i.wrapping_mul(h2)) & mask)
+}
+
+/// Optimal number of hash functions for a given bits-per-item ratio
+/// (paper appendix A.1: h = |BF|/N · ln 2).
+pub fn optimal_num_hashes(bits: u64, items: u64) -> u32 {
+    if items == 0 {
+        return 1;
+    }
+    let h = (bits as f64 / items as f64 * std::f64::consts::LN_2).round();
+    (h as u32).clamp(1, 16)
+}
+
+/// Filter size for a target false-positive rate (paper eq 27):
+/// |BF| = −N ln p / (ln 2)².
+pub fn bits_for_fp_rate(items: u64, fp_rate: f64) -> u64 {
+    assert!(fp_rate > 0.0 && fp_rate < 1.0);
+    let ln2sq = std::f64::consts::LN_2 * std::f64::consts::LN_2;
+    ((-(items.max(1) as f64) * fp_rate.ln()) / ln2sq).ceil() as u64
+}
+
+/// Theoretical false-positive rate p ≈ (1 − e^{−hN/|BF|})^h.
+pub fn theoretical_fp_rate(bits: u64, items: u64, num_hashes: u32) -> f64 {
+    if bits == 0 {
+        return 1.0;
+    }
+    let exp = -(num_hashes as f64) * items as f64 / bits as f64;
+    (1.0 - exp.exp()).powi(num_hashes as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values shared with python/tests/test_kernels.py — if either
+    /// implementation drifts, its twin test fails too.
+    #[test]
+    fn mix32_golden() {
+        assert_eq!(mix32(0), 0x0);
+        assert_eq!(mix32(1), 0x514E28B7);
+        assert_eq!(mix32(42), 0x087FCD5C);
+        assert_eq!(mix32(0xDEADBEEF), 0x0DE5C6A9);
+        assert_eq!(mix32(123456789), 0xBA60D89A);
+    }
+
+    #[test]
+    fn probe_positions_golden() {
+        let pos: Vec<u32> = probe_positions(42, 5, 20).collect();
+        assert_eq!(pos, vec![650960, 828291, 1005622, 134377, 311708]);
+        let pos: Vec<u32> = probe_positions(0, 5, 20).collect();
+        assert_eq!(pos, vec![667406, 868387, 20792, 221773, 422754]);
+    }
+
+    #[test]
+    fn probe_positions_in_range() {
+        for key in [0u32, 1, 0xFFFF_FFFF, 123456] {
+            for log2 in [10u32, 16, 20] {
+                for p in probe_positions(key, 8, log2) {
+                    assert!(p < (1 << log2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_key_distributes_high_bits() {
+        // keys differing only in high 32 bits must fold differently
+        assert_ne!(fold_key(5), fold_key(5 | (1 << 40)));
+        assert_ne!(fold_key(0), fold_key(u64::MAX));
+    }
+
+    #[test]
+    fn optimal_h_matches_formula() {
+        // 10 bits/item -> h = 10 ln2 ~ 6.93 -> 7
+        assert_eq!(optimal_num_hashes(1000, 100), 7);
+        assert_eq!(optimal_num_hashes(0, 0), 1);
+        assert_eq!(optimal_num_hashes(u64::MAX, 1), 16); // clamped
+    }
+
+    #[test]
+    fn bits_for_fp_rate_matches_eq27() {
+        // N=1e6, p=0.01 -> |BF| = 1e6 * ln(100)/(ln2)^2 ~ 9_585_059
+        let bits = bits_for_fp_rate(1_000_000, 0.01);
+        assert!((9_585_000..9_586_000).contains(&bits), "{bits}");
+    }
+
+    #[test]
+    fn theoretical_fp_monotonic() {
+        let a = theoretical_fp_rate(1 << 20, 10_000, 5);
+        let b = theoretical_fp_rate(1 << 20, 100_000, 5);
+        let c = theoretical_fp_rate(1 << 20, 1_000_000, 5);
+        assert!(a < b && b < c);
+        assert!(a > 0.0 && c <= 1.0);
+    }
+}

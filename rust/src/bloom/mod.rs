@@ -1,0 +1,15 @@
+//! Bloom-filter substrate (paper §3.1 + Appendix B): the standard filter
+//! used by the join-filter construction, plus the three alternative designs
+//! the paper analyzes (counting, invertible, scalable) and the shared hash
+//! family that keeps Rust and the AOT Pallas kernel bit-compatible.
+
+pub mod counting;
+pub mod hashing;
+pub mod invertible;
+pub mod scalable;
+pub mod standard;
+
+pub use counting::CountingBloomFilter;
+pub use invertible::InvertibleBloomFilter;
+pub use scalable::ScalableBloomFilter;
+pub use standard::BloomFilter;

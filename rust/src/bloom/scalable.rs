@@ -1,0 +1,190 @@
+//! Scalable Bloom filter (paper Appendix B III, after Almeida et al.):
+//! a series of standard filters of geometrically growing size and
+//! geometrically tightening error probability, for when the input
+//! cardinality is unknown in advance. Includes the *union* operation the
+//! paper contributed upstream as a pull request — implemented here by
+//! slice-wise union of the underlying standard filters.
+
+use super::standard::BloomFilter;
+
+/// Growth factor for successive slices (Almeida et al. recommend 2-4).
+const GROWTH: u32 = 1; // log2 increment: each slice doubles
+/// Error-probability tightening ratio r.
+const TIGHTEN: f64 = 0.5;
+
+#[derive(Clone, Debug)]
+pub struct ScalableBloomFilter {
+    slices: Vec<BloomFilter>,
+    slice_capacity: Vec<u64>,
+    initial_log2: u32,
+    fp0: f64,
+    items: u64,
+}
+
+impl ScalableBloomFilter {
+    /// Start with 2^initial_log2 bits targeting `fp0` overall error.
+    pub fn new(initial_log2: u32, fp0: f64) -> Self {
+        assert!(fp0 > 0.0 && fp0 < 1.0);
+        let mut s = Self {
+            slices: Vec::new(),
+            slice_capacity: Vec::new(),
+            initial_log2,
+            fp0,
+            items: 0,
+        };
+        s.grow();
+        s
+    }
+
+    fn slice_fp(&self, i: usize) -> f64 {
+        self.fp0 * TIGHTEN.powi(i as i32)
+    }
+
+    fn grow(&mut self) {
+        let i = self.slices.len();
+        let log2 = self.initial_log2 + GROWTH * i as u32;
+        let fp = self.slice_fp(i);
+        // capacity such that the slice stays within its fp budget:
+        // n = m (ln2)^2 / -ln p   (inverse of eq 27)
+        let m = (1u64 << log2) as f64;
+        let cap = (m * std::f64::consts::LN_2.powi(2) / -fp.ln()).floor() as u64;
+        let h = (-(fp.log2())).ceil().max(1.0) as u32; // k = log2(1/p)
+        self.slices.push(BloomFilter::new(log2, h.clamp(1, 16)));
+        self.slice_capacity.push(cap.max(1));
+    }
+
+    pub fn insert(&mut self, key: u32) {
+        let last = self.slices.len() - 1;
+        if self.slices[last].items() >= self.slice_capacity[last] {
+            self.grow();
+        }
+        let last = self.slices.len() - 1;
+        self.slices[last].insert(key);
+        self.items += 1;
+    }
+
+    pub fn contains(&self, key: u32) -> bool {
+        self.slices.iter().any(|s| s.contains(key))
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn num_slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.size_bytes()).sum()
+    }
+
+    /// Union of two SBFs — the merge the treeReduce stage needs. Aligns
+    /// slice-by-slice (same initial geometry required) and unions the
+    /// underlying standard filters; the taller filter's extra slices are
+    /// cloned in. This is the operation the paper submitted upstream
+    /// (python-bloomfilter PR #11).
+    pub fn union_with(&mut self, other: &ScalableBloomFilter) {
+        assert_eq!(self.initial_log2, other.initial_log2, "geometry mismatch");
+        assert_eq!(self.fp0, other.fp0, "geometry mismatch");
+        while self.slices.len() < other.slices.len() {
+            self.grow();
+        }
+        for (i, os) in other.slices.iter().enumerate() {
+            self.slices[i].union_with(os);
+        }
+        self.items += other.items;
+    }
+
+    /// Overall false-positive upper bound: 1 − Π(1 − p_i) ≤ fp0 / (1 − r).
+    pub fn fp_bound(&self) -> f64 {
+        let mut keep = 1.0;
+        for i in 0..self.slices.len() {
+            keep *= 1.0 - self.slice_fp(i);
+        }
+        1.0 - keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut r = Rng::new(12);
+        let mut f = ScalableBloomFilter::new(10, 0.01); // tiny initial slice
+        let keys: Vec<u32> = (0..5000).map(|_| r.next_u32()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        assert!(f.num_slices() > 1, "should have grown");
+        assert!(keys.iter().all(|&k| f.contains(k)), "no false negatives");
+    }
+
+    #[test]
+    fn fp_rate_within_bound() {
+        let mut r = Rng::new(13);
+        let mut f = ScalableBloomFilter::new(12, 0.01);
+        for _ in 0..20_000 {
+            f.insert(r.next_u32());
+        }
+        let probes = 100_000;
+        let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+        let measured = fps as f64 / probes as f64;
+        // overall bound is fp0/(1-r) = 0.02; allow noise
+        assert!(measured < 0.03, "fp={measured}");
+    }
+
+    #[test]
+    fn union_contains_both() {
+        let mut r = Rng::new(14);
+        let mut a = ScalableBloomFilter::new(10, 0.01);
+        let mut b = ScalableBloomFilter::new(10, 0.01);
+        let ka: Vec<u32> = (0..3000).map(|_| r.next_u32()).collect();
+        let kb: Vec<u32> = (0..100).map(|_| r.next_u32()).collect();
+        for &k in &ka {
+            a.insert(k);
+        }
+        for &k in &kb {
+            b.insert(k);
+        }
+        // union taller into shorter and vice versa
+        let mut u1 = b.clone();
+        u1.union_with(&a);
+        assert!(ka.iter().all(|&k| u1.contains(k)));
+        assert!(kb.iter().all(|&k| u1.contains(k)));
+        let mut u2 = a;
+        u2.union_with(&b);
+        assert!(ka.iter().all(|&k| u2.contains(k)));
+        assert!(kb.iter().all(|&k| u2.contains(k)));
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry")]
+    fn union_rejects_mismatched() {
+        let mut a = ScalableBloomFilter::new(10, 0.01);
+        let b = ScalableBloomFilter::new(11, 0.01);
+        a.union_with(&b);
+    }
+
+    #[test]
+    fn size_grows_sublinearly_in_slices() {
+        let mut r = Rng::new(15);
+        let mut f = ScalableBloomFilter::new(10, 0.01);
+        let s0 = f.size_bytes();
+        for _ in 0..50_000 {
+            f.insert(r.next_u32());
+        }
+        assert!(f.size_bytes() > s0);
+        // later slices dominate: total < 2.5x the last slice
+        assert!(f.num_slices() >= 2);
+    }
+
+    #[test]
+    fn fp_bound_formula() {
+        let f = ScalableBloomFilter::new(10, 0.01);
+        assert!(f.fp_bound() < 0.02 + 1e-9);
+    }
+}

@@ -1,0 +1,288 @@
+//! Standard bit-vector Bloom filter (paper §3.1): the *partition filter* /
+//! *dataset filter* / *join filter* substrate. Supports the two merge
+//! operations Algorithm 1 needs — OR (union of partition filters into a
+//! dataset filter, Reduce phase) and AND (intersection of dataset filters
+//! into the join filter) — plus serialization into the packed u32 word
+//! layout the AOT `bloom_probe` kernel consumes.
+
+use super::hashing::{self, probe_positions};
+
+/// A fixed-geometry Bloom filter over pre-folded u32 keys.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BloomFilter {
+    /// Packed bits: bit p lives at words[p >> 5] bit (p & 31) — identical
+    /// layout to the kernel side.
+    words: Vec<u32>,
+    log2_bits: u32,
+    num_hashes: u32,
+    items: u64,
+}
+
+impl BloomFilter {
+    /// Filter with 2^log2_bits bits and `num_hashes` probes.
+    pub fn new(log2_bits: u32, num_hashes: u32) -> Self {
+        assert!((5..=32).contains(&log2_bits), "log2_bits={log2_bits}");
+        assert!((1..=16).contains(&num_hashes));
+        Self {
+            words: vec![0; 1usize << (log2_bits - 5)],
+            log2_bits,
+            num_hashes,
+            items: 0,
+        }
+    }
+
+    /// Geometry from a target capacity + false-positive rate (paper eq 27),
+    /// rounding bits up to a power of two so AND/OR merges stay aligned.
+    pub fn with_capacity(items: u64, fp_rate: f64) -> Self {
+        let bits = hashing::bits_for_fp_rate(items, fp_rate).max(64);
+        let log2 = (64 - (bits - 1).leading_zeros() as u64).clamp(6, 30) as u32;
+        let h = hashing::optimal_num_hashes(1 << log2, items.max(1));
+        Self::new(log2, h)
+    }
+
+    pub fn log2_bits(&self) -> u32 {
+        self.log2_bits
+    }
+
+    pub fn num_hashes(&self) -> u32 {
+        self.num_hashes
+    }
+
+    pub fn num_bits(&self) -> u64 {
+        1u64 << self.log2_bits
+    }
+
+    /// Items inserted so far (approximate after merges: summed).
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    /// Size of the filter payload in bytes — what a broadcast of this
+    /// filter costs on the network (paper §A.1 |BF| terms).
+    pub fn size_bytes(&self) -> u64 {
+        (self.words.len() * 4) as u64
+    }
+
+    pub fn insert(&mut self, key: u32) {
+        for p in probe_positions(key, self.num_hashes, self.log2_bits) {
+            self.words[(p >> 5) as usize] |= 1 << (p & 31);
+        }
+        self.items += 1;
+    }
+
+    pub fn insert_key64(&mut self, key: u64) {
+        self.insert(hashing::fold_key(key));
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u32) -> bool {
+        probe_positions(key, self.num_hashes, self.log2_bits)
+            .all(|p| self.words[(p >> 5) as usize] & (1 << (p & 31)) != 0)
+    }
+
+    #[inline]
+    pub fn contains_key64(&self, key: u64) -> bool {
+        self.contains(hashing::fold_key(key))
+    }
+
+    /// OR-merge (set union): Reduce phase of buildInputFilter (Alg 1 l.24).
+    pub fn union_with(&mut self, other: &BloomFilter) {
+        self.check_geometry(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+        self.items += other.items;
+    }
+
+    /// AND-merge (set intersection superset): join-filter construction
+    /// (Alg 1 l.9). The result may contain false positives of the
+    /// intersection but never misses a truly common key.
+    pub fn intersect_with(&mut self, other: &BloomFilter) {
+        self.check_geometry(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+        self.items = self.items.min(other.items);
+    }
+
+    fn check_geometry(&self, other: &BloomFilter) {
+        assert_eq!(self.log2_bits, other.log2_bits, "geometry mismatch");
+        assert_eq!(self.num_hashes, other.num_hashes, "geometry mismatch");
+    }
+
+    /// Fraction of set bits — used to estimate cardinality and fp rate.
+    pub fn fill_ratio(&self) -> f64 {
+        let set: u64 = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / self.num_bits() as f64
+    }
+
+    /// Cardinality estimate from the fill ratio (Swamidass & Baldi):
+    /// n̂ = −m/h · ln(1 − X/m).
+    pub fn estimate_cardinality(&self) -> f64 {
+        let x = self.fill_ratio();
+        if x >= 1.0 {
+            return f64::INFINITY;
+        }
+        -(self.num_bits() as f64) / self.num_hashes as f64 * (1.0 - x).ln()
+    }
+
+    /// Expected false-positive rate at the current fill.
+    pub fn current_fp_rate(&self) -> f64 {
+        self.fill_ratio().powi(self.num_hashes as i32)
+    }
+
+    /// The packed word array — the exact tensor the `bloom_probe` AOT
+    /// artifact takes as its first argument.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn from_words(words: Vec<u32>, log2_bits: u32, num_hashes: u32) -> Self {
+        assert_eq!(words.len(), 1usize << (log2_bits - 5));
+        Self {
+            words,
+            log2_bits,
+            num_hashes,
+            items: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut r = Rng::new(1);
+        let mut f = BloomFilter::new(16, 5);
+        let keys: Vec<u32> = (0..2000).map(|_| r.next_u32()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        assert!(keys.iter().all(|&k| f.contains(k)));
+    }
+
+    #[test]
+    fn fp_rate_near_theory() {
+        let mut r = Rng::new(2);
+        let n = 10_000u64;
+        let mut f = BloomFilter::new(17, 5); // 131072 bits, ~13 bits/item
+        for _ in 0..n {
+            f.insert(r.next_u32());
+        }
+        let probes = 50_000;
+        let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+        let measured = fps as f64 / probes as f64;
+        let theory = hashing::theoretical_fp_rate(f.num_bits(), n, 5);
+        assert!(
+            (measured - theory).abs() < theory * 0.5 + 0.002,
+            "measured {measured} theory {theory}"
+        );
+    }
+
+    #[test]
+    fn union_contains_both_sides() {
+        let mut a = BloomFilter::new(14, 4);
+        let mut b = BloomFilter::new(14, 4);
+        a.insert(1);
+        a.insert(2);
+        b.insert(3);
+        a.union_with(&b);
+        assert!(a.contains(1) && a.contains(2) && a.contains(3));
+        assert_eq!(a.items(), 3);
+    }
+
+    #[test]
+    fn intersection_never_misses_common_keys() {
+        let mut r = Rng::new(3);
+        let mut a = BloomFilter::new(16, 5);
+        let mut b = BloomFilter::new(16, 5);
+        let common: Vec<u32> = (0..500).map(|_| r.next_u32()).collect();
+        for &k in &common {
+            a.insert(k);
+            b.insert(k);
+        }
+        for _ in 0..2000 {
+            a.insert(r.next_u32());
+            b.insert(r.next_u32());
+        }
+        a.intersect_with(&b);
+        assert!(common.iter().all(|&k| a.contains(k)));
+    }
+
+    #[test]
+    fn intersection_drops_most_noncommon() {
+        let mut r = Rng::new(4);
+        let mut a = BloomFilter::new(18, 5);
+        let mut b = BloomFilter::new(18, 5);
+        let only_a: Vec<u32> = (0..3000).map(|_| r.next_u32()).collect();
+        for &k in &only_a {
+            a.insert(k);
+        }
+        for _ in 0..3000 {
+            b.insert(r.next_u32());
+        }
+        a.intersect_with(&b);
+        let survivors = only_a.iter().filter(|&&k| a.contains(k)).count();
+        assert!(survivors < 50, "survivors={survivors}");
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry")]
+    fn merge_rejects_mismatched_geometry() {
+        let mut a = BloomFilter::new(14, 4);
+        let b = BloomFilter::new(15, 4);
+        a.union_with(&b);
+    }
+
+    #[test]
+    fn with_capacity_hits_target_fp() {
+        let mut r = Rng::new(5);
+        let n = 20_000u64;
+        let mut f = BloomFilter::with_capacity(n, 0.01);
+        for _ in 0..n {
+            f.insert(r.next_u32());
+        }
+        assert!(f.current_fp_rate() < 0.05, "fp={}", f.current_fp_rate());
+    }
+
+    #[test]
+    fn cardinality_estimate_close() {
+        let mut r = Rng::new(6);
+        let n = 5_000;
+        let mut f = BloomFilter::new(17, 5);
+        for _ in 0..n {
+            f.insert(r.next_u32());
+        }
+        let est = f.estimate_cardinality();
+        assert!(
+            (est - n as f64).abs() / (n as f64) < 0.05,
+            "est={est} n={n}"
+        );
+    }
+
+    #[test]
+    fn words_layout_matches_kernel_contract() {
+        // bit p -> words[p>>5] & (1 << (p&31)); insert key 42 and verify
+        // against the golden probe positions.
+        let mut f = BloomFilter::new(20, 5);
+        f.insert(42);
+        for p in [650960u32, 828291, 1005622, 134377, 311708] {
+            assert_ne!(f.words()[(p >> 5) as usize] & (1 << (p & 31)), 0);
+        }
+        let set: u32 = f.words().iter().map(|w| w.count_ones()).sum();
+        assert_eq!(set, 5);
+    }
+
+    #[test]
+    fn key64_folding_no_false_negatives() {
+        let mut f = BloomFilter::new(16, 5);
+        let keys: Vec<u64> = (0..1000).map(|i| (i as u64) << 33 | i as u64).collect();
+        for &k in &keys {
+            f.insert_key64(k);
+        }
+        assert!(keys.iter().all(|&k| f.contains_key64(k)));
+    }
+}

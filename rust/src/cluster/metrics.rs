@@ -1,0 +1,100 @@
+//! Per-stage metrics: the latency breakdowns (Figure 8's build-filter /
+//! shuffle / cross-product bars) and the shuffled-byte counters (Figures 4,
+//! 9b, 13a) every experiment reports.
+
+/// One named execution stage of a join.
+#[derive(Clone, Debug, Default)]
+pub struct StageMetrics {
+    pub name: String,
+    /// Simulated cluster time for the stage (see `TimeModel`): parallel
+    /// compute = max over workers, plus modeled network transfer time.
+    pub sim_secs: f64,
+    /// Real single-host wall time spent executing the stage's work.
+    pub wall_secs: f64,
+    /// Bytes crossing the network in this stage.
+    pub shuffled_bytes: u64,
+    /// Work items processed (records filtered, pairs crossed, ...).
+    pub items: u64,
+}
+
+/// Metrics for a whole join execution.
+#[derive(Clone, Debug, Default)]
+pub struct JoinMetrics {
+    pub stages: Vec<StageMetrics>,
+}
+
+impl JoinMetrics {
+    pub fn push(&mut self, s: StageMetrics) {
+        self.stages.push(s);
+    }
+
+    pub fn total_sim_secs(&self) -> f64 {
+        self.stages.iter().map(|s| s.sim_secs).sum()
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.stages.iter().map(|s| s.wall_secs).sum()
+    }
+
+    pub fn total_shuffled_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffled_bytes).sum()
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StageMetrics> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// Seconds attributed to a stage (0 if absent) — for breakdown tables.
+    pub fn stage_secs(&self, name: &str) -> f64 {
+        self.stage(name).map(|s| s.sim_secs).unwrap_or(0.0)
+    }
+
+    pub fn merge(&mut self, other: JoinMetrics) {
+        self.stages.extend(other.stages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_accumulate() {
+        let mut m = JoinMetrics::default();
+        m.push(StageMetrics {
+            name: "filter".into(),
+            sim_secs: 1.0,
+            wall_secs: 0.5,
+            shuffled_bytes: 100,
+            items: 10,
+        });
+        m.push(StageMetrics {
+            name: "crossproduct".into(),
+            sim_secs: 2.0,
+            wall_secs: 1.0,
+            shuffled_bytes: 50,
+            items: 20,
+        });
+        assert_eq!(m.total_sim_secs(), 3.0);
+        assert_eq!(m.total_wall_secs(), 1.5);
+        assert_eq!(m.total_shuffled_bytes(), 150);
+        assert_eq!(m.stage_secs("filter"), 1.0);
+        assert_eq!(m.stage_secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = JoinMetrics::default();
+        a.push(StageMetrics {
+            name: "x".into(),
+            ..Default::default()
+        });
+        let mut b = JoinMetrics::default();
+        b.push(StageMetrics {
+            name: "y".into(),
+            ..Default::default()
+        });
+        a.merge(b);
+        assert_eq!(a.stages.len(), 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! The shuffle fabric: repartition records by join key across workers with
+//! exact byte accounting — Spark's `cogroup()` data movement (§4: "the data
+//! shuffled by the cogroup() function is the output of the filtering
+//! stage").
+
+use super::{SimCluster, Stage};
+use crate::data::{partition_of, Dataset, Record};
+
+/// Repartition a dataset's records by key hash onto `k` workers, counting
+/// bytes for every record that changes workers. Returns per-worker record
+/// vectors (tagged with nothing — the caller tracks input identity).
+pub fn shuffle_dataset(
+    cluster: &SimCluster,
+    stage: &mut Stage,
+    dataset: &Dataset,
+) -> Vec<Vec<Record>> {
+    let k = cluster.k;
+    let mut out: Vec<Vec<Record>> = vec![Vec::new(); k];
+    for (j, part) in dataset.partitions.iter().enumerate() {
+        let src = cluster.worker_of_partition(j);
+        for r in part {
+            let dst = partition_of(r.key, k);
+            stage.transfer(src, dst, dataset.record_bytes);
+            out[dst].push(*r);
+        }
+    }
+    stage.add_items(dataset.len());
+    out
+}
+
+/// Shuffle only the records passing `keep` — the post-filter shuffle of
+/// ApproxJoin's stage 1.
+pub fn shuffle_filtered(
+    cluster: &SimCluster,
+    stage: &mut Stage,
+    dataset: &Dataset,
+    keep: impl Fn(&Record) -> bool,
+) -> Vec<Vec<Record>> {
+    let k = cluster.k;
+    let mut out: Vec<Vec<Record>> = vec![Vec::new(); k];
+    let mut kept = 0u64;
+    for (j, part) in dataset.partitions.iter().enumerate() {
+        let src = cluster.worker_of_partition(j);
+        for r in part {
+            if keep(r) {
+                let dst = partition_of(r.key, k);
+                stage.transfer(src, dst, dataset.record_bytes);
+                out[dst].push(*r);
+                kept += 1;
+            }
+        }
+    }
+    stage.add_items(kept);
+    out
+}
+
+/// Broadcast a whole dataset to every worker (broadcast join's movement of
+/// the smaller inputs): (k−1) copies of every byte.
+pub fn broadcast_dataset(cluster: &SimCluster, stage: &mut Stage, dataset: &Dataset) {
+    // each partition is sent from its owner to the k-1 other workers
+    for (j, part) in dataset.partitions.iter().enumerate() {
+        let src = cluster.worker_of_partition(j);
+        stage.broadcast(src, part.len() as u64 * dataset.record_bytes);
+    }
+    stage.add_items(dataset.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+
+    fn cluster(k: usize) -> SimCluster {
+        SimCluster::new(
+            k,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn dataset(keys: &[u64], parts: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "t",
+            keys.iter().map(|&k| Record::new(k, 1.0)).collect(),
+            parts,
+            10,
+        )
+    }
+
+    #[test]
+    fn shuffle_routes_by_key() {
+        let mut c = cluster(4);
+        let d = dataset(&(0..100).collect::<Vec<_>>(), 4);
+        let mut s = c.stage("shuffle");
+        let out = shuffle_dataset(&c, &mut s, &d);
+        // all records present, each on the worker its key hashes to
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 100);
+        for (w, recs) in out.iter().enumerate() {
+            assert!(recs.iter().all(|r| partition_of(r.key, 4) == w));
+        }
+        s.finish(&mut c);
+    }
+
+    #[test]
+    fn copartitioned_data_is_free() {
+        let mut c = cluster(4);
+        // Dataset::from_records hash-partitions with the same partitioner:
+        // a 4-partition dataset on a 4-worker cluster shuffles zero bytes.
+        let d = Dataset::from_records(
+            "t",
+            (0..100).map(|k| Record::new(k, 1.0)).collect(),
+            4,
+            10,
+        );
+        let mut s = c.stage("shuffle");
+        shuffle_dataset(&c, &mut s, &d);
+        assert_eq!(s.shuffled_bytes(), 0);
+        s.finish(&mut c);
+    }
+
+    #[test]
+    fn uncopartitioned_data_pays() {
+        let mut c = cluster(4);
+        let d = dataset(&(0..1000).collect::<Vec<_>>(), 4); // round-robin
+        let mut s = c.stage("shuffle");
+        shuffle_dataset(&c, &mut s, &d);
+        // ~3/4 of records move: bytes ~ 1000 * 10 * 0.75
+        let b = s.shuffled_bytes();
+        assert!((6000..9000).contains(&b), "bytes {b}");
+        s.finish(&mut c);
+    }
+
+    #[test]
+    fn filtered_shuffle_moves_less() {
+        let mut c = cluster(4);
+        let d = dataset(&(0..1000).collect::<Vec<_>>(), 4);
+        let mut s_all = c.stage("all");
+        shuffle_dataset(&c, &mut s_all, &d);
+        let all = s_all.shuffled_bytes();
+        let mut s_f = c.stage("filtered");
+        let out = shuffle_filtered(&c, &mut s_f, &d, |r| r.key < 100);
+        let filt = s_f.shuffled_bytes();
+        assert!(filt < all / 5, "filtered {filt} vs all {all}");
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn broadcast_costs_k_minus_1_copies() {
+        let mut c = cluster(5);
+        let d = dataset(&(0..10).collect::<Vec<_>>(), 2);
+        let mut s = c.stage("bcast");
+        broadcast_dataset(&c, &mut s, &d);
+        assert_eq!(s.shuffled_bytes(), 10 * 10 * 4);
+        s.finish(&mut c);
+    }
+}

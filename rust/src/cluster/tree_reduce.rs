@@ -1,0 +1,146 @@
+//! treeReduce merge of per-partition Bloom filters (paper §4 I): merging
+//! all partition filters at the driver makes it a bottleneck, so reducers
+//! are arranged in a binary tree — each round halves the live workers and
+//! ships one filter per merge; the root holds the dataset filter. Adding
+//! workers adds tree *levels*, keeping the driver load flat.
+
+use super::{SimCluster, Stage};
+use crate::bloom::BloomFilter;
+
+/// Merge one filter per worker into a single filter at worker 0 via a
+/// binary reduction tree, accounting one filter-sized transfer per merge.
+/// `op` is the merge (union for partition→dataset, intersection never goes
+/// through the tree — it happens once at the master over n dataset filters).
+pub fn tree_reduce(
+    stage: &mut Stage,
+    mut filters: Vec<(usize, BloomFilter)>,
+    op: impl Fn(&mut BloomFilter, &BloomFilter),
+) -> Option<BloomFilter> {
+    if filters.is_empty() {
+        return None;
+    }
+    while filters.len() > 1 {
+        let mut next = Vec::with_capacity(filters.len().div_ceil(2));
+        let mut it = filters.into_iter();
+        while let Some((w_dst, mut acc)) = it.next() {
+            if let Some((w_src, other)) = it.next() {
+                stage.transfer(w_src, w_dst, other.size_bytes());
+                stage.task(w_dst, || op(&mut acc, &other));
+            }
+            next.push((w_dst, acc));
+        }
+        filters = next;
+    }
+    Some(filters.pop().unwrap().1)
+}
+
+/// Build the dataset filter for one input (Alg 1 buildInputFilter): map
+/// phase builds one partition filter per worker-resident partition chunk,
+/// reduce phase tree-merges them with OR.
+pub fn build_dataset_filter(
+    cluster: &SimCluster,
+    stage: &mut Stage,
+    dataset: &crate::data::Dataset,
+    log2_bits: u32,
+    num_hashes: u32,
+) -> BloomFilter {
+    // map: one partition filter per worker (workers own striped partitions)
+    let mut per_worker: Vec<Option<BloomFilter>> = vec![None; cluster.k];
+    for (j, part) in dataset.partitions.iter().enumerate() {
+        let w = cluster.worker_of_partition(j);
+        let f = per_worker[w].get_or_insert_with(|| BloomFilter::new(log2_bits, num_hashes));
+        stage.task(w, || {
+            for r in part {
+                f.insert_key64(r.key);
+            }
+        });
+    }
+    stage.add_items(dataset.len());
+    let filters: Vec<(usize, BloomFilter)> = per_worker
+        .into_iter()
+        .enumerate()
+        .filter_map(|(w, f)| f.map(|f| (w, f)))
+        .collect();
+    tree_reduce(stage, filters, |a, b| a.union_with(b))
+        .unwrap_or_else(|| BloomFilter::new(log2_bits, num_hashes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::{Dataset, Record};
+
+    fn cluster(k: usize) -> SimCluster {
+        SimCluster::new(
+            k,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    #[test]
+    fn tree_reduce_merges_all() {
+        let mut c = cluster(8);
+        let mut s = c.stage("reduce");
+        let filters: Vec<(usize, BloomFilter)> = (0..8)
+            .map(|w| {
+                let mut f = BloomFilter::new(14, 4);
+                f.insert(w as u32 * 100);
+                (w, f)
+            })
+            .collect();
+        let merged = tree_reduce(&mut s, filters, |a, b| a.union_with(b)).unwrap();
+        for w in 0..8u32 {
+            assert!(merged.contains(w * 100));
+        }
+        // 7 merges x filter size bytes
+        let f = BloomFilter::new(14, 4);
+        assert_eq!(s.shuffled_bytes(), 7 * f.size_bytes());
+        s.finish(&mut c);
+    }
+
+    #[test]
+    fn tree_reduce_empty_and_single() {
+        let mut c = cluster(4);
+        let mut s = c.stage("reduce");
+        assert!(tree_reduce(&mut s, vec![], |a: &mut BloomFilter, b| a.union_with(b)).is_none());
+        let mut f = BloomFilter::new(10, 3);
+        f.insert(7);
+        let out = tree_reduce(&mut s, vec![(2, f)], |a, b| a.union_with(b)).unwrap();
+        assert!(out.contains(7));
+        assert_eq!(s.shuffled_bytes(), 0);
+    }
+
+    #[test]
+    fn dataset_filter_covers_all_keys() {
+        let mut c = cluster(4);
+        let d = Dataset::from_records(
+            "t",
+            (0..5000u64).map(|k| Record::new(k, 1.0)).collect(),
+            8,
+            10,
+        );
+        let mut s = c.stage("build");
+        let f = build_dataset_filter(&c, &mut s, &d, 17, 5);
+        s.finish(&mut c);
+        assert!((0..5000u64).all(|k| f.contains_key64(k)));
+    }
+
+    #[test]
+    fn transfers_scale_logarithmically_per_round() {
+        // with k workers the tree does k-1 merges total but ceil(log2 k)
+        // rounds; per-worker byte load stays ~1-2 filters regardless of k
+        let mut c = cluster(16);
+        let mut s = c.stage("reduce");
+        let filters: Vec<(usize, BloomFilter)> =
+            (0..16).map(|w| (w, BloomFilter::new(12, 3))).collect();
+        tree_reduce(&mut s, filters, |a, b| a.union_with(b));
+        let fsize = BloomFilter::new(12, 3).size_bytes();
+        assert_eq!(s.shuffled_bytes(), 15 * fsize);
+        s.finish(&mut c);
+    }
+}

@@ -1,0 +1,212 @@
+//! Comparison baselines:
+//!
+//! * **extended repartition join** (§5.3): Spark repartition join followed
+//!   by stratified sampling over the finished join output — also how the
+//!   SnappyData comparison of §5.5 samples (post-join).
+//! * **pre-join sampled repartition join** (Fig 1 / §6.1): `sampleByKey`
+//!   each input first, join the samples, scale the aggregate back up —
+//!   fast but statistically unsound for joins.
+
+use crate::cluster::shuffle::shuffle_dataset;
+use crate::cluster::{JoinMetrics, SimCluster};
+use crate::data::Dataset;
+use crate::join::{group_by_key, CombineOp};
+use crate::sampling::stratified::{post_join_reservoir, sample_by_key};
+use crate::stats::{clt_sum, ApproxResult, StratumAgg};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Outcome of a baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineRun {
+    pub estimate: ApproxResult,
+    pub metrics: JoinMetrics,
+    /// Per-key aggregates (post-join path) for accuracy analysis.
+    pub strata: HashMap<u64, StratumAgg>,
+}
+
+/// Extended repartition join: full join, then per-key reservoir sampling of
+/// `fraction` of the output (SnappyData-style post-join sampling).
+pub fn post_join_sampling(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    fraction: f64,
+    confidence: f64,
+    seed: u64,
+) -> BaselineRun {
+    // full repartition shuffle
+    let mut s = cluster.stage("shuffle");
+    let shuffled: Vec<Vec<Vec<crate::data::Record>>> = inputs
+        .iter()
+        .map(|d| shuffle_dataset(cluster, &mut s, d))
+        .collect();
+    s.finish(cluster);
+
+    // full cross product with inline reservoir (the reservoir does not
+    // reduce the enumeration cost — that is the point of this baseline)
+    let mut s = cluster.stage("join_then_sample");
+    let mut rng = Rng::new(seed);
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for w in 0..cluster.k {
+        let per_input: Vec<Vec<crate::data::Record>> =
+            shuffled.iter().map(|inp| inp[w].clone()).collect();
+        let mut r = rng.fork(w as u64);
+        let t0 = Instant::now();
+        let groups = group_by_key(&per_input);
+        let mut pairs = 0u64;
+        for (key, sides) in groups {
+            if sides.iter().any(|s| s.is_empty()) {
+                continue;
+            }
+            let agg = post_join_reservoir(&sides, fraction, op, &mut r);
+            pairs += agg.population as u64;
+            strata.insert(key, agg);
+        }
+        s.add_compute(w, t0.elapsed().as_secs_f64());
+        s.add_items(pairs);
+    }
+    s.finish(cluster);
+
+    let strata_vec: Vec<StratumAgg> = strata.values().copied().collect();
+    BaselineRun {
+        estimate: clt_sum(&strata_vec, confidence),
+        metrics: cluster.take_metrics(),
+        strata,
+    }
+}
+
+/// Pre-join sampling: sampleByKey each input at `fraction`, join the
+/// samples exactly, scale the SUM back by (1/fraction)^n. The scaling is
+/// the textbook-naive estimator whose per-key bias the paper's Fig 1/13c
+/// quantifies; no sound error bound exists for it, so the bound is
+/// reported as NaN.
+pub fn pre_join_sampling(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    fraction: f64,
+    confidence: f64,
+    seed: u64,
+) -> BaselineRun {
+    let mut rng = Rng::new(seed);
+    let mut s = cluster.stage("pre_sample");
+    let sampled: Vec<Dataset> = inputs
+        .iter()
+        .map(|d| {
+            let mut r = rng.fork(1);
+            let t0 = Instant::now();
+            let out = sample_by_key(d, fraction, &mut r);
+            s.add_compute(0, t0.elapsed().as_secs_f64());
+            out
+        })
+        .collect();
+    s.finish(cluster);
+
+    let run = crate::join::repartition::repartition_join(cluster, &sampled, op);
+    let scale = (1.0 / fraction).powi(inputs.len() as i32);
+    let estimate = run.exact_sum() * scale;
+    BaselineRun {
+        estimate: ApproxResult {
+            estimate,
+            error_bound: f64::NAN,
+            confidence,
+            degrees_of_freedom: f64::NAN,
+            samples: run.strata.values().map(|s| s.count as u64).sum(),
+        },
+        metrics: run.metrics,
+        strata: run.strata,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::Record;
+    use crate::join::native::native_join;
+
+    fn cluster() -> SimCluster {
+        SimCluster::new(
+            4,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn inputs() -> Vec<Dataset> {
+        let mut r = Rng::new(10);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for key in 0..30u64 {
+            for _ in 0..20 {
+                a.push(Record::new(key, r.range_f64(0.0, 10.0)));
+                b.push(Record::new(key, r.range_f64(0.0, 10.0)));
+            }
+        }
+        vec![
+            Dataset::from_records_unpartitioned("a", a, 4, 100),
+            Dataset::from_records_unpartitioned("b", b, 4, 100),
+        ]
+    }
+
+    #[test]
+    fn post_join_sampling_is_accurate() {
+        let ins = inputs();
+        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let run = post_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.2, 0.95, 1);
+        let rel = (run.estimate.estimate - exact).abs() / exact;
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn post_join_sampling_enumerates_everything() {
+        let ins = inputs();
+        let run = post_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.1, 0.95, 1);
+        // items processed in the join stage == full cross product size
+        let st = run.metrics.stage("join_then_sample").unwrap();
+        assert_eq!(st.items, 30 * 20 * 20);
+    }
+
+    #[test]
+    fn pre_join_sampling_is_fast_but_rough() {
+        let ins = inputs();
+        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let run = pre_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.5, 0.95, 2);
+        // it enumerates far fewer pairs...
+        let joined: u64 = run
+            .metrics
+            .stage("crossproduct")
+            .map(|s| s.items)
+            .unwrap_or(0);
+        assert!(joined < 30 * 20 * 20 / 2, "joined {joined}");
+        // ...and lands within cooee of the truth only in expectation
+        let rel = (run.estimate.estimate - exact).abs() / exact;
+        assert!(rel < 0.5, "rel {rel}");
+        assert!(run.estimate.error_bound.is_nan());
+    }
+
+    #[test]
+    fn pre_join_estimator_unbiased_over_reps() {
+        let ins = inputs();
+        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let mut mean = 0.0;
+        let reps = 30;
+        for seed in 0..reps {
+            let run = pre_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.4, 0.95, seed);
+            mean += run.estimate.estimate;
+        }
+        mean /= reps as f64;
+        assert!((mean - exact).abs() / exact < 0.1, "mean {mean} vs {exact}");
+    }
+}

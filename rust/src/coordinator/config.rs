@@ -1,0 +1,61 @@
+//! Engine configuration.
+
+use crate::cluster::TimeModel;
+use crate::stats::EstimatorKind;
+use std::path::PathBuf;
+
+/// Configuration of an [`super::ApproxJoinEngine`].
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Logical workers in the simulated cluster (the paper's k).
+    pub workers: usize,
+    pub time_model: TimeModel,
+    /// Bloom filter false-positive target (eq 27 sizing); the filter
+    /// geometry snaps to the AOT artifact's (2^20, h=5) when compatible so
+    /// the XLA prober can run.
+    pub fp_rate: f64,
+    /// Pin the artifact geometry regardless of input size (lets the XLA
+    /// prober engage; costs filter bytes on small inputs).
+    pub pin_artifact_filter_geometry: bool,
+    pub estimator: EstimatorKind,
+    /// Directory with AOT artifacts; None → pure-Rust execution.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Per-worker memory budget for native-join intermediates.
+    pub memory_budget: u64,
+    /// Overlap fraction above which filtering alone cannot help and the
+    /// engine refuses an exact plan under a latency budget (§3.1.1 check).
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 10, // the paper's cluster size
+            time_model: TimeModel::default(),
+            fp_rate: 0.01,
+            pin_artifact_filter_geometry: false,
+            estimator: EstimatorKind::Clt,
+            artifacts_dir: default_artifacts_dir(),
+            memory_budget: crate::join::native::DEFAULT_MEMORY_BUDGET,
+            seed: 42,
+        }
+    }
+}
+
+/// `artifacts/` next to Cargo.toml when present (dev layout), else None.
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_papers_cluster() {
+        let c = EngineConfig::default();
+        assert_eq!(c.workers, 10);
+        assert_eq!(c.fp_rate, 0.01);
+    }
+}

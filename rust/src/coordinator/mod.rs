@@ -1,0 +1,405 @@
+//! The ApproxJoin engine: the public entry point tying together the query
+//! front end, the filtering stage, the cost-function planner, the sampling
+//! stage, the AOT/XLA executors and the error estimators.
+//!
+//! Pipeline per query (paper Fig 2):
+//!   parse → stage 1 filtering (§3.1) → cost function (§3.2) decides
+//!   exact vs approximate → cross product or sampling-during-join (§3.3)
+//!   → error estimation (§3.4) → `result ± error_bound`, feedback σ stored.
+
+pub mod baselines;
+pub mod config;
+
+pub use config::EngineConfig;
+
+use crate::cluster::{JoinMetrics, SimCluster};
+use crate::cost::{CostModel, FeedbackStore};
+use crate::data::Dataset;
+use crate::join::approx::{
+    sample_stage, ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams,
+};
+use crate::join::bloom_join::{
+    cross_product_stage, filter_and_shuffle, FilterConfig, KeyProber, NativeProber,
+};
+use crate::query::{AggFunc, Query};
+use crate::runtime::{BloomProbeExecutor, JoinAggExecutor, PjrtRuntime};
+use crate::stats::{
+    clt_avg, clt_stdev, clt_sum, exact_count, horvitz_thompson_sum, ApproxResult, EstimatorKind,
+    StratumAgg,
+};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// How the engine decided to execute a query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExecutionMode {
+    /// Exact cross product — the overlap fit the budget (or no budget).
+    Exact,
+    /// Sampled during the join at the given fraction (latency-driven) or
+    /// with per-stratum error-driven sizes (fraction = NaN then).
+    Sampled { fraction: f64 },
+}
+
+/// The engine's answer to a query.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome {
+    pub result: ApproxResult,
+    pub metrics: JoinMetrics,
+    pub mode: ExecutionMode,
+    /// Simulated seconds the whole query took on the modeled cluster.
+    pub sim_secs: f64,
+    /// d_dt: filtering + shuffle portion (eq 1).
+    pub d_dt: f64,
+    /// Σ B_i after filtering — the exact join-output cardinality.
+    pub output_cardinality: f64,
+}
+
+/// The ApproxJoin coordinator engine.
+pub struct ApproxJoinEngine {
+    pub cfg: EngineConfig,
+    pub cost: CostModel,
+    pub feedback: FeedbackStore,
+    runtime: Option<PjrtRuntime>,
+    join_agg: Option<JoinAggExecutor>,
+    prober: Option<BloomProbeExecutor>,
+    native_agg: NativeAggregator,
+}
+
+impl ApproxJoinEngine {
+    /// Build an engine; compiles the AOT artifacts when available.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let runtime = match &cfg.artifacts_dir {
+            Some(dir) => Some(PjrtRuntime::open(dir)?),
+            None => None,
+        };
+        let (join_agg, prober) = match &runtime {
+            Some(rt) => (Some(rt.join_agg()?), Some(rt.bloom_probe()?)),
+            None => (None, None),
+        };
+        Ok(Self {
+            cfg,
+            cost: CostModel::default(),
+            feedback: FeedbackStore::in_memory(),
+            runtime,
+            join_agg,
+            prober,
+            native_agg: NativeAggregator::default(),
+        })
+    }
+
+    /// Pure-Rust engine (no artifacts) — tests, quick starts.
+    pub fn without_runtime(mut cfg: EngineConfig) -> Result<Self> {
+        cfg.artifacts_dir = None;
+        Self::new(cfg)
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Use a profiled cost model (β_compute from this host / cluster).
+    pub fn with_cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn with_feedback(mut self, feedback: FeedbackStore) -> Self {
+        self.feedback = feedback;
+        self
+    }
+
+    fn cluster(&self) -> SimCluster {
+        SimCluster::new(self.cfg.workers, self.cfg.time_model)
+    }
+
+    fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
+        if self.cfg.pin_artifact_filter_geometry {
+            if let Some(rt) = &self.runtime {
+                return FilterConfig {
+                    log2_bits: rt.geometry.log2_bits,
+                    num_hashes: rt.geometry.num_hashes,
+                };
+            }
+        }
+        FilterConfig::for_inputs(inputs, self.cfg.fp_rate)
+    }
+
+    /// Execute a parsed query against named datasets (names must match the
+    /// query's FROM list).
+    pub fn execute(
+        &mut self,
+        query: &Query,
+        datasets: &HashMap<String, Dataset>,
+    ) -> Result<QueryOutcome> {
+        let mut inputs = Vec::with_capacity(query.tables.len());
+        for t in &query.tables {
+            let Some(d) = datasets.get(t) else {
+                bail!("dataset {t} not registered");
+            };
+            inputs.push(d.clone());
+        }
+        self.execute_on(query, &inputs)
+    }
+
+    /// Execute a parsed query on inputs given in FROM order.
+    pub fn execute_on(&mut self, query: &Query, inputs: &[Dataset]) -> Result<QueryOutcome> {
+        if inputs.len() != query.tables.len() {
+            bail!(
+                "query joins {} tables but {} datasets were given",
+                query.tables.len(),
+                inputs.len()
+            );
+        }
+        let mut cluster = self.cluster();
+        let filter_cfg = self.filter_config(inputs);
+
+        // ---- stage 1: filtering (§3.1)
+        let mut native_prober = NativeProber;
+        let prober: &mut dyn KeyProber = match &mut self.prober {
+            Some(p) => p,
+            None => &mut native_prober,
+        };
+        let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?;
+        let d_dt = filtered.d_dt;
+
+        // exact output cardinality Σ B_i (known after filtering)
+        let total_pairs: f64 = filtered
+            .per_worker
+            .iter()
+            .flat_map(|g| g.values())
+            .map(|sides| sides.iter().map(|s| s.len() as f64).product::<f64>())
+            .sum();
+
+        // ---- stage 2.1: cost function decides the plan (§3.2)
+        let confidence = query.budget.error.map(|e| e.confidence).unwrap_or(0.95);
+        let mode = self.plan(query, d_dt, total_pairs);
+
+        // ---- stage 2.2: execute
+        let fingerprint = query.fingerprint();
+        let (strata, draws, sampled) = match mode {
+            ExecutionMode::Exact => {
+                let strata = cross_product_stage(&mut cluster, &filtered, query.combine);
+                (strata, HashMap::new(), false)
+            }
+            ExecutionMode::Sampled { fraction } => {
+                let params = if fraction.is_nan() {
+                    let err = query.budget.error.expect("error-driven plan needs budget");
+                    SamplingParams::ErrorBound {
+                        err_desired: err.bound,
+                        confidence: err.confidence,
+                        sigmas: self.feedback.sigmas(&fingerprint),
+                        default_sigma: self.feedback.default_sigma(&fingerprint),
+                    }
+                } else {
+                    SamplingParams::Fraction(fraction)
+                };
+                let acfg = ApproxConfig {
+                    params,
+                    estimator: self.cfg.estimator,
+                    seed: self.cfg.seed,
+                };
+                let agg: &mut dyn BatchAggregator = match &mut self.join_agg {
+                    Some(x) => x,
+                    None => &mut self.native_agg,
+                };
+                let (strata, draws) =
+                    sample_stage(&mut cluster, &filtered, query.combine, &acfg, agg)?;
+                (strata, draws, true)
+            }
+        };
+
+        // ---- stage 2.3: error estimation (§3.4)
+        let strata_vec: Vec<StratumAgg> = strata.values().copied().collect();
+        let result = match (query.agg, sampled, self.cfg.estimator) {
+            (AggFunc::Count, _, _) => exact_count(&strata_vec, confidence),
+            (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
+                let order: Vec<u64> = strata.keys().copied().collect();
+                let s: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
+                let d: Vec<f64> = order
+                    .iter()
+                    .map(|k| draws.get(k).copied().unwrap_or(0.0))
+                    .collect();
+                horvitz_thompson_sum(&s, &d, confidence)
+            }
+            (AggFunc::Sum, _, _) => clt_sum(&strata_vec, confidence),
+            (AggFunc::Avg, _, _) => clt_avg(&strata_vec, confidence),
+            (AggFunc::Stdev, _, _) => clt_stdev(&strata_vec, confidence),
+        };
+
+        // feedback: store per-stratum σ for subsequent runs (§3.2 II)
+        self.feedback.record(&fingerprint, &strata);
+
+        let metrics = cluster.take_metrics();
+        Ok(QueryOutcome {
+            sim_secs: metrics.total_sim_secs(),
+            result,
+            metrics,
+            mode,
+            d_dt,
+            output_cardinality: strata_vec.iter().map(|s| s.population).sum(),
+        })
+    }
+
+    /// The §3.2 planner: exact when affordable, else sampled.
+    fn plan(&self, query: &Query, d_dt: f64, total_pairs: f64) -> ExecutionMode {
+        if let Some(d_desired) = query.budget.latency_secs {
+            let s = self
+                .cost
+                .fraction_for_latency(d_desired, d_dt, total_pairs)
+                .max(1e-6);
+            if s >= 1.0 {
+                return ExecutionMode::Exact; // §3.1.1: no approximation needed
+            }
+            return ExecutionMode::Sampled { fraction: s };
+        }
+        if query.budget.error.is_some() {
+            return ExecutionMode::Sampled {
+                fraction: f64::NAN, // error-driven per-stratum sizes
+            };
+        }
+        ExecutionMode::Exact
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_overlapping, SyntheticSpec};
+    use crate::query::parse;
+
+    fn engine() -> ApproxJoinEngine {
+        ApproxJoinEngine::without_runtime(EngineConfig {
+            workers: 4,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn small_inputs() -> Vec<Dataset> {
+        generate_overlapping(&SyntheticSpec {
+            items_per_input: 5_000,
+            overlap_fraction: 0.05,
+            lambda: 40.0,
+            partitions: 4,
+            seed: 3,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn unbudgeted_query_is_exact() {
+        let mut e = engine();
+        let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap();
+        let inputs = small_inputs();
+        let out = e.execute_on(&q, &inputs).unwrap();
+        assert_eq!(out.mode, ExecutionMode::Exact);
+        assert_eq!(out.result.error_bound, 0.0);
+        assert!(out.result.estimate != 0.0);
+        assert!(out.output_cardinality > 0.0);
+    }
+
+    #[test]
+    fn tight_latency_budget_samples() {
+        let mut e = engine();
+        // absurdly tight budget forces sampling
+        let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 0.000001 SECONDS")
+            .unwrap();
+        let inputs = small_inputs();
+        let out = e.execute_on(&q, &inputs).unwrap();
+        match out.mode {
+            ExecutionMode::Sampled { fraction } => assert!(fraction < 1.0),
+            m => panic!("expected sampled, got {m:?}"),
+        }
+        assert!(out.result.error_bound > 0.0);
+    }
+
+    #[test]
+    fn loose_latency_budget_exact() {
+        let mut e = engine();
+        let q =
+            parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 10000 SECONDS").unwrap();
+        let inputs = small_inputs();
+        let out = e.execute_on(&q, &inputs).unwrap();
+        assert_eq!(out.mode, ExecutionMode::Exact);
+    }
+
+    #[test]
+    fn sampled_estimate_tracks_exact() {
+        let mut e = engine();
+        let inputs = small_inputs();
+        let exact = e
+            .execute_on(
+                &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap(),
+                &inputs,
+            )
+            .unwrap();
+        let approx = e
+            .execute_on(
+                // budget that lands at a mid fraction
+                &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 0.05 SECONDS")
+                    .unwrap(),
+                &inputs,
+            )
+            .unwrap();
+        let rel =
+            (approx.result.estimate - exact.result.estimate).abs() / exact.result.estimate.abs();
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn error_budget_uses_feedback_and_tightens() {
+        let mut e = engine();
+        let inputs = small_inputs();
+        let q = parse(
+            "SELECT AVG(a.v + b.v) FROM a, b WHERE a.k = b.k ERROR 0.5 CONFIDENCE 95%",
+        )
+        .unwrap();
+        // first run: no σ stored, default sigma
+        let first = e.execute_on(&q, &inputs).unwrap();
+        assert!(e.feedback.has(&q.fingerprint()));
+        // second run: stored σ should produce a bound near/below target
+        let second = e.execute_on(&q, &inputs).unwrap();
+        assert!(
+            second.result.error_bound <= first.result.error_bound * 2.0,
+            "first {} second {}",
+            first.result.error_bound,
+            second.result.error_bound
+        );
+    }
+
+    #[test]
+    fn count_is_exact_even_when_sampled() {
+        let mut e = engine();
+        let inputs = small_inputs();
+        let exact = e
+            .execute_on(
+                &parse("SELECT COUNT(*) FROM a, b WHERE a.k = b.k").unwrap(),
+                &inputs,
+            )
+            .unwrap();
+        let sampled = e
+            .execute_on(
+                &parse("SELECT COUNT(*) FROM a, b WHERE a.k = b.k WITHIN 0.001 SECONDS").unwrap(),
+                &inputs,
+            )
+            .unwrap();
+        assert_eq!(exact.result.estimate, sampled.result.estimate);
+        assert_eq!(sampled.result.error_bound, 0.0);
+    }
+
+    #[test]
+    fn missing_dataset_is_error() {
+        let mut e = engine();
+        let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap();
+        let err = e.execute(&q, &HashMap::new()).unwrap_err();
+        assert!(err.to_string().contains("not registered"));
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let mut e = engine();
+        let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap();
+        let inputs = small_inputs();
+        assert!(e.execute_on(&q, &inputs[..1]).is_err());
+    }
+}

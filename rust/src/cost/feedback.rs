@@ -1,0 +1,168 @@
+//! The feedback mechanism (paper §3.2 II / §4 IV): the per-stratum standard
+//! deviation σ_i cannot be known before the first execution, so the first
+//! run records it and subsequent runs of the *same query* use the stored
+//! values in eq 10 to pick optimal sample sizes.
+
+use crate::stats::StratumAgg;
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Persistent map: query fingerprint → (join key → σ_i).
+#[derive(Clone, Debug, Default)]
+pub struct FeedbackStore {
+    path: Option<PathBuf>,
+    runs: HashMap<String, HashMap<u64, f64>>,
+}
+
+impl FeedbackStore {
+    /// In-memory store (tests, one-shot runs).
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    /// Store backed by a JSON file; loads existing content if present.
+    pub fn open(path: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let path = path.into();
+        let mut store = Self {
+            path: Some(path.clone()),
+            runs: HashMap::new(),
+        };
+        if path.exists() {
+            let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+            if let Some(obj) = j.as_obj() {
+                for (fp, sig) in obj {
+                    let mut m = HashMap::new();
+                    if let Some(sobj) = sig.as_obj() {
+                        for (k, v) in sobj {
+                            if let (Ok(key), Some(val)) = (k.parse::<u64>(), v.as_f64()) {
+                                m.insert(key, val);
+                            }
+                        }
+                    }
+                    store.runs.insert(fp.clone(), m);
+                }
+            }
+        }
+        Ok(store)
+    }
+
+    /// Record the observed per-stratum σ of a finished run.
+    pub fn record(&mut self, fingerprint: &str, strata: &HashMap<u64, StratumAgg>) {
+        let entry = self.runs.entry(fingerprint.to_string()).or_default();
+        for (&key, agg) in strata {
+            if agg.count > 1.0 {
+                entry.insert(key, agg.stddev());
+            }
+        }
+    }
+
+    /// Stored σ map for a query (empty on first execution).
+    pub fn sigmas(&self, fingerprint: &str) -> HashMap<u64, f64> {
+        self.runs.get(fingerprint).cloned().unwrap_or_default()
+    }
+
+    pub fn has(&self, fingerprint: &str) -> bool {
+        self.runs.contains_key(fingerprint)
+    }
+
+    /// Median stored σ — the `default_sigma` for strata unseen so far.
+    pub fn default_sigma(&self, fingerprint: &str) -> f64 {
+        let mut v: Vec<f64> = self
+            .runs
+            .get(fingerprint)
+            .map(|m| m.values().copied().collect())
+            .unwrap_or_default();
+        if v.is_empty() {
+            return 1.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn save(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let obj = Json::Obj(
+            self.runs
+                .iter()
+                .map(|(fp, m)| {
+                    (
+                        fp.clone(),
+                        Json::Obj(
+                            m.iter()
+                                .map(|(k, v)| (k.to_string(), Json::num(*v)))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, obj.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(count: f64, sum: f64, sumsq: f64) -> StratumAgg {
+        StratumAgg {
+            population: 100.0,
+            count,
+            sum,
+            sumsq,
+        }
+    }
+
+    #[test]
+    fn record_then_query() {
+        let mut s = FeedbackStore::in_memory();
+        let mut strata = HashMap::new();
+        strata.insert(1u64, agg(10.0, 50.0, 300.0)); // sd > 0
+        strata.insert(2u64, agg(1.0, 5.0, 25.0)); // singleton: skipped
+        s.record("q1", &strata);
+        let sig = s.sigmas("q1");
+        assert!(sig.contains_key(&1));
+        assert!(!sig.contains_key(&2));
+        assert!(s.has("q1"));
+        assert!(!s.has("q2"));
+    }
+
+    #[test]
+    fn default_sigma_median() {
+        let mut s = FeedbackStore::in_memory();
+        let mut strata = HashMap::new();
+        for (k, sd) in [(1u64, 1.0f64), (2, 3.0), (3, 100.0)] {
+            // construct agg with desired sd: n=2, values {m-sd/sqrt2 ...}
+            // simpler: sum=0, sumsq = sd^2 * (n-1) with n=2
+            strata.insert(k, agg(2.0, 0.0, sd * sd));
+        }
+        s.record("q", &strata);
+        let d = s.default_sigma("q");
+        assert!((d - 3.0).abs() < 1e-9, "median {d}");
+        assert_eq!(FeedbackStore::in_memory().default_sigma("nope"), 1.0);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("aj_fb_{}", std::process::id()));
+        let path = dir.join("feedback.json");
+        {
+            let mut s = FeedbackStore::open(&path).unwrap();
+            let mut strata = HashMap::new();
+            strata.insert(42u64, agg(5.0, 10.0, 40.0));
+            s.record("fp", &strata);
+            s.save().unwrap();
+        }
+        let s = FeedbackStore::open(&path).unwrap();
+        let sig = s.sigmas("fp");
+        assert!(sig[&42] > 0.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,234 @@
+//! The cost functions (paper §3.2): translating a user's query budget —
+//! desired latency *or* desired error bound — into per-stratum sample
+//! sizes, plus the β_compute profiling (Fig 5) and the feedback mechanism
+//! that stores per-stratum σ between runs.
+
+pub mod feedback;
+
+pub use feedback::FeedbackStore;
+
+use crate::util::Json;
+use std::time::Instant;
+
+/// The latency cost model: d_cp = β_compute · CP_total + ε (eq 5).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Seconds per cross-product pair on this cluster (paper: 4.16e-9).
+    pub beta_compute: f64,
+    /// Fixed noise/overhead term ε.
+    pub epsilon: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // a sensible prior before profiling; `profile_host` replaces it
+        Self {
+            beta_compute: 4.16e-9,
+            epsilon: 0.05,
+        }
+    }
+}
+
+impl CostModel {
+    /// Least-squares fit of (pairs, seconds) observations to eq 5.
+    pub fn fit(samples: &[(u64, f64)]) -> Self {
+        assert!(samples.len() >= 2, "need >= 2 profile points");
+        let n = samples.len() as f64;
+        let sx: f64 = samples.iter().map(|&(p, _)| p as f64).sum();
+        let sy: f64 = samples.iter().map(|&(_, t)| t).sum();
+        let sxx: f64 = samples.iter().map(|&(p, _)| (p as f64) * (p as f64)).sum();
+        let sxy: f64 = samples.iter().map(|&(p, t)| p as f64 * t).sum();
+        let denom = n * sxx - sx * sx;
+        let beta = if denom.abs() < 1e-30 {
+            CostModel::default().beta_compute
+        } else {
+            ((n * sxy - sx * sy) / denom).max(1e-12)
+        };
+        let eps = (sy / n - beta * sx / n).max(0.0);
+        Self {
+            beta_compute: beta,
+            epsilon: eps,
+        }
+    }
+
+    /// Offline profiling of this host (Fig 5): time full cross products of
+    /// growing sizes and fit the linear model. Returns the model and the
+    /// raw (pairs, secs) curve for reporting.
+    pub fn profile_host(sizes: &[u64]) -> (Self, Vec<(u64, f64)>) {
+        let mut samples = Vec::with_capacity(sizes.len());
+        for &pairs in sizes {
+            let side = (pairs as f64).sqrt().ceil() as usize;
+            let a: Vec<f64> = (0..side).map(|i| i as f64 * 0.5).collect();
+            let b: Vec<f64> = (0..side).map(|i| i as f64 * 0.25).collect();
+            let t0 = Instant::now();
+            let agg = crate::join::cross_product_agg(
+                &[a, b],
+                crate::join::CombineOp::Sum,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(agg.count > 0.0);
+            samples.push((agg.population as u64, dt));
+        }
+        (Self::fit(&samples), samples)
+    }
+
+    /// Offline profiling of the *sampling* path: seconds per sampled edge
+    /// draw. The paper prices sampled pairs with the same β as full
+    /// cross-product pairs (eq 3-5); per-draw work (two uniform picks + an
+    /// aggregate push) is costlier than a fused cross-product inner loop,
+    /// so engines wanting the eq-6 fraction to land on the budget should
+    /// calibrate with this instead.
+    pub fn profile_sampling_host(sizes: &[u64]) -> (Self, Vec<(u64, f64)>) {
+        use crate::sampling::edge_sampling::sample_edges_with_replacement;
+        let mut rng = crate::util::Rng::new(0x5EED);
+        let side_a: Vec<f64> = (0..512).map(|i| i as f64).collect();
+        let side_b: Vec<f64> = (0..512).map(|i| i as f64 * 0.5).collect();
+        let sides = [side_a, side_b];
+        let mut samples = Vec::with_capacity(sizes.len());
+        for &draws in sizes {
+            let t0 = Instant::now();
+            let agg = sample_edges_with_replacement(
+                &mut rng,
+                &sides,
+                draws,
+                crate::join::CombineOp::Sum,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(agg.count > 0.0);
+            samples.push((draws, dt));
+        }
+        (Self::fit(&samples), samples)
+    }
+
+    /// Predicted cross-product latency for CP_total pairs (eq 5).
+    pub fn cp_latency(&self, pairs: f64) -> f64 {
+        self.beta_compute * pairs + self.epsilon
+    }
+
+    /// Sampling fraction for a latency budget (eq 6): the share of the
+    /// total bipartite population we can afford to sample in
+    /// d_rem = d_desired − d_dt. Clamped to [0, 1]; a result of 1 means the
+    /// exact join fits the budget (§3.1.1's "no approximation needed").
+    pub fn fraction_for_latency(&self, d_desired: f64, d_dt: f64, total_pairs: f64) -> f64 {
+        if total_pairs <= 0.0 {
+            return 1.0;
+        }
+        let d_rem = d_desired - d_dt - self.epsilon;
+        if d_rem <= 0.0 {
+            return 0.0;
+        }
+        (d_rem / self.beta_compute / total_pairs).clamp(0.0, 1.0)
+    }
+
+    /// The combined trade-off (eq 11): predicted end-to-end latency of
+    /// meeting `err_desired` on a stratum with stddev sigma and population
+    /// share B_i of ΣB.
+    pub fn latency_for_error(
+        &self,
+        err_desired: f64,
+        confidence: f64,
+        sigma: f64,
+        stratum_pop: f64,
+        total_pop: f64,
+        d_dt: f64,
+    ) -> f64 {
+        let b = crate::stats::estimators::sample_size_for_error(sigma, err_desired, confidence);
+        let s = (b as f64 / stratum_pop).min(1.0);
+        self.beta_compute * s * total_pop + d_dt + self.epsilon
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("beta_compute", Json::num(self.beta_compute)),
+            ("epsilon", Json::num(self.epsilon)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            beta_compute: j
+                .get("beta_compute")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("missing beta_compute"))?,
+            epsilon: j
+                .get("epsilon")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("missing epsilon"))?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_line() {
+        // t = 2e-8 * p + 0.1
+        let samples: Vec<(u64, f64)> = [1e6, 5e6, 1e7, 5e7]
+            .iter()
+            .map(|&p| (p as u64, 2e-8 * p + 0.1))
+            .collect();
+        let m = CostModel::fit(&samples);
+        assert!((m.beta_compute - 2e-8).abs() / 2e-8 < 1e-6);
+        assert!((m.epsilon - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn profile_host_is_roughly_linear() {
+        let (m, curve) = CostModel::profile_host(&[100_000, 400_000, 1_600_000]);
+        assert!(m.beta_compute > 0.0);
+        // predictions track measurements within 3x at the largest size
+        let (p, t) = *curve.last().unwrap();
+        let pred = m.cp_latency(p as f64);
+        assert!(
+            pred / t < 3.0 && t / pred < 3.0,
+            "pred {pred} vs measured {t}"
+        );
+    }
+
+    #[test]
+    fn fraction_for_latency_behaviour() {
+        let m = CostModel {
+            beta_compute: 1e-6,
+            epsilon: 0.0,
+        };
+        // 1s budget, no filter time, 1e6 pairs cost 1s -> fraction 1
+        assert!((m.fraction_for_latency(1.0, 0.0, 1e6) - 1.0).abs() < 1e-9);
+        // half the budget -> half the pairs
+        assert!((m.fraction_for_latency(0.5, 0.0, 1e6) - 0.5).abs() < 1e-9);
+        // budget exhausted by filtering -> 0
+        assert_eq!(m.fraction_for_latency(1.0, 2.0, 1e6), 0.0);
+        // empty join -> exact is free
+        assert_eq!(m.fraction_for_latency(1.0, 0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn latency_for_error_monotonic_in_error() {
+        let m = CostModel::default();
+        let tight = m.latency_for_error(0.01, 0.95, 5.0, 1e4, 1e6, 2.0);
+        let loose = m.latency_for_error(0.1, 0.95, 5.0, 1e4, 1e6, 2.0);
+        assert!(tight >= loose);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = CostModel {
+            beta_compute: 3.5e-9,
+            epsilon: 0.25,
+        };
+        let j = m.to_json();
+        let back = CostModel::from_json(&j).unwrap();
+        assert_eq!(back.beta_compute, m.beta_compute);
+        assert_eq!(back.epsilon, m.epsilon);
+    }
+}

@@ -1,0 +1,225 @@
+//! Synthetic workload generator (paper §5.1): datasets whose per-key
+//! multiplicities follow a Poisson(λ) distribution, with a *controlled
+//! overlap fraction* — the single knob every microbenchmark figure sweeps.
+//!
+//! Construction: a pool of `shared` keys appears in **all** inputs; each
+//! input additionally gets its own disjoint key pool. Multiplicities are
+//! Poisson(λ) per (input, key). Given the target overlap fraction f and the
+//! requested input sizes, the generator solves for the shared-pool size so
+//! the realized fraction lands on target (and `overlap_fraction()` in
+//! data/mod.rs verifies it exactly in the tests).
+
+use super::{Dataset, Record};
+use crate::util::Rng;
+
+/// Specification for one family of overlapping synthetic datasets.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Number of input datasets (n-way join).
+    pub num_inputs: usize,
+    /// Approximate items per input.
+    pub items_per_input: u64,
+    /// Poisson multiplicity parameter λ (paper: 10..10000).
+    pub lambda: f64,
+    /// Target overlap fraction per the paper's §3.1.1 definition.
+    pub overlap_fraction: f64,
+    /// Partitions per dataset.
+    pub partitions: usize,
+    /// Wire width of one tuple (bytes) for shuffle accounting.
+    pub record_bytes: u64,
+    /// Value distribution: Uniform(lo, hi) or Normal(mean, sd).
+    pub values: ValueDist,
+    pub seed: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum ValueDist {
+    Uniform(f64, f64),
+    Normal(f64, f64),
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        Self {
+            num_inputs: 2,
+            items_per_input: 100_000,
+            lambda: 100.0,
+            overlap_fraction: 0.01,
+            partitions: 8,
+            record_bytes: 100,
+            values: ValueDist::Uniform(0.0, 100.0),
+            seed: 42,
+        }
+    }
+}
+
+impl ValueDist {
+    fn sample(&self, r: &mut Rng) -> f64 {
+        match *self {
+            ValueDist::Uniform(lo, hi) => r.range_f64(lo, hi),
+            ValueDist::Normal(mu, sd) => mu + sd * r.normal(),
+        }
+    }
+}
+
+/// Tag for shared keys (present in every input) vs per-input keys; keeps
+/// the pools disjoint by construction.
+#[inline]
+fn shared_key(i: u64) -> u64 {
+    (1 << 40) | i
+}
+
+#[inline]
+fn private_key(input: usize, i: u64) -> u64 {
+    ((input as u64 + 2) << 41) | i
+}
+
+/// Generate `spec.num_inputs` datasets with the requested overlap fraction.
+pub fn generate_overlapping(spec: &SyntheticSpec) -> Vec<Dataset> {
+    assert!(spec.num_inputs >= 2);
+    assert!((0.0..=1.0).contains(&spec.overlap_fraction));
+    let mut rng = Rng::new(spec.seed);
+
+    // Target: participating items per input = f * items_per_input (the
+    // fraction is symmetric when all inputs have the same size).
+    let participating_per_input = (spec.overlap_fraction * spec.items_per_input as f64) as u64;
+    let num_shared_keys = ((participating_per_input as f64 / spec.lambda).round() as u64).max(
+        if spec.overlap_fraction > 0.0 { 1 } else { 0 },
+    );
+
+    let mut datasets = Vec::with_capacity(spec.num_inputs);
+    for input in 0..spec.num_inputs {
+        let mut r = rng.fork(input as u64 + 1);
+        let mut records = Vec::with_capacity(spec.items_per_input as usize + 1024);
+        // shared keys: Poisson(λ) copies each, at least one so the key
+        // really does appear in every input
+        for i in 0..num_shared_keys {
+            let copies = r.poisson(spec.lambda).max(1);
+            for _ in 0..copies {
+                records.push(Record::new(shared_key(i), spec.values.sample(&mut r)));
+            }
+        }
+        // private keys fill the remainder
+        let mut i = 0u64;
+        while (records.len() as u64) < spec.items_per_input {
+            let copies = r
+                .poisson(spec.lambda)
+                .max(1)
+                .min(spec.items_per_input - records.len() as u64);
+            for _ in 0..copies {
+                records.push(Record::new(private_key(input, i), spec.values.sample(&mut r)));
+            }
+            i += 1;
+        }
+        datasets.push(Dataset::from_records_unpartitioned(
+            format!("synthetic_{input}"),
+            records,
+            spec.partitions,
+            spec.record_bytes,
+        ));
+    }
+    datasets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::overlap_fraction;
+
+    #[test]
+    fn sizes_match_spec() {
+        let spec = SyntheticSpec {
+            items_per_input: 50_000,
+            ..Default::default()
+        };
+        let ds = generate_overlapping(&spec);
+        assert_eq!(ds.len(), 2);
+        for d in &ds {
+            let n = d.len();
+            // shared keys may overshoot slightly (>= 1 copy each)
+            assert!(
+                (50_000..52_000).contains(&n),
+                "size {n} out of tolerance"
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_fraction_on_target() {
+        for &target in &[0.01, 0.05, 0.2, 0.4] {
+            let spec = SyntheticSpec {
+                items_per_input: 30_000,
+                overlap_fraction: target,
+                lambda: 50.0,
+                seed: 7,
+                ..Default::default()
+            };
+            let ds = generate_overlapping(&spec);
+            let measured = overlap_fraction(&ds);
+            assert!(
+                (measured - target).abs() < target * 0.25 + 0.005,
+                "target {target} measured {measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn three_way_overlap() {
+        let spec = SyntheticSpec {
+            num_inputs: 3,
+            items_per_input: 30_000,
+            overlap_fraction: 0.05,
+            seed: 8,
+            ..Default::default()
+        };
+        let ds = generate_overlapping(&spec);
+        assert_eq!(ds.len(), 3);
+        let measured = overlap_fraction(&ds);
+        assert!(
+            (measured - 0.05).abs() < 0.02,
+            "measured {measured}"
+        );
+    }
+
+    #[test]
+    fn zero_overlap_possible() {
+        let spec = SyntheticSpec {
+            overlap_fraction: 0.0,
+            items_per_input: 10_000,
+            ..Default::default()
+        };
+        let ds = generate_overlapping(&spec);
+        assert_eq!(overlap_fraction(&ds), 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SyntheticSpec {
+            items_per_input: 5_000,
+            ..Default::default()
+        };
+        let a = generate_overlapping(&spec);
+        let b = generate_overlapping(&spec);
+        assert_eq!(a[0].partitions, b[0].partitions);
+        let spec2 = SyntheticSpec { seed: 43, ..spec };
+        let c = generate_overlapping(&spec2);
+        assert_ne!(a[0].partitions, c[0].partitions);
+    }
+
+    #[test]
+    fn key_pools_disjoint() {
+        let spec = SyntheticSpec {
+            items_per_input: 10_000,
+            overlap_fraction: 0.1,
+            ..Default::default()
+        };
+        let ds = generate_overlapping(&spec);
+        let a_private: std::collections::HashSet<u64> = ds[0]
+            .iter()
+            .map(|r| r.key)
+            .filter(|k| k >> 41 != 0)
+            .collect();
+        let b_keys = ds[1].distinct_keys();
+        assert!(a_private.is_disjoint(&b_keys));
+    }
+}

@@ -1,0 +1,200 @@
+//! Data model: the RDD-like partitioned datasets the join operates on.
+//!
+//! A [`Record`] is the unit of join input — a 64-bit join key plus the
+//! numeric value the aggregation query touches. Real tuples are wider than
+//! 16 bytes, so every [`Dataset`] carries a `record_bytes` width used by the
+//! shuffle fabric for byte accounting (the paper's "shuffled data size"
+//! metric counts tuple bytes on the wire, not struct-of-two-fields bytes).
+
+pub mod generators;
+pub mod netflix;
+pub mod network;
+pub mod tpch;
+
+pub use generators::{generate_overlapping, SyntheticSpec};
+
+/// One tuple of a join input, projected to (join key, aggregated value).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Record {
+    pub key: u64,
+    pub value: f64,
+}
+
+impl Record {
+    pub fn new(key: u64, value: f64) -> Self {
+        Self { key, value }
+    }
+}
+
+/// A named, hash-partitioned dataset — the Spark-RDD analogue.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Partition j holds the records co-located on worker j % k.
+    pub partitions: Vec<Vec<Record>>,
+    /// Serialized width of one record on the wire, for shuffle accounting.
+    pub record_bytes: u64,
+}
+
+impl Dataset {
+    /// Hash-partition `records` into `num_partitions` by join key (the
+    /// same partitioner the shuffle uses, so co-partitioned inputs do not
+    /// move — exactly Spark's HashPartitioner semantics).
+    pub fn from_records(
+        name: impl Into<String>,
+        records: Vec<Record>,
+        num_partitions: usize,
+        record_bytes: u64,
+    ) -> Self {
+        assert!(num_partitions > 0);
+        let mut partitions = vec![Vec::new(); num_partitions];
+        for r in records {
+            partitions[partition_of(r.key, num_partitions)].push(r);
+        }
+        Self {
+            name: name.into(),
+            partitions,
+            record_bytes,
+        }
+    }
+
+    /// A dataset that keeps records in arrival order, split round-robin —
+    /// models raw ingestion before any shuffle has happened.
+    pub fn from_records_unpartitioned(
+        name: impl Into<String>,
+        records: Vec<Record>,
+        num_partitions: usize,
+        record_bytes: u64,
+    ) -> Self {
+        assert!(num_partitions > 0);
+        let mut partitions = vec![Vec::new(); num_partitions];
+        for (i, r) in records.into_iter().enumerate() {
+            partitions[i % num_partitions].push(r);
+        }
+        Self {
+            name: name.into(),
+            partitions,
+            record_bytes,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.partitions.iter().map(|p| p.len() as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.iter().all(|p| p.is_empty())
+    }
+
+    /// Total bytes this dataset occupies on the wire if fully shuffled.
+    pub fn total_bytes(&self) -> u64 {
+        self.len() * self.record_bytes
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Record> {
+        self.partitions.iter().flatten()
+    }
+
+    /// Distinct join keys (exact, for tests and the analytic model).
+    pub fn distinct_keys(&self) -> std::collections::HashSet<u64> {
+        self.iter().map(|r| r.key).collect()
+    }
+}
+
+/// The hash partitioner: worker/partition index for a key.
+#[inline]
+pub fn partition_of(key: u64, num_partitions: usize) -> usize {
+    (crate::bloom::hashing::fold_key(key) as usize) % num_partitions
+}
+
+/// Exact overlap fraction of a set of datasets, per the paper's definition
+/// (§3.1.1): items whose key appears in *all* inputs ÷ total items.
+pub fn overlap_fraction(datasets: &[Dataset]) -> f64 {
+    if datasets.is_empty() {
+        return 0.0;
+    }
+    let mut common = datasets[0].distinct_keys();
+    for d in &datasets[1..] {
+        let keys = d.distinct_keys();
+        common.retain(|k| keys.contains(k));
+    }
+    let total: u64 = datasets.iter().map(|d| d.len()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let participating: u64 = datasets
+        .iter()
+        .map(|d| d.iter().filter(|r| common.contains(&r.key)).count() as u64)
+        .sum();
+    participating as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(keys: &[u64]) -> Vec<Record> {
+        keys.iter().map(|&k| Record::new(k, k as f64)).collect()
+    }
+
+    #[test]
+    fn hash_partitioning_is_stable_and_complete() {
+        let d = Dataset::from_records("t", recs(&(0..1000).collect::<Vec<_>>()), 7, 64);
+        assert_eq!(d.num_partitions(), 7);
+        assert_eq!(d.len(), 1000);
+        // every record is in the partition its key hashes to
+        for (j, p) in d.partitions.iter().enumerate() {
+            assert!(p.iter().all(|r| partition_of(r.key, 7) == j));
+        }
+    }
+
+    #[test]
+    fn copartitioned_inputs_align() {
+        let a = Dataset::from_records("a", recs(&[1, 2, 3, 4, 5]), 4, 64);
+        let b = Dataset::from_records("b", recs(&[3, 4, 5, 6]), 4, 64);
+        // same key lands in the same partition index in both datasets
+        for j in 0..4 {
+            for r in &a.partitions[j] {
+                assert_eq!(partition_of(r.key, 4), j);
+            }
+            for r in &b.partitions[j] {
+                assert_eq!(partition_of(r.key, 4), j);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let d = Dataset::from_records("t", recs(&[1, 2, 3]), 2, 100);
+        assert_eq!(d.total_bytes(), 300);
+    }
+
+    #[test]
+    fn overlap_fraction_definition() {
+        // a: keys {1,2,3,4}, b: keys {3,4,5,6}; common {3,4}
+        // participating = 2 (in a) + 2 (in b) = 4; total = 8 -> 0.5
+        let a = Dataset::from_records("a", recs(&[1, 2, 3, 4]), 2, 64);
+        let b = Dataset::from_records("b", recs(&[3, 4, 5, 6]), 2, 64);
+        assert!((overlap_fraction(&[a, b]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_fraction_disjoint_and_identical() {
+        let a = Dataset::from_records("a", recs(&[1, 2]), 2, 64);
+        let b = Dataset::from_records("b", recs(&[3, 4]), 2, 64);
+        assert_eq!(overlap_fraction(&[a.clone(), b]), 0.0);
+        let c = a.clone();
+        assert_eq!(overlap_fraction(&[a, c]), 1.0);
+    }
+
+    #[test]
+    fn round_robin_split() {
+        let d = Dataset::from_records_unpartitioned("t", recs(&[1, 2, 3, 4, 5]), 2, 64);
+        assert_eq!(d.partitions[0].len(), 3);
+        assert_eq!(d.partitions[1].len(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! CAIDA-like network-trace generator (paper §6.1). The real 2015 Chicago
+//! backbone traces (115.5M TCP / 67.1M UDP / 2.8M ICMP two-tuple flows) are
+//! not redistributable, so this generator reproduces the *structure* the
+//! join experiment depends on: three protocol datasets keyed by
+//! (src,dst)-flow, heavy-tailed flow sizes (packet/byte counts follow a
+//! Zipf-like law on backbone links), a small host population generating
+//! most flows, and a small cross-protocol key overlap (flows that appear in
+//! TCP *and* UDP *and* ICMP — the paper's query joins all three).
+//!
+//! Default scale is 1/100 of CAIDA's counts; both scale and overlap are
+//! configurable.
+
+use super::{Dataset, Record};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub tcp_flows: u64,
+    pub udp_flows: u64,
+    pub icmp_flows: u64,
+    /// Flows present in all three protocol datasets.
+    pub common_flows: u64,
+    /// Distinct host population (drives flow-key reuse / skew).
+    pub hosts: u64,
+    pub partitions: usize,
+    pub seed: u64,
+}
+
+impl Default for NetworkSpec {
+    fn default() -> Self {
+        Self {
+            // 1/1000 of CAIDA 2015 equinix-chicago dirA
+            tcp_flows: 115_472,
+            udp_flows: 67_098,
+            icmp_flows: 2_801,
+            common_flows: 1_400,
+            hosts: 20_000,
+            partitions: 8,
+            seed: 2015,
+        }
+    }
+}
+
+/// Bytes of one flow record on the wire (two IPs, ports, proto, counters).
+pub const FLOW_BYTES: u64 = 48;
+
+/// A (src,dst) two-tuple flow key. Hosts are drawn Zipf so a few talkers
+/// dominate — the skew the paper observes ("dataset distributed quite
+/// uniformly" only at the *partition* level).
+fn flow_key(r: &mut Rng, hosts: u64) -> u64 {
+    let src = r.zipf(hosts, 1.05);
+    let dst = r.zipf(hosts, 1.05);
+    (src << 32) | (dst & 0xFFFF_FFFF)
+}
+
+/// Heavy-tailed flow size (bytes): log-normal-ish body with a Pareto tail.
+fn flow_size(r: &mut Rng) -> f64 {
+    let body = (40.0 + r.exponential(1200.0)).min(1.5e6);
+    if r.f64() < 0.02 {
+        body * (1.0 + r.exponential(50.0)) // elephant flows
+    } else {
+        body
+    }
+}
+
+/// Generate the three protocol datasets: [TCP, UDP, ICMP].
+pub fn generate(spec: &NetworkSpec) -> Vec<Dataset> {
+    let mut rng = Rng::new(spec.seed);
+    // the cross-protocol common flows (e.g. hosts doing TCP+UDP+ICMP)
+    let mut common = Vec::with_capacity(spec.common_flows as usize);
+    {
+        let mut r = rng.fork(0xC0FFEE);
+        let mut seen = std::collections::HashSet::new();
+        while (common.len() as u64) < spec.common_flows {
+            let k = flow_key(&mut r, spec.hosts) | (1 << 63);
+            if seen.insert(k) {
+                common.push(k);
+            }
+        }
+    }
+
+    let counts = [spec.tcp_flows, spec.udp_flows, spec.icmp_flows];
+    let names = ["tcp", "udp", "icmp"];
+    let mut out = Vec::with_capacity(3);
+    for (i, (&n, name)) in counts.iter().zip(names).enumerate() {
+        let mut r = rng.fork(i as u64 + 1);
+        let mut records = Vec::with_capacity(n as usize);
+        for &k in &common {
+            records.push(Record::new(k, flow_size(&mut r)));
+        }
+        // protocol-private flows: tag with protocol id so pools stay
+        // disjoint across protocols (a real flow key collision across
+        // protocols is exactly the "common" population we model above)
+        while (records.len() as u64) < n {
+            let k = (flow_key(&mut r, spec.hosts) & !(0b11 << 61)) | ((i as u64 + 1) << 61);
+            records.push(Record::new(k, flow_size(&mut r)));
+        }
+        out.push(Dataset::from_records_unpartitioned(
+            name,
+            records,
+            spec.partitions,
+            FLOW_BYTES,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::overlap_fraction;
+
+    #[test]
+    fn cardinalities() {
+        let ds = generate(&NetworkSpec::default());
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds[0].len(), 115_472);
+        assert_eq!(ds[1].len(), 67_098);
+        assert_eq!(ds[2].len(), 2_801);
+    }
+
+    #[test]
+    fn common_flows_present_in_all() {
+        let spec = NetworkSpec {
+            tcp_flows: 5000,
+            udp_flows: 3000,
+            icmp_flows: 1000,
+            common_flows: 200,
+            ..Default::default()
+        };
+        let ds = generate(&spec);
+        let mut inter = ds[0].distinct_keys();
+        for d in &ds[1..] {
+            let keys = d.distinct_keys();
+            inter.retain(|k| keys.contains(k));
+        }
+        assert_eq!(inter.len(), 200);
+    }
+
+    #[test]
+    fn overlap_small_like_paper() {
+        let ds = generate(&NetworkSpec::default());
+        let f = overlap_fraction(&ds);
+        assert!(f > 0.0 && f < 0.1, "overlap {f}");
+    }
+
+    #[test]
+    fn flow_sizes_heavy_tailed() {
+        let mut r = Rng::new(5);
+        let sizes: Vec<f64> = (0..50_000).map(|_| flow_size(&mut r)).collect();
+        let mean = sizes.iter().sum::<f64>() / sizes.len() as f64;
+        let mut sorted = sizes.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sizes.len() / 2];
+        assert!(mean > 1.5 * median, "mean {mean} median {median}");
+        assert!(sizes.iter().all(|&s| s >= 40.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&NetworkSpec::default());
+        let b = generate(&NetworkSpec::default());
+        assert_eq!(a[0].partitions[0], b[0].partitions[0]);
+    }
+
+    #[test]
+    fn key_skew_exists() {
+        // zipf hosts -> some flow keys repeat across records
+        let ds = generate(&NetworkSpec {
+            tcp_flows: 50_000,
+            ..Default::default()
+        });
+        let distinct = ds[0].distinct_keys().len() as u64;
+        assert!(distinct < ds[0].len(), "no key reuse at all?");
+    }
+}

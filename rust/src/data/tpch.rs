@@ -1,0 +1,313 @@
+//! Mini TPC-H dbgen (paper §5.5): CUSTOMER / ORDERS / LINEITEM with the
+//! spec's key relations and value distributions, at a configurable scale
+//! factor, plus the join-only projections of Q3, Q4 and Q10 the paper uses
+//! (it strips every non-join operator).
+//!
+//! Cardinalities follow the TPC-H spec: |CUSTOMER| = 150k·SF,
+//! |ORDERS| = 1.5M·SF (10 per customer over a 1/3 customer subset pattern —
+//! the spec leaves 1/3 of customers without orders), |LINEITEM| ≈ 4·|ORDERS|
+//! (1..7 lines per order, uniform).
+
+use super::{Dataset, Record};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Customer {
+    pub custkey: u64,
+    pub acctbal: f64,
+    pub mktsegment: u8,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Order {
+    pub orderkey: u64,
+    pub custkey: u64,
+    pub totalprice: f64,
+    /// days since epoch start of the TPC-H date range
+    pub orderdate: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Lineitem {
+    pub orderkey: u64,
+    pub extendedprice: f64,
+    pub discount: f64,
+    pub shipdate: u32,
+    pub commitdate: u32,
+    pub receiptdate: u32,
+}
+
+/// The generated database.
+#[derive(Clone, Debug)]
+pub struct TpchDb {
+    pub customers: Vec<Customer>,
+    pub orders: Vec<Order>,
+    pub lineitems: Vec<Lineitem>,
+    pub scale_factor: f64,
+}
+
+/// TPC-H date range spans ~2406 days (1992-01-01 .. 1998-08-02).
+const DATE_RANGE: u32 = 2406;
+
+pub fn generate(scale_factor: f64, seed: u64) -> TpchDb {
+    assert!(scale_factor > 0.0);
+    let mut r = Rng::new(seed ^ 0x7c94);
+    let n_cust = ((150_000.0 * scale_factor) as u64).max(10);
+    let n_orders = n_cust * 10;
+
+    let customers: Vec<Customer> = (1..=n_cust)
+        .map(|custkey| Customer {
+            custkey,
+            acctbal: r.range_f64(-999.99, 9999.99),
+            mktsegment: r.index(5) as u8,
+        })
+        .collect();
+
+    let mut orders = Vec::with_capacity(n_orders as usize);
+    let mut lineitems = Vec::with_capacity(n_orders as usize * 4);
+    for orderkey in 1..=n_orders {
+        // spec: only 2/3 of customers have orders
+        let custkey = loop {
+            let c = 1 + r.below(n_cust);
+            if c % 3 != 0 {
+                break c;
+            }
+        };
+        let orderdate = r.below(DATE_RANGE as u64 - 151) as u32;
+        let nlines = 1 + r.index(7);
+        let mut totalprice = 0.0;
+        for _ in 0..nlines {
+            let extendedprice = r.range_f64(900.0, 104_000.0);
+            let discount = r.range_f64(0.0, 0.1);
+            let shipdate = orderdate + 1 + r.below(121) as u64 as u32;
+            let commitdate = orderdate + 30 + r.below(61) as u32;
+            let receiptdate = shipdate + 1 + r.below(30) as u32;
+            totalprice += extendedprice * (1.0 - discount);
+            lineitems.push(Lineitem {
+                orderkey,
+                extendedprice,
+                discount,
+                shipdate,
+                commitdate,
+                receiptdate,
+            });
+        }
+        orders.push(Order {
+            orderkey,
+            custkey,
+            totalprice,
+            orderdate,
+        });
+    }
+
+    TpchDb {
+        customers,
+        orders,
+        lineitems,
+        scale_factor,
+    }
+}
+
+/// Wire widths (bytes) of the full tuples, per the TPC-H table layouts.
+pub const CUSTOMER_BYTES: u64 = 179;
+pub const ORDERS_BYTES: u64 = 104;
+pub const LINEITEM_BYTES: u64 = 112;
+
+impl TpchDb {
+    /// CUSTOMER keyed by custkey, value = c_acctbal.
+    pub fn customer_by_custkey(&self, partitions: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "customer",
+            self.customers
+                .iter()
+                .map(|c| Record::new(c.custkey, c.acctbal))
+                .collect(),
+            partitions,
+            CUSTOMER_BYTES,
+        )
+    }
+
+    /// ORDERS keyed by custkey (Q3/Q10/§5.5 CUSTOMER⋈ORDERS side),
+    /// value = o_totalprice.
+    pub fn orders_by_custkey(&self, partitions: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "orders",
+            self.orders
+                .iter()
+                .map(|o| Record::new(o.custkey, o.totalprice))
+                .collect(),
+            partitions,
+            ORDERS_BYTES,
+        )
+    }
+
+    /// ORDERS keyed by orderkey (Q3/Q4 ORDERS⋈LINEITEM side).
+    pub fn orders_by_orderkey(&self, partitions: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "orders",
+            self.orders
+                .iter()
+                .map(|o| Record::new(o.orderkey, o.totalprice))
+                .collect(),
+            partitions,
+            ORDERS_BYTES,
+        )
+    }
+
+    /// LINEITEM keyed by orderkey, value = l_extendedprice·(1−l_discount).
+    pub fn lineitem_by_orderkey(&self, partitions: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "lineitem",
+            self.lineitems
+                .iter()
+                .map(|l| Record::new(l.orderkey, l.extendedprice * (1.0 - l.discount)))
+                .collect(),
+            partitions,
+            LINEITEM_BYTES,
+        )
+    }
+
+    /// Q4-flavoured LINEITEM: only lines with l_commitdate < l_receiptdate
+    /// (the EXISTS predicate of Q4), keyed by orderkey.
+    pub fn lineitem_q4(&self, partitions: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            "lineitem_q4",
+            self.lineitems
+                .iter()
+                .filter(|l| l.commitdate < l.receiptdate)
+                .map(|l| Record::new(l.orderkey, 1.0))
+                .collect(),
+            partitions,
+            LINEITEM_BYTES,
+        )
+    }
+}
+
+/// The join-only TPC-H queries of §5.5. Each step is a 2-way equi-join on
+/// a single attribute; Q3/Q10 chain two steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TpchQuery {
+    Q3,
+    Q4,
+    Q10,
+}
+
+impl TpchQuery {
+    /// The join steps (left dataset, right dataset) this query performs,
+    /// in order. Chained steps re-key intermediate output downstream; for
+    /// the paper's latency comparison the per-step joins dominate.
+    pub fn join_steps(&self, db: &TpchDb, partitions: usize) -> Vec<(Dataset, Dataset)> {
+        match self {
+            TpchQuery::Q3 => vec![
+                (
+                    db.customer_by_custkey(partitions),
+                    db.orders_by_custkey(partitions),
+                ),
+                (
+                    db.orders_by_orderkey(partitions),
+                    db.lineitem_by_orderkey(partitions),
+                ),
+            ],
+            TpchQuery::Q4 => vec![(
+                db.orders_by_orderkey(partitions),
+                db.lineitem_q4(partitions),
+            )],
+            TpchQuery::Q10 => vec![
+                (
+                    db.customer_by_custkey(partitions),
+                    db.orders_by_custkey(partitions),
+                ),
+                (
+                    db.orders_by_orderkey(partitions),
+                    db.lineitem_by_orderkey(partitions),
+                ),
+            ],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TpchQuery::Q3 => "Q3",
+            TpchQuery::Q4 => "Q4",
+            TpchQuery::Q10 => "Q10",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TpchDb {
+        generate(0.001, 1)
+    }
+
+    #[test]
+    fn cardinalities_scale() {
+        let db = small();
+        assert_eq!(db.customers.len(), 150);
+        assert_eq!(db.orders.len(), 1500);
+        let ratio = db.lineitems.len() as f64 / db.orders.len() as f64;
+        assert!((3.0..5.0).contains(&ratio), "lineitem ratio {ratio}");
+    }
+
+    #[test]
+    fn referential_integrity() {
+        let db = small();
+        let custkeys: std::collections::HashSet<u64> =
+            db.customers.iter().map(|c| c.custkey).collect();
+        assert!(db.orders.iter().all(|o| custkeys.contains(&o.custkey)));
+        let orderkeys: std::collections::HashSet<u64> =
+            db.orders.iter().map(|o| o.orderkey).collect();
+        assert!(db.lineitems.iter().all(|l| orderkeys.contains(&l.orderkey)));
+    }
+
+    #[test]
+    fn a_third_of_customers_have_no_orders() {
+        let db = generate(0.01, 2);
+        let with_orders: std::collections::HashSet<u64> =
+            db.orders.iter().map(|o| o.custkey).collect();
+        let frac = with_orders.len() as f64 / db.customers.len() as f64;
+        // 2/3 of customers eligible; with 10x orders per customer nearly
+        // all eligible ones appear
+        assert!((0.55..0.69).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn totalprice_consistent_with_lineitems() {
+        let db = small();
+        let o = &db.orders[0];
+        let sum: f64 = db
+            .lineitems
+            .iter()
+            .filter(|l| l.orderkey == o.orderkey)
+            .map(|l| l.extendedprice * (1.0 - l.discount))
+            .sum();
+        assert!((sum - o.totalprice).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q4_filter_selects_subset() {
+        let db = small();
+        let all = db.lineitem_by_orderkey(4).len();
+        let q4 = db.lineitem_q4(4).len();
+        assert!(q4 > 0 && q4 < all);
+    }
+
+    #[test]
+    fn join_steps_shapes() {
+        let db = small();
+        assert_eq!(TpchQuery::Q3.join_steps(&db, 4).len(), 2);
+        assert_eq!(TpchQuery::Q4.join_steps(&db, 4).len(), 1);
+        assert_eq!(TpchQuery::Q10.join_steps(&db, 4).len(), 2);
+    }
+
+    #[test]
+    fn dates_within_spec_windows() {
+        let db = small();
+        for l in &db.lineitems {
+            assert!(l.receiptdate > l.shipdate);
+            assert!(l.shipdate < DATE_RANGE + 200);
+        }
+    }
+}

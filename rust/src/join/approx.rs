@@ -1,0 +1,531 @@
+//! The full ApproxJoin (paper §3.2-3.4, Algorithm 2): stage-1 filtering,
+//! then *stratified edge sampling during the join* instead of the cross
+//! product, then CLT / Horvitz-Thompson error estimation.
+//!
+//! The per-stratum aggregation of the sampled pair values — the inner loop
+//! of Alg 2's sampleAndExecute — is expressed against the [`BatchAggregator`]
+//! trait: the production implementation is the AOT `join_agg` XLA artifact
+//! (runtime/batch.rs), with a pure-Rust fallback for tests and
+//! artifact-less builds.
+
+use super::bloom_join::{filter_and_shuffle, FilterConfig, KeyProber};
+use super::{CombineOp, JoinRun};
+use crate::cluster::SimCluster;
+use crate::data::Dataset;
+use crate::sampling::edge_sampling::{
+    population, sample_edges_dedup, sample_pairs_with_replacement, SampledPairs,
+};
+use crate::stats::{EstimatorKind, StratumAgg};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// How per-stratum sample sizes b_i are chosen.
+#[derive(Clone, Debug)]
+pub enum SamplingParams {
+    /// Uniform fraction s of each stratum: b_i = ceil(s · B_i) (eq 7).
+    Fraction(f64),
+    /// Error-bound driven (eq 10): b_i = (z_{α/2} σ_i / err)², with σ_i
+    /// from the feedback store; strata without a stored σ use
+    /// `default_sigma` (first execution of a query).
+    ErrorBound {
+        err_desired: f64,
+        confidence: f64,
+        sigmas: HashMap<u64, f64>,
+        default_sigma: f64,
+    },
+    /// Fixed b per stratum (diagnostics).
+    FixedPerKey(u64),
+}
+
+impl SamplingParams {
+    /// b_i for a stratum of population B_i.
+    pub fn sample_size(&self, key: u64, population: f64) -> u64 {
+        match self {
+            SamplingParams::Fraction(s) => ((s * population).ceil() as u64).min(u64::MAX),
+            SamplingParams::ErrorBound {
+                err_desired,
+                confidence,
+                sigmas,
+                default_sigma,
+            } => {
+                let sigma = sigmas.get(&key).copied().unwrap_or(*default_sigma);
+                crate::stats::estimators::sample_size_for_error(sigma, *err_desired, *confidence)
+                    .min(population.ceil() as u64 * 4)
+            }
+            SamplingParams::FixedPerKey(b) => *b,
+        }
+        // floor of 2: stratified sampling needs b_i >= 2 for the per-stratum
+        // variance s_i^2 (eq 14) to be estimable at all
+        .max(2)
+    }
+}
+
+/// Configuration of the approximation stage.
+#[derive(Clone, Debug)]
+pub struct ApproxConfig {
+    pub params: SamplingParams,
+    pub estimator: EstimatorKind,
+    pub seed: u64,
+}
+
+impl Default for ApproxConfig {
+    fn default() -> Self {
+        Self {
+            params: SamplingParams::Fraction(0.1),
+            estimator: EstimatorKind::Clt,
+            seed: 7,
+        }
+    }
+}
+
+/// Batched per-stratum aggregation of sampled pair values — the contract
+/// of the AOT `join_agg` artifact. `seg[i]` assigns row i to a stratum
+/// slot; rows with mask 0 are padding. Returns per-slot
+/// (counts, sums, sumsqs).
+pub trait BatchAggregator {
+    fn run(
+        &mut self,
+        left: &[f64],
+        right: &[f64],
+        seg: &[i32],
+        mask: &[f64],
+        op: CombineOp,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<f64>)>;
+
+    /// Rows per batch (the artifact's BATCH).
+    fn batch_rows(&self) -> usize;
+
+    /// Stratum slots per batch (the artifact's STRATA).
+    fn strata_slots(&self) -> usize;
+}
+
+/// Pure-Rust aggregator with the same geometry as the artifact.
+pub struct NativeAggregator {
+    pub rows: usize,
+    pub slots: usize,
+}
+
+impl Default for NativeAggregator {
+    fn default() -> Self {
+        Self {
+            rows: 4096,
+            slots: 256,
+        }
+    }
+}
+
+impl BatchAggregator for NativeAggregator {
+    fn run(
+        &mut self,
+        left: &[f64],
+        right: &[f64],
+        seg: &[i32],
+        mask: &[f64],
+        op: CombineOp,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let mut counts = vec![0.0; self.slots];
+        let mut sums = vec![0.0; self.slots];
+        let mut sumsqs = vec![0.0; self.slots];
+        for i in 0..left.len() {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let v = op.fold(left[i], right[i]);
+            // fold(Left) keeps left; Sum/Product combine — same semantics
+            // as the artifact's one-hot op selector
+            let slot = seg[i] as usize;
+            counts[slot] += 1.0;
+            sums[slot] += v;
+            sumsqs[slot] += v * v;
+        }
+        Ok((counts, sums, sumsqs))
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn strata_slots(&self) -> usize {
+        self.slots
+    }
+}
+
+/// Run the full approximate join.
+pub fn approx_join(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    filter_cfg: FilterConfig,
+    cfg: &ApproxConfig,
+    prober: &mut dyn KeyProber,
+    agg: &mut dyn BatchAggregator,
+) -> anyhow::Result<JoinRun> {
+    let filtered = filter_and_shuffle(cluster, inputs, filter_cfg, prober)?;
+    let (strata, draws) = sample_stage(cluster, &filtered, op, cfg, agg)?;
+    Ok(JoinRun {
+        strata,
+        metrics: cluster.take_metrics(),
+        sampled: true,
+        draws,
+    })
+}
+
+/// The sampling stage alone (Alg 2 over already-filtered groups) — used by
+/// the engine after the exact-vs-approx decision.
+pub fn sample_stage(
+    cluster: &mut SimCluster,
+    filtered: &super::bloom_join::Filtered,
+    op: CombineOp,
+    cfg: &ApproxConfig,
+    agg: &mut dyn BatchAggregator,
+) -> anyhow::Result<(HashMap<u64, StratumAgg>, HashMap<u64, f64>)> {
+    let mut s = cluster.stage("sample");
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    let mut draws: HashMap<u64, f64> = HashMap::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    match cfg.estimator {
+        EstimatorKind::Clt => {
+            // with-replacement sampling; aggregation via the BatchAggregator
+            // (AOT join_agg on the production path)
+            let rows = agg.batch_rows();
+            let slots = agg.strata_slots();
+            let mut batch = Batch::new(rows, slots);
+            for (w, groups) in filtered.per_worker.iter().enumerate() {
+                let mut r = rng.fork(w as u64 + 1);
+                let t0 = Instant::now();
+                let mut sampled_pairs = 0u64;
+                // iterate keys in sorted order: the per-worker RNG stream
+                // is shared across strata, so a deterministic visit order
+                // makes every run (and the XLA vs native paths) replayable
+                let mut keys: Vec<u64> = groups.keys().copied().collect();
+                keys.sort_unstable();
+                for key in &keys {
+                    let sides = &groups[key];
+                    let pop = population(sides);
+                    if pop == 0.0 {
+                        continue;
+                    }
+                    let b = cfg.params.sample_size(*key, pop);
+                    let mut pairs = SampledPairs::default();
+                    sample_pairs_with_replacement(&mut r, sides, b, op, &mut pairs);
+                    sampled_pairs += pairs.len() as u64;
+                    strata
+                        .entry(*key)
+                        .or_insert_with(|| StratumAgg {
+                            population: pop,
+                            ..Default::default()
+                        })
+                        .population = pop;
+                    batch.push_key(*key, &pairs, op, agg, &mut strata)?;
+                }
+                s.add_compute(w, t0.elapsed().as_secs_f64());
+                s.add_items(sampled_pairs);
+            }
+            batch.flush(op, agg, &mut strata)?;
+        }
+        EstimatorKind::HorvitzThompson => {
+            // dedup sampling aggregates locally (a hash set is inherently
+            // sequential per stratum)
+            for (w, groups) in filtered.per_worker.iter().enumerate() {
+                let mut r = rng.fork(w as u64 + 1);
+                let t0 = Instant::now();
+                let mut sampled_pairs = 0u64;
+                // iterate keys in sorted order: the per-worker RNG stream
+                // is shared across strata, so a deterministic visit order
+                // makes every run (and the XLA vs native paths) replayable
+                let mut keys: Vec<u64> = groups.keys().copied().collect();
+                keys.sort_unstable();
+                for key in &keys {
+                    let sides = &groups[key];
+                    let pop = population(sides);
+                    if pop == 0.0 {
+                        continue;
+                    }
+                    let b = cfg.params.sample_size(*key, pop);
+                    let (agg_k, dr) = sample_edges_dedup(&mut r, sides, b, op);
+                    sampled_pairs += dr as u64;
+                    strata.insert(*key, agg_k);
+                    draws.insert(*key, dr);
+                }
+                s.add_compute(w, t0.elapsed().as_secs_f64());
+                s.add_items(sampled_pairs);
+            }
+        }
+    }
+    s.finish(cluster);
+
+    Ok((strata, draws))
+}
+
+/// Fixed-geometry batch builder: packs sampled pairs of many strata into
+/// artifact-shaped (left, right, seg, mask) tensors, tracking the
+/// slot → join-key mapping per batch and scattering the per-slot results
+/// back into the global stratum map on flush.
+struct Batch {
+    rows: usize,
+    slots: usize,
+    left: Vec<f64>,
+    right: Vec<f64>,
+    seg: Vec<i32>,
+    slot_keys: Vec<u64>,
+}
+
+impl Batch {
+    fn new(rows: usize, slots: usize) -> Self {
+        Self {
+            rows,
+            slots,
+            left: Vec::with_capacity(rows),
+            right: Vec::with_capacity(rows),
+            seg: Vec::with_capacity(rows),
+            slot_keys: Vec::new(),
+        }
+    }
+
+    fn push_key(
+        &mut self,
+        key: u64,
+        pairs: &SampledPairs,
+        op: CombineOp,
+        agg: &mut dyn BatchAggregator,
+        strata: &mut HashMap<u64, StratumAgg>,
+    ) -> anyhow::Result<()> {
+        let mut offset = 0;
+        while offset < pairs.len() {
+            if self.slot_keys.len() == self.slots || self.left.len() == self.rows {
+                self.flush(op, agg, strata)?;
+            }
+            // one slot per (key, batch) occurrence
+            let slot = self.slot_keys.len() as i32;
+            self.slot_keys.push(key);
+            let space = self.rows - self.left.len();
+            let take = space.min(pairs.len() - offset);
+            for i in offset..offset + take {
+                self.left.push(pairs.left[i]);
+                self.right.push(pairs.right[i]);
+                self.seg.push(slot);
+            }
+            offset += take;
+        }
+        Ok(())
+    }
+
+    fn flush(
+        &mut self,
+        op: CombineOp,
+        agg: &mut dyn BatchAggregator,
+        strata: &mut HashMap<u64, StratumAgg>,
+    ) -> anyhow::Result<()> {
+        if self.left.is_empty() {
+            self.slot_keys.clear();
+            return Ok(());
+        }
+        let n = self.left.len();
+        let mut mask = vec![1.0; n];
+        // pad to full geometry
+        self.left.resize(self.rows, 0.0);
+        self.right.resize(self.rows, 0.0);
+        self.seg.resize(self.rows, 0);
+        mask.resize(self.rows, 0.0);
+        let (counts, sums, sumsqs) = agg.run(&self.left, &self.right, &self.seg, &mask, op)?;
+        for (slot, &key) in self.slot_keys.iter().enumerate() {
+            if counts[slot] == 0.0 {
+                continue;
+            }
+            let e = strata.entry(key).or_default();
+            e.count += counts[slot];
+            e.sum += sums[slot];
+            e.sumsq += sumsqs[slot];
+        }
+        self.left.clear();
+        self.right.clear();
+        self.seg.clear();
+        self.slot_keys.clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::Record;
+    use crate::join::bloom_join::NativeProber;
+    use crate::join::native::native_join;
+    use crate::stats::clt_sum;
+
+    fn cluster() -> SimCluster {
+        SimCluster::new(
+            4,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn skewed_inputs(n_keys: u64, per_key: u64) -> Vec<Dataset> {
+        let mut r = Rng::new(42);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for key in 0..n_keys {
+            for _ in 0..per_key {
+                a.push(Record::new(key, r.range_f64(0.0, 10.0)));
+                b.push(Record::new(key, r.range_f64(0.0, 10.0)));
+            }
+        }
+        vec![
+            Dataset::from_records_unpartitioned("a", a, 4, 100),
+            Dataset::from_records_unpartitioned("b", b, 4, 100),
+        ]
+    }
+
+    #[test]
+    fn estimate_close_to_exact() {
+        let inputs = skewed_inputs(20, 30); // 20 strata x 900 pairs
+        let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(0.2),
+            ..Default::default()
+        };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        assert!(run.sampled);
+        let res = clt_sum(&run.strata_vec(), 0.95);
+        let rel = (res.estimate - exact).abs() / exact;
+        assert!(rel < 0.05, "rel err {rel}: {} vs {exact}", res.estimate);
+        // the CI should usually cover the truth
+        assert!(
+            (res.estimate - exact).abs() < 3.0 * res.error_bound.max(1e-9),
+            "bound {} error {}",
+            res.error_bound,
+            (res.estimate - exact).abs()
+        );
+    }
+
+    #[test]
+    fn ht_estimate_close_to_exact() {
+        let inputs = skewed_inputs(10, 20);
+        let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(0.3),
+            estimator: EstimatorKind::HorvitzThompson,
+            seed: 5,
+        };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let strata: Vec<StratumAgg> = run.strata.values().copied().collect();
+        let dr: Vec<f64> = run
+            .strata
+            .iter()
+            .map(|(k, _)| run.draws[k])
+            .collect();
+        let res = crate::stats::horvitz_thompson_sum(&strata, &dr, 0.95);
+        let rel = (res.estimate - exact).abs() / exact;
+        assert!(rel < 0.1, "rel err {rel}");
+    }
+
+    #[test]
+    fn samples_far_fewer_pairs_than_exact() {
+        let inputs = skewed_inputs(10, 50); // 10 x 2500 pairs = 25k
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(0.05),
+            ..Default::default()
+        };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let sampled: f64 = run.strata.values().map(|s| s.count).sum();
+        assert!(
+            (1000.0..2000.0).contains(&sampled),
+            "sampled {sampled} (expect ~1250)"
+        );
+    }
+
+    #[test]
+    fn tiny_batch_geometry_still_correct() {
+        // force many flushes: 8 rows, 2 slots
+        let inputs = skewed_inputs(5, 10);
+        let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(0.5),
+            seed: 11,
+            ..Default::default()
+        };
+        let mut tiny = NativeAggregator { rows: 8, slots: 2 };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &cfg,
+            &mut NativeProber,
+            &mut tiny,
+        )
+        .unwrap();
+        let res = clt_sum(&run.strata_vec(), 0.95);
+        let rel = (res.estimate - exact).abs() / exact;
+        assert!(rel < 0.15, "rel err {rel}");
+        // every stratum population survived batching
+        for agg in run.strata.values() {
+            assert_eq!(agg.population, 100.0);
+            assert!(agg.count > 0.0);
+        }
+    }
+
+    #[test]
+    fn error_bound_params_pick_bigger_samples_for_noisier_strata() {
+        let mut sigmas = HashMap::new();
+        sigmas.insert(1u64, 10.0);
+        sigmas.insert(2u64, 1.0);
+        let p = SamplingParams::ErrorBound {
+            err_desired: 0.5,
+            confidence: 0.95,
+            sigmas,
+            default_sigma: 5.0,
+        };
+        let b_noisy = p.sample_size(1, 1e9);
+        let b_quiet = p.sample_size(2, 1e9);
+        let b_unknown = p.sample_size(3, 1e9);
+        assert!(b_noisy > b_quiet);
+        assert!(b_unknown > b_quiet && b_unknown < b_noisy);
+    }
+
+    #[test]
+    fn fraction_params_floor_two() {
+        let p = SamplingParams::Fraction(0.001);
+        assert_eq!(p.sample_size(0, 10.0), 2);
+    }
+}

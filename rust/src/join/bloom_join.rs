@@ -1,0 +1,341 @@
+//! ApproxJoin stage 1 (paper §3.1, Algorithm 1): multi-way Bloom-filter
+//! construction, redundant-item filtering, and the filtered shuffle —
+//! shared by the exact Bloom join (filtering only, §5.2) and the full
+//! approximate join (§5.3).
+//!
+//! Steps: (1) per input, build partition filters at the workers and
+//! OR-merge them via treeReduce into a *dataset filter*; (2) AND the n
+//! dataset filters into the *join filter* at the master; (3) broadcast the
+//! join filter; (4) drop every local record whose key misses the filter;
+//! (5) shuffle only the survivors and cogroup by key.
+
+use super::{group_by_key, CombineOp, JoinRun};
+use crate::bloom::hashing::fold_key;
+use crate::bloom::BloomFilter;
+use crate::cluster::tree_reduce::build_dataset_filter;
+use crate::cluster::SimCluster;
+use crate::data::Dataset;
+use crate::stats::StratumAgg;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Bloom geometry for the join filter. The default (2^20 bits, 5 hashes)
+/// matches the AOT `bloom_probe` artifact so the XLA path can probe it.
+#[derive(Clone, Copy, Debug)]
+pub struct FilterConfig {
+    pub log2_bits: u32,
+    pub num_hashes: u32,
+}
+
+impl Default for FilterConfig {
+    fn default() -> Self {
+        Self {
+            log2_bits: 20,
+            num_hashes: 5,
+        }
+    }
+}
+
+impl FilterConfig {
+    /// Geometry from the largest input size + target fp rate (eq 27, with
+    /// N = |R_n| as §A.1 prescribes), bits rounded up to a power of two.
+    pub fn for_inputs(inputs: &[Dataset], fp_rate: f64) -> Self {
+        let n_max = inputs.iter().map(|d| d.len()).max().unwrap_or(1).max(1);
+        let f = BloomFilter::with_capacity(n_max, fp_rate);
+        Self {
+            log2_bits: f.log2_bits(),
+            num_hashes: f.num_hashes(),
+        }
+    }
+}
+
+/// Batched membership probing — implemented natively and by the runtime's
+/// AOT `bloom_probe` executor (runtime/batch.rs).
+pub trait KeyProber {
+    /// For each folded key, whether it may be in the filter.
+    fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> anyhow::Result<Vec<bool>>;
+}
+
+/// Pure-Rust prober (the default).
+pub struct NativeProber;
+
+impl KeyProber for NativeProber {
+    fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> anyhow::Result<Vec<bool>> {
+        Ok(keys.iter().map(|&k| filter.contains(k)).collect())
+    }
+}
+
+/// Output of the filtering stage.
+pub struct Filtered {
+    /// Per-worker cogrouped survivors: key → one value-vec per input.
+    pub per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>>,
+    /// Simulated seconds spent in filtering + shuffling (the cost
+    /// function's d_dt, eq 1).
+    pub d_dt: f64,
+    /// The join filter (for cardinality estimates).
+    pub join_filter: BloomFilter,
+    /// Survivor counts per input (diagnostics; Fig 4b-style reporting).
+    pub survivors: Vec<u64>,
+}
+
+/// Run stage 1. Keys surviving in *every* input are shuffled and cogrouped.
+pub fn filter_and_shuffle(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    cfg: FilterConfig,
+    prober: &mut dyn KeyProber,
+) -> anyhow::Result<Filtered> {
+    assert!(inputs.len() >= 2);
+    let n = inputs.len();
+
+    // (1) dataset filters via map + treeReduce
+    let mut s = cluster.stage("build_filter");
+    let mut dataset_filters = Vec::with_capacity(n);
+    for d in inputs {
+        dataset_filters.push(build_dataset_filter(
+            cluster,
+            &mut s,
+            d,
+            cfg.log2_bits,
+            cfg.num_hashes,
+        ));
+    }
+    // (2) AND at the master (worker 0) — cheap word-wise AND
+    let mut join_filter = dataset_filters.pop().unwrap();
+    s.task(0, || {
+        for f in &dataset_filters {
+            join_filter.intersect_with(f);
+        }
+    });
+    // (3) broadcast the join filter
+    s.broadcast(0, join_filter.size_bytes());
+    let mut d_dt = s.finish(cluster);
+
+    // (4) probe local records, (5) shuffle survivors
+    let mut s = cluster.stage("filter_shuffle");
+    let mut shuffled_inputs: Vec<Vec<Vec<crate::data::Record>>> = Vec::with_capacity(n);
+    let mut survivors = Vec::with_capacity(n);
+    for d in inputs {
+        // probe per partition, attributed to the owning worker
+        let mut keep: Vec<Vec<bool>> = Vec::with_capacity(d.partitions.len());
+        for (j, part) in d.partitions.iter().enumerate() {
+            let w = cluster.worker_of_partition(j);
+            let t0 = Instant::now();
+            let keys: Vec<u32> = part.iter().map(|r| fold_key(r.key)).collect();
+            let mask = prober.probe(&join_filter, &keys)?;
+            s.add_compute(w, t0.elapsed().as_secs_f64());
+            keep.push(mask);
+        }
+        // shuffle only the records the mask kept (explicit walk in the
+        // same partition order the mask was computed in)
+        let mut kept = 0u64;
+        let k = cluster.k;
+        let mut out: Vec<Vec<crate::data::Record>> = vec![Vec::new(); k];
+        for (j, part) in d.partitions.iter().enumerate() {
+            let src = cluster.worker_of_partition(j);
+            for (i, r) in part.iter().enumerate() {
+                if keep[j][i] {
+                    let dst = crate::data::partition_of(r.key, k);
+                    s.transfer(src, dst, d.record_bytes);
+                    out[dst].push(*r);
+                    kept += 1;
+                }
+            }
+        }
+        s.add_items(kept);
+        survivors.push(kept);
+        shuffled_inputs.push(out);
+    }
+    d_dt += s.finish(cluster);
+
+    // cogroup per worker
+    let per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>> = (0..cluster.k)
+        .map(|w| {
+            let per_input: Vec<Vec<crate::data::Record>> = shuffled_inputs
+                .iter()
+                .map(|inp| inp[w].clone())
+                .collect();
+            let mut g = group_by_key(&per_input);
+            // keys that survived the (false-positive-prone) filter but are
+            // missing from some input produce no output pairs; drop them
+            g.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+            g
+        })
+        .collect();
+
+    Ok(Filtered {
+        per_worker,
+        d_dt,
+        join_filter,
+        survivors,
+    })
+}
+
+/// The exact cross-product stage over filtered survivors — the second half
+/// of the Bloom join, also used by the engine when the cost function says
+/// the exact join fits the budget (§3.1.1).
+pub fn cross_product_stage(
+    cluster: &mut SimCluster,
+    filtered: &Filtered,
+    op: CombineOp,
+) -> HashMap<u64, StratumAgg> {
+    let mut s = cluster.stage("crossproduct");
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for (w, groups) in filtered.per_worker.iter().enumerate() {
+        let t0 = Instant::now();
+        let mut pairs = 0u64;
+        for (key, sides) in groups {
+            let agg = super::cross_product_agg(sides, op);
+            pairs += agg.population as u64;
+            strata.insert(*key, agg);
+        }
+        s.add_compute(w, t0.elapsed().as_secs_f64());
+        s.add_items(pairs);
+    }
+    s.finish(cluster);
+    strata
+}
+
+/// Exact Bloom join (§5.2 "filtering stage only"): stage 1 + full cross
+/// product over the survivors.
+pub fn bloom_join(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    cfg: FilterConfig,
+    prober: &mut dyn KeyProber,
+) -> anyhow::Result<JoinRun> {
+    let filtered = filter_and_shuffle(cluster, inputs, cfg, prober)?;
+    let strata = cross_product_stage(cluster, &filtered, op);
+    Ok(JoinRun::exact(strata, cluster.take_metrics()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::Record;
+    use crate::join::native::native_join;
+
+    fn cluster() -> SimCluster {
+        SimCluster::new(
+            4,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn ds(name: &str, recs: Vec<(u64, f64)>) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            name,
+            recs.into_iter().map(|(k, v)| Record::new(k, v)).collect(),
+            4,
+            100,
+        )
+    }
+
+    #[test]
+    fn matches_native_join_result() {
+        let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]);
+        let b = ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]);
+        let bj = bloom_join(
+            &mut cluster(),
+            &[a.clone(), b.clone()],
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let nat = native_join(&mut cluster(), &[a, b], CombineOp::Sum, u64::MAX).unwrap();
+        assert!((bj.exact_sum() - nat.exact_sum()).abs() < 1e-9);
+        assert_eq!(bj.output_cardinality(), nat.output_cardinality());
+    }
+
+    #[test]
+    fn shuffles_far_less_at_low_overlap() {
+        // 2% overlap: bloom join should move ~2% of the bytes (+ filters)
+        let n = 5000u64;
+        let a = ds(
+            "a",
+            (0..n).map(|i| (if i < 100 { i } else { i + 10_000 }, 1.0)).collect(),
+        );
+        let b = ds(
+            "b",
+            (0..n).map(|i| (if i < 100 { i } else { i + 20_000 }, 1.0)).collect(),
+        );
+        // size the filter for the input (eq 27) — the fixed 2^20 default
+        // would dominate the byte count on an input this small
+        let cfg = FilterConfig::for_inputs(&[a.clone(), b.clone()], 0.01);
+        let bj = bloom_join(
+            &mut cluster(),
+            &[a.clone(), b.clone()],
+            CombineOp::Sum,
+            cfg,
+            &mut NativeProber,
+        )
+        .unwrap();
+        let nat = native_join(&mut cluster(), &[a, b], CombineOp::Sum, u64::MAX).unwrap();
+        let rb = bj.metrics.total_shuffled_bytes() as f64;
+        let nb = nat.metrics.total_shuffled_bytes() as f64;
+        assert!(rb < nb, "bloom {rb} vs native {nb}");
+        // record movement portion must be ~2%; filters add a constant
+        let record_bytes: u64 = bj
+            .metrics
+            .stage("filter_shuffle")
+            .map(|s| s.shuffled_bytes)
+            .unwrap();
+        assert!(
+            (record_bytes as f64) < 0.05 * (2.0 * n as f64 * 100.0),
+            "record bytes {record_bytes}"
+        );
+    }
+
+    #[test]
+    fn three_way_filtering() {
+        let a = ds("a", vec![(1, 1.0), (2, 2.0), (7, 1.0)]);
+        let b = ds("b", vec![(1, 10.0), (1, 20.0), (2, 30.0), (8, 1.0)]);
+        let c3 = ds("c", vec![(1, 100.0), (3, 0.0), (2, 1.0)]);
+        let bj = bloom_join(
+            &mut cluster(),
+            &[a.clone(), b.clone(), c3.clone()],
+            CombineOp::Sum,
+            FilterConfig::default(),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let nat = native_join(&mut cluster(), &[a, b, c3], CombineOp::Sum, u64::MAX).unwrap();
+        assert!((bj.exact_sum() - nat.exact_sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn d_dt_positive_and_filter_reports_survivors() {
+        let a = ds("a", (0..2000).map(|i| (i, 1.0)).collect());
+        let b = ds("b", (1900..4000).map(|i| (i, 1.0)).collect());
+        let mut c = cluster();
+        let f = filter_and_shuffle(
+            &mut c,
+            &[a, b],
+            FilterConfig::default(),
+            &mut NativeProber,
+        )
+        .unwrap();
+        assert!(f.d_dt > 0.0);
+        // ~100 truly-common keys per input (+ false positives)
+        assert!((100..300).contains(&f.survivors[0]), "{:?}", f.survivors);
+        assert!((100..300).contains(&f.survivors[1]), "{:?}", f.survivors);
+        let keys: usize = f.per_worker.iter().map(|g| g.len()).sum();
+        assert!((90..=220).contains(&keys), "cogrouped keys {keys}");
+    }
+
+    #[test]
+    fn filter_config_for_inputs() {
+        let a = ds("a", (0..10_000).map(|i| (i, 1.0)).collect());
+        let b = ds("b", (0..100).map(|i| (i, 1.0)).collect());
+        let cfg = FilterConfig::for_inputs(&[a, b], 0.01);
+        // sized for the largest input (10k): >= 96k bits -> log2 >= 17
+        assert!(cfg.log2_bits >= 17, "log2={}", cfg.log2_bits);
+    }
+}

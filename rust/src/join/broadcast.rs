@@ -1,0 +1,161 @@
+//! Broadcast join (paper §A.1 I): ship every smaller input in full to all
+//! k workers; the largest input never moves. Wins when the small inputs
+//! are tiny, loses catastrophically as n or k grows — eq 18's
+//! (|R_1|+…+|R_{n−1}|)·(k−1) term, plotted in Fig 4a/14.
+
+use super::{group_by_key, CombineOp, JoinRun};
+use crate::cluster::shuffle::broadcast_dataset;
+use crate::cluster::SimCluster;
+use crate::data::Dataset;
+use crate::stats::StratumAgg;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn broadcast_join(cluster: &mut SimCluster, inputs: &[Dataset], op: CombineOp) -> JoinRun {
+    assert!(inputs.len() >= 2);
+    // largest input stays put; the rest broadcast
+    let largest = inputs
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, d)| d.total_bytes())
+        .map(|(i, _)| i)
+        .unwrap();
+
+    let mut s = cluster.stage("broadcast");
+    for (i, d) in inputs.iter().enumerate() {
+        if i != largest {
+            broadcast_dataset(cluster, &mut s, d);
+        }
+    }
+    s.finish(cluster);
+
+    // per worker: join the local partitions of the largest input against
+    // the fully-replicated small inputs
+    let mut s = cluster.stage("crossproduct");
+    let small_all: Vec<Vec<crate::data::Record>> = inputs
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != largest)
+        .map(|(_, d)| d.iter().copied().collect())
+        .collect();
+
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for (j, part) in inputs[largest].partitions.iter().enumerate() {
+        let w = cluster.worker_of_partition(j);
+        let t0 = Instant::now();
+        // group: local slice of the big input + full copies of the others,
+        // ordered so combine() sees sides in the original input order
+        let mut per_input: Vec<Vec<crate::data::Record>> = Vec::with_capacity(inputs.len());
+        let mut si = 0;
+        for i in 0..inputs.len() {
+            if i == largest {
+                per_input.push(part.clone());
+            } else {
+                per_input.push(small_all[si].clone());
+                si += 1;
+            }
+        }
+        let groups = group_by_key(&per_input);
+        let mut pairs = 0u64;
+        for (key, sides) in groups {
+            if sides.iter().any(|s| s.is_empty()) {
+                continue;
+            }
+            let agg = super::cross_product_agg(&sides, op);
+            pairs += agg.population as u64;
+            // the big input's values for this key are split across
+            // partitions, so B_i and the moments ADD across partitions
+            let e = strata.entry(key).or_default();
+            e.population += agg.population;
+            e.count += agg.count;
+            e.sum += agg.sum;
+            e.sumsq += agg.sumsq;
+        }
+        s.add_compute(w, t0.elapsed().as_secs_f64());
+        s.add_items(pairs);
+    }
+    s.finish(cluster);
+
+    JoinRun::exact(strata, cluster.take_metrics())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::Record;
+    use crate::join::native::native_join;
+
+    fn cluster(k: usize) -> SimCluster {
+        SimCluster::new(
+            k,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn ds(name: &str, recs: Vec<(u64, f64)>, parts: usize) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            name,
+            recs.into_iter().map(|(k, v)| Record::new(k, v)).collect(),
+            parts,
+            100,
+        )
+    }
+
+    #[test]
+    fn matches_native_join_result() {
+        let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)], 4);
+        let big = ds(
+            "b",
+            vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0), (5, 4.0), (6, 4.0)],
+            4,
+        );
+        let bc = broadcast_join(&mut cluster(4), &[a.clone(), big.clone()], CombineOp::Sum);
+        let nat = native_join(&mut cluster(4), &[a, big], CombineOp::Sum, u64::MAX).unwrap();
+        assert!(
+            (bc.exact_sum() - nat.exact_sum()).abs() < 1e-9,
+            "{} vs {}",
+            bc.exact_sum(),
+            nat.exact_sum()
+        );
+        assert_eq!(bc.output_cardinality(), nat.output_cardinality());
+    }
+
+    #[test]
+    fn big_input_never_shuffles() {
+        let small = ds("s", (0..10).map(|k| (k, 1.0)).collect(), 4);
+        let big = ds("b", (0..10_000).map(|k| (k % 100, 1.0)).collect(), 4);
+        let mut c = cluster(4);
+        let run = broadcast_join(&mut c, &[small.clone(), big], CombineOp::Sum);
+        // shuffled = small broadcast only: 10 recs x 100B x 3 receivers
+        assert_eq!(run.metrics.total_shuffled_bytes(), 10 * 100 * 3);
+        let _ = small;
+    }
+
+    #[test]
+    fn broadcast_bytes_scale_with_k() {
+        let small = ds("s", (0..100).map(|k| (k, 1.0)).collect(), 8);
+        let big = ds("b", (0..1000).map(|k| (k, 1.0)).collect(), 8);
+        let b2 = broadcast_join(&mut cluster(2), &[small.clone(), big.clone()], CombineOp::Sum)
+            .metrics
+            .total_shuffled_bytes();
+        let b8 = broadcast_join(&mut cluster(8), &[small, big], CombineOp::Sum)
+            .metrics
+            .total_shuffled_bytes();
+        assert!(b8 > 3 * b2, "b2={b2} b8={b8}");
+    }
+
+    #[test]
+    fn three_way_broadcast() {
+        let a = ds("a", vec![(1, 1.0), (2, 2.0)], 2);
+        let b = ds("b", vec![(1, 10.0), (1, 20.0), (2, 30.0)], 2);
+        let big = ds("c", vec![(1, 100.0), (3, 0.0), (4, 1.0), (5, 1.0)], 2);
+        let bc = broadcast_join(&mut cluster(2), &[a.clone(), b.clone(), big.clone()], CombineOp::Sum);
+        let nat = native_join(&mut cluster(2), &[a, b, big], CombineOp::Sum, u64::MAX).unwrap();
+        assert!((bc.exact_sum() - nat.exact_sum()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! Join strategies. Five implementations share one interface:
+//!
+//! * [`native`] — native Spark RDD join: chained binary cogroups, full
+//!   shuffle of every input *and* every intermediate, full cross products.
+//! * [`repartition`] — Spark repartition join: one tagged shuffle of all n
+//!   inputs, then a streamed n-way cross product per key (no materialized
+//!   intermediates).
+//! * [`broadcast`] — broadcast join: ships the n−1 smaller inputs to every
+//!   worker; no shuffle of the largest input.
+//! * [`bloom`] (bloom_join.rs) — ApproxJoin stage 1 only (§3.1): multi-way
+//!   Bloom join filter, filtered shuffle, exact cross product.
+//! * [`approx`] — full ApproxJoin (§3.2-3.4): stage 1 + stratified edge
+//!   sampling during the join + CLT/HT estimation, optionally pushing the
+//!   per-stratum aggregation through the AOT `join_agg` artifact.
+//!
+//! Every strategy returns a [`JoinRun`]: per-key aggregates (population +
+//! sampled moments — an exact join is the b_i = B_i special case) plus the
+//! stage metrics the figures report.
+
+pub mod approx;
+pub mod bloom_join;
+pub mod broadcast;
+pub mod native;
+pub mod repartition;
+
+use crate::cluster::JoinMetrics;
+use crate::stats::StratumAgg;
+use std::collections::HashMap;
+
+/// How the values of the n joined sides combine into the aggregated value
+/// (the expression inside the query's SUM/AVG/...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombineOp {
+    /// v₁ + v₂ + … + vₙ (the paper's running example SUM(R1.V + R2.V + …)).
+    Sum,
+    /// v₁ · v₂ · … · vₙ.
+    Product,
+    /// v₁ (left side only — COUNT-style queries where values are markers).
+    Left,
+}
+
+impl CombineOp {
+    #[inline]
+    pub fn combine(&self, values: &[f64]) -> f64 {
+        match self {
+            CombineOp::Sum => values.iter().sum(),
+            CombineOp::Product => values.iter().product(),
+            CombineOp::Left => values.first().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Fold an additional value into an already-combined prefix — used by
+    /// chained binary joins and by the runtime path's pre-reduction.
+    #[inline]
+    pub fn fold(&self, acc: f64, v: f64) -> f64 {
+        match self {
+            CombineOp::Sum => acc + v,
+            CombineOp::Product => acc * v,
+            CombineOp::Left => acc,
+        }
+    }
+}
+
+/// The outcome of a join execution.
+#[derive(Clone, Debug)]
+pub struct JoinRun {
+    /// Per-join-key aggregates. For exact joins, count == population and
+    /// the moments cover every output pair; for approximate joins, count is
+    /// the per-stratum sample size b_i.
+    pub strata: HashMap<u64, StratumAgg>,
+    pub metrics: JoinMetrics,
+    /// True when the strategy sampled (strata are estimates, not totals).
+    pub sampled: bool,
+    /// Raw draw counts per key for the Horvitz-Thompson path (empty for
+    /// exact joins and for the CLT path).
+    pub draws: HashMap<u64, f64>,
+}
+
+impl JoinRun {
+    pub fn exact(strata: HashMap<u64, StratumAgg>, metrics: JoinMetrics) -> Self {
+        Self {
+            strata,
+            metrics,
+            sampled: false,
+            draws: HashMap::new(),
+        }
+    }
+
+    /// Exact SUM of the combined values over the full join output — only
+    /// meaningful when `!sampled`.
+    pub fn exact_sum(&self) -> f64 {
+        self.strata.values().map(|s| s.sum).sum()
+    }
+
+    /// Total join-output cardinality Σ B_i (exact in both modes: the
+    /// filter stage knows every stratum's bipartite size).
+    pub fn output_cardinality(&self) -> f64 {
+        self.strata.values().map(|s| s.population).sum()
+    }
+
+    /// Stratum aggregates as a vector (order unspecified) for estimators.
+    pub fn strata_vec(&self) -> Vec<StratumAgg> {
+        self.strata.values().copied().collect()
+    }
+}
+
+/// Errors a join can hit — `OutOfMemory` mirrors the paper's native-join
+/// OOM at 8-10% overlap (Fig 9a's missing bars).
+#[derive(Debug)]
+pub enum JoinError {
+    /// Materialized intermediate exceeded the per-worker memory budget.
+    OutOfMemory { stage: String, bytes: u64 },
+}
+
+impl std::fmt::Display for JoinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JoinError::OutOfMemory { stage, bytes } => {
+                write!(f, "out of memory in {stage}: {bytes} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JoinError {}
+
+/// Group shuffled records of n inputs by key: key → one value-vector per
+/// input. Shared by every strategy's final phase.
+pub(crate) fn group_by_key(
+    per_input_records: &[Vec<crate::data::Record>],
+) -> HashMap<u64, Vec<Vec<f64>>> {
+    let n = per_input_records.len();
+    let mut groups: HashMap<u64, Vec<Vec<f64>>> = HashMap::new();
+    for (i, recs) in per_input_records.iter().enumerate() {
+        for r in recs {
+            groups.entry(r.key).or_insert_with(|| vec![Vec::new(); n])[i].push(r.value);
+        }
+    }
+    groups
+}
+
+/// Stream the full n-way cross product of one key group into a stratum
+/// aggregate. Cost is Π |side_i| combined-value evaluations — the honest
+/// cross-product work the paper's latency figures measure.
+/// Public for benches and diagnostics.
+pub fn cross_product_agg(sides: &[Vec<f64>], op: CombineOp) -> StratumAgg {
+    let population: f64 = sides.iter().map(|s| s.len() as f64).product();
+    let mut agg = StratumAgg {
+        population,
+        ..Default::default()
+    };
+    if sides.iter().any(|s| s.is_empty()) {
+        return agg;
+    }
+    // odometer over the n sides
+    let n = sides.len();
+    let mut idx = vec![0usize; n];
+    let mut vals: Vec<f64> = idx.iter().zip(sides).map(|(&i, s)| s[i]).collect();
+    loop {
+        agg.push(op.combine(&vals));
+        // increment odometer
+        let mut d = n;
+        loop {
+            if d == 0 {
+                return agg;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < sides[d].len() {
+                vals[d] = sides[d][idx[d]];
+                break;
+            }
+            idx[d] = 0;
+            vals[d] = sides[d][0];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Record;
+
+    #[test]
+    fn combine_ops() {
+        assert_eq!(CombineOp::Sum.combine(&[1.0, 2.0, 3.0]), 6.0);
+        assert_eq!(CombineOp::Product.combine(&[2.0, 3.0, 4.0]), 24.0);
+        assert_eq!(CombineOp::Left.combine(&[7.0, 9.0]), 7.0);
+        assert_eq!(CombineOp::Sum.fold(10.0, 5.0), 15.0);
+        assert_eq!(CombineOp::Product.fold(10.0, 5.0), 50.0);
+        assert_eq!(CombineOp::Left.fold(10.0, 5.0), 10.0);
+    }
+
+    #[test]
+    fn group_by_key_shapes() {
+        let a = vec![Record::new(1, 10.0), Record::new(2, 20.0)];
+        let b = vec![Record::new(1, 1.0), Record::new(1, 2.0)];
+        let g = group_by_key(&[a, b]);
+        assert_eq!(g[&1][0], vec![10.0]);
+        assert_eq!(g[&1][1], vec![1.0, 2.0]);
+        assert_eq!(g[&2][0], vec![20.0]);
+        assert!(g[&2][1].is_empty());
+    }
+
+    #[test]
+    fn cross_product_two_way() {
+        // {1,2} x {10,20,30} with Sum: pairs sums = 11,21,31,12,22,32
+        let agg = cross_product_agg(&[vec![1.0, 2.0], vec![10.0, 20.0, 30.0]], CombineOp::Sum);
+        assert_eq!(agg.population, 6.0);
+        assert_eq!(agg.count, 6.0);
+        assert_eq!(agg.sum, 129.0);
+    }
+
+    #[test]
+    fn cross_product_three_way_product_op() {
+        let agg = cross_product_agg(
+            &[vec![1.0, 2.0], vec![3.0], vec![4.0, 5.0]],
+            CombineOp::Product,
+        );
+        assert_eq!(agg.population, 4.0);
+        // 1*3*4 + 1*3*5 + 2*3*4 + 2*3*5 = 12+15+24+30 = 81
+        assert_eq!(agg.sum, 81.0);
+    }
+
+    #[test]
+    fn cross_product_empty_side() {
+        let agg = cross_product_agg(&[vec![1.0], vec![]], CombineOp::Sum);
+        assert_eq!(agg.population, 0.0);
+        assert_eq!(agg.count, 0.0);
+    }
+
+    #[test]
+    fn join_run_exact_sum() {
+        let mut strata = HashMap::new();
+        strata.insert(
+            1,
+            cross_product_agg(&[vec![1.0], vec![2.0]], CombineOp::Sum),
+        );
+        strata.insert(
+            2,
+            cross_product_agg(&[vec![5.0], vec![5.0]], CombineOp::Sum),
+        );
+        let run = JoinRun::exact(strata, JoinMetrics::default());
+        assert_eq!(run.exact_sum(), 13.0);
+        assert_eq!(run.output_cardinality(), 2.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! # ApproxJoin
+//!
+//! Reproduction of *"Approximate Distributed Joins in Apache Spark"*
+//! (Quoc et al., 2018) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-join coordinator: Bloom-filter
+//!   join filtering (§3.1), budget-driven stratified sampling *during* the
+//!   join (§3.2–3.3), CLT / Horvitz-Thompson error estimation (§3.4), on a
+//!   simulated Spark-like cluster substrate with exact shuffle accounting.
+//! * **L2/L1 (python/compile, build-time only)** — the numeric hot paths
+//!   (Bloom probe, per-stratum sample aggregation, CLT moments) authored in
+//!   JAX + Pallas, AOT-lowered to HLO text, and executed from Rust through
+//!   the PJRT CPU client ([`runtime`]). Python never runs on the query path.
+//!
+//! Entry points: [`coordinator::ApproxJoinEngine`] for the programmatic
+//! API, `approxjoin` (main.rs) for the CLI, `examples/` for walkthroughs.
+
+pub mod bloom;
+pub mod cluster;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod join;
+pub mod query;
+pub mod runtime;
+pub mod sampling;
+pub mod simulation;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+
+pub use anyhow::Result;

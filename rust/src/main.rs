@@ -1,0 +1,348 @@
+//! approxjoin — CLI for the ApproxJoin engine.
+//!
+//! Subcommands:
+//!   query     execute a budget query against a generated workload
+//!   compare   run all join strategies on one workload, print the table
+//!   profile   profile β_compute (Fig 5) and persist the cost model
+//!   simulate  closed-form shuffle-volume models (Figs 4/14/15)
+//!
+//! Examples:
+//!   approxjoin query --sql "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k \
+//!                           WITHIN 10 SECONDS" --data synthetic:overlap=0.05
+//!   approxjoin compare --data synthetic:items=50000,overlap=0.01
+//!   approxjoin profile
+//!   approxjoin simulate --fig 14
+
+use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::cost::CostModel;
+use approxjoin::data::{
+    generate_overlapping, netflix, network, tpch, Dataset, SyntheticSpec,
+};
+use approxjoin::join::{
+    bloom_join::{bloom_join, FilterConfig, NativeProber},
+    native::native_join,
+    repartition::repartition_join,
+    CombineOp,
+};
+use approxjoin::simulation::{variant_sizes, ShuffleModel};
+use approxjoin::util::{fmt, Table};
+use approxjoin::{query, row};
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("query") => cmd_query(&args[1..]),
+        Some("compare") => cmd_compare(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand: {other}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "approxjoin — approximate distributed joins (Bloom filtering + \
+         stratified sampling during the join)\n\n\
+         USAGE: approxjoin <query|compare|profile|simulate> [flags]\n\n\
+         query    --sql <QUERY> [--data <SPEC>] [--workers N] [--estimator clt|ht]\n\
+         compare  [--data <SPEC>] [--workers N] [--fraction F]\n\
+         profile  [--out PATH]\n\
+         simulate --fig <4a|4b|14|15>\n\n\
+         DATA SPECS:\n\
+           synthetic[:items=N,overlap=F,inputs=N,lambda=F]   (default)\n\
+           tpch[:sf=F]        CUSTOMER x ORDERS join input\n\
+           network            CAIDA-like TCP/UDP/ICMP flows (3-way)\n\
+           netflix            training_set x qualifying (2-way)"
+    );
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Parse `synthetic:items=100000,overlap=0.05` style specs into datasets
+/// named a, b, c, ... as the queries reference them.
+fn load_data(spec: &str, workers: usize) -> anyhow::Result<Vec<Dataset>> {
+    let (kind, params) = spec.split_once(':').unwrap_or((spec, ""));
+    let get = |key: &str| -> Option<f64> {
+        params.split(',').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == key).then(|| v.parse().ok())?
+        })
+    };
+    match kind {
+        "synthetic" => {
+            let spec = SyntheticSpec {
+                num_inputs: get("inputs").unwrap_or(2.0) as usize,
+                items_per_input: get("items").unwrap_or(100_000.0) as u64,
+                lambda: get("lambda").unwrap_or(100.0),
+                overlap_fraction: get("overlap").unwrap_or(0.01),
+                partitions: workers * 2,
+                seed: get("seed").unwrap_or(42.0) as u64,
+                ..Default::default()
+            };
+            let mut ds = generate_overlapping(&spec);
+            for (d, name) in ds.iter_mut().zip(["a", "b", "c", "d", "e", "f"]) {
+                d.name = name.to_string();
+            }
+            Ok(ds)
+        }
+        "tpch" => {
+            let db = tpch::generate(get("sf").unwrap_or(0.05), 7);
+            Ok(vec![
+                db.customer_by_custkey(workers * 2),
+                db.orders_by_custkey(workers * 2),
+            ])
+        }
+        "network" => Ok(network::generate(&network::NetworkSpec {
+            partitions: workers * 2,
+            ..Default::default()
+        })),
+        "netflix" => Ok(netflix::generate(&netflix::NetflixSpec {
+            partitions: workers * 2,
+            ..Default::default()
+        })),
+        other => anyhow::bail!("unknown data spec {other}"),
+    }
+}
+
+fn cmd_query(args: &[String]) -> anyhow::Result<()> {
+    let sql = flag(args, "--sql")
+        .ok_or_else(|| anyhow::anyhow!("--sql required (see approxjoin help)"))?;
+    let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
+    let estimator = match flag(args, "--estimator").as_deref() {
+        Some("ht") => approxjoin::stats::EstimatorKind::HorvitzThompson,
+        _ => approxjoin::stats::EstimatorKind::Clt,
+    };
+
+    let q = query::parse(&sql)?;
+    let inputs = load_data(&data, workers)?;
+    let mut named = HashMap::new();
+    for (d, t) in inputs.iter().zip(&q.tables) {
+        let mut d = d.clone();
+        d.name = t.clone();
+        named.insert(t.clone(), d);
+    }
+
+    let mut engine = ApproxJoinEngine::new(EngineConfig {
+        workers,
+        estimator,
+        ..Default::default()
+    })?;
+    // use the persisted cost profile when present
+    let profile = std::path::Path::new("artifacts/cost_profile.json");
+    if profile.exists() {
+        engine.cost = CostModel::load(profile)?;
+    }
+    println!(
+        "engine: {} workers, runtime={}",
+        workers,
+        if engine.has_runtime() { "xla/pjrt" } else { "native" }
+    );
+
+    let out = engine.execute(&q, &named)?;
+    println!("mode: {:?}", out.mode);
+    println!(
+        "result: {:.4} \u{b1} {:.4}  ({}% confidence, {} samples, df={:.0})",
+        out.result.estimate,
+        out.result.error_bound,
+        out.result.confidence * 100.0,
+        out.result.samples,
+        out.result.degrees_of_freedom
+    );
+    println!(
+        "cluster time: {}   (filter+shuffle d_dt: {})",
+        fmt::duration(out.sim_secs),
+        fmt::duration(out.d_dt)
+    );
+    println!(
+        "shuffled: {}   join-output cardinality: {}",
+        fmt::bytes(out.metrics.total_shuffled_bytes()),
+        fmt::count(out.output_cardinality as u64)
+    );
+    let mut t = Table::new(&["stage", "sim time", "shuffled", "items"]);
+    for st in &out.metrics.stages {
+        t.row(row![
+            st.name,
+            fmt::duration(st.sim_secs),
+            fmt::bytes(st.shuffled_bytes),
+            fmt::count(st.items)
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
+    let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
+    let inputs = load_data(&data, workers)?;
+    let tm = approxjoin::cluster::TimeModel::default();
+    let mk = || approxjoin::cluster::SimCluster::new(workers, tm);
+
+    let mut t = Table::new(&["strategy", "sim time", "shuffled", "output pairs", "SUM"]);
+    let cfg = FilterConfig::for_inputs(&inputs, 0.01);
+
+    let run = bloom_join(&mut mk(), &inputs, CombineOp::Sum, cfg, &mut NativeProber)?;
+    t.row(row![
+        "approxjoin (filter only)",
+        fmt::duration(run.metrics.total_sim_secs()),
+        fmt::bytes(run.metrics.total_shuffled_bytes()),
+        fmt::count(run.output_cardinality() as u64),
+        format!("{:.1}", run.exact_sum())
+    ]);
+
+    let run = repartition_join(&mut mk(), &inputs, CombineOp::Sum);
+    t.row(row![
+        "spark repartition join",
+        fmt::duration(run.metrics.total_sim_secs()),
+        fmt::bytes(run.metrics.total_shuffled_bytes()),
+        fmt::count(run.output_cardinality() as u64),
+        format!("{:.1}", run.exact_sum())
+    ]);
+
+    match native_join(&mut mk(), &inputs, CombineOp::Sum, 4 << 30) {
+        Ok(run) => {
+            t.row(row![
+                "native spark join",
+                fmt::duration(run.metrics.total_sim_secs()),
+                fmt::bytes(run.metrics.total_shuffled_bytes()),
+                fmt::count(run.output_cardinality() as u64),
+                format!("{:.1}", run.exact_sum())
+            ]);
+        }
+        Err(e) => {
+            t.row(row!["native spark join", "OOM", format!("{e}"), "-", "-"]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> anyhow::Result<()> {
+    let out = flag(args, "--out").unwrap_or_else(|| "artifacts/cost_profile.json".into());
+    println!("profiling cross-product latency (Fig 5)...");
+    let sizes = [100_000, 400_000, 1_600_000, 6_400_000, 25_600_000];
+    let (model, curve) = CostModel::profile_host(&sizes);
+    let mut t = Table::new(&["pairs", "measured", "model"]);
+    for (p, secs) in &curve {
+        t.row(row![
+            fmt::count(*p),
+            fmt::duration(*secs),
+            fmt::duration(model.cp_latency(*p as f64))
+        ]);
+    }
+    t.print();
+    println!(
+        "beta_compute = {:.3e} s/pair   epsilon = {:.4} s",
+        model.beta_compute, model.epsilon
+    );
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    model.save(std::path::Path::new(&out))?;
+    println!("saved to {out}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let fig = flag(args, "--fig").unwrap_or_else(|| "14".into());
+    match fig.as_str() {
+        "4a" => {
+            let mut t = Table::new(&["#inputs", "broadcast", "repartition", "approxjoin"]);
+            for n in 2..=8usize {
+                let m = ShuffleModel {
+                    input_sizes: vec![1_000_000; n],
+                    record_bytes: 1000,
+                    k: 100,
+                    overlap_fraction: 0.01,
+                    fp_rate: 0.01,
+                };
+                t.row(row![
+                    n,
+                    fmt::bytes(m.broadcast_bytes()),
+                    fmt::bytes(m.repartition_bytes()),
+                    fmt::bytes(m.bloom_bytes())
+                ]);
+            }
+            t.print();
+        }
+        "4b" => {
+            let mut t = Table::new(&["overlap", "broadcast", "repartition", "approxjoin"]);
+            for f in [0.01, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+                let m = ShuffleModel {
+                    input_sizes: vec![1_000_000; 3],
+                    record_bytes: 1000,
+                    k: 100,
+                    overlap_fraction: f,
+                    fp_rate: 0.01,
+                };
+                t.row(row![
+                    fmt::pct(f),
+                    fmt::bytes(m.broadcast_bytes()),
+                    fmt::bytes(m.repartition_bytes()),
+                    fmt::bytes(m.bloom_bytes())
+                ]);
+            }
+            t.print();
+        }
+        "14" => {
+            let mut t = Table::new(&[
+                "fp rate",
+                "broadcast",
+                "repartition",
+                "approxjoin",
+                "optimal",
+            ]);
+            for fp in [0.5, 0.2, 0.1, 0.05, 0.01, 0.001, 0.0001] {
+                let m = ShuffleModel {
+                    input_sizes: vec![10_000, 1_000_000, 10_000_000],
+                    record_bytes: 1000,
+                    k: 100,
+                    overlap_fraction: 0.01,
+                    fp_rate: fp,
+                };
+                t.row(row![
+                    fp,
+                    fmt::bytes(m.broadcast_bytes()),
+                    fmt::bytes(m.repartition_bytes()),
+                    fmt::bytes(m.bloom_bytes()),
+                    fmt::bytes(m.bloom_bytes_optimal())
+                ]);
+            }
+            t.print();
+        }
+        "15" => {
+            let mut t = Table::new(&["fp rate", "standard", "counting", "invertible", "scalable"]);
+            for fp in [0.1, 0.05, 0.01, 0.005, 0.001] {
+                let s = variant_sizes(100_000, fp);
+                t.row(row![
+                    fp,
+                    fmt::bytes(s.standard),
+                    fmt::bytes(s.counting),
+                    fmt::bytes(s.invertible),
+                    fmt::bytes(s.scalable)
+                ]);
+            }
+            t.print();
+        }
+        other => anyhow::bail!("unknown figure {other} (try 4a|4b|14|15)"),
+    }
+    Ok(())
+}

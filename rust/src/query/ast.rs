@@ -1,0 +1,127 @@
+//! Query AST: aggregate-over-equi-join with a query execution budget.
+
+use crate::join::CombineOp;
+
+/// Algebraic aggregation functions the paper supports (§2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFunc {
+    Sum,
+    Avg,
+    Count,
+    Stdev,
+}
+
+impl AggFunc {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggFunc::Sum => "SUM",
+            AggFunc::Avg => "AVG",
+            AggFunc::Count => "COUNT",
+            AggFunc::Stdev => "STDEV",
+        }
+    }
+}
+
+/// The error half of a query budget: bound ± at a confidence level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorBudget {
+    /// err_desired — absolute half-width of the confidence interval for
+    /// AVG-like aggregates, relative for SUM (the paper's example 0.01).
+    pub bound: f64,
+    /// Confidence level in (0,1), e.g. 0.95.
+    pub confidence: f64,
+}
+
+/// Query execution budget: desired latency, desired error bound, or both
+/// ("WITHIN ... OR ERROR ..." picks whichever the planner can satisfy).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Budget {
+    pub latency_secs: Option<f64>,
+    pub error: Option<ErrorBudget>,
+}
+
+impl Budget {
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.latency_secs.is_none() && self.error.is_none()
+    }
+}
+
+/// A parsed aggregation-over-join query.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub agg: AggFunc,
+    /// How the per-input values combine inside the aggregate.
+    pub combine: CombineOp,
+    /// Input dataset names, in join order (R1, R2, ..., Rn).
+    pub tables: Vec<String>,
+    /// The join attribute name (the paper's A; single-attribute equi-join).
+    pub join_attr: String,
+    pub budget: Budget,
+}
+
+impl Query {
+    /// Stable fingerprint for the feedback store: identifies the query
+    /// shape (aggregate + combine + tables + attribute), not its budget.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}:{:?}:{}:{}",
+            self.agg.name(),
+            self.combine,
+            self.tables.join(","),
+            self.join_attr
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_ignores_budget() {
+        let q1 = Query {
+            agg: AggFunc::Sum,
+            combine: CombineOp::Sum,
+            tables: vec!["a".into(), "b".into()],
+            join_attr: "k".into(),
+            budget: Budget {
+                latency_secs: Some(10.0),
+                error: None,
+            },
+        };
+        let mut q2 = q1.clone();
+        q2.budget = Budget::unbounded();
+        assert_eq!(q1.fingerprint(), q2.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_shape() {
+        let base = Query {
+            agg: AggFunc::Sum,
+            combine: CombineOp::Sum,
+            tables: vec!["a".into(), "b".into()],
+            join_attr: "k".into(),
+            budget: Budget::unbounded(),
+        };
+        let mut other = base.clone();
+        other.tables.push("c".into());
+        assert_ne!(base.fingerprint(), other.fingerprint());
+        let mut other = base.clone();
+        other.agg = AggFunc::Avg;
+        assert_ne!(base.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn budget_unbounded() {
+        assert!(Budget::unbounded().is_unbounded());
+        assert!(!Budget {
+            latency_secs: Some(1.0),
+            error: None
+        }
+        .is_unbounded());
+    }
+}

@@ -1,0 +1,16 @@
+//! Budget-query front end (paper §2 "Query interface"): the SQL-ish
+//! language in which users submit an aggregation-over-join with a latency
+//! or error budget:
+//!
+//! ```sql
+//! SELECT SUM(R1.V + R2.V) FROM R1, R2
+//! WHERE R1.A = R2.A
+//! WITHIN 120 SECONDS
+//! OR ERROR 0.01 CONFIDENCE 95%
+//! ```
+
+pub mod ast;
+pub mod parser;
+
+pub use ast::{AggFunc, Budget, ErrorBudget, Query};
+pub use parser::parse;

@@ -1,0 +1,321 @@
+//! Recursive-descent parser for the budget-query language (§2).
+//!
+//! Grammar (case-insensitive keywords):
+//!
+//! ```text
+//! query    := SELECT agg '(' expr ')' FROM tables WHERE chain budget?
+//! agg      := SUM | AVG | COUNT | STDEV
+//! expr     := term (('+' | '*') term)* | '*'
+//! term     := ident '.' ident
+//! tables   := ident (',' ident)*
+//! chain    := term ('=' term)+
+//! budget   := within | error | within OR error
+//! within   := WITHIN number SECONDS
+//! error    := ERROR number CONFIDENCE number '%'
+//! ```
+
+use super::ast::{AggFunc, Budget, ErrorBudget, Query};
+use crate::join::CombineOp;
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    Sym(char),
+}
+
+fn tokenize(s: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c.is_whitespace() {
+            i += 1;
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Ident(b[start..i].iter().collect()));
+        } else if c.is_ascii_digit() || (c == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit())
+        {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            out.push(Tok::Num(text.parse().map_err(|_| anyhow!("bad number {text}"))?));
+        } else if "()+*,.=%".contains(c) {
+            out.push(Tok::Sym(c));
+            i += 1;
+        } else {
+            bail!("unexpected character '{c}' at {i}");
+        }
+    }
+    Ok(out)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self
+            .toks
+            .get(self.i)
+            .cloned()
+            .ok_or_else(|| anyhow!("unexpected end of query"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        match self.next()? {
+            Tok::Ident(s) if s.eq_ignore_ascii_case(kw) => Ok(()),
+            t => bail!("expected {kw}, got {t:?}"),
+        }
+    }
+
+    fn try_keyword(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.i += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn sym(&mut self, c: char) -> Result<()> {
+        match self.next()? {
+            Tok::Sym(s) if s == c => Ok(()),
+            t => bail!("expected '{c}', got {t:?}"),
+        }
+    }
+
+    fn try_sym(&mut self, c: char) -> bool {
+        if self.peek() == Some(&Tok::Sym(c)) {
+            self.i += 1;
+            return true;
+        }
+        false
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => bail!("expected identifier, got {t:?}"),
+        }
+    }
+
+    fn num(&mut self) -> Result<f64> {
+        match self.next()? {
+            Tok::Num(v) => Ok(v),
+            t => bail!("expected number, got {t:?}"),
+        }
+    }
+
+    /// `table '.' column` → (table, column)
+    fn qualified(&mut self) -> Result<(String, String)> {
+        let t = self.ident()?;
+        self.sym('.')?;
+        let c = self.ident()?;
+        Ok((t, c))
+    }
+}
+
+/// Parse a budget query.
+pub fn parse(text: &str) -> Result<Query> {
+    let mut p = P {
+        toks: tokenize(text)?,
+        i: 0,
+    };
+    p.keyword("SELECT")?;
+    let agg_name = p.ident()?;
+    let agg = match agg_name.to_ascii_uppercase().as_str() {
+        "SUM" => AggFunc::Sum,
+        "AVG" => AggFunc::Avg,
+        "COUNT" => AggFunc::Count,
+        "STDEV" => AggFunc::Stdev,
+        other => bail!("unsupported aggregate {other}"),
+    };
+    p.sym('(')?;
+    // expression: '*' | term ((+|*) term)*
+    let mut expr_tables = Vec::new();
+    let combine;
+    if p.try_sym('*') {
+        combine = CombineOp::Left;
+    } else {
+        let (t, _col) = p.qualified()?;
+        expr_tables.push(t);
+        let mut op: Option<CombineOp> = None;
+        loop {
+            if p.try_sym('+') {
+                if op == Some(CombineOp::Product) {
+                    bail!("mixed +/* combine expressions are not supported");
+                }
+                op = Some(CombineOp::Sum);
+            } else if p.try_sym('*') {
+                if op == Some(CombineOp::Sum) {
+                    bail!("mixed +/* combine expressions are not supported");
+                }
+                op = Some(CombineOp::Product);
+            } else {
+                break;
+            }
+            let (t, _col) = p.qualified()?;
+            expr_tables.push(t);
+        }
+        combine = op.unwrap_or(CombineOp::Left);
+    }
+    p.sym(')')?;
+
+    p.keyword("FROM")?;
+    let mut tables = vec![p.ident()?];
+    while p.try_sym(',') {
+        tables.push(p.ident()?);
+    }
+    if tables.len() < 2 {
+        bail!("a join needs at least two tables");
+    }
+
+    p.keyword("WHERE")?;
+    let (t0, attr) = p.qualified()?;
+    let mut chain_tables = vec![t0];
+    while p.try_sym('=') {
+        let (t, a) = p.qualified()?;
+        if !a.eq_ignore_ascii_case(&attr) {
+            bail!("join attributes differ: {attr} vs {a} (single-attribute equi-join only)");
+        }
+        chain_tables.push(t);
+    }
+    if chain_tables.len() != tables.len() {
+        bail!(
+            "WHERE chain covers {} tables but FROM lists {}",
+            chain_tables.len(),
+            tables.len()
+        );
+    }
+    for t in &chain_tables {
+        if !tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+            bail!("WHERE references unknown table {t}");
+        }
+    }
+    for t in &expr_tables {
+        if !tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+            bail!("SELECT references unknown table {t}");
+        }
+    }
+
+    // budget clauses
+    let mut budget = Budget::unbounded();
+    loop {
+        if p.try_keyword("WITHIN") {
+            let v = p.num()?;
+            p.keyword("SECONDS")
+                .or_else(|_| -> Result<()> { bail!("WITHIN needs SECONDS") })?;
+            budget.latency_secs = Some(v);
+        } else if p.try_keyword("ERROR") {
+            let bound = p.num()?;
+            p.keyword("CONFIDENCE")?;
+            let conf = p.num()?;
+            p.sym('%')?;
+            budget.error = Some(ErrorBudget {
+                bound,
+                confidence: conf / 100.0,
+            });
+        } else if p.try_keyword("OR") {
+            continue;
+        } else {
+            break;
+        }
+    }
+    if p.peek().is_some() {
+        bail!("trailing tokens after query: {:?}", p.peek());
+    }
+
+    Ok(Query {
+        agg,
+        combine,
+        tables,
+        join_attr: attr,
+        budget,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_full() {
+        let q = parse(
+            "SELECT SUM(R1.V + R2.V + R3.V) FROM R1, R2, R3 \
+             WHERE R1.A = R2.A = R3.A \
+             WITHIN 120 SECONDS OR ERROR 0.01 CONFIDENCE 95%",
+        )
+        .unwrap();
+        assert_eq!(q.agg, AggFunc::Sum);
+        assert_eq!(q.combine, CombineOp::Sum);
+        assert_eq!(q.tables, vec!["R1", "R2", "R3"]);
+        assert_eq!(q.join_attr, "A");
+        assert_eq!(q.budget.latency_secs, Some(120.0));
+        let e = q.budget.error.unwrap();
+        assert_eq!(e.bound, 0.01);
+        assert!((e.confidence - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_only_and_error_only() {
+        let q = parse("SELECT AVG(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 30 SECONDS")
+            .unwrap();
+        assert_eq!(q.budget.latency_secs, Some(30.0));
+        assert!(q.budget.error.is_none());
+        let q = parse("SELECT SUM(a.v * b.v) FROM a, b WHERE a.k = b.k ERROR 0.05 CONFIDENCE 99%")
+            .unwrap();
+        assert_eq!(q.combine, CombineOp::Product);
+        assert!(q.budget.latency_secs.is_none());
+        assert_eq!(q.budget.error.unwrap().confidence, 0.99);
+    }
+
+    #[test]
+    fn count_star_and_unbudgeted() {
+        let q = parse("SELECT COUNT(*) FROM tcp, udp, icmp WHERE tcp.flow = udp.flow = icmp.flow")
+            .unwrap();
+        assert_eq!(q.agg, AggFunc::Count);
+        assert_eq!(q.combine, CombineOp::Left);
+        assert!(q.budget.is_unbounded());
+    }
+
+    #[test]
+    fn single_table_expr() {
+        let q = parse("SELECT SUM(tcp.size) FROM tcp, udp WHERE tcp.f = udp.f").unwrap();
+        assert_eq!(q.combine, CombineOp::Left);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("SELECT NOPE(a.v) FROM a, b WHERE a.k = b.k").is_err());
+        assert!(parse("SELECT SUM(a.v) FROM a WHERE a.k = a.k").is_err());
+        assert!(parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.j").is_err());
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k EXTRA").is_err());
+        assert!(parse("SELECT SUM(a.v * b.v + c.v) FROM a, b, c WHERE a.k = b.k = c.k").is_err());
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = c.k").is_err());
+        // WHERE chain must cover all FROM tables
+        assert!(parse("SELECT SUM(a.v) FROM a, b, c WHERE a.k = b.k").is_err());
+    }
+
+    #[test]
+    fn case_insensitive_keywords() {
+        let q = parse("select sum(a.v + b.v) from a, b where a.k = b.k within 5 seconds").unwrap();
+        assert_eq!(q.budget.latency_secs, Some(5.0));
+    }
+}

@@ -1,0 +1,355 @@
+//! Fixed-shape batch executors over the compiled artifacts. Each wraps one
+//! `PjRtLoadedExecutable` and adapts the coordinator's trait contracts
+//! ([`BatchAggregator`], [`KeyProber`]) to the artifact's static tensor
+//! shapes, padding + masking the last partial batch.
+
+use super::{to_anyhow, Geometry};
+use crate::bloom::BloomFilter;
+use crate::join::approx::BatchAggregator;
+use crate::join::bloom_join::KeyProber;
+use crate::join::CombineOp;
+use anyhow::{ensure, Result};
+
+/// The combine-op one-hot ordering pinned in python/compile/model.py.
+fn op_onehot(op: CombineOp) -> [f32; 4] {
+    match op {
+        CombineOp::Sum => [1.0, 0.0, 0.0, 0.0],
+        CombineOp::Product => [0.0, 1.0, 0.0, 0.0],
+        CombineOp::Left => [0.0, 0.0, 1.0, 0.0],
+    }
+}
+
+/// Executes the `join_agg` artifact: (v1, v2, seg, mask, op) →
+/// per-stratum (counts, sums, sumsqs).
+pub struct JoinAggExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    geometry: Geometry,
+    /// Scratch buffers reused across calls (hot-path allocation matters;
+    /// see EXPERIMENTS.md §Perf).
+    f1: Vec<f32>,
+    f2: Vec<f32>,
+    fm: Vec<f32>,
+    /// Executions so far (diagnostics).
+    pub calls: u64,
+}
+
+impl JoinAggExecutor {
+    pub fn new(exe: xla::PjRtLoadedExecutable, geometry: Geometry) -> Self {
+        let b = geometry.batch;
+        Self {
+            exe,
+            geometry,
+            f1: vec![0.0; b],
+            f2: vec![0.0; b],
+            fm: vec![0.0; b],
+            calls: 0,
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+}
+
+impl BatchAggregator for JoinAggExecutor {
+    fn run(
+        &mut self,
+        left: &[f64],
+        right: &[f64],
+        seg: &[i32],
+        mask: &[f64],
+        op: CombineOp,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let b = self.geometry.batch;
+        ensure!(left.len() == b, "batch must be padded to {b}");
+        ensure!(right.len() == b && seg.len() == b && mask.len() == b);
+        for i in 0..b {
+            self.f1[i] = left[i] as f32;
+            self.f2[i] = right[i] as f32;
+            self.fm[i] = mask[i] as f32;
+        }
+        let l1 = xla::Literal::vec1(&self.f1);
+        let l2 = xla::Literal::vec1(&self.f2);
+        let ls = xla::Literal::vec1(seg);
+        let lm = xla::Literal::vec1(&self.fm);
+        let lop = xla::Literal::vec1(&op_onehot(op));
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[l1, l2, ls, lm, lop])
+            .map_err(to_anyhow)?[0][0]
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let (counts, sums, sumsqs) = result.to_tuple3().map_err(to_anyhow)?;
+        self.calls += 1;
+        let cast = |l: xla::Literal| -> Result<Vec<f64>> {
+            Ok(l.to_vec::<f32>()
+                .map_err(to_anyhow)?
+                .into_iter()
+                .map(|v| v as f64)
+                .collect())
+        };
+        Ok((cast(counts)?, cast(sums)?, cast(sumsqs)?))
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.geometry.batch
+    }
+
+    fn strata_slots(&self) -> usize {
+        self.geometry.strata
+    }
+}
+
+/// Executes the `bloom_probe` artifact: (words, keys) → membership mask.
+/// Implements [`KeyProber`] for filters whose geometry matches the
+/// artifact; other geometries fall back to native probing.
+pub struct BloomProbeExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    geometry: Geometry,
+    keybuf: Vec<u32>,
+    pub calls: u64,
+    pub native_fallbacks: u64,
+}
+
+impl BloomProbeExecutor {
+    pub fn new(exe: xla::PjRtLoadedExecutable, geometry: Geometry) -> Self {
+        Self {
+            exe,
+            geometry,
+            keybuf: vec![0; geometry.batch],
+            calls: 0,
+            native_fallbacks: 0,
+        }
+    }
+
+    /// Whether the artifact can probe this filter.
+    pub fn matches(&self, filter: &BloomFilter) -> bool {
+        filter.log2_bits() == self.geometry.log2_bits
+            && filter.num_hashes() == self.geometry.num_hashes
+    }
+}
+
+impl KeyProber for BloomProbeExecutor {
+    fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> Result<Vec<bool>> {
+        if !self.matches(filter) {
+            // geometry mismatch: stay correct via the native path
+            self.native_fallbacks += 1;
+            return Ok(keys.iter().map(|&k| filter.contains(k)).collect());
+        }
+        let b = self.geometry.batch;
+        let words = xla::Literal::vec1(filter.words());
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            self.keybuf[..chunk.len()].copy_from_slice(chunk);
+            // pad with a repeat of the first key (never read past len)
+            for slot in &mut self.keybuf[chunk.len()..] {
+                *slot = chunk.first().copied().unwrap_or(0);
+            }
+            let lk = xla::Literal::vec1(&self.keybuf[..]);
+            let result = self
+                .exe
+                .execute::<&xla::Literal>(&[&words, &lk])
+                .map_err(to_anyhow)?[0][0]
+                .to_literal_sync()
+                .map_err(to_anyhow)?;
+            let mask = result.to_tuple1().map_err(to_anyhow)?;
+            let mask = mask.to_vec::<i32>().map_err(to_anyhow)?;
+            out.extend(mask[..chunk.len()].iter().map(|&m| m != 0));
+            self.calls += 1;
+        }
+        Ok(out)
+    }
+}
+
+/// Executes the `clt_estimate` artifact: per-stratum (B, b, sums, sumsqs)
+/// → (τ̂, V̂ar). Strata are fed in slot-sized chunks and the two moments
+/// accumulate (both are sums over strata).
+pub struct CltExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    geometry: Geometry,
+    pub calls: u64,
+}
+
+impl CltExecutor {
+    pub fn new(exe: xla::PjRtLoadedExecutable, geometry: Geometry) -> Self {
+        Self {
+            exe,
+            geometry,
+            calls: 0,
+        }
+    }
+
+    /// Estimate (total, variance) from parallel per-stratum arrays.
+    pub fn estimate(
+        &mut self,
+        big_b: &[f64],
+        small_b: &[f64],
+        sums: &[f64],
+        sumsqs: &[f64],
+    ) -> Result<(f64, f64)> {
+        ensure!(
+            big_b.len() == small_b.len() && sums.len() == sumsqs.len() && big_b.len() == sums.len()
+        );
+        let s = self.geometry.strata;
+        let mut tau = 0.0f64;
+        let mut var = 0.0f64;
+        let mut buf = vec![0.0f32; s * 4];
+        for start in (0..big_b.len()).step_by(s) {
+            let end = (start + s).min(big_b.len());
+            let n = end - start;
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..n {
+                buf[i] = big_b[start + i] as f32;
+                buf[s + i] = small_b[start + i] as f32;
+                buf[2 * s + i] = sums[start + i] as f32;
+                buf[3 * s + i] = sumsqs[start + i] as f32;
+            }
+            let lb = xla::Literal::vec1(&buf[..s]);
+            let ls = xla::Literal::vec1(&buf[s..2 * s]);
+            let lsum = xla::Literal::vec1(&buf[2 * s..3 * s]);
+            let lsq = xla::Literal::vec1(&buf[3 * s..4 * s]);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lb, ls, lsum, lsq])
+                .map_err(to_anyhow)?[0][0]
+                .to_literal_sync()
+                .map_err(to_anyhow)?;
+            let (t, v) = result.to_tuple2().map_err(to_anyhow)?;
+            tau += t.to_vec::<f32>().map_err(to_anyhow)?[0] as f64;
+            var += v.to_vec::<f32>().map_err(to_anyhow)?[0] as f64;
+            self.calls += 1;
+        }
+        Ok((tau, var))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::join::approx::NativeAggregator;
+    use crate::runtime::PjrtRuntime;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtRuntime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn join_agg_matches_native_aggregator() {
+        let Some(rt) = runtime() else { return };
+        let mut xla_agg = rt.join_agg().unwrap();
+        let g = xla_agg.geometry();
+        let mut native = NativeAggregator {
+            rows: g.batch,
+            slots: g.strata,
+        };
+        let mut r = Rng::new(3);
+        let b = g.batch;
+        let left: Vec<f64> = (0..b).map(|_| r.range_f64(-5.0, 5.0)).collect();
+        let right: Vec<f64> = (0..b).map(|_| r.range_f64(-5.0, 5.0)).collect();
+        let seg: Vec<i32> = (0..b).map(|_| r.index(g.strata) as i32).collect();
+        let mask: Vec<f64> = (0..b).map(|_| if r.f64() < 0.9 { 1.0 } else { 0.0 }).collect();
+        for op in [CombineOp::Sum, CombineOp::Product, CombineOp::Left] {
+            let (xc, xs, xq) = xla_agg.run(&left, &right, &seg, &mask, op).unwrap();
+            let (nc, ns, nq) = native.run(&left, &right, &seg, &mask, op).unwrap();
+            for i in 0..g.strata {
+                assert!((xc[i] - nc[i]).abs() < 1e-3, "count[{i}] {op:?}");
+                assert!(
+                    (xs[i] - ns[i]).abs() < 1e-2 * (1.0 + ns[i].abs()),
+                    "sum[{i}] {op:?}: {} vs {}",
+                    xs[i],
+                    ns[i]
+                );
+                assert!(
+                    (xq[i] - nq[i]).abs() < 1e-2 * (1.0 + nq[i].abs()),
+                    "sumsq[{i}] {op:?}"
+                );
+            }
+        }
+        assert_eq!(xla_agg.calls, 3);
+    }
+
+    #[test]
+    fn bloom_probe_matches_native_filter() {
+        let Some(rt) = runtime() else { return };
+        let mut prober = rt.bloom_probe().unwrap();
+        let g = rt.geometry;
+        let mut filter = BloomFilter::new(g.log2_bits, g.num_hashes);
+        let mut r = Rng::new(4);
+        let members: Vec<u32> = (0..5000).map(|_| r.next_u32()).collect();
+        for &k in &members {
+            filter.insert(k);
+        }
+        // probe a mix of members and non-members, non-multiple of batch
+        let mut keys = members[..3000].to_vec();
+        keys.extend((0..2500).map(|_| r.next_u32()));
+        let got = prober.probe(&filter, &keys).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(got[i], filter.contains(k), "key {k} at {i}");
+        }
+        assert!(prober.calls >= 2); // 5500 keys / 4096 batch
+        assert_eq!(prober.native_fallbacks, 0);
+    }
+
+    #[test]
+    fn bloom_probe_falls_back_on_geometry_mismatch() {
+        let Some(rt) = runtime() else { return };
+        let mut prober = rt.bloom_probe().unwrap();
+        let mut filter = BloomFilter::new(14, 4); // not the artifact geometry
+        filter.insert(7);
+        let got = prober.probe(&filter, &[7, 8]).unwrap();
+        assert!(got[0]);
+        assert_eq!(prober.native_fallbacks, 1);
+    }
+
+    #[test]
+    fn clt_estimate_matches_rust_estimator() {
+        let Some(rt) = runtime() else { return };
+        let mut clt = rt.clt_estimate().unwrap();
+        let mut r = Rng::new(5);
+        // 300 strata -> exercises the chunking (2 calls at 256 slots)
+        let m = 300;
+        let mut strata = Vec::with_capacity(m);
+        let (mut bb, mut sb, mut su, mut sq) = (vec![], vec![], vec![], vec![]);
+        for _ in 0..m {
+            let pop = 50.0 + r.f64() * 1000.0;
+            let b = 2.0 + (r.f64() * 20.0).floor();
+            let mut agg = crate::stats::StratumAgg {
+                population: pop,
+                ..Default::default()
+            };
+            for _ in 0..b as usize {
+                agg.push(r.range_f64(0.0, 10.0));
+            }
+            bb.push(agg.population);
+            sb.push(agg.count);
+            su.push(agg.sum);
+            sq.push(agg.sumsq);
+            strata.push(agg);
+        }
+        let (tau, var) = clt.estimate(&bb, &sb, &su, &sq).unwrap();
+        // rust-side reference (f64): the f32 artifact should agree to ~1e-3
+        let res = crate::stats::clt_sum(&strata, 0.95);
+        assert!(
+            (tau - res.estimate).abs() / res.estimate.abs() < 1e-3,
+            "tau {tau} vs {}",
+            res.estimate
+        );
+        let var_rust = strata
+            .iter()
+            .filter(|s| s.count > 1.0)
+            .map(|s| s.population * (s.population - s.count).max(0.0) * s.variance() / s.count)
+            .sum::<f64>();
+        assert!(
+            (var - var_rust).abs() / var_rust.max(1.0) < 5e-3,
+            "var {var} vs {var_rust}"
+        );
+        assert_eq!(clt.calls, 2);
+    }
+}

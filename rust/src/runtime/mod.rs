@@ -1,0 +1,173 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path.
+//!
+//! The interchange format is HLO **text** (not serialized HloModuleProto):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 — what the published `xla` 0.1.6 crate links — rejects
+//! (`proto.id() <= INT_MAX`); `HloModuleProto::from_text_file` reassigns
+//! ids and round-trips cleanly. Artifacts are lowered with
+//! return_tuple=True, so outputs unwrap with `to_tuple*`.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only thing touching the artifacts afterwards.
+
+pub mod batch;
+
+pub use batch::{BloomProbeExecutor, CltExecutor, JoinAggExecutor};
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact geometry — must match python/compile/model.py (the manifest
+/// carries the authored values; `Geometry::default()` mirrors them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    pub batch: usize,
+    pub strata: usize,
+    pub num_hashes: u32,
+    pub log2_bits: u32,
+    pub nwords: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Self {
+            batch: 4096,
+            strata: 256,
+            num_hashes: 5,
+            log2_bits: 20,
+            nwords: 32768,
+        }
+    }
+}
+
+impl Geometry {
+    pub fn from_manifest(j: &Json) -> Result<Self> {
+        let g = j.get("geometry").ok_or_else(|| anyhow!("no geometry"))?;
+        let f = |k: &str| -> Result<f64> {
+            g.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("manifest missing geometry.{k}"))
+        };
+        Ok(Self {
+            batch: f("batch")? as usize,
+            strata: f("strata")? as usize,
+            num_hashes: f("num_hashes")? as u32,
+            log2_bits: f("log2_bits")? as u32,
+            nwords: f("nwords")? as usize,
+        })
+    }
+}
+
+/// The PJRT CPU client plus the compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub geometry: Geometry,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory, read the manifest, create the client.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?,
+        )?;
+        let geometry = Geometry::from_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self {
+            client,
+            dir,
+            geometry,
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (`join_agg`, `bloom_probe`,
+    /// `clt_estimate`).
+    pub fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(to_anyhow)
+    }
+
+    /// Compile the sampling-stage aggregator.
+    pub fn join_agg(&self) -> Result<JoinAggExecutor> {
+        Ok(JoinAggExecutor::new(self.compile("join_agg")?, self.geometry))
+    }
+
+    /// Compile the filtering-stage prober.
+    pub fn bloom_probe(&self) -> Result<BloomProbeExecutor> {
+        Ok(BloomProbeExecutor::new(
+            self.compile("bloom_probe")?,
+            self.geometry,
+        ))
+    }
+
+    /// Compile the CLT moment estimator.
+    pub fn clt_estimate(&self) -> Result<CltExecutor> {
+        Ok(CltExecutor::new(
+            self.compile("clt_estimate")?,
+            self.geometry,
+        ))
+    }
+}
+
+/// The xla crate has its own error type; fold it into anyhow.
+pub(crate) fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::open(dir).expect("open runtime"))
+    }
+
+    #[test]
+    fn geometry_defaults_match_manifest() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.geometry, Geometry::default());
+    }
+
+    #[test]
+    fn opens_cpu_platform() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.platform_name().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn compiles_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        rt.compile("join_agg").expect("join_agg");
+        rt.compile("bloom_probe").expect("bloom_probe");
+        rt.compile("clt_estimate").expect("clt_estimate");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.compile("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Stratified edge sampling on the complete n-partite join graph without
+//! materializing it (paper §3.3, Algorithm 2).
+//!
+//! Per join key C_i the matching tuples form a complete bipartite
+//! (n-partite) graph; an output sample of size b_i is drawn by b_i times
+//! independently picking one endpoint per side — O(b_i) work instead of the
+//! O(Π|side|) full cross product. Two variants:
+//!
+//! * with replacement (CLT error estimation, §3.4 I) — duplicates kept;
+//! * deduplicated (Horvitz-Thompson, §3.4 II) — a hash set drops duplicate
+//!   edges and draws continue until b_i distinct edges (or the stratum is
+//!   exhausted); the HT estimator then removes the induced bias.
+
+use crate::join::CombineOp;
+use crate::stats::StratumAgg;
+use crate::util::Rng;
+
+/// Raw sampled pair values destined for the AOT `join_agg` artifact:
+/// the n-way draw is pre-reduced to (left, right) with the same combine op
+/// (associative for Sum/Product), so `combine(left, right)` equals the
+/// combine over all n endpoint values.
+#[derive(Clone, Debug, Default)]
+pub struct SampledPairs {
+    pub left: Vec<f64>,
+    pub right: Vec<f64>,
+}
+
+impl SampledPairs {
+    pub fn len(&self) -> usize {
+        self.left.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.left.is_empty()
+    }
+}
+
+/// Population size Π |side_i| of a key group, saturating.
+pub fn population(sides: &[Vec<f64>]) -> f64 {
+    sides.iter().map(|s| s.len() as f64).product()
+}
+
+/// Draw one edge: one uniform endpoint per side; returns the endpoint
+/// indices in `idx`.
+#[inline]
+fn draw<'a>(r: &mut Rng, sides: &'a [Vec<f64>], idx: &mut [usize]) {
+    for (d, side) in sides.iter().enumerate() {
+        idx[d] = r.index(side.len());
+    }
+    let _ = &sides; // appease borrowck pattern
+}
+
+/// Stratified sampling with replacement (Alg 2 sampleAndExecute):
+/// aggregates b draws directly into a `StratumAgg`.
+pub fn sample_edges_with_replacement(
+    r: &mut Rng,
+    sides: &[Vec<f64>],
+    b: u64,
+    op: CombineOp,
+) -> StratumAgg {
+    let mut agg = StratumAgg {
+        population: population(sides),
+        ..Default::default()
+    };
+    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+        return agg;
+    }
+    let n = sides.len();
+    let mut idx = vec![0usize; n];
+    let mut vals = vec![0.0f64; n];
+    for _ in 0..b {
+        draw(r, sides, &mut idx);
+        for d in 0..n {
+            vals[d] = sides[d][idx[d]];
+        }
+        agg.push(op.combine(&vals));
+    }
+    agg
+}
+
+/// With-replacement sampling that emits raw (left, right) pair values for
+/// the runtime path instead of aggregating locally. For n > 2 the first
+/// n−1 endpoint values are pre-reduced with `op` into `left`.
+pub fn sample_pairs_with_replacement(
+    r: &mut Rng,
+    sides: &[Vec<f64>],
+    b: u64,
+    op: CombineOp,
+    out: &mut SampledPairs,
+) -> f64 {
+    let pop = population(sides);
+    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+        return pop;
+    }
+    let n = sides.len();
+    let mut idx = vec![0usize; n];
+    out.left.reserve(b as usize);
+    out.right.reserve(b as usize);
+    for _ in 0..b {
+        draw(r, sides, &mut idx);
+        let mut left = sides[0][idx[0]];
+        for d in 1..n - 1 {
+            left = op.fold(left, sides[d][idx[d]]);
+        }
+        out.left.push(left);
+        out.right.push(sides[n - 1][idx[n - 1]]);
+    }
+    pop
+}
+
+/// Deduplicated sampling for the Horvitz-Thompson path: resample until b
+/// *distinct* edges are collected (capped at the stratum population and at
+/// `max_attempts` to bound the coupon-collector tail). Returns the
+/// deduplicated aggregate plus the raw draw count used for π_i.
+pub fn sample_edges_dedup(
+    r: &mut Rng,
+    sides: &[Vec<f64>],
+    b: u64,
+    op: CombineOp,
+) -> (StratumAgg, f64) {
+    let pop = population(sides);
+    let mut agg = StratumAgg {
+        population: pop,
+        ..Default::default()
+    };
+    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+        return (agg, 0.0);
+    }
+    let n = sides.len();
+    let target = (b as f64).min(pop) as u64;
+    let max_attempts = b.saturating_mul(20).max(64);
+    let mut seen = std::collections::HashSet::new();
+    let mut idx = vec![0usize; n];
+    let mut vals = vec![0.0f64; n];
+    let mut draws = 0f64;
+    while (agg.count as u64) < target && (draws as u64) < max_attempts {
+        draw(r, sides, &mut idx);
+        draws += 1.0;
+        // encode the edge as its odometer rank
+        let mut rank = 0u128;
+        for d in 0..n {
+            rank = rank * sides[d].len() as u128 + idx[d] as u128;
+        }
+        if seen.insert(rank) {
+            for d in 0..n {
+                vals[d] = sides[d][idx[d]];
+            }
+            agg.push(op.combine(&vals));
+        }
+    }
+    (agg, draws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::join::cross_product_agg;
+
+    fn sides2() -> Vec<Vec<f64>> {
+        vec![vec![1.0, 2.0, 3.0], vec![10.0, 20.0, 30.0, 40.0]]
+    }
+
+    #[test]
+    fn population_product() {
+        assert_eq!(population(&sides2()), 12.0);
+        assert_eq!(population(&[vec![1.0], vec![], vec![2.0]]), 0.0);
+    }
+
+    #[test]
+    fn with_replacement_draws_exactly_b() {
+        let mut r = Rng::new(1);
+        let agg = sample_edges_with_replacement(&mut r, &sides2(), 100, CombineOp::Sum);
+        assert_eq!(agg.count, 100.0);
+        assert_eq!(agg.population, 12.0);
+    }
+
+    #[test]
+    fn with_replacement_mean_estimates_population_mean() {
+        let mut r = Rng::new(2);
+        let truth = cross_product_agg(&sides2(), CombineOp::Sum);
+        let agg = sample_edges_with_replacement(&mut r, &sides2(), 20_000, CombineOp::Sum);
+        let true_mean = truth.sum / truth.population;
+        assert!(
+            (agg.mean() - true_mean).abs() < 0.5,
+            "{} vs {}",
+            agg.mean(),
+            true_mean
+        );
+    }
+
+    #[test]
+    fn empty_side_yields_empty_sample() {
+        let mut r = Rng::new(3);
+        let agg =
+            sample_edges_with_replacement(&mut r, &[vec![1.0], vec![]], 50, CombineOp::Sum);
+        assert_eq!(agg.count, 0.0);
+        assert_eq!(agg.population, 0.0);
+    }
+
+    #[test]
+    fn pairs_prereduction_matches_full_combine() {
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let sides = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let agg = sample_edges_with_replacement(&mut r1, &sides, 500, CombineOp::Sum);
+        let mut pairs = SampledPairs::default();
+        sample_pairs_with_replacement(&mut r2, &sides, 500, CombineOp::Sum, &mut pairs);
+        // identical RNG stream -> identical draws -> combined equal
+        let sum: f64 = pairs
+            .left
+            .iter()
+            .zip(&pairs.right)
+            .map(|(l, rv)| l + rv)
+            .sum();
+        assert!((sum - agg.sum).abs() < 1e-9);
+        assert_eq!(pairs.len(), 500);
+    }
+
+    #[test]
+    fn dedup_never_duplicates_and_caps_at_population() {
+        let mut r = Rng::new(5);
+        let sides = vec![vec![1.0, 2.0], vec![10.0, 20.0]]; // pop = 4
+        let (agg, draws) = sample_edges_dedup(&mut r, &sides, 100, CombineOp::Sum);
+        assert_eq!(agg.count, 4.0, "must collect every distinct edge");
+        assert!(draws >= 4.0);
+        // the four distinct pair-sums: 11,21,12,22
+        assert_eq!(agg.sum, 66.0);
+    }
+
+    #[test]
+    fn dedup_bounded_attempts() {
+        let mut r = Rng::new(6);
+        // pathological: pop 1, ask for 5 -> must stop quickly
+        let (agg, draws) = sample_edges_dedup(&mut r, &[vec![1.0], vec![1.0]], 5, CombineOp::Sum);
+        assert_eq!(agg.count, 1.0);
+        assert!(draws <= 100.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_edges_with_replacement(&mut Rng::new(7), &sides2(), 50, CombineOp::Sum);
+        let b = sample_edges_with_replacement(&mut Rng::new(7), &sides2(), 50, CombineOp::Sum);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,10 @@
+//! Sampling substrate: stratified edge sampling *during* the join (the
+//! paper's core §3.3 mechanism) plus the two baseline placements Figure 1
+//! compares against — pre-join input sampling and post-join output
+//! sampling.
+
+pub mod edge_sampling;
+pub mod stratified;
+
+pub use edge_sampling::{sample_edges_dedup, sample_edges_with_replacement, SampledPairs};
+pub use stratified::{post_join_reservoir, sample_by_key};

@@ -1,0 +1,161 @@
+//! The two baseline sampling placements Figure 1 compares against:
+//!
+//! * **pre-join** (`sample_by_key`) — Spark's `sampleByKey` on the *inputs*
+//!   before joining. Fast, but the join of two p-samples keeps only ~p² of
+//!   the matching pairs and badly distorts per-key output statistics (the
+//!   order-of-magnitude accuracy loss in Fig 1/13c).
+//! * **post-join** (`post_join_reservoir`) — stratified sampling over the
+//!   join *output* after computing it in full. Accurate, but pays the
+//!   whole cross-product + shuffle first (Fig 1's 3-7x slowdown; the
+//!   "extended repartition join" and SnappyData baselines of §5.3/§5.5).
+
+use crate::data::Dataset;
+use crate::join::CombineOp;
+use crate::stats::StratumAgg;
+use crate::util::Rng;
+
+/// Spark `sampleByKey`: keep each record independently with probability
+/// `fraction` (per-key simple random sampling of the inputs).
+pub fn sample_by_key(dataset: &Dataset, fraction: f64, rng: &mut Rng) -> Dataset {
+    assert!((0.0..=1.0).contains(&fraction));
+    let mut out = Vec::new();
+    for part in &dataset.partitions {
+        for r in part {
+            if rng.f64() < fraction {
+                out.push(*r);
+            }
+        }
+    }
+    Dataset::from_records(
+        format!("{}_sampled", dataset.name),
+        out,
+        dataset.num_partitions(),
+        dataset.record_bytes,
+    )
+}
+
+/// Stratified reservoir over a streamed join output: consumes the *full*
+/// cross product of one key group (honest post-join cost) while retaining
+/// a uniform without-replacement reservoir of `ceil(fraction · B_i)`
+/// combined values, returned as the stratum's sample aggregate.
+pub fn post_join_reservoir(
+    sides: &[Vec<f64>],
+    fraction: f64,
+    op: CombineOp,
+    rng: &mut Rng,
+) -> StratumAgg {
+    let population: f64 = sides.iter().map(|s| s.len() as f64).product();
+    let mut agg = StratumAgg {
+        population,
+        ..Default::default()
+    };
+    if population == 0.0 || fraction <= 0.0 {
+        return agg;
+    }
+    let b = ((fraction * population).ceil() as usize).max(1);
+    let mut reservoir: Vec<f64> = Vec::with_capacity(b);
+    let n = sides.len();
+    let mut idx = vec![0usize; n];
+    let mut vals: Vec<f64> = idx.iter().zip(sides).map(|(&i, s)| s[i]).collect();
+    let mut seen = 0u64;
+    // full odometer enumeration — this is the point: post-join sampling
+    // cannot skip the cross product.
+    loop {
+        let v = op.combine(&vals);
+        seen += 1;
+        if reservoir.len() < b {
+            reservoir.push(v);
+        } else {
+            let j = rng.below(seen);
+            if (j as usize) < b {
+                reservoir[j as usize] = v;
+            }
+        }
+        let mut d = n;
+        loop {
+            if d == 0 {
+                for v in reservoir {
+                    agg.push(v);
+                }
+                return agg;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < sides[d].len() {
+                vals[d] = sides[d][idx[d]];
+                break;
+            }
+            idx[d] = 0;
+            vals[d] = sides[d][0];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Record;
+    use crate::join::cross_product_agg;
+
+    #[test]
+    fn sample_by_key_fraction() {
+        let d = Dataset::from_records(
+            "t",
+            (0..20_000).map(|k| Record::new(k % 100, 1.0)).collect(),
+            4,
+            10,
+        );
+        let mut r = Rng::new(1);
+        let s = sample_by_key(&d, 0.3, &mut r);
+        let frac = s.len() as f64 / d.len() as f64;
+        assert!((frac - 0.3).abs() < 0.02, "frac {frac}");
+        assert_eq!(sample_by_key(&d, 0.0, &mut r).len(), 0);
+        assert_eq!(sample_by_key(&d, 1.0, &mut r).len(), d.len());
+    }
+
+    #[test]
+    fn reservoir_size_and_population() {
+        let sides = vec![vec![1.0; 20], vec![2.0; 30]]; // pop 600
+        let mut r = Rng::new(2);
+        let agg = post_join_reservoir(&sides, 0.1, CombineOp::Sum, &mut r);
+        assert_eq!(agg.population, 600.0);
+        assert_eq!(agg.count, 60.0);
+    }
+
+    #[test]
+    fn reservoir_mean_unbiased() {
+        let sides = vec![
+            (0..25).map(|i| i as f64).collect::<Vec<_>>(),
+            (0..20).map(|i| i as f64 * 2.0).collect::<Vec<_>>(),
+        ];
+        let truth = cross_product_agg(&sides, CombineOp::Sum);
+        let true_mean = truth.sum / truth.population;
+        let mut r = Rng::new(3);
+        let mut est = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let agg = post_join_reservoir(&sides, 0.2, CombineOp::Sum, &mut r);
+            est += agg.mean();
+        }
+        est /= reps as f64;
+        assert!((est - true_mean).abs() < 0.5, "{est} vs {true_mean}");
+    }
+
+    #[test]
+    fn full_fraction_reservoir_is_exact() {
+        let sides = vec![vec![1.0, 2.0], vec![3.0, 5.0]];
+        let mut r = Rng::new(4);
+        let agg = post_join_reservoir(&sides, 1.0, CombineOp::Sum, &mut r);
+        let truth = cross_product_agg(&sides, CombineOp::Sum);
+        assert_eq!(agg.count, truth.population);
+        assert!((agg.sum - truth.sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_group() {
+        let mut r = Rng::new(5);
+        let agg = post_join_reservoir(&[vec![], vec![1.0]], 0.5, CombineOp::Sum, &mut r);
+        assert_eq!(agg.population, 0.0);
+        assert_eq!(agg.count, 0.0);
+    }
+}

@@ -1,0 +1,422 @@
+//! Error estimation for the approximate join output (§3.4): the stratified
+//! CLT estimator (eq 12-14, sampling with replacement) and the
+//! Horvitz-Thompson estimator (eq 15-17, deduplicated sampling).
+//!
+//! Both consume per-stratum aggregates (`StratumAgg`) — exactly what the
+//! AOT `join_agg` artifact emits — and return `result ± error_bound` at the
+//! requested confidence level.
+
+use super::distributions::{t_critical, z_critical};
+use super::summary::StratumAgg;
+
+/// Which estimator closes the approximation loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Central Limit Theorem over stratified with-replacement samples
+    /// (paper §3.4 I). Duplicates in the sample are kept.
+    Clt,
+    /// Horvitz-Thompson over deduplicated samples (paper §3.4 II). Unbiased
+    /// regardless of with/without replacement.
+    HorvitzThompson,
+}
+
+/// An approximate aggregate with its confidence interval.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxResult {
+    pub estimate: f64,
+    /// Half-width of the two-sided confidence interval.
+    pub error_bound: f64,
+    pub confidence: f64,
+    /// Degrees of freedom used for the t critical value (CLT path).
+    pub degrees_of_freedom: f64,
+    /// Total samples the estimate is based on.
+    pub samples: u64,
+}
+
+impl ApproxResult {
+    /// Relative half-width |bound / estimate| (∞ if the estimate is 0).
+    pub fn relative_error(&self) -> f64 {
+        if self.estimate == 0.0 {
+            if self.error_bound == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (self.error_bound / self.estimate).abs()
+        }
+    }
+}
+
+/// CLT stratified estimate of the population SUM (paper eq 12-14).
+///
+/// τ̂ = Σ_i (B_i / b_i) Σ_j v_ij, with
+/// V̂ar(τ̂) = Σ_i B_i (B_i − b_i) s_i² / b_i and f = Σ b_i − m degrees of
+/// freedom. The finite-population correction is clamped at zero because
+/// with-replacement sampling can draw b_i > B_i on small strata.
+pub fn clt_sum(strata: &[StratumAgg], confidence: f64) -> ApproxResult {
+    let mut tau = 0.0;
+    let mut var = 0.0;
+    let mut total_b = 0.0;
+    let mut m_sampled = 0.0;
+    for s in strata {
+        if s.count <= 0.0 {
+            continue;
+        }
+        m_sampled += 1.0;
+        total_b += s.count;
+        tau += s.population / s.count * s.sum;
+        if s.count > 1.0 {
+            let fpc = (s.population - s.count).max(0.0);
+            var += s.population * fpc * s.variance() / s.count;
+        }
+    }
+    let df = (total_b - m_sampled).max(1.0);
+    let t = t_critical(confidence, df);
+    ApproxResult {
+        estimate: tau,
+        error_bound: t * var.max(0.0).sqrt(),
+        confidence,
+        degrees_of_freedom: df,
+        samples: total_b as u64,
+    }
+}
+
+/// CLT stratified estimate of the population MEAN: τ̂ / Σ B_i with the
+/// error bound scaled accordingly.
+pub fn clt_avg(strata: &[StratumAgg], confidence: f64) -> ApproxResult {
+    let total_pop: f64 = strata.iter().map(|s| s.population).sum();
+    let sum = clt_sum(strata, confidence);
+    if total_pop <= 0.0 {
+        return ApproxResult {
+            estimate: 0.0,
+            error_bound: 0.0,
+            ..sum
+        };
+    }
+    ApproxResult {
+        estimate: sum.estimate / total_pop,
+        error_bound: sum.error_bound / total_pop,
+        ..sum
+    }
+}
+
+/// Exact population COUNT of the join output (the filter stage knows every
+/// B_i, so COUNT carries no sampling error).
+pub fn exact_count(strata: &[StratumAgg], confidence: f64) -> ApproxResult {
+    let total_pop: f64 = strata.iter().map(|s| s.population).sum();
+    ApproxResult {
+        estimate: total_pop,
+        error_bound: 0.0,
+        confidence,
+        degrees_of_freedom: f64::INFINITY,
+        samples: strata.iter().map(|s| s.count as u64).sum(),
+    }
+}
+
+/// Stratified estimate of the population STANDARD DEVIATION. Point estimate
+/// from the pooled within+between decomposition; the bound propagates the
+/// SUM bound through the delta method (conservative).
+pub fn clt_stdev(strata: &[StratumAgg], confidence: f64) -> ApproxResult {
+    let total_pop: f64 = strata.iter().map(|s| s.population).sum();
+    if total_pop <= 1.0 {
+        return ApproxResult {
+            estimate: 0.0,
+            error_bound: 0.0,
+            confidence,
+            degrees_of_freedom: 1.0,
+            samples: 0,
+        };
+    }
+    let avg = clt_avg(strata, confidence);
+    let grand_mean = avg.estimate;
+    // E[X²] estimated stratified: Σ B_i/b_i Σ v² / Σ B_i
+    let mut sumsq_hat = 0.0;
+    let mut total_b = 0.0;
+    for s in strata {
+        if s.count > 0.0 {
+            sumsq_hat += s.population / s.count * s.sumsq;
+            total_b += s.count;
+        }
+    }
+    let ex2 = sumsq_hat / total_pop;
+    let var = (ex2 - grand_mean * grand_mean).max(0.0);
+    let sd = var.sqrt();
+    // delta method: sd(g(X)) ~ |g'| * bound; g = sqrt at var
+    let bound = if sd > 1e-12 {
+        avg.error_bound * grand_mean.abs() / sd + avg.error_bound
+    } else {
+        avg.error_bound
+    };
+    ApproxResult {
+        estimate: sd,
+        error_bound: bound,
+        confidence,
+        degrees_of_freedom: avg.degrees_of_freedom,
+        samples: total_b as u64,
+    }
+}
+
+/// Per-stratum inclusion probability of a *distinct* edge under b_i
+/// with-replacement draws from a stratum of B_i edges:
+/// π_i = 1 − (1 − 1/B_i)^{b_i}.
+pub fn inclusion_probability(population: f64, draws: f64) -> f64 {
+    if population <= 0.0 || draws <= 0.0 {
+        return 0.0;
+    }
+    if population <= 1.0 {
+        return 1.0;
+    }
+    1.0 - (1.0 - 1.0 / population).powf(draws)
+}
+
+/// Horvitz-Thompson estimate of the population SUM (paper eq 15-17).
+///
+/// Strata are sampled independently, so the joint inclusion probability
+/// factorizes (π_ij = π_i π_j) and the cross term of eq 17 vanishes; the
+/// variance reduces to Σ_i (1−π_i)/π_i² · y_i², with y_i the *deduplicated*
+/// sample sum of stratum i scaled to a per-stratum total estimate.
+///
+/// `strata` must hold deduplicated aggregates (each distinct sampled edge
+/// counted once); `draws[i]` is the number of raw draws b_i that produced
+/// them (needed for π_i).
+pub fn horvitz_thompson_sum(
+    strata: &[StratumAgg],
+    draws: &[f64],
+    confidence: f64,
+) -> ApproxResult {
+    assert_eq!(strata.len(), draws.len());
+    let mut tau = 0.0;
+    let mut var = 0.0;
+    let mut n_strata = 0.0;
+    let mut samples = 0.0;
+    for (s, &b) in strata.iter().zip(draws) {
+        if s.count <= 0.0 {
+            continue;
+        }
+        n_strata += 1.0;
+        samples += s.count;
+        // Each distinct edge within the stratum has inclusion prob π_edge;
+        // y_i/π_edge estimates the stratum total.
+        let pi = inclusion_probability(s.population, b);
+        if pi <= 0.0 {
+            continue;
+        }
+        tau += s.sum / pi;
+        var += (1.0 - pi) / (pi * pi) * s.sumsq;
+    }
+    let df = (samples - n_strata).max(1.0);
+    let t = t_critical(confidence, df);
+    ApproxResult {
+        estimate: tau,
+        error_bound: t * var.max(0.0).sqrt(),
+        confidence,
+        degrees_of_freedom: df,
+        samples: samples as u64,
+    }
+}
+
+/// Required sample size for a target error bound (paper eq 10):
+/// b_i = (z_{α/2} σ_i / err)². Returns at least 1.
+pub fn sample_size_for_error(sigma: f64, err_desired: f64, confidence: f64) -> u64 {
+    if err_desired <= 0.0 {
+        return u64::MAX;
+    }
+    let z = z_critical(confidence);
+    let b = (z * sigma / err_desired).powi(2);
+    b.ceil().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn make_strata(r: &mut Rng, m: usize) -> (Vec<StratumAgg>, f64) {
+        // ground-truth population: stratum i has B_i values ~ N(mu_i, sd_i)
+        let mut strata = Vec::new();
+        let mut true_total = 0.0;
+        for _ in 0..m {
+            let pop = 50 + r.index(200);
+            let mu = r.range_f64(-10.0, 10.0);
+            let sd = r.range_f64(0.5, 3.0);
+            let values: Vec<f64> = (0..pop).map(|_| mu + sd * r.normal()).collect();
+            true_total += values.iter().sum::<f64>();
+            // sample 30% with replacement
+            let b = (pop as f64 * 0.3).ceil() as usize;
+            let mut agg = StratumAgg {
+                population: pop as f64,
+                ..Default::default()
+            };
+            for _ in 0..b {
+                agg.push(values[r.index(pop)]);
+            }
+            strata.push(agg);
+        }
+        (strata, true_total)
+    }
+
+    #[test]
+    fn clt_sum_unbiased_and_covered() {
+        // Across repetitions the true total should fall inside the 95% CI
+        // roughly 95% of the time; assert >= 80% to keep the test stable.
+        let mut r = Rng::new(42);
+        let mut covered = 0;
+        let reps = 50;
+        for _ in 0..reps {
+            let (strata, truth) = make_strata(&mut r, 20);
+            let res = clt_sum(&strata, 0.95);
+            if (res.estimate - truth).abs() <= res.error_bound {
+                covered += 1;
+            }
+        }
+        assert!(covered >= (reps * 8) / 10, "coverage {covered}/{reps}");
+    }
+
+    #[test]
+    fn clt_full_sample_has_zero_variance() {
+        // b_i == B_i with distinct values -> fpc = 0 -> bound 0... only exact
+        // when the sample IS the population; emulate by sampling every item.
+        let mut agg = StratumAgg {
+            population: 4.0,
+            ..Default::default()
+        };
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            agg.push(v);
+        }
+        let res = clt_sum(&[agg], 0.95);
+        assert!((res.estimate - 10.0).abs() < 1e-9);
+        assert_eq!(res.error_bound, 0.0);
+    }
+
+    #[test]
+    fn clt_skips_empty_strata() {
+        let empty = StratumAgg {
+            population: 100.0,
+            ..Default::default()
+        };
+        let mut one = StratumAgg {
+            population: 10.0,
+            ..Default::default()
+        };
+        one.push(5.0);
+        let res = clt_sum(&[empty, one], 0.95);
+        assert!((res.estimate - 50.0).abs() < 1e-9);
+        assert_eq!(res.samples, 1);
+    }
+
+    #[test]
+    fn clt_avg_scales_sum() {
+        let mut a = StratumAgg {
+            population: 10.0,
+            ..Default::default()
+        };
+        for v in [2.0, 4.0, 6.0] {
+            a.push(v);
+        }
+        let s = clt_sum(&[a], 0.95);
+        let m = clt_avg(&[a], 0.95);
+        assert!((m.estimate - s.estimate / 10.0).abs() < 1e-12);
+        assert!((m.error_bound - s.error_bound / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_count_is_exact() {
+        let a = StratumAgg {
+            population: 123.0,
+            ..Default::default()
+        };
+        let b = StratumAgg {
+            population: 7.0,
+            ..Default::default()
+        };
+        let res = exact_count(&[a, b], 0.95);
+        assert_eq!(res.estimate, 130.0);
+        assert_eq!(res.error_bound, 0.0);
+    }
+
+    #[test]
+    fn stdev_estimates_population_sd() {
+        let mut r = Rng::new(77);
+        // one big stratum, values N(5, 2); sample 40%
+        let pop = 5000;
+        let values: Vec<f64> = (0..pop).map(|_| 5.0 + 2.0 * r.normal()).collect();
+        let mut agg = StratumAgg {
+            population: pop as f64,
+            ..Default::default()
+        };
+        for _ in 0..2000 {
+            agg.push(values[r.index(pop)]);
+        }
+        let res = clt_stdev(&[agg], 0.95);
+        assert!((res.estimate - 2.0).abs() < 0.15, "sd={}", res.estimate);
+    }
+
+    #[test]
+    fn inclusion_probability_properties() {
+        assert_eq!(inclusion_probability(0.0, 10.0), 0.0);
+        assert_eq!(inclusion_probability(1.0, 3.0), 1.0);
+        let p1 = inclusion_probability(100.0, 10.0);
+        let p2 = inclusion_probability(100.0, 50.0);
+        assert!(p1 > 0.0 && p1 < 1.0);
+        assert!(p2 > p1, "more draws -> higher inclusion");
+        // b=1 -> exactly 1/B
+        assert!((inclusion_probability(100.0, 1.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn horvitz_thompson_unbiased() {
+        // Average of HT estimates over many runs approaches the true total.
+        let mut r = Rng::new(99);
+        let pop = 200usize;
+        let values: Vec<f64> = (0..pop).map(|_| r.range_f64(1.0, 9.0)).collect();
+        let truth: f64 = values.iter().sum();
+        let draws = 80.0;
+        let reps = 400;
+        let mut mean_est = 0.0;
+        for _ in 0..reps {
+            // with-replacement draws, dedup
+            let mut seen = std::collections::HashSet::new();
+            let mut agg = StratumAgg {
+                population: pop as f64,
+                ..Default::default()
+            };
+            for _ in 0..draws as usize {
+                let j = r.index(pop);
+                if seen.insert(j) {
+                    agg.push(values[j]);
+                }
+            }
+            let res = horvitz_thompson_sum(&[agg], &[draws], 0.95);
+            mean_est += res.estimate;
+        }
+        mean_est /= reps as f64;
+        assert!(
+            (mean_est - truth).abs() / truth < 0.02,
+            "mean {mean_est} vs truth {truth}"
+        );
+    }
+
+    #[test]
+    fn sample_size_for_error_matches_eq10() {
+        // paper: b_i = 3.84 (σ/err)² at 95%
+        let b = sample_size_for_error(2.0, 0.5, 0.95);
+        let expected = (1.959964_f64 * 2.0 / 0.5).powi(2).ceil() as u64;
+        assert_eq!(b, expected);
+        assert!(b >= 61 && b <= 62, "b={b}");
+        assert_eq!(sample_size_for_error(1.0, 0.0, 0.95), u64::MAX);
+        assert_eq!(sample_size_for_error(0.0, 1.0, 0.95), 1);
+    }
+
+    #[test]
+    fn relative_error() {
+        let res = ApproxResult {
+            estimate: 200.0,
+            error_bound: 10.0,
+            confidence: 0.95,
+            degrees_of_freedom: 10.0,
+            samples: 10,
+        };
+        assert!((res.relative_error() - 0.05).abs() < 1e-12);
+    }
+}

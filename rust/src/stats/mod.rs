@@ -1,0 +1,12 @@
+//! Statistics substrate: distributions (normal / Student-t quantiles),
+//! running summaries, and the paper's two error estimators (§3.4).
+
+pub mod distributions;
+pub mod estimators;
+pub mod summary;
+
+pub use distributions::{normal_quantile, t_critical, z_critical};
+pub use estimators::{
+    clt_avg, clt_stdev, clt_sum, exact_count, horvitz_thompson_sum, ApproxResult, EstimatorKind,
+};
+pub use summary::{StratumAgg, Welford};

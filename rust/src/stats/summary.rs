@@ -1,0 +1,230 @@
+//! Running summary statistics (Welford) and per-stratum aggregates — the
+//! bookkeeping the sampling stage hands to the estimators (§3.4) and the
+//! feedback mechanism stores between runs (§3.2 II).
+
+/// Numerically stable running mean/variance (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance (ddof=1); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Population variance (ddof=0); 0 for n == 0.
+    pub fn variance_population(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+
+    /// Merge another accumulator (Chan's parallel update) — used when
+    /// workers return partial summaries to the master (Alg 2 lines 6-8).
+    pub fn merge(&mut self, o: &Welford) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = (self.n + o.n) as f64;
+        let d = o.mean - self.mean;
+        self.mean += d * o.n as f64 / n;
+        self.m2 += o.m2 + d * d * (self.n as f64) * (o.n as f64) / n;
+        self.n += o.n;
+    }
+}
+
+/// Per-stratum sample aggregates in the exact shape the AOT `join_agg`
+/// artifact produces: (count, sum, sum of squares), plus the stratum's
+/// population size B_i (total bipartite edges for that join key).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StratumAgg {
+    /// B_i: number of edges in the complete bipartite graph for this key.
+    pub population: f64,
+    /// b_i: samples drawn.
+    pub count: f64,
+    /// Σ v of sampled combined values.
+    pub sum: f64,
+    /// Σ v² of sampled combined values.
+    pub sumsq: f64,
+}
+
+impl StratumAgg {
+    pub fn push(&mut self, v: f64) {
+        self.count += 1.0;
+        self.sum += v;
+        self.sumsq += v * v;
+    }
+
+    pub fn merge(&mut self, o: &StratumAgg) {
+        debug_assert!(
+            self.population == 0.0 || o.population == 0.0 || self.population == o.population,
+            "merging aggregates of different strata"
+        );
+        self.population = self.population.max(o.population);
+        self.count += o.count;
+        self.sum += o.sum;
+        self.sumsq += o.sumsq;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0.0 {
+            self.sum / self.count
+        } else {
+            0.0
+        }
+    }
+
+    /// Unbiased sample variance from the moment form, clamped at 0 against
+    /// catastrophic cancellation.
+    pub fn variance(&self) -> f64 {
+        if self.count < 2.0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sumsq - self.count * m * m) / (self.count - 1.0)).max(0.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance_population() - 4.0).abs() < 1e-12);
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert!((w.sum() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal() * 3.0 + 1.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..300] {
+            a.push(x);
+        }
+        for &x in &xs[300..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn welford_merge_empty_identity() {
+        let mut a = Welford::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = (a.mean(), a.variance(), a.count());
+        a.merge(&Welford::new());
+        assert_eq!(before, (a.mean(), a.variance(), a.count()));
+
+        let mut e = Welford::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+        assert!((e.mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stratum_agg_matches_welford() {
+        let mut r = Rng::new(6);
+        let mut agg = StratumAgg::default();
+        let mut w = Welford::new();
+        for _ in 0..500 {
+            let v = r.normal() * 2.0 + 10.0;
+            agg.push(v);
+            w.push(v);
+        }
+        assert!((agg.mean() - w.mean()).abs() < 1e-9);
+        assert!((agg.variance() - w.variance()).abs() / w.variance() < 1e-6);
+    }
+
+    #[test]
+    fn stratum_agg_merge() {
+        let mut a = StratumAgg {
+            population: 100.0,
+            ..Default::default()
+        };
+        let mut b = StratumAgg {
+            population: 100.0,
+            ..Default::default()
+        };
+        a.push(1.0);
+        a.push(2.0);
+        b.push(3.0);
+        a.merge(&b);
+        assert_eq!(a.count, 3.0);
+        assert_eq!(a.sum, 6.0);
+        assert_eq!(a.sumsq, 14.0);
+    }
+
+    #[test]
+    fn variance_clamps_cancellation() {
+        // huge mean + tiny variance: moment form would cancel; must stay >= 0
+        let mut agg = StratumAgg::default();
+        for _ in 0..10 {
+            agg.push(1e9);
+        }
+        assert!(agg.variance() >= 0.0);
+    }
+}

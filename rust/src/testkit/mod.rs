@@ -1,0 +1,148 @@
+//! Minimal property-testing harness (the offline registry has no proptest;
+//! hypothesis covers the Python side). Runs a check over many seeded cases
+//! and, on failure, reports the case seed so the exact input reproduces
+//! with `check_one`.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xA55,
+        }
+    }
+}
+
+/// Run `property` over `cfg.cases` independent cases. Each case gets its
+/// own deterministic RNG; a panic inside the property is re-raised with
+/// the case seed attached.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cfg: PropConfig, mut property: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (reproduce with \
+                 check_one(\"{name}\", {case_seed:#x}, ..)):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn check_one<F: FnOnce(&mut Rng)>(_name: &str, case_seed: u64, property: F) {
+    let mut rng = Rng::new(case_seed);
+    property(&mut rng);
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::data::{Dataset, Record};
+    use crate::util::Rng;
+
+    /// A random dataset: `keys` distinct keys, up to `max_per_key` copies,
+    /// values uniform in [-10, 10).
+    pub fn dataset(r: &mut Rng, name: &str, keys: u64, max_per_key: u64, parts: usize) -> Dataset {
+        let mut recs = Vec::new();
+        for key in 0..keys {
+            let copies = 1 + r.below(max_per_key.max(1));
+            for _ in 0..copies {
+                recs.push(Record::new(key, r.range_f64(-10.0, 10.0)));
+            }
+        }
+        Dataset::from_records_unpartitioned(name, recs, parts, 64)
+    }
+
+    /// n random datasets over overlapping key ranges (some keys common to
+    /// all, some private per input).
+    pub fn join_inputs(r: &mut Rng, n: usize, parts: usize) -> Vec<Dataset> {
+        let common = 1 + r.below(20);
+        (0..n)
+            .map(|i| {
+                let mut d = dataset(r, &format!("in{i}"), common, 6, parts);
+                // private tail pool
+                let private = r.below(30);
+                let mut extra = Vec::new();
+                for p in 0..private {
+                    extra.push(Record::new(
+                        (1 << 50) | ((i as u64) << 40) | p,
+                        r.range_f64(-10.0, 10.0),
+                    ));
+                }
+                for (j, rec) in extra.into_iter().enumerate() {
+                    d.partitions[j % parts].push(rec);
+                }
+                d
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", PropConfig { cases: 10, seed: 1 }, |_r| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_case_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("fails", PropConfig { cases: 5, seed: 2 }, |r| {
+                assert!(r.f64() < 2.0); // always true
+                panic!("boom {}", r.below(10));
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("case 0"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", PropConfig { cases: 4, seed: 3 }, |r| {
+            first.push(r.next_u64());
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det", PropConfig { cases: 4, seed: 3 }, |r| {
+            second.push(r.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_produce_joinable_inputs() {
+        let mut r = crate::util::Rng::new(5);
+        let inputs = gen::join_inputs(&mut r, 3, 4);
+        assert_eq!(inputs.len(), 3);
+        let f = crate::data::overlap_fraction(&inputs);
+        assert!(f > 0.0, "inputs must share keys");
+    }
+}

@@ -1,0 +1,93 @@
+//! Human-readable formatting for bytes, durations, counts and rates.
+
+/// `1536 -> "1.50 KiB"`, `0 -> "0 B"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Seconds with adaptive precision: `0.000012 -> "12.0µs"`, `95.3 -> "1m35.3s"`.
+pub fn duration(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", duration(-secs));
+    }
+    if secs < 1e-3 {
+        format!("{:.1}\u{b5}s", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        let m = (secs / 60.0).floor();
+        format!("{m:.0}m{:.1}s", secs - m * 60.0)
+    }
+}
+
+/// `1234567 -> "1.23M"`.
+pub fn count(n: u64) -> String {
+    if n < 1_000 {
+        format!("{n}")
+    } else if n < 1_000_000 {
+        format!("{:.2}K", n as f64 / 1e3)
+    } else if n < 1_000_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else {
+        format!("{:.2}G", n as f64 / 1e9)
+    }
+}
+
+/// Ratio as `"6.3x"`.
+pub fn speedup(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+/// Percentage with two decimals.
+pub fn pct(p: f64) -> String {
+    format!("{:.2}%", p * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.50 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(0.000012), "12.0\u{b5}s");
+        assert_eq!(duration(0.25), "250.00ms");
+        assert_eq!(duration(42.0), "42.00s");
+        assert_eq!(duration(95.3 + 60.0), "2m35.3s");
+        assert!(duration(-1.5).starts_with('-'));
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1_234), "1.23K");
+        assert_eq!(count(1_234_567), "1.23M");
+        assert_eq!(count(2_500_000_000), "2.50G");
+    }
+
+    #[test]
+    fn ratios() {
+        assert_eq!(speedup(6.28), "6.28x");
+        assert_eq!(pct(0.0123), "1.23%");
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic PRNG + distributions,
+//! human formatting, a tiny JSON codec and an ASCII table printer.
+//! (The offline build has no rand/serde_json; these replace them.)
+
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,265 @@
+//! End-to-end integration: the engine over the query language, on all four
+//! workload families, with the XLA runtime when artifacts are present.
+
+use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig, ExecutionMode};
+use approxjoin::data::{generate_overlapping, netflix, network, tpch, SyntheticSpec};
+use approxjoin::query::parse;
+use approxjoin::stats::EstimatorKind;
+use std::collections::HashMap;
+
+fn engine(workers: usize) -> ApproxJoinEngine {
+    // uses artifacts when built (default_artifacts_dir), else pure Rust
+    ApproxJoinEngine::new(EngineConfig {
+        workers,
+        ..Default::default()
+    })
+    .expect("engine")
+}
+
+#[test]
+fn synthetic_budgeted_query_round_trip() {
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 20_000,
+        overlap_fraction: 0.1,
+        lambda: 50.0,
+        partitions: 8,
+        seed: 1,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("a".to_string(), inputs[0].clone());
+    named.insert("b".to_string(), inputs[1].clone());
+
+    let mut e = engine(4);
+    let exact = e
+        .execute(
+            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap(),
+            &named,
+        )
+        .unwrap();
+    assert_eq!(exact.mode, ExecutionMode::Exact);
+
+    let approx = e
+        .execute(
+            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 0.02 SECONDS")
+                .unwrap(),
+            &named,
+        )
+        .unwrap();
+    if let ExecutionMode::Sampled { fraction } = approx.mode {
+        assert!(fraction < 1.0);
+        let rel = (approx.result.estimate - exact.result.estimate).abs()
+            / exact.result.estimate.abs();
+        assert!(rel < 0.1, "rel {rel}");
+        // sampled run crossed fewer pairs
+        let exact_pairs = exact.metrics.stage("crossproduct").unwrap().items;
+        let approx_pairs = approx.metrics.stage("sample").unwrap().items;
+        assert!(approx_pairs < exact_pairs, "{approx_pairs} vs {exact_pairs}");
+    } else {
+        panic!("expected a sampled plan, got {:?}", approx.mode);
+    }
+}
+
+#[test]
+fn three_way_query_on_network_traces() {
+    let flows = network::generate(&network::NetworkSpec {
+        tcp_flows: 20_000,
+        udp_flows: 12_000,
+        icmp_flows: 2_000,
+        common_flows: 400,
+        hosts: 5_000,
+        partitions: 8,
+        seed: 3,
+    });
+    let mut named = HashMap::new();
+    for d in &flows {
+        named.insert(d.name.clone(), d.clone());
+    }
+    let q = parse(
+        "SELECT SUM(tcp.size + udp.size + icmp.size) FROM tcp, udp, icmp \
+         WHERE tcp.flow = udp.flow = icmp.flow",
+    )
+    .unwrap();
+    let mut e = engine(4);
+    let out = e.execute(&q, &named).unwrap();
+    assert_eq!(out.mode, ExecutionMode::Exact);
+    assert!(out.result.estimate > 0.0);
+    assert!(out.output_cardinality > 0.0);
+}
+
+#[test]
+fn netflix_join_runs_sampled() {
+    let ds = netflix::generate(&netflix::NetflixSpec {
+        training_ratings: 50_000,
+        qualifying_probes: 3_000,
+        partitions: 8,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("training".to_string(), ds[0].clone());
+    named.insert("qualifying".to_string(), ds[1].clone());
+    let q = parse(
+        "SELECT AVG(training.rating) FROM training, qualifying \
+         WHERE training.movie = qualifying.movie WITHIN 0.01 SECONDS",
+    )
+    .unwrap();
+    let mut e = engine(4);
+    let out = e.execute(&q, &named).unwrap();
+    // mean rating must land in the 1..5 star range regardless of plan
+    assert!(
+        (1.0..=5.0).contains(&out.result.estimate),
+        "estimate {}",
+        out.result.estimate
+    );
+}
+
+#[test]
+fn tpch_customer_orders_query() {
+    let db = tpch::generate(0.002, 11);
+    let mut named = HashMap::new();
+    named.insert("customer".to_string(), db.customer_by_custkey(8));
+    named.insert("orders".to_string(), db.orders_by_custkey(8));
+    // §5.5: total money customers had before ordering
+    let q = parse(
+        "SELECT SUM(customer.acctbal + orders.totalprice) FROM customer, orders \
+         WHERE customer.custkey = orders.custkey",
+    )
+    .unwrap();
+    let mut e = engine(4);
+    let exact = e.execute(&q, &named).unwrap();
+    assert!(exact.result.estimate > 0.0);
+    // every order joins exactly one customer -> cardinality == |orders|
+    assert_eq!(exact.output_cardinality, db.orders.len() as f64);
+}
+
+#[test]
+fn ht_estimator_engine_path() {
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 10_000,
+        overlap_fraction: 0.15,
+        lambda: 30.0,
+        partitions: 8,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("a".to_string(), inputs[0].clone());
+    named.insert("b".to_string(), inputs[1].clone());
+    let mut e = ApproxJoinEngine::new(EngineConfig {
+        workers: 4,
+        estimator: EstimatorKind::HorvitzThompson,
+        ..Default::default()
+    })
+    .unwrap();
+    let exact = e
+        .execute(
+            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap(),
+            &named,
+        )
+        .unwrap();
+    let approx = e
+        .execute(
+            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 0.05 SECONDS")
+                .unwrap(),
+            &named,
+        )
+        .unwrap();
+    let rel =
+        (approx.result.estimate - exact.result.estimate).abs() / exact.result.estimate.abs();
+    assert!(rel < 0.15, "rel {rel}");
+}
+
+#[test]
+fn feedback_improves_error_budget_runs() {
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 10_000,
+        overlap_fraction: 0.1,
+        lambda: 40.0,
+        partitions: 8,
+        seed: 6,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("a".to_string(), inputs[0].clone());
+    named.insert("b".to_string(), inputs[1].clone());
+    let q = parse("SELECT AVG(a.v + b.v) FROM a, b WHERE a.k = b.k ERROR 1.0 CONFIDENCE 95%")
+        .unwrap();
+    let mut e = engine(4);
+    let _first = e.execute(&q, &named).unwrap();
+    assert!(e.feedback.has(&q.fingerprint()));
+    let second = e.execute(&q, &named).unwrap();
+    // with stored sigmas, eq 10 picks b_i targeting the requested bound;
+    // the realized bound should be in that ballpark (per-stratum bounds
+    // compose, so allow slack)
+    assert!(
+        second.result.error_bound < 10.0,
+        "bound {}",
+        second.result.error_bound
+    );
+}
+
+#[test]
+fn xla_and_native_engines_agree_when_artifacts_present() {
+    if approxjoin::coordinator::config::default_artifacts_dir().is_none() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 8_000,
+        overlap_fraction: 0.2,
+        lambda: 40.0,
+        partitions: 8,
+        seed: 8,
+        ..Default::default()
+    });
+    let mut named = HashMap::new();
+    named.insert("a".to_string(), inputs[0].clone());
+    named.insert("b".to_string(), inputs[1].clone());
+    // fix the sampling fraction so both paths draw the identical sample
+    // stream (the engine's latency plan depends on measured wall time and
+    // would legitimately pick different fractions per run)
+    use approxjoin::cluster::{SimCluster, TimeModel};
+    use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
+    use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
+    use approxjoin::join::CombineOp;
+    use approxjoin::stats::clt_sum;
+
+    let rt = approxjoin::runtime::PjrtRuntime::open(
+        approxjoin::coordinator::config::default_artifacts_dir().unwrap(),
+    )
+    .unwrap();
+    let mut xla_agg = rt.join_agg().unwrap();
+    let mut cluster = || SimCluster::new(4, TimeModel::default());
+    let cfg = ApproxConfig {
+        params: SamplingParams::Fraction(0.1),
+        estimator: approxjoin::stats::EstimatorKind::Clt,
+        seed: 99,
+    };
+    let fc = FilterConfig::for_inputs(&inputs, 0.01);
+    let a = approx_join(
+        &mut cluster(),
+        &inputs,
+        CombineOp::Sum,
+        fc,
+        &cfg,
+        &mut NativeProber,
+        &mut xla_agg,
+    )
+    .unwrap();
+    let b = approx_join(
+        &mut cluster(),
+        &inputs,
+        CombineOp::Sum,
+        fc,
+        &cfg,
+        &mut NativeProber,
+        &mut NativeAggregator::default(),
+    )
+    .unwrap();
+    let ea = clt_sum(&a.strata_vec(), 0.95).estimate;
+    let eb = clt_sum(&b.strata_vec(), 0.95).estimate;
+    // identical sample stream; f32 aggregation drift only
+    let rel = (ea - eb).abs() / eb.abs();
+    assert!(rel < 1e-3, "xla {ea} vs native {eb}");
+    let _ = named;
+}

@@ -1,0 +1,211 @@
+//! Property tests on the approximation pipeline: estimates converge to the
+//! exact answer, confidence intervals cover it at roughly their nominal
+//! rate, and the batching machinery is geometry-invariant.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
+use approxjoin::join::native::native_join;
+use approxjoin::join::CombineOp;
+use approxjoin::stats::{clt_sum, EstimatorKind};
+use approxjoin::testkit::{check, gen, PropConfig};
+
+fn cluster() -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+}
+
+#[test]
+fn full_fraction_sampling_with_dedup_recovers_exact() {
+    // HT path with fraction >= 1 collects every distinct edge -> exact sum
+    check(
+        "dedup_full_recovers",
+        PropConfig {
+            cases: 20,
+            ..Default::default()
+        },
+        |r| {
+            let inputs = gen::join_inputs(r, 2, 4);
+            let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+                .unwrap()
+                .exact_sum();
+            let cfg = ApproxConfig {
+                params: SamplingParams::Fraction(1.0),
+                estimator: EstimatorKind::HorvitzThompson,
+                seed: r.next_u64(),
+            };
+            let run = approx_join(
+                &mut cluster(),
+                &inputs,
+                CombineOp::Sum,
+                FilterConfig::for_inputs(&inputs, 0.01),
+                &cfg,
+                &mut NativeProber,
+                &mut NativeAggregator::default(),
+            )
+            .unwrap();
+            // dedup sampling at fraction 1 collects (nearly) all edges; the
+            // attempt cap can leave a tail stratum short, so allow 2%
+            let got: f64 = run.strata.values().map(|s| s.sum).sum();
+            assert!(
+                (got - exact).abs() <= 0.02 * (1.0 + exact.abs()),
+                "{got} vs {exact}"
+            );
+        },
+    );
+}
+
+#[test]
+fn clt_interval_covers_truth_at_nominal_rate() {
+    // 95% CIs should cover the exact sum ~95% of the time; assert >= 75%
+    // over 40 runs to keep flakiness negligible while still catching
+    // broken variance math (which collapses coverage to ~0-30%).
+    let mut covered = 0;
+    let reps = 40;
+    let mut seed_rng = approxjoin::util::Rng::new(777);
+    for _ in 0..reps {
+        let mut r = approxjoin::util::Rng::new(seed_rng.next_u64());
+        let inputs = gen::join_inputs(&mut r, 2, 4);
+        let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+            .unwrap()
+            .exact_sum();
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(0.4),
+            estimator: EstimatorKind::Clt,
+            seed: r.next_u64(),
+        };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let res = clt_sum(&run.strata_vec(), 0.95);
+        if (res.estimate - exact).abs() <= res.error_bound {
+            covered += 1;
+        }
+    }
+    assert!(covered >= 30, "coverage {covered}/{reps}");
+}
+
+#[test]
+fn error_shrinks_with_sampling_fraction() {
+    // more samples -> tighter bound and (stochastically) smaller error;
+    // assert on the bound, which is deterministic given the fraction
+    let mut r = approxjoin::util::Rng::new(4242);
+    let inputs = gen::join_inputs(&mut r, 2, 4);
+    let mut last_bound = f64::INFINITY;
+    for fraction in [0.05, 0.2, 0.8] {
+        let cfg = ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            estimator: EstimatorKind::Clt,
+            seed: 9,
+        };
+        let run = approx_join(
+            &mut cluster(),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &cfg,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+        .unwrap();
+        let res = clt_sum(&run.strata_vec(), 0.95);
+        assert!(
+            res.error_bound <= last_bound * 1.5,
+            "bound grew: {} -> {} at fraction {fraction}",
+            last_bound,
+            res.error_bound
+        );
+        last_bound = res.error_bound;
+    }
+}
+
+#[test]
+fn batching_geometry_invariance() {
+    // the batch packer must produce identical estimates whatever the
+    // (rows, slots) geometry, given the same RNG seed
+    check(
+        "batch_geometry",
+        PropConfig {
+            cases: 16,
+            ..Default::default()
+        },
+        |r| {
+            let inputs = gen::join_inputs(r, 2, 4);
+            let seed = r.next_u64();
+            let mut results = Vec::new();
+            for (rows, slots) in [(4096, 256), (64, 8), (16, 2)] {
+                let cfg = ApproxConfig {
+                    params: SamplingParams::Fraction(0.3),
+                    estimator: EstimatorKind::Clt,
+                    seed,
+                };
+                let mut agg = NativeAggregator { rows, slots };
+                let run = approx_join(
+                    &mut cluster(),
+                    &inputs,
+                    CombineOp::Sum,
+                    FilterConfig::for_inputs(&inputs, 0.01),
+                    &cfg,
+                    &mut NativeProber,
+                    &mut agg,
+                )
+                .unwrap();
+                results.push(clt_sum(&run.strata_vec(), 0.95).estimate);
+            }
+            assert!(
+                (results[0] - results[1]).abs() < 1e-6 * (1.0 + results[0].abs()),
+                "{results:?}"
+            );
+            assert!(
+                (results[0] - results[2]).abs() < 1e-6 * (1.0 + results[0].abs()),
+                "{results:?}"
+            );
+        },
+    );
+}
+
+#[test]
+fn count_aggregation_is_exact_under_sampling() {
+    check(
+        "count_exact",
+        PropConfig {
+            cases: 16,
+            ..Default::default()
+        },
+        |r| {
+            let inputs = gen::join_inputs(r, 2, 4);
+            let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
+                .unwrap()
+                .output_cardinality();
+            let cfg = ApproxConfig {
+                params: SamplingParams::Fraction(0.1),
+                estimator: EstimatorKind::Clt,
+                seed: 1,
+            };
+            let run = approx_join(
+                &mut cluster(),
+                &inputs,
+                CombineOp::Sum,
+                FilterConfig::for_inputs(&inputs, 0.01),
+                &cfg,
+                &mut NativeProber,
+                &mut NativeAggregator::default(),
+            )
+            .unwrap();
+            assert_eq!(run.output_cardinality(), exact);
+        },
+    );
+}

@@ -1,0 +1,154 @@
+//! Property tests: all exact join strategies compute the same join, on
+//! arbitrary inputs — the core correctness invariant of the coordinator.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
+use approxjoin::join::broadcast::broadcast_join;
+use approxjoin::join::native::native_join;
+use approxjoin::join::repartition::repartition_join;
+use approxjoin::join::CombineOp;
+use approxjoin::testkit::{check, gen, PropConfig};
+
+fn cluster(k: usize) -> SimCluster {
+    SimCluster::new(
+        k,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+}
+
+#[test]
+fn all_exact_strategies_agree_two_way() {
+    check("exact_agree_2way", PropConfig::default(), |r| {
+        let k = 1 + r.index(6);
+        let inputs = gen::join_inputs(r, 2, k.max(2));
+        let op = [CombineOp::Sum, CombineOp::Product][r.index(2)];
+        let nat = native_join(&mut cluster(k), &inputs, op, u64::MAX).unwrap();
+        let rep = repartition_join(&mut cluster(k), &inputs, op);
+        let bc = broadcast_join(&mut cluster(k), &inputs, op);
+        let bj = bloom_join(
+            &mut cluster(k),
+            &inputs,
+            op,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let base = nat.exact_sum();
+        let tol = 1e-6 * (1.0 + base.abs());
+        assert!((rep.exact_sum() - base).abs() < tol, "repartition");
+        assert!((bc.exact_sum() - base).abs() < tol, "broadcast");
+        assert!((bj.exact_sum() - base).abs() < tol, "bloom");
+        assert_eq!(rep.output_cardinality(), nat.output_cardinality());
+        assert_eq!(bc.output_cardinality(), nat.output_cardinality());
+        assert_eq!(bj.output_cardinality(), nat.output_cardinality());
+    });
+}
+
+#[test]
+fn all_exact_strategies_agree_multiway() {
+    check(
+        "exact_agree_nway",
+        PropConfig {
+            cases: 24,
+            ..Default::default()
+        },
+        |r| {
+            let n = 3 + r.index(2); // 3- or 4-way
+            let inputs = gen::join_inputs(r, n, 4);
+            let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
+            let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
+            let bj = bloom_join(
+                &mut cluster(4),
+                &inputs,
+                CombineOp::Sum,
+                FilterConfig::for_inputs(&inputs, 0.01),
+                &mut NativeProber,
+            )
+            .unwrap();
+            let base = nat.exact_sum();
+            let tol = 1e-6 * (1.0 + base.abs());
+            assert!((rep.exact_sum() - base).abs() < tol);
+            assert!((bj.exact_sum() - base).abs() < tol);
+        },
+    );
+}
+
+#[test]
+fn bloom_join_never_loses_output_pairs() {
+    // Bloom filters have false positives but no false negatives: the bloom
+    // join's output cardinality must EQUAL the true join's, always.
+    check("bloom_no_fn", PropConfig::default(), |r| {
+        let inputs = gen::join_inputs(r, 2, 4);
+        let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
+        let bj = bloom_join(
+            &mut cluster(4),
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig {
+                log2_bits: 8, // deliberately tiny: many false positives
+                num_hashes: 2,
+            },
+            &mut NativeProber,
+        )
+        .unwrap();
+        assert_eq!(bj.output_cardinality(), nat.output_cardinality());
+        assert!(
+            (bj.exact_sum() - nat.exact_sum()).abs() < 1e-6 * (1.0 + nat.exact_sum().abs())
+        );
+    });
+}
+
+#[test]
+fn bloom_join_shuffles_at_most_repartition_records() {
+    // The filtered record shuffle can never exceed the full shuffle
+    // (filters themselves are extra, so compare the record stages).
+    check("bloom_shuffle_bound", PropConfig::default(), |r| {
+        let inputs = gen::join_inputs(r, 2, 4);
+        let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
+        let mut c = cluster(4);
+        let bj = bloom_join(
+            &mut c,
+            &inputs,
+            CombineOp::Sum,
+            FilterConfig::for_inputs(&inputs, 0.01),
+            &mut NativeProber,
+        )
+        .unwrap();
+        let rep_records = rep.metrics.stage("shuffle").map(|s| s.shuffled_bytes).unwrap_or(0);
+        let bj_records = bj
+            .metrics
+            .stage("filter_shuffle")
+            .map(|s| s.shuffled_bytes)
+            .unwrap_or(0);
+        assert!(
+            bj_records <= rep_records,
+            "filtered {bj_records} > full {rep_records}"
+        );
+    });
+}
+
+#[test]
+fn strategies_agree_on_generated_workloads() {
+    // the synthetic generator with its overlap knob, not the testkit gen
+    use approxjoin::data::{generate_overlapping, SyntheticSpec};
+    for overlap in [0.0, 0.02, 0.3] {
+        let inputs = generate_overlapping(&SyntheticSpec {
+            items_per_input: 3_000,
+            overlap_fraction: overlap,
+            lambda: 20.0,
+            partitions: 4,
+            seed: 9,
+            ..Default::default()
+        });
+        let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
+        let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
+        assert!(
+            (rep.exact_sum() - nat.exact_sum()).abs() < 1e-6 * (1.0 + nat.exact_sum().abs()),
+            "overlap {overlap}"
+        );
+    }
+}
