@@ -1,30 +1,32 @@
 //! Multi-way joins (paper §3.1 / Fig 9): one-pass n-way Bloom filtering vs
-//! chained binary joins.
+//! chained binary joins, through the [`JoinStrategy`] trait.
 //!
 //!   cargo run --release --example multiway_join
 //!
 //! Builds 2-, 3- and 4-way workloads, shows the single-pass multi-way join
 //! filter (Algorithm 1) beating the chained native join in both shuffled
 //! bytes and simulated latency, reproduces the native join's OOM at high
-//! overlap, and runs a 4-way budget query through the engine.
+//! overlap, and runs a 4-way budget query through the Session.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
-use approxjoin::query::parse;
+use approxjoin::join::{BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn mk() -> SimCluster {
     SimCluster::new(10, TimeModel::paper_cluster())
 }
 
 fn main() -> anyhow::Result<()> {
+    let bloom = BloomJoin::default();
+    let repartition = RepartitionJoin;
+    let native = NativeJoin {
+        memory_budget: u64::MAX,
+    };
+
     println!("== one-pass multiway filtering vs chained binary joins ==\n");
     let mut t = Table::new(&[
         "#inputs",
@@ -44,15 +46,9 @@ fn main() -> anyhow::Result<()> {
             seed: 4,
             ..Default::default()
         });
-        let aj = bloom_join(
-            &mut mk(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )?;
-        let rep = repartition_join(&mut mk(), &inputs, CombineOp::Sum);
-        let nat = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX)?;
+        let aj = bloom.execute(&mut mk(), &inputs, CombineOp::Sum)?;
+        let rep = repartition.execute(&mut mk(), &inputs, CombineOp::Sum)?;
+        let nat = native.execute(&mut mk(), &inputs, CombineOp::Sum)?;
         // all three agree (the strategy_equivalence property, live):
         assert!((aj.exact_sum() - nat.exact_sum()).abs() < 1e-6 * (1.0 + nat.exact_sum().abs()));
         t.row(row![
@@ -78,24 +74,21 @@ fn main() -> anyhow::Result<()> {
         seed: 5,
         ..Default::default()
     });
-    match native_join(&mut mk(), &heavy, CombineOp::Sum, 16 << 20) {
+    let tight_native = NativeJoin {
+        memory_budget: 16 << 20,
+    };
+    match tight_native.execute(&mut mk(), &heavy, CombineOp::Sum) {
         Ok(_) => println!("native join survived (increase overlap to see the OOM)"),
         Err(e) => println!("native join failed as the paper observed: {e}"),
     }
-    let aj = bloom_join(
-        &mut mk(),
-        &heavy,
-        CombineOp::Sum,
-        FilterConfig::for_inputs(&heavy, 0.01),
-        &mut NativeProber,
-    )?;
+    let aj = bloom.execute(&mut mk(), &heavy, CombineOp::Sum)?;
     println!(
         "approxjoin handled the same workload in {} ({} shuffled)",
         fmt::duration(aj.metrics.total_sim_secs()),
         fmt::bytes(aj.metrics.total_shuffled_bytes())
     );
 
-    println!("\n== 4-way budget query through the engine ==\n");
+    println!("\n== 4-way budget query through the session ==\n");
     let inputs = generate_overlapping(&SyntheticSpec {
         num_inputs: 4,
         items_per_input: 20_000,
@@ -105,20 +98,19 @@ fn main() -> anyhow::Result<()> {
         seed: 6,
         ..Default::default()
     });
-    let mut named = HashMap::new();
+    let mut session = Session::new(EngineConfig::default())?;
     for (d, name) in inputs.iter().zip(["r1", "r2", "r3", "r4"]) {
-        let mut d = d.clone();
-        d.name = name.into();
-        named.insert(name.to_string(), d);
+        session = session.with_data(name, d.clone());
     }
-    let q = parse(
-        "SELECT SUM(r1.v + r2.v + r3.v + r4.v) FROM r1, r2, r3, r4 \
-         WHERE r1.a = r2.a = r3.a = r4.a WITHIN 5 SECONDS",
-    )?;
-    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
-    let out = engine.execute(&q, &named)?;
+    let out = session
+        .sql(
+            "SELECT SUM(r1.v + r2.v + r3.v + r4.v) FROM r1, r2, r3, r4 \
+             WHERE r1.a = r2.a = r3.a = r4.a WITHIN 5 SECONDS",
+        )?
+        .run()?;
     println!(
-        "mode {:?}: {:.3e} \u{b1} {:.2e} in {} ({} shuffled, {} output pairs)",
+        "strategy {} mode {:?}: {:.3e} \u{b1} {:.2e} in {} ({} shuffled, {} output pairs)",
+        out.strategy,
         out.mode,
         out.result.estimate,
         out.result.error_bound,

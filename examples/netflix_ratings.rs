@@ -4,23 +4,20 @@
 //!
 //! Joins a Netflix-shaped training_set with the qualifying probes on the
 //! movie key — a join with extreme per-movie multiplicity skew — and
-//! compares ApproxJoin against repartition and native joins at several
-//! sampling fractions (the Fig 13b latency story), plus an AVG-rating
-//! query with an error budget to show the estimator on skewed strata.
+//! compares ApproxJoin against the repartition and native strategies at
+//! several sampling fractions (the Fig 13b latency story), plus an
+//! AVG-rating query with an error budget through the Session to show the
+//! estimator on skewed strata.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::data::netflix::{generate, NetflixSpec};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
-use approxjoin::query::parse;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::stats::EstimatorKind;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
     // 1/300 scale: the movie-key join's output is quadratic in per-movie
@@ -41,8 +38,11 @@ fn main() -> anyhow::Result<()> {
     let mk = || SimCluster::new(10, TimeModel::paper_cluster());
 
     // exact joins: the latency comparison of Fig 13a
-    let nat = native_join(&mut mk(), &ds, CombineOp::Left, u64::MAX)?;
-    let rep = repartition_join(&mut mk(), &ds, CombineOp::Left);
+    let nat = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut mk(), &ds, CombineOp::Left)?;
+    let rep = RepartitionJoin.execute(&mut mk(), &ds, CombineOp::Left)?;
     let mut t = Table::new(&["system", "cluster time", "shuffled", "output pairs"]);
     t.row(row![
         "native spark join",
@@ -62,20 +62,12 @@ fn main() -> anyhow::Result<()> {
     println!("\nsampling during the join (rating x probe pairs):\n");
     let mut t = Table::new(&["fraction", "cluster time", "sampled pairs", "speedup vs native"]);
     for fraction in [0.05, 0.1, 0.4] {
-        let cfg = ApproxConfig {
+        let strategy = ApproxJoin::with_config(ApproxConfig {
             params: SamplingParams::Fraction(fraction),
             estimator: EstimatorKind::Clt,
             seed: 9,
-        };
-        let run = approx_join(
-            &mut mk(),
-            &ds,
-            CombineOp::Left,
-            FilterConfig::for_inputs(&ds, 0.01),
-            &cfg,
-            &mut NativeProber,
-            &mut NativeAggregator::default(),
-        )?;
+        });
+        let run = strategy.execute(&mut mk(), &ds, CombineOp::Left)?;
         let sampled: f64 = run.strata.values().map(|s| s.count).sum();
         t.row(row![
             fmt::pct(fraction),
@@ -86,19 +78,19 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // an AVG-rating query with an error budget through the full engine
-    let mut named = HashMap::new();
-    named.insert("training".to_string(), ds[0].clone());
-    named.insert("qualifying".to_string(), ds[1].clone());
-    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
-    let q = parse(
-        "SELECT AVG(training.rating) FROM training, qualifying \
-         WHERE training.movie = qualifying.movie ERROR 0.05 CONFIDENCE 95%",
-    )?;
-    let out = engine.execute(&q, &named)?;
+    // an AVG-rating query with an error budget through the full session
+    let mut session = Session::new(EngineConfig::default())?
+        .with_data("training", ds[0].clone())
+        .with_data("qualifying", ds[1].clone());
+    let out = session
+        .sql(
+            "SELECT AVG(training.rating) FROM training, qualifying \
+             WHERE training.movie = qualifying.movie ERROR 0.05 CONFIDENCE 95%",
+        )?
+        .run()?;
     println!(
-        "\nAVG rating of probed movies: {:.4} \u{b1} {:.4} (95%), {} samples, mode {:?}",
-        out.result.estimate, out.result.error_bound, out.result.samples, out.mode
+        "\nAVG rating of probed movies: {:.4} \u{b1} {:.4} (95%), {} samples, {} mode {:?}",
+        out.result.estimate, out.result.error_bound, out.result.samples, out.strategy, out.mode
     );
     Ok(())
 }

@@ -5,22 +5,20 @@
 //! Runs the paper's query — "what is the total size of the flows that
 //! appeared in all of TCP, UDP and ICMP traffic?" — on a CAIDA-shaped
 //! three-protocol trace, end to end through all layers: budget-SQL parse →
-//! Bloom filtering (AOT bloom_probe artifact) → stratified sampling during
-//! the join (AOT join_agg artifact) → CLT error estimation. It then
-//! cross-checks the approximate answers against the exact join and prints
-//! the paper-style latency/shuffle/accuracy report (Fig 13 rows). Run
-//! results are recorded in EXPERIMENTS.md.
+//! cost-based strategy planning → Bloom filtering (AOT bloom_probe
+//! artifact) → stratified sampling during the join (AOT join_agg artifact)
+//! → CLT error estimation. It then cross-checks the approximate answers
+//! against the exact join and prints the paper-style
+//! latency/shuffle/accuracy report (Fig 13 rows). Run results are recorded
+//! in EXPERIMENTS.md.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::data::network::{generate, NetworkSpec};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
-use approxjoin::query::parse;
+use approxjoin::join::{CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
     // CAIDA 2015 Chicago dirA shape at 1/1000 scale
@@ -33,24 +31,31 @@ fn main() -> anyhow::Result<()> {
         fmt::count(flows[2].len()),
         fmt::count(spec.common_flows)
     );
-    let mut named = HashMap::new();
-    for d in &flows {
-        named.insert(d.name.clone(), d.clone());
-    }
 
-    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
+    let mut session = Session::new(EngineConfig::default())?
+        .with_datasets(flows.iter().cloned());
     println!(
-        "engine runtime: {}",
-        if engine.has_runtime() { "xla/pjrt artifacts" } else { "pure rust" }
+        "session runtime: {}",
+        if session.has_runtime() { "xla/pjrt artifacts" } else { "pure rust" }
     );
 
     // exact reference via the two Spark-like baselines
     let mk = || SimCluster::new(10, TimeModel::paper_cluster());
-    let nat = native_join(&mut mk(), &flows, CombineOp::Sum, u64::MAX)?;
-    let rep = repartition_join(&mut mk(), &flows, CombineOp::Sum);
+    let nat = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut mk(), &flows, CombineOp::Sum)?;
+    let rep = RepartitionJoin.execute(&mut mk(), &flows, CombineOp::Sum)?;
     let truth = nat.exact_sum();
 
-    let mut t = Table::new(&["system", "mode", "total flow bytes", "err vs exact", "cluster time", "shuffled"]);
+    let mut t = Table::new(&[
+        "system",
+        "mode",
+        "total flow bytes",
+        "err vs exact",
+        "cluster time",
+        "shuffled",
+    ]);
     t.row(row![
         "native spark join",
         "Exact",
@@ -68,9 +73,10 @@ fn main() -> anyhow::Result<()> {
         fmt::bytes(rep.metrics.total_shuffled_bytes())
     ]);
 
-    // ApproxJoin: exact (filter only), then two budgets
+    // ApproxJoin through the session: exact (planner), then two budgets
     let sql_base = "SELECT SUM(tcp.size + udp.size + icmp.size) FROM tcp, udp, icmp \
                     WHERE tcp.flow = udp.flow = icmp.flow";
+    println!("\n{}", session.sql(sql_base)?.explain()?);
     let mut aj_shuffled = None;
     let mut aj_record_shuffled = None;
     for (label, sql) in [
@@ -81,15 +87,14 @@ fn main() -> anyhow::Result<()> {
             format!("{sql_base} ERROR 20000 CONFIDENCE 95%"),
         ),
     ] {
-        let q = parse(&sql)?;
-        let out = engine.execute(&q, &named)?;
+        let out = session.sql(&sql)?.run()?;
         aj_shuffled.get_or_insert(out.metrics.total_shuffled_bytes());
         if let Some(st) = out.metrics.stage("filter_shuffle") {
             aj_record_shuffled.get_or_insert(st.shuffled_bytes);
         }
         t.row(row![
             label,
-            format!("{:?}", out.mode),
+            format!("{} ({:?})", out.strategy, out.mode),
             format!("{:.3e} \u{b1} {:.2e}", out.result.estimate, out.result.error_bound),
             fmt::pct(((out.result.estimate - truth) / truth).abs()),
             fmt::duration(out.sim_secs),

@@ -2,20 +2,20 @@
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Generates two overlapping datasets, runs the same aggregation query
-//! three ways — exact, with a latency budget, with an error budget — and
-//! prints `result ± error_bound` plus the execution breakdown.
+//! Opens a [`Session`], registers two overlapping datasets, and runs the
+//! same aggregation query three ways — exact (planner-chosen strategy),
+//! with a latency budget, with an error budget — printing
+//! `result ± error_bound` plus the execution breakdown.
 
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::query::parse;
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
     // 1. two synthetic inputs, 100K tuples each; 20% of items participate
-    //    with λ=500 copies per key, so the exact join crosses ~10^7 pairs —
+    //    with λ=2000 copies per key, so the exact join crosses ~10^7 pairs —
     //    big enough that a latency budget forces sampling
     let inputs = generate_overlapping(&SyntheticSpec {
         items_per_input: 100_000,
@@ -25,27 +25,39 @@ fn main() -> anyhow::Result<()> {
         seed: 1,
         ..Default::default()
     });
-    let mut named = HashMap::new();
-    named.insert("a".to_string(), inputs[0].clone());
-    named.insert("b".to_string(), inputs[1].clone());
 
-    // 2. an engine over a simulated 10-worker cluster (uses the AOT/XLA
+    // 2. a session over a simulated 10-worker cluster (uses the AOT/XLA
     //    artifacts when `make artifacts` has been run), with the latency
     //    cost function calibrated to this host's sampling path
     let (cost, _) = approxjoin::cost::CostModel::profile_sampling_host(&[200_000, 1_600_000]);
-    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?.with_cost_model(cost);
+    let mut session = Session::new(EngineConfig::default())?
+        .with_cost_model(cost)
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone());
     println!(
-        "engine: 10 workers, runtime = {}\n",
-        if engine.has_runtime() { "xla/pjrt artifacts" } else { "pure rust" }
+        "session: 10 workers, runtime = {}\n",
+        if session.has_runtime() { "xla/pjrt artifacts" } else { "pure rust" }
     );
 
-    let mut t = Table::new(&["query budget", "mode", "estimate", "± bound", "cluster time", "shuffled"]);
+    // 3. what will run, before running it
+    let base = "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k";
+    println!("{}", session.sql(base)?.explain()?);
 
-    // 3a. exact (no budget)
-    let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")?;
-    let exact = engine.execute(&q, &named)?;
+    let mut t = Table::new(&[
+        "query budget",
+        "strategy",
+        "mode",
+        "estimate",
+        "± bound",
+        "cluster time",
+        "shuffled",
+    ]);
+
+    // 3a. exact (no budget): the planner picks the cheapest exact strategy
+    let exact = session.sql(base)?.run()?;
     t.row(row![
         "none (exact)",
+        exact.strategy.clone(),
         format!("{:?}", exact.mode),
         format!("{:.2}", exact.result.estimate),
         format!("{:.2}", exact.result.error_bound),
@@ -56,13 +68,13 @@ fn main() -> anyhow::Result<()> {
     // 3b. latency budget — the cost function picks the sampling fraction.
     // Budget = the measured filter/shuffle time plus a slice of the time
     // the exact cross product would need, so sampling must engage.
-    let budget = exact.d_dt + 0.25 * engine.cost.cp_latency(exact.output_cardinality);
-    let q = parse(&format!(
-        "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN {budget:.2} SECONDS"
-    ))?;
-    let fast = engine.execute(&q, &named)?;
+    let budget = exact.d_dt + 0.25 * session.cost().cp_latency(exact.output_cardinality);
+    let fast = session
+        .sql(&format!("{base} WITHIN {budget:.2} SECONDS"))?
+        .run()?;
     t.row(row![
         format!("WITHIN {budget:.2} SECONDS"),
+        fast.strategy.clone(),
         format!("{:?}", fast.mode),
         format!("{:.2}", fast.result.estimate),
         format!("{:.2}", fast.result.error_bound),
@@ -71,10 +83,12 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     // 3c. error budget — per-stratum sizes from eq 10 + the feedback store
-    let q = parse("SELECT AVG(a.v + b.v) FROM a, b WHERE a.k = b.k ERROR 0.5 CONFIDENCE 95%")?;
-    let tight = engine.execute(&q, &named)?;
+    let tight = session
+        .sql("SELECT AVG(a.v + b.v) FROM a, b WHERE a.k = b.k ERROR 0.5 CONFIDENCE 95%")?
+        .run()?;
     t.row(row![
         "ERROR 0.5 CONF 95%",
+        tight.strategy.clone(),
         format!("{:?}", tight.mode),
         format!("{:.4}", tight.result.estimate),
         format!("{:.4}", tight.result.error_bound),

@@ -5,19 +5,16 @@
 //! Generates a mini TPC-H database, then answers the paper's question —
 //! "what is the total amount of money the customers had before ordering?"
 //! (SUM(o_totalprice + c_acctbal) over CUSTOMER ⋈ ORDERS) — exactly and
-//! under latency/error budgets, and runs the join-only Q3/Q4/Q10 latency
-//! comparison of Fig 12a.
+//! under latency/error budgets through the Session, and runs the join-only
+//! Q3/Q4/Q10 latency comparison of Fig 12a through the strategy trait.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::data::tpch::{self, TpchQuery};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
-use approxjoin::query::parse;
+use approxjoin::join::{BloomJoin, CombineOp, JoinStrategy, RepartitionJoin};
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
     let sf = 0.02;
@@ -31,21 +28,17 @@ fn main() -> anyhow::Result<()> {
 
     // Fig 12a: join-only queries
     let mk = || SimCluster::new(10, TimeModel::paper_cluster());
+    let bloom = BloomJoin::default();
     let mut t = Table::new(&["query", "approxjoin", "snappy-like", "speedup"]);
     for q in [TpchQuery::Q3, TpchQuery::Q4, TpchQuery::Q10] {
         let mut aj_total = 0.0;
         let mut sd_total = 0.0;
         for (left, right) in q.join_steps(&db, 20) {
             let ins = [left, right];
-            let aj = bloom_join(
-                &mut mk(),
-                &ins,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&ins, 0.01),
-                &mut NativeProber,
-            )?;
+            let aj = bloom.execute(&mut mk(), &ins, CombineOp::Sum)?;
             aj_total += aj.metrics.total_sim_secs();
-            sd_total += repartition_join(&mut mk(), &ins, CombineOp::Sum)
+            sd_total += RepartitionJoin
+                .execute(&mut mk(), &ins, CombineOp::Sum)?
                 .metrics
                 .total_sim_secs();
         }
@@ -58,33 +51,34 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // the §5.5 aggregation query through the engine, exact + budgeted
-    let mut named = HashMap::new();
-    named.insert("customer".to_string(), db.customer_by_custkey(20));
-    named.insert("orders".to_string(), db.orders_by_custkey(20));
-    let mut engine = ApproxJoinEngine::new(EngineConfig::default())?;
+    // the §5.5 aggregation query through the session, exact + budgeted
+    let mut session = Session::new(EngineConfig::default())?
+        .with_data("customer", db.customer_by_custkey(20))
+        .with_data("orders", db.orders_by_custkey(20));
 
     let base = "SELECT SUM(customer.acctbal + orders.totalprice) FROM customer, orders \
                 WHERE customer.custkey = orders.custkey";
     println!("\nquery: total money the customers had before ordering\n");
-    let mut t = Table::new(&["budget", "mode", "estimate ± bound", "cluster time"]);
-    let exact = engine.execute(&parse(base)?, &named)?;
+    let mut t = Table::new(&["budget", "strategy/mode", "estimate ± bound", "cluster time"]);
+    let exact = session.sql(base)?.run()?;
     t.row(row![
         "none",
-        format!("{:?}", exact.mode),
+        format!("{} ({:?})", exact.strategy, exact.mode),
         format!("{:.4e}", exact.result.estimate),
         fmt::duration(exact.sim_secs)
     ]);
     for budget in ["WITHIN 2 SECONDS", "WITHIN 5 SECONDS"] {
-        let out = engine.execute(&parse(&format!("{base} {budget}"))?, &named)?;
+        let out = session.sql(&format!("{base} {budget}"))?.run()?;
         t.row(row![
             budget,
-            format!("{:?}", out.mode),
+            format!("{} ({:?})", out.strategy, out.mode),
             format!(
                 "{:.4e} \u{b1} {:.2e} ({})",
                 out.result.estimate,
                 out.result.error_bound,
-                fmt::pct(((out.result.estimate - exact.result.estimate) / exact.result.estimate).abs())
+                fmt::pct(
+                    ((out.result.estimate - exact.result.estimate) / exact.result.estimate).abs()
+                )
             ),
             fmt::duration(out.sim_secs)
         ]);

@@ -9,10 +9,8 @@
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::{post_join_sampling, pre_join_sampling};
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, CombineOp, JoinStrategy, NativeJoin};
 use approxjoin::row;
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::util::{fmt, Table};
@@ -32,9 +30,12 @@ fn main() {
         seed: 101,
         ..Default::default()
     });
-    let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
-        .unwrap()
-        .exact_sum();
+    let exact = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut cluster(), &inputs, CombineOp::Sum)
+    .unwrap()
+    .exact_sum();
 
     let mut t = Table::new(&[
         "fraction",
@@ -61,21 +62,14 @@ fn main() {
             errs[1] += ((run.estimate.estimate - exact) / exact).abs();
             lats[1] += run.metrics.total_sim_secs();
             // during-join (ApproxJoin)
-            let cfg = ApproxConfig {
+            let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(fraction),
                 estimator: EstimatorKind::Clt,
                 seed,
-            };
-            let run = approx_join(
-                &mut cluster(),
-                &inputs,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&inputs, 0.01),
-                &cfg,
-                &mut NativeProber,
-                &mut NativeAggregator::default(),
-            )
-            .unwrap();
+            });
+            let run = strategy
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap();
             let est = clt_sum(&run.strata_vec(), 0.95).estimate;
             errs[2] += ((est - exact) / exact).abs();
             lats[2] += run.metrics.total_sim_secs();

@@ -9,10 +9,7 @@
 
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::{BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
 use approxjoin::util::{fmt, Table};
 
@@ -42,16 +39,17 @@ fn main() {
             seed: 88,
             ..Default::default()
         });
-        let aj = bloom_join(
-            &mut cluster(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )
+        let aj = BloomJoin::default()
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
+        let rep = RepartitionJoin
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
+        let nat = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
         .unwrap();
-        let rep = repartition_join(&mut cluster(), &inputs, CombineOp::Sum);
-        let nat = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX).unwrap();
         let aj_total = aj.metrics.total_sim_secs();
         t.row(row![
             fmt::pct(overlap),

@@ -6,10 +6,7 @@
 
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::{BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
 use approxjoin::util::{fmt, Table};
 
@@ -47,16 +44,16 @@ fn main() {
     ]);
     for overlap in [0.01, 0.02, 0.04, 0.06, 0.08, 0.10] {
         let ins = inputs(3, overlap, 99);
-        let aj = bloom_join(
-            &mut cluster(),
-            &ins,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&ins, 0.01),
-            &mut NativeProber,
-        )
-        .unwrap();
-        let rep = repartition_join(&mut cluster(), &ins, CombineOp::Sum);
-        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, NATIVE_BUDGET);
+        let aj = BloomJoin::default()
+            .execute(&mut cluster(), &ins, CombineOp::Sum)
+            .unwrap();
+        let rep = RepartitionJoin
+            .execute(&mut cluster(), &ins, CombineOp::Sum)
+            .unwrap();
+        let nat = NativeJoin {
+            memory_budget: NATIVE_BUDGET,
+        }
+        .execute(&mut cluster(), &ins, CombineOp::Sum);
         let (nat_lat, nat_sh) = match &nat {
             Ok(run) => (
                 fmt::duration(run.metrics.total_sim_secs()),
@@ -88,16 +85,16 @@ fn main() {
     ]);
     for (n, overlap) in [(2usize, 0.01), (3, 0.0033), (4, 0.0025)] {
         let ins = inputs(n, overlap, 7);
-        let aj = bloom_join(
-            &mut cluster(),
-            &ins,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&ins, 0.01),
-            &mut NativeProber,
-        )
-        .unwrap();
-        let rep = repartition_join(&mut cluster(), &ins, CombineOp::Sum);
-        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, NATIVE_BUDGET);
+        let aj = BloomJoin::default()
+            .execute(&mut cluster(), &ins, CombineOp::Sum)
+            .unwrap();
+        let rep = RepartitionJoin
+            .execute(&mut cluster(), &ins, CombineOp::Sum)
+            .unwrap();
+        let nat = NativeJoin {
+            memory_budget: NATIVE_BUDGET,
+        }
+        .execute(&mut cluster(), &ins, CombineOp::Sum);
         let nat_lat = match &nat {
             Ok(run) => fmt::duration(run.metrics.total_sim_secs()),
             Err(_) => "OOM".to_string(),

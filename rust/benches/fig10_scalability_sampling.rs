@@ -5,11 +5,8 @@
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::post_join_sampling;
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::util::{fmt, Table};
@@ -28,16 +25,17 @@ fn main() {
     let mut t = Table::new(&["workers", "approxjoin", "repartition", "native", "aj/rep", "aj/nat"]);
     for k in [2usize, 4, 6, 8] {
         let mk = || SimCluster::new(k, TimeModel::paper_cluster());
-        let aj = bloom_join(
-            &mut mk(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )
+        let aj = BloomJoin::default()
+            .execute(&mut mk(), &inputs, CombineOp::Sum)
+            .unwrap();
+        let rep = RepartitionJoin
+            .execute(&mut mk(), &inputs, CombineOp::Sum)
+            .unwrap();
+        let nat = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut mk(), &inputs, CombineOp::Sum)
         .unwrap();
-        let rep = repartition_join(&mut mk(), &inputs, CombineOp::Sum);
-        let nat = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX).unwrap();
         t.row(row![
             k,
             fmt::duration(aj.metrics.total_sim_secs()),
@@ -60,9 +58,12 @@ fn main() {
         ..Default::default()
     });
     let mk = || SimCluster::new(10, TimeModel::paper_cluster());
-    let exact = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX)
-        .unwrap()
-        .exact_sum();
+    let exact = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut mk(), &inputs, CombineOp::Sum)
+    .unwrap()
+    .exact_sum();
     let mut t = Table::new(&[
         "fraction",
         "aj latency",
@@ -71,21 +72,12 @@ fn main() {
         "ext-repart accuracy loss",
     ]);
     for fraction in [0.1, 0.2, 0.4, 0.6, 0.8] {
-        let cfg = ApproxConfig {
+        let strategy = ApproxJoin::with_config(ApproxConfig {
             params: SamplingParams::Fraction(fraction),
             estimator: EstimatorKind::Clt,
             seed: 1,
-        };
-        let aj = approx_join(
-            &mut mk(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &cfg,
-            &mut NativeProber,
-            &mut NativeAggregator::default(),
-        )
-        .unwrap();
+        });
+        let aj = strategy.execute(&mut mk(), &inputs, CombineOp::Sum).unwrap();
         let aj_est = clt_sum(&aj.strata_vec(), 0.95).estimate;
         let ext = post_join_sampling(&mut mk(), &inputs, CombineOp::Sum, fraction, 0.95, 1);
         t.row(row![

@@ -5,15 +5,13 @@
 
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::post_join_sampling;
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig, ExecutionMode};
+use approxjoin::coordinator::{EngineConfig, ExecutionMode};
 use approxjoin::cost::CostModel;
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::native::native_join;
-use approxjoin::join::CombineOp;
-use approxjoin::query::parse;
+use approxjoin::join::{CombineOp, JoinStrategy, NativeJoin};
 use approxjoin::row;
+use approxjoin::session::Session;
 use approxjoin::util::{fmt, Table};
-use std::collections::HashMap;
 
 fn main() {
     println!("== Figure 11: cost-function effectiveness ==\n");
@@ -36,32 +34,32 @@ fn main() {
         seed: 66,
         ..Default::default()
     });
-    let mut named = HashMap::new();
-    named.insert("a".to_string(), inputs[0].clone());
-    named.insert("b".to_string(), inputs[1].clone());
-
     let mk = || SimCluster::new(10, TimeModel::paper_cluster());
-    let exact = native_join(&mut mk(), &inputs, CombineOp::Sum, u64::MAX)
-        .unwrap()
-        .exact_sum();
+    let exact = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut mk(), &inputs, CombineOp::Sum)
+    .unwrap()
+    .exact_sum();
 
-    let mut engine = ApproxJoinEngine::without_runtime(EngineConfig {
+    let mut session = Session::without_runtime(EngineConfig {
         workers: 10,
         ..Default::default()
     })
     .unwrap()
-    .with_cost_model(cost);
+    .with_cost_model(cost)
+    .with_data("a", inputs[0].clone())
+    .with_data("b", inputs[1].clone());
 
     // budgets pinned relative to the measured filter time + the predicted
     // exact cross-product time, so the sweep spans the sampled regime and
     // crosses into the exact regime — the paper's Fig 11 x-axis
-    let probe = engine
-        .execute(
-            &parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap(),
-            &named,
-        )
+    let probe = session
+        .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+        .unwrap()
+        .run()
         .unwrap();
-    let cp_pred = engine.cost.cp_latency(probe.output_cardinality);
+    let cp_pred = session.cost().cp_latency(probe.output_cardinality);
     let budgets: Vec<f64> = [0.15, 0.3, 0.5, 0.8, 1.5]
         .iter()
         .map(|frac| probe.d_dt + frac * cp_pred)
@@ -76,11 +74,13 @@ fn main() {
         "ext-repart loss (same frac)",
     ]);
     for desired in budgets {
-        let q = parse(&format!(
-            "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN {desired} SECONDS"
-        ))
-        .unwrap();
-        let out = engine.execute(&q, &named).unwrap();
+        let out = session
+            .sql(&format!(
+                "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN {desired} SECONDS"
+            ))
+            .unwrap()
+            .run()
+            .unwrap();
         let fraction = match out.mode {
             ExecutionMode::Sampled { fraction } => fraction,
             ExecutionMode::Exact => 1.0,

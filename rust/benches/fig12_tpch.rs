@@ -9,10 +9,8 @@
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::post_join_sampling;
 use approxjoin::data::tpch::{self, TpchQuery};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, BloomJoin, CombineOp, JoinStrategy, RepartitionJoin};
 use approxjoin::row;
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::util::{fmt, Table};
@@ -35,16 +33,13 @@ fn main() {
         let mut sd_total = 0.0;
         for (left, right) in q.join_steps(&db, 20) {
             let ins = [left, right];
-            let aj = bloom_join(
-                &mut mk(),
-                &ins,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&ins, 0.01),
-                &mut NativeProber,
-            )
-            .unwrap();
+            let aj = BloomJoin::default()
+                .execute(&mut mk(), &ins, CombineOp::Sum)
+                .unwrap();
             aj_total += aj.metrics.total_sim_secs();
-            let sd = repartition_join(&mut mk(), &ins, CombineOp::Sum);
+            let sd = RepartitionJoin
+                .execute(&mut mk(), &ins, CombineOp::Sum)
+                .unwrap();
             sd_total += sd.metrics.total_sim_secs();
         }
         t.row(row![
@@ -60,7 +55,9 @@ fn main() {
     // "total money the customers had before ordering":
     // SUM(o_totalprice + c_acctbal) over customer ⋈ orders
     let ins = [db.customer_by_custkey(20), db.orders_by_custkey(20)];
-    let exact_run = repartition_join(&mut mk(), &ins, CombineOp::Sum);
+    let exact_run = RepartitionJoin
+        .execute(&mut mk(), &ins, CombineOp::Sum)
+        .unwrap();
     let exact = exact_run.exact_sum();
     let mut t = Table::new(&[
         "fraction",
@@ -70,21 +67,12 @@ fn main() {
         "snappy-like loss",
     ]);
     for fraction in [0.2, 0.4, 0.6, 0.8, 1.0] {
-        let cfg = ApproxConfig {
+        let strategy = ApproxJoin::with_config(ApproxConfig {
             params: SamplingParams::Fraction(fraction),
             estimator: EstimatorKind::Clt,
             seed: 2,
-        };
-        let aj = approx_join(
-            &mut mk(),
-            &ins,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&ins, 0.01),
-            &cfg,
-            &mut NativeProber,
-            &mut NativeAggregator::default(),
-        )
-        .unwrap();
+        });
+        let aj = strategy.execute(&mut mk(), &ins, CombineOp::Sum).unwrap();
         let aj_est = clt_sum(&aj.strata_vec(), 0.95).estimate;
         let sd = post_join_sampling(&mut mk(), &ins, CombineOp::Sum, fraction, 0.95, 2);
         t.row(row![

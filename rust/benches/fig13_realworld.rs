@@ -9,11 +9,8 @@
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::pre_join_sampling;
 use approxjoin::data::{netflix, network};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::row;
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::util::{fmt, Table};
@@ -47,16 +44,13 @@ fn main() {
         "native shuffle",
     ]);
     for (name, inputs, op) in &workloads {
-        let aj = bloom_join(
-            &mut mk(),
-            inputs,
-            *op,
-            FilterConfig::for_inputs(inputs, 0.01),
-            &mut NativeProber,
-        )
+        let aj = BloomJoin::default().execute(&mut mk(), inputs, *op).unwrap();
+        let rep = RepartitionJoin.execute(&mut mk(), inputs, *op).unwrap();
+        let nat = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut mk(), inputs, *op)
         .unwrap();
-        let rep = repartition_join(&mut mk(), inputs, *op);
-        let nat = native_join(&mut mk(), inputs, *op, u64::MAX).unwrap();
         t.row(row![
             name,
             fmt::duration(aj.metrics.total_sim_secs()),
@@ -79,25 +73,19 @@ fn main() {
         "pre-sampled loss",
     ]);
     for (name, inputs, op) in &workloads {
-        let exact = native_join(&mut mk(), inputs, *op, u64::MAX)
-            .unwrap()
-            .exact_sum();
+        let exact = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut mk(), inputs, *op)
+        .unwrap()
+        .exact_sum();
         for fraction in [0.05, 0.1, 0.4] {
-            let cfg = ApproxConfig {
+            let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(fraction),
                 estimator: EstimatorKind::Clt,
                 seed: 5,
-            };
-            let aj = approx_join(
-                &mut mk(),
-                inputs,
-                *op,
-                FilterConfig::for_inputs(inputs, 0.01),
-                &cfg,
-                &mut NativeProber,
-                &mut NativeAggregator::default(),
-            )
-            .unwrap();
+            });
+            let aj = strategy.execute(&mut mk(), inputs, *op).unwrap();
             let aj_est = clt_sum(&aj.strata_vec(), 0.95).estimate;
             let pre = pre_join_sampling(&mut mk(), inputs, *op, fraction, 0.95, 5);
             let (aj_loss, pre_loss) = if exact.abs() > 0.0 {

@@ -7,11 +7,9 @@
 use approxjoin::bloom::BloomFilter;
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::approx::{
-    approx_join, ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams,
-};
-use approxjoin::join::bloom_join::{FilterConfig, KeyProber, NativeProber};
-use approxjoin::join::{cross_product_agg, CombineOp};
+use approxjoin::join::approx::{ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::{KeyProber, NativeProber};
+use approxjoin::join::{cross_product_agg, ApproxJoin, CombineOp};
 use approxjoin::row;
 use approxjoin::runtime::PjrtRuntime;
 use approxjoin::sampling::edge_sampling::sample_edges_with_replacement;
@@ -144,27 +142,26 @@ fn main() {
         seed: 77,
         ..Default::default()
     });
-    let cfg = ApproxConfig {
+    let strategy = ApproxJoin::with_config(ApproxConfig {
         params: SamplingParams::Fraction(0.1),
         estimator: EstimatorKind::Clt,
         seed: 1,
-    };
+    });
     let mut prober: Box<dyn KeyProber> = Box::new(NativeProber);
     let mut agg: Box<dyn BatchAggregator> = match &runtime {
         Some(rt) => Box::new(rt.join_agg().unwrap()),
         None => Box::new(NativeAggregator::default()),
     };
     let (run, dt) = time(|| {
-        approx_join(
-            &mut SimCluster::new(10, TimeModel::default()),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &cfg,
-            prober.as_mut(),
-            agg.as_mut(),
-        )
-        .unwrap()
+        strategy
+            .execute_with(
+                &mut SimCluster::new(10, TimeModel::default()),
+                &inputs,
+                CombineOp::Sum,
+                prober.as_mut(),
+                agg.as_mut(),
+            )
+            .unwrap()
     });
     let sampled: f64 = run.strata.values().map(|s| s.count).sum();
     t.row(row![

@@ -10,7 +10,7 @@
 use crate::cluster::shuffle::shuffle_dataset;
 use crate::cluster::{JoinMetrics, SimCluster};
 use crate::data::Dataset;
-use crate::join::{group_by_key, CombineOp};
+use crate::join::{group_by_key, CombineOp, JoinStrategy, RepartitionJoin};
 use crate::sampling::stratified::{post_join_reservoir, sample_by_key};
 use crate::stats::{clt_sum, ApproxResult, StratumAgg};
 use crate::util::Rng;
@@ -104,7 +104,9 @@ pub fn pre_join_sampling(
         .collect();
     s.finish(cluster);
 
-    let run = crate::join::repartition::repartition_join(cluster, &sampled, op);
+    let run = RepartitionJoin
+        .execute(cluster, &sampled, op)
+        .expect("repartition join is infallible");
     let scale = (1.0 / fraction).powi(inputs.len() as i32);
     let estimate = run.exact_sum() * scale;
     BaselineRun {
@@ -125,7 +127,7 @@ mod tests {
     use super::*;
     use crate::cluster::TimeModel;
     use crate::data::Record;
-    use crate::join::native::native_join;
+    use crate::join::NativeJoin;
 
     fn cluster() -> SimCluster {
         SimCluster::new(
@@ -157,9 +159,12 @@ mod tests {
     #[test]
     fn post_join_sampling_is_accurate() {
         let ins = inputs();
-        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
-            .unwrap()
-            .exact_sum();
+        let exact = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut cluster(), &ins, CombineOp::Sum)
+        .unwrap()
+        .exact_sum();
         let run = post_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.2, 0.95, 1);
         let rel = (run.estimate.estimate - exact).abs() / exact;
         assert!(rel < 0.05, "rel {rel}");
@@ -177,9 +182,12 @@ mod tests {
     #[test]
     fn pre_join_sampling_is_fast_but_rough() {
         let ins = inputs();
-        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
-            .unwrap()
-            .exact_sum();
+        let exact = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut cluster(), &ins, CombineOp::Sum)
+        .unwrap()
+        .exact_sum();
         let run = pre_join_sampling(&mut cluster(), &ins, CombineOp::Sum, 0.5, 0.95, 2);
         // it enumerates far fewer pairs...
         let joined: u64 = run
@@ -197,9 +205,12 @@ mod tests {
     #[test]
     fn pre_join_estimator_unbiased_over_reps() {
         let ins = inputs();
-        let exact = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX)
-            .unwrap()
-            .exact_sum();
+        let exact = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut cluster(), &ins, CombineOp::Sum)
+        .unwrap()
+        .exact_sum();
         let mut mean = 0.0;
         let reps = 30;
         for seed in 0..reps {

@@ -52,6 +52,12 @@ pub struct QueryOutcome {
     pub d_dt: f64,
     /// Σ B_i after filtering — the exact join-output cardinality.
     pub output_cardinality: f64,
+    /// Registry name of the strategy that produced the result.
+    pub strategy: String,
+    /// The cost-based plan, when the query went through the
+    /// [`crate::session::Session`] planner (the engine's own §3.2
+    /// exact-vs-sampled decision does not produce one).
+    pub plan: Option<crate::join::JoinPlan>,
 }
 
 /// The ApproxJoin coordinator engine.
@@ -66,10 +72,22 @@ pub struct ApproxJoinEngine {
 }
 
 impl ApproxJoinEngine {
-    /// Build an engine; compiles the AOT artifacts when available.
+    /// Build an engine; compiles the AOT artifacts when available. When the
+    /// artifacts directory exists but the PJRT runtime cannot start (e.g.
+    /// the crate was built against the vendored XLA stub), the engine warns
+    /// and falls back to pure-Rust execution instead of failing.
     pub fn new(cfg: EngineConfig) -> Result<Self> {
         let runtime = match &cfg.artifacts_dir {
-            Some(dir) => Some(PjrtRuntime::open(dir)?),
+            Some(dir) => match PjrtRuntime::open(dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!(
+                        "warning: XLA runtime unavailable ({e:#}); \
+                         falling back to native execution"
+                    );
+                    None
+                }
+            },
             None => None,
         };
         let (join_agg, prober) = match &runtime {
@@ -209,22 +227,14 @@ impl ApproxJoinEngine {
         };
 
         // ---- stage 2.3: error estimation (§3.4)
-        let strata_vec: Vec<StratumAgg> = strata.values().copied().collect();
-        let result = match (query.agg, sampled, self.cfg.estimator) {
-            (AggFunc::Count, _, _) => exact_count(&strata_vec, confidence),
-            (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
-                let order: Vec<u64> = strata.keys().copied().collect();
-                let s: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
-                let d: Vec<f64> = order
-                    .iter()
-                    .map(|k| draws.get(k).copied().unwrap_or(0.0))
-                    .collect();
-                horvitz_thompson_sum(&s, &d, confidence)
-            }
-            (AggFunc::Sum, _, _) => clt_sum(&strata_vec, confidence),
-            (AggFunc::Avg, _, _) => clt_avg(&strata_vec, confidence),
-            (AggFunc::Stdev, _, _) => clt_stdev(&strata_vec, confidence),
-        };
+        let result = estimate_result(
+            query.agg,
+            sampled,
+            self.cfg.estimator,
+            &strata,
+            &draws,
+            confidence,
+        );
 
         // feedback: store per-stratum σ for subsequent runs (§3.2 II)
         self.feedback.record(&fingerprint, &strata);
@@ -236,11 +246,21 @@ impl ApproxJoinEngine {
             metrics,
             mode,
             d_dt,
-            output_cardinality: strata_vec.iter().map(|s| s.population).sum(),
+            output_cardinality: strata.values().map(|s| s.population).sum(),
+            // the engine's exact path is stage-1 filtering + cross product,
+            // i.e. the bloom strategy; its sampled path is the full approx
+            strategy: match mode {
+                ExecutionMode::Exact => "bloom".to_string(),
+                ExecutionMode::Sampled { .. } => "approx".to_string(),
+            },
+            plan: None,
         })
     }
 
-    /// The §3.2 planner: exact when affordable, else sampled.
+    /// The §3.2 fraction planner: exact when affordable, else sampled.
+    /// (Strategy *selection* across join algorithms is the job of the
+    /// cost-based [`crate::join::Planner`] driving the session API; this
+    /// decides only how much of the filtered join output to enumerate.)
     fn plan(&self, query: &Query, d_dt: f64, total_pairs: f64) -> ExecutionMode {
         if let Some(d_desired) = query.budget.latency_secs {
             let s = self
@@ -258,6 +278,35 @@ impl ApproxJoinEngine {
             };
         }
         ExecutionMode::Exact
+    }
+}
+
+/// §3.4 error estimation shared by the engine and the session front end:
+/// pick the estimator for the (aggregate, sampled?, kind) combination and
+/// close the approximation loop over per-stratum aggregates.
+pub(crate) fn estimate_result(
+    agg: AggFunc,
+    sampled: bool,
+    estimator: EstimatorKind,
+    strata: &HashMap<u64, StratumAgg>,
+    draws: &HashMap<u64, f64>,
+    confidence: f64,
+) -> ApproxResult {
+    let strata_vec: Vec<StratumAgg> = strata.values().copied().collect();
+    match (agg, sampled, estimator) {
+        (AggFunc::Count, _, _) => exact_count(&strata_vec, confidence),
+        (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
+            let order: Vec<u64> = strata.keys().copied().collect();
+            let s: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
+            let d: Vec<f64> = order
+                .iter()
+                .map(|k| draws.get(k).copied().unwrap_or(0.0))
+                .collect();
+            horvitz_thompson_sum(&s, &d, confidence)
+        }
+        (AggFunc::Sum, _, _) => clt_sum(&strata_vec, confidence),
+        (AggFunc::Avg, _, _) => clt_avg(&strata_vec, confidence),
+        (AggFunc::Stdev, _, _) => clt_stdev(&strata_vec, confidence),
     }
 }
 

@@ -9,7 +9,7 @@
 //! artifact-less builds.
 
 use super::bloom_join::{filter_and_shuffle, FilterConfig, KeyProber};
-use super::{CombineOp, JoinRun};
+use super::{CombineOp, JoinError, JoinRun};
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
 use crate::sampling::edge_sampling::{
@@ -160,7 +160,7 @@ pub fn approx_join(
     cfg: &ApproxConfig,
     prober: &mut dyn KeyProber,
     agg: &mut dyn BatchAggregator,
-) -> anyhow::Result<JoinRun> {
+) -> Result<JoinRun, JoinError> {
     let filtered = filter_and_shuffle(cluster, inputs, filter_cfg, prober)?;
     let (strata, draws) = sample_stage(cluster, &filtered, op, cfg, agg)?;
     Ok(JoinRun {

@@ -9,7 +9,7 @@
 //! join filter; (4) drop every local record whose key misses the filter;
 //! (5) shuffle only the survivors and cogroup by key.
 
-use super::{group_by_key, CombineOp, JoinRun};
+use super::{group_by_key, CombineOp, JoinError, JoinRun};
 use crate::bloom::hashing::fold_key;
 use crate::bloom::BloomFilter;
 use crate::cluster::tree_reduce::build_dataset_filter;
@@ -204,7 +204,7 @@ pub fn bloom_join(
     op: CombineOp,
     cfg: FilterConfig,
     prober: &mut dyn KeyProber,
-) -> anyhow::Result<JoinRun> {
+) -> Result<JoinRun, JoinError> {
     let filtered = filter_and_shuffle(cluster, inputs, cfg, prober)?;
     let strata = cross_product_stage(cluster, &filtered, op);
     Ok(JoinRun::exact(strata, cluster.take_metrics()))

@@ -3,7 +3,7 @@
 //! are tiny, loses catastrophically as n or k grows — eq 18's
 //! (|R_1|+…+|R_{n−1}|)·(k−1) term, plotted in Fig 4a/14.
 
-use super::{group_by_key, CombineOp, JoinRun};
+use super::{group_by_key, CombineOp, JoinError, JoinRun};
 use crate::cluster::shuffle::broadcast_dataset;
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
@@ -11,7 +11,13 @@ use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
 
-pub fn broadcast_join(cluster: &mut SimCluster, inputs: &[Dataset], op: CombineOp) -> JoinRun {
+/// Broadcast join. Infallible in practice, but returns `Result` like every
+/// other strategy entry point.
+pub fn broadcast_join(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+) -> Result<JoinRun, JoinError> {
     assert!(inputs.len() >= 2);
     // largest input stays put; the rest broadcast
     let largest = inputs
@@ -76,7 +82,7 @@ pub fn broadcast_join(cluster: &mut SimCluster, inputs: &[Dataset], op: CombineO
     }
     s.finish(cluster);
 
-    JoinRun::exact(strata, cluster.take_metrics())
+    Ok(JoinRun::exact(strata, cluster.take_metrics()))
 }
 
 #[cfg(test)]
@@ -114,7 +120,7 @@ mod tests {
             vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0), (5, 4.0), (6, 4.0)],
             4,
         );
-        let bc = broadcast_join(&mut cluster(4), &[a.clone(), big.clone()], CombineOp::Sum);
+        let bc = broadcast_join(&mut cluster(4), &[a.clone(), big.clone()], CombineOp::Sum).unwrap();
         let nat = native_join(&mut cluster(4), &[a, big], CombineOp::Sum, u64::MAX).unwrap();
         assert!(
             (bc.exact_sum() - nat.exact_sum()).abs() < 1e-9,
@@ -130,7 +136,7 @@ mod tests {
         let small = ds("s", (0..10).map(|k| (k, 1.0)).collect(), 4);
         let big = ds("b", (0..10_000).map(|k| (k % 100, 1.0)).collect(), 4);
         let mut c = cluster(4);
-        let run = broadcast_join(&mut c, &[small.clone(), big], CombineOp::Sum);
+        let run = broadcast_join(&mut c, &[small.clone(), big], CombineOp::Sum).unwrap();
         // shuffled = small broadcast only: 10 recs x 100B x 3 receivers
         assert_eq!(run.metrics.total_shuffled_bytes(), 10 * 100 * 3);
         let _ = small;
@@ -141,9 +147,11 @@ mod tests {
         let small = ds("s", (0..100).map(|k| (k, 1.0)).collect(), 8);
         let big = ds("b", (0..1000).map(|k| (k, 1.0)).collect(), 8);
         let b2 = broadcast_join(&mut cluster(2), &[small.clone(), big.clone()], CombineOp::Sum)
+            .unwrap()
             .metrics
             .total_shuffled_bytes();
         let b8 = broadcast_join(&mut cluster(8), &[small, big], CombineOp::Sum)
+            .unwrap()
             .metrics
             .total_shuffled_bytes();
         assert!(b8 > 3 * b2, "b2={b2} b8={b8}");
@@ -154,7 +162,8 @@ mod tests {
         let a = ds("a", vec![(1, 1.0), (2, 2.0)], 2);
         let b = ds("b", vec![(1, 10.0), (1, 20.0), (2, 30.0)], 2);
         let big = ds("c", vec![(1, 100.0), (3, 0.0), (4, 1.0), (5, 1.0)], 2);
-        let bc = broadcast_join(&mut cluster(2), &[a.clone(), b.clone(), big.clone()], CombineOp::Sum);
+        let bc = broadcast_join(&mut cluster(2), &[a.clone(), b.clone(), big.clone()], CombineOp::Sum)
+            .unwrap();
         let nat = native_join(&mut cluster(2), &[a, b, big], CombineOp::Sum, u64::MAX).unwrap();
         assert!((bc.exact_sum() - nat.exact_sum()).abs() < 1e-9);
     }

@@ -1,4 +1,4 @@
-//! Join strategies. Five implementations share one interface:
+//! Join strategies behind one trait. Five implementations:
 //!
 //! * [`native`] — native Spark RDD join: chained binary cogroups, full
 //!   shuffle of every input *and* every intermediate, full cross products.
@@ -13,15 +13,27 @@
 //!   sampling during the join + CLT/HT estimation, optionally pushing the
 //!   per-stratum aggregation through the AOT `join_agg` artifact.
 //!
-//! Every strategy returns a [`JoinRun`]: per-key aggregates (population +
-//! sampled moments — an exact join is the b_i = B_i special case) plus the
-//! stage metrics the figures report.
+//! All five implement the [`JoinStrategy`] trait ([`strategy`]) and live in
+//! a [`StrategyRegistry`]; the cost-based [`Planner`] ([`planner`]) ranks
+//! them per workload and the [`crate::session::Session`] front end is how
+//! callers reach them. Every strategy returns a [`JoinRun`]: per-key
+//! aggregates (population + sampled moments — an exact join is the
+//! b_i = B_i special case) plus the stage metrics the figures report, or a
+//! [`JoinError`] when execution is impossible.
 
 pub mod approx;
 pub mod bloom_join;
 pub mod broadcast;
 pub mod native;
+pub mod planner;
 pub mod repartition;
+pub mod strategy;
+
+pub use planner::{JoinPlan, Planner, StrategyChoice};
+pub use strategy::{
+    ApproxJoin, BloomJoin, BroadcastJoin, CostEstimate, InputStats, JoinStrategy, NativeJoin,
+    RepartitionJoin, StrategyRegistry,
+};
 
 use crate::cluster::JoinMetrics;
 use crate::stats::StratumAgg;
@@ -104,12 +116,20 @@ impl JoinRun {
     }
 }
 
-/// Errors a join can hit — `OutOfMemory` mirrors the paper's native-join
-/// OOM at 8-10% overlap (Fig 9a's missing bars).
+/// Errors a join can hit. Every strategy entry point returns
+/// `Result<JoinRun, JoinError>` uniformly — `OutOfMemory` mirrors the
+/// paper's native-join OOM at 8-10% overlap (Fig 9a's missing bars),
+/// `Unsupported` is the planner rejecting a strategy for a workload, and
+/// `Runtime` folds lower-layer (prober / aggregator) failures in.
 #[derive(Debug)]
 pub enum JoinError {
     /// Materialized intermediate exceeded the per-worker memory budget.
     OutOfMemory { stage: String, bytes: u64 },
+    /// The requested strategy cannot serve this query — unknown name, or
+    /// predicted infeasible on these inputs.
+    Unsupported { strategy: String, reason: String },
+    /// A lower layer (Bloom prober, batch aggregator, runtime) failed.
+    Runtime(String),
 }
 
 impl std::fmt::Display for JoinError {
@@ -118,11 +138,21 @@ impl std::fmt::Display for JoinError {
             JoinError::OutOfMemory { stage, bytes } => {
                 write!(f, "out of memory in {stage}: {bytes} bytes")
             }
+            JoinError::Unsupported { strategy, reason } => {
+                write!(f, "strategy {strategy} unsupported: {reason}")
+            }
+            JoinError::Runtime(msg) => write!(f, "join runtime error: {msg}"),
         }
     }
 }
 
 impl std::error::Error for JoinError {}
+
+impl From<anyhow::Error> for JoinError {
+    fn from(e: anyhow::Error) -> Self {
+        JoinError::Runtime(format!("{e:#}"))
+    }
+}
 
 /// Group shuffled records of n inputs by key: key → one value-vector per
 /// input. Shared by every strategy's final phase.

@@ -166,6 +166,7 @@ mod tests {
         let err = native_join(&mut c, &[a, b, c3], CombineOp::Sum, 1000).unwrap_err();
         match err {
             JoinError::OutOfMemory { bytes, .. } => assert!(bytes > 1000),
+            other => panic!("expected OutOfMemory, got {other}"),
         }
     }
 

@@ -1,0 +1,396 @@
+//! Cost-based join planning: rank the registered strategies on cheap input
+//! statistics and produce an inspectable [`JoinPlan`] — chosen strategy,
+//! predicted shuffle bytes and latency per candidate, and an `explain()`
+//! rendering in the spirit of SQL EXPLAIN.
+
+use super::strategy::{CostEstimate, InputStats, StrategyRegistry};
+use super::JoinError;
+use crate::cost::CostModel;
+use crate::query::Budget;
+use crate::util::fmt;
+use std::fmt::Write as _;
+
+/// How the caller wants the strategy picked.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StrategyChoice {
+    /// Let the planner rank registered strategies by predicted cost.
+    Auto,
+    /// Force a specific registered strategy by name.
+    Named(String),
+}
+
+impl StrategyChoice {
+    pub fn named(name: impl Into<String>) -> Self {
+        StrategyChoice::Named(name.into())
+    }
+}
+
+/// The planner's decision: which strategy runs, why, and what every
+/// candidate was predicted to cost.
+#[derive(Clone, Debug)]
+pub struct JoinPlan {
+    /// Registry name of the chosen strategy.
+    pub strategy: String,
+    /// Whether the chosen strategy samples (result is an estimate).
+    pub approximate: bool,
+    /// The statistics the ranking was computed from.
+    pub stats: InputStats,
+    /// Every candidate's estimate, best first (infeasible last).
+    pub estimates: Vec<CostEstimate>,
+    /// Stage names the chosen strategy will record.
+    pub stages: Vec<String>,
+}
+
+impl JoinPlan {
+    /// The chosen strategy's estimate.
+    pub fn chosen(&self) -> &CostEstimate {
+        self.estimates
+            .iter()
+            .find(|e| e.strategy == self.strategy)
+            .expect("chosen strategy always has an estimate")
+    }
+
+    /// Predicted bytes the chosen strategy shuffles.
+    pub fn predicted_shuffle_bytes(&self) -> f64 {
+        self.chosen().shuffle_bytes
+    }
+
+    /// Predicted latency (simulated seconds) of the chosen strategy.
+    pub fn predicted_secs(&self) -> f64 {
+        self.chosen().est_secs
+    }
+
+    /// Human-readable plan: inputs, overlap, stages, and the cost ranking.
+    pub fn explain(&self) -> String {
+        let mut out = String::new();
+        let kind = if self.approximate {
+            "approximate"
+        } else {
+            "exact"
+        };
+        let _ = writeln!(out, "JoinPlan: strategy={} ({kind})", self.strategy);
+        let _ = writeln!(
+            out,
+            "  inputs: {} datasets, rows={:?}, workers={}",
+            self.stats.n_inputs(),
+            self.stats.rows,
+            self.stats.workers
+        );
+        let _ = writeln!(
+            out,
+            "  overlap: {} ({} common keys, {} predicted output pairs)",
+            fmt::pct(self.stats.overlap_fraction),
+            fmt::count(self.stats.common_keys),
+            fmt::count(self.stats.est_output_pairs as u64)
+        );
+        let _ = writeln!(out, "  stages: {}", self.stages.join(" -> "));
+        let _ = writeln!(out, "  cost ranking (best first):");
+        for (i, e) in self.estimates.iter().enumerate() {
+            let marker = if e.strategy == self.strategy {
+                "  <- chosen"
+            } else {
+                ""
+            };
+            if e.feasible {
+                let _ = writeln!(
+                    out,
+                    "    {}. {:<12} est {:>10}  shuffle {:>10}  pairs {:>10}{marker}",
+                    i + 1,
+                    e.strategy,
+                    fmt::duration(e.est_secs),
+                    fmt::bytes(e.shuffle_bytes as u64),
+                    fmt::count(e.compute_pairs as u64)
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "    {}. {:<12} infeasible: {}{marker}",
+                    i + 1,
+                    e.strategy,
+                    e.note
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Ranks registered strategies with the cost model and picks one.
+pub struct Planner<'a> {
+    registry: &'a StrategyRegistry,
+    cost: &'a CostModel,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(registry: &'a StrategyRegistry, cost: &'a CostModel) -> Self {
+        Self { registry, cost }
+    }
+
+    /// Whether the query's budget forces the sampled path: an error budget
+    /// always does; a latency budget does when the predicted filtering +
+    /// shuffle time d_dt leaves less time than the exact cross product
+    /// needs (eq 6). The d_dt prediction is conservative (a full-shuffle
+    /// bound) on purpose: over-predicting routes borderline queries to the
+    /// engine, whose §3.2 planner re-decides with the *measured* d_dt and
+    /// still runs exact when the budget turns out loose — whereas an
+    /// under-prediction would lock in an exact plan that misses the budget.
+    pub fn budget_requires_sampling(&self, budget: &Budget, stats: &InputStats) -> bool {
+        if budget.error.is_some() {
+            return true;
+        }
+        if let Some(desired) = budget.latency_secs {
+            let est_d_dt =
+                stats.net_secs(stats.full_shuffle_bytes()) + 2.0 * stats.stage_latency;
+            return self
+                .cost
+                .fraction_for_latency(desired, est_d_dt, stats.est_output_pairs)
+                < 1.0;
+        }
+        false
+    }
+
+    /// Produce a [`JoinPlan`] for inputs described by `stats` under the
+    /// query's `budget`. `Named` choices must be registered and feasible;
+    /// `Auto` picks the approximate strategy when the budget requires
+    /// sampling and otherwise the cheapest feasible exact strategy.
+    pub fn plan(
+        &self,
+        stats: &InputStats,
+        choice: &StrategyChoice,
+        budget: &Budget,
+    ) -> Result<JoinPlan, JoinError> {
+        let mut estimates: Vec<CostEstimate> = Vec::with_capacity(self.registry.len());
+        for s in self.registry.iter() {
+            let mut e = s.estimate_cost(stats, self.cost);
+            e.strategy = s.name().to_string();
+            e.approximate = s.is_approximate();
+            estimates.push(e);
+        }
+        // feasible first, then by predicted latency; the sort is stable so
+        // registry order breaks exact ties
+        estimates.sort_by(|a, b| {
+            b.feasible.cmp(&a.feasible).then(
+                a.est_secs
+                    .partial_cmp(&b.est_secs)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+
+        let chosen = match choice {
+            StrategyChoice::Named(name) => {
+                let Some(est) = estimates.iter().find(|e| &e.strategy == name) else {
+                    return Err(JoinError::Unsupported {
+                        strategy: name.clone(),
+                        reason: format!(
+                            "not registered (available: {})",
+                            self.registry.names().join(", ")
+                        ),
+                    });
+                };
+                if !est.feasible {
+                    return Err(JoinError::Unsupported {
+                        strategy: name.clone(),
+                        reason: est.note.clone(),
+                    });
+                }
+                name.clone()
+            }
+            StrategyChoice::Auto => {
+                if estimates.is_empty() {
+                    return Err(JoinError::Unsupported {
+                        strategy: "auto".to_string(),
+                        reason: "no strategies registered".to_string(),
+                    });
+                }
+                if self.budget_requires_sampling(budget, stats) {
+                    match estimates.iter().find(|e| e.approximate && e.feasible) {
+                        Some(e) => e.strategy.clone(),
+                        None => {
+                            return Err(JoinError::Unsupported {
+                                strategy: "auto".to_string(),
+                                reason: "query budget requires sampling but no approximate \
+                                         strategy is registered"
+                                    .to_string(),
+                            })
+                        }
+                    }
+                } else {
+                    match estimates.iter().find(|e| e.feasible && !e.approximate) {
+                        Some(e) => e.strategy.clone(),
+                        None => {
+                            return Err(JoinError::Unsupported {
+                                strategy: "auto".to_string(),
+                                reason: "no feasible exact strategy for these inputs".to_string(),
+                            })
+                        }
+                    }
+                }
+            }
+        };
+
+        let approximate = estimates
+            .iter()
+            .find(|e| e.strategy == chosen)
+            .map(|e| e.approximate)
+            .unwrap_or(false);
+        let stages = self
+            .registry
+            .get(&chosen)
+            .map(|s| s.stage_names(stats.n_inputs()))
+            .unwrap_or_default();
+        Ok(JoinPlan {
+            strategy: chosen,
+            approximate,
+            stats: stats.clone(),
+            estimates,
+            stages,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::{generate_overlapping, SyntheticSpec};
+    use crate::query::ErrorBudget;
+
+    /// A network-bound cluster model so shuffle volume dominates the
+    /// ranking, as on the paper's GbE testbed.
+    fn slow_net() -> TimeModel {
+        TimeModel {
+            bandwidth: 1e6,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        }
+    }
+
+    fn stats_for(overlap: f64) -> InputStats {
+        let inputs = generate_overlapping(&SyntheticSpec {
+            items_per_input: 20_000,
+            overlap_fraction: overlap,
+            lambda: 20.0,
+            partitions: 4,
+            seed: 12,
+            ..Default::default()
+        });
+        InputStats::collect(&inputs, 4, &slow_net())
+    }
+
+    fn plan(
+        stats: &InputStats,
+        choice: StrategyChoice,
+        budget: Budget,
+    ) -> Result<JoinPlan, JoinError> {
+        let registry = StrategyRegistry::with_defaults();
+        let cost = CostModel::default();
+        Planner::new(&registry, &cost).plan(stats, &choice, &budget)
+    }
+
+    #[test]
+    fn auto_picks_bloom_at_low_overlap() {
+        let p = plan(&stats_for(0.01), StrategyChoice::Auto, Budget::unbounded()).unwrap();
+        assert_eq!(p.strategy, "bloom", "\n{}", p.explain());
+        assert!(!p.approximate);
+    }
+
+    #[test]
+    fn auto_picks_repartition_at_full_overlap() {
+        // at 100% overlap the filter drops nothing: bloom pays the filter
+        // traffic and the probes on top of the same record shuffle
+        let p = plan(&stats_for(1.0), StrategyChoice::Auto, Budget::unbounded()).unwrap();
+        assert_eq!(p.strategy, "repartition", "\n{}", p.explain());
+    }
+
+    #[test]
+    fn chosen_matches_lowest_feasible_estimate() {
+        for overlap in [0.01, 0.3, 1.0] {
+            let p = plan(&stats_for(overlap), StrategyChoice::Auto, Budget::unbounded()).unwrap();
+            let best = p
+                .estimates
+                .iter()
+                .filter(|e| e.feasible && !e.approximate)
+                .min_by(|a, b| a.est_secs.partial_cmp(&b.est_secs).unwrap())
+                .unwrap();
+            assert_eq!(p.strategy, best.strategy, "overlap {overlap}");
+            // estimates are sorted cheapest-first
+            for pair in p.estimates.windows(2) {
+                if pair[0].feasible && pair[1].feasible {
+                    assert!(pair[0].est_secs <= pair[1].est_secs, "overlap {overlap}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_budget_forces_approx() {
+        let budget = Budget {
+            latency_secs: None,
+            error: Some(ErrorBudget {
+                bound: 0.1,
+                confidence: 0.95,
+            }),
+        };
+        let p = plan(&stats_for(0.2), StrategyChoice::Auto, budget).unwrap();
+        assert_eq!(p.strategy, "approx");
+        assert!(p.approximate);
+    }
+
+    #[test]
+    fn tight_latency_budget_forces_approx_loose_does_not() {
+        let stats = stats_for(0.3);
+        let tight = Budget {
+            latency_secs: Some(1e-9),
+            error: None,
+        };
+        let loose = Budget {
+            latency_secs: Some(1e9),
+            error: None,
+        };
+        assert_eq!(
+            plan(&stats, StrategyChoice::Auto, tight).unwrap().strategy,
+            "approx"
+        );
+        assert!(!plan(&stats, StrategyChoice::Auto, loose).unwrap().approximate);
+    }
+
+    #[test]
+    fn named_strategy_is_honored() {
+        let p = plan(
+            &stats_for(0.01),
+            StrategyChoice::named("native"),
+            Budget::unbounded(),
+        )
+        .unwrap();
+        assert_eq!(p.strategy, "native");
+        assert_eq!(p.stages, vec!["shuffle_0", "crossproduct_0"]);
+    }
+
+    #[test]
+    fn unknown_named_strategy_is_unsupported() {
+        let err = plan(
+            &stats_for(0.01),
+            StrategyChoice::named("hash"),
+            Budget::unbounded(),
+        )
+        .unwrap_err();
+        match err {
+            JoinError::Unsupported { strategy, reason } => {
+                assert_eq!(strategy, "hash");
+                assert!(reason.contains("not registered"), "{reason}");
+            }
+            other => panic!("expected Unsupported, got {other}"),
+        }
+    }
+
+    #[test]
+    fn explain_lists_every_strategy() {
+        let p = plan(&stats_for(0.05), StrategyChoice::Auto, Budget::unbounded()).unwrap();
+        let text = p.explain();
+        for name in ["bloom", "repartition", "broadcast", "native", "approx"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        assert!(text.contains("<- chosen"));
+        assert!(text.contains("stages:"));
+    }
+}

@@ -4,7 +4,7 @@
 //! The paper's strongest exact baseline — ApproxJoin's filtering stage only
 //! beats it while the overlap fraction is small (Fig 8/9 crossovers).
 
-use super::{group_by_key, CombineOp, JoinRun};
+use super::{group_by_key, CombineOp, JoinError, JoinRun};
 use crate::cluster::shuffle::shuffle_dataset;
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
@@ -12,7 +12,13 @@ use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
 
-pub fn repartition_join(cluster: &mut SimCluster, inputs: &[Dataset], op: CombineOp) -> JoinRun {
+/// Repartition join. Infallible in practice (nothing is materialized), but
+/// returns `Result` like every other strategy entry point.
+pub fn repartition_join(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+) -> Result<JoinRun, JoinError> {
     assert!(inputs.len() >= 2);
     // single tagged shuffle of every input
     let mut s = cluster.stage("shuffle");
@@ -44,7 +50,7 @@ pub fn repartition_join(cluster: &mut SimCluster, inputs: &[Dataset], op: Combin
     }
     s.finish(cluster);
 
-    JoinRun::exact(strata, cluster.take_metrics())
+    Ok(JoinRun::exact(strata, cluster.take_metrics()))
 }
 
 #[cfg(test)]
@@ -78,7 +84,7 @@ mod tests {
     fn matches_native_join_result() {
         let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]);
         let b = ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]);
-        let rep = repartition_join(&mut cluster(), &[a.clone(), b.clone()], CombineOp::Sum);
+        let rep = repartition_join(&mut cluster(), &[a.clone(), b.clone()], CombineOp::Sum).unwrap();
         let nat = native_join(&mut cluster(), &[a, b], CombineOp::Sum, u64::MAX).unwrap();
         assert!((rep.exact_sum() - nat.exact_sum()).abs() < 1e-9);
         assert_eq!(rep.output_cardinality(), nat.output_cardinality());
@@ -90,7 +96,7 @@ mod tests {
         let b = ds("b", vec![(1, 10.0), (1, 20.0), (2, 30.0)]);
         let c3 = ds("c", vec![(1, 100.0), (3, 0.0)]);
         let mut c = cluster();
-        let run = repartition_join(&mut c, &[a, b, c3], CombineOp::Sum);
+        let run = repartition_join(&mut c, &[a, b, c3], CombineOp::Sum).unwrap();
         assert!((run.exact_sum() - 232.0).abs() < 1e-9);
         // exactly one shuffle stage + one crossproduct stage
         assert_eq!(run.metrics.stages.len(), 2);
@@ -106,7 +112,8 @@ mod tests {
             &mut cluster(),
             &[a.clone(), b.clone(), c3.clone()],
             CombineOp::Sum,
-        );
+        )
+        .unwrap();
         let nat = native_join(&mut cluster(), &[a, b, c3], CombineOp::Sum, u64::MAX).unwrap();
         assert!((rep.exact_sum() - nat.exact_sum()).abs() < 1e-6);
         assert!(

@@ -1,0 +1,802 @@
+//! The [`JoinStrategy`] trait: one uniform interface over the five join
+//! implementations, plus a [`StrategyRegistry`] for lookup by name and the
+//! [`InputStats`] / [`CostEstimate`] machinery the [`super::planner`] uses
+//! to rank strategies.
+//!
+//! Strategy *selection* is the part of a distributed join users should not
+//! do by hand: the best strategy depends on input sizes, key overlap and
+//! multiplicity skew (Fig 4/8/9 crossovers). Every strategy answers
+//! [`JoinStrategy::estimate_cost`] from cheap input statistics so the
+//! planner can rank candidates before moving a byte, and
+//! [`JoinStrategy::execute`] runs the join through the shared
+//! [`SimCluster`] substrate. New strategies are a registry entry, not a new
+//! code path.
+
+use super::approx::{approx_join, ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams};
+use super::bloom_join::{bloom_join, FilterConfig, KeyProber, NativeProber};
+use super::broadcast::broadcast_join;
+use super::native::{native_join, DEFAULT_MEMORY_BUDGET};
+use super::repartition::repartition_join;
+use super::{CombineOp, JoinError, JoinRun};
+use crate::cluster::{SimCluster, TimeModel};
+use crate::cost::CostModel;
+use crate::data::Dataset;
+use crate::util::fmt;
+use std::collections::{HashMap, HashSet};
+
+/// Pre-join input statistics the planner feeds to `estimate_cost`.
+///
+/// Collection is one hashing pass over the inputs (exact key-overlap and
+/// output-cardinality accounting) — far cheaper than any shuffle, and the
+/// same information the paper's filtering stage derives as a side effect.
+#[derive(Clone, Debug)]
+pub struct InputStats {
+    /// Cluster size k.
+    pub workers: usize,
+    /// Per-node network bandwidth (bytes/s) of the target cluster.
+    pub bandwidth: f64,
+    /// Per-stage scheduling latency (seconds) of the target cluster.
+    pub stage_latency: f64,
+    /// Records per input.
+    pub rows: Vec<u64>,
+    /// Wire width of one record, per input.
+    pub record_bytes: Vec<u64>,
+    /// Distinct join keys per input.
+    pub distinct_keys: Vec<u64>,
+    /// Records per input whose key appears in *every* input.
+    pub participating: Vec<u64>,
+    /// Join keys common to all inputs.
+    pub common_keys: u64,
+    /// Participating ÷ total records (the §3.1.1 overlap definition).
+    pub overlap_fraction: f64,
+    /// Σ B_i — the exact join-output cardinality.
+    pub est_output_pairs: f64,
+}
+
+impl InputStats {
+    /// Collect statistics for `inputs` on a `workers`-node cluster with
+    /// the given [`TimeModel`]'s network parameters.
+    pub fn collect(inputs: &[Dataset], workers: usize, time_model: &TimeModel) -> Self {
+        assert!(!inputs.is_empty());
+        let counts: Vec<HashMap<u64, u64>> = inputs
+            .iter()
+            .map(|d| {
+                let mut m: HashMap<u64, u64> = HashMap::new();
+                for r in d.iter() {
+                    *m.entry(r.key).or_insert(0) += 1;
+                }
+                m
+            })
+            .collect();
+        let mut common: HashSet<u64> = counts[0].keys().copied().collect();
+        for c in &counts[1..] {
+            common.retain(|k| c.contains_key(k));
+        }
+        let mut est_output_pairs = 0.0;
+        for k in &common {
+            est_output_pairs += counts.iter().map(|c| c[k] as f64).product::<f64>();
+        }
+        let participating: Vec<u64> = counts
+            .iter()
+            .map(|c| common.iter().map(|k| c[k]).sum())
+            .collect();
+        let rows: Vec<u64> = inputs.iter().map(|d| d.len()).collect();
+        let total: u64 = rows.iter().sum();
+        let participating_total: u64 = participating.iter().sum();
+        Self {
+            workers,
+            bandwidth: time_model.bandwidth,
+            stage_latency: time_model.stage_latency,
+            record_bytes: inputs.iter().map(|d| d.record_bytes).collect(),
+            distinct_keys: counts.iter().map(|c| c.len() as u64).collect(),
+            participating,
+            common_keys: common.len() as u64,
+            overlap_fraction: if total == 0 {
+                0.0
+            } else {
+                participating_total as f64 / total as f64
+            },
+            est_output_pairs,
+            rows,
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn total_rows(&self) -> u64 {
+        self.rows.iter().sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .zip(&self.record_bytes)
+            .map(|(&r, &b)| r * b)
+            .sum()
+    }
+
+    pub fn max_input_bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .zip(&self.record_bytes)
+            .map(|(&r, &b)| r * b)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Simulated seconds to move `bytes` through the shuffle fabric: the
+    /// most-loaded node carries ~in + out = 2·bytes/k at `bandwidth`.
+    pub fn net_secs(&self, bytes: f64) -> f64 {
+        2.0 * bytes / (self.workers as f64 * self.bandwidth)
+    }
+
+    /// Record bytes a full shuffle moves: (k−1)/k of every input.
+    pub fn full_shuffle_bytes(&self) -> f64 {
+        let k = self.workers as f64;
+        self.rows
+            .iter()
+            .zip(&self.record_bytes)
+            .map(|(&r, &b)| r as f64 * b as f64)
+            .sum::<f64>()
+            * (k - 1.0)
+            / k
+    }
+}
+
+/// A strategy's predicted cost on one set of inputs — what the planner
+/// ranks and what `JoinPlan::explain` renders.
+#[derive(Clone, Debug)]
+pub struct CostEstimate {
+    /// Registry name of the strategy (filled in by the planner).
+    pub strategy: String,
+    /// Whether this strategy returns a sampled estimate.
+    pub approximate: bool,
+    /// False when the strategy is predicted to fail on these inputs
+    /// (e.g. native-join intermediates exceeding the memory budget).
+    pub feasible: bool,
+    /// Predicted bytes crossing the network (records + control traffic).
+    pub shuffle_bytes: f64,
+    /// Work items priced at β_compute: cross-product (or sampled) pairs
+    /// plus strategy-specific extras (probes, materialized intermediates).
+    pub compute_pairs: f64,
+    /// Predicted peak per-worker intermediate materialization (bytes).
+    pub peak_intermediate_bytes: f64,
+    /// Predicted end-to-end latency on the modeled cluster (seconds).
+    pub est_secs: f64,
+    /// One-line rationale for plan explanation.
+    pub note: String,
+}
+
+impl CostEstimate {
+    fn build(
+        stats: &InputStats,
+        cost: &CostModel,
+        shuffle_bytes: f64,
+        compute_pairs: f64,
+        stages: usize,
+        note: String,
+    ) -> Self {
+        let est_secs = cost.beta_compute * compute_pairs
+            + stats.net_secs(shuffle_bytes)
+            + stages as f64 * stats.stage_latency
+            + cost.epsilon;
+        Self {
+            strategy: String::new(),
+            approximate: false,
+            feasible: true,
+            shuffle_bytes,
+            compute_pairs,
+            peak_intermediate_bytes: 0.0,
+            est_secs,
+            note,
+        }
+    }
+}
+
+/// One join execution strategy. All five implementations (native,
+/// repartition, broadcast, bloom, approx) expose exactly this interface;
+/// the [`crate::session::Session`] and the CLI reach them only through it.
+pub trait JoinStrategy {
+    /// Registry name (`"native"`, `"repartition"`, `"broadcast"`,
+    /// `"bloom"`, `"approx"`).
+    fn name(&self) -> &'static str;
+
+    /// Run the join on the simulated cluster.
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError>;
+
+    /// Predict this strategy's cost on inputs described by `stats`.
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate;
+
+    /// Whether the result is a sampled estimate rather than an exact join.
+    fn is_approximate(&self) -> bool {
+        false
+    }
+
+    /// The stage names `execute` records, for plan explanation.
+    fn stage_names(&self, n_inputs: usize) -> Vec<String>;
+}
+
+/// Native Spark RDD join: chained binary cogroups, materialized
+/// intermediates, OOM risk at high overlap (Fig 9a).
+pub struct NativeJoin {
+    /// Per-worker memory budget for materialized intermediates.
+    pub memory_budget: u64,
+}
+
+impl Default for NativeJoin {
+    fn default() -> Self {
+        Self {
+            memory_budget: DEFAULT_MEMORY_BUDGET,
+        }
+    }
+}
+
+/// Bytes one materialized (key, combined value) intermediate pair costs —
+/// mirrors `native_join`'s accounting.
+const INTERMEDIATE_PAIR_BYTES: f64 = 24.0;
+
+impl JoinStrategy for NativeJoin {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        native_join(cluster, inputs, op, self.memory_budget)
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        let k = stats.workers as f64;
+        let n = stats.n_inputs();
+        // chained binary joins materialize the prefix join after every step
+        // but the last; prefix sizes follow from per-input mean multiplicity
+        // over the common keys
+        let mut intermediate_rows = 0.0;
+        let mut peak_rows = 0.0;
+        if n > 2 && stats.common_keys > 0 {
+            let common = stats.common_keys as f64;
+            let mult = |i: usize| stats.participating[i] as f64 / common;
+            let mut prefix = common * mult(0);
+            for j in 1..n {
+                prefix *= mult(j);
+                if j + 1 < n {
+                    intermediate_rows += prefix;
+                    peak_rows = peak_rows.max(prefix);
+                }
+            }
+        }
+        let shuffle = stats.full_shuffle_bytes()
+            + intermediate_rows * INTERMEDIATE_PAIR_BYTES * (k - 1.0) / k;
+        let pairs = stats.est_output_pairs + intermediate_rows;
+        let peak = peak_rows * INTERMEDIATE_PAIR_BYTES / k;
+        let mut e = CostEstimate::build(
+            stats,
+            cost,
+            shuffle,
+            pairs,
+            2 * (n - 1),
+            "chained binary cogroups; full shuffle, materialized intermediates".to_string(),
+        );
+        e.peak_intermediate_bytes = peak;
+        if peak > self.memory_budget as f64 {
+            e.feasible = false;
+            e.note = format!(
+                "predicted per-worker intermediate {} exceeds the {} memory budget",
+                fmt::bytes(peak as u64),
+                fmt::bytes(self.memory_budget)
+            );
+        }
+        e
+    }
+
+    fn stage_names(&self, n_inputs: usize) -> Vec<String> {
+        (0..n_inputs.saturating_sub(1))
+            .flat_map(|s| [format!("shuffle_{s}"), format!("crossproduct_{s}")])
+            .collect()
+    }
+}
+
+/// Spark repartition join: one tagged shuffle, streamed n-way cross
+/// product — the strongest exact baseline.
+pub struct RepartitionJoin;
+
+impl JoinStrategy for RepartitionJoin {
+    fn name(&self) -> &'static str {
+        "repartition"
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        repartition_join(cluster, inputs, op)
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        CostEstimate::build(
+            stats,
+            cost,
+            stats.full_shuffle_bytes(),
+            stats.est_output_pairs,
+            2,
+            "single tagged shuffle of all inputs, streamed cross product".to_string(),
+        )
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec!["shuffle".to_string(), "crossproduct".to_string()]
+    }
+}
+
+/// Broadcast join: ship the n−1 smaller inputs to every worker; the
+/// largest input never moves (eq 18).
+pub struct BroadcastJoin;
+
+impl JoinStrategy for BroadcastJoin {
+    fn name(&self) -> &'static str {
+        "broadcast"
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        broadcast_join(cluster, inputs, op)
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        let k = stats.workers as f64;
+        let small_bytes = (stats.total_bytes() - stats.max_input_bytes()) as f64;
+        let mut e = CostEstimate::build(
+            stats,
+            cost,
+            small_bytes * (k - 1.0),
+            stats.est_output_pairs,
+            2,
+            format!(
+                "ships the n-1 smaller inputs ({}) to every worker",
+                fmt::bytes(small_bytes as u64)
+            ),
+        );
+        // the replicated small inputs are resident on every worker
+        e.peak_intermediate_bytes = small_bytes;
+        e
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec!["broadcast".to_string(), "crossproduct".to_string()]
+    }
+}
+
+/// Exact Bloom join (ApproxJoin stage 1 only, §3.1): multi-way join-filter
+/// construction, filtered shuffle, exact cross product.
+pub struct BloomJoin {
+    /// Target false-positive rate when sizing the filter (eq 27).
+    pub fp_rate: f64,
+    /// Explicit filter geometry; `None` sizes from the inputs.
+    pub filter: Option<FilterConfig>,
+}
+
+impl Default for BloomJoin {
+    fn default() -> Self {
+        Self {
+            fp_rate: 0.01,
+            filter: None,
+        }
+    }
+}
+
+impl BloomJoin {
+    fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
+        self.filter
+            .unwrap_or_else(|| FilterConfig::for_inputs(inputs, self.fp_rate))
+    }
+
+    /// Predicted bytes of filter control traffic: treeReduce of n dataset
+    /// filters plus the join-filter broadcast (eq 24's filter terms).
+    fn filter_traffic_bytes(&self, stats: &InputStats) -> f64 {
+        let k = stats.workers as f64;
+        let n = stats.n_inputs() as f64;
+        let max_rows = stats.rows.iter().copied().max().unwrap_or(1).max(1);
+        let bits = crate::bloom::hashing::bits_for_fp_rate(max_rows, self.fp_rate);
+        (bits as f64 / 8.0) * (k - 1.0) * (n + 1.0)
+    }
+
+    /// Predicted record bytes surviving the filter: participating records
+    /// plus the false-positive leakage of non-participating ones.
+    fn filtered_record_bytes(&self, stats: &InputStats) -> f64 {
+        let k = stats.workers as f64;
+        let mut bytes = 0.0;
+        for i in 0..stats.n_inputs() {
+            let participating = stats.participating[i] as f64;
+            let leaked = (stats.rows[i] - stats.participating[i]) as f64 * self.fp_rate;
+            bytes += (participating + leaked) * stats.record_bytes[i] as f64 * (k - 1.0) / k;
+        }
+        bytes
+    }
+}
+
+impl JoinStrategy for BloomJoin {
+    fn name(&self) -> &'static str {
+        "bloom"
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        bloom_join(
+            cluster,
+            inputs,
+            op,
+            self.filter_config(inputs),
+            &mut NativeProber,
+        )
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        let filter_bytes = self.filter_traffic_bytes(stats);
+        // every record is probed once; priced like one cross-product pair
+        let pairs = stats.est_output_pairs + stats.total_rows() as f64;
+        CostEstimate::build(
+            stats,
+            cost,
+            self.filtered_record_bytes(stats) + filter_bytes,
+            pairs,
+            3,
+            format!(
+                "join filter drops non-participating records pre-shuffle ({} filter traffic)",
+                fmt::bytes(filter_bytes as u64)
+            ),
+        )
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec![
+            "build_filter".to_string(),
+            "filter_shuffle".to_string(),
+            "crossproduct".to_string(),
+        ]
+    }
+}
+
+/// Full ApproxJoin (§3.2-3.4): stage-1 filtering + stratified sampling
+/// during the join + CLT / Horvitz-Thompson estimation.
+pub struct ApproxJoin {
+    /// Target false-positive rate when sizing the filter.
+    pub fp_rate: f64,
+    /// Explicit filter geometry; `None` sizes from the inputs.
+    pub filter: Option<FilterConfig>,
+    /// Sampling parameters, estimator kind and seed.
+    pub config: ApproxConfig,
+}
+
+impl Default for ApproxJoin {
+    fn default() -> Self {
+        Self {
+            fp_rate: 0.01,
+            filter: None,
+            config: ApproxConfig::default(),
+        }
+    }
+}
+
+impl ApproxJoin {
+    pub fn with_config(config: ApproxConfig) -> Self {
+        Self {
+            config,
+            ..Default::default()
+        }
+    }
+
+    /// The sampling fraction the cost estimate assumes. Error-bound and
+    /// fixed-per-key plans size per stratum, so a nominal 10% stands in.
+    fn assumed_fraction(&self) -> f64 {
+        match self.config.params {
+            SamplingParams::Fraction(f) => f.min(1.0),
+            SamplingParams::ErrorBound { .. } | SamplingParams::FixedPerKey(_) => 0.1,
+        }
+    }
+
+    /// Execute with explicit prober / aggregator implementations — the AOT
+    /// XLA executors on the production path, the native fallbacks
+    /// otherwise. The trait's `execute` delegates here with the native
+    /// implementations.
+    pub fn execute_with(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        prober: &mut dyn KeyProber,
+        aggregator: &mut dyn BatchAggregator,
+    ) -> Result<JoinRun, JoinError> {
+        let filter = self
+            .filter
+            .unwrap_or_else(|| FilterConfig::for_inputs(inputs, self.fp_rate));
+        approx_join(cluster, inputs, op, filter, &self.config, prober, aggregator)
+    }
+}
+
+impl JoinStrategy for ApproxJoin {
+    fn name(&self) -> &'static str {
+        "approx"
+    }
+
+    fn is_approximate(&self) -> bool {
+        true
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        self.execute_with(
+            cluster,
+            inputs,
+            op,
+            &mut NativeProber,
+            &mut NativeAggregator::default(),
+        )
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        let bloom = BloomJoin {
+            fp_rate: self.fp_rate,
+            filter: self.filter,
+        };
+        let fraction = self.assumed_fraction();
+        let pairs = fraction * stats.est_output_pairs + stats.total_rows() as f64;
+        let mut e = CostEstimate::build(
+            stats,
+            cost,
+            bloom.filtered_record_bytes(stats) + bloom.filter_traffic_bytes(stats),
+            pairs,
+            3,
+            format!(
+                "filtering + stratified sampling during the join (assumed fraction {})",
+                fmt::pct(fraction)
+            ),
+        );
+        e.approximate = true;
+        e
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec![
+            "build_filter".to_string(),
+            "filter_shuffle".to_string(),
+            "sample".to_string(),
+        ]
+    }
+}
+
+/// Name-indexed strategy collection. The default registry holds all five
+/// paper strategies; callers can register replacements or additions (a new
+/// strategy is a registry entry, not a new code path).
+pub struct StrategyRegistry {
+    items: Vec<Box<dyn JoinStrategy>>,
+}
+
+impl StrategyRegistry {
+    /// An empty registry.
+    pub fn empty() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    /// All five paper strategies with default configurations. Order is the
+    /// planner's tie-break: bloom, repartition, broadcast, native, approx.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::empty();
+        r.register(Box::new(BloomJoin::default()));
+        r.register(Box::new(RepartitionJoin));
+        r.register(Box::new(BroadcastJoin));
+        r.register(Box::new(NativeJoin::default()));
+        r.register(Box::new(ApproxJoin::default()));
+        r
+    }
+
+    /// Register a strategy, replacing any existing entry with the same name.
+    pub fn register(&mut self, strategy: Box<dyn JoinStrategy>) {
+        if let Some(slot) = self.items.iter_mut().find(|s| s.name() == strategy.name()) {
+            *slot = strategy;
+        } else {
+            self.items.push(strategy);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&dyn JoinStrategy> {
+        self.items
+            .iter()
+            .find(|s| s.name() == name)
+            .map(|b| b.as_ref())
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.items.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn JoinStrategy> {
+        self.items.iter().map(|b| b.as_ref())
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+impl Default for StrategyRegistry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Record;
+
+    fn cluster() -> SimCluster {
+        SimCluster::new(
+            4,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn ds(name: &str, recs: Vec<(u64, f64)>) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            name,
+            recs.into_iter().map(|(k, v)| Record::new(k, v)).collect(),
+            4,
+            100,
+        )
+    }
+
+    fn inputs() -> Vec<Dataset> {
+        vec![
+            ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]),
+            ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]),
+        ]
+    }
+
+    #[test]
+    fn registry_defaults_and_lookup() {
+        let r = StrategyRegistry::with_defaults();
+        assert_eq!(r.len(), 5);
+        assert_eq!(
+            r.names(),
+            vec!["bloom", "repartition", "broadcast", "native", "approx"]
+        );
+        assert!(r.get("bloom").is_some());
+        assert!(r.get("hash").is_none());
+        assert!(r.get("approx").unwrap().is_approximate());
+        assert!(!r.get("bloom").unwrap().is_approximate());
+    }
+
+    #[test]
+    fn registry_register_replaces_by_name() {
+        let mut r = StrategyRegistry::with_defaults();
+        r.register(Box::new(NativeJoin { memory_budget: 7 }));
+        assert_eq!(r.len(), 5);
+        let e = r.get("native").unwrap().estimate_cost(
+            &InputStats::collect(&inputs(), 4, &TimeModel::default()),
+            &CostModel::default(),
+        );
+        // two-way joins have no intermediates, so the tiny budget is fine
+        assert!(e.feasible);
+    }
+
+    #[test]
+    fn approximate_flags() {
+        let r = StrategyRegistry::with_defaults();
+        let approx: Vec<&str> = r
+            .iter()
+            .filter(|s| s.is_approximate())
+            .map(|s| s.name())
+            .collect();
+        assert_eq!(approx, vec!["approx"]);
+    }
+
+    #[test]
+    fn all_exact_strategies_agree_through_the_trait() {
+        let ins = inputs();
+        let r = StrategyRegistry::with_defaults();
+        let mut sums = Vec::new();
+        for s in r.iter().filter(|s| !s.is_approximate()) {
+            let run = s.execute(&mut cluster(), &ins, CombineOp::Sum).unwrap();
+            assert!(!run.sampled, "{}", s.name());
+            sums.push((s.name(), run.exact_sum(), run.output_cardinality()));
+        }
+        // key 1: (1+100)+(2+100); key 2: (10+200)+(10+300) => 723, 4 pairs
+        for (name, sum, card) in &sums {
+            assert!((sum - 723.0).abs() < 1e-9, "{name}: {sum}");
+            assert_eq!(*card, 4.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn input_stats_exact_accounting() {
+        let stats = InputStats::collect(&inputs(), 4, &TimeModel::default());
+        assert_eq!(stats.n_inputs(), 2);
+        assert_eq!(stats.rows, vec![4, 4]);
+        assert_eq!(stats.common_keys, 2); // keys 1 and 2
+        assert_eq!(stats.participating, vec![3, 3]);
+        // key 1: 2x1, key 2: 1x2 => 4 output pairs
+        assert_eq!(stats.est_output_pairs, 4.0);
+        assert!((stats.overlap_fraction - 6.0 / 8.0).abs() < 1e-12);
+        assert_eq!(stats.total_bytes(), 800);
+    }
+
+    #[test]
+    fn native_estimate_flags_oom_on_deep_multiway() {
+        // three-way with deep strata: ~100 * 100 = 10k intermediate rows/key
+        let a = ds("a", (0..100).map(|_| (1, 1.0)).collect());
+        let b = ds("b", (0..100).map(|_| (1, 1.0)).collect());
+        let c = ds("c", vec![(1, 1.0)]);
+        let stats = InputStats::collect(&[a, b, c], 4, &TimeModel::default());
+        let tight = NativeJoin { memory_budget: 1000 };
+        let e = tight.estimate_cost(&stats, &CostModel::default());
+        assert!(!e.feasible, "{}", e.note);
+        assert!(e.note.contains("memory budget"));
+        let roomy = NativeJoin {
+            memory_budget: u64::MAX,
+        };
+        assert!(roomy.estimate_cost(&stats, &CostModel::default()).feasible);
+    }
+
+    #[test]
+    fn bloom_estimate_beats_repartition_at_low_overlap_only() {
+        // low overlap: 2 of 2000 keys shared; high overlap: all shared
+        let mk = |shared: u64| -> Vec<Dataset> {
+            let a: Vec<(u64, f64)> = (0..2000u64)
+                .map(|i| (if i < shared { i } else { i + 10_000 }, 1.0))
+                .collect();
+            let b: Vec<(u64, f64)> = (0..2000u64)
+                .map(|i| (if i < shared { i } else { i + 20_000 }, 1.0))
+                .collect();
+            vec![ds("a", a), ds("b", b)]
+        };
+        let slow_net = TimeModel {
+            bandwidth: 1e6,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        };
+        let cost = CostModel::default();
+        let low = InputStats::collect(&mk(20), 4, &slow_net);
+        let high = InputStats::collect(&mk(2000), 4, &slow_net);
+        let bloom = BloomJoin::default();
+        let rep = RepartitionJoin;
+        assert!(
+            bloom.estimate_cost(&low, &cost).est_secs < rep.estimate_cost(&low, &cost).est_secs
+        );
+        assert!(
+            bloom.estimate_cost(&high, &cost).est_secs > rep.estimate_cost(&high, &cost).est_secs
+        );
+    }
+}

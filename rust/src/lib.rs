@@ -12,8 +12,49 @@
 //!   JAX + Pallas, AOT-lowered to HLO text, and executed from Rust through
 //!   the PJRT CPU client ([`runtime`]). Python never runs on the query path.
 //!
-//! Entry points: [`coordinator::ApproxJoinEngine`] for the programmatic
-//! API, `approxjoin` (main.rs) for the CLI, `examples/` for walkthroughs.
+//! ## Architecture: strategies, planner, session
+//!
+//! The paper's contribution is an *operator*: a drop-in join whose
+//! execution strategy is chosen by a cost function, not by the caller. The
+//! crate mirrors that shape:
+//!
+//! * [`join::JoinStrategy`] — one trait over the five join
+//!   implementations (`native`, `repartition`, `broadcast`, `bloom`,
+//!   `approx`), each answering `execute` and `estimate_cost`, collected in
+//!   a [`join::StrategyRegistry`]. Adding a strategy is a registry entry,
+//!   not a new code path.
+//! * [`join::Planner`] — ranks the registered strategies on cheap
+//!   [`join::InputStats`] with the [`cost::CostModel`] and produces an
+//!   inspectable [`join::JoinPlan`] (`explain()` prints the ranking).
+//! * [`session::Session`] — the fluent entry point:
+//!
+//! ```no_run
+//! use approxjoin::coordinator::EngineConfig;
+//! use approxjoin::data::{generate_overlapping, SyntheticSpec};
+//! use approxjoin::session::{Session, StrategyChoice};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let inputs = generate_overlapping(&SyntheticSpec::default());
+//! let outcome = Session::new(EngineConfig::default())?
+//!     .with_data("a", inputs[0].clone())
+//!     .with_data("b", inputs[1].clone())
+//!     .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 10 SECONDS")?
+//!     .strategy(StrategyChoice::Auto)
+//!     .run()?;
+//! println!(
+//!     "{} ± {} via {}",
+//!     outcome.result.estimate, outcome.result.error_bound, outcome.strategy
+//! );
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Budget queries (`WITHIN … SECONDS`, `ERROR … CONFIDENCE …`) route
+//! through the [`coordinator::ApproxJoinEngine`]'s §3.2 pipeline, which
+//! sizes the sampling fraction from the measured filter time; unbudgeted
+//! queries run the cheapest feasible exact strategy. The `approxjoin` CLI
+//! (main.rs) exposes the same flow — `query`, `compare`, `explain`,
+//! `profile`, `simulate` — and `examples/` are guided walkthroughs.
 
 pub mod bloom;
 pub mod cluster;
@@ -24,9 +65,11 @@ pub mod join;
 pub mod query;
 pub mod runtime;
 pub mod sampling;
+pub mod session;
 pub mod simulation;
 pub mod stats;
 pub mod testkit;
 pub mod util;
 
 pub use anyhow::Result;
+pub use session::{Session, StrategyChoice};

@@ -1,38 +1,35 @@
 //! approxjoin — CLI for the ApproxJoin engine.
 //!
 //! Subcommands:
-//!   query     execute a budget query against a generated workload
-//!   compare   run all join strategies on one workload, print the table
+//!   query     execute a budget query through the Session planner
+//!   explain   print the cost-based JoinPlan for a query without running it
+//!   compare   run every registered join strategy on one workload
 //!   profile   profile β_compute (Fig 5) and persist the cost model
 //!   simulate  closed-form shuffle-volume models (Figs 4/14/15)
 //!
 //! Examples:
 //!   approxjoin query --sql "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k \
 //!                           WITHIN 10 SECONDS" --data synthetic:overlap=0.05
+//!   approxjoin query --sql "..." --strategy bloom
+//!   approxjoin explain --sql "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k"
 //!   approxjoin compare --data synthetic:items=50000,overlap=0.01
 //!   approxjoin profile
 //!   approxjoin simulate --fig 14
 
-use approxjoin::coordinator::{ApproxJoinEngine, EngineConfig};
+use approxjoin::coordinator::EngineConfig;
 use approxjoin::cost::CostModel;
-use approxjoin::data::{
-    generate_overlapping, netflix, network, tpch, Dataset, SyntheticSpec,
-};
-use approxjoin::join::{
-    bloom_join::{bloom_join, FilterConfig, NativeProber},
-    native::native_join,
-    repartition::repartition_join,
-    CombineOp,
-};
+use approxjoin::data::{generate_overlapping, netflix, network, tpch, Dataset, SyntheticSpec};
+use approxjoin::join::{CombineOp, JoinStrategy, StrategyRegistry};
+use approxjoin::session::{Session, StrategyChoice};
 use approxjoin::simulation::{variant_sizes, ShuffleModel};
 use approxjoin::util::{fmt, Table};
 use approxjoin::{query, row};
-use std::collections::HashMap;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("query") => cmd_query(&args[1..]),
+        Some("explain") => cmd_explain(&args[1..]),
         Some("compare") => cmd_compare(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
@@ -54,13 +51,21 @@ fn main() {
 
 fn print_help() {
     println!(
-        "approxjoin — approximate distributed joins (Bloom filtering + \
-         stratified sampling during the join)\n\n\
-         USAGE: approxjoin <query|compare|profile|simulate> [flags]\n\n\
+        "approxjoin — approximate distributed joins behind a cost-based planner\n\
+         (JoinStrategy trait: native | repartition | broadcast | bloom | approx)\n\n\
+         USAGE: approxjoin <query|explain|compare|profile|simulate> [flags]\n\n\
          query    --sql <QUERY> [--data <SPEC>] [--workers N] [--estimator clt|ht]\n\
-         compare  [--data <SPEC>] [--workers N] [--fraction F]\n\
+         \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx]\n\
+         explain  --sql <QUERY> [--data <SPEC>] [--workers N] [--strategy <S>]\n\
+         \u{20}         prints the JoinPlan: input statistics, chosen strategy and\n\
+         \u{20}         the full cost ranking, without executing the join\n\
+         compare  [--data <SPEC>] [--workers N]\n\
          profile  [--out PATH]\n\
          simulate --fig <4a|4b|14|15>\n\n\
+         The planner picks the strategy from input statistics and the cost\n\
+         model (--strategy auto, the default); budget clauses in the query\n\
+         (WITHIN ... SECONDS, ERROR ... CONFIDENCE ...) route to the sampled\n\
+         ApproxJoin pipeline.\n\n\
          DATA SPECS:\n\
            synthetic[:items=N,overlap=F,inputs=N,lambda=F]   (default)\n\
            tpch[:sf=F]        CUSTOMER x ORDERS join input\n\
@@ -73,6 +78,13 @@ fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter()
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn strategy_choice(args: &[String]) -> StrategyChoice {
+    match flag(args, "--strategy").as_deref() {
+        None | Some("auto") => StrategyChoice::Auto,
+        Some(name) => StrategyChoice::named(name),
+    }
 }
 
 /// Parse `synthetic:items=100000,overlap=0.05` style specs into datasets
@@ -121,6 +133,23 @@ fn load_data(spec: &str, workers: usize) -> anyhow::Result<Vec<Dataset>> {
     }
 }
 
+/// Parse the query once and build a session holding the spec'd datasets
+/// renamed to the query's FROM-list table names.
+fn session_for(
+    sql: &str,
+    data: &str,
+    workers: usize,
+    cfg: EngineConfig,
+) -> anyhow::Result<(Session, query::Query)> {
+    let q = query::parse(sql)?;
+    let inputs = load_data(data, workers)?;
+    let mut session = Session::new(cfg)?;
+    for (d, t) in inputs.into_iter().zip(&q.tables) {
+        session = session.with_data(t, d);
+    }
+    Ok((session, q))
+}
+
 fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     let sql = flag(args, "--sql")
         .ok_or_else(|| anyhow::anyhow!("--sql required (see approxjoin help)"))?;
@@ -130,34 +159,31 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         Some("ht") => approxjoin::stats::EstimatorKind::HorvitzThompson,
         _ => approxjoin::stats::EstimatorKind::Clt,
     };
+    let choice = strategy_choice(args);
 
-    let q = query::parse(&sql)?;
-    let inputs = load_data(&data, workers)?;
-    let mut named = HashMap::new();
-    for (d, t) in inputs.iter().zip(&q.tables) {
-        let mut d = d.clone();
-        d.name = t.clone();
-        named.insert(t.clone(), d);
-    }
-
-    let mut engine = ApproxJoinEngine::new(EngineConfig {
+    let (mut session, q) = session_for(
+        &sql,
+        &data,
         workers,
-        estimator,
-        ..Default::default()
-    })?;
+        EngineConfig {
+            workers,
+            estimator,
+            ..Default::default()
+        },
+    )?;
     // use the persisted cost profile when present
     let profile = std::path::Path::new("artifacts/cost_profile.json");
     if profile.exists() {
-        engine.cost = CostModel::load(profile)?;
+        session = session.with_cost_model(CostModel::load(profile)?);
     }
     println!(
         "engine: {} workers, runtime={}",
         workers,
-        if engine.has_runtime() { "xla/pjrt" } else { "native" }
+        if session.has_runtime() { "xla/pjrt" } else { "native" }
     );
 
-    let out = engine.execute(&q, &named)?;
-    println!("mode: {:?}", out.mode);
+    let out = session.query(q).strategy(choice).run()?;
+    println!("strategy: {}   mode: {:?}", out.strategy, out.mode);
     println!(
         "result: {:.4} \u{b1} {:.4}  ({}% confidence, {} samples, df={:.0})",
         out.result.estimate,
@@ -189,46 +215,56 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_explain(args: &[String]) -> anyhow::Result<()> {
+    let sql = flag(args, "--sql")
+        .ok_or_else(|| anyhow::anyhow!("--sql required (see approxjoin help)"))?;
+    let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
+    let choice = strategy_choice(args);
+
+    let (mut session, q) = session_for(
+        &sql,
+        &data,
+        workers,
+        EngineConfig {
+            workers,
+            ..Default::default()
+        },
+    )?;
+    let explanation = session.query(q).strategy(choice).explain()?;
+    print!("{explanation}");
+    Ok(())
+}
+
 fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
     let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
     let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
     let inputs = load_data(&data, workers)?;
     let tm = approxjoin::cluster::TimeModel::default();
     let mk = || approxjoin::cluster::SimCluster::new(workers, tm);
+    let registry = StrategyRegistry::with_defaults();
 
     let mut t = Table::new(&["strategy", "sim time", "shuffled", "output pairs", "SUM"]);
-    let cfg = FilterConfig::for_inputs(&inputs, 0.01);
-
-    let run = bloom_join(&mut mk(), &inputs, CombineOp::Sum, cfg, &mut NativeProber)?;
-    t.row(row![
-        "approxjoin (filter only)",
-        fmt::duration(run.metrics.total_sim_secs()),
-        fmt::bytes(run.metrics.total_shuffled_bytes()),
-        fmt::count(run.output_cardinality() as u64),
-        format!("{:.1}", run.exact_sum())
-    ]);
-
-    let run = repartition_join(&mut mk(), &inputs, CombineOp::Sum);
-    t.row(row![
-        "spark repartition join",
-        fmt::duration(run.metrics.total_sim_secs()),
-        fmt::bytes(run.metrics.total_shuffled_bytes()),
-        fmt::count(run.output_cardinality() as u64),
-        format!("{:.1}", run.exact_sum())
-    ]);
-
-    match native_join(&mut mk(), &inputs, CombineOp::Sum, 4 << 30) {
-        Ok(run) => {
-            t.row(row![
-                "native spark join",
-                fmt::duration(run.metrics.total_sim_secs()),
-                fmt::bytes(run.metrics.total_shuffled_bytes()),
-                fmt::count(run.output_cardinality() as u64),
-                format!("{:.1}", run.exact_sum())
-            ]);
-        }
-        Err(e) => {
-            t.row(row!["native spark join", "OOM", format!("{e}"), "-", "-"]);
+    for strategy in registry.iter() {
+        match strategy.execute(&mut mk(), &inputs, CombineOp::Sum) {
+            Ok(run) => {
+                let sum = if run.sampled {
+                    // sampled strategies report the stratified estimate
+                    approxjoin::stats::clt_sum(&run.strata_vec(), 0.95).estimate
+                } else {
+                    run.exact_sum()
+                };
+                t.row(row![
+                    strategy.name(),
+                    fmt::duration(run.metrics.total_sim_secs()),
+                    fmt::bytes(run.metrics.total_shuffled_bytes()),
+                    fmt::count(run.output_cardinality() as u64),
+                    format!("{sum:.1}")
+                ]);
+            }
+            Err(e) => {
+                t.row(row![strategy.name(), "failed", format!("{e}"), "-", "-"]);
+            }
         }
     }
     t.print();

@@ -1,0 +1,482 @@
+//! The fluent session front end — the one way callers run joins.
+//!
+//! A [`Session`] owns named datasets, an [`ApproxJoinEngine`] (cost model,
+//! feedback store, optional XLA runtime) and a [`StrategyRegistry`]. A
+//! query flows through a [`QueryBuilder`]:
+//!
+//! ```no_run
+//! use approxjoin::coordinator::EngineConfig;
+//! use approxjoin::data::{generate_overlapping, SyntheticSpec};
+//! use approxjoin::session::{Session, StrategyChoice};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let inputs = generate_overlapping(&SyntheticSpec::default());
+//! let outcome = Session::new(EngineConfig::default())?
+//!     .with_data("a", inputs[0].clone())
+//!     .with_data("b", inputs[1].clone())
+//!     .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")?
+//!     .strategy(StrategyChoice::Auto)
+//!     .run()?;
+//! println!("{} via {}", outcome.result.estimate, outcome.strategy);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `strategy(Auto)` lets the cost-based [`Planner`] rank the registered
+//! strategies on input statistics (bloom wins at low key overlap,
+//! repartition at high; a budget in the query routes to the sampled
+//! ApproxJoin pipeline). `strategy(Named("bloom"))` forces one. `plan()` /
+//! `explain()` expose the ranking without executing anything.
+
+use crate::cluster::SimCluster;
+use crate::coordinator::{estimate_result, ApproxJoinEngine, EngineConfig, ExecutionMode, QueryOutcome};
+use crate::cost::CostModel;
+use crate::data::Dataset;
+use crate::join::approx::{ApproxConfig, SamplingParams};
+use crate::join::{
+    ApproxJoin, BloomJoin, BroadcastJoin, InputStats, JoinError, JoinPlan, JoinStrategy,
+    NativeJoin, Planner, RepartitionJoin, StrategyRegistry,
+};
+use crate::query::{parse, Query};
+use crate::stats::EstimatorKind;
+use anyhow::Result;
+use std::collections::HashMap;
+
+pub use crate::join::StrategyChoice;
+
+/// The default registry, parameterized by the session's engine config so
+/// `fp_rate`, `memory_budget`, `estimator` and `seed` carry through to the
+/// strategies the planner hands out.
+fn registry_for(cfg: &EngineConfig) -> StrategyRegistry {
+    let mut r = StrategyRegistry::empty();
+    r.register(Box::new(BloomJoin {
+        fp_rate: cfg.fp_rate,
+        filter: None,
+    }));
+    r.register(Box::new(RepartitionJoin));
+    r.register(Box::new(BroadcastJoin));
+    r.register(Box::new(NativeJoin {
+        memory_budget: cfg.memory_budget,
+    }));
+    r.register(Box::new(ApproxJoin {
+        fp_rate: cfg.fp_rate,
+        filter: None,
+        config: ApproxConfig {
+            params: SamplingParams::Fraction(0.1),
+            estimator: cfg.estimator,
+            seed: cfg.seed,
+        },
+    }));
+    r
+}
+
+/// A connection-like handle: datasets, engine state and the strategy
+/// registry every query planned in this session draws from.
+pub struct Session {
+    engine: ApproxJoinEngine,
+    registry: StrategyRegistry,
+    datasets: HashMap<String, Dataset>,
+}
+
+impl Session {
+    /// Open a session; compiles the AOT artifacts when available.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let registry = registry_for(&cfg);
+        Ok(Self {
+            engine: ApproxJoinEngine::new(cfg)?,
+            registry,
+            datasets: HashMap::new(),
+        })
+    }
+
+    /// Pure-Rust session (no artifacts) — tests, quick starts.
+    pub fn without_runtime(cfg: EngineConfig) -> Result<Self> {
+        let registry = registry_for(&cfg);
+        Ok(Self {
+            engine: ApproxJoinEngine::without_runtime(cfg)?,
+            registry,
+            datasets: HashMap::new(),
+        })
+    }
+
+    /// Register a dataset under the name queries reference it by.
+    pub fn with_data(mut self, name: &str, mut dataset: Dataset) -> Self {
+        dataset.name = name.to_string();
+        self.datasets.insert(name.to_string(), dataset);
+        self
+    }
+
+    /// Register datasets under their own names.
+    pub fn with_datasets(mut self, datasets: impl IntoIterator<Item = Dataset>) -> Self {
+        for d in datasets {
+            self.datasets.insert(d.name.clone(), d);
+        }
+        self
+    }
+
+    /// Use a profiled cost model (β_compute from this host / cluster).
+    pub fn with_cost_model(mut self, cost: CostModel) -> Self {
+        self.engine = self.engine.with_cost_model(cost);
+        self
+    }
+
+    /// Register (or replace) a join strategy — new strategies are a
+    /// registry entry, not a new code path.
+    pub fn with_strategy(mut self, strategy: Box<dyn JoinStrategy>) -> Self {
+        self.registry.register(strategy);
+        self
+    }
+
+    pub fn registry(&self) -> &StrategyRegistry {
+        &self.registry
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        &self.engine.cost
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.engine.has_runtime()
+    }
+
+    /// Escape hatch to the underlying engine (feedback store, cost model).
+    pub fn engine_mut(&mut self) -> &mut ApproxJoinEngine {
+        &mut self.engine
+    }
+
+    /// Parse a budget-SQL query into a [`QueryBuilder`]. The builder
+    /// defaults to [`StrategyChoice::Auto`].
+    pub fn sql(&mut self, text: &str) -> Result<QueryBuilder<'_>> {
+        let query = parse(text)?;
+        Ok(QueryBuilder {
+            session: self,
+            query,
+            choice: StrategyChoice::Auto,
+        })
+    }
+
+    /// Build a query from an already-parsed AST.
+    pub fn query(&mut self, query: Query) -> QueryBuilder<'_> {
+        QueryBuilder {
+            session: self,
+            query,
+            choice: StrategyChoice::Auto,
+        }
+    }
+
+    fn resolve_inputs(&self, query: &Query) -> Result<Vec<Dataset>, JoinError> {
+        let mut inputs = Vec::with_capacity(query.tables.len());
+        for t in &query.tables {
+            match self.datasets.get(t) {
+                Some(d) => inputs.push(d.clone()),
+                None => {
+                    return Err(JoinError::Runtime(format!(
+                        "dataset {t} not registered in this session"
+                    )))
+                }
+            }
+        }
+        Ok(inputs)
+    }
+}
+
+/// One query, ready to plan or run.
+pub struct QueryBuilder<'a> {
+    session: &'a mut Session,
+    query: Query,
+    choice: StrategyChoice,
+}
+
+impl QueryBuilder<'_> {
+    /// Pick how the strategy is chosen: [`StrategyChoice::Auto`] (the
+    /// planner ranks by predicted cost) or `Named` (force one).
+    pub fn strategy(mut self, choice: StrategyChoice) -> Self {
+        self.choice = choice;
+        self
+    }
+
+    pub fn query(&self) -> &Query {
+        &self.query
+    }
+
+    fn stats(&self, inputs: &[Dataset]) -> InputStats {
+        InputStats::collect(
+            inputs,
+            self.session.engine.cfg.workers,
+            &self.session.engine.cfg.time_model,
+        )
+    }
+
+    /// Produce the cost-based [`JoinPlan`] without executing anything.
+    pub fn plan(&self) -> Result<JoinPlan, JoinError> {
+        let inputs = self.session.resolve_inputs(&self.query)?;
+        let stats = self.stats(&inputs);
+        Planner::new(&self.session.registry, &self.session.engine.cost).plan(
+            &stats,
+            &self.choice,
+            &self.query.budget,
+        )
+    }
+
+    /// `plan()` rendered as an EXPLAIN-style string.
+    pub fn explain(&self) -> Result<String, JoinError> {
+        Ok(self.plan()?.explain())
+    }
+
+    /// Plan and execute the query; returns the result with its confidence
+    /// interval, cluster metrics, and the plan that produced it.
+    pub fn run(self) -> Result<QueryOutcome> {
+        let inputs = self.session.resolve_inputs(&self.query)?;
+        let stats = self.stats(&inputs);
+        let session = &mut *self.session;
+        let plan = Planner::new(&session.registry, &session.engine.cost).plan(
+            &stats,
+            &self.choice,
+            &self.query.budget,
+        )?;
+
+        // An approximate plan for a budgeted query goes through the engine:
+        // its §3.2 cost function sizes the sampling fraction from the
+        // *measured* filter time, runs the feedback loop, and may still
+        // conclude the budget is loose enough for the exact (bloom) path.
+        // This covers both Auto and Named("approx") — only an unbudgeted
+        // forced approx run uses the strategy's own fixed sampling config.
+        if plan.approximate && !self.query.budget.is_unbounded() {
+            let mut outcome = session.engine.execute_on(&self.query, &inputs)?;
+            outcome.plan = Some(plan);
+            return Ok(outcome);
+        }
+        if !plan.approximate
+            && !self.query.budget.is_unbounded()
+            && matches!(self.choice, StrategyChoice::Named(_))
+        {
+            // a forced exact strategy cannot honor a sampling budget
+            // (Auto-planned exact means the budget was loose enough)
+            eprintln!(
+                "warning: strategy {} is exact; the query's latency/error \
+                 budget is ignored",
+                plan.strategy
+            );
+        }
+
+        let strategy = session
+            .registry
+            .get(&plan.strategy)
+            .expect("planned strategy is registered");
+        let mut cluster = SimCluster::new(
+            session.engine.cfg.workers,
+            session.engine.cfg.time_model,
+        );
+        let run = strategy.execute(&mut cluster, &inputs, self.query.combine)?;
+
+        let confidence = self
+            .query
+            .budget
+            .error
+            .map(|e| e.confidence)
+            .unwrap_or(0.95);
+        // the draws map is only populated by Horvitz-Thompson sampling
+        let estimator = if run.draws.is_empty() {
+            EstimatorKind::Clt
+        } else {
+            EstimatorKind::HorvitzThompson
+        };
+        let result = estimate_result(
+            self.query.agg,
+            run.sampled,
+            estimator,
+            &run.strata,
+            &run.draws,
+            confidence,
+        );
+        session
+            .engine
+            .feedback
+            .record(&self.query.fingerprint(), &run.strata);
+
+        let output_cardinality: f64 = run.strata.values().map(|s| s.population).sum();
+        let sampled_count: f64 = run.strata.values().map(|s| s.count).sum();
+        let mode = if run.sampled {
+            ExecutionMode::Sampled {
+                fraction: if output_cardinality > 0.0 {
+                    sampled_count / output_cardinality
+                } else {
+                    1.0
+                },
+            }
+        } else {
+            ExecutionMode::Exact
+        };
+        let metrics = run.metrics;
+        Ok(QueryOutcome {
+            sim_secs: metrics.total_sim_secs(),
+            d_dt: metrics.stage_secs("build_filter") + metrics.stage_secs("filter_shuffle"),
+            result,
+            mode,
+            output_cardinality,
+            metrics,
+            strategy: plan.strategy.clone(),
+            plan: Some(plan),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::{generate_overlapping, SyntheticSpec};
+
+    /// Network-bound cluster so strategy ranking is shuffle-driven, plus a
+    /// small worker count to keep the tests quick.
+    fn config() -> EngineConfig {
+        EngineConfig {
+            workers: 4,
+            time_model: TimeModel {
+                bandwidth: 1e6,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+            ..Default::default()
+        }
+    }
+
+    fn workload(overlap: f64) -> Vec<Dataset> {
+        generate_overlapping(&SyntheticSpec {
+            items_per_input: 10_000,
+            overlap_fraction: overlap,
+            lambda: 20.0,
+            partitions: 4,
+            seed: 21,
+            ..Default::default()
+        })
+    }
+
+    fn session_with(overlap: f64) -> Session {
+        let inputs = workload(overlap);
+        Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone())
+            .with_data("b", inputs[1].clone())
+    }
+
+    const SQL: &str = "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k";
+
+    #[test]
+    fn auto_strategy_depends_on_overlap() {
+        let low = session_with(0.01).sql(SQL).unwrap().run().unwrap();
+        assert_eq!(low.strategy, "bloom", "\n{}", low.plan.unwrap().explain());
+        assert_eq!(low.mode, ExecutionMode::Exact);
+
+        let high = session_with(1.0).sql(SQL).unwrap().run().unwrap();
+        assert_eq!(
+            high.strategy,
+            "repartition",
+            "\n{}",
+            high.plan.unwrap().explain()
+        );
+    }
+
+    #[test]
+    fn named_strategies_agree_on_the_exact_answer() {
+        let mut sums = Vec::new();
+        for name in ["native", "repartition", "broadcast", "bloom"] {
+            let mut s = session_with(0.05);
+            let out = s
+                .sql(SQL)
+                .unwrap()
+                .strategy(StrategyChoice::named(name))
+                .run()
+                .unwrap();
+            assert_eq!(out.strategy, name);
+            assert_eq!(out.mode, ExecutionMode::Exact);
+            assert_eq!(out.result.error_bound, 0.0, "{name}");
+            sums.push(out.result.estimate);
+        }
+        for s in &sums[1..] {
+            assert!(
+                (s - sums[0]).abs() < 1e-6 * (1.0 + sums[0].abs()),
+                "{sums:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn named_approx_samples_without_a_budget() {
+        let mut s = session_with(0.2);
+        let exact = s.sql(SQL).unwrap().run().unwrap();
+        let approx = s
+            .sql(SQL)
+            .unwrap()
+            .strategy(StrategyChoice::named("approx"))
+            .run()
+            .unwrap();
+        assert_eq!(approx.strategy, "approx");
+        match approx.mode {
+            ExecutionMode::Sampled { fraction } => {
+                assert!(fraction > 0.0 && fraction < 1.0, "fraction {fraction}")
+            }
+            m => panic!("expected sampled, got {m:?}"),
+        }
+        let rel = (approx.result.estimate - exact.result.estimate).abs()
+            / exact.result.estimate.abs();
+        assert!(rel < 0.1, "rel {rel}");
+        assert!(approx.result.error_bound > 0.0);
+    }
+
+    #[test]
+    fn budgeted_query_routes_through_the_engine() {
+        let mut s = session_with(0.2);
+        let out = s
+            .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN 0.000001 SECONDS")
+            .unwrap()
+            .run()
+            .unwrap();
+        match out.mode {
+            ExecutionMode::Sampled { fraction } => assert!(fraction < 1.0),
+            m => panic!("expected sampled, got {m:?}"),
+        }
+        assert_eq!(out.strategy, "approx");
+        let plan = out.plan.expect("session queries carry a plan");
+        assert!(plan.approximate);
+    }
+
+    #[test]
+    fn unknown_strategy_and_missing_dataset_error() {
+        let mut s = session_with(0.05);
+        let err = s
+            .sql(SQL)
+            .unwrap()
+            .strategy(StrategyChoice::named("hash"))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("unsupported"), "{err:#}");
+
+        let mut empty = Session::without_runtime(config()).unwrap();
+        let err = empty.sql(SQL).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err:#}");
+    }
+
+    #[test]
+    fn explain_without_executing() {
+        let mut s = session_with(0.01);
+        let text = s.sql(SQL).unwrap().explain().unwrap();
+        assert!(text.contains("JoinPlan"), "{text}");
+        assert!(text.contains("<- chosen"), "{text}");
+    }
+
+    #[test]
+    fn fluent_one_liner_chains() {
+        let inputs = workload(0.05);
+        let out = Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone())
+            .with_data("b", inputs[1].clone())
+            .sql(SQL)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(out.result.estimate != 0.0);
+        assert!(out.plan.is_some());
+    }
+}

@@ -3,10 +3,10 @@
 //! rate, and the batching machinery is geometry-invariant.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::CombineOp;
+use approxjoin::data::Dataset;
+use approxjoin::join::approx::{ApproxConfig, NativeAggregator, SamplingParams};
+use approxjoin::join::bloom_join::NativeProber;
+use approxjoin::join::{ApproxJoin, CombineOp, JoinStrategy, NativeJoin};
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::testkit::{check, gen, PropConfig};
 
@@ -21,6 +21,15 @@ fn cluster() -> SimCluster {
     )
 }
 
+fn exact_sum(inputs: &[Dataset]) -> f64 {
+    NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut cluster(), inputs, CombineOp::Sum)
+    .unwrap()
+    .exact_sum()
+}
+
 #[test]
 fn full_fraction_sampling_with_dedup_recovers_exact() {
     // HT path with fraction >= 1 collects every distinct edge -> exact sum
@@ -32,24 +41,15 @@ fn full_fraction_sampling_with_dedup_recovers_exact() {
         },
         |r| {
             let inputs = gen::join_inputs(r, 2, 4);
-            let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
-                .unwrap()
-                .exact_sum();
-            let cfg = ApproxConfig {
+            let exact = exact_sum(&inputs);
+            let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(1.0),
                 estimator: EstimatorKind::HorvitzThompson,
                 seed: r.next_u64(),
-            };
-            let run = approx_join(
-                &mut cluster(),
-                &inputs,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&inputs, 0.01),
-                &cfg,
-                &mut NativeProber,
-                &mut NativeAggregator::default(),
-            )
-            .unwrap();
+            });
+            let run = strategy
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap();
             // dedup sampling at fraction 1 collects (nearly) all edges; the
             // attempt cap can leave a tail stratum short, so allow 2%
             let got: f64 = run.strata.values().map(|s| s.sum).sum();
@@ -72,24 +72,15 @@ fn clt_interval_covers_truth_at_nominal_rate() {
     for _ in 0..reps {
         let mut r = approxjoin::util::Rng::new(seed_rng.next_u64());
         let inputs = gen::join_inputs(&mut r, 2, 4);
-        let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
-            .unwrap()
-            .exact_sum();
-        let cfg = ApproxConfig {
+        let exact = exact_sum(&inputs);
+        let strategy = ApproxJoin::with_config(ApproxConfig {
             params: SamplingParams::Fraction(0.4),
             estimator: EstimatorKind::Clt,
             seed: r.next_u64(),
-        };
-        let run = approx_join(
-            &mut cluster(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &cfg,
-            &mut NativeProber,
-            &mut NativeAggregator::default(),
-        )
-        .unwrap();
+        });
+        let run = strategy
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
         let res = clt_sum(&run.strata_vec(), 0.95);
         if (res.estimate - exact).abs() <= res.error_bound {
             covered += 1;
@@ -106,21 +97,14 @@ fn error_shrinks_with_sampling_fraction() {
     let inputs = gen::join_inputs(&mut r, 2, 4);
     let mut last_bound = f64::INFINITY;
     for fraction in [0.05, 0.2, 0.8] {
-        let cfg = ApproxConfig {
+        let strategy = ApproxJoin::with_config(ApproxConfig {
             params: SamplingParams::Fraction(fraction),
             estimator: EstimatorKind::Clt,
             seed: 9,
-        };
-        let run = approx_join(
-            &mut cluster(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &cfg,
-            &mut NativeProber,
-            &mut NativeAggregator::default(),
-        )
-        .unwrap();
+        });
+        let run = strategy
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
         let res = clt_sum(&run.strata_vec(), 0.95);
         assert!(
             res.error_bound <= last_bound * 1.5,
@@ -147,22 +131,21 @@ fn batching_geometry_invariance() {
             let seed = r.next_u64();
             let mut results = Vec::new();
             for (rows, slots) in [(4096, 256), (64, 8), (16, 2)] {
-                let cfg = ApproxConfig {
+                let strategy = ApproxJoin::with_config(ApproxConfig {
                     params: SamplingParams::Fraction(0.3),
                     estimator: EstimatorKind::Clt,
                     seed,
-                };
+                });
                 let mut agg = NativeAggregator { rows, slots };
-                let run = approx_join(
-                    &mut cluster(),
-                    &inputs,
-                    CombineOp::Sum,
-                    FilterConfig::for_inputs(&inputs, 0.01),
-                    &cfg,
-                    &mut NativeProber,
-                    &mut agg,
-                )
-                .unwrap();
+                let run = strategy
+                    .execute_with(
+                        &mut cluster(),
+                        &inputs,
+                        CombineOp::Sum,
+                        &mut NativeProber,
+                        &mut agg,
+                    )
+                    .unwrap();
                 results.push(clt_sum(&run.strata_vec(), 0.95).estimate);
             }
             assert!(
@@ -187,24 +170,20 @@ fn count_aggregation_is_exact_under_sampling() {
         },
         |r| {
             let inputs = gen::join_inputs(r, 2, 4);
-            let exact = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX)
-                .unwrap()
-                .output_cardinality();
-            let cfg = ApproxConfig {
+            let exact = NativeJoin {
+                memory_budget: u64::MAX,
+            }
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap()
+            .output_cardinality();
+            let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(0.1),
                 estimator: EstimatorKind::Clt,
                 seed: 1,
-            };
-            let run = approx_join(
-                &mut cluster(),
-                &inputs,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&inputs, 0.01),
-                &cfg,
-                &mut NativeProber,
-                &mut NativeAggregator::default(),
-            )
-            .unwrap();
+            });
+            let run = strategy
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap();
             assert_eq!(run.output_cardinality(), exact);
         },
     );

@@ -6,10 +6,8 @@ use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::{post_join_sampling, pre_join_sampling};
 use approxjoin::data::generators::ValueDist;
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
-use approxjoin::join::approx::{approx_join, ApproxConfig, NativeAggregator, SamplingParams};
-use approxjoin::join::bloom_join::{FilterConfig, NativeProber};
-use approxjoin::join::native::native_join;
-use approxjoin::join::CombineOp;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, BloomJoin, CombineOp, JoinStrategy, NativeJoin, RepartitionJoin};
 use approxjoin::stats::{clt_sum, EstimatorKind};
 
 fn cluster() -> SimCluster {
@@ -44,28 +42,25 @@ fn mean_rel_err(f: impl Fn(u64) -> f64, exact: f64, seeds: std::ops::Range<u64>)
 #[test]
 fn figure1_ordering_accuracy_and_work() {
     let inputs = workload();
-    let exact_run = native_join(&mut cluster(), &inputs, CombineOp::Sum, u64::MAX).unwrap();
+    let exact_run = NativeJoin {
+        memory_budget: u64::MAX,
+    }
+    .execute(&mut cluster(), &inputs, CombineOp::Sum)
+    .unwrap();
     let exact = exact_run.exact_sum();
     let fraction = 0.1;
 
     // --- accuracy: during-join ~ post-join << pre-join
     let during = mean_rel_err(
         |seed| {
-            let cfg = ApproxConfig {
+            let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(fraction),
                 estimator: EstimatorKind::Clt,
                 seed,
-            };
-            let run = approx_join(
-                &mut cluster(),
-                &inputs,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&inputs, 0.01),
-                &cfg,
-                &mut NativeProber,
-                &mut NativeAggregator::default(),
-            )
-            .unwrap();
+            });
+            let run = strategy
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap();
             clt_sum(&run.strata_vec(), 0.95).estimate
         },
         exact,
@@ -97,21 +92,14 @@ fn figure1_ordering_accuracy_and_work() {
     );
 
     // --- work: during-join crosses ~fraction of the pairs; post-join all
-    let cfg = ApproxConfig {
+    let strategy = ApproxJoin::with_config(ApproxConfig {
         params: SamplingParams::Fraction(fraction),
         estimator: EstimatorKind::Clt,
         seed: 0,
-    };
-    let during_run = approx_join(
-        &mut cluster(),
-        &inputs,
-        CombineOp::Sum,
-        FilterConfig::for_inputs(&inputs, 0.01),
-        &cfg,
-        &mut NativeProber,
-        &mut NativeAggregator::default(),
-    )
-    .unwrap();
+    });
+    let during_run = strategy
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
     let during_pairs = during_run.metrics.stage("sample").unwrap().items as f64;
     let post_run = post_join_sampling(&mut cluster(), &inputs, CombineOp::Sum, fraction, 0.95, 0);
     let post_pairs = post_run.metrics.stage("join_then_sample").unwrap().items as f64;
@@ -133,19 +121,12 @@ fn shuffle_reduction_vs_repartition_at_low_overlap() {
         seed: 17,
         ..Default::default()
     });
-    let rep = approxjoin::join::repartition::repartition_join(
-        &mut cluster(),
-        &inputs,
-        CombineOp::Sum,
-    );
-    let bj = approxjoin::join::bloom_join::bloom_join(
-        &mut cluster(),
-        &inputs,
-        CombineOp::Sum,
-        FilterConfig::for_inputs(&inputs, 0.01),
-        &mut NativeProber,
-    )
-    .unwrap();
+    let rep = RepartitionJoin
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
+    let bj = BloomJoin::default()
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
     let reduction = rep.metrics.total_shuffled_bytes() as f64
         / bj.metrics.total_shuffled_bytes().max(1) as f64;
     // paper reports 5-82x across configurations; at 1% overlap with eq-27
@@ -169,19 +150,12 @@ fn crossover_at_high_overlap_filtering_loses_its_edge() {
     };
     let ratio_at = |overlap: f64| {
         let inputs = mk_inputs(overlap);
-        let rep = approxjoin::join::repartition::repartition_join(
-            &mut cluster(),
-            &inputs,
-            CombineOp::Sum,
-        );
-        let bj = approxjoin::join::bloom_join::bloom_join(
-            &mut cluster(),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )
-        .unwrap();
+        let rep = RepartitionJoin
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
+        let bj = BloomJoin::default()
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
         bj.metrics.total_shuffled_bytes() as f64 / rep.metrics.total_shuffled_bytes() as f64
     };
     let low = ratio_at(0.01);

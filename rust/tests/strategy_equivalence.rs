@@ -1,12 +1,14 @@
 //! Property tests: all exact join strategies compute the same join, on
-//! arbitrary inputs — the core correctness invariant of the coordinator.
+//! arbitrary inputs — the core correctness invariant behind the planner's
+//! freedom to pick any of them. Everything goes through the
+//! [`JoinStrategy`] trait, exactly as the Session front end does.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::join::bloom_join::{bloom_join, FilterConfig, NativeProber};
-use approxjoin::join::broadcast::broadcast_join;
-use approxjoin::join::native::native_join;
-use approxjoin::join::repartition::repartition_join;
-use approxjoin::join::CombineOp;
+use approxjoin::data::Dataset;
+use approxjoin::join::bloom_join::FilterConfig;
+use approxjoin::join::{
+    BloomJoin, CombineOp, JoinRun, JoinStrategy, NativeJoin, RepartitionJoin, StrategyRegistry,
+};
 use approxjoin::testkit::{check, gen, PropConfig};
 
 fn cluster(k: usize) -> SimCluster {
@@ -20,31 +22,43 @@ fn cluster(k: usize) -> SimCluster {
     )
 }
 
+/// Run every registered exact strategy on the same inputs via the trait.
+fn exact_runs(inputs: &[Dataset], op: CombineOp, k: usize) -> Vec<(&'static str, JoinRun)> {
+    let registry = StrategyRegistry::with_defaults();
+    registry
+        .iter()
+        .filter(|s| !s.is_approximate())
+        .map(|s| {
+            let run = s
+                .execute(&mut cluster(k), inputs, op)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", s.name()));
+            (s.name(), run)
+        })
+        .collect()
+}
+
 #[test]
 fn all_exact_strategies_agree_two_way() {
     check("exact_agree_2way", PropConfig::default(), |r| {
         let k = 1 + r.index(6);
         let inputs = gen::join_inputs(r, 2, k.max(2));
         let op = [CombineOp::Sum, CombineOp::Product][r.index(2)];
-        let nat = native_join(&mut cluster(k), &inputs, op, u64::MAX).unwrap();
-        let rep = repartition_join(&mut cluster(k), &inputs, op);
-        let bc = broadcast_join(&mut cluster(k), &inputs, op);
-        let bj = bloom_join(
-            &mut cluster(k),
-            &inputs,
-            op,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )
-        .unwrap();
-        let base = nat.exact_sum();
-        let tol = 1e-6 * (1.0 + base.abs());
-        assert!((rep.exact_sum() - base).abs() < tol, "repartition");
-        assert!((bc.exact_sum() - base).abs() < tol, "broadcast");
-        assert!((bj.exact_sum() - base).abs() < tol, "bloom");
-        assert_eq!(rep.output_cardinality(), nat.output_cardinality());
-        assert_eq!(bc.output_cardinality(), nat.output_cardinality());
-        assert_eq!(bj.output_cardinality(), nat.output_cardinality());
+        let runs = exact_runs(&inputs, op, k);
+        let (_, base) = &runs[0];
+        let tol = 1e-6 * (1.0 + base.exact_sum().abs());
+        for (name, run) in &runs[1..] {
+            assert!(
+                (run.exact_sum() - base.exact_sum()).abs() < tol,
+                "{name} disagrees: {} vs {}",
+                run.exact_sum(),
+                base.exact_sum()
+            );
+            assert_eq!(
+                run.output_cardinality(),
+                base.output_cardinality(),
+                "{name} cardinality"
+            );
+        }
     });
 }
 
@@ -59,20 +73,15 @@ fn all_exact_strategies_agree_multiway() {
         |r| {
             let n = 3 + r.index(2); // 3- or 4-way
             let inputs = gen::join_inputs(r, n, 4);
-            let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
-            let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
-            let bj = bloom_join(
-                &mut cluster(4),
-                &inputs,
-                CombineOp::Sum,
-                FilterConfig::for_inputs(&inputs, 0.01),
-                &mut NativeProber,
-            )
-            .unwrap();
-            let base = nat.exact_sum();
-            let tol = 1e-6 * (1.0 + base.abs());
-            assert!((rep.exact_sum() - base).abs() < tol);
-            assert!((bj.exact_sum() - base).abs() < tol);
+            let runs = exact_runs(&inputs, CombineOp::Sum, 4);
+            let (_, base) = &runs[0];
+            let tol = 1e-6 * (1.0 + base.exact_sum().abs());
+            for (name, run) in &runs[1..] {
+                assert!(
+                    (run.exact_sum() - base.exact_sum()).abs() < tol,
+                    "{name} disagrees on {n}-way"
+                );
+            }
         },
     );
 }
@@ -80,21 +89,23 @@ fn all_exact_strategies_agree_multiway() {
 #[test]
 fn bloom_join_never_loses_output_pairs() {
     // Bloom filters have false positives but no false negatives: the bloom
-    // join's output cardinality must EQUAL the true join's, always.
+    // join's output cardinality must EQUAL the true join's, always — even
+    // with a deliberately tiny filter.
     check("bloom_no_fn", PropConfig::default(), |r| {
         let inputs = gen::join_inputs(r, 2, 4);
-        let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
-        let bj = bloom_join(
-            &mut cluster(4),
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig {
+        let nat = NativeJoin {
+            memory_budget: u64::MAX,
+        }
+        .execute(&mut cluster(4), &inputs, CombineOp::Sum)
+        .unwrap();
+        let tiny = BloomJoin {
+            fp_rate: 0.01,
+            filter: Some(FilterConfig {
                 log2_bits: 8, // deliberately tiny: many false positives
                 num_hashes: 2,
-            },
-            &mut NativeProber,
-        )
-        .unwrap();
+            }),
+        };
+        let bj = tiny.execute(&mut cluster(4), &inputs, CombineOp::Sum).unwrap();
         assert_eq!(bj.output_cardinality(), nat.output_cardinality());
         assert!(
             (bj.exact_sum() - nat.exact_sum()).abs() < 1e-6 * (1.0 + nat.exact_sum().abs())
@@ -108,17 +119,17 @@ fn bloom_join_shuffles_at_most_repartition_records() {
     // (filters themselves are extra, so compare the record stages).
     check("bloom_shuffle_bound", PropConfig::default(), |r| {
         let inputs = gen::join_inputs(r, 2, 4);
-        let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
-        let mut c = cluster(4);
-        let bj = bloom_join(
-            &mut c,
-            &inputs,
-            CombineOp::Sum,
-            FilterConfig::for_inputs(&inputs, 0.01),
-            &mut NativeProber,
-        )
-        .unwrap();
-        let rep_records = rep.metrics.stage("shuffle").map(|s| s.shuffled_bytes).unwrap_or(0);
+        let rep = RepartitionJoin
+            .execute(&mut cluster(4), &inputs, CombineOp::Sum)
+            .unwrap();
+        let bj = BloomJoin::default()
+            .execute(&mut cluster(4), &inputs, CombineOp::Sum)
+            .unwrap();
+        let rep_records = rep
+            .metrics
+            .stage("shuffle")
+            .map(|s| s.shuffled_bytes)
+            .unwrap_or(0);
         let bj_records = bj
             .metrics
             .stage("filter_shuffle")
@@ -144,11 +155,55 @@ fn strategies_agree_on_generated_workloads() {
             seed: 9,
             ..Default::default()
         });
-        let nat = native_join(&mut cluster(4), &inputs, CombineOp::Sum, u64::MAX).unwrap();
-        let rep = repartition_join(&mut cluster(4), &inputs, CombineOp::Sum);
+        let runs = exact_runs(&inputs, CombineOp::Sum, 4);
+        let (_, base) = &runs[0];
+        for (name, run) in &runs[1..] {
+            assert!(
+                (run.exact_sum() - base.exact_sum()).abs()
+                    < 1e-6 * (1.0 + base.exact_sum().abs()),
+                "{name} at overlap {overlap}"
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_equivalence_chosen_strategy_is_interchangeable() {
+    // whatever the planner picks, the answer is the answer: run the plan's
+    // choice and a fixed reference strategy and compare
+    use approxjoin::cost::CostModel;
+    use approxjoin::data::{generate_overlapping, SyntheticSpec};
+    use approxjoin::join::{InputStats, Planner, StrategyChoice};
+    use approxjoin::query::Budget;
+
+    let registry = StrategyRegistry::with_defaults();
+    let cost = CostModel::default();
+    for overlap in [0.01, 0.5] {
+        let inputs = generate_overlapping(&SyntheticSpec {
+            items_per_input: 5_000,
+            overlap_fraction: overlap,
+            lambda: 20.0,
+            partitions: 4,
+            seed: 33,
+            ..Default::default()
+        });
+        let stats = InputStats::collect(&inputs, 4, &TimeModel::default());
+        let plan = Planner::new(&registry, &cost)
+            .plan(&stats, &StrategyChoice::Auto, &Budget::unbounded())
+            .unwrap();
+        assert!(!plan.approximate);
+        let chosen = registry.get(&plan.strategy).unwrap();
+        let run = chosen
+            .execute(&mut cluster(4), &inputs, CombineOp::Sum)
+            .unwrap();
+        let reference = RepartitionJoin
+            .execute(&mut cluster(4), &inputs, CombineOp::Sum)
+            .unwrap();
         assert!(
-            (rep.exact_sum() - nat.exact_sum()).abs() < 1e-6 * (1.0 + nat.exact_sum().abs()),
-            "overlap {overlap}"
+            (run.exact_sum() - reference.exact_sum()).abs()
+                < 1e-6 * (1.0 + reference.exact_sum().abs()),
+            "plan chose {} at overlap {overlap}",
+            plan.strategy
         );
     }
 }

@@ -1,0 +1,182 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline, so the real
+//! crates.io `anyhow` cannot be fetched. This vendored implementation
+//! provides the subset the `approxjoin` crate uses: [`Error`], [`Result`],
+//! the [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait. Errors carry a message chain (no backtraces): `{}`
+//! prints the outermost message, `{:#}` the full `a: b: c` chain.
+
+use std::fmt;
+
+/// A message-chain error. `chain[0]` is the outermost context message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Build an error from a standard error, capturing its source chain.
+    pub fn new<E: std::error::Error>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to the error side of `Result` / `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.map_err(|e| e.into().context(context()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = fails_io().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let err = fails_io().context("reading manifest").unwrap_err();
+        assert_eq!(err.to_string(), "reading manifest");
+        assert_eq!(format!("{err:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| "missing field").unwrap_err();
+        assert_eq!(err.to_string(), "missing field");
+    }
+
+    #[test]
+    fn macros() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+
+        fn guarded(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 3 {
+                bail!("three is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(guarded(2).unwrap(), 2);
+        assert!(guarded(12).unwrap_err().to_string().contains("too big"));
+        assert!(guarded(3).unwrap_err().to_string().contains("right out"));
+    }
+}
