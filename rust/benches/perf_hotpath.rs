@@ -1,20 +1,26 @@
 //! §Perf: hot-path microbenchmarks for the optimization pass — throughput
 //! of (1) the stratified edge sampler, (2) Bloom probing native vs the AOT
 //! XLA artifact, (3) per-stratum aggregation native vs XLA, (4) the exact
-//! cross product, and (5) end-to-end approx_join. Results feed
-//! EXPERIMENTS.md §Perf (before/after log).
+//! cross product, and (5) end-to-end approx_join, sequential vs the
+//! partition-parallel runtime (the ≥2x-at-8-partitions budget). Results
+//! feed EXPERIMENTS.md §Perf (before/after log).
+//!
+//! Env knobs (the CI bench-smoke job sets both):
+//!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
+//!   BENCH_JSON=path            merge a machine-readable section into the
+//!                              given JSON report (BENCH_PR2.json)
 
 use approxjoin::bloom::BloomFilter;
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::data::{generate_overlapping, SyntheticSpec};
 use approxjoin::join::approx::{ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams};
 use approxjoin::join::bloom_join::{KeyProber, NativeProber};
-use approxjoin::join::{cross_product_agg, ApproxJoin, CombineOp};
+use approxjoin::join::{cross_product_agg, ApproxJoin, CombineOp, JoinStrategy};
 use approxjoin::row;
 use approxjoin::runtime::PjrtRuntime;
 use approxjoin::sampling::edge_sampling::sample_edges_with_replacement;
-use approxjoin::stats::EstimatorKind;
-use approxjoin::util::{fmt, Rng, Table};
+use approxjoin::stats::{clt_sum, EstimatorKind};
+use approxjoin::util::{fmt, Json, Rng, Table};
 use std::time::Instant;
 
 fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -23,9 +29,18 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+fn quick() -> bool {
+    std::env::var("APPROXJOIN_BENCH_QUICK").is_ok()
+}
+
 fn main() {
-    println!("== perf: hot-path throughput ==\n");
+    let quick = quick();
+    println!(
+        "== perf: hot-path throughput{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
     let mut t = Table::new(&["path", "work", "time", "throughput"]);
+    let mut json = Vec::new();
     let mut r = Rng::new(1);
 
     // 1) edge sampler
@@ -33,7 +48,7 @@ fn main() {
         (0..200).map(|i| i as f64).collect::<Vec<_>>(),
         (0..200).map(|i| i as f64 * 0.5).collect::<Vec<_>>(),
     ];
-    let draws = 2_000_000u64;
+    let draws = if quick { 400_000u64 } else { 2_000_000u64 };
     let (_, dt) = time(|| {
         let mut acc = 0.0;
         for _ in 0..20 {
@@ -48,13 +63,15 @@ fn main() {
         fmt::duration(dt),
         format!("{}/s", fmt::count((draws as f64 / dt) as u64))
     ]);
+    json.push(("edge_sampler_draws_per_sec", Json::num(draws as f64 / dt)));
 
     // 2) bloom probe: native vs XLA
     let mut filter = BloomFilter::new(20, 5);
     for _ in 0..100_000 {
         filter.insert(r.next_u32());
     }
-    let keys: Vec<u32> = (0..1_048_576).map(|_| r.next_u32()).collect();
+    let n_keys = if quick { 262_144 } else { 1_048_576 };
+    let keys: Vec<u32> = (0..n_keys).map(|_| r.next_u32()).collect();
     let (_, dt) = time(|| {
         let mut hits = 0u64;
         for &k in &keys {
@@ -93,7 +110,7 @@ fn main() {
     let right: Vec<f64> = (0..b).map(|_| r.f64()).collect();
     let seg: Vec<i32> = (0..b).map(|_| r.index(256) as i32).collect();
     let mask = vec![1.0f64; b];
-    let batches = 200u64;
+    let batches = if quick { 50u64 } else { 200u64 };
     let mut native = NativeAggregator::default();
     let (_, dt) = time(|| {
         for _ in 0..batches {
@@ -124,7 +141,7 @@ fn main() {
     }
 
     // 4) exact cross product
-    let big = vec![1.0f64; 2000];
+    let big = vec![1.0f64; if quick { 1000 } else { 2000 }];
     let (agg, dt) = time(|| cross_product_agg(&[big.clone(), big.clone()], CombineOp::Sum));
     t.row(row![
         "cross product (pairs)",
@@ -133,9 +150,10 @@ fn main() {
         format!("{}/s", fmt::count((agg.population / dt) as u64))
     ]);
 
-    // 5) end-to-end approx_join wall time
+    // 5) end-to-end approx_join wall time: sequential vs the
+    // partition-parallel runtime (same seed -> bit-identical output)
     let inputs = generate_overlapping(&SyntheticSpec {
-        items_per_input: 100_000,
+        items_per_input: if quick { 40_000 } else { 100_000 },
         overlap_fraction: 0.2,
         lambda: 100.0,
         partitions: 20,
@@ -152,24 +170,99 @@ fn main() {
         Some(rt) => Box::new(rt.join_agg().unwrap()),
         None => Box::new(NativeAggregator::default()),
     };
-    let (run, dt) = time(|| {
-        strategy
-            .execute_with(
-                &mut SimCluster::new(10, TimeModel::default()),
-                &inputs,
-                CombineOp::Sum,
-                prober.as_mut(),
-                agg.as_mut(),
-            )
-            .unwrap()
-    });
-    let sampled: f64 = run.strata.values().map(|s| s.count).sum();
+    const PAR_THREADS: usize = 8;
+    let mut run_with = |threads: usize| {
+        let mut cluster = SimCluster::new(10, TimeModel::default()).with_parallelism(threads);
+        time(|| {
+            strategy
+                .execute_with(
+                    &mut cluster,
+                    &inputs,
+                    CombineOp::Sum,
+                    prober.as_mut(),
+                    agg.as_mut(),
+                )
+                .unwrap()
+        })
+    };
+    // one untimed warm-up so the sequential measurement does not also pay
+    // allocator/page-cache warm-up that the parallel run then skips
+    let _ = run_with(1);
+    let (run_seq, dt_seq) = run_with(1);
+    let (run_par, dt_par) = run_with(PAR_THREADS);
+    let sampled: f64 = run_seq.strata.values().map(|s| s.count).sum();
+    let speedup = dt_seq / dt_par.max(1e-12);
     t.row(row![
-        "approx_join end-to-end (wall)",
+        "approx_join end-to-end (1 thread)",
         format!("{} samples", fmt::count(sampled as u64)),
-        fmt::duration(dt),
-        format!("{}/s", fmt::count((sampled / dt) as u64))
+        fmt::duration(dt_seq),
+        format!("{}/s", fmt::count((sampled / dt_seq) as u64))
     ]);
+    t.row(row![
+        format!("approx_join end-to-end ({PAR_THREADS} threads)"),
+        format!("{} samples", fmt::count(sampled as u64)),
+        fmt::duration(dt_par),
+        format!(
+            "{}/s ({} vs 1 thread)",
+            fmt::count((sampled / dt_par) as u64),
+            fmt::speedup(speedup)
+        )
+    ]);
+    // the determinism contract, asserted on every bench run
+    let est_seq = clt_sum(&run_seq.strata_vec(), 0.95).estimate;
+    let est_par = clt_sum(&run_par.strata_vec(), 0.95).estimate;
+    assert_eq!(run_seq.strata, run_par.strata, "parallel output diverged");
+    assert_eq!(
+        run_seq.ledger, run_par.ledger,
+        "parallel shuffle accounting diverged"
+    );
+    assert_eq!(est_seq.to_bits(), est_par.to_bits());
+
+    // sample-mean relative error vs the exact bloom join on the same data
+    let exact = approxjoin::join::BloomJoin::default()
+        .execute(
+            &mut SimCluster::new(10, TimeModel::default()).with_parallelism(PAR_THREADS),
+            &inputs,
+            CombineOp::Sum,
+        )
+        .unwrap();
+    let rel_err = (est_par - exact.exact_sum()).abs() / exact.exact_sum().abs().max(1e-12);
+    println!(
+        "sample-mean relative error vs exact: {} (shuffled {} measured)",
+        fmt::pct(rel_err),
+        fmt::bytes(run_par.ledger.total_bytes())
+    );
 
     t.print();
+
+    json.push(("approx_join_rows_per_sec_seq", Json::num(sampled / dt_seq)));
+    json.push(("approx_join_rows_per_sec_par", Json::num(sampled / dt_par)));
+    json.push(("parallel_threads", Json::num(PAR_THREADS as f64)));
+    // context for reading the speedup: an oversubscribed host (fewer cores
+    // than PAR_THREADS) time-shares the parallel run and caps the ratio
+    json.push((
+        "host_cores",
+        Json::num(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1) as f64,
+        ),
+    ));
+    json.push(("parallel_speedup", Json::num(speedup)));
+    json.push((
+        "shuffled_bytes_measured",
+        Json::num(run_par.ledger.total_bytes() as f64),
+    ));
+    json.push(("sample_mean_rel_err", Json::num(rel_err)));
+    json.push(("quick_mode", Json::Bool(quick)));
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            "perf_hotpath",
+            Json::obj(json.drain(..).collect()),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote perf_hotpath section to {}", path.display());
+    }
 }

@@ -1,6 +1,8 @@
 //! Per-stage metrics: the latency breakdowns (Figure 8's build-filter /
 //! shuffle / cross-product bars) and the shuffled-byte counters (Figures 4,
-//! 9b, 13a) every experiment reports.
+//! 9b, 13a) every experiment reports — plus the [`ShuffleLedger`], the
+//! per-stage / per-worker record of *measured* bytes in and out that the
+//! planner's shuffle predictions are checked against.
 
 /// One named execution stage of a join.
 #[derive(Clone, Debug, Default)]
@@ -54,6 +56,94 @@ impl JoinMetrics {
     }
 }
 
+/// Measured network traffic of one stage, per logical worker (partitions
+/// are striped onto workers, partition j → worker j mod k).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageTraffic {
+    pub stage: String,
+    /// Bytes received by each worker in this stage.
+    pub bytes_in: Vec<u64>,
+    /// Bytes sent by each worker in this stage.
+    pub bytes_out: Vec<u64>,
+}
+
+impl StageTraffic {
+    /// Total bytes that crossed the network in this stage (Σ out == Σ in).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_out.iter().sum()
+    }
+
+    /// in + out of the most-loaded worker — the stage's network bottleneck.
+    pub fn max_worker_bytes(&self) -> u64 {
+        self.bytes_in
+            .iter()
+            .zip(&self.bytes_out)
+            .map(|(&i, &o)| i + o)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The measured shuffle ledger of a join execution: per stage, per worker,
+/// how many bytes actually moved. The analytic cost model *predicts*
+/// shuffle volume; the ledger is what the shuffle fabric *counted* —
+/// `JoinPlan::explain` renders the two side by side, and the Fig 8/9b
+/// shuffle-reduction claims are asserted against the ledger in tests.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShuffleLedger {
+    pub stages: Vec<StageTraffic>,
+}
+
+impl ShuffleLedger {
+    pub fn push(&mut self, t: StageTraffic) {
+        self.stages.push(t);
+    }
+
+    /// Total measured bytes across all stages.
+    pub fn total_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.total_bytes()).sum()
+    }
+
+    /// Measured bytes of one named stage (0 if absent).
+    pub fn stage_bytes(&self, name: &str) -> u64 {
+        self.stages
+            .iter()
+            .filter(|s| s.stage == name)
+            .map(|s| s.total_bytes())
+            .sum()
+    }
+
+    /// Ratio of the most-loaded worker's traffic to the per-worker mean,
+    /// over the whole run — 1.0 means perfectly balanced partitions.
+    pub fn skew(&self) -> f64 {
+        let k = self
+            .stages
+            .iter()
+            .map(|s| s.bytes_in.len())
+            .max()
+            .unwrap_or(0);
+        if k == 0 {
+            return 1.0;
+        }
+        let mut per_worker = vec![0u64; k];
+        for s in &self.stages {
+            for (w, (&bi, &bo)) in s.bytes_in.iter().zip(&s.bytes_out).enumerate() {
+                per_worker[w] += bi + bo;
+            }
+        }
+        let total: u64 = per_worker.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / k as f64;
+        per_worker.iter().copied().max().unwrap_or(0) as f64 / mean
+    }
+
+    pub fn merge(&mut self, other: ShuffleLedger) {
+        self.stages.extend(other.stages);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +170,45 @@ mod tests {
         assert_eq!(m.total_shuffled_bytes(), 150);
         assert_eq!(m.stage_secs("filter"), 1.0);
         assert_eq!(m.stage_secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn ledger_totals_and_stage_lookup() {
+        let mut l = ShuffleLedger::default();
+        l.push(StageTraffic {
+            stage: "shuffle".into(),
+            bytes_in: vec![100, 50, 0, 0],
+            bytes_out: vec![0, 0, 100, 50],
+        });
+        l.push(StageTraffic {
+            stage: "crossproduct".into(),
+            bytes_in: vec![0, 0, 0, 0],
+            bytes_out: vec![0, 0, 0, 0],
+        });
+        assert_eq!(l.total_bytes(), 150);
+        assert_eq!(l.stage_bytes("shuffle"), 150);
+        assert_eq!(l.stage_bytes("crossproduct"), 0);
+        assert_eq!(l.stage_bytes("missing"), 0);
+        assert_eq!(l.stages[0].max_worker_bytes(), 100);
+    }
+
+    #[test]
+    fn ledger_skew_balanced_vs_hot() {
+        let mut balanced = ShuffleLedger::default();
+        balanced.push(StageTraffic {
+            stage: "s".into(),
+            bytes_in: vec![10, 10],
+            bytes_out: vec![10, 10],
+        });
+        assert!((balanced.skew() - 1.0).abs() < 1e-12);
+        let mut hot = ShuffleLedger::default();
+        hot.push(StageTraffic {
+            stage: "s".into(),
+            bytes_in: vec![100, 0],
+            bytes_out: vec![0, 0],
+        });
+        assert!((hot.skew() - 2.0).abs() < 1e-12);
+        assert!((ShuffleLedger::default().skew() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -12,27 +12,50 @@ pub mod shuffle;
 pub mod time_model;
 pub mod tree_reduce;
 
-pub use metrics::{JoinMetrics, StageMetrics};
+pub use metrics::{JoinMetrics, ShuffleLedger, StageMetrics, StageTraffic};
 pub use time_model::TimeModel;
 
+use crate::runtime::parallel::ParallelExecutor;
 use std::time::Instant;
 
 /// A simulated cluster of `k` workers.
+///
+/// `k` is the *accounting* model (how shuffle traffic and per-worker
+/// compute are attributed); `exec` is the *execution* model (how many OS
+/// threads actually run the per-worker tasks on this host). The two are
+/// independent: join results and the shuffle ledger are bit-identical for
+/// any thread count. Per-worker compute *seconds* are wall-clock measured,
+/// though, so simulated-latency readings are cleanest at parallelism 1
+/// (concurrent threads contend for cores); the figure benches use the
+/// sequential executor for exactly that reason.
 #[derive(Clone, Debug)]
 pub struct SimCluster {
     pub k: usize,
     pub time_model: TimeModel,
     pub metrics: JoinMetrics,
+    /// Measured per-stage / per-worker shuffle traffic of the current run.
+    pub ledger: ShuffleLedger,
+    /// Partition-parallel executor the strategies run their loops through.
+    pub exec: ParallelExecutor,
 }
 
 impl SimCluster {
+    /// A sequential cluster (one execution thread) — the reference path.
     pub fn new(k: usize, time_model: TimeModel) -> Self {
         assert!(k >= 1);
         Self {
             k,
             time_model,
             metrics: JoinMetrics::default(),
+            ledger: ShuffleLedger::default(),
+            exec: ParallelExecutor::sequential(),
         }
+    }
+
+    /// Run the per-worker task loops on up to `threads` OS threads.
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.exec = ParallelExecutor::new(threads);
+        self
     }
 
     /// Begin a named stage. Finish it with [`Stage::finish`] to record
@@ -58,6 +81,11 @@ impl SimCluster {
         let sim = self
             .time_model
             .stage_secs(&stage.compute, &per_worker_bytes);
+        self.ledger.push(StageTraffic {
+            stage: stage.name.clone(),
+            bytes_in: stage.bytes_in,
+            bytes_out: stage.bytes_out,
+        });
         self.metrics.push(StageMetrics {
             name: stage.name,
             sim_secs: sim,
@@ -71,6 +99,11 @@ impl SimCluster {
     /// Reset metrics between runs (the cluster itself is stateless).
     pub fn take_metrics(&mut self) -> JoinMetrics {
         std::mem::take(&mut self.metrics)
+    }
+
+    /// Detach the measured shuffle ledger of the finished run.
+    pub fn take_ledger(&mut self) -> ShuffleLedger {
+        std::mem::take(&mut self.ledger)
     }
 
     /// The worker that owns partition `j` (partitions are striped).
@@ -214,5 +247,32 @@ mod tests {
         let m = c.take_metrics();
         assert_eq!(m.stages.len(), 1);
         assert_eq!(c.metrics.stages.len(), 0);
+    }
+
+    #[test]
+    fn ledger_mirrors_stage_traffic() {
+        let mut c = SimCluster::new(4, tm0());
+        let mut s = c.stage("shuffle");
+        s.transfer(0, 1, 500);
+        s.transfer(2, 3, 250);
+        s.finish(&mut c);
+        c.stage("local").finish(&mut c);
+        assert_eq!(c.ledger.total_bytes(), 750);
+        assert_eq!(c.ledger.stage_bytes("shuffle"), 750);
+        assert_eq!(c.ledger.stages[0].bytes_out, vec![500, 0, 250, 0]);
+        assert_eq!(c.ledger.stages[0].bytes_in, vec![0, 500, 0, 250]);
+        // ledger totals always agree with the metrics' shuffled bytes
+        assert_eq!(c.ledger.total_bytes(), c.metrics.total_shuffled_bytes());
+        let l = c.take_ledger();
+        assert_eq!(l.stages.len(), 2);
+        assert!(c.ledger.stages.is_empty());
+    }
+
+    #[test]
+    fn parallelism_is_a_pure_throughput_knob() {
+        let c = SimCluster::new(4, tm0()).with_parallelism(8);
+        assert_eq!(c.exec.threads(), 8);
+        assert_eq!(c.k, 4);
+        assert!(SimCluster::new(4, tm0()).exec.is_sequential());
     }
 }

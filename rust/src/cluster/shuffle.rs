@@ -2,6 +2,12 @@
 //! exact byte accounting — Spark's `cogroup()` data movement (§4: "the data
 //! shuffled by the cogroup() function is the output of the filtering
 //! stage").
+//!
+//! Both shuffles are single accounting-bound passes: hashing a key costs
+//! no more than recording its transfer, so there is nothing to win from
+//! parallelizing here. (The filtering stage's expensive predicate — the
+//! Bloom probe — runs data-parallel in `join::bloom_join` before its
+//! shuffle walk.)
 
 use super::{SimCluster, Stage};
 use crate::data::{partition_of, Dataset, Record};
@@ -28,8 +34,9 @@ pub fn shuffle_dataset(
     out
 }
 
-/// Shuffle only the records passing `keep` — the post-filter shuffle of
-/// ApproxJoin's stage 1.
+/// Shuffle only the records passing `keep` — the shape of ApproxJoin's
+/// stage-1 post-filter shuffle (`join::bloom_join::filter_and_shuffle`
+/// inlines this walk over its precomputed probe masks).
 pub fn shuffle_filtered(
     cluster: &SimCluster,
     stage: &mut Stage,

@@ -35,8 +35,11 @@ pub fn tree_reduce(
 }
 
 /// Build the dataset filter for one input (Alg 1 buildInputFilter): map
-/// phase builds one partition filter per worker-resident partition chunk,
-/// reduce phase tree-merges them with OR.
+/// phase builds one partition filter per worker-resident partition chunk —
+/// the per-worker Bloom *shards* run data-parallel through the cluster's
+/// executor — and the reduce phase tree-merges the shards with OR,
+/// accounting one filter-sized transfer per merge as before. Bit insertion
+/// is idempotent, so the shard contents are identical for any thread count.
 pub fn build_dataset_filter(
     cluster: &SimCluster,
     stage: &mut Stage,
@@ -44,23 +47,27 @@ pub fn build_dataset_filter(
     log2_bits: u32,
     num_hashes: u32,
 ) -> BloomFilter {
-    // map: one partition filter per worker (workers own striped partitions)
-    let mut per_worker: Vec<Option<BloomFilter>> = vec![None; cluster.k];
-    for (j, part) in dataset.partitions.iter().enumerate() {
-        let w = cluster.worker_of_partition(j);
-        let f = per_worker[w].get_or_insert_with(|| BloomFilter::new(log2_bits, num_hashes));
-        stage.task(w, || {
+    // map: one shard per worker, built from its striped partitions
+    let k = cluster.k;
+    let shards: Vec<(Option<BloomFilter>, f64)> = cluster.exec.map(k, |w| {
+        let t0 = std::time::Instant::now();
+        let mut f: Option<BloomFilter> = None;
+        for part in dataset.partitions.iter().skip(w).step_by(k) {
+            let f = f.get_or_insert_with(|| BloomFilter::new(log2_bits, num_hashes));
             for r in part {
                 f.insert_key64(r.key);
             }
-        });
+        }
+        (f, t0.elapsed().as_secs_f64())
+    });
+    let mut filters: Vec<(usize, BloomFilter)> = Vec::with_capacity(k);
+    for (w, (f, secs)) in shards.into_iter().enumerate() {
+        stage.add_compute(w, secs);
+        if let Some(f) = f {
+            filters.push((w, f));
+        }
     }
     stage.add_items(dataset.len());
-    let filters: Vec<(usize, BloomFilter)> = per_worker
-        .into_iter()
-        .enumerate()
-        .filter_map(|(w, f)| f.map(|f| (w, f)))
-        .collect();
     tree_reduce(stage, filters, |a, b| a.union_with(b))
         .unwrap_or_else(|| BloomFilter::new(log2_bits, num_hashes))
 }

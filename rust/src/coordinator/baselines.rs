@@ -11,7 +11,8 @@ use crate::cluster::shuffle::shuffle_dataset;
 use crate::cluster::{JoinMetrics, SimCluster};
 use crate::data::Dataset;
 use crate::join::{group_by_key, CombineOp, JoinStrategy, RepartitionJoin};
-use crate::sampling::stratified::{post_join_reservoir, sample_by_key};
+use crate::runtime::ParallelExecutor;
+use crate::sampling::stratified::{post_join_reservoir_strata, sample_by_key};
 use crate::stats::{clt_sum, ApproxResult, StratumAgg};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -45,26 +46,33 @@ pub fn post_join_sampling(
     s.finish(cluster);
 
     // full cross product with inline reservoir (the reservoir does not
-    // reduce the enumeration cost — that is the point of this baseline)
+    // reduce the enumeration cost — that is the point of this baseline);
+    // strata run data-parallel with per-(seed, key) RNGs, so the result is
+    // identical for any worker visit order or thread count
     let mut s = cluster.stage("join_then_sample");
-    let mut rng = Rng::new(seed);
-    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
-    for w in 0..cluster.k {
+    let exec = cluster.exec;
+    let per_worker = exec.map(cluster.k, |w| {
         let per_input: Vec<Vec<crate::data::Record>> =
             shuffled.iter().map(|inp| inp[w].clone()).collect();
-        let mut r = rng.fork(w as u64);
         let t0 = Instant::now();
-        let groups = group_by_key(&per_input);
-        let mut pairs = 0u64;
-        for (key, sides) in groups {
-            if sides.iter().any(|s| s.is_empty()) {
-                continue;
-            }
-            let agg = post_join_reservoir(&sides, fraction, op, &mut r);
-            pairs += agg.population as u64;
-            strata.insert(key, agg);
-        }
-        s.add_compute(w, t0.elapsed().as_secs_f64());
+        let mut groups = group_by_key(&per_input);
+        groups.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+        // the worker-level map above is already parallel; strata within a
+        // worker run sequentially to avoid nested thread scopes
+        let local = post_join_reservoir_strata(
+            &groups,
+            fraction,
+            op,
+            seed,
+            &ParallelExecutor::sequential(),
+        );
+        let pairs: u64 = local.values().map(|a| a.population as u64).sum();
+        (local, pairs, t0.elapsed().as_secs_f64())
+    });
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for (w, (local, pairs, secs)) in per_worker.into_iter().enumerate() {
+        strata.extend(local);
+        s.add_compute(w, secs);
         s.add_items(pairs);
     }
     s.finish(cluster);

@@ -9,6 +9,15 @@ use std::path::PathBuf;
 pub struct EngineConfig {
     /// Logical workers in the simulated cluster (the paper's k).
     pub workers: usize,
+    /// OS threads the partition-parallel executor runs the per-worker
+    /// task loops on. A throughput knob: given the same sampling decisions
+    /// (fixed seed + fixed sampling params), results are bit-identical for
+    /// any value (see `runtime::parallel`). Latency-budgeted queries are
+    /// the exception — the engine sizes their sampling fraction from
+    /// *measured* filter wall time, which varies with thread count and
+    /// load. Defaults to `runtime::default_parallelism()`; 1 forces the
+    /// sequential path.
+    pub parallelism: usize,
     pub time_model: TimeModel,
     /// Bloom filter false-positive target (eq 27 sizing); the filter
     /// geometry snaps to the AOT artifact's (2^20, h=5) when compatible so
@@ -31,6 +40,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             workers: 10, // the paper's cluster size
+            parallelism: crate::runtime::default_parallelism(),
             time_model: TimeModel::default(),
             fp_rate: 0.01,
             pin_artifact_filter_geometry: false,
@@ -57,5 +67,6 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.workers, 10);
         assert_eq!(c.fp_rate, 0.01);
+        assert!(c.parallelism >= 1);
     }
 }

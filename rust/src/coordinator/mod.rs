@@ -12,7 +12,7 @@ pub mod config;
 
 pub use config::EngineConfig;
 
-use crate::cluster::{JoinMetrics, SimCluster};
+use crate::cluster::{JoinMetrics, ShuffleLedger, SimCluster};
 use crate::cost::{CostModel, FeedbackStore};
 use crate::data::Dataset;
 use crate::join::approx::{
@@ -45,6 +45,8 @@ pub enum ExecutionMode {
 pub struct QueryOutcome {
     pub result: ApproxResult,
     pub metrics: JoinMetrics,
+    /// Measured per-stage / per-worker shuffle traffic of the run.
+    pub ledger: ShuffleLedger,
     pub mode: ExecutionMode,
     /// Simulated seconds the whole query took on the modeled cluster.
     pub sim_secs: f64,
@@ -128,6 +130,7 @@ impl ApproxJoinEngine {
 
     fn cluster(&self) -> SimCluster {
         SimCluster::new(self.cfg.workers, self.cfg.time_model)
+            .with_parallelism(self.cfg.parallelism)
     }
 
     fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
@@ -240,10 +243,12 @@ impl ApproxJoinEngine {
         self.feedback.record(&fingerprint, &strata);
 
         let metrics = cluster.take_metrics();
+        let ledger = cluster.take_ledger();
         Ok(QueryOutcome {
             sim_secs: metrics.total_sim_secs(),
             result,
             metrics,
+            ledger,
             mode,
             d_dt,
             output_cardinality: strata.values().map(|s| s.population).sum(),
@@ -292,17 +297,20 @@ pub(crate) fn estimate_result(
     draws: &HashMap<u64, f64>,
     confidence: f64,
 ) -> ApproxResult {
-    let strata_vec: Vec<StratumAgg> = strata.values().copied().collect();
+    // ascending key order: f64 accumulation in the estimators must not
+    // depend on HashMap iteration order, or identical runs would differ
+    // in low-order bits
+    let mut order: Vec<u64> = strata.keys().copied().collect();
+    order.sort_unstable();
+    let strata_vec: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
     match (agg, sampled, estimator) {
         (AggFunc::Count, _, _) => exact_count(&strata_vec, confidence),
         (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
-            let order: Vec<u64> = strata.keys().copied().collect();
-            let s: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
             let d: Vec<f64> = order
                 .iter()
                 .map(|k| draws.get(k).copied().unwrap_or(0.0))
                 .collect();
-            horvitz_thompson_sum(&s, &d, confidence)
+            horvitz_thompson_sum(&strata_vec, &d, confidence)
         }
         (AggFunc::Sum, _, _) => clt_sum(&strata_vec, confidence),
         (AggFunc::Avg, _, _) => clt_avg(&strata_vec, confidence),
@@ -345,6 +353,9 @@ mod tests {
         assert_eq!(out.result.error_bound, 0.0);
         assert!(out.result.estimate != 0.0);
         assert!(out.output_cardinality > 0.0);
+        // the measured ledger always agrees with the metrics totals
+        assert_eq!(out.ledger.total_bytes(), out.metrics.total_shuffled_bytes());
+        assert!(!out.ledger.stages.is_empty());
     }
 
     #[test]

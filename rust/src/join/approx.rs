@@ -98,6 +98,14 @@ pub trait BatchAggregator {
 
     /// Stratum slots per batch (the artifact's STRATA).
     fn strata_slots(&self) -> usize;
+
+    /// An independent same-geometry aggregator for a parallel worker, when
+    /// aggregation is safe to run concurrently. `None` (the default) keeps
+    /// the aggregation phase sequential — the XLA executor owns mutable
+    /// device buffers and stays on this path.
+    fn fork(&self) -> Option<Box<dyn BatchAggregator + Send>> {
+        None
+    }
 }
 
 /// Pure-Rust aggregator with the same geometry as the artifact.
@@ -149,6 +157,13 @@ impl BatchAggregator for NativeAggregator {
     fn strata_slots(&self) -> usize {
         self.slots
     }
+
+    fn fork(&self) -> Option<Box<dyn BatchAggregator + Send>> {
+        Some(Box::new(NativeAggregator {
+            rows: self.rows,
+            slots: self.slots,
+        }))
+    }
 }
 
 /// Run the full approximate join.
@@ -166,6 +181,7 @@ pub fn approx_join(
     Ok(JoinRun {
         strata,
         metrics: cluster.take_metrics(),
+        ledger: cluster.take_ledger(),
         sampled: true,
         draws,
     })
@@ -173,6 +189,16 @@ pub fn approx_join(
 
 /// The sampling stage alone (Alg 2 over already-filtered groups) — used by
 /// the engine after the exact-vs-approx decision.
+///
+/// Per-stratum sampling runs data-parallel across the workers through the
+/// cluster's executor: the per-worker RNGs are forked **in worker order**
+/// before any thread starts (the exact stream the sequential walk
+/// produces), each worker owns its keys (hash-partitioned), and partial
+/// results merge back in worker order — so the output is bit-identical to
+/// the sequential path for a fixed seed, at any thread count. Forkable
+/// aggregators (the native one) aggregate in parallel too; the XLA
+/// `join_agg` executor aggregates sequentially over the parallel-drawn
+/// samples.
 pub fn sample_stage(
     cluster: &mut SimCluster,
     filtered: &super::bloom_join::Filtered,
@@ -181,75 +207,121 @@ pub fn sample_stage(
     agg: &mut dyn BatchAggregator,
 ) -> anyhow::Result<(HashMap<u64, StratumAgg>, HashMap<u64, f64>)> {
     let mut s = cluster.stage("sample");
+    let exec = cluster.exec;
+    let n_workers = filtered.per_worker.len();
     let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
     let mut draws: HashMap<u64, f64> = HashMap::new();
+    // fork per-worker RNGs sequentially, in worker order — the fork
+    // sequence (and so every stream) matches the sequential walk exactly
     let mut rng = Rng::new(cfg.seed);
+    let worker_rngs: Vec<Rng> = (0..n_workers).map(|w| rng.fork(w as u64 + 1)).collect();
 
     match cfg.estimator {
         EstimatorKind::Clt => {
-            // with-replacement sampling; aggregation via the BatchAggregator
-            // (AOT join_agg on the production path)
+            // with-replacement sampling streamed straight into the
+            // BatchAggregator (AOT join_agg on the production path): one
+            // stratum's pairs live only until its batch push, and every
+            // worker owns a FRESH batch — batch boundaries decide where
+            // partial f64 sums split, so a fixed per-worker geometry keeps
+            // the addition tree identical for any thread count. Keys are
+            // visited in sorted order: the per-worker RNG stream is shared
+            // across strata, so a deterministic order makes every run (and
+            // the XLA vs native paths) replayable.
             let rows = agg.batch_rows();
             let slots = agg.strata_slots();
-            let mut batch = Batch::new(rows, slots);
-            for (w, groups) in filtered.per_worker.iter().enumerate() {
-                let mut r = rng.fork(w as u64 + 1);
+            let drain_worker = |w: usize,
+                                local_agg: &mut dyn BatchAggregator|
+             -> anyhow::Result<(HashMap<u64, StratumAgg>, u64, f64)> {
+                let groups = &filtered.per_worker[w];
+                let mut r = worker_rngs[w].clone();
                 let t0 = Instant::now();
+                let mut local: HashMap<u64, StratumAgg> = HashMap::new();
+                let mut batch = Batch::new(rows, slots);
                 let mut sampled_pairs = 0u64;
-                // iterate keys in sorted order: the per-worker RNG stream
-                // is shared across strata, so a deterministic visit order
-                // makes every run (and the XLA vs native paths) replayable
                 let mut keys: Vec<u64> = groups.keys().copied().collect();
                 keys.sort_unstable();
-                for key in &keys {
-                    let sides = &groups[key];
+                for key in keys {
+                    let sides = &groups[&key];
                     let pop = population(sides);
                     if pop == 0.0 {
                         continue;
                     }
-                    let b = cfg.params.sample_size(*key, pop);
+                    let b = cfg.params.sample_size(key, pop);
                     let mut pairs = SampledPairs::default();
                     sample_pairs_with_replacement(&mut r, sides, b, op, &mut pairs);
                     sampled_pairs += pairs.len() as u64;
-                    strata
-                        .entry(*key)
+                    local
+                        .entry(key)
                         .or_insert_with(|| StratumAgg {
                             population: pop,
                             ..Default::default()
                         })
                         .population = pop;
-                    batch.push_key(*key, &pairs, op, agg, &mut strata)?;
+                    batch.push_key(key, &pairs, op, local_agg, &mut local)?;
                 }
-                s.add_compute(w, t0.elapsed().as_secs_f64());
+                batch.flush(op, local_agg, &mut local)?;
+                Ok((local, sampled_pairs, t0.elapsed().as_secs_f64()))
+            };
+
+            let results: Vec<anyhow::Result<(HashMap<u64, StratumAgg>, u64, f64)>> =
+                if agg.fork().is_some() && !exec.is_sequential() {
+                    // forkable aggregator: each worker drains through its
+                    // own instance, fully parallel
+                    let forks: Vec<Box<dyn BatchAggregator + Send>> = (0..n_workers)
+                        .map(|_| agg.fork().expect("forkable aggregator"))
+                        .collect();
+                    exec.map_with(forks, |w, local_agg| drain_worker(w, &mut **local_agg))
+                } else {
+                    // one shared aggregator (the XLA path): drain the
+                    // workers sequentially, in worker order
+                    (0..n_workers).map(|w| drain_worker(w, agg)).collect()
+                };
+            for (w, r) in results.into_iter().enumerate() {
+                let (local, sampled_pairs, secs) = r?;
+                strata.extend(local);
+                s.add_compute(w, secs);
                 s.add_items(sampled_pairs);
             }
-            batch.flush(op, agg, &mut strata)?;
         }
         EstimatorKind::HorvitzThompson => {
-            // dedup sampling aggregates locally (a hash set is inherently
-            // sequential per stratum)
-            for (w, groups) in filtered.per_worker.iter().enumerate() {
-                let mut r = rng.fork(w as u64 + 1);
+            // dedup sampling aggregates locally per worker (a hash set is
+            // inherently sequential per stratum), fully parallel across
+            // workers; keys sorted for a replayable per-worker RNG stream
+            type HtOut = (HashMap<u64, StratumAgg>, HashMap<u64, f64>, u64, f64);
+            let results: Vec<HtOut> = exec.map(n_workers, |w| {
+                let groups = &filtered.per_worker[w];
+                let mut r = worker_rngs[w].clone();
                 let t0 = Instant::now();
+                let mut local_strata = HashMap::new();
+                let mut local_draws = HashMap::new();
                 let mut sampled_pairs = 0u64;
-                // iterate keys in sorted order: the per-worker RNG stream
-                // is shared across strata, so a deterministic visit order
-                // makes every run (and the XLA vs native paths) replayable
                 let mut keys: Vec<u64> = groups.keys().copied().collect();
                 keys.sort_unstable();
-                for key in &keys {
-                    let sides = &groups[key];
+                for key in keys {
+                    let sides = &groups[&key];
                     let pop = population(sides);
                     if pop == 0.0 {
                         continue;
                     }
-                    let b = cfg.params.sample_size(*key, pop);
+                    let b = cfg.params.sample_size(key, pop);
                     let (agg_k, dr) = sample_edges_dedup(&mut r, sides, b, op);
                     sampled_pairs += dr as u64;
-                    strata.insert(*key, agg_k);
-                    draws.insert(*key, dr);
+                    local_strata.insert(key, agg_k);
+                    local_draws.insert(key, dr);
                 }
-                s.add_compute(w, t0.elapsed().as_secs_f64());
+                (
+                    local_strata,
+                    local_draws,
+                    sampled_pairs,
+                    t0.elapsed().as_secs_f64(),
+                )
+            });
+            for (w, (local_strata, local_draws, sampled_pairs, secs)) in
+                results.into_iter().enumerate()
+            {
+                strata.extend(local_strata);
+                draws.extend(local_draws);
+                s.add_compute(w, secs);
                 s.add_items(sampled_pairs);
             }
         }

@@ -8,6 +8,11 @@
 //! dataset filters into the *join filter* at the master; (3) broadcast the
 //! join filter; (4) drop every local record whose key misses the filter;
 //! (5) shuffle only the survivors and cogroup by key.
+//!
+//! Filter construction (per-worker Bloom shards), probing, cogrouping and
+//! the cross product all run data-parallel through the cluster's
+//! [`crate::runtime::ParallelExecutor`], bit-identical to the sequential
+//! path.
 
 use super::{group_by_key, CombineOp, JoinError, JoinRun};
 use crate::bloom::hashing::fold_key;
@@ -54,6 +59,13 @@ impl FilterConfig {
 pub trait KeyProber {
     /// For each folded key, whether it may be in the filter.
     fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> anyhow::Result<Vec<bool>>;
+
+    /// An independent prober for a parallel worker, when probing is safe to
+    /// run concurrently. `None` (the default) keeps probing sequential —
+    /// the XLA executor owns mutable device buffers and stays on this path.
+    fn fork(&self) -> Option<Box<dyn KeyProber + Send>> {
+        None
+    }
 }
 
 /// Pure-Rust prober (the default).
@@ -62,6 +74,53 @@ pub struct NativeProber;
 impl KeyProber for NativeProber {
     fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> anyhow::Result<Vec<bool>> {
         Ok(keys.iter().map(|&k| filter.contains(k)).collect())
+    }
+
+    fn fork(&self) -> Option<Box<dyn KeyProber + Send>> {
+        Some(Box::new(NativeProber))
+    }
+}
+
+/// Probe every partition of one dataset against the join filter, returning
+/// (mask, measured seconds) per partition. Forkable probers run the
+/// partitions data-parallel through `cluster.exec`; others probe
+/// sequentially in partition order. Probing is pure membership lookup, so
+/// both paths produce identical masks.
+fn probe_partitions(
+    cluster: &SimCluster,
+    dataset: &Dataset,
+    join_filter: &BloomFilter,
+    prober: &mut dyn KeyProber,
+) -> anyhow::Result<Vec<(Vec<bool>, f64)>> {
+    let n_parts = dataset.partitions.len();
+    if !cluster.exec.is_sequential() {
+        // one independent prober per partition, each moved into its
+        // thread stripe by map_with (no locks)
+        let forks: Option<Vec<Box<dyn KeyProber + Send>>> =
+            (0..n_parts).map(|_| prober.fork()).collect();
+        if let Some(forks) = forks {
+            let results = cluster.exec.map_with(forks, |j, local| {
+                let t0 = Instant::now();
+                let keys: Vec<u32> =
+                    dataset.partitions[j].iter().map(|r| fold_key(r.key)).collect();
+                let mask = local.probe(join_filter, &keys);
+                (mask, t0.elapsed().as_secs_f64())
+            });
+            return results
+                .into_iter()
+                .map(|(mask, secs)| Ok((mask?, secs)))
+                .collect();
+        }
+    }
+    {
+        let mut out = Vec::with_capacity(n_parts);
+        for part in &dataset.partitions {
+            let t0 = Instant::now();
+            let keys: Vec<u32> = part.iter().map(|r| fold_key(r.key)).collect();
+            let mask = prober.probe(join_filter, &keys)?;
+            out.push((mask, t0.elapsed().as_secs_f64()));
+        }
+        Ok(out)
     }
 }
 
@@ -116,14 +175,14 @@ pub fn filter_and_shuffle(
     let mut shuffled_inputs: Vec<Vec<Vec<crate::data::Record>>> = Vec::with_capacity(n);
     let mut survivors = Vec::with_capacity(n);
     for d in inputs {
-        // probe per partition, attributed to the owning worker
+        // probe per partition (data-parallel for forkable probers),
+        // attributed to the owning worker
         let mut keep: Vec<Vec<bool>> = Vec::with_capacity(d.partitions.len());
-        for (j, part) in d.partitions.iter().enumerate() {
-            let w = cluster.worker_of_partition(j);
-            let t0 = Instant::now();
-            let keys: Vec<u32> = part.iter().map(|r| fold_key(r.key)).collect();
-            let mask = prober.probe(&join_filter, &keys)?;
-            s.add_compute(w, t0.elapsed().as_secs_f64());
+        for (j, (mask, secs)) in probe_partitions(cluster, d, &join_filter, prober)?
+            .into_iter()
+            .enumerate()
+        {
+            s.add_compute(cluster.worker_of_partition(j), secs);
             keep.push(mask);
         }
         // shuffle only the records the mask kept (explicit walk in the
@@ -148,20 +207,18 @@ pub fn filter_and_shuffle(
     }
     d_dt += s.finish(cluster);
 
-    // cogroup per worker
-    let per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>> = (0..cluster.k)
-        .map(|w| {
-            let per_input: Vec<Vec<crate::data::Record>> = shuffled_inputs
-                .iter()
-                .map(|inp| inp[w].clone())
-                .collect();
-            let mut g = group_by_key(&per_input);
-            // keys that survived the (false-positive-prone) filter but are
-            // missing from some input produce no output pairs; drop them
-            g.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
-            g
-        })
-        .collect();
+    // cogroup per worker (data-parallel; each worker owns its shard)
+    let per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>> = cluster.exec.map(cluster.k, |w| {
+        let per_input: Vec<Vec<crate::data::Record>> = shuffled_inputs
+            .iter()
+            .map(|inp| inp[w].clone())
+            .collect();
+        let mut g = group_by_key(&per_input);
+        // keys that survived the (false-positive-prone) filter but are
+        // missing from some input produce no output pairs; drop them
+        g.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+        g
+    });
 
     Ok(Filtered {
         per_worker,
@@ -180,16 +237,26 @@ pub fn cross_product_stage(
     op: CombineOp,
 ) -> HashMap<u64, StratumAgg> {
     let mut s = cluster.stage("crossproduct");
-    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
-    for (w, groups) in filtered.per_worker.iter().enumerate() {
+    let exec = cluster.exec;
+    // each worker streams its own keys' cross products in parallel; the
+    // hash shuffle put every key on exactly one worker, so the merged map
+    // is identical for any thread count
+    let per_worker = exec.map(filtered.per_worker.len(), |w| {
+        let groups = &filtered.per_worker[w];
         let t0 = Instant::now();
+        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
         let mut pairs = 0u64;
         for (key, sides) in groups {
             let agg = super::cross_product_agg(sides, op);
             pairs += agg.population as u64;
-            strata.insert(*key, agg);
+            local.insert(*key, agg);
         }
-        s.add_compute(w, t0.elapsed().as_secs_f64());
+        (local, pairs, t0.elapsed().as_secs_f64())
+    });
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for (w, (local, pairs, secs)) in per_worker.into_iter().enumerate() {
+        strata.extend(local);
+        s.add_compute(w, secs);
         s.add_items(pairs);
     }
     s.finish(cluster);
@@ -207,7 +274,8 @@ pub fn bloom_join(
 ) -> Result<JoinRun, JoinError> {
     let filtered = filter_and_shuffle(cluster, inputs, cfg, prober)?;
     let strata = cross_product_stage(cluster, &filtered, op);
-    Ok(JoinRun::exact(strata, cluster.take_metrics()))
+    let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
 }
 
 #[cfg(test)]

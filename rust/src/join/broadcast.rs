@@ -45,44 +45,58 @@ pub fn broadcast_join(
         .map(|(_, d)| d.iter().copied().collect())
         .collect();
 
+    // data-parallel across the big input's partitions; partial aggregates
+    // merge back in partition order, so the per-key f64 addition sequence
+    // matches the sequential walk exactly
+    let n_inputs = inputs.len();
+    let per_partition = cluster
+        .exec
+        .map(inputs[largest].partitions.len(), |j| {
+            let part = &inputs[largest].partitions[j];
+            let t0 = Instant::now();
+            // group: local slice of the big input + full copies of the
+            // others, ordered so combine() sees sides in input order
+            let mut per_input: Vec<Vec<crate::data::Record>> = Vec::with_capacity(n_inputs);
+            let mut si = 0;
+            for i in 0..n_inputs {
+                if i == largest {
+                    per_input.push(part.clone());
+                } else {
+                    per_input.push(small_all[si].clone());
+                    si += 1;
+                }
+            }
+            let groups = group_by_key(&per_input);
+            let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
+            let mut pairs = 0u64;
+            for (key, sides) in groups {
+                if sides.iter().any(|s| s.is_empty()) {
+                    continue;
+                }
+                let agg = super::cross_product_agg(&sides, op);
+                pairs += agg.population as u64;
+                local.insert(key, agg);
+            }
+            (local, pairs, t0.elapsed().as_secs_f64())
+        });
     let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
-    for (j, part) in inputs[largest].partitions.iter().enumerate() {
-        let w = cluster.worker_of_partition(j);
-        let t0 = Instant::now();
-        // group: local slice of the big input + full copies of the others,
-        // ordered so combine() sees sides in the original input order
-        let mut per_input: Vec<Vec<crate::data::Record>> = Vec::with_capacity(inputs.len());
-        let mut si = 0;
-        for i in 0..inputs.len() {
-            if i == largest {
-                per_input.push(part.clone());
-            } else {
-                per_input.push(small_all[si].clone());
-                si += 1;
-            }
-        }
-        let groups = group_by_key(&per_input);
-        let mut pairs = 0u64;
-        for (key, sides) in groups {
-            if sides.iter().any(|s| s.is_empty()) {
-                continue;
-            }
-            let agg = super::cross_product_agg(&sides, op);
-            pairs += agg.population as u64;
-            // the big input's values for this key are split across
-            // partitions, so B_i and the moments ADD across partitions
+    for (j, (local, pairs, secs)) in per_partition.into_iter().enumerate() {
+        // the big input's values for one key are split across partitions,
+        // so B_i and the moments ADD across partitions (in j order)
+        for (key, agg) in local {
             let e = strata.entry(key).or_default();
             e.population += agg.population;
             e.count += agg.count;
             e.sum += agg.sum;
             e.sumsq += agg.sumsq;
         }
-        s.add_compute(w, t0.elapsed().as_secs_f64());
+        s.add_compute(cluster.worker_of_partition(j), secs);
         s.add_items(pairs);
     }
     s.finish(cluster);
 
-    Ok(JoinRun::exact(strata, cluster.take_metrics()))
+    let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
 }
 
 #[cfg(test)]

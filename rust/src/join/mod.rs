@@ -35,7 +35,7 @@ pub use strategy::{
     RepartitionJoin, StrategyRegistry,
 };
 
-use crate::cluster::JoinMetrics;
+use crate::cluster::{JoinMetrics, ShuffleLedger};
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
 
@@ -81,6 +81,9 @@ pub struct JoinRun {
     /// the per-stratum sample size b_i.
     pub strata: HashMap<u64, StratumAgg>,
     pub metrics: JoinMetrics,
+    /// Measured per-stage / per-worker shuffle traffic — the ground truth
+    /// the cost model's shuffle predictions are checked against.
+    pub ledger: ShuffleLedger,
     /// True when the strategy sampled (strata are estimates, not totals).
     pub sampled: bool,
     /// Raw draw counts per key for the Horvitz-Thompson path (empty for
@@ -93,15 +96,28 @@ impl JoinRun {
         Self {
             strata,
             metrics,
+            ledger: ShuffleLedger::default(),
             sampled: false,
             draws: HashMap::new(),
         }
     }
 
+    /// Attach the measured shuffle ledger of the run.
+    pub fn with_ledger(mut self, ledger: ShuffleLedger) -> Self {
+        self.ledger = ledger;
+        self
+    }
+
+    /// Total measured shuffled bytes (== `metrics.total_shuffled_bytes()`).
+    pub fn measured_shuffle_bytes(&self) -> u64 {
+        self.ledger.total_bytes()
+    }
+
     /// Exact SUM of the combined values over the full join output — only
-    /// meaningful when `!sampled`.
+    /// meaningful when `!sampled`. Summed in key order so the f64 result
+    /// is identical across runs (HashMap iteration order is not).
     pub fn exact_sum(&self) -> f64 {
-        self.strata.values().map(|s| s.sum).sum()
+        self.strata_vec().iter().map(|s| s.sum).sum()
     }
 
     /// Total join-output cardinality Σ B_i (exact in both modes: the
@@ -110,9 +126,13 @@ impl JoinRun {
         self.strata.values().map(|s| s.population).sum()
     }
 
-    /// Stratum aggregates as a vector (order unspecified) for estimators.
+    /// Stratum aggregates as a vector in ascending key order — a
+    /// deterministic order so every estimator's f64 accumulation is
+    /// reproducible run-to-run and thread-count independent.
     pub fn strata_vec(&self) -> Vec<StratumAgg> {
-        self.strata.values().copied().collect()
+        let mut keys: Vec<u64> = self.strata.keys().copied().collect();
+        keys.sort_unstable();
+        keys.into_iter().map(|k| self.strata[&k]).collect()
     }
 }
 

@@ -41,12 +41,23 @@ pub fn native_join(
         s.finish(cluster);
 
         let mut s = cluster.stage(&format!("crossproduct_{step}"));
-        let mut next: Vec<Vec<Record>> = vec![Vec::new(); cluster.k];
-        for w in 0..cluster.k {
+        // per-worker cogroup + cross product, data-parallel across workers;
+        // each worker returns (final aggregates, materialized intermediate)
+        // or its OOM error
+        type StepOut = (HashMap<u64, StratumAgg>, Vec<Record>, u64, f64);
+        let per_worker: Vec<Result<StepOut, JoinError>> = cluster.exec.map(cluster.k, |w| {
             let groups = group_by_key(&[left_parts[w].clone(), right_parts[w].clone()]);
             let t0 = Instant::now();
+            let mut local: HashMap<u64, StratumAgg> = HashMap::new();
+            let mut materialized: Vec<Record> = Vec::new();
             let mut pairs = 0u64;
-            for (key, sides) in groups {
+            // iterate keys in sorted order so the materialized intermediate
+            // (whose record order feeds the next step's f64 sums) is
+            // deterministic — HashMap iteration order is not
+            let mut keys: Vec<u64> = groups.keys().copied().collect();
+            keys.sort_unstable();
+            for key in keys {
+                let sides = &groups[&key];
                 if sides[0].is_empty() || sides[1].is_empty() {
                     continue;
                 }
@@ -56,16 +67,16 @@ pub fn native_join(
                     // plain insert is safe.
                     let agg = super::cross_product_agg(&[sides[0].clone(), sides[1].clone()], op);
                     pairs += agg.population as u64;
-                    strata.insert(key, agg);
+                    local.insert(key, agg);
                 } else {
                     // materialize the intermediate — the native-join sin
                     for &lv in &sides[0] {
                         for &rv in &sides[1] {
-                            next[w].push(Record::new(key, op.fold(lv, rv)));
+                            materialized.push(Record::new(key, op.fold(lv, rv)));
                             pairs += 1;
                         }
                     }
-                    let bytes = next[w].len() as u64 * PAIR_BYTES;
+                    let bytes = materialized.len() as u64 * PAIR_BYTES;
                     if bytes > memory_budget {
                         return Err(JoinError::OutOfMemory {
                             stage: format!("crossproduct_{step}"),
@@ -74,7 +85,14 @@ pub fn native_join(
                     }
                 }
             }
-            s.add_compute(w, t0.elapsed().as_secs_f64());
+            Ok((local, materialized, pairs, t0.elapsed().as_secs_f64()))
+        });
+        let mut next: Vec<Vec<Record>> = Vec::with_capacity(cluster.k);
+        for (w, r) in per_worker.into_iter().enumerate() {
+            let (local, materialized, pairs, secs) = r?;
+            strata.extend(local);
+            next.push(materialized);
+            s.add_compute(w, secs);
             s.add_items(pairs);
         }
         s.finish(cluster);
@@ -92,7 +110,8 @@ pub fn native_join(
         }
     }
 
-    Ok(JoinRun::exact(strata, cluster.take_metrics()))
+    let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
 }
 
 #[cfg(test)]

@@ -39,6 +39,10 @@ pub struct JoinPlan {
     pub estimates: Vec<CostEstimate>,
     /// Stage names the chosen strategy will record.
     pub stages: Vec<String>,
+    /// Bytes the shuffle fabric actually counted, once the plan has been
+    /// executed (from the run's [`crate::cluster::ShuffleLedger`]); `None`
+    /// before execution. `explain()` prints it next to the prediction.
+    pub measured_shuffle_bytes: Option<u64>,
 }
 
 impl JoinPlan {
@@ -58,6 +62,13 @@ impl JoinPlan {
     /// Predicted latency (simulated seconds) of the chosen strategy.
     pub fn predicted_secs(&self) -> f64 {
         self.chosen().est_secs
+    }
+
+    /// Attach the measured shuffled bytes of the executed run, so
+    /// `explain()` reports measurement next to prediction.
+    pub fn with_measured_shuffle(mut self, bytes: u64) -> Self {
+        self.measured_shuffle_bytes = Some(bytes);
+        self
     }
 
     /// Human-readable plan: inputs, overlap, stages, and the cost ranking.
@@ -84,6 +95,23 @@ impl JoinPlan {
             fmt::count(self.stats.est_output_pairs as u64)
         );
         let _ = writeln!(out, "  stages: {}", self.stages.join(" -> "));
+        match self.measured_shuffle_bytes {
+            Some(measured) => {
+                let _ = writeln!(
+                    out,
+                    "  shuffle: predicted {} -> measured {} (ledger)",
+                    fmt::bytes(self.predicted_shuffle_bytes() as u64),
+                    fmt::bytes(measured)
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "  shuffle: predicted {} (not executed yet)",
+                    fmt::bytes(self.predicted_shuffle_bytes() as u64)
+                );
+            }
+        }
         let _ = writeln!(out, "  cost ranking (best first):");
         for (i, e) in self.estimates.iter().enumerate() {
             let marker = if e.strategy == self.strategy {
@@ -244,6 +272,7 @@ impl<'a> Planner<'a> {
             stats: stats.clone(),
             estimates,
             stages,
+            measured_shuffle_bytes: None,
         })
     }
 }
@@ -392,5 +421,18 @@ mod tests {
         }
         assert!(text.contains("<- chosen"));
         assert!(text.contains("stages:"));
+    }
+
+    #[test]
+    fn explain_reports_measured_next_to_predicted() {
+        let p = plan(&stats_for(0.05), StrategyChoice::Auto, Budget::unbounded()).unwrap();
+        assert!(p.explain().contains("not executed yet"));
+        let executed = p.with_measured_shuffle(123_456);
+        let text = executed.explain();
+        assert!(
+            text.contains("predicted") && text.contains("measured"),
+            "{text}"
+        );
+        assert!(!text.contains("not executed yet"), "{text}");
     }
 }

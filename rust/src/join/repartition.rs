@@ -28,14 +28,16 @@ pub fn repartition_join(
         .collect();
     s.finish(cluster);
 
-    // per worker: group n tagged streams by key, stream the cross product
+    // per worker: group n tagged streams by key, stream the cross product —
+    // data-parallel across workers; every key lives on one worker after the
+    // hash shuffle, so the merged map is thread-count independent
     let mut s = cluster.stage("crossproduct");
-    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
-    for w in 0..cluster.k {
+    let per_worker = cluster.exec.map(cluster.k, |w| {
         let per_input: Vec<Vec<crate::data::Record>> =
             shuffled.iter().map(|inp| inp[w].clone()).collect();
         let t0 = Instant::now();
         let groups = group_by_key(&per_input);
+        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
         let mut pairs = 0u64;
         for (key, sides) in groups {
             if sides.iter().any(|s| s.is_empty()) {
@@ -43,14 +45,20 @@ pub fn repartition_join(
             }
             let agg = super::cross_product_agg(&sides, op);
             pairs += agg.population as u64;
-            strata.insert(key, agg);
+            local.insert(key, agg);
         }
-        s.add_compute(w, t0.elapsed().as_secs_f64());
+        (local, pairs, t0.elapsed().as_secs_f64())
+    });
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for (w, (local, pairs, secs)) in per_worker.into_iter().enumerate() {
+        strata.extend(local);
+        s.add_compute(w, secs);
         s.add_items(pairs);
     }
     s.finish(cluster);
 
-    Ok(JoinRun::exact(strata, cluster.take_metrics()))
+    let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
 }
 
 #[cfg(test)]

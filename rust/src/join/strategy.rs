@@ -203,7 +203,12 @@ pub trait JoinStrategy {
     /// `"bloom"`, `"approx"`).
     fn name(&self) -> &'static str;
 
-    /// Run the join on the simulated cluster.
+    /// Run the join on the simulated cluster. Every implementation routes
+    /// its per-worker loops (filter build, probing, cross products,
+    /// sampling) through the cluster's partition-parallel executor
+    /// ([`crate::runtime::ParallelExecutor`]) and fills the returned run's
+    /// [`crate::cluster::ShuffleLedger`] with measured traffic; output is
+    /// bit-identical for any thread count.
     fn execute(
         &self,
         cluster: &mut SimCluster,
@@ -737,6 +742,22 @@ mod tests {
         for (name, sum, card) in &sums {
             assert!((sum - 723.0).abs() < 1e-9, "{name}: {sum}");
             assert_eq!(*card, 4.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn ledger_is_populated_through_the_trait() {
+        let ins = inputs();
+        let r = StrategyRegistry::with_defaults();
+        for s in r.iter() {
+            let run = s.execute(&mut cluster(), &ins, CombineOp::Sum).unwrap();
+            assert!(!run.ledger.stages.is_empty(), "{}", s.name());
+            assert_eq!(
+                run.measured_shuffle_bytes(),
+                run.metrics.total_shuffled_bytes(),
+                "{}: ledger and metrics disagree",
+                s.name()
+            );
         }
     }
 

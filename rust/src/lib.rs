@@ -55,6 +55,28 @@
 //! queries run the cheapest feasible exact strategy. The `approxjoin` CLI
 //! (main.rs) exposes the same flow — `query`, `compare`, `explain`,
 //! `profile`, `simulate` — and `examples/` are guided walkthroughs.
+//!
+//! ## Partition-parallel execution & shuffle accounting
+//!
+//! Every strategy executes its heavy loops — Bloom-shard construction,
+//! filter probing, per-key cross products, per-stratum sampling — through
+//! the [`runtime::ParallelExecutor`]: an order-preserving map over
+//! partition/worker indices running on 1..=N OS threads
+//! (`EngineConfig::parallelism`, CLI `--threads`, env
+//! `APPROXJOIN_THREADS`). Per-worker RNGs are forked deterministically
+//! before any thread starts and partial results merge in index order, so
+//! **given the same sampling decisions (fixed seed + fixed sampling
+//! params), the output is bit-identical to the sequential path at any
+//! thread count** (asserted across all five strategies in
+//! `tests/parallel_equivalence.rs`). The one exception: latency-budgeted
+//! engine queries size their sampling fraction from *measured* filter
+//! wall time, which legitimately varies with thread count and load.
+//!
+//! Alongside the analytic shuffle *predictions* of the cost model, every
+//! run now carries a [`cluster::ShuffleLedger`] — measured bytes in/out
+//! per stage per worker — surfaced through [`join::JoinRun`],
+//! `QueryOutcome`, and `JoinPlan::explain()` (predicted vs measured side
+//! by side).
 
 pub mod bloom;
 pub mod cluster;

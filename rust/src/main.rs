@@ -54,14 +54,21 @@ fn print_help() {
         "approxjoin — approximate distributed joins behind a cost-based planner\n\
          (JoinStrategy trait: native | repartition | broadcast | bloom | approx)\n\n\
          USAGE: approxjoin <query|explain|compare|profile|simulate> [flags]\n\n\
-         query    --sql <QUERY> [--data <SPEC>] [--workers N] [--estimator clt|ht]\n\
+         query    --sql <QUERY> [--data <SPEC>] [--workers N] [--threads T]\n\
+         \u{20}         [--estimator clt|ht]\n\
          \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx]\n\
          explain  --sql <QUERY> [--data <SPEC>] [--workers N] [--strategy <S>]\n\
          \u{20}         prints the JoinPlan: input statistics, chosen strategy and\n\
          \u{20}         the full cost ranking, without executing the join\n\
-         compare  [--data <SPEC>] [--workers N]\n\
+         compare  [--data <SPEC>] [--workers N] [--threads T]\n\
+         \u{20}         runs every strategy, reporting measured shuffled bytes\n\
+         \u{20}         (ledger) next to the cost model's prediction\n\
          profile  [--out PATH]\n\
          simulate --fig <4a|4b|14|15>\n\n\
+         --threads T runs the partition-parallel executor on T OS threads\n\
+         (default: min(cores, 8); fixed-seed runs give identical answers\n\
+         for any T, except latency-budgeted queries, whose sampling\n\
+         fraction follows measured filter time).\n\n\
          The planner picks the strategy from input statistics and the cost\n\
          model (--strategy auto, the default); budget clauses in the query\n\
          (WITHIN ... SECONDS, ERROR ... CONFIDENCE ...) route to the sampled\n\
@@ -85,6 +92,13 @@ fn strategy_choice(args: &[String]) -> StrategyChoice {
         None | Some("auto") => StrategyChoice::Auto,
         Some(name) => StrategyChoice::named(name),
     }
+}
+
+fn threads_flag(args: &[String]) -> anyhow::Result<usize> {
+    Ok(flag(args, "--threads")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or_else(approxjoin::runtime::default_parallelism))
 }
 
 /// Parse `synthetic:items=100000,overlap=0.05` style specs into datasets
@@ -160,6 +174,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         _ => approxjoin::stats::EstimatorKind::Clt,
     };
     let choice = strategy_choice(args);
+    let threads = threads_flag(args)?;
 
     let (mut session, q) = session_for(
         &sql,
@@ -168,6 +183,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         EngineConfig {
             workers,
             estimator,
+            parallelism: threads,
             ..Default::default()
         },
     )?;
@@ -177,8 +193,9 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         session = session.with_cost_model(CostModel::load(profile)?);
     }
     println!(
-        "engine: {} workers, runtime={}",
+        "engine: {} workers, {} threads, runtime={}",
         workers,
+        threads,
         if session.has_runtime() { "xla/pjrt" } else { "native" }
     );
 
@@ -197,11 +214,23 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         fmt::duration(out.sim_secs),
         fmt::duration(out.d_dt)
     );
-    println!(
-        "shuffled: {}   join-output cardinality: {}",
-        fmt::bytes(out.metrics.total_shuffled_bytes()),
-        fmt::count(out.output_cardinality as u64)
-    );
+    let predicted = out
+        .plan
+        .as_ref()
+        .map(|p| p.predicted_shuffle_bytes() as u64);
+    match predicted {
+        Some(pred) => println!(
+            "shuffled: {} measured (predicted {})   join-output cardinality: {}",
+            fmt::bytes(out.ledger.total_bytes()),
+            fmt::bytes(pred),
+            fmt::count(out.output_cardinality as u64)
+        ),
+        None => println!(
+            "shuffled: {}   join-output cardinality: {}",
+            fmt::bytes(out.ledger.total_bytes()),
+            fmt::count(out.output_cardinality as u64)
+        ),
+    }
     let mut t = Table::new(&["stage", "sim time", "shuffled", "items"]);
     for st in &out.metrics.stages {
         t.row(row![
@@ -238,14 +267,27 @@ fn cmd_explain(args: &[String]) -> anyhow::Result<()> {
 
 fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
     let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let threads = threads_flag(args)?;
     let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
     let inputs = load_data(&data, workers)?;
     let tm = approxjoin::cluster::TimeModel::default();
-    let mk = || approxjoin::cluster::SimCluster::new(workers, tm);
+    let mk = || approxjoin::cluster::SimCluster::new(workers, tm).with_parallelism(threads);
     let registry = StrategyRegistry::with_defaults();
+    // cost-model predictions, to print next to the measured ledger bytes
+    let stats = approxjoin::join::InputStats::collect(&inputs, workers, &tm);
+    let cost = CostModel::default();
 
-    let mut t = Table::new(&["strategy", "sim time", "shuffled", "output pairs", "SUM"]);
+    let mut t = Table::new(&[
+        "strategy",
+        "sim time",
+        "shuffled (measured)",
+        "shuffled (est)",
+        "output pairs",
+        "SUM",
+    ]);
     for strategy in registry.iter() {
+        let est = strategy.estimate_cost(&stats, &cost);
+        let est_bytes = fmt::bytes(est.shuffle_bytes as u64);
         match strategy.execute(&mut mk(), &inputs, CombineOp::Sum) {
             Ok(run) => {
                 let sum = if run.sampled {
@@ -257,13 +299,14 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
                 t.row(row![
                     strategy.name(),
                     fmt::duration(run.metrics.total_sim_secs()),
-                    fmt::bytes(run.metrics.total_shuffled_bytes()),
+                    fmt::bytes(run.ledger.total_bytes()),
+                    est_bytes,
                     fmt::count(run.output_cardinality() as u64),
                     format!("{sum:.1}")
                 ]);
             }
             Err(e) => {
-                t.row(row![strategy.name(), "failed", format!("{e}"), "-", "-"]);
+                t.row(row![strategy.name(), "failed", format!("{e}"), est_bytes, "-", "-"]);
             }
         }
     }

@@ -10,10 +10,16 @@
 //!
 //! Python runs once at build time (`make artifacts`); this module is the
 //! only thing touching the artifacts afterwards.
+//!
+//! [`parallel`] is the other half of the runtime: the partition-parallel
+//! [`ParallelExecutor`] every join strategy routes its per-worker loops
+//! through (deterministic, bit-identical to sequential execution).
 
 pub mod batch;
+pub mod parallel;
 
 pub use batch::{BloomProbeExecutor, CltExecutor, JoinAggExecutor};
+pub use parallel::{default_parallelism, ParallelExecutor, NUM_PARTITIONS};
 
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};

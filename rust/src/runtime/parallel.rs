@@ -1,0 +1,286 @@
+//! Partition-parallel execution: scoped worker threads over deterministic
+//! hash-partitions.
+//!
+//! Every strategy's heavy loops (Bloom-shard build, filter probing, cross
+//! products, per-stratum sampling) are expressed as an order-preserving
+//! `map` over partition/worker indices. [`ParallelExecutor::map`] runs that
+//! map either sequentially (`threads == 1`, the reference path) or on
+//! `threads` scoped OS threads with striped index ownership. Results are
+//! merged back **in index order**, and every per-index computation owns its
+//! inputs (a pre-forked RNG, a partition slice), so the parallel output is
+//! bit-identical to the sequential output for fixed seeds — the invariant
+//! `tests/parallel_equivalence.rs` asserts across all five strategies.
+//!
+//! This is the execution half of the paper's cluster model: the
+//! [`crate::cluster::SimCluster`] still *accounts* k logical workers and
+//! their shuffle traffic, while the executor decides how many OS threads
+//! actually chew through the per-worker tasks on this host.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Default number of execution partitions (worker threads) a parallel
+/// cluster uses — the paper's experiments shard work 8 ways per node.
+pub const NUM_PARTITIONS: usize = 8;
+
+/// Host parallelism for new engines/sessions: `APPROXJOIN_THREADS` when
+/// set, else `min(available cores, NUM_PARTITIONS)`, floor 1.
+pub fn default_parallelism() -> usize {
+    if let Ok(v) = std::env::var("APPROXJOIN_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(NUM_PARTITIONS)
+        .max(1)
+}
+
+/// An order-preserving data-parallel mapper over index ranges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// An executor running map bodies on up to `threads` OS threads.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The strict sequential reference executor.
+    pub fn sequential() -> Self {
+        Self::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Apply `f` to every index in `0..n` and return the results in index
+    /// order. With one thread this is a plain sequential map; with more,
+    /// indices are striped across scoped threads (thread t owns indices
+    /// `t, t + T, t + 2T, ...`) and the per-index results are written back
+    /// into their slots, so scheduling cannot reorder anything. A panic in
+    /// any body propagates to the caller after the scope joins.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let poisoned = AtomicBool::new(false);
+        {
+            // hand each thread a disjoint striped view of the slot vector
+            let mut views: Vec<Vec<(usize, &mut Option<T>)>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (i, slot) in slots.iter_mut().enumerate() {
+                views[i % threads].push((i, slot));
+            }
+            std::thread::scope(|scope| {
+                let f = &f;
+                let poisoned = &poisoned;
+                let handles: Vec<_> = views
+                    .into_iter()
+                    .map(|view| {
+                        scope.spawn(move || {
+                            for (i, slot) in view {
+                                if poisoned.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                let out = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| f(i)),
+                                );
+                                match out {
+                                    Ok(v) => *slot = Some(v),
+                                    Err(payload) => {
+                                        poisoned.store(true, Ordering::Relaxed);
+                                        std::panic::resume_unwind(payload);
+                                    }
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                let mut panic_payload = None;
+                for h in handles {
+                    if let Err(payload) = h.join() {
+                        panic_payload.get_or_insert(payload);
+                    }
+                }
+                if let Some(payload) = panic_payload {
+                    std::panic::resume_unwind(payload);
+                }
+            });
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index mapped"))
+            .collect()
+    }
+}
+
+impl ParallelExecutor {
+    /// Like [`ParallelExecutor::map`], but each index additionally gets
+    /// exclusive mutable access to its own pre-built state (one entry of
+    /// `states`; `n` is `states.len()`). This is how per-worker trait
+    /// objects (forked probers, forked aggregators) reach parallel bodies
+    /// without locks: states are *moved* into the thread stripes alongside
+    /// their result slots, so no sharing ever occurs.
+    pub fn map_with<S, T, F>(&self, states: Vec<S>, f: F) -> Vec<T>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        let n = states.len();
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            let mut states = states;
+            return states
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| f(i, s))
+                .collect();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        {
+            let mut views: Vec<Vec<(usize, &mut Option<T>, S)>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for ((i, slot), state) in slots.iter_mut().enumerate().zip(states) {
+                views[i % threads].push((i, slot, state));
+            }
+            std::thread::scope(|scope| {
+                let f = &f;
+                let handles: Vec<_> = views
+                    .into_iter()
+                    .map(|view| {
+                        scope.spawn(move || {
+                            for (i, slot, mut state) in view {
+                                *slot = Some(f(i, &mut state));
+                            }
+                        })
+                    })
+                    .collect();
+                let mut panic_payload = None;
+                for h in handles {
+                    if let Err(payload) = h.join() {
+                        panic_payload.get_or_insert(payload);
+                    }
+                }
+                if let Some(payload) = panic_payload {
+                    std::panic::resume_unwind(payload);
+                }
+            });
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index mapped"))
+            .collect()
+    }
+}
+
+impl Default for ParallelExecutor {
+    fn default() -> Self {
+        Self::sequential()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_index_order() {
+        for threads in [1, 2, 3, 8] {
+            let exec = ParallelExecutor::new(threads);
+            let out = exec.map(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_singleton() {
+        let exec = ParallelExecutor::new(4);
+        assert_eq!(exec.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(exec.map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let exec = ParallelExecutor::new(4);
+        let calls = AtomicUsize::new(0);
+        let out = exec.map(100, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_with_owned_rngs() {
+        // the pattern the strategies use: fork per-index RNGs up front,
+        // then map with each index cloning its own stream
+        let fork_streams = |threads: usize| -> Vec<u64> {
+            let mut root = crate::util::Rng::new(42);
+            let rngs: Vec<crate::util::Rng> = (0..16).map(|w| root.fork(w as u64 + 1)).collect();
+            ParallelExecutor::new(threads).map(16, |w| {
+                let mut r = rngs[w].clone();
+                (0..100).map(|_| r.next_u64()).fold(0u64, u64::wrapping_add)
+            })
+        };
+        assert_eq!(fork_streams(1), fork_streams(8));
+    }
+
+    #[test]
+    fn map_with_gives_each_index_its_own_state() {
+        for threads in [1, 4] {
+            let exec = ParallelExecutor::new(threads);
+            let states: Vec<Vec<usize>> = (0..20).map(|_| Vec::new()).collect();
+            let out = exec.map_with(states, |i, s: &mut Vec<usize>| {
+                s.push(i);
+                s.len() * 100 + i
+            });
+            assert_eq!(
+                out,
+                (0..20).map(|i| 100 + i).collect::<Vec<_>>(),
+                "{threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn map_panics_propagate() {
+        let exec = ParallelExecutor::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.map(8, |i| {
+                if i == 5 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn default_parallelism_floor_one() {
+        assert!(default_parallelism() >= 1);
+        assert!(ParallelExecutor::default().is_sequential());
+    }
+}

@@ -11,8 +11,10 @@
 
 use crate::data::Dataset;
 use crate::join::CombineOp;
+use crate::runtime::ParallelExecutor;
 use crate::stats::StratumAgg;
 use crate::util::Rng;
+use std::collections::HashMap;
 
 /// Spark `sampleByKey`: keep each record independently with probability
 /// `fraction` (per-key simple random sampling of the inputs).
@@ -91,6 +93,35 @@ pub fn post_join_reservoir(
     }
 }
 
+/// The RNG for one stratum's reservoir: derived from (seed, key) alone, so
+/// every stratum's sample is independent of which worker/thread runs it
+/// and of the key visit order.
+fn stratum_rng(seed: u64, key: u64) -> Rng {
+    Rng::new(seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Stratified post-join reservoirs over a whole set of cogrouped strata,
+/// data-parallel across strata. Each key group still pays its full
+/// cross-product enumeration (the point of the post-join baseline), but
+/// groups run concurrently through `exec`; the per-key RNG depends only on
+/// `(seed, key)`, so the result is bit-identical for any thread count.
+pub fn post_join_reservoir_strata(
+    groups: &HashMap<u64, Vec<Vec<f64>>>,
+    fraction: f64,
+    op: CombineOp,
+    seed: u64,
+    exec: &ParallelExecutor,
+) -> HashMap<u64, StratumAgg> {
+    let mut keys: Vec<u64> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    let aggs = exec.map(keys.len(), |i| {
+        let key = keys[i];
+        let mut r = stratum_rng(seed, key);
+        post_join_reservoir(&groups[&key], fraction, op, &mut r)
+    });
+    keys.into_iter().zip(aggs).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +188,37 @@ mod tests {
         let agg = post_join_reservoir(&[vec![], vec![1.0]], 0.5, CombineOp::Sum, &mut r);
         assert_eq!(agg.population, 0.0);
         assert_eq!(agg.count, 0.0);
+    }
+
+    #[test]
+    fn strata_reservoirs_thread_count_invariant() {
+        let mut groups: HashMap<u64, Vec<Vec<f64>>> = HashMap::new();
+        for key in 0..40u64 {
+            let a: Vec<f64> = (0..12).map(|i| (key * 31 + i) as f64).collect();
+            let b: Vec<f64> = (0..9).map(|i| (key * 17 + i) as f64 * 0.5).collect();
+            groups.insert(key, vec![a, b]);
+        }
+        let seq = post_join_reservoir_strata(
+            &groups,
+            0.2,
+            CombineOp::Sum,
+            7,
+            &ParallelExecutor::sequential(),
+        );
+        for threads in [2, 8] {
+            let par = post_join_reservoir_strata(
+                &groups,
+                0.2,
+                CombineOp::Sum,
+                7,
+                &ParallelExecutor::new(threads),
+            );
+            assert_eq!(seq, par, "threads {threads}");
+        }
+        // populations and sample sizes follow the fraction
+        for (key, agg) in &seq {
+            assert_eq!(agg.population, 108.0, "key {key}");
+            assert_eq!(agg.count, 22.0, "key {key}"); // ceil(0.2 * 108)
+        }
     }
 }

@@ -243,7 +243,7 @@ impl QueryBuilder<'_> {
         // forced approx run uses the strategy's own fixed sampling config.
         if plan.approximate && !self.query.budget.is_unbounded() {
             let mut outcome = session.engine.execute_on(&self.query, &inputs)?;
-            outcome.plan = Some(plan);
+            outcome.plan = Some(plan.with_measured_shuffle(outcome.ledger.total_bytes()));
             return Ok(outcome);
         }
         if !plan.approximate
@@ -266,7 +266,8 @@ impl QueryBuilder<'_> {
         let mut cluster = SimCluster::new(
             session.engine.cfg.workers,
             session.engine.cfg.time_model,
-        );
+        )
+        .with_parallelism(session.engine.cfg.parallelism);
         let run = strategy.execute(&mut cluster, &inputs, self.query.combine)?;
 
         let confidence = self
@@ -308,6 +309,7 @@ impl QueryBuilder<'_> {
             ExecutionMode::Exact
         };
         let metrics = run.metrics;
+        let ledger = run.ledger;
         Ok(QueryOutcome {
             sim_secs: metrics.total_sim_secs(),
             d_dt: metrics.stage_secs("build_filter") + metrics.stage_secs("filter_shuffle"),
@@ -316,7 +318,8 @@ impl QueryBuilder<'_> {
             output_cardinality,
             metrics,
             strategy: plan.strategy.clone(),
-            plan: Some(plan),
+            plan: Some(plan.with_measured_shuffle(ledger.total_bytes())),
+            ledger,
         })
     }
 }
@@ -463,6 +466,21 @@ mod tests {
         let text = s.sql(SQL).unwrap().explain().unwrap();
         assert!(text.contains("JoinPlan"), "{text}");
         assert!(text.contains("<- chosen"), "{text}");
+        assert!(text.contains("not executed yet"), "{text}");
+    }
+
+    #[test]
+    fn executed_plan_carries_measured_shuffle() {
+        let out = session_with(0.05).sql(SQL).unwrap().run().unwrap();
+        let plan = out.plan.expect("session queries carry a plan");
+        assert_eq!(
+            plan.measured_shuffle_bytes,
+            Some(out.ledger.total_bytes()),
+            "plan must carry the run's measured bytes"
+        );
+        assert_eq!(out.ledger.total_bytes(), out.metrics.total_shuffled_bytes());
+        let text = plan.explain();
+        assert!(text.contains("measured"), "{text}");
     }
 
     #[test]

@@ -126,6 +126,28 @@ impl Json {
         }
     }
 
+    /// Merge `value` under `key` into the top-level object of the JSON
+    /// file at `path` (creating the file as `{}` first if absent) — how
+    /// the bench binaries accumulate their sections into one
+    /// `BENCH_PR2.json` report across sequential CI steps.
+    pub fn update_file(path: &std::path::Path, key: &str, value: Json) -> anyhow::Result<()> {
+        let mut root = match std::fs::read_to_string(path) {
+            Ok(text) if !text.trim().is_empty() => Json::parse(&text)?,
+            _ => Json::Obj(std::collections::BTreeMap::new()),
+        };
+        let Json::Obj(m) = &mut root else {
+            anyhow::bail!("{} is not a JSON object", path.display());
+        };
+        m.insert(key.to_string(), value);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, root.to_string_pretty())?;
+        Ok(())
+    }
+
     /// Parse a JSON document. Not a validator — accepts the subset this
     /// repo writes (and standard JSON produced by python's json module).
     pub fn parse(text: &str) -> anyhow::Result<Json> {
@@ -358,6 +380,20 @@ mod tests {
                 .as_str(),
             Some("join_agg.hlo.txt")
         );
+    }
+
+    #[test]
+    fn update_file_merges_sections() {
+        let dir = std::env::temp_dir().join(format!("aj_json_{}", std::process::id()));
+        let path = dir.join("bench.json");
+        std::fs::remove_file(&path).ok();
+        Json::update_file(&path, "a", Json::obj(vec![("x", Json::num(1.0))])).unwrap();
+        Json::update_file(&path, "b", Json::num(2.0)).unwrap();
+        Json::update_file(&path, "a", Json::num(3.0)).unwrap(); // overwrite
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(root.get("b").unwrap().as_f64(), Some(2.0));
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! The partition-parallel runtime's core guarantee: for fixed seeds, the
+//! parallel execution path is **bit-identical** to the sequential path —
+//! same per-stratum aggregates (counts, populations, sums down to the last
+//! bit), same per-stratum sample sizes, same Horvitz-Thompson draw counts,
+//! and same measured shuffle traffic (per stage, per worker) — for 1, 2,
+//! and 8 execution partitions, across all five join strategies.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::data::{generate_overlapping, Dataset, SyntheticSpec};
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, CombineOp, JoinRun, StrategyRegistry};
+use approxjoin::stats::EstimatorKind;
+
+fn cluster(threads: usize) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+}
+
+fn workload(overlap: f64, seed: u64) -> Vec<Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: 6_000,
+        overlap_fraction: overlap,
+        lambda: 25.0,
+        partitions: 8,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Everything that must be invariant under the thread count. Timings
+/// (sim/wall seconds) are intentionally excluded — they are measurements.
+fn fingerprint(run: &JoinRun) -> impl PartialEq + std::fmt::Debug {
+    let mut strata: Vec<(u64, u64, u64, u64, u64)> = run
+        .strata
+        .iter()
+        .map(|(&k, a)| {
+            (
+                k,
+                a.population.to_bits(),
+                a.count.to_bits(),
+                a.sum.to_bits(),
+                a.sumsq.to_bits(),
+            )
+        })
+        .collect();
+    strata.sort_unstable();
+    let mut draws: Vec<(u64, u64)> = run
+        .draws
+        .iter()
+        .map(|(&k, d)| (k, d.to_bits()))
+        .collect();
+    draws.sort_unstable();
+    let stages: Vec<(String, u64, u64)> = run
+        .metrics
+        .stages
+        .iter()
+        .map(|s| (s.name.clone(), s.shuffled_bytes, s.items))
+        .collect();
+    let ledger: Vec<(String, Vec<u64>, Vec<u64>)> = run
+        .ledger
+        .stages
+        .iter()
+        .map(|t| (t.stage.clone(), t.bytes_in.clone(), t.bytes_out.clone()))
+        .collect();
+    (strata, draws, stages, ledger, run.sampled)
+}
+
+#[test]
+fn all_five_strategies_bit_identical_across_thread_counts() {
+    for overlap in [0.02, 0.3] {
+        let inputs = workload(overlap, 42);
+        let registry = StrategyRegistry::with_defaults();
+        for strategy in registry.iter() {
+            let reference = strategy
+                .execute(&mut cluster(1), &inputs, CombineOp::Sum)
+                .unwrap_or_else(|e| panic!("{} sequential failed: {e}", strategy.name()));
+            for threads in [2, 8] {
+                let parallel = strategy
+                    .execute(&mut cluster(threads), &inputs, CombineOp::Sum)
+                    .unwrap_or_else(|e| {
+                        panic!("{} @ {threads} threads failed: {e}", strategy.name())
+                    });
+                assert_eq!(
+                    fingerprint(&reference),
+                    fingerprint(&parallel),
+                    "{} diverges at {threads} threads (overlap {overlap})",
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn three_way_joins_bit_identical_across_thread_counts() {
+    // multiway exercises the native join's materialized intermediates and
+    // the n-way filter/cross-product paths
+    let mut r = approxjoin::util::Rng::new(5);
+    let inputs = approxjoin::testkit::gen::join_inputs(&mut r, 3, 8);
+    let registry = StrategyRegistry::with_defaults();
+    for strategy in registry.iter() {
+        let reference = strategy
+            .execute(&mut cluster(1), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} sequential failed: {e}", strategy.name()));
+        for threads in [2, 8] {
+            let parallel = strategy
+                .execute(&mut cluster(threads), &inputs, CombineOp::Sum)
+                .unwrap();
+            assert_eq!(
+                fingerprint(&reference),
+                fingerprint(&parallel),
+                "{} diverges at {threads} threads on 3-way",
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn ht_estimator_bit_identical_across_thread_counts() {
+    let inputs = workload(0.2, 7);
+    let strategy = ApproxJoin {
+        fp_rate: 0.01,
+        filter: None,
+        config: ApproxConfig {
+            params: SamplingParams::Fraction(0.15),
+            estimator: EstimatorKind::HorvitzThompson,
+            seed: 3,
+        },
+    };
+    use approxjoin::join::JoinStrategy;
+    let reference = strategy
+        .execute(&mut cluster(1), &inputs, CombineOp::Sum)
+        .unwrap();
+    assert!(!reference.draws.is_empty(), "HT path must record draws");
+    for threads in [2, 8] {
+        let parallel = strategy
+            .execute(&mut cluster(threads), &inputs, CombineOp::Sum)
+            .unwrap();
+        assert_eq!(fingerprint(&reference), fingerprint(&parallel));
+    }
+}
+
+#[test]
+fn session_results_identical_for_any_parallelism() {
+    use approxjoin::coordinator::EngineConfig;
+    use approxjoin::session::Session;
+
+    let inputs = workload(0.1, 21);
+    let run_with = |parallelism: usize| {
+        let mut s = Session::without_runtime(EngineConfig {
+            workers: 4,
+            parallelism,
+            ..Default::default()
+        })
+        .unwrap()
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone());
+        s.sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let seq = run_with(1);
+    let par = run_with(8);
+    assert_eq!(seq.result.estimate.to_bits(), par.result.estimate.to_bits());
+    assert_eq!(seq.ledger, par.ledger);
+    assert_eq!(seq.strategy, par.strategy);
+}

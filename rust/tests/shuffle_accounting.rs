@@ -1,0 +1,144 @@
+//! Measured-shuffle accounting: the [`ShuffleLedger`] must (a) agree with
+//! the stage metrics byte-for-byte, (b) show the paper's Fig 8 direction —
+//! a bloom-filtered join moves strictly fewer record bytes than a plain
+//! repartition join on a low-overlap workload — and (c) line up with the
+//! cost model's predictions within modeling error.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::cost::CostModel;
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::join::{
+    BloomJoin, CombineOp, InputStats, JoinStrategy, RepartitionJoin, StrategyRegistry,
+};
+
+fn time_model() -> TimeModel {
+    TimeModel {
+        bandwidth: 1e9,
+        stage_latency: 0.0,
+        compute_scale: 1.0,
+    }
+}
+
+fn cluster() -> SimCluster {
+    SimCluster::new(4, time_model()).with_parallelism(4)
+}
+
+fn low_overlap_inputs() -> Vec<approxjoin::data::Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: 30_000,
+        overlap_fraction: 0.01,
+        lambda: 50.0,
+        partitions: 8,
+        seed: 17,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn ledger_agrees_with_metrics_for_every_strategy() {
+    let inputs = low_overlap_inputs();
+    let registry = StrategyRegistry::with_defaults();
+    for strategy in registry.iter() {
+        let run = strategy
+            .execute(&mut cluster(), &inputs, CombineOp::Sum)
+            .unwrap();
+        assert_eq!(
+            run.ledger.total_bytes(),
+            run.metrics.total_shuffled_bytes(),
+            "{}",
+            strategy.name()
+        );
+        // stage-by-stage agreement, not just totals
+        for stage in &run.metrics.stages {
+            assert_eq!(
+                run.ledger.stage_bytes(&stage.name),
+                stage.shuffled_bytes,
+                "{}: stage {}",
+                strategy.name(),
+                stage.name
+            );
+        }
+        // per-worker in/out must balance: every byte sent is received
+        for t in &run.ledger.stages {
+            assert_eq!(
+                t.bytes_in.iter().sum::<u64>(),
+                t.bytes_out.iter().sum::<u64>(),
+                "{}: stage {} unbalanced",
+                strategy.name(),
+                t.stage
+            );
+        }
+    }
+}
+
+#[test]
+fn bloom_filtered_join_measures_fewer_bytes_than_repartition() {
+    // the paper's Fig 8 direction, asserted on the *measured* ledger:
+    // at 1% overlap the bloom join's total movement (records + filter
+    // traffic) must come in strictly under the full repartition shuffle
+    let inputs = low_overlap_inputs();
+    let rep = RepartitionJoin
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
+    let bloom = BloomJoin::default()
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
+    let rep_bytes = rep.ledger.total_bytes();
+    let bloom_bytes = bloom.ledger.total_bytes();
+    assert!(
+        bloom_bytes < rep_bytes,
+        "bloom measured {bloom_bytes} >= repartition measured {rep_bytes}"
+    );
+    // and the record shuffle alone shrinks by a large factor at 1% overlap
+    let rep_records = rep.ledger.stage_bytes("shuffle");
+    let bloom_records = bloom.ledger.stage_bytes("filter_shuffle");
+    assert!(
+        (bloom_records as f64) < 0.2 * rep_records as f64,
+        "filtered records {bloom_records} vs full shuffle {rep_records}"
+    );
+    // both answers remain the same exact join
+    assert!((rep.exact_sum() - bloom.exact_sum()).abs() < 1e-6 * (1.0 + rep.exact_sum().abs()));
+}
+
+#[test]
+fn measured_bytes_track_cost_model_predictions() {
+    let inputs = low_overlap_inputs();
+    let stats = InputStats::collect(&inputs, 4, &time_model());
+    let cost = CostModel::default();
+    for (strategy, run) in [
+        (
+            &RepartitionJoin as &dyn JoinStrategy,
+            RepartitionJoin
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap(),
+        ),
+        (
+            &BloomJoin::default() as &dyn JoinStrategy,
+            BloomJoin::default()
+                .execute(&mut cluster(), &inputs, CombineOp::Sum)
+                .unwrap(),
+        ),
+    ] {
+        let predicted = strategy.estimate_cost(&stats, &cost).shuffle_bytes;
+        let measured = run.ledger.total_bytes() as f64;
+        let ratio = measured / predicted.max(1.0);
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "{}: measured {measured} vs predicted {predicted} (ratio {ratio:.2})",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn ledger_skew_is_sane_on_uniform_keys() {
+    let inputs = low_overlap_inputs();
+    let run = RepartitionJoin
+        .execute(&mut cluster(), &inputs, CombineOp::Sum)
+        .unwrap();
+    let skew = run.ledger.skew();
+    assert!(
+        (1.0..2.0).contains(&skew),
+        "uniform keys should balance workers, skew {skew}"
+    );
+}
