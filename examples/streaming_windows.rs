@@ -1,0 +1,96 @@
+//! Streaming windows: the windowed ApproxJoin over an unbounded event
+//! stream.
+//!
+//!   cargo run --release --example streaming_windows
+//!
+//! Drives the unbounded event generator through a sliding window, three
+//! ways — sampled + Bloom-filtered (the streaming ApproxJoin), exact
+//! (the per-window truth), and unfiltered (the shuffle-everything
+//! baseline) — printing each window's `estimate ± bound`, whether the CI
+//! covered the exact window sum, how many per-stratum reservoirs were
+//! refreshed vs carried over on the slide, and the measured per-window
+//! shuffle bytes against the unfiltered baseline.
+
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::row;
+use approxjoin::session::StreamingSession;
+use approxjoin::stream::{EventStream, EventStreamSpec, WindowSpec};
+use approxjoin::util::{fmt, Table};
+
+fn main() {
+    // 1. an unbounded event stream: 2 inputs, 2000 events per batch each;
+    //    6% of events hit a hot shared key pool (the joinable part), the
+    //    rest are per-input private noise the filter should never ship
+    let spec = EventStreamSpec {
+        events_per_batch: 2_000,
+        shared_fraction: 0.06,
+        zipf_s: 0.6,
+        seed: 7,
+        ..Default::default()
+    };
+
+    // 2. a sliding window of 6 batches emitting every 2 — consecutive
+    //    windows share 4 batches, so most strata carry their reservoir
+    //    over instead of re-drawing
+    let session = StreamingSession::new(&EngineConfig {
+        workers: 10,
+        ..Default::default()
+    })
+    .window(WindowSpec::sliding(6, 2))
+    .sampling_fraction(0.15);
+
+    let batches = 20;
+    let sampled = session.clone().run(&mut EventStream::new(spec.clone()), batches);
+    let exact = session
+        .clone()
+        .exact()
+        .run(&mut EventStream::new(spec.clone()), batches);
+    let baseline = session
+        .unfiltered()
+        .run(&mut EventStream::new(spec), batches);
+
+    let mut t = Table::new(&[
+        "window",
+        "batches",
+        "estimate",
+        "± bound",
+        "exact",
+        "covered",
+        "refreshed",
+        "carried",
+        "shuffled",
+        "unfiltered",
+    ]);
+    let mut covered = 0usize;
+    for ((w, e), b) in sampled.windows.iter().zip(&exact.windows).zip(&baseline.windows) {
+        let truth = e.result.estimate;
+        let hit = (w.result.estimate - truth).abs() <= w.result.error_bound;
+        covered += hit as usize;
+        t.row(row![
+            w.bounds.index,
+            format!("{}..{}", w.bounds.first_batch, w.bounds.last_batch),
+            format!("{:.0}", w.result.estimate),
+            format!("{:.0}", w.result.error_bound),
+            format!("{truth:.0}"),
+            if hit { "yes" } else { "NO" },
+            w.refreshed_strata,
+            w.carried_strata,
+            fmt::bytes(w.ledger.total_bytes()),
+            fmt::bytes(b.ledger.total_bytes())
+        ]);
+    }
+    t.print();
+
+    let n = sampled.windows.len();
+    let filtered_bytes = sampled.ledger.total_bytes();
+    let baseline_bytes = baseline.ledger.total_bytes();
+    println!(
+        "\n{covered}/{n} windows covered the exact sum at 95% confidence;\n\
+         measured shuffle: {} filtered vs {} unfiltered ({} reduction)\n\
+         (expired tuples are deleted from the counting sketch on eviction —\n\
+         the filter is maintained incrementally, never rebuilt per window)",
+        fmt::bytes(filtered_bytes),
+        fmt::bytes(baseline_bytes),
+        fmt::speedup(baseline_bytes as f64 / filtered_bytes.max(1) as f64)
+    );
+}

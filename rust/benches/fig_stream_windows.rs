@@ -1,0 +1,175 @@
+//! Streaming windows bench: per-window shuffle reduction of the
+//! incremental Bloom-filtered path vs the unfiltered baseline, per-window
+//! estimate accuracy vs the exact truth twin, reservoir carry-over on
+//! sliding windows, and parallel bit-identity of the whole pipeline.
+//!
+//! Like the other figure benches this is a plain main() that panics on any
+//! correctness violation, so CI's bench-smoke job fails on:
+//!   * a window where the filtered path measured MORE shuffle bytes than
+//!     the unfiltered baseline (at 6% key overlap),
+//!   * sampled-vs-exact per-window coverage collapsing below 70% (95%
+//!     nominal), and
+//!   * any 1-vs-8-thread divergence in strata, draws or ledger.
+//!
+//! Env knobs (the CI bench-smoke job sets both):
+//!   APPROXJOIN_BENCH_QUICK=1   fewer batches, smaller event volume
+//!   BENCH_JSON=path            merge a machine-readable section into the
+//!                              given JSON report
+
+use approxjoin::cluster::TimeModel;
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::row;
+use approxjoin::session::StreamingSession;
+use approxjoin::stream::{EventStream, EventStreamSpec, WindowSpec};
+use approxjoin::util::{fmt, Json, Table};
+
+fn spec(events: u64) -> EventStreamSpec {
+    EventStreamSpec {
+        events_per_batch: events,
+        shared_fraction: 0.06,
+        zipf_s: 0.5,
+        seed: 77,
+        ..Default::default()
+    }
+}
+
+fn session(threads: usize) -> StreamingSession {
+    StreamingSession::new(&EngineConfig {
+        workers: 10,
+        parallelism: threads,
+        // fast network model: the bench reports measured bytes, not the
+        // simulated latency translation
+        time_model: TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+        ..Default::default()
+    })
+    .window(WindowSpec::sliding(6, 2))
+    .sampling_fraction(0.2)
+}
+
+// full-strength thread-invariance fingerprint (strata bits, HT draws,
+// per-worker ledger vectors), shared with tests/stream_windows.rs
+use approxjoin::testkit::stream_fingerprint as fingerprint;
+
+fn main() {
+    let quick = std::env::var("APPROXJOIN_BENCH_QUICK").is_ok();
+    println!(
+        "== Streaming windows: incremental filtering + per-window sampling{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let (batches, events) = if quick { (14u64, 1_500u64) } else { (40, 8_000) };
+
+    let t0 = std::time::Instant::now();
+    let sampled = session(1).run(&mut EventStream::new(spec(events)), batches);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let exact = session(1)
+        .exact()
+        .run(&mut EventStream::new(spec(events)), batches);
+    let baseline = session(1)
+        .unfiltered()
+        .run(&mut EventStream::new(spec(events)), batches);
+
+    // parallel bit-identity: the whole windowed pipeline, 8 threads
+    let parallel = session(8).run(&mut EventStream::new(spec(events)), batches);
+    assert_eq!(
+        fingerprint(&sampled),
+        fingerprint(&parallel),
+        "streaming windows diverge between 1 and 8 threads"
+    );
+
+    let mut t = Table::new(&[
+        "window",
+        "estimate",
+        "± bound",
+        "exact",
+        "rel err",
+        "carried",
+        "filtered bytes",
+        "unfiltered bytes",
+        "reduction",
+    ]);
+    let mut covered = 0usize;
+    let mut json_rows = Vec::new();
+    for ((w, e), b) in sampled.windows.iter().zip(&exact.windows).zip(&baseline.windows) {
+        let truth = e.result.estimate;
+        let hit = (w.result.estimate - truth).abs() <= w.result.error_bound;
+        covered += hit as usize;
+        let fb = w.ledger.total_bytes();
+        let ub = b.ledger.total_bytes();
+        assert!(
+            fb < ub,
+            "window {}: filtered path measured {fb} bytes >= unfiltered {ub}",
+            w.bounds.index
+        );
+        let rel = (w.result.estimate - truth).abs() / truth.abs().max(1e-12);
+        t.row(row![
+            w.bounds.index,
+            format!("{:.0}", w.result.estimate),
+            format!("{:.0}", w.result.error_bound),
+            format!("{truth:.0}"),
+            fmt::pct(rel),
+            format!("{}/{}", w.carried_strata, w.carried_strata + w.refreshed_strata),
+            fmt::bytes(fb),
+            fmt::bytes(ub),
+            fmt::speedup(ub as f64 / fb.max(1) as f64)
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("window", Json::num(w.bounds.index as f64)),
+            ("estimate", Json::num(w.result.estimate)),
+            ("error_bound", Json::num(w.result.error_bound)),
+            ("exact", Json::num(truth)),
+            ("rel_err", Json::num(rel)),
+            ("covered", Json::Bool(hit)),
+            ("filtered_bytes", Json::num(fb as f64)),
+            ("unfiltered_bytes", Json::num(ub as f64)),
+            ("carried_strata", Json::num(w.carried_strata as f64)),
+            ("refreshed_strata", Json::num(w.refreshed_strata as f64)),
+        ]));
+    }
+    t.print();
+
+    let n = sampled.windows.len();
+    assert!(n >= 4, "expected at least 4 windows, got {n}");
+    let coverage = covered as f64 / n as f64;
+    assert!(
+        coverage >= 0.7,
+        "per-window CI coverage collapsed: {covered}/{n} (95% nominal)"
+    );
+    // (carried_strata is reported, not asserted: the hot shared pool is
+    // touched by nearly every batch, so carry-over is rare here — the
+    // deterministic carry guarantee lives in tests/stream_windows.rs)
+    let processed = batches * events * 2;
+    let rows_per_sec = processed as f64 / elapsed.max(1e-9);
+    let reduction =
+        baseline.ledger.total_bytes() as f64 / sampled.ledger.total_bytes().max(1) as f64;
+    println!(
+        "\n{covered}/{n} windows covered (95% nominal); shuffle reduction {};\n\
+         {} events through the sampled path in {} ({} rows/sec)",
+        fmt::speedup(reduction),
+        fmt::count(processed),
+        fmt::duration(elapsed),
+        fmt::count(rows_per_sec as u64)
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            "fig_stream_windows",
+            Json::obj(vec![
+                ("quick_mode", Json::Bool(quick)),
+                ("batches", Json::num(batches as f64)),
+                ("events_per_batch", Json::num(events as f64)),
+                ("coverage", Json::num(coverage)),
+                ("shuffle_reduction", Json::num(reduction)),
+                ("rows_per_sec", Json::num(rows_per_sec)),
+                ("windows", Json::arr(json_rows)),
+            ]),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote fig_stream_windows section to {}", path.display());
+    }
+}

@@ -3,7 +3,8 @@
 //! 4-bit-per-cell (here: 8-bit, the common implementation) size cost —
 //! exactly the trade-off Figure 15 plots.
 
-use super::hashing::probe_positions;
+use super::hashing::{self, fold_key, probe_positions};
+use super::standard::BloomFilter;
 
 /// Counting Bloom filter with u8 saturating cells.
 #[derive(Clone, Debug)]
@@ -23,6 +24,26 @@ impl CountingBloomFilter {
             num_hashes,
             items: 0,
         }
+    }
+
+    /// Geometry from a target capacity + false-positive rate (eq 27 applied
+    /// to the cell count), cells rounded up to a power of two, with the
+    /// optimal hash count. NOTE: the streaming window sketch
+    /// (`stream::SketchConfig::for_capacity`) shares the cell sizing but
+    /// caps the hash count at 6 — size a filter meant to merge with a
+    /// window sketch from that config, not from here, or the geometries
+    /// can mismatch.
+    pub fn with_capacity(items: u64, fp_rate: f64) -> Self {
+        let (log2, h) = hashing::pow2_geometry(items, fp_rate, 6, 26);
+        Self::new(log2, h)
+    }
+
+    pub fn log2_cells(&self) -> u32 {
+        self.log2_cells
+    }
+
+    pub fn num_hashes(&self) -> u32 {
+        self.num_hashes
     }
 
     pub fn insert(&mut self, key: u32) {
@@ -70,6 +91,33 @@ impl CountingBloomFilter {
             *a = (*a).min(*b);
         }
         self.items = self.items.min(other.items);
+    }
+
+    pub fn insert_key64(&mut self, key: u64) {
+        self.insert(fold_key(key));
+    }
+
+    pub fn remove_key64(&mut self, key: u64) {
+        self.remove(fold_key(key));
+    }
+
+    #[inline]
+    pub fn contains_key64(&self, key: u64) -> bool {
+        self.contains(fold_key(key))
+    }
+
+    /// Collapse to the standard bit filter of the same geometry (cell > 0 ⇔
+    /// bit set): membership answers are identical, at 1/8 the bytes. This is
+    /// what the streaming runtime broadcasts as the per-window join filter —
+    /// the counters stay at the workers, only the bit view travels.
+    pub fn to_bit_filter(&self) -> BloomFilter {
+        let mut words = vec![0u32; self.cells.len() / 32];
+        for (p, &c) in self.cells.iter().enumerate() {
+            if c > 0 {
+                words[p >> 5] |= 1 << (p & 31);
+            }
+        }
+        BloomFilter::from_words(words, self.log2_cells, self.num_hashes)
     }
 
     pub fn items(&self) -> u64 {
@@ -151,6 +199,63 @@ mod tests {
         let f = CountingBloomFilter::new(14, 4);
         let s = super::super::standard::BloomFilter::new(14, 4);
         assert_eq!(f.size_bytes(), 8 * s.size_bytes());
+    }
+
+    #[test]
+    fn key64_insert_remove_roundtrip() {
+        let mut f = CountingBloomFilter::new(16, 5);
+        let keys: Vec<u64> = (0..500u64).map(|i| (i << 33) | i).collect();
+        for &k in &keys {
+            f.insert_key64(k);
+        }
+        assert!(keys.iter().all(|&k| f.contains_key64(k)));
+        for &k in &keys[..250] {
+            f.remove_key64(k);
+        }
+        assert!(
+            keys[250..].iter().all(|&k| f.contains_key64(k)),
+            "removal must not break the remaining keys"
+        );
+    }
+
+    #[test]
+    fn with_capacity_hits_target_fp() {
+        let mut r = Rng::new(21);
+        let n = 10_000u64;
+        let mut f = CountingBloomFilter::with_capacity(n, 0.01);
+        for _ in 0..n {
+            f.insert(r.next_u32());
+        }
+        let probes = 50_000;
+        let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+        assert!(
+            (fps as f64 / probes as f64) < 0.05,
+            "fp rate {}",
+            fps as f64 / probes as f64
+        );
+    }
+
+    #[test]
+    fn bit_filter_view_agrees_on_membership() {
+        let mut r = Rng::new(22);
+        let mut f = CountingBloomFilter::new(14, 4);
+        let keys: Vec<u64> = (0..2000).map(|_| r.next_u64()).collect();
+        for &k in &keys {
+            f.insert_key64(k);
+        }
+        for &k in &keys[..1000] {
+            f.remove_key64(k);
+        }
+        let bits = f.to_bit_filter();
+        assert_eq!(bits.size_bytes() * 8, f.size_bytes());
+        // the bit view answers exactly like the counters, present or not
+        for &k in &keys {
+            assert_eq!(bits.contains_key64(k), f.contains_key64(k), "key {k}");
+        }
+        for _ in 0..5000 {
+            let k = r.next_u64();
+            assert_eq!(bits.contains_key64(k), f.contains_key64(k), "probe {k}");
+        }
     }
 
     #[test]

@@ -49,6 +49,20 @@ pub fn optimal_num_hashes(bits: u64, items: u64) -> u32 {
     (h as u32).clamp(1, 16)
 }
 
+/// Power-of-two filter geometry for a capacity + false-positive target
+/// (eq 27): `(log2 cells, optimal hash count)`, the bit/cell count rounded
+/// up to a power of two within `[2^min_log2, 2^max_log2]`. Shared cell
+/// sizing for [`super::counting::CountingBloomFilter::with_capacity`] and
+/// the streaming window sketch (which additionally caps the returned hash
+/// count at 6 to bound per-window delta traffic — see
+/// `stream::SketchConfig::for_capacity`).
+pub fn pow2_geometry(items: u64, fp_rate: f64, min_log2: u32, max_log2: u32) -> (u32, u32) {
+    let bits = bits_for_fp_rate(items.max(1), fp_rate).max(64);
+    let log2 =
+        (64 - (bits - 1).leading_zeros() as u64).clamp(min_log2 as u64, max_log2 as u64) as u32;
+    (log2, optimal_num_hashes(1 << log2, items.max(1)))
+}
+
 /// Filter size for a target false-positive rate (paper eq 27):
 /// |BF| = −N ln p / (ln 2)².
 pub fn bits_for_fp_rate(items: u64, fp_rate: f64) -> u64 {

@@ -142,6 +142,33 @@ impl ShuffleLedger {
     pub fn merge(&mut self, other: ShuffleLedger) {
         self.stages.extend(other.stages);
     }
+
+    /// A copy with every stage renamed to `{prefix}/{stage}` — how the
+    /// streaming runtime folds per-window ledgers into one run ledger
+    /// without losing the window attribution (`w3/filter_shuffle`).
+    pub fn tagged(&self, prefix: &str) -> ShuffleLedger {
+        ShuffleLedger {
+            stages: self
+                .stages
+                .iter()
+                .map(|s| StageTraffic {
+                    stage: format!("{prefix}/{}", s.stage),
+                    bytes_in: s.bytes_in.clone(),
+                    bytes_out: s.bytes_out.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Measured bytes of every stage whose name starts with `prefix` — the
+    /// per-window lookup on a tagged run ledger (`prefix_bytes("w3/")`).
+    pub fn prefix_bytes(&self, prefix: &str) -> u64 {
+        self.stages
+            .iter()
+            .filter(|s| s.stage.starts_with(prefix))
+            .map(|s| s.total_bytes())
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +236,31 @@ mod tests {
         });
         assert!((hot.skew() - 2.0).abs() < 1e-12);
         assert!((ShuffleLedger::default().skew() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tagged_ledger_keeps_bytes_and_prefix_lookup_works() {
+        let mut l = ShuffleLedger::default();
+        l.push(StageTraffic {
+            stage: "filter_shuffle".into(),
+            bytes_in: vec![0, 100],
+            bytes_out: vec![100, 0],
+        });
+        l.push(StageTraffic {
+            stage: "sample".into(),
+            bytes_in: vec![0, 0],
+            bytes_out: vec![0, 0],
+        });
+        let mut run = ShuffleLedger::default();
+        run.merge(l.tagged("w0"));
+        run.merge(l.tagged("w1"));
+        assert_eq!(run.stages.len(), 4);
+        assert_eq!(run.stages[0].stage, "w0/filter_shuffle");
+        assert_eq!(run.prefix_bytes("w0/"), 100);
+        assert_eq!(run.prefix_bytes("w1/"), 100);
+        assert_eq!(run.prefix_bytes("w2/"), 0);
+        assert_eq!(run.total_bytes(), 200);
+        assert_eq!(run.stage_bytes("w1/filter_shuffle"), 100);
     }
 
     #[test]

@@ -54,7 +54,9 @@ impl Default for SyntheticSpec {
 }
 
 impl ValueDist {
-    fn sample(&self, r: &mut Rng) -> f64 {
+    /// Draw one value (public: the streaming event generator shares the
+    /// batch generators' value distributions).
+    pub fn sample(&self, r: &mut Rng) -> f64 {
         match *self {
             ValueDist::Uniform(lo, hi) => r.range_f64(lo, hi),
             ValueDist::Normal(mu, sd) => mu + sd * r.normal(),

@@ -77,6 +77,27 @@
 //! per stage per worker — surfaced through [`join::JoinRun`],
 //! `QueryOutcome`, and `JoinPlan::explain()` (predicted vs measured side
 //! by side).
+//!
+//! ## Streaming windowed execution
+//!
+//! The [`stream`] module drives the same pipeline incrementally over an
+//! unbounded micro-batched stream (the StreamApprox direction, arXiv
+//! 1709.02946): a [`stream::StreamingApproxJoin`] maintains persistent
+//! per-input *counting*-Bloom sketches incrementally from worker-shipped
+//! deltas — arriving tuples are inserted, expired tuples are **deleted**
+//! on window eviction, the sketch is never rebuilt — probes each
+//! tumbling/sliding window
+//! ([`stream::WindowSpec`]) against the ANDed window join filter, shuffles
+//! only the survivors (per-window measured [`cluster::ShuffleLedger`]),
+//! and keeps **eviction-aware per-stratum reservoirs**
+//! ([`sampling::stratified::StratumReservoir`]): only strata touched by
+//! arriving/expiring batches re-draw their sample; untouched strata carry
+//! it over verbatim. Every emitted window carries a
+//! [`stats::ApproxResult`] from the same CLT / Horvitz-Thompson
+//! estimators as the batch path, and window outputs (strata, draws,
+//! ledger) are bit-identical for any thread count. Front ends:
+//! [`session::StreamingSession`], the `approxjoin stream` CLI subcommand,
+//! `examples/streaming_windows.rs`, and the `fig_stream_windows` bench.
 
 pub mod bloom;
 pub mod cluster;
@@ -90,8 +111,9 @@ pub mod sampling;
 pub mod session;
 pub mod simulation;
 pub mod stats;
+pub mod stream;
 pub mod testkit;
 pub mod util;
 
 pub use anyhow::Result;
-pub use session::{Session, StrategyChoice};
+pub use session::{Session, StrategyChoice, StreamingSession};

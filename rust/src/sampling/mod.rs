@@ -7,4 +7,6 @@ pub mod edge_sampling;
 pub mod stratified;
 
 pub use edge_sampling::{sample_edges_dedup, sample_edges_with_replacement, SampledPairs};
-pub use stratified::{post_join_reservoir, sample_by_key};
+pub use stratified::{
+    post_join_reservoir, refresh_reservoir_strata, sample_by_key, StratumReservoir,
+};

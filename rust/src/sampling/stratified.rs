@@ -10,11 +10,15 @@
 //!   "extended repartition join" and SnappyData baselines of §5.3/§5.5).
 
 use crate::data::Dataset;
+use crate::join::approx::SamplingParams;
 use crate::join::CombineOp;
 use crate::runtime::ParallelExecutor;
-use crate::stats::StratumAgg;
+use crate::sampling::edge_sampling::{
+    population, sample_edges_dedup, sample_edges_with_replacement,
+};
+use crate::stats::{EstimatorKind, StratumAgg};
 use crate::util::Rng;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Spark `sampleByKey`: keep each record independently with probability
 /// `fraction` (per-key simple random sampling of the inputs).
@@ -122,6 +126,88 @@ pub fn post_join_reservoir_strata(
     keys.into_iter().zip(aggs).collect()
 }
 
+/// One stratum's retained window sample for the streaming path: the sample
+/// aggregate, the raw draw count behind it (the Horvitz-Thompson inclusion
+/// probability π_i needs it; equals `agg.count` on the with-replacement
+/// path), and the window index at which the reservoir was last (re)filled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StratumReservoir {
+    pub agg: StratumAgg,
+    pub draws: f64,
+    pub epoch: u64,
+}
+
+/// The RNG for one stratum's window draw: derived from (seed, key, epoch)
+/// alone, so a refresh is independent of worker/thread placement and of the
+/// key visit order — the streaming bit-identity guarantee.
+fn window_stratum_rng(seed: u64, key: u64, epoch: u64) -> Rng {
+    Rng::new(
+        seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ epoch.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    )
+}
+
+/// Eviction-aware refresh of per-stratum reservoirs over one window's
+/// cogrouped strata. A stratum whose contributing tuples did not change
+/// since the previous window (not in `changed`) carries its reservoir over
+/// verbatim — no re-draw, no RNG consumption; changed or new strata are
+/// refilled from a fresh (seed, key, epoch)-derived RNG, with-replacement
+/// for [`EstimatorKind::Clt`] and deduplicated for
+/// [`EstimatorKind::HorvitzThompson`]. Keys absent from `groups` (fully
+/// evicted) simply drop out. Keys are visited in sorted order and the
+/// per-key RNG is placement-independent, so any parallel split of `groups`
+/// (the streaming runtime shards by destination worker) produces
+/// bit-identical reservoirs. Returns the new reservoir map plus the
+/// (refreshed, carried) stratum counts.
+#[allow(clippy::too_many_arguments)] // one call site (the streaming join); a config struct would only restate it
+pub fn refresh_reservoir_strata(
+    groups: &HashMap<u64, Vec<Vec<f64>>>,
+    changed: &HashSet<u64>,
+    previous: &HashMap<u64, StratumReservoir>,
+    params: &SamplingParams,
+    estimator: EstimatorKind,
+    op: CombineOp,
+    seed: u64,
+    epoch: u64,
+) -> (HashMap<u64, StratumReservoir>, u64, u64) {
+    let mut keys: Vec<u64> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    let mut out = HashMap::with_capacity(keys.len());
+    let (mut refreshed, mut carried) = (0u64, 0u64);
+    for key in keys {
+        let sides = &groups[&key];
+        if !changed.contains(&key) {
+            if let Some(prev) = previous.get(&key) {
+                debug_assert_eq!(
+                    prev.agg.population,
+                    population(sides),
+                    "unchanged stratum {key} changed population — stale change tracking"
+                );
+                out.insert(key, prev.clone());
+                carried += 1;
+                continue;
+            }
+        }
+        let pop = population(sides);
+        if pop == 0.0 {
+            continue;
+        }
+        let b = params.sample_size(key, pop);
+        let mut r = window_stratum_rng(seed, key, epoch);
+        let (agg, draws) = match estimator {
+            EstimatorKind::Clt => {
+                let agg = sample_edges_with_replacement(&mut r, sides, b, op);
+                let d = agg.count;
+                (agg, d)
+            }
+            EstimatorKind::HorvitzThompson => sample_edges_dedup(&mut r, sides, b, op),
+        };
+        out.insert(key, StratumReservoir { agg, draws, epoch });
+        refreshed += 1;
+    }
+    (out, refreshed, carried)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +306,139 @@ mod tests {
             assert_eq!(agg.population, 108.0, "key {key}");
             assert_eq!(agg.count, 22.0, "key {key}"); // ceil(0.2 * 108)
         }
+    }
+
+    fn window_groups(n_keys: u64, salt: u64) -> HashMap<u64, Vec<Vec<f64>>> {
+        let mut groups = HashMap::new();
+        for key in 0..n_keys {
+            let a: Vec<f64> = (0..10).map(|i| (key * 13 + i + salt) as f64).collect();
+            let b: Vec<f64> = (0..8).map(|i| (key * 7 + i) as f64 * 0.25).collect();
+            groups.insert(key, vec![a, b]);
+        }
+        groups
+    }
+
+    #[test]
+    fn reservoir_refresh_is_deterministic_in_seed_key_epoch() {
+        let groups = window_groups(20, 0);
+        let changed: HashSet<u64> = groups.keys().copied().collect();
+        let params = SamplingParams::Fraction(0.25);
+        let run = || {
+            refresh_reservoir_strata(
+                &groups,
+                &changed,
+                &HashMap::new(),
+                &params,
+                EstimatorKind::Clt,
+                CombineOp::Sum,
+                9,
+                3,
+            )
+        };
+        let (a, refreshed, carried) = run();
+        let (b, _, _) = run();
+        assert_eq!(a, b);
+        assert_eq!(refreshed, 20);
+        assert_eq!(carried, 0);
+        for (key, r) in &a {
+            assert_eq!(r.agg.population, 80.0, "key {key}");
+            assert_eq!(r.agg.count, 20.0, "key {key}"); // ceil(0.25 * 80)
+            assert_eq!(r.draws, r.agg.count, "CLT draws == sample size");
+            assert_eq!(r.epoch, 3);
+        }
+        // a different epoch redraws a different sample
+        let (c, _, _) = refresh_reservoir_strata(
+            &groups,
+            &changed,
+            &HashMap::new(),
+            &params,
+            EstimatorKind::Clt,
+            CombineOp::Sum,
+            9,
+            4,
+        );
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn unchanged_strata_carry_over_changed_strata_refresh() {
+        let params = SamplingParams::Fraction(0.25);
+        let groups0 = window_groups(20, 0);
+        let all: HashSet<u64> = groups0.keys().copied().collect();
+        let (w0, _, _) = refresh_reservoir_strata(
+            &groups0,
+            &all,
+            &HashMap::new(),
+            &params,
+            EstimatorKind::Clt,
+            CombineOp::Sum,
+            9,
+            0,
+        );
+        // next window: keys 0..5 changed content, the rest are untouched
+        let mut groups1 = window_groups(20, 0);
+        for key in 0..5u64 {
+            groups1.insert(key, window_groups(20, 100)[&key].clone());
+        }
+        let changed: HashSet<u64> = (0..5).collect();
+        let (w1, refreshed, carried) = refresh_reservoir_strata(
+            &groups1,
+            &changed,
+            &w0,
+            &params,
+            EstimatorKind::Clt,
+            CombineOp::Sum,
+            9,
+            1,
+        );
+        assert_eq!(refreshed, 5);
+        assert_eq!(carried, 15);
+        for key in 0..20u64 {
+            if key < 5 {
+                assert_eq!(w1[&key].epoch, 1, "changed stratum {key} must refresh");
+                assert_ne!(w1[&key], w0[&key]);
+            } else {
+                assert_eq!(w1[&key], w0[&key], "unchanged stratum {key} must carry");
+            }
+        }
+    }
+
+    #[test]
+    fn evicted_strata_drop_and_ht_tracks_raw_draws() {
+        let params = SamplingParams::Fraction(0.5);
+        let groups0 = window_groups(10, 0);
+        let all: HashSet<u64> = groups0.keys().copied().collect();
+        let (w0, _, _) = refresh_reservoir_strata(
+            &groups0,
+            &all,
+            &HashMap::new(),
+            &params,
+            EstimatorKind::HorvitzThompson,
+            CombineOp::Sum,
+            5,
+            0,
+        );
+        for r in w0.values() {
+            // dedup sampling: distinct edges <= raw draws
+            assert!(r.agg.count <= r.draws, "{} > {}", r.agg.count, r.draws);
+            assert!(r.agg.count > 0.0);
+        }
+        // the next window only contains keys 5.. — the rest evict
+        let mut groups1 = window_groups(10, 0);
+        groups1.retain(|k, _| *k >= 5);
+        let changed = HashSet::new();
+        let (w1, refreshed, carried) = refresh_reservoir_strata(
+            &groups1,
+            &changed,
+            &w0,
+            &params,
+            EstimatorKind::HorvitzThompson,
+            CombineOp::Sum,
+            5,
+            1,
+        );
+        assert_eq!(w1.len(), 5);
+        assert_eq!((refreshed, carried), (0, 5));
+        assert!((0..5u64).all(|k| !w1.contains_key(&k)));
     }
 }

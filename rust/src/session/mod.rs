@@ -28,6 +28,10 @@
 //! ApproxJoin pipeline). `strategy(Named("bloom"))` forces one. `plan()` /
 //! `explain()` expose the ranking without executing anything.
 
+pub mod streaming;
+
+pub use streaming::StreamingSession;
+
 use crate::cluster::SimCluster;
 use crate::coordinator::{estimate_result, ApproxJoinEngine, EngineConfig, ExecutionMode, QueryOutcome};
 use crate::cost::CostModel;

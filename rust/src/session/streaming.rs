@@ -1,0 +1,279 @@
+//! The streaming session front end — the one way callers run windowed
+//! streaming joins, mirroring the batch [`super::Session`] fluent shape:
+//!
+//! ```no_run
+//! use approxjoin::coordinator::EngineConfig;
+//! use approxjoin::session::StreamingSession;
+//! use approxjoin::stream::{EventStream, EventStreamSpec, WindowSpec};
+//!
+//! let mut source = EventStream::new(EventStreamSpec::default());
+//! let run = StreamingSession::new(&EngineConfig::default())
+//!     .window(WindowSpec::sliding(6, 2))
+//!     .sampling_fraction(0.1)
+//!     .run(&mut source, 24);
+//! for w in &run.windows {
+//!     println!(
+//!         "window {} [{}..{}]: {:.1} ± {:.1}",
+//!         w.bounds.index, w.bounds.first_batch, w.bounds.last_batch,
+//!         w.result.estimate, w.result.error_bound
+//!     );
+//! }
+//! ```
+//!
+//! The builder maps the engine configuration (workers, time model,
+//! parallelism, fp rate, estimator, seed) onto a [`StreamConfig`] and adds
+//! the streaming-only knobs: window shape, per-window sampling, the
+//! unfiltered baseline, and the exact truth twin.
+
+use crate::coordinator::EngineConfig;
+use crate::join::approx::{ApproxConfig, SamplingParams};
+use crate::join::CombineOp;
+use crate::query::AggFunc;
+use crate::stream::{
+    StreamConfig, StreamRun, StreamSource, StreamingApproxJoin, WindowSpec,
+};
+
+/// Fluent builder for streaming windowed joins.
+#[derive(Clone, Debug)]
+pub struct StreamingSession {
+    config: StreamConfig,
+    /// The session's sampling defaults (estimator, seed) — restored when
+    /// sampling is re-enabled after `.exact()`.
+    base_sampling: ApproxConfig,
+}
+
+impl StreamingSession {
+    /// A streaming session on the engine's cluster model: `workers`,
+    /// `time_model`, `parallelism`, `fp_rate`, `estimator` and `seed` carry
+    /// through; sampling defaults to a 10% fraction per window.
+    pub fn new(cfg: &EngineConfig) -> Self {
+        let base_sampling = ApproxConfig {
+            params: SamplingParams::Fraction(0.1),
+            estimator: cfg.estimator,
+            seed: cfg.seed,
+        };
+        Self {
+            config: StreamConfig {
+                workers: cfg.workers,
+                time_model: cfg.time_model,
+                parallelism: cfg.parallelism,
+                fp_rate: cfg.fp_rate,
+                sampling: Some(base_sampling.clone()),
+                ..Default::default()
+            },
+            base_sampling,
+        }
+    }
+
+    /// Window shape (tumbling or sliding), in micro-batch units.
+    pub fn window(mut self, spec: WindowSpec) -> Self {
+        self.config.window = spec;
+        self
+    }
+
+    /// Per-window uniform sampling fraction — keeps the session's
+    /// estimator and seed, even when re-enabling sampling after
+    /// [`StreamingSession::exact`].
+    pub fn sampling_fraction(mut self, fraction: f64) -> Self {
+        let prev = self
+            .config
+            .sampling
+            .take()
+            .unwrap_or_else(|| self.base_sampling.clone());
+        self.config.sampling = Some(ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            ..prev
+        });
+        self
+    }
+
+    /// Full per-window sampling configuration (params + estimator + seed);
+    /// becomes the session's new sampling default.
+    pub fn sampling(mut self, cfg: ApproxConfig) -> Self {
+        self.base_sampling = cfg.clone();
+        self.config.sampling = Some(cfg);
+        self
+    }
+
+    /// Enumerate the exact per-window cross products instead of sampling —
+    /// the truth twin the soundness tests compare against.
+    pub fn exact(mut self) -> Self {
+        self.config.sampling = None;
+        self
+    }
+
+    /// Disable the Bloom filtering stage: every window record is shuffled —
+    /// the baseline the per-window shuffle-reduction claim is measured
+    /// against.
+    pub fn unfiltered(mut self) -> Self {
+        self.config.bloom_filtering = false;
+        self
+    }
+
+    /// How per-input values combine inside the aggregate.
+    pub fn combine(mut self, op: CombineOp) -> Self {
+        self.config.combine = op;
+        self
+    }
+
+    pub fn aggregate(mut self, agg: AggFunc) -> Self {
+        self.config.agg = agg;
+        self
+    }
+
+    pub fn confidence(mut self, confidence: f64) -> Self {
+        assert!((0.0..1.0).contains(&confidence) && confidence > 0.0);
+        self.config.confidence = confidence;
+        self
+    }
+
+    /// Explicit window-sketch geometry.
+    pub fn sketch(mut self, sketch: crate::stream::SketchConfig) -> Self {
+        self.config.sketch = Some(sketch);
+        self
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.config
+    }
+
+    /// Open a long-lived operator for manual [`StreamingApproxJoin::push_batch`]
+    /// driving. `record_bytes` holds one wire width per input (the last
+    /// repeats if fewer are given).
+    pub fn open(&self, record_bytes: Vec<u64>) -> StreamingApproxJoin {
+        StreamingApproxJoin::new(self.config.clone(), record_bytes)
+    }
+
+    /// Drive `batches` micro-batches from a source and collect every
+    /// emitted window plus the tagged run ledger.
+    pub fn run(&self, source: &mut dyn StreamSource, batches: u64) -> StreamRun {
+        let mut join = self.open(source.record_bytes());
+        let windows = join.run(source, batches);
+        StreamRun {
+            windows,
+            ledger: join.run_ledger().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::stream::{EventStream, EventStreamSpec};
+
+    fn engine_config() -> EngineConfig {
+        EngineConfig {
+            workers: 4,
+            parallelism: 1,
+            time_model: TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+            ..Default::default()
+        }
+    }
+
+    fn source(seed: u64) -> EventStream {
+        EventStream::new(EventStreamSpec {
+            events_per_batch: 600,
+            shared_fraction: 0.2,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn fluent_streaming_run_produces_windows() {
+        let run = StreamingSession::new(&engine_config())
+            .window(WindowSpec::sliding(4, 2))
+            .sampling_fraction(0.3)
+            .run(&mut source(9), 10);
+        assert_eq!(run.windows.len(), 4); // emits after 4, 6, 8, 10 batches
+        for (i, w) in run.windows.iter().enumerate() {
+            assert_eq!(w.bounds.index, i as u64);
+            assert!(w.sampled);
+            assert!(w.result.estimate > 0.0);
+            assert!(w.result.error_bound > 0.0);
+            assert!(!w.ledger.stages.is_empty());
+            // the run ledger carries this window's bytes under its tag
+            assert_eq!(
+                run.ledger.prefix_bytes(&format!("w{i}/")),
+                w.ledger.total_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_estimates_track_the_exact_twin() {
+        let session = StreamingSession::new(&engine_config()).window(WindowSpec::tumbling(3));
+        let sampled = session
+            .clone()
+            .sampling_fraction(0.4)
+            .run(&mut source(31), 9);
+        let exact = session.exact().run(&mut source(31), 9);
+        assert_eq!(sampled.windows.len(), exact.windows.len());
+        for (s, e) in sampled.windows.iter().zip(&exact.windows) {
+            assert!(!e.sampled);
+            assert_eq!(e.result.error_bound, 0.0);
+            // exact per-window populations agree — the filter stage knows
+            // every stratum's size regardless of sampling
+            assert_eq!(s.output_cardinality(), e.output_cardinality());
+            let rel = (s.result.estimate - e.result.estimate).abs() / e.result.estimate.abs();
+            assert!(rel < 0.15, "window {}: rel {rel}", s.bounds.index);
+        }
+    }
+
+    #[test]
+    fn sampling_after_exact_restores_engine_estimator_and_seed() {
+        use crate::stats::EstimatorKind;
+        let cfg = EngineConfig {
+            estimator: EstimatorKind::HorvitzThompson,
+            seed: 123,
+            ..engine_config()
+        };
+        let s = StreamingSession::new(&cfg).exact().sampling_fraction(0.2);
+        let sampling = s.config().sampling.as_ref().expect("sampling re-enabled");
+        assert_eq!(sampling.estimator, EstimatorKind::HorvitzThompson);
+        assert_eq!(sampling.seed, 123);
+    }
+
+    #[test]
+    fn run_resumes_at_the_stream_position() {
+        // two runs on one operator must consume fresh batches, not replay
+        let session = StreamingSession::new(&engine_config())
+            .window(WindowSpec::tumbling(2))
+            .exact();
+        let mut src = source(4);
+        let mut join = session.open(src.record_bytes());
+        let first = join.run(&mut src, 4);
+        let second = join.run(&mut src, 4);
+        assert_eq!(first.len(), 2);
+        assert_eq!(second.len(), 2);
+        assert_eq!(
+            (second[0].bounds.first_batch, second[1].bounds.last_batch),
+            (4, 7)
+        );
+        // one continuous 8-batch run sees the identical windows
+        let whole = session.run(&mut source(4), 8);
+        for (w, cont) in first.iter().chain(&second).zip(&whole.windows) {
+            assert_eq!(w.bounds, cont.bounds);
+            assert_eq!(w.result.estimate.to_bits(), cont.result.estimate.to_bits());
+            assert_eq!(w.strata, cont.strata);
+        }
+    }
+
+    #[test]
+    fn unfiltered_baseline_moves_more_bytes() {
+        let session = StreamingSession::new(&engine_config())
+            .window(WindowSpec::tumbling(3))
+            .sampling_fraction(0.2);
+        let filtered = session.clone().run(&mut source(7), 6);
+        let unfiltered = session.unfiltered().run(&mut source(7), 6);
+        for (f, u) in filtered.windows.iter().zip(&unfiltered.windows) {
+            assert!(f.ledger.total_bytes() < u.ledger.total_bytes());
+            assert_eq!(f.result.estimate.to_bits(), u.result.estimate.to_bits());
+        }
+    }
+}

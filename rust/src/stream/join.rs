@@ -1,0 +1,748 @@
+//! The streaming windowed ApproxJoin: incremental Bloom sketching over a
+//! sliding/tumbling micro-batch window, per-window filtered shuffle,
+//! per-stratum eviction-aware reservoirs, per-window CLT /
+//! Horvitz-Thompson estimates — all through the same [`SimCluster`] /
+//! [`crate::runtime::ParallelExecutor`] substrate as the batch strategies.
+//!
+//! Per emitted window the pipeline runs three stages, each with measured
+//! compute and counted network traffic in the window's [`ShuffleLedger`]:
+//!
+//! 1. **`sketch_update`** — the master holds one persistent counting-Bloom
+//!    sketch per input. Workers ship the cell deltas of their
+//!    locally-arrived records (5 bytes per touched cell, capped at the
+//!    sketch size); the master *inserts* arriving batches and *deletes*
+//!    expired ones ([`CountingBloomFilter::remove_key64`]) — the sketch is
+//!    maintained incrementally, O(touched cells) per window, never rebuilt
+//!    from the window contents — then ANDs (cell-wise min) the inputs into
+//!    the window join sketch and broadcasts its *bit view*
+//!    ([`CountingBloomFilter::to_bit_filter`], 1/8 the bytes).
+//! 2. **`filter_shuffle`** — each worker probes its locally-arrived window
+//!    records against the broadcast filter and shuffles only the survivors
+//!    to their key-hashed destination. With filtering disabled the stage is
+//!    named `shuffle` and moves every window record — the unfiltered
+//!    baseline the per-window shuffle-reduction claim is measured against.
+//! 3. **`sample`** (or **`crossproduct`** in exact mode) — per-stratum
+//!    reservoirs refresh via
+//!    [`crate::sampling::stratified::refresh_reservoir_strata`]: only
+//!    strata touched by arriving/expiring batches re-draw; untouched strata
+//!    carry their sample over verbatim. Estimates + confidence intervals
+//!    come from the same CLT / Horvitz-Thompson estimators as the batch
+//!    path.
+//!
+//! Determinism: per-stratum RNGs depend only on (seed, key, refresh epoch),
+//! the master's sketch updates run in one fixed order, workers own disjoint
+//! key sets, and partial results merge in worker order — window outputs
+//! (strata, draws, ledger) are bit-identical for any thread count, the
+//! invariant `tests/stream_windows.rs` asserts.
+
+use super::source::StreamSource;
+use super::window::{WindowBounds, WindowSpec};
+use crate::bloom::{BloomFilter, CountingBloomFilter};
+use crate::cluster::{JoinMetrics, ShuffleLedger, SimCluster, TimeModel};
+use crate::data::{partition_of, Record};
+use crate::join::approx::ApproxConfig;
+use crate::join::CombineOp;
+use crate::query::AggFunc;
+use crate::sampling::stratified::{refresh_reservoir_strata, StratumReservoir};
+use crate::stats::{ApproxResult, EstimatorKind, StratumAgg};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Instant;
+
+/// Geometry of the window sketch (counting cells; the broadcast join
+/// filter is the bit view of the same geometry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchConfig {
+    pub log2_cells: u32,
+    pub num_hashes: u32,
+}
+
+impl SketchConfig {
+    /// Geometry for an expected per-input window volume at a target
+    /// false-positive rate (eq 27 applied to the cell count). The hash
+    /// count is capped at 6: per-window delta traffic scales with h (one
+    /// touched cell per hash per arriving/expiring record) while the
+    /// power-of-two cell rounding already holds the fp rate at target —
+    /// at h = 6 and the eq-27 minimal cell count, fp ≈ 0.0101 for a 1%
+    /// target, and any rounding slack only improves it.
+    pub fn for_capacity(items: u64, fp_rate: f64) -> Self {
+        // same sizing as CountingBloomFilter::with_capacity (shared
+        // pow2_geometry helper), computed without allocating a cell array
+        let (log2_cells, h) = crate::bloom::hashing::pow2_geometry(items, fp_rate, 6, 26);
+        Self {
+            log2_cells,
+            num_hashes: h.min(6),
+        }
+    }
+}
+
+/// Configuration of a streaming windowed join.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub window: WindowSpec,
+    /// Logical workers of the simulated cluster (the accounting k).
+    pub workers: usize,
+    pub time_model: TimeModel,
+    /// OS threads the per-worker loops run on (pure throughput knob —
+    /// window outputs are bit-identical for any value).
+    pub parallelism: usize,
+    /// Sketch sizing target when `sketch` is None.
+    pub fp_rate: f64,
+    /// Explicit sketch geometry; None sizes from the observed per-batch
+    /// volume × window size at the first emission.
+    pub sketch: Option<SketchConfig>,
+    /// Per-window sampling (params + estimator + seed); None enumerates the
+    /// exact per-window cross products (the truth twin tests compare to).
+    pub sampling: Option<ApproxConfig>,
+    /// false shuffles every window record — the unfiltered baseline.
+    pub bloom_filtering: bool,
+    pub agg: AggFunc,
+    pub combine: CombineOp,
+    pub confidence: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self {
+            window: WindowSpec::default(),
+            workers: 4,
+            time_model: TimeModel::default(),
+            parallelism: crate::runtime::default_parallelism(),
+            fp_rate: 0.01,
+            sketch: None,
+            sampling: Some(ApproxConfig::default()),
+            bloom_filtering: true,
+            agg: AggFunc::Sum,
+            combine: CombineOp::Sum,
+            confidence: 0.95,
+        }
+    }
+}
+
+/// One emitted window's outcome: the estimate with its confidence interval,
+/// the per-stratum aggregates behind it, and the window's own measured
+/// metrics + shuffle ledger.
+#[derive(Clone, Debug)]
+pub struct WindowResult {
+    pub bounds: WindowBounds,
+    pub result: ApproxResult,
+    /// Per-join-key aggregates of this window (population = exact per-key
+    /// output cardinality; count = sample size, or population in exact
+    /// mode).
+    pub strata: HashMap<u64, StratumAgg>,
+    /// Raw draw counts per key (Horvitz-Thompson path only).
+    pub draws: HashMap<u64, f64>,
+    pub sampled: bool,
+    pub metrics: JoinMetrics,
+    /// Measured per-stage / per-worker traffic of THIS window.
+    pub ledger: ShuffleLedger,
+    /// Strata re-drawn this window (touched by arrivals/evictions).
+    pub refreshed_strata: u64,
+    /// Strata whose reservoir carried over unchanged.
+    pub carried_strata: u64,
+}
+
+impl WindowResult {
+    /// Exact per-window join-output cardinality Σ B_i.
+    pub fn output_cardinality(&self) -> f64 {
+        self.strata.values().map(|s| s.population).sum()
+    }
+}
+
+/// A whole streaming run: every emitted window plus the run-level ledger
+/// (per-window stages tagged `w{index}/{stage}`).
+#[derive(Clone, Debug)]
+pub struct StreamRun {
+    pub windows: Vec<WindowResult>,
+    pub ledger: ShuffleLedger,
+}
+
+/// One pushed micro-batch split by arrival worker, `[input][worker]`:
+/// worker w owns the records at positions ≡ w (mod k) of each input. The
+/// split happens once at push time, so every per-worker loop (sketch
+/// update, probing) touches only its own records instead of skip-scanning
+/// the whole window k times.
+type SplitBatch = Vec<Vec<Vec<Record>>>;
+
+/// Retention cap of the run-level ledger: with 3 stages per window this
+/// keeps ~1300 windows of tagged traffic before the oldest are dropped.
+pub const MAX_RUN_LEDGER_STAGES: usize = 4096;
+
+fn split_batch(batch: Vec<Vec<Record>>, k: usize) -> SplitBatch {
+    batch
+        .into_iter()
+        .map(|recs| {
+            let mut per_worker: Vec<Vec<Record>> = vec![Vec::new(); k];
+            for (j, r) in recs.into_iter().enumerate() {
+                per_worker[j % k].push(r);
+            }
+            per_worker
+        })
+        .collect()
+}
+
+/// The streaming windowed join operator. Feed it micro-batches with
+/// [`StreamingApproxJoin::push_batch`]; it emits a [`WindowResult`] every
+/// time a window closes.
+pub struct StreamingApproxJoin {
+    cfg: StreamConfig,
+    /// Wire width of one record, per input (one entry repeats for all).
+    record_bytes: Vec<u64>,
+    /// Resolved sketch geometry (fixed at the first emission).
+    sketch: Option<SketchConfig>,
+    /// The master's persistent per-input counting sketches — updated with
+    /// every window's arrival/eviction deltas, never rebuilt. u8 cells
+    /// saturate at 255 copies of one key per window per input; removes
+    /// then skip the saturated cells, which can only cost false positives,
+    /// never false negatives.
+    sketch_filters: Vec<CountingBloomFilter>,
+    /// Batches currently applied to the sketches, oldest first.
+    window: VecDeque<SplitBatch>,
+    /// Batches pushed since the last emission (not yet sketched).
+    pending: Vec<SplitBatch>,
+    reservoirs: HashMap<u64, StratumReservoir>,
+    batches_pushed: u64,
+    run_ledger: ShuffleLedger,
+    n_inputs: Option<usize>,
+}
+
+impl StreamingApproxJoin {
+    pub fn new(cfg: StreamConfig, record_bytes: Vec<u64>) -> Self {
+        assert!(cfg.workers >= 1);
+        assert!((0.0..1.0).contains(&cfg.fp_rate) && cfg.fp_rate > 0.0);
+        assert!(!record_bytes.is_empty(), "need at least one record width");
+        let sketch = cfg.sketch;
+        Self {
+            cfg,
+            record_bytes,
+            sketch,
+            sketch_filters: Vec::new(),
+            window: VecDeque::new(),
+            pending: Vec::new(),
+            reservoirs: HashMap::new(),
+            batches_pushed: 0,
+            run_ledger: ShuffleLedger::default(),
+            n_inputs: None,
+        }
+    }
+
+    /// Wire width of one record of `input` (the last reported width
+    /// repeats when the source gave fewer widths than inputs).
+    fn width(&self, input: usize) -> u64 {
+        *self
+            .record_bytes
+            .get(input)
+            .unwrap_or_else(|| self.record_bytes.last().expect("non-empty widths"))
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// The run-level ledger: recently emitted windows' measured traffic,
+    /// stages tagged `w{index}/{stage}`. Bounded on a long-lived operator —
+    /// once it exceeds [`MAX_RUN_LEDGER_STAGES`] stage entries the oldest
+    /// windows' stages are dropped (each [`WindowResult`] still carries its
+    /// own complete ledger).
+    pub fn run_ledger(&self) -> &ShuffleLedger {
+        &self.run_ledger
+    }
+
+    /// Detach and reset the run-level ledger (long-lived operators can
+    /// drain it periodically instead of relying on the retention cap).
+    pub fn take_run_ledger(&mut self) -> ShuffleLedger {
+        std::mem::take(&mut self.run_ledger)
+    }
+
+    /// Push one micro-batch (one record vector per input). Returns the
+    /// window result when this batch closes a window.
+    pub fn push_batch(&mut self, batch: Vec<Vec<Record>>) -> Option<WindowResult> {
+        let n = batch.len();
+        assert!(n >= 2, "streaming join needs >= 2 inputs");
+        match self.n_inputs {
+            None => self.n_inputs = Some(n),
+            Some(m) => assert_eq!(m, n, "input arity changed mid-stream"),
+        }
+        self.pending.push(split_batch(batch, self.cfg.workers));
+        self.batches_pushed += 1;
+        if self.cfg.window.emits_after(self.batches_pushed) {
+            Some(self.emit())
+        } else {
+            None
+        }
+    }
+
+    /// Drive `batches` further micro-batches from a source, collecting
+    /// every emitted window. Resumes at the operator's current stream
+    /// position, so repeated calls (or calls after manual
+    /// [`StreamingApproxJoin::push_batch`]es) pull fresh batches instead of
+    /// replaying the source from 0.
+    pub fn run(&mut self, source: &mut dyn StreamSource, batches: u64) -> Vec<WindowResult> {
+        let start = self.batches_pushed;
+        (start..start + batches)
+            .filter_map(|t| self.push_batch(source.batch(t)))
+            .collect()
+    }
+
+    fn emit(&mut self) -> WindowResult {
+        let windex = self.cfg.window.window_index(self.batches_pushed);
+        let bounds = self.cfg.window.bounds(windex);
+        let n = self.n_inputs.expect("emit after at least one batch");
+        let k = self.cfg.workers;
+        let mut cluster = SimCluster::new(k, self.cfg.time_model)
+            .with_parallelism(self.cfg.parallelism);
+        let exec = cluster.exec;
+
+        // batches entering / leaving the window since the last emission
+        let arrivals: Vec<SplitBatch> = std::mem::take(&mut self.pending);
+        let n_evict = (self.window.len() + arrivals.len()).saturating_sub(self.cfg.window.size);
+        let evicted: Vec<SplitBatch> = (0..n_evict)
+            .map(|_| self.window.pop_front().expect("evictable batch"))
+            .collect();
+
+        // keys whose window contents changed — exactly the reservoirs that
+        // must refresh (an untouched key's record set is provably identical)
+        let mut changed: HashSet<u64> = HashSet::new();
+        for b in arrivals.iter().chain(&evicted) {
+            for per_worker in b {
+                for recs in per_worker {
+                    for r in recs {
+                        changed.insert(r.key);
+                    }
+                }
+            }
+        }
+
+        // ---- stage 1: incremental sketch maintenance + filter broadcast
+        let join_filter: Option<BloomFilter> = if self.cfg.bloom_filtering {
+            let g = *self.sketch.get_or_insert_with(|| {
+                // first emission: size for the observed per-batch volume
+                // times the window length
+                let per_batch = arrivals
+                    .iter()
+                    .flat_map(|b| {
+                        b.iter()
+                            .map(|per_worker| per_worker.iter().map(Vec::len).sum::<usize>() as u64)
+                    })
+                    .max()
+                    .unwrap_or(1)
+                    .max(1);
+                SketchConfig::for_capacity(
+                    per_batch * self.cfg.window.size as u64,
+                    self.cfg.fp_rate,
+                )
+            });
+            if self.sketch_filters.is_empty() {
+                self.sketch_filters = (0..n)
+                    .map(|_| CountingBloomFilter::new(g.log2_cells, g.num_hashes))
+                    .collect();
+            }
+            let mut s = cluster.stage("sketch_update");
+            // each worker ships the cell delta of its locally-arrived /
+            // expiring records to the master: 5 bytes per touched cell
+            // (u32 index + signed count), never more than the full
+            // per-input sketches
+            let sketch_bytes = 1u64 << g.log2_cells;
+            let mut total_touched = 0u64;
+            for w in 0..k {
+                let touched: u64 = arrivals
+                    .iter()
+                    .chain(&evicted)
+                    .flat_map(|b| b.iter().map(|per_worker| per_worker[w].len() as u64))
+                    .sum();
+                let delta = (touched * g.num_hashes as u64 * 5).min(n as u64 * sketch_bytes);
+                s.transfer(w, 0, delta);
+                total_touched += touched;
+            }
+            s.add_items(total_touched);
+            // the master applies the deltas to its persistent per-input
+            // sketches — O(touched cells), not a rebuild; evictions before
+            // arrivals, one fixed order, since cell updates at the u8
+            // saturation boundary do not commute — then ANDs (cell-wise
+            // min) the inputs into the window join sketch and broadcasts
+            // its bit view (membership-identical, 1/8 the bytes)
+            let filters = &mut self.sketch_filters;
+            let filter = s.task(0, || {
+                for b in &evicted {
+                    for (i, per_worker) in b.iter().enumerate() {
+                        for recs in per_worker {
+                            for r in recs {
+                                filters[i].remove_key64(r.key);
+                            }
+                        }
+                    }
+                }
+                for b in &arrivals {
+                    for (i, per_worker) in b.iter().enumerate() {
+                        for recs in per_worker {
+                            for r in recs {
+                                filters[i].insert_key64(r.key);
+                            }
+                        }
+                    }
+                }
+                let mut join = filters[0].clone();
+                for f in &filters[1..] {
+                    join.intersect_with(f);
+                }
+                join.to_bit_filter()
+            });
+            s.broadcast(0, filter.size_bytes());
+            s.finish(&mut cluster);
+            Some(filter)
+        } else {
+            None
+        };
+        self.window.extend(arrivals);
+        debug_assert!(self.window.len() <= self.cfg.window.size);
+
+        // ---- stage 2: probe locally-arrived records, shuffle survivors
+        let stage_name = if join_filter.is_some() {
+            "filter_shuffle"
+        } else {
+            "shuffle"
+        };
+        let mut s = cluster.stage(stage_name);
+        let window_ref = &self.window;
+        let jf = join_filter.as_ref();
+        let probed: Vec<(Vec<Vec<Record>>, f64)> = exec.map(k, |w| {
+            let t0 = Instant::now();
+            let mut mine: Vec<Vec<Record>> = vec![Vec::new(); n];
+            for b in window_ref {
+                for (i, per_worker) in b.iter().enumerate() {
+                    for r in &per_worker[w] {
+                        let keep = match jf {
+                            Some(f) => f.contains_key64(r.key),
+                            None => true,
+                        };
+                        if keep {
+                            mine[i].push(*r);
+                        }
+                    }
+                }
+            }
+            (mine, t0.elapsed().as_secs_f64())
+        });
+        // [dst worker][input] so each destination's records move into the
+        // cogroup stage without a copy
+        let mut shuffled: Vec<Vec<Vec<Record>>> = vec![vec![Vec::new(); n]; k];
+        let mut survivors = 0u64;
+        for (w, (mine, secs)) in probed.into_iter().enumerate() {
+            s.add_compute(w, secs);
+            for (i, recs) in mine.into_iter().enumerate() {
+                let width = self.width(i);
+                for r in recs {
+                    let dst = partition_of(r.key, k);
+                    s.transfer(w, dst, width);
+                    shuffled[dst][i].push(r);
+                    survivors += 1;
+                }
+            }
+        }
+        s.add_items(survivors);
+        s.finish(&mut cluster);
+
+        // cogroup per destination worker (the hash shuffle put every key on
+        // exactly one worker); keys surviving the false-positive-prone
+        // filter but missing from some input produce no pairs — drop them
+        let groups: Vec<HashMap<u64, Vec<Vec<f64>>>> =
+            exec.map_with(shuffled, |_w, per_input: &mut Vec<Vec<Record>>| {
+                let mut g = crate::join::group_by_key(per_input);
+                g.retain(|_, sides| sides.iter().all(|side| !side.is_empty()));
+                g
+            });
+
+        // ---- stage 3: per-window sample (eviction-aware reservoirs) or
+        // the exact cross product
+        let estimator = self
+            .cfg
+            .sampling
+            .as_ref()
+            .map(|c| c.estimator)
+            .unwrap_or(EstimatorKind::Clt);
+        let combine = self.cfg.combine;
+        let (strata, draws, sampled, refreshed, carried) = match &self.cfg.sampling {
+            Some(acfg) => {
+                let mut s = cluster.stage("sample");
+                let prev = &self.reservoirs;
+                let changed_ref = &changed;
+                let groups_ref = &groups;
+                type SampleOut = (HashMap<u64, StratumReservoir>, u64, u64, f64);
+                let per_worker: Vec<SampleOut> = exec.map(k, |w| {
+                    let t0 = Instant::now();
+                    let (res, refreshed, carried) = refresh_reservoir_strata(
+                        &groups_ref[w],
+                        changed_ref,
+                        prev,
+                        &acfg.params,
+                        acfg.estimator,
+                        combine,
+                        acfg.seed,
+                        windex,
+                    );
+                    (res, refreshed, carried, t0.elapsed().as_secs_f64())
+                });
+                let mut reservoirs: HashMap<u64, StratumReservoir> = HashMap::new();
+                let (mut refreshed, mut carried, mut drawn) = (0u64, 0u64, 0u64);
+                for (w, (res, rf, ca, secs)) in per_worker.into_iter().enumerate() {
+                    s.add_compute(w, secs);
+                    refreshed += rf;
+                    carried += ca;
+                    drawn += res
+                        .values()
+                        .filter(|r| r.epoch == windex)
+                        .map(|r| r.draws as u64)
+                        .sum::<u64>();
+                    reservoirs.extend(res);
+                }
+                s.add_items(drawn);
+                s.finish(&mut cluster);
+                let strata: HashMap<u64, StratumAgg> =
+                    reservoirs.iter().map(|(&key, r)| (key, r.agg)).collect();
+                let draws: HashMap<u64, f64> = match acfg.estimator {
+                    EstimatorKind::HorvitzThompson => {
+                        reservoirs.iter().map(|(&key, r)| (key, r.draws)).collect()
+                    }
+                    EstimatorKind::Clt => HashMap::new(),
+                };
+                self.reservoirs = reservoirs;
+                (strata, draws, true, refreshed, carried)
+            }
+            None => {
+                let mut s = cluster.stage("crossproduct");
+                let groups_ref = &groups;
+                let per_worker: Vec<(HashMap<u64, StratumAgg>, u64, f64)> = exec.map(k, |w| {
+                    let t0 = Instant::now();
+                    let mut local = HashMap::with_capacity(groups_ref[w].len());
+                    let mut pairs = 0u64;
+                    let mut keys: Vec<u64> = groups_ref[w].keys().copied().collect();
+                    keys.sort_unstable();
+                    for key in keys {
+                        let agg = crate::join::cross_product_agg(&groups_ref[w][&key], combine);
+                        pairs += agg.population as u64;
+                        local.insert(key, agg);
+                    }
+                    (local, pairs, t0.elapsed().as_secs_f64())
+                });
+                let mut strata = HashMap::new();
+                for (w, (local, pairs, secs)) in per_worker.into_iter().enumerate() {
+                    s.add_compute(w, secs);
+                    s.add_items(pairs);
+                    strata.extend(local);
+                }
+                s.finish(&mut cluster);
+                (strata, HashMap::new(), false, 0, 0)
+            }
+        };
+
+        let result = crate::coordinator::estimate_result(
+            self.cfg.agg,
+            sampled,
+            estimator,
+            &strata,
+            &draws,
+            self.cfg.confidence,
+        );
+        let metrics = cluster.take_metrics();
+        let ledger = cluster.take_ledger();
+        self.run_ledger.merge(ledger.tagged(&format!("w{windex}")));
+        // bound the run ledger on long-lived streams: drop the oldest
+        // windows' stages once past the retention cap
+        if self.run_ledger.stages.len() > MAX_RUN_LEDGER_STAGES {
+            let excess = self.run_ledger.stages.len() - MAX_RUN_LEDGER_STAGES;
+            self.run_ledger.stages.drain(..excess);
+        }
+        WindowResult {
+            bounds,
+            result,
+            strata,
+            draws,
+            sampled,
+            metrics,
+            ledger,
+            refreshed_strata: refreshed,
+            carried_strata: carried,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::join::approx::SamplingParams;
+
+    fn fast_model() -> TimeModel {
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        }
+    }
+
+    fn cfg(window: WindowSpec, sampling: Option<ApproxConfig>) -> StreamConfig {
+        StreamConfig {
+            window,
+            workers: 4,
+            time_model: fast_model(),
+            parallelism: 1,
+            sampling,
+            ..Default::default()
+        }
+    }
+
+    fn batch(a: &[(u64, f64)], b: &[(u64, f64)]) -> Vec<Vec<Record>> {
+        vec![
+            a.iter().map(|&(k, v)| Record::new(k, v)).collect(),
+            b.iter().map(|&(k, v)| Record::new(k, v)).collect(),
+        ]
+    }
+
+    #[test]
+    fn sketch_geometry_matches_counting_filter_sizing() {
+        // for_capacity avoids allocating a filter; its arithmetic must stay
+        // in lockstep with CountingBloomFilter::with_capacity
+        for &(items, fp) in &[(1u64, 0.01), (100, 0.01), (12_000, 0.01), (48_000, 0.02)] {
+            let s = SketchConfig::for_capacity(items, fp);
+            let f = CountingBloomFilter::with_capacity(items, fp);
+            assert_eq!(s.log2_cells, f.log2_cells(), "items {items} fp {fp}");
+            assert_eq!(s.num_hashes, f.num_hashes().min(6), "items {items} fp {fp}");
+        }
+    }
+
+    #[test]
+    fn tumbling_exact_windows_match_hand_computation() {
+        let mut j = StreamingApproxJoin::new(cfg(WindowSpec::tumbling(1), None), vec![100, 100]);
+        // window 0: key 1 -> (1+10) + (2+10); key 2 absent from b
+        let w0 = j
+            .push_batch(batch(&[(1, 1.0), (1, 2.0), (2, 5.0)], &[(1, 10.0)]))
+            .expect("tumbling(1) emits every batch");
+        assert!(!w0.sampled);
+        assert_eq!(w0.bounds.index, 0);
+        assert_eq!(w0.strata.len(), 1);
+        assert_eq!(w0.strata[&1].population, 2.0);
+        assert!((w0.result.estimate - 23.0).abs() < 1e-9);
+        assert_eq!(w0.result.error_bound, 0.0);
+        // window 1: key 1 expired; key 3 joins now
+        let w1 = j
+            .push_batch(batch(&[(3, 1.0)], &[(3, 2.0), (3, 4.0)]))
+            .unwrap();
+        assert_eq!(w1.bounds.index, 1);
+        assert!(!w1.strata.contains_key(&1), "expired key must leave");
+        assert!((w1.result.estimate - ((1.0 + 2.0) + (1.0 + 4.0))).abs() < 1e-9);
+        // window 2: key 1 re-inserted after full eviction — the counting
+        // sketch's delete path must not have broken it
+        let w2 = j.push_batch(batch(&[(1, 1.0)], &[(1, 5.0)])).unwrap();
+        assert_eq!(w2.strata.len(), 1);
+        assert!((w2.result.estimate - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sliding_window_carries_unchanged_strata() {
+        // W=2, S=1; key 7 lives only in batch 1, key 8 in every batch
+        let sampling = ApproxConfig {
+            params: SamplingParams::Fraction(0.5),
+            estimator: EstimatorKind::Clt,
+            seed: 5,
+        };
+        let mut j =
+            StreamingApproxJoin::new(cfg(WindowSpec::sliding(2, 1), Some(sampling)), vec![100, 100]);
+        let b0 = batch(&[(8, 1.0), (8, 2.0)], &[(8, 10.0)]);
+        let b1 = batch(&[(7, 3.0), (8, 4.0)], &[(7, 30.0), (8, 40.0)]);
+        let b2 = batch(&[(9, 1.0)], &[(9, 2.0)]);
+        assert!(j.push_batch(b0).is_none(), "window not full yet");
+        let w0 = j.push_batch(b1).expect("first full window");
+        assert!(w0.sampled);
+        assert!(w0.strata.contains_key(&7) && w0.strata.contains_key(&8));
+        assert_eq!(w0.carried_strata, 0, "first window refreshes everything");
+        // window 1 = {b1, b2}: batch 0 evicts (touches 8), batch 2 arrives
+        // (touches 9); key 7's contents are identical -> carried verbatim
+        let w1 = j.push_batch(b2).expect("slides every batch");
+        assert_eq!(w1.carried_strata, 1);
+        assert_eq!(w1.strata[&7], w0.strata[&7], "key 7 reservoir must carry");
+        assert_eq!(w1.strata[&7].population, 1.0);
+        assert!(w1.strata.contains_key(&9));
+        // key 8 remains joinable (b1 has it on both sides) but refreshed
+        assert!(w1.strata.contains_key(&8));
+        assert_ne!(w1.strata[&8].population, w0.strata[&8].population);
+    }
+
+    #[test]
+    fn filtered_and_unfiltered_agree_on_strata_filtered_moves_less() {
+        use crate::stream::source::{EventStream, EventStreamSpec};
+        let spec = EventStreamSpec {
+            events_per_batch: 800,
+            shared_fraction: 0.08,
+            seed: 11,
+            ..Default::default()
+        };
+        let run = |filtering: bool| {
+            let mut c = cfg(WindowSpec::tumbling(3), None);
+            c.bloom_filtering = filtering;
+            let mut j = StreamingApproxJoin::new(c, vec![100, 100]);
+            j.run(&mut EventStream::new(spec.clone()), 6)
+        };
+        let filtered = run(true);
+        let unfiltered = run(false);
+        assert_eq!(filtered.len(), 2);
+        assert_eq!(unfiltered.len(), 2);
+        for (f, u) in filtered.iter().zip(&unfiltered) {
+            // identical exact answers — filtering only drops non-joinable
+            // tuples (plus false positives that cogrouping discards)
+            assert_eq!(f.result.estimate.to_bits(), u.result.estimate.to_bits());
+            assert_eq!(f.strata.len(), u.strata.len());
+            // and strictly less measured traffic at 8% overlap
+            assert!(
+                f.ledger.total_bytes() < u.ledger.total_bytes(),
+                "window {}: filtered {} vs unfiltered {}",
+                f.bounds.index,
+                f.ledger.total_bytes(),
+                u.ledger.total_bytes()
+            );
+            assert!(f.ledger.stage_bytes("filter_shuffle") < u.ledger.stage_bytes("shuffle"));
+        }
+    }
+
+    #[test]
+    fn run_ledger_tags_windows() {
+        let mut j = StreamingApproxJoin::new(cfg(WindowSpec::tumbling(1), None), vec![100, 100]);
+        let w0 = j.push_batch(batch(&[(1, 1.0)], &[(1, 2.0)])).unwrap();
+        let _ = j.push_batch(batch(&[(2, 1.0)], &[(2, 2.0)])).unwrap();
+        let run = j.run_ledger();
+        assert_eq!(run.prefix_bytes("w0/"), w0.ledger.total_bytes());
+        assert!(run.stages.iter().any(|s| s.stage.starts_with("w1/")));
+        assert_eq!(
+            run.total_bytes(),
+            run.prefix_bytes("w0/") + run.prefix_bytes("w1/")
+        );
+    }
+
+    #[test]
+    fn thread_count_invariance_quick() {
+        use crate::stream::source::{EventStream, EventStreamSpec};
+        let spec = EventStreamSpec {
+            events_per_batch: 400,
+            shared_fraction: 0.2,
+            seed: 3,
+            ..Default::default()
+        };
+        let sampling = ApproxConfig {
+            params: SamplingParams::Fraction(0.3),
+            estimator: EstimatorKind::Clt,
+            seed: 17,
+        };
+        let run = |threads: usize| {
+            let mut c = cfg(WindowSpec::sliding(4, 2), Some(sampling.clone()));
+            c.parallelism = threads;
+            let mut j = StreamingApproxJoin::new(c, vec![100, 100]);
+            j.run(&mut EventStream::new(spec.clone()), 8)
+        };
+        let seq = run(1);
+        let par = run(8);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.result.estimate.to_bits(), b.result.estimate.to_bits());
+            assert_eq!(a.result.error_bound.to_bits(), b.result.error_bound.to_bits());
+            assert_eq!(a.strata, b.strata);
+            assert_eq!(a.ledger, b.ledger);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Streaming execution mode: the batch ApproxJoin pipeline driven
+//! incrementally over an unbounded micro-batched stream (the StreamApprox
+//! direction — *Approximate Stream Analytics in Apache Flink and Apache
+//! Spark Streaming*, arXiv 1709.02946 — grafted onto this repo's
+//! Bloom-filtered join).
+//!
+//! * [`source`] — micro-batch [`StreamSource`]s: the unbounded
+//!   [`EventStream`] generator and [`ReplaySource`] over the batch `data/`
+//!   generators.
+//! * [`window`] — tumbling/sliding [`WindowSpec`] in micro-batch units.
+//! * [`join`] — [`StreamingApproxJoin`]: incremental counting-Bloom
+//!   sketches (expired tuples are *deleted* from the sketch, never
+//!   rebuilt), per-window filtered shuffle with measured
+//!   [`crate::cluster::ShuffleLedger`] traffic, eviction-aware per-stratum
+//!   reservoirs, and per-window CLT / Horvitz-Thompson confidence
+//!   intervals.
+//!
+//! The [`crate::session::StreamingSession`] front end is how callers reach
+//! this module; the `approxjoin stream` CLI subcommand and
+//! `examples/streaming_windows.rs` drive it end to end.
+
+pub mod join;
+pub mod source;
+pub mod window;
+
+pub use join::{
+    SketchConfig, StreamConfig, StreamRun, StreamingApproxJoin, WindowResult,
+};
+pub use source::{EventStream, EventStreamSpec, ReplaySource, StreamSource};
+pub use window::{WindowBounds, WindowSpec};

@@ -1,0 +1,295 @@
+//! Micro-batch stream sources: the unbounded event generator and a replay
+//! adapter over the batch-world `data/` generators.
+//!
+//! A [`StreamSource`] hands out micro-batches by index. Batch `t` must be a
+//! pure function of `(source spec, t)` — never of how many batches were
+//! pulled before it — so a stream replays identically across runs and
+//! thread counts; the bit-identity tests lean on this the same way the
+//! batch path leans on seeded datasets.
+
+use crate::data::generators::ValueDist;
+use crate::data::{Dataset, Record};
+use crate::util::rng::{splitmix64, Rng};
+
+/// A micro-batched record stream feeding the streaming join: `n >= 2`
+/// inputs advancing in lock-step, one record vector per input per batch.
+pub trait StreamSource {
+    fn num_inputs(&self) -> usize;
+
+    /// Wire width of one record per input, for shuffle accounting (the
+    /// batch strategies charge per-dataset widths; the streaming path does
+    /// the same).
+    fn record_bytes(&self) -> Vec<u64>;
+
+    /// The `t`-th micro-batch (t = 0, 1, ...): one record vector per input.
+    /// Must be deterministic in `t`.
+    fn batch(&mut self, t: u64) -> Vec<Vec<Record>>;
+}
+
+/// Specification of the unbounded synthetic event stream: every batch draws
+/// `events_per_batch` events per input; a `shared_fraction` of the events
+/// reference a hot shared key pool (the streaming analogue of the batch
+/// generators' overlap fraction), the rest reference a per-input private
+/// pool. Popularity within each pool is Zipf(`zipf_s`) (0.0 = uniform), so
+/// the per-window multiplicities are naturally skewed / heavy-tailed.
+#[derive(Clone, Debug)]
+pub struct EventStreamSpec {
+    /// Number of joined input streams (n-way, >= 2).
+    pub num_inputs: usize,
+    /// Events per input per micro-batch.
+    pub events_per_batch: u64,
+    /// Size of the shared (joinable) key pool.
+    pub shared_keys: u64,
+    /// Size of each input's private key pool.
+    pub private_keys: u64,
+    /// Probability an event's key comes from the shared pool — the
+    /// streaming overlap knob.
+    pub shared_fraction: f64,
+    /// Zipf exponent for key popularity within a pool (0.0 = uniform).
+    pub zipf_s: f64,
+    /// Value distribution of the aggregated attribute.
+    pub values: ValueDist,
+    /// Wire width of one event (bytes) for shuffle accounting.
+    pub record_bytes: u64,
+    pub seed: u64,
+}
+
+impl Default for EventStreamSpec {
+    fn default() -> Self {
+        Self {
+            num_inputs: 2,
+            events_per_batch: 2_000,
+            shared_keys: 48,
+            private_keys: 4_096,
+            shared_fraction: 0.05,
+            zipf_s: 0.4,
+            values: ValueDist::Uniform(0.0, 100.0),
+            record_bytes: 100,
+            seed: 42,
+        }
+    }
+}
+
+/// Key tags keep the shared and per-input private pools disjoint by
+/// construction (same scheme as the batch generators).
+#[inline]
+fn shared_key(i: u64) -> u64 {
+    (1 << 40) | i
+}
+
+#[inline]
+fn private_key(input: usize, i: u64) -> u64 {
+    ((input as u64 + 2) << 41) | i
+}
+
+/// The unbounded event generator.
+pub struct EventStream {
+    pub spec: EventStreamSpec,
+}
+
+impl EventStream {
+    pub fn new(spec: EventStreamSpec) -> Self {
+        assert!(spec.num_inputs >= 2, "a streaming join needs >= 2 inputs");
+        assert!((0.0..=1.0).contains(&spec.shared_fraction));
+        assert!(spec.shared_keys >= 1 && spec.private_keys >= 1);
+        // the key tags give the shared pool the low 40 bits and each
+        // private pool the low 41; larger pools would silently collide
+        // across inputs and corrupt the overlap knob
+        assert!(
+            spec.shared_keys <= 1 << 40,
+            "shared_keys exceeds the 2^40 shared key tag space"
+        );
+        assert!(
+            spec.private_keys <= 1 << 41,
+            "private_keys exceeds the 2^41 per-input key tag space"
+        );
+        Self { spec }
+    }
+}
+
+impl StreamSource for EventStream {
+    fn num_inputs(&self) -> usize {
+        self.spec.num_inputs
+    }
+
+    fn record_bytes(&self) -> Vec<u64> {
+        vec![self.spec.record_bytes; self.spec.num_inputs]
+    }
+
+    fn batch(&mut self, t: u64) -> Vec<Vec<Record>> {
+        let s = &self.spec;
+        (0..s.num_inputs)
+            .map(|i| {
+                // one independent stream per (batch, input): seeded from the
+                // spec seed and the coordinates only, never from pull order
+                let mut z = s.seed
+                    ^ t.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (i as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                let mut r = Rng::new(splitmix64(&mut z));
+                (0..s.events_per_batch)
+                    .map(|_| {
+                        let key = if r.f64() < s.shared_fraction {
+                            shared_key(r.zipf(s.shared_keys, s.zipf_s) - 1)
+                        } else {
+                            private_key(i, r.zipf(s.private_keys, s.zipf_s) - 1)
+                        };
+                        Record::new(key, s.values.sample(&mut r))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Replays batch-world datasets (the `data/` generators: synthetic, TPC-H,
+/// network, Netflix) as an unbounded stream: each input's records cycle in
+/// record order, `batch_records` per micro-batch.
+pub struct ReplaySource {
+    per_input: Vec<Vec<Record>>,
+    /// Per-dataset wire widths — heterogeneous inputs (e.g. TPC-H tables)
+    /// keep their own byte accounting, as on the batch path.
+    record_bytes: Vec<u64>,
+    batch_records: usize,
+}
+
+impl ReplaySource {
+    pub fn new(datasets: &[Dataset], batch_records: usize) -> Self {
+        assert!(datasets.len() >= 2, "a streaming join needs >= 2 inputs");
+        assert!(batch_records >= 1);
+        assert!(
+            datasets.iter().all(|d| !d.is_empty()),
+            "cannot replay an empty dataset"
+        );
+        Self {
+            per_input: datasets
+                .iter()
+                .map(|d| d.iter().copied().collect())
+                .collect(),
+            record_bytes: datasets.iter().map(|d| d.record_bytes).collect(),
+            batch_records,
+        }
+    }
+}
+
+impl StreamSource for ReplaySource {
+    fn num_inputs(&self) -> usize {
+        self.per_input.len()
+    }
+
+    fn record_bytes(&self) -> Vec<u64> {
+        self.record_bytes.clone()
+    }
+
+    fn batch(&mut self, t: u64) -> Vec<Vec<Record>> {
+        self.per_input
+            .iter()
+            .map(|recs| {
+                let start = (t as usize).wrapping_mul(self.batch_records);
+                (0..self.batch_records)
+                    .map(|j| recs[(start + j) % recs.len()])
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_overlapping, SyntheticSpec};
+
+    #[test]
+    fn event_batches_are_deterministic_in_t() {
+        let mut a = EventStream::new(EventStreamSpec::default());
+        let mut b = EventStream::new(EventStreamSpec::default());
+        // pull order must not matter
+        let a3 = a.batch(3);
+        let _ = b.batch(0);
+        let _ = b.batch(7);
+        assert_eq!(a3, b.batch(3));
+        assert_ne!(a.batch(0), a.batch(1), "distinct batches must differ");
+    }
+
+    #[test]
+    fn event_shared_fraction_controls_overlap() {
+        let mut s = EventStream::new(EventStreamSpec {
+            shared_fraction: 0.1,
+            ..Default::default()
+        });
+        let batch = s.batch(0);
+        assert_eq!(batch.len(), 2);
+        for recs in &batch {
+            assert_eq!(recs.len(), 2_000);
+            let shared = recs.iter().filter(|r| r.key >> 40 == 1).count();
+            let frac = shared as f64 / recs.len() as f64;
+            assert!((frac - 0.1).abs() < 0.03, "shared fraction {frac}");
+        }
+        // private pools of different inputs are disjoint
+        let keys0: std::collections::HashSet<u64> = batch[0]
+            .iter()
+            .map(|r| r.key)
+            .filter(|k| k >> 41 != 0)
+            .collect();
+        let keys1: std::collections::HashSet<u64> = batch[1]
+            .iter()
+            .map(|r| r.key)
+            .filter(|k| k >> 41 != 0)
+            .collect();
+        assert!(keys0.is_disjoint(&keys1));
+    }
+
+    #[test]
+    fn event_zipf_skews_popularity() {
+        let mut s = EventStream::new(EventStreamSpec {
+            shared_fraction: 1.0,
+            shared_keys: 10,
+            zipf_s: 1.2,
+            ..Default::default()
+        });
+        let batch = s.batch(0);
+        let mut counts = vec![0u64; 10];
+        for r in &batch[0] {
+            counts[(r.key & 0xFFFF) as usize] += 1;
+        }
+        assert!(counts[0] > counts[4], "{counts:?}");
+        assert!(counts[0] > counts[9], "{counts:?}");
+    }
+
+    #[test]
+    fn replay_cycles_in_record_order() {
+        let ds = generate_overlapping(&SyntheticSpec {
+            items_per_input: 1_000,
+            ..Default::default()
+        });
+        let mut src = ReplaySource::new(&ds, 300);
+        assert_eq!(src.num_inputs(), 2);
+        assert_eq!(src.record_bytes(), vec![100, 100]);
+        let b0 = src.batch(0);
+        let b1 = src.batch(1);
+        assert_eq!(b0[0].len(), 300);
+        assert_ne!(b0, b1);
+        // deterministic replay
+        assert_eq!(b0, src.batch(0));
+        // replay cycles: input 0's batch n starts at offset n·300 ≡ 0 (mod n)
+        let n = ds[0].len();
+        assert_eq!(src.batch(n)[0], b0[0]);
+    }
+
+    #[test]
+    fn replay_keeps_heterogeneous_record_widths() {
+        let a = Dataset::from_records_unpartitioned(
+            "wide",
+            vec![Record::new(1, 1.0), Record::new(2, 2.0)],
+            2,
+            1000,
+        );
+        let b = Dataset::from_records_unpartitioned(
+            "narrow",
+            vec![Record::new(1, 3.0), Record::new(2, 4.0)],
+            2,
+            40,
+        );
+        let src = ReplaySource::new(&[a, b], 2);
+        assert_eq!(src.record_bytes(), vec![1000, 40]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Micro-batch windowing: tumbling and sliding windows measured in
+//! micro-batches, plus the emission schedule the streaming join follows.
+//!
+//! A window of `size` batches emits every `slide` batches once the first
+//! `size` batches have arrived. `slide == size` is a tumbling window (no
+//! batch belongs to two windows); `slide < size` is a sliding window
+//! (consecutive windows share `size - slide` batches — the shared batches
+//! are exactly the tuples the streaming join does *not* re-sketch and does
+//! *not* re-sample).
+
+/// How a stream is windowed, in micro-batch units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window length in micro-batches (>= 1).
+    pub size: usize,
+    /// Emission period in micro-batches (1 ..= size).
+    pub slide: usize,
+}
+
+impl WindowSpec {
+    /// A tumbling window: emit every `size` batches, no overlap.
+    pub fn tumbling(size: usize) -> Self {
+        Self::sliding(size, size)
+    }
+
+    /// A sliding window: `size` batches long, emitted every `slide` batches.
+    pub fn sliding(size: usize, slide: usize) -> Self {
+        assert!(size >= 1, "window size must be >= 1");
+        assert!(
+            (1..=size).contains(&slide),
+            "slide must be in 1..=size (got {slide} for size {size})"
+        );
+        Self { size, slide }
+    }
+
+    pub fn is_tumbling(&self) -> bool {
+        self.slide == self.size
+    }
+
+    /// Whether a window closes after `batches_pushed` total batches.
+    pub fn emits_after(&self, batches_pushed: u64) -> bool {
+        batches_pushed >= self.size as u64
+            && (batches_pushed - self.size as u64) % self.slide as u64 == 0
+    }
+
+    /// Index of the window that closes after `batches_pushed` batches
+    /// (only meaningful when [`WindowSpec::emits_after`] is true).
+    pub fn window_index(&self, batches_pushed: u64) -> u64 {
+        debug_assert!(self.emits_after(batches_pushed));
+        (batches_pushed - self.size as u64) / self.slide as u64
+    }
+
+    /// The batch range window `index` covers.
+    pub fn bounds(&self, index: u64) -> WindowBounds {
+        let first_batch = index * self.slide as u64;
+        WindowBounds {
+            index,
+            first_batch,
+            last_batch: first_batch + self.size as u64 - 1,
+        }
+    }
+}
+
+impl Default for WindowSpec {
+    fn default() -> Self {
+        Self::tumbling(4)
+    }
+}
+
+/// The inclusive batch range of one emitted window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowBounds {
+    pub index: u64,
+    pub first_batch: u64,
+    pub last_batch: u64,
+}
+
+impl WindowBounds {
+    pub fn len(&self) -> u64 {
+        self.last_batch - self.first_batch + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a window always covers at least one batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tumbling_schedule() {
+        let w = WindowSpec::tumbling(4);
+        assert!(w.is_tumbling());
+        let emits: Vec<u64> = (1..=13).filter(|&t| w.emits_after(t)).collect();
+        assert_eq!(emits, vec![4, 8, 12]);
+        assert_eq!(w.window_index(4), 0);
+        assert_eq!(w.window_index(12), 2);
+        let b = w.bounds(2);
+        assert_eq!((b.first_batch, b.last_batch, b.len()), (8, 11, 4));
+    }
+
+    #[test]
+    fn sliding_schedule_overlaps() {
+        let w = WindowSpec::sliding(6, 2);
+        assert!(!w.is_tumbling());
+        let emits: Vec<u64> = (1..=12).filter(|&t| w.emits_after(t)).collect();
+        assert_eq!(emits, vec![6, 8, 10, 12]);
+        let b0 = w.bounds(0);
+        let b1 = w.bounds(1);
+        assert_eq!((b0.first_batch, b0.last_batch), (0, 5));
+        assert_eq!((b1.first_batch, b1.last_batch), (2, 7));
+        // consecutive windows share size - slide = 4 batches
+        assert_eq!(b0.last_batch - b1.first_batch + 1, 4);
+    }
+
+    #[test]
+    fn slide_one_emits_every_batch_after_fill() {
+        let w = WindowSpec::sliding(3, 1);
+        let emits: Vec<u64> = (1..=6).filter(|&t| w.emits_after(t)).collect();
+        assert_eq!(emits, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slide")]
+    fn slide_larger_than_size_rejected() {
+        WindowSpec::sliding(2, 3);
+    }
+}

@@ -51,6 +51,62 @@ pub fn check_one<F: FnOnce(&mut Rng)>(_name: &str, case_seed: u64, property: F) 
     property(&mut rng);
 }
 
+/// Everything about one streaming window that must be invariant under the
+/// executor thread count: (window index, per-stratum aggregate bits,
+/// per-stratum draw bits, per-stage per-worker ledger traffic, refreshed
+/// count, carried count). Timings are measurements and are excluded.
+pub type StreamWindowPrint = (
+    u64,
+    Vec<(u64, u64, u64, u64, u64)>,
+    Vec<(u64, u64)>,
+    Vec<(String, Vec<u64>, Vec<u64>)>,
+    u64,
+    u64,
+);
+
+/// The thread-invariance fingerprint of a streaming run — shared by
+/// `tests/stream_windows.rs` and the `fig_stream_windows` bench so both
+/// gates compare exactly the same surface (strata down to the last bit,
+/// HT draw counts, and the per-worker byte vectors of every stage).
+pub fn stream_fingerprint(run: &crate::stream::StreamRun) -> Vec<StreamWindowPrint> {
+    run.windows
+        .iter()
+        .map(|w| {
+            let mut strata: Vec<(u64, u64, u64, u64, u64)> = w
+                .strata
+                .iter()
+                .map(|(&k, a)| {
+                    (
+                        k,
+                        a.population.to_bits(),
+                        a.count.to_bits(),
+                        a.sum.to_bits(),
+                        a.sumsq.to_bits(),
+                    )
+                })
+                .collect();
+            strata.sort_unstable();
+            let mut draws: Vec<(u64, u64)> =
+                w.draws.iter().map(|(&k, d)| (k, d.to_bits())).collect();
+            draws.sort_unstable();
+            let ledger: Vec<(String, Vec<u64>, Vec<u64>)> = w
+                .ledger
+                .stages
+                .iter()
+                .map(|s| (s.stage.clone(), s.bytes_in.clone(), s.bytes_out.clone()))
+                .collect();
+            (
+                w.bounds.index,
+                strata,
+                draws,
+                ledger,
+                w.refreshed_strata,
+                w.carried_strata,
+            )
+        })
+        .collect()
+}
+
 /// Generators for common test inputs.
 pub mod gen {
     use crate::data::{Dataset, Record};

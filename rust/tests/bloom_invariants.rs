@@ -1,0 +1,168 @@
+//! The filter invariants the streaming eviction path leans on:
+//!
+//! * counting filter: insert → delete → re-insert never produces a false
+//!   negative for a key currently present (under randomized churn with
+//!   duplicates), and its false-positive rate stays within the standard
+//!   filter bound for the same geometry;
+//! * scalable filter: honors its target false-positive rate as it grows
+//!   across slices.
+
+use approxjoin::bloom::hashing::theoretical_fp_rate;
+use approxjoin::bloom::{BloomFilter, CountingBloomFilter, ScalableBloomFilter};
+use approxjoin::util::Rng;
+use std::collections::HashMap;
+
+#[test]
+fn counting_filter_churn_never_false_negative() {
+    // randomized insert/delete/re-insert churn, tracking the true multiset:
+    // any key with count > 0 must always probe present. This is exactly the
+    // streaming window discipline (arrivals insert, evictions delete,
+    // re-arrivals re-insert).
+    let mut r = Rng::new(0x517E);
+    for trial in 0..10 {
+        let mut f = CountingBloomFilter::new(16, 5);
+        let universe: Vec<u64> = (0..400).map(|_| r.next_u64()).collect();
+        let mut counts: HashMap<u64, u32> = HashMap::new();
+        for step in 0..20_000 {
+            let key = universe[r.index(universe.len())];
+            let c = counts.entry(key).or_insert(0);
+            // bias towards inserts so the filter stays populated; deletes
+            // only for keys actually present (the window buffer guarantees
+            // evictions match earlier arrivals)
+            if *c > 0 && r.f64() < 0.45 {
+                f.remove_key64(key);
+                *c -= 1;
+            } else {
+                f.insert_key64(key);
+                *c += 1;
+            }
+            if step % 1000 == 0 {
+                for (&k, &c) in &counts {
+                    if c > 0 {
+                        assert!(
+                            f.contains_key64(k),
+                            "trial {trial} step {step}: present key {k} (count {c}) missing"
+                        );
+                    }
+                }
+            }
+        }
+        // full drain, then re-insert everything: the delete path must not
+        // have poisoned any cell
+        for (&k, &c) in &counts {
+            for _ in 0..c {
+                f.remove_key64(k);
+            }
+        }
+        for &k in &universe {
+            f.insert_key64(k);
+        }
+        assert!(universe.iter().all(|&k| f.contains_key64(k)));
+    }
+}
+
+#[test]
+fn counting_filter_fp_rate_within_standard_bound() {
+    // after churn (half the inserted keys deleted again), the CBF's
+    // false-positive rate must stay within the standard-filter theoretical
+    // bound for the geometry and the keys actually present
+    let mut r = Rng::new(0xFA7E);
+    let mut f = CountingBloomFilter::new(17, 5);
+    let keys: Vec<u32> = (0..20_000).map(|_| r.next_u32()).collect();
+    for &k in &keys {
+        f.insert(k);
+    }
+    for &k in &keys[10_000..] {
+        f.remove(k);
+    }
+    // no false negatives for the retained half
+    assert!(keys[..10_000].iter().all(|&k| f.contains(k)));
+    let probes = 100_000;
+    let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+    let measured = fps as f64 / probes as f64;
+    let theory = theoretical_fp_rate(1 << 17, 10_000, 5);
+    assert!(
+        measured <= theory * 1.5 + 0.002,
+        "measured fp {measured} vs standard-filter theory {theory}"
+    );
+    // and a standard filter holding the same retained keys agrees
+    let mut bf = BloomFilter::new(17, 5);
+    for &k in &keys[..10_000] {
+        bf.insert(k);
+    }
+    let bf_fps = (0..probes).filter(|_| bf.contains(r.next_u32())).count();
+    let bf_measured = bf_fps as f64 / probes as f64;
+    assert!(
+        measured <= bf_measured * 1.5 + 0.002,
+        "CBF fp {measured} vs standard filter {bf_measured}"
+    );
+}
+
+#[test]
+fn counting_filter_delete_reinsert_cycles_keep_fp_bounded() {
+    // repeated whole-window turnover (the tumbling-window pattern) must not
+    // accumulate stuck-on cells: after many insert-all/delete-all cycles,
+    // the fp rate with one window resident stays near the single-window
+    // theory (u8 counters only saturate at 255 inserts per cell — far above
+    // any realistic window occupancy)
+    let mut r = Rng::new(0xCAFE);
+    let mut f = CountingBloomFilter::new(16, 5);
+    let window: Vec<u32> = (0..5_000).map(|_| r.next_u32()).collect();
+    for cycle in 0..50 {
+        for &k in &window {
+            f.insert(k);
+        }
+        assert!(window.iter().all(|&k| f.contains(k)), "cycle {cycle}");
+        for &k in &window {
+            f.remove(k);
+        }
+    }
+    for &k in &window {
+        f.insert(k);
+    }
+    let probes = 50_000;
+    let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+    let measured = fps as f64 / probes as f64;
+    let theory = theoretical_fp_rate(1 << 16, 5_000, 5);
+    assert!(
+        measured <= theory * 1.5 + 0.002,
+        "fp drifted after churn cycles: {measured} vs theory {theory}"
+    );
+}
+
+#[test]
+fn scalable_filter_honors_target_fp_as_it_grows() {
+    // grow 16x past the initial slice capacity; the compounded bound is
+    // fp0 / (1 - r) = 2·fp0 for the tightening ratio r = 1/2
+    let mut r = Rng::new(0x5CA1);
+    for &fp0 in &[0.05, 0.01] {
+        let mut f = ScalableBloomFilter::new(11, fp0);
+        let mut inserted = 0u64;
+        let mut checked_slices = 0;
+        for chunk in 0..8 {
+            for _ in 0..4_000 {
+                f.insert(r.next_u32());
+                inserted += 1;
+            }
+            // measure at every growth step, not just at the end
+            let probes = 20_000;
+            let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+            let measured = fps as f64 / probes as f64;
+            let bound = fp0 / (1.0 - 0.5);
+            assert!(
+                measured <= bound + 0.01,
+                "fp0={fp0} chunk {chunk} ({} slices, {inserted} items): \
+                 measured {measured} > bound {bound}",
+                f.num_slices()
+            );
+            checked_slices = checked_slices.max(f.num_slices());
+        }
+        assert!(
+            checked_slices >= 3,
+            "fp0={fp0}: filter never grew ({checked_slices} slices) — the \
+             growth path went untested"
+        );
+        assert_eq!(f.items(), inserted);
+        assert!(f.fp_bound() <= fp0 / (1.0 - 0.5) + 1e-9);
+    }
+}

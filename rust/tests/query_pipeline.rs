@@ -1,6 +1,10 @@
 //! Integration: query language → engine → baselines, the Figure-1 story —
 //! sampling-during-join must match post-join sampling's accuracy at far
 //! less cross-product work, while pre-join sampling is the least accurate.
+//! Plus parser edge cases: 3-way join clauses, quoted/odd identifiers, and
+//! a fuzz-ish loop over mutated query strings — malformed input must come
+//! back as errors ([`approxjoin::join::JoinError`] variants at the session
+//! layer), never as a panic.
 
 use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::coordinator::baselines::{post_join_sampling, pre_join_sampling};
@@ -162,4 +166,158 @@ fn crossover_at_high_overlap_filtering_loses_its_edge() {
     let high = ratio_at(0.6);
     assert!(low < high, "low {low} high {high}");
     assert!(high > 0.5, "at 60% overlap filtering saves little: {high}");
+}
+
+// ---- parser edge cases -------------------------------------------------
+
+#[test]
+fn three_way_join_clauses_parse_and_run() {
+    use approxjoin::query::parse;
+    // 3-way chain, mixed case, odd-but-legal identifiers
+    let q = parse(
+        "SELECT SUM(_t1.v + b2.v + c_3.v) FROM _t1, b2, c_3 \
+         WHERE _t1.k = b2.k = c_3.k",
+    )
+    .unwrap();
+    assert_eq!(q.tables, vec!["_t1", "b2", "c_3"]);
+
+    // and the parsed 3-way query runs end to end through a session
+    use approxjoin::coordinator::EngineConfig;
+    use approxjoin::session::Session;
+    use approxjoin::testkit::gen;
+    let mut r = approxjoin::util::Rng::new(12);
+    let inputs = gen::join_inputs(&mut r, 3, 4);
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("_t1", inputs[0].clone())
+    .with_data("b2", inputs[1].clone())
+    .with_data("c_3", inputs[2].clone());
+    let out = s
+        .sql("SELECT SUM(_t1.v + b2.v + c_3.v) FROM _t1, b2, c_3 WHERE _t1.k = b2.k = c_3.k")
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(out.output_cardinality > 0.0);
+}
+
+#[test]
+fn quoted_and_malformed_identifiers_error_not_panic() {
+    use approxjoin::query::parse;
+    // the grammar has no quoting — quoted identifiers must be rejected
+    // cleanly, whatever the quote style
+    for q in [
+        "SELECT SUM(\"a\".v + b.v) FROM \"a\", b WHERE \"a\".k = b.k",
+        "SELECT SUM('a'.v + b.v) FROM 'a', b WHERE 'a'.k = b.k",
+        "SELECT SUM(`a`.v + b.v) FROM `a`, b WHERE `a`.k = b.k",
+        "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k; DROP TABLE a",
+        "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k WITHIN -5 SECONDS",
+        "SELECT SUM(a.v + b.v) FROM a , , b WHERE a.k = b.k",
+        "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k = c.k",
+        "SELECT SUM() FROM a, b WHERE a.k = b.k",
+        "SELECT SUM(a.v +) FROM a, b WHERE a.k = b.k",
+        "SELECT SUM(a.v + b.v) FROM a, b WHERE",
+        "",
+        "   ",
+        "SELECT",
+    ] {
+        let r = std::panic::catch_unwind(|| parse(q));
+        match r {
+            Ok(parsed) => assert!(parsed.is_err(), "should reject: {q}"),
+            Err(_) => panic!("parser panicked on: {q}"),
+        }
+    }
+}
+
+#[test]
+fn fuzzed_query_mutations_never_panic() {
+    use approxjoin::query::parse;
+    use approxjoin::util::Rng;
+    let base = "SELECT SUM(a.v + b.v + c.v) FROM a, b, c \
+                WHERE a.k = b.k = c.k WITHIN 120 SECONDS OR ERROR 0.01 CONFIDENCE 95%";
+    let noise: &[char] = &[
+        '"', '\'', '`', ';', '(', ')', '+', '*', '=', ',', '.', '%', '0', '9', 'x', '_', ' ',
+        '\t', '\n', 'Σ', '∞', '\u{0}',
+    ];
+    // the unmutated base must parse — the fuzz loop is mutating a real query
+    assert!(parse(base).is_ok());
+    let mut r = Rng::new(0xF022);
+    for case in 0..500 {
+        let mut chars: Vec<char> = base.chars().collect();
+        // 1-4 random mutations: delete, replace, insert, truncate
+        for _ in 0..(1 + r.index(4)) {
+            if chars.is_empty() {
+                break;
+            }
+            match r.index(4) {
+                0 => {
+                    let i = r.index(chars.len());
+                    chars.remove(i);
+                }
+                1 => {
+                    let i = r.index(chars.len());
+                    chars[i] = noise[r.index(noise.len())];
+                }
+                2 => {
+                    let i = r.index(chars.len() + 1);
+                    chars.insert(i, noise[r.index(noise.len())]);
+                }
+                _ => {
+                    chars.truncate(r.index(chars.len() + 1));
+                }
+            }
+        }
+        let mutated: String = chars.into_iter().collect();
+        // Ok or Err are both acceptable — a panic is the only failure
+        if std::panic::catch_unwind(|| parse(&mutated)).is_err() {
+            panic!("parser panicked on mutated query (case {case}): {mutated:?}");
+        }
+    }
+}
+
+#[test]
+fn session_surfaces_join_error_variants_not_panics() {
+    use approxjoin::coordinator::EngineConfig;
+    use approxjoin::session::{Session, StrategyChoice};
+
+    let inputs = workload();
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("a", inputs[0].clone())
+    .with_data("b", inputs[1].clone());
+
+    // unknown dataset -> JoinError::Runtime through the planner (the
+    // vendored anyhow carries a message chain, so the variant is asserted
+    // via its Display shape)
+    let err = s
+        .sql("SELECT SUM(a.v + nope.v) FROM a, nope WHERE a.k = nope.k")
+        .unwrap()
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("join runtime error") && msg.contains("not registered"),
+        "expected JoinError::Runtime, got: {msg}"
+    );
+
+    // unknown strategy -> JoinError::Unsupported
+    let err = s
+        .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+        .unwrap()
+        .strategy(StrategyChoice::named("hash"))
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unsupported"),
+        "expected JoinError::Unsupported, got: {msg}"
+    );
+
+    // malformed SQL never reaches execution: sql() errors cleanly
+    assert!(s.sql("SELECT SUM(a.v FROM a, b WHERE a.k = b.k").is_err());
 }

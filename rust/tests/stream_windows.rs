@@ -1,0 +1,232 @@
+//! Acceptance tests for the streaming windowed ApproxJoin:
+//!
+//! * over >= 20 micro-batches, each window's `ApproxResult` covers the
+//!   exact per-window join sum within its error bound at >= nominal rate
+//!   (95% CIs; thresholds leave slack for the t-approximation on skewed
+//!   multiplicities),
+//! * per-window measured `ShuffleLedger` bytes of the Bloom-filtered path
+//!   are strictly below the unfiltered baseline at <= 10% key overlap, and
+//! * window outputs (strata, draws, ledger) are bit-identical for 1, 2 and
+//!   8 threads.
+
+use approxjoin::cluster::TimeModel;
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::session::StreamingSession;
+use approxjoin::stats::EstimatorKind;
+use approxjoin::stream::{EventStream, EventStreamSpec, StreamRun, WindowSpec};
+
+const BATCHES: u64 = 24; // >= 20 micro-batches
+const OVERLAP: f64 = 0.08; // <= 10% key overlap
+
+fn spec(seed: u64) -> EventStreamSpec {
+    EventStreamSpec {
+        events_per_batch: 2_000,
+        shared_keys: 48,
+        shared_fraction: OVERLAP,
+        zipf_s: 0.4,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn session(threads: usize) -> StreamingSession {
+    StreamingSession::new(&EngineConfig {
+        workers: 4,
+        parallelism: threads,
+        time_model: TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+        ..Default::default()
+    })
+    .window(WindowSpec::sliding(6, 2))
+    .sampling_fraction(0.25)
+}
+
+fn run_with(threads: usize, f: impl FnOnce(StreamingSession) -> StreamingSession) -> StreamRun {
+    f(session(threads)).run(&mut EventStream::new(spec(5)), BATCHES)
+}
+
+// The thread-invariance fingerprint (strata bits, draws, per-worker ledger
+// vectors, refresh/carry counters) is shared with the fig_stream_windows
+// bench via testkit so both gates compare the same surface.
+use approxjoin::testkit::stream_fingerprint as fingerprint;
+
+#[test]
+fn windows_cover_the_exact_per_window_sum_at_nominal_rate() {
+    let sampled = run_with(1, |s| s);
+    let exact = run_with(1, |s| s.exact());
+    let n = sampled.windows.len();
+    assert!(n >= 10, "expected >= 10 windows over {BATCHES} batches, got {n}");
+    let mut covered = 0usize;
+    let mut rel_sum = 0.0;
+    for (w, e) in sampled.windows.iter().zip(&exact.windows) {
+        assert_eq!(w.bounds, e.bounds);
+        assert!(w.sampled && !e.sampled);
+        assert_eq!(e.result.error_bound, 0.0, "exact twin must carry no error");
+        // the filter stage knows every stratum's size — the sampled run's
+        // populations are the exact per-window output cardinality
+        assert_eq!(w.output_cardinality(), e.output_cardinality());
+        let truth = e.result.estimate;
+        assert!(truth > 0.0);
+        assert!(w.result.error_bound > 0.0, "sampled window must carry a CI");
+        if (w.result.estimate - truth).abs() <= w.result.error_bound {
+            covered += 1;
+        }
+        rel_sum += (w.result.estimate - truth).abs() / truth;
+    }
+    // 95% nominal; >= 75% leaves room for the t-approximation on the
+    // skewed per-window multiplicities without masking broken variance
+    // math (which collapses coverage towards 0)
+    assert!(
+        covered * 4 >= n * 3,
+        "coverage {covered}/{n} below 75% (95% nominal)"
+    );
+    let mean_rel = rel_sum / n as f64;
+    assert!(mean_rel < 0.05, "mean per-window rel err {mean_rel}");
+}
+
+#[test]
+fn filtered_windows_measure_strictly_less_shuffle_than_unfiltered() {
+    let filtered = run_with(1, |s| s);
+    let unfiltered = run_with(1, |s| s.unfiltered());
+    assert_eq!(filtered.windows.len(), unfiltered.windows.len());
+    for (f, u) in filtered.windows.iter().zip(&unfiltered.windows) {
+        let fb = f.ledger.total_bytes();
+        let ub = u.ledger.total_bytes();
+        assert!(
+            fb < ub,
+            "window {}: filtered {fb} >= unfiltered {ub} at {OVERLAP} overlap",
+            f.bounds.index
+        );
+        // the record-shuffle stage alone shrinks even more
+        assert!(f.ledger.stage_bytes("filter_shuffle") < u.ledger.stage_bytes("shuffle"));
+        // filtering must not change the answer: same strata, same estimate
+        assert_eq!(f.result.estimate.to_bits(), u.result.estimate.to_bits());
+        assert_eq!(f.strata.len(), u.strata.len());
+    }
+    // run ledgers carry the per-window tags
+    assert_eq!(
+        filtered.ledger.total_bytes(),
+        filtered
+            .windows
+            .iter()
+            .map(|w| w.ledger.total_bytes())
+            .sum::<u64>()
+    );
+}
+
+#[test]
+fn window_outputs_bit_identical_for_1_2_8_threads() {
+    let reference = fingerprint(&run_with(1, |s| s));
+    for threads in [2usize, 8] {
+        let par = fingerprint(&run_with(threads, |s| s));
+        assert_eq!(reference, par, "streaming diverges at {threads} threads");
+    }
+}
+
+#[test]
+fn ht_estimator_windows_bit_identical_and_track_truth() {
+    let ht = ApproxConfig {
+        params: SamplingParams::Fraction(0.25),
+        estimator: EstimatorKind::HorvitzThompson,
+        seed: 13,
+    };
+    let run_ht = |threads: usize| {
+        session(threads)
+            .sampling(ht.clone())
+            .run(&mut EventStream::new(spec(5)), BATCHES)
+    };
+    let reference = run_ht(1);
+    assert!(
+        reference.windows.iter().all(|w| !w.draws.is_empty()),
+        "HT path must record per-stratum draws"
+    );
+    for threads in [2usize, 8] {
+        assert_eq!(
+            fingerprint(&reference),
+            fingerprint(&run_ht(threads)),
+            "HT streaming diverges at {threads} threads"
+        );
+    }
+    let exact = run_with(1, |s| s.exact());
+    for (w, e) in reference.windows.iter().zip(&exact.windows) {
+        let rel = (w.result.estimate - e.result.estimate).abs() / e.result.estimate;
+        assert!(rel < 0.15, "window {}: HT rel err {rel}", w.bounds.index);
+    }
+}
+
+/// A hand-built deterministic source for the carry-over guarantee:
+/// * a churn key `1000 + t` that joins within its own batch only, and
+/// * the persistent key 7, emitted only in batches ≡ 2 (mod 6) — so in a
+///   size-6/slide-2 window it is *present in every window* but only lands
+///   in the changed (arrived/evicted) batch set when w ≡ 2 (mod 3).
+struct CarrySource;
+
+impl approxjoin::stream::StreamSource for CarrySource {
+    fn num_inputs(&self) -> usize {
+        2
+    }
+
+    fn record_bytes(&self) -> Vec<u64> {
+        vec![100, 100]
+    }
+
+    fn batch(&mut self, t: u64) -> Vec<Vec<approxjoin::data::Record>> {
+        use approxjoin::data::Record;
+        let mut a = vec![Record::new(1000 + t, 1.0)];
+        let mut b = vec![Record::new(1000 + t, 2.0)];
+        if t % 6 == 2 {
+            for i in 0..10 {
+                a.push(Record::new(7, i as f64));
+                b.push(Record::new(7, i as f64 + 1.0));
+            }
+        }
+        vec![a, b]
+    }
+}
+
+#[test]
+fn sliding_windows_carry_reservoirs_tumbling_windows_do_not() {
+    let sliding = session(1).run(&mut CarrySource, BATCHES);
+    assert_eq!(sliding.windows.len(), 10);
+    for (i, w) in sliding.windows.iter().enumerate() {
+        assert!(
+            w.strata.contains_key(&7),
+            "window {i} must contain the persistent stratum"
+        );
+        assert_eq!(w.strata[&7].population, 100.0, "window {i}");
+        if i == 0 {
+            assert_eq!(w.carried_strata, 0, "first window refreshes everything");
+            continue;
+        }
+        // churn keys of the 4 preserved middle batches always carry
+        assert!(
+            w.carried_strata >= 4,
+            "window {i}: carried {} < 4",
+            w.carried_strata
+        );
+        // key 7's reservoir carries verbatim except when its batch enters
+        // the changed set (w ≡ 2 mod 3)
+        if i % 3 != 2 {
+            assert_eq!(
+                w.strata[&7],
+                sliding.windows[i - 1].strata[&7],
+                "window {i}: persistent stratum must carry its sample"
+            );
+        }
+    }
+    // tumbling windows share no batches — nothing ever carries
+    let tumbling = session(1)
+        .window(WindowSpec::tumbling(6))
+        .run(&mut CarrySource, BATCHES);
+    for w in &tumbling.windows {
+        assert_eq!(
+            w.carried_strata, 0,
+            "tumbling windows share no batches; window {} carried",
+            w.bounds.index
+        );
+    }
+}
