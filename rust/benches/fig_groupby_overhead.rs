@@ -1,0 +1,216 @@
+//! §Perf: relational-layer overhead for grouped queries — the lowering
+//! (predicate evaluation, projection, composite group keys) runs on top
+//! of the same kernel, so this bench measures (1) end-to-end rows/sec of
+//! the legacy two-column path vs the relational GROUP BY path on the
+//! same workload, (2) per-group CI width of the sampled grouped run, and
+//! (3) asserts the grouped output is bit-identical on 1 vs 8 threads.
+//!
+//! Env knobs (the CI bench-smoke job sets both):
+//!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
+//!   BENCH_JSON=path            merge a machine-readable section into the
+//!                              given JSON report (BENCH_PR4.json)
+
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::relation::{ColumnType, Schema, Value};
+use approxjoin::row;
+use approxjoin::session::{Session, StrategyChoice};
+use approxjoin::util::{fmt, Json, Rng, Table};
+use std::time::Instant;
+
+fn quick() -> bool {
+    std::env::var("APPROXJOIN_BENCH_QUICK").is_ok()
+}
+
+struct Workload {
+    a_rows: Vec<Vec<Value>>,
+    b_rows: Vec<Vec<Value>>,
+}
+
+fn workload(keys: u64, seed: u64) -> Workload {
+    let mut r = Rng::new(seed);
+    let mut a_rows = Vec::new();
+    let mut b_rows = Vec::new();
+    for k in 0..keys {
+        let group = r.zipf(12, 1.1) as i64;
+        for _ in 0..(1 + r.index(3)) {
+            a_rows.push(vec![
+                Value::Key(k),
+                Value::Int(group),
+                Value::Float(r.exponential(10.0)),
+            ]);
+        }
+        for _ in 0..(2 + r.index(6)) {
+            b_rows.push(vec![Value::Key(k), Value::Float(r.exponential(5.0))]);
+        }
+    }
+    Workload { a_rows, b_rows }
+}
+
+fn a_schema() -> Schema {
+    Schema::new(vec![
+        ("k", ColumnType::Key),
+        ("g", ColumnType::Int),
+        ("v", ColumnType::Float),
+    ])
+}
+
+fn b_schema() -> Schema {
+    Schema::new(vec![("k", ColumnType::Key), ("w", ColumnType::Float)])
+}
+
+fn session_with(w: &Workload, threads: usize) -> Session {
+    Session::without_runtime(EngineConfig {
+        workers: 10,
+        parallelism: threads,
+        ..Default::default()
+    })
+    .unwrap()
+    .register_table("a", a_schema(), w.a_rows.clone())
+    .unwrap()
+    .register_table("b", b_schema(), w.b_rows.clone())
+    .unwrap()
+}
+
+fn main() {
+    let quick = quick();
+    println!(
+        "== fig_groupby_overhead: relational GROUP BY vs legacy kernel path{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let keys = if quick { 4_000 } else { 40_000 };
+    let w = workload(keys, 9);
+    let total_rows = (w.a_rows.len() + w.b_rows.len()) as f64;
+
+    // ---- legacy baseline: the same (k, v) projection through the
+    // pre-relational two-column path
+    use approxjoin::data::{Dataset, Record};
+    let a_ds = Dataset::from_records_unpartitioned(
+        "a",
+        w.a_rows
+            .iter()
+            .map(|r| Record::new(r[0].as_key().unwrap(), r[2].as_f64().unwrap()))
+            .collect(),
+        20,
+        24,
+    );
+    let b_ds = Dataset::from_records_unpartitioned(
+        "b",
+        w.b_rows
+            .iter()
+            .map(|r| Record::new(r[0].as_key().unwrap(), r[1].as_f64().unwrap()))
+            .collect(),
+        20,
+        16,
+    );
+    let mut legacy = Session::without_runtime(EngineConfig {
+        workers: 10,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("a", a_ds)
+    .with_data("b", b_ds);
+    let t0 = Instant::now();
+    let legacy_out = legacy
+        .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+        .unwrap()
+        .run()
+        .unwrap();
+    let dt_legacy = t0.elapsed().as_secs_f64();
+
+    // ---- relational grouped run (exact): same join, per-group totals
+    const GROUPED: &str =
+        "SELECT g, SUM(a.v + b.w) AS total FROM a, b WHERE a.k = b.k GROUP BY g";
+    let mut rel = session_with(&w, approxjoin::runtime::default_parallelism());
+    let t0 = Instant::now();
+    let rel_out = rel.sql(GROUPED).unwrap().run().unwrap();
+    let dt_rel = t0.elapsed().as_secs_f64();
+    let grouped = rel_out.grouped.as_ref().expect("grouped query");
+    let n_groups = grouped.aggregates[0].groups.len();
+
+    // overall totals agree: grouped strata partition the legacy strata
+    let rel_total: f64 = grouped.aggregates[0]
+        .groups
+        .iter()
+        .map(|g| g.result.estimate)
+        .sum();
+    let legacy_total = legacy_out.result.estimate;
+    assert!(
+        (rel_total - legacy_total).abs() < 1e-6 * (1.0 + legacy_total.abs()),
+        "grouped sum {rel_total} != legacy sum {legacy_total}"
+    );
+
+    // ---- sampled grouped run: per-group CI widths (approx strategy)
+    let mut rel = session_with(&w, approxjoin::runtime::default_parallelism());
+    let sampled = rel
+        .sql(GROUPED)
+        .unwrap()
+        .strategy(StrategyChoice::named("approx"))
+        .run()
+        .unwrap();
+    let sampled_groups = &sampled.grouped.as_ref().unwrap().aggregates[0].groups;
+    let mut covered = 0usize;
+    let mut rel_widths = Vec::new();
+    for (s, e) in sampled_groups.iter().zip(&grouped.aggregates[0].groups) {
+        if (s.result.estimate - e.result.estimate).abs() <= s.result.error_bound {
+            covered += 1;
+        }
+        if e.result.estimate.abs() > 1e-9 {
+            rel_widths.push(s.result.error_bound / e.result.estimate.abs());
+        }
+    }
+    let mean_ci_width = rel_widths.iter().sum::<f64>() / rel_widths.len().max(1) as f64;
+
+    // ---- the determinism contract, asserted on every bench run
+    let run_at = |threads: usize| {
+        session_with(&w, threads)
+            .sql(GROUPED)
+            .unwrap()
+            .strategy(StrategyChoice::named("approx"))
+            .run()
+            .unwrap()
+            .grouped
+            .unwrap()
+    };
+    let g1 = run_at(1);
+    let g8 = run_at(8);
+    assert_eq!(g1, g8, "grouped output diverged between 1 and 8 threads");
+
+    let mut t = Table::new(&["path", "rows", "time", "rows/sec"]);
+    t.row(row![
+        "legacy 2-col kernel",
+        fmt::count(total_rows as u64),
+        fmt::duration(dt_legacy),
+        format!("{}/s", fmt::count((total_rows / dt_legacy) as u64))
+    ]);
+    t.row(row![
+        format!("relational GROUP BY ({n_groups} groups)"),
+        fmt::count(total_rows as u64),
+        fmt::duration(dt_rel),
+        format!("{}/s", fmt::count((total_rows / dt_rel) as u64))
+    ]);
+    t.print();
+    println!(
+        "\nsampled grouped run: {covered}/{n_groups} group CIs cover the exact \
+         total, mean relative CI width {}",
+        fmt::pct(mean_ci_width)
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            "fig_groupby_overhead",
+            Json::obj(vec![
+                ("legacy_rows_per_sec", Json::num(total_rows / dt_legacy)),
+                ("relational_rows_per_sec", Json::num(total_rows / dt_rel)),
+                ("overhead_ratio", Json::num(dt_rel / dt_legacy.max(1e-12))),
+                ("groups", Json::num(n_groups as f64)),
+                ("groups_covered", Json::num(covered as f64)),
+                ("mean_group_ci_rel_width", Json::num(mean_ci_width)),
+                ("quick_mode", Json::Bool(quick)),
+            ]),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote fig_groupby_overhead section to {}", path.display());
+    }
+}

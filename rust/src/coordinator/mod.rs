@@ -23,10 +23,7 @@ use crate::join::bloom_join::{
 };
 use crate::query::{AggFunc, Query};
 use crate::runtime::{BloomProbeExecutor, JoinAggExecutor, PjrtRuntime};
-use crate::stats::{
-    clt_avg, clt_stdev, clt_sum, exact_count, horvitz_thompson_sum, ApproxResult, EstimatorKind,
-    StratumAgg,
-};
+use crate::stats::{ApproxResult, EstimatorKind, StratumAgg};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -60,6 +57,10 @@ pub struct QueryOutcome {
     /// [`crate::session::Session`] planner (the engine's own §3.2
     /// exact-vs-sampled decision does not produce one).
     pub plan: Option<crate::join::JoinPlan>,
+    /// Per-group estimates (one `estimate ± CI` per group per aggregate)
+    /// when the query went through the relational front end; `None` on
+    /// the legacy scalar path.
+    pub grouped: Option<crate::relation::GroupedApproxResult>,
 }
 
 /// The ApproxJoin coordinator engine.
@@ -259,6 +260,7 @@ impl ApproxJoinEngine {
                 ExecutionMode::Sampled { .. } => "approx".to_string(),
             },
             plan: None,
+            grouped: None,
         })
     }
 
@@ -286,9 +288,10 @@ impl ApproxJoinEngine {
     }
 }
 
-/// §3.4 error estimation shared by the engine and the session front end:
-/// pick the estimator for the (aggregate, sampled?, kind) combination and
-/// close the approximation loop over per-stratum aggregates.
+/// §3.4 error estimation shared by the engine, the session front end and
+/// the relational layer: pick the estimator for the (aggregate, sampled?,
+/// kind) combination and close the approximation loop over per-stratum
+/// aggregates.
 pub(crate) fn estimate_result(
     agg: AggFunc,
     sampled: bool,
@@ -303,19 +306,19 @@ pub(crate) fn estimate_result(
     let mut order: Vec<u64> = strata.keys().copied().collect();
     order.sort_unstable();
     let strata_vec: Vec<StratumAgg> = order.iter().map(|k| strata[k]).collect();
-    match (agg, sampled, estimator) {
-        (AggFunc::Count, _, _) => exact_count(&strata_vec, confidence),
-        (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
-            let d: Vec<f64> = order
-                .iter()
-                .map(|k| draws.get(k).copied().unwrap_or(0.0))
-                .collect();
-            horvitz_thompson_sum(&strata_vec, &d, confidence)
-        }
-        (AggFunc::Sum, _, _) => clt_sum(&strata_vec, confidence),
-        (AggFunc::Avg, _, _) => clt_avg(&strata_vec, confidence),
-        (AggFunc::Stdev, _, _) => clt_stdev(&strata_vec, confidence),
-    }
+    // only the Horvitz-Thompson SUM arm consumes per-stratum draw counts
+    let ht_sum = sampled
+        && estimator == EstimatorKind::HorvitzThompson
+        && matches!(agg, AggFunc::Sum);
+    let d: Vec<f64> = if ht_sum {
+        order
+            .iter()
+            .map(|k| draws.get(k).copied().unwrap_or(0.0))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    crate::relation::grouped::estimate_slice(agg, sampled, estimator, &strata_vec, &d, confidence)
 }
 
 #[cfg(test)]

@@ -11,6 +11,7 @@
 //! movies (the real one has ~2.8M probes over 17,470 movies).
 
 use super::{Dataset, Record};
+use crate::relation::{ColumnType, Relation, Schema, Value};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -83,6 +84,84 @@ pub fn generate(spec: &NetflixSpec) -> Vec<Dataset> {
     ]
 }
 
+/// The Netflix user population (480,189 in the real dataset).
+const USERS: u64 = 480_189;
+/// Days in the rating window (1999-11-11 .. 2005-12-31).
+const DATE_DAYS: u64 = 2_243;
+
+/// Generate `[training_set, qualifying]` as typed relations:
+/// `training_set(movie, user, rating, date)` and
+/// `qualifying(movie, user, date, probe)`. The `(movie, rating)` /
+/// `(movie, probe)` projections match [`generate`]'s datasets row for
+/// row; user and date columns are synthesized from forked streams.
+pub fn generate_relations(spec: &NetflixSpec) -> Vec<Relation> {
+    let datasets = generate(spec);
+    let mut rng = Rng::new(spec.seed ^ 0x9e37);
+    let mut r = rng.fork(11);
+    let training_schema = Schema::new(vec![
+        ("movie", ColumnType::Key),
+        ("user", ColumnType::Int),
+        ("rating", ColumnType::Float),
+        ("date", ColumnType::Int),
+    ]);
+    // preserve the datasets' partition layout so the (movie, rating) /
+    // (movie, probe) projections match the legacy generator row for row
+    let training = Relation {
+        name: "training_set".to_string(),
+        schema: training_schema,
+        partitions: datasets[0]
+            .partitions
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|rec| {
+                        vec![
+                            Value::Key(rec.key),
+                            Value::Int(r.zipf(USERS, 1.05) as i64),
+                            Value::Float(rec.value),
+                            Value::Int(r.below(DATE_DAYS) as i64),
+                        ]
+                    })
+                    .collect()
+            })
+            .collect(),
+        row_bytes: TRAINING_BYTES,
+        degenerate: false,
+    };
+
+    let mut r = rng.fork(12);
+    let qualifying_schema = Schema::new(vec![
+        ("movie", ColumnType::Key),
+        ("user", ColumnType::Int),
+        ("date", ColumnType::Int),
+        ("probe", ColumnType::Float),
+    ]);
+    let qualifying = Relation {
+        name: "qualifying".to_string(),
+        schema: qualifying_schema,
+        partitions: datasets[1]
+            .partitions
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|rec| {
+                        vec![
+                            Value::Key(rec.key),
+                            Value::Int(r.zipf(USERS, 1.05) as i64),
+                            Value::Int(r.below(DATE_DAYS) as i64),
+                            Value::Float(rec.value),
+                        ]
+                    })
+                    .collect()
+            })
+            .collect(),
+        row_bytes: QUALIFYING_BYTES,
+        degenerate: false,
+    };
+
+    vec![training, qualifying]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +210,24 @@ mod tests {
         let ds = generate(&small());
         for d in &ds {
             assert!(d.iter().all(|r| (1..=17_770).contains(&r.key)));
+        }
+    }
+
+    #[test]
+    fn relations_mirror_datasets() {
+        let spec = small();
+        let rels = generate_relations(&spec);
+        let ds = generate(&spec);
+        assert_eq!(rels[0].len(), ds[0].len());
+        assert_eq!(rels[1].len(), ds[1].len());
+        assert_eq!(rels[0].schema.col("rating"), Some(2));
+        assert_eq!(rels[1].schema.col("probe"), Some(3));
+        // the (movie, rating) projection matches the dataset rows
+        for (row, rec) in rels[0].iter().zip(ds[0].iter()) {
+            assert_eq!(row[0].as_key(), Some(rec.key));
+            assert_eq!(row[2].as_f64(), Some(rec.value));
+            let user = row[1].as_f64().unwrap();
+            assert!(user >= 1.0 && user <= USERS as f64);
         }
     }
 

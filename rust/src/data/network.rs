@@ -11,6 +11,7 @@
 //! configurable.
 
 use super::{Dataset, Record};
+use crate::relation::{ColumnType, Relation, Schema, Value};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -105,6 +106,49 @@ pub fn generate(spec: &NetworkSpec) -> Vec<Dataset> {
     out
 }
 
+/// Generate `[tcp, udp, icmp]` as typed relations:
+/// `proto(flow, src, dst, bytes, packets)`. The `(flow, bytes)`
+/// projection matches [`generate`]'s datasets row for row; src/dst are
+/// decoded from the flow key, packets derived from the byte count (~600B
+/// MTU-ish packets, at least 1).
+pub fn generate_relations(spec: &NetworkSpec) -> Vec<Relation> {
+    let schema = Schema::new(vec![
+        ("flow", ColumnType::Key),
+        ("src", ColumnType::Int),
+        ("dst", ColumnType::Int),
+        ("bytes", ColumnType::Float),
+        ("packets", ColumnType::Float),
+    ]);
+    generate(spec)
+        .into_iter()
+        .map(|d| Relation {
+            name: d.name.clone(),
+            schema: schema.clone(),
+            // preserve the dataset's partition layout so the (flow,
+            // bytes) projection matches the legacy generator row for row
+            partitions: d
+                .partitions
+                .iter()
+                .map(|p| {
+                    p.iter()
+                        .map(|rec| {
+                            vec![
+                                Value::Key(rec.key),
+                                Value::Int((rec.key >> 32) as i64),
+                                Value::Int((rec.key & 0xFFFF_FFFF) as i64),
+                                Value::Float(rec.value),
+                                Value::Float((rec.value / 600.0).ceil().max(1.0)),
+                            ]
+                        })
+                        .collect()
+                })
+                .collect(),
+            row_bytes: FLOW_BYTES,
+            degenerate: false,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +205,29 @@ mod tests {
         let a = generate(&NetworkSpec::default());
         let b = generate(&NetworkSpec::default());
         assert_eq!(a[0].partitions[0], b[0].partitions[0]);
+    }
+
+    #[test]
+    fn relations_mirror_datasets() {
+        let spec = NetworkSpec {
+            tcp_flows: 2000,
+            udp_flows: 1000,
+            icmp_flows: 500,
+            common_flows: 50,
+            ..Default::default()
+        };
+        let rels = generate_relations(&spec);
+        let ds = generate(&spec);
+        assert_eq!(rels.len(), 3);
+        for (r, d) in rels.iter().zip(&ds) {
+            assert_eq!(r.len(), d.len());
+            assert_eq!(r.name, d.name);
+            for (row, rec) in r.iter().zip(d.iter()) {
+                assert_eq!(row[0].as_key(), Some(rec.key));
+                assert_eq!(row[3].as_f64(), Some(rec.value));
+                assert!(row[4].as_f64().unwrap() >= 1.0);
+            }
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! (1..7 lines per order, uniform).
 
 use super::{Dataset, Record};
+use crate::relation::{ColumnType, Relation, Schema, Value};
 use crate::util::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -167,6 +168,85 @@ impl TpchDb {
         )
     }
 
+    /// CUSTOMER as a typed relation: custkey, acctbal, mktsegment — the
+    /// relational front end's view (GROUP BY mktsegment, WHERE acctbal).
+    pub fn customer_relation(&self, partitions: usize) -> Relation {
+        let schema = Schema::new(vec![
+            ("custkey", ColumnType::Key),
+            ("acctbal", ColumnType::Float),
+            ("mktsegment", ColumnType::Int),
+        ]);
+        let rows = self
+            .customers
+            .iter()
+            .map(|c| {
+                vec![
+                    Value::Key(c.custkey),
+                    Value::Float(c.acctbal),
+                    Value::Int(c.mktsegment as i64),
+                ]
+            })
+            .collect();
+        let mut r = Relation::new("customer", schema, rows, partitions).expect("valid rows");
+        r.row_bytes = CUSTOMER_BYTES;
+        r
+    }
+
+    /// ORDERS as a typed relation: custkey + orderkey join keys,
+    /// totalprice, orderdate (days since the TPC-H epoch).
+    pub fn orders_relation(&self, partitions: usize) -> Relation {
+        let schema = Schema::new(vec![
+            ("custkey", ColumnType::Key),
+            ("orderkey", ColumnType::Key),
+            ("totalprice", ColumnType::Float),
+            ("orderdate", ColumnType::Int),
+        ]);
+        let rows = self
+            .orders
+            .iter()
+            .map(|o| {
+                vec![
+                    Value::Key(o.custkey),
+                    Value::Key(o.orderkey),
+                    Value::Float(o.totalprice),
+                    Value::Int(o.orderdate as i64),
+                ]
+            })
+            .collect();
+        let mut r = Relation::new("orders", schema, rows, partitions).expect("valid rows");
+        r.row_bytes = ORDERS_BYTES;
+        r
+    }
+
+    /// LINEITEM as a typed relation: orderkey, extendedprice, discount,
+    /// shipdate, and the Q3/Q10 revenue expression
+    /// `extendedprice · (1 − discount)` materialized as `revenue`.
+    pub fn lineitem_relation(&self, partitions: usize) -> Relation {
+        let schema = Schema::new(vec![
+            ("orderkey", ColumnType::Key),
+            ("extendedprice", ColumnType::Float),
+            ("discount", ColumnType::Float),
+            ("shipdate", ColumnType::Int),
+            ("revenue", ColumnType::Float),
+        ]);
+        let rows = self
+            .lineitems
+            .iter()
+            .map(|l| {
+                vec![
+                    Value::Key(l.orderkey),
+                    Value::Float(l.extendedprice),
+                    Value::Float(l.discount),
+                    Value::Int(l.shipdate as i64),
+                    Value::Float(l.extendedprice * (1.0 - l.discount)),
+                ]
+            })
+            .collect();
+        let mut r = Relation::new("lineitem", schema, rows, partitions).expect("valid rows");
+        r.row_bytes = LINEITEM_BYTES;
+        r
+    }
+
     /// Q4-flavoured LINEITEM: only lines with l_commitdate < l_receiptdate
     /// (the EXISTS predicate of Q4), keyed by orderkey.
     pub fn lineitem_q4(&self, partitions: usize) -> Dataset {
@@ -300,6 +380,29 @@ mod tests {
         assert_eq!(TpchQuery::Q3.join_steps(&db, 4).len(), 2);
         assert_eq!(TpchQuery::Q4.join_steps(&db, 4).len(), 1);
         assert_eq!(TpchQuery::Q10.join_steps(&db, 4).len(), 2);
+    }
+
+    #[test]
+    fn relations_mirror_tables() {
+        let db = small();
+        let c = db.customer_relation(4);
+        assert_eq!(c.len() as usize, db.customers.len());
+        assert_eq!(c.schema.col("mktsegment"), Some(2));
+        assert_eq!(c.row_bytes, CUSTOMER_BYTES);
+        let o = db.orders_relation(4);
+        assert_eq!(o.len() as usize, db.orders.len());
+        assert_eq!(o.schema.col("custkey"), Some(0));
+        assert_eq!(o.schema.col("orderkey"), Some(1));
+        let l = db.lineitem_relation(4);
+        assert_eq!(l.len() as usize, db.lineitems.len());
+        // revenue column is the materialized Q3 expression
+        let row = l.iter().next().unwrap();
+        let (ep, d, rev) = (
+            row[1].as_f64().unwrap(),
+            row[2].as_f64().unwrap(),
+            row[4].as_f64().unwrap(),
+        );
+        assert!((rev - ep * (1.0 - d)).abs() < 1e-9);
     }
 
     #[test]

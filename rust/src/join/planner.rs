@@ -43,6 +43,10 @@ pub struct JoinPlan {
     /// executed (from the run's [`crate::cluster::ShuffleLedger`]); `None`
     /// before execution. `explain()` prints it next to the prediction.
     pub measured_shuffle_bytes: Option<u64>,
+    /// The relational lowering behind this plan (pushed-down predicates,
+    /// kernel projections, GROUP BY composite strata), when the query
+    /// came through the relational front end. `explain()` renders it.
+    pub lowering: Option<crate::relation::LoweringInfo>,
 }
 
 impl JoinPlan {
@@ -71,6 +75,13 @@ impl JoinPlan {
         self
     }
 
+    /// Attach the relational lowering this plan executes (pushed-down
+    /// predicates + the lowered kernel plan), for `explain()`.
+    pub fn with_lowering(mut self, lowering: crate::relation::LoweringInfo) -> Self {
+        self.lowering = Some(lowering);
+        self
+    }
+
     /// Human-readable plan: inputs, overlap, stages, and the cost ranking.
     pub fn explain(&self) -> String {
         let mut out = String::new();
@@ -95,6 +106,9 @@ impl JoinPlan {
             fmt::count(self.stats.est_output_pairs as u64)
         );
         let _ = writeln!(out, "  stages: {}", self.stages.join(" -> "));
+        if let Some(lowering) = &self.lowering {
+            out.push_str(&lowering.render());
+        }
         match self.measured_shuffle_bytes {
             Some(measured) => {
                 let _ = writeln!(
@@ -273,6 +287,7 @@ impl<'a> Planner<'a> {
             estimates,
             stages,
             measured_shuffle_bytes: None,
+            lowering: None,
         })
     }
 }

@@ -98,6 +98,28 @@
 //! ledger) are bit-identical for any thread count. Front ends:
 //! [`session::StreamingSession`], the `approxjoin stream` CLI subcommand,
 //! `examples/streaming_windows.rs`, and the `fig_stream_windows` bench.
+//!
+//! ## Relational front end
+//!
+//! The [`relation`] module generalizes the two-column `Dataset` into
+//! typed multi-column [`relation::Relation`]s
+//! (`Session::register_table(name, schema, rows)`) and a logical plan
+//! `scan → filter → equi-join → group_by → aggregate` that *lowers* onto
+//! the unchanged (key64, f64) join kernel:
+//!
+//! * **Predicate pushdown** — `WHERE a.x > c AND …` filters evaluate
+//!   before Bloom sketching, so the join filter is built from
+//!   post-filter keys only (`JoinPlan::explain()` shows each pushed
+//!   predicate with its measured selectivity).
+//! * **Per-aggregate projection** — every aggregate of the SELECT list
+//!   (`SUM(a.v + b.v) AS total, AVG(a.x), COUNT(*)`) projects the inputs
+//!   to kernel records over identical stratum keys.
+//! * **GROUP BY with per-group error bounds** — group keys map onto the
+//!   per-stratum sampling machinery via composite `(join key, group)`
+//!   stratum ids; [`coordinator::QueryOutcome::grouped`] then carries a
+//!   [`relation::GroupedApproxResult`]: one `estimate ± CI` per group
+//!   per aggregate, from the same stratified CLT / Horvitz-Thompson
+//!   estimators — bit-identical at any thread count.
 
 pub mod bloom;
 pub mod cluster;
@@ -106,6 +128,7 @@ pub mod cost;
 pub mod data;
 pub mod join;
 pub mod query;
+pub mod relation;
 pub mod runtime;
 pub mod sampling;
 pub mod session;

@@ -83,11 +83,22 @@ fn print_help() {
          model (--strategy auto, the default); budget clauses in the query\n\
          (WITHIN ... SECONDS, ERROR ... CONFIDENCE ...) route to the sampled\n\
          ApproxJoin pipeline.\n\n\
-         DATA SPECS:\n\
-           synthetic[:items=N,overlap=F,inputs=N,lambda=F]   (default)\n\
-           tpch[:sf=F]        CUSTOMER x ORDERS join input\n\
-           network            CAIDA-like TCP/UDP/ICMP flows (3-way)\n\
-           netflix            training_set x qualifying (2-way)"
+         RELATIONAL QUERIES: WHERE takes AND-ed selection predicates over\n\
+         any column (pushed below the join, so Bloom sketching sees\n\
+         post-filter keys only), GROUP BY returns one estimate \u{b1} CI per\n\
+         group, and SELECT takes several aggregates with AS aliases:\n\
+           approxjoin query --data tpch --sql \"SELECT mktsegment, \\\n\
+             SUM(orders.totalprice) AS revenue FROM customer, orders \\\n\
+             WHERE customer.custkey = orders.custkey AND customer.acctbal > 0 \\\n\
+             GROUP BY mktsegment WITHIN 10 SECONDS\"\n\n\
+         DATA SPECS (tables map positionally onto the FROM list):\n\
+           synthetic[:items=N,overlap=F,inputs=N,lambda=F]  (default; 2-col)\n\
+           tpch[:sf=F]   customer(custkey,acctbal,mktsegment),\n\
+           \u{20}             orders(custkey,orderkey,totalprice,orderdate),\n\
+           \u{20}             lineitem(orderkey,extendedprice,discount,shipdate,revenue)\n\
+           network       tcp/udp/icmp(flow,src,dst,bytes,packets) (3-way)\n\
+           netflix       training_set(movie,user,rating,date),\n\
+           \u{20}             qualifying(movie,user,date,probe)"
     );
 }
 
@@ -111,16 +122,23 @@ fn threads_flag(args: &[String]) -> anyhow::Result<usize> {
         .unwrap_or_else(approxjoin::runtime::default_parallelism))
 }
 
+/// Split a `kind:key=v,key=v` data spec into its kind and a param getter.
+fn spec_kind(spec: &str) -> (&str, &str) {
+    spec.split_once(':').unwrap_or((spec, ""))
+}
+
+fn spec_param(params: &str, key: &str) -> Option<f64> {
+    params.split(',').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then(|| v.parse().ok())?
+    })
+}
+
 /// Parse `synthetic:items=100000,overlap=0.05` style specs into datasets
 /// named a, b, c, ... as the queries reference them.
 fn load_data(spec: &str, workers: usize) -> anyhow::Result<Vec<Dataset>> {
-    let (kind, params) = spec.split_once(':').unwrap_or((spec, ""));
-    let get = |key: &str| -> Option<f64> {
-        params.split(',').find_map(|kv| {
-            let (k, v) = kv.split_once('=')?;
-            (k == key).then(|| v.parse().ok())?
-        })
-    };
+    let (kind, params) = spec_kind(spec);
+    let get = |key: &str| spec_param(params, key);
     match kind {
         "synthetic" => {
             let spec = SyntheticSpec {
@@ -157,8 +175,40 @@ fn load_data(spec: &str, workers: usize) -> anyhow::Result<Vec<Dataset>> {
     }
 }
 
-/// Parse the query once and build a session holding the spec'd datasets
-/// renamed to the query's FROM-list table names.
+/// Typed multi-column relations for the data specs that have them
+/// (tpch / network / netflix); `None` for synthetic (degenerate 2-col).
+fn load_relations(spec: &str, workers: usize) -> Option<Vec<approxjoin::relation::Relation>> {
+    let (kind, params) = spec_kind(spec);
+    let get = |key: &str| spec_param(params, key);
+    match kind {
+        "tpch" => {
+            let db = tpch::generate(get("sf").unwrap_or(0.05), 7);
+            Some(vec![
+                db.customer_relation(workers * 2),
+                db.orders_relation(workers * 2),
+                db.lineitem_relation(workers * 2),
+            ])
+        }
+        "network" => Some(network::generate_relations(&network::NetworkSpec {
+            partitions: workers * 2,
+            ..Default::default()
+        })),
+        "netflix" => Some(netflix::generate_relations(&netflix::NetflixSpec {
+            partitions: workers * 2,
+            ..Default::default()
+        })),
+        _ => None,
+    }
+}
+
+/// Parse the query once and build a session holding the spec'd inputs
+/// renamed to the query's FROM-list table names. Queries using the
+/// relational grammar (predicates, GROUP BY, multiple aggregates,
+/// aliases) against a spec with typed relations (tpch / network /
+/// netflix) get those registered, so real columns resolve; plain budget
+/// queries keep the legacy two-column datasets — and with them the old
+/// free-column-name behavior (`SELECT SUM(tcp.size) … WHERE tcp.f =
+/// udp.f` keeps working).
 fn session_for(
     sql: &str,
     data: &str,
@@ -166,10 +216,24 @@ fn session_for(
     cfg: EngineConfig,
 ) -> anyhow::Result<(Session, query::Query)> {
     let q = query::parse(sql)?;
-    let inputs = load_data(data, workers)?;
     let mut session = Session::new(cfg)?;
-    for (d, t) in inputs.into_iter().zip(&q.tables) {
-        session = session.with_data(t, d);
+    let relations = if q.has_relational_features() {
+        load_relations(data, workers)
+    } else {
+        None
+    };
+    match relations {
+        Some(relations) => {
+            for (r, t) in relations.into_iter().zip(&q.tables) {
+                session = session.with_table(t, r);
+            }
+        }
+        None => {
+            let inputs = load_data(data, workers)?;
+            for (d, t) in inputs.into_iter().zip(&q.tables) {
+                session = session.with_data(t, d);
+            }
+        }
     }
     Ok((session, q))
 }
@@ -251,6 +315,51 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    // relational queries: per-group estimates per aggregate
+    if let Some(grouped) = &out.grouped {
+        if let Some(col) = &grouped.group_column {
+            for agg in &grouped.aggregates {
+                println!(
+                    "\n{} per {col} ({}% confidence):",
+                    agg.label,
+                    out.result.confidence * 100.0
+                );
+                let mut gt = Table::new(&[
+                    "group",
+                    "estimate",
+                    "+/- bound",
+                    "samples",
+                    "population",
+                    "strata",
+                ]);
+                for g in &agg.groups {
+                    gt.row(row![
+                        g.group.to_string(),
+                        format!("{:.4}", g.result.estimate),
+                        format!("{:.4}", g.result.error_bound),
+                        fmt::count(g.ledger.samples),
+                        fmt::count(g.ledger.population as u64),
+                        g.ledger.strata
+                    ]);
+                }
+                gt.print();
+            }
+        } else if grouped.aggregates.len() > 1 {
+            println!();
+            let mut gt = Table::new(&["aggregate", "estimate", "+/- bound", "samples"]);
+            for agg in &grouped.aggregates {
+                let g = &agg.groups[0];
+                gt.row(row![
+                    agg.label.clone(),
+                    format!("{:.4}", g.result.estimate),
+                    format!("{:.4}", g.result.error_bound),
+                    fmt::count(g.ledger.samples)
+                ]);
+            }
+            gt.print();
+        }
+    }
     Ok(())
 }
 
@@ -342,15 +451,15 @@ fn cmd_stream(args: &[String]) -> anyhow::Result<()> {
              (got window {wsize}, slide {slide})"
         );
     }
+    let events: u64 = flag(args, "--events").map(|v| v.parse()).transpose()?.unwrap_or(2_000);
+    let overlap: f64 = flag(args, "--overlap").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
+    let fraction: f64 = flag(args, "--fraction").map(|v| v.parse()).transpose()?.unwrap_or(0.1);
     if !(0.0..=1.0).contains(&overlap) {
         anyhow::bail!("--overlap must be in [0, 1] (got {overlap})");
     }
     if !(fraction > 0.0 && fraction <= 1.0) {
         anyhow::bail!("--fraction must be in (0, 1] (got {fraction})");
     }
-    let events: u64 = flag(args, "--events").map(|v| v.parse()).transpose()?.unwrap_or(2_000);
-    let overlap: f64 = flag(args, "--overlap").map(|v| v.parse()).transpose()?.unwrap_or(0.05);
-    let fraction: f64 = flag(args, "--fraction").map(|v| v.parse()).transpose()?.unwrap_or(0.1);
     let seed: u64 = flag(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
     let estimator = match flag(args, "--estimator").as_deref() {
         Some("ht") => approxjoin::stats::EstimatorKind::HorvitzThompson,

@@ -1,6 +1,8 @@
-//! Query AST: aggregate-over-equi-join with a query execution budget.
+//! Query AST: aggregate(s)-over-equi-join with selection predicates, an
+//! optional GROUP BY, and a query execution budget.
 
 use crate::join::CombineOp;
+use crate::relation::{AggExpr, ColumnRef, Predicate};
 
 /// Algebraic aggregation functions the paper supports (§2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,47 +53,117 @@ impl Budget {
 }
 
 /// A parsed aggregation-over-join query.
+///
+/// `agg` / `combine` mirror the *first* aggregate expression — the legacy
+/// single-aggregate view every pre-relational caller consumes. The full
+/// relational shape lives in `aggregates`, `predicates` and `group_by`.
 #[derive(Clone, Debug)]
 pub struct Query {
     pub agg: AggFunc,
-    /// How the per-input values combine inside the aggregate.
+    /// How the per-input values combine inside the (first) aggregate.
     pub combine: CombineOp,
     /// Input dataset names, in join order (R1, R2, ..., Rn).
     pub tables: Vec<String>,
     /// The join attribute name (the paper's A; single-attribute equi-join).
     pub join_attr: String,
     pub budget: Budget,
+    /// Every aggregate of the SELECT list (first mirrors `agg`/`combine`).
+    pub aggregates: Vec<AggExpr>,
+    /// WHERE predicates over non-join columns, pushed below the join.
+    pub predicates: Vec<Predicate>,
+    /// GROUP BY column, if any.
+    pub group_by: Option<ColumnRef>,
 }
 
 impl Query {
+    /// A legacy-shaped query: one aggregate, no predicates, no grouping.
+    pub fn simple(
+        agg: AggFunc,
+        combine: CombineOp,
+        tables: Vec<String>,
+        join_attr: impl Into<String>,
+        budget: Budget,
+    ) -> Self {
+        Self {
+            agg,
+            combine,
+            tables,
+            join_attr: join_attr.into(),
+            budget,
+            aggregates: vec![AggExpr {
+                func: agg,
+                combine,
+                terms: Vec::new(),
+                alias: None,
+            }],
+            predicates: Vec::new(),
+            group_by: None,
+        }
+    }
+
+    /// Whether this query needs the relational front end: predicates,
+    /// grouping, multiple aggregates, or an aliased aggregate (the alias
+    /// only surfaces through `QueryOutcome::grouped`). Plain
+    /// single-aggregate queries keep the legacy scalar path.
+    pub fn has_relational_features(&self) -> bool {
+        self.group_by.is_some()
+            || !self.predicates.is_empty()
+            || self.aggregates.len() > 1
+            || self.aggregates.iter().any(|a| a.alias.is_some())
+    }
+
     /// Stable fingerprint for the feedback store: identifies the query
-    /// shape (aggregate + combine + tables + attribute), not its budget.
+    /// shape (aggregates + predicates + grouping + tables + attribute),
+    /// not its budget. Single-aggregate queries without relational
+    /// features keep the exact pre-relational fingerprint, so persisted
+    /// feedback sigmas stay valid across this API generation (the
+    /// relational execution path additionally suffixes a per-aggregate
+    /// `#SUM(...)` rendering when recording, which captures the
+    /// expression columns).
     pub fn fingerprint(&self) -> String {
-        format!(
+        let mut fp = format!(
             "{}:{:?}:{}:{}",
             self.agg.name(),
             self.combine,
             self.tables.join(","),
             self.join_attr
-        )
+        );
+        for p in &self.predicates {
+            fp.push_str(&format!(";p={p}"));
+        }
+        if let Some(g) = &self.group_by {
+            fp.push_str(&format!(";g={g}"));
+        }
+        if self.aggregates.len() > 1 {
+            for a in &self.aggregates {
+                fp.push_str(&format!(";a={}", a.render()));
+            }
+        }
+        fp
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::relation::CmpOp;
+
+    fn base() -> Query {
+        Query::simple(
+            AggFunc::Sum,
+            CombineOp::Sum,
+            vec!["a".into(), "b".into()],
+            "k",
+            Budget::unbounded(),
+        )
+    }
 
     #[test]
     fn fingerprint_ignores_budget() {
-        let q1 = Query {
-            agg: AggFunc::Sum,
-            combine: CombineOp::Sum,
-            tables: vec!["a".into(), "b".into()],
-            join_attr: "k".into(),
-            budget: Budget {
-                latency_secs: Some(10.0),
-                error: None,
-            },
+        let mut q1 = base();
+        q1.budget = Budget {
+            latency_secs: Some(10.0),
+            error: None,
         };
         let mut q2 = q1.clone();
         q2.budget = Budget::unbounded();
@@ -100,19 +172,52 @@ mod tests {
 
     #[test]
     fn fingerprint_distinguishes_shape() {
-        let base = Query {
-            agg: AggFunc::Sum,
-            combine: CombineOp::Sum,
-            tables: vec!["a".into(), "b".into()],
-            join_attr: "k".into(),
-            budget: Budget::unbounded(),
-        };
+        let base = base();
         let mut other = base.clone();
         other.tables.push("c".into());
         assert_ne!(base.fingerprint(), other.fingerprint());
         let mut other = base.clone();
         other.agg = AggFunc::Avg;
         assert_ne!(base.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_covers_relational_shape() {
+        let plain = base();
+        let mut filtered = plain.clone();
+        filtered.predicates.push(Predicate {
+            column: ColumnRef::qualified("a", "x"),
+            op: CmpOp::Gt,
+            literal: 5.0,
+        });
+        assert_ne!(plain.fingerprint(), filtered.fingerprint());
+
+        let mut grouped = plain.clone();
+        grouped.group_by = Some(ColumnRef::qualified("a", "g"));
+        assert_ne!(plain.fingerprint(), grouped.fingerprint());
+        assert_ne!(filtered.fingerprint(), grouped.fingerprint());
+
+        let mut multi = plain.clone();
+        multi.aggregates.push(AggExpr {
+            func: AggFunc::Avg,
+            combine: CombineOp::Left,
+            terms: vec![ColumnRef::qualified("a", "v")],
+            alias: Some("m".into()),
+        });
+        assert_ne!(plain.fingerprint(), multi.fingerprint());
+
+        // two different predicate constants differ too
+        let mut filtered2 = filtered.clone();
+        filtered2.predicates[0].literal = 6.0;
+        assert_ne!(filtered.fingerprint(), filtered2.fingerprint());
+    }
+
+    #[test]
+    fn relational_feature_detection() {
+        assert!(!base().has_relational_features());
+        let mut q = base();
+        q.group_by = Some(ColumnRef::bare("g"));
+        assert!(q.has_relational_features());
     }
 
     #[test]

@@ -1,21 +1,34 @@
-//! Recursive-descent parser for the budget-query language (§2).
+//! Recursive-descent parser for the budget-query language (§2), extended
+//! with the relational front end's grammar: WHERE selection predicates
+//! over non-join columns, GROUP BY, multiple aggregates and aliases.
 //!
 //! Grammar (case-insensitive keywords):
 //!
 //! ```text
-//! query    := SELECT agg '(' expr ')' FROM tables WHERE chain budget?
+//! query    := SELECT selects FROM tables WHERE conj group? budget?
+//! selects  := item (',' item)*
+//! item     := agg '(' expr ')' (AS ident)? | colref
 //! agg      := SUM | AVG | COUNT | STDEV
-//! expr     := term (('+' | '*') term)* | '*'
-//! term     := ident '.' ident
+//! expr     := colref (('+' | '*') colref)* | '*'
+//! colref   := ident ('.' ident)?
 //! tables   := ident (',' ident)*
-//! chain    := term ('=' term)+
+//! conj     := cond (AND cond)*
+//! cond     := colref ('=' colref)+          -- join chain
+//!           | colref cmp number             -- selection predicate
+//! cmp      := '>' | '<' | '>=' | '<=' | '=' | '!='
+//! group    := GROUP BY colref
 //! budget   := within | error | within OR error
 //! within   := WITHIN number SECONDS
 //! error    := ERROR number CONFIDENCE number '%'
 //! ```
+//!
+//! A bare (unqualified) column reference resolves against the registered
+//! schemas at lowering time. Bare items in the SELECT list must name the
+//! GROUP BY column (the echoed group key).
 
 use super::ast::{AggFunc, Budget, ErrorBudget, Query};
 use crate::join::CombineOp;
+use crate::relation::{AggExpr, CmpOp, ColumnRef, Predicate};
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -47,7 +60,7 @@ fn tokenize(s: &str) -> Result<Vec<Tok>> {
             }
             let text: String = b[start..i].iter().collect();
             out.push(Tok::Num(text.parse().map_err(|_| anyhow!("bad number {text}"))?));
-        } else if "()+*,.=%".contains(c) {
+        } else if "()+*,.=%<>!-".contains(c) {
             out.push(Tok::Sym(c));
             i += 1;
         } else {
@@ -65,6 +78,10 @@ struct P {
 impl P {
     fn peek(&self) -> Option<&Tok> {
         self.toks.get(self.i)
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<&Tok> {
+        self.toks.get(self.i + ahead)
     }
 
     fn next(&mut self) -> Result<Tok> {
@@ -123,39 +140,72 @@ impl P {
         }
     }
 
-    /// `table '.' column` → (table, column)
-    fn qualified(&mut self) -> Result<(String, String)> {
-        let t = self.ident()?;
-        self.sym('.')?;
-        let c = self.ident()?;
-        Ok((t, c))
+    /// A possibly-negative numeric literal (predicate right-hand sides;
+    /// budget clauses use [`P::num`] so negative budgets stay rejected).
+    fn literal(&mut self) -> Result<f64> {
+        if self.try_sym('-') {
+            Ok(-self.num()?)
+        } else {
+            self.num()
+        }
+    }
+
+    /// `table '.' column` or bare `column`.
+    fn colref(&mut self) -> Result<ColumnRef> {
+        let first = self.ident()?;
+        if self.try_sym('.') {
+            let c = self.ident()?;
+            Ok(ColumnRef::qualified(first, c))
+        } else {
+            Ok(ColumnRef::bare(first))
+        }
+    }
+
+    /// A comparison operator, if the next token(s) form one.
+    fn try_cmp(&mut self) -> Result<Option<CmpOp>> {
+        match self.peek() {
+            Some(Tok::Sym('>')) => {
+                self.i += 1;
+                Ok(Some(if self.try_sym('=') { CmpOp::Ge } else { CmpOp::Gt }))
+            }
+            Some(Tok::Sym('<')) => {
+                self.i += 1;
+                Ok(Some(if self.try_sym('=') { CmpOp::Le } else { CmpOp::Lt }))
+            }
+            Some(Tok::Sym('!')) => {
+                self.i += 1;
+                if self.try_sym('=') {
+                    Ok(Some(CmpOp::Ne))
+                } else {
+                    bail!("'!' must be followed by '=' (the != operator)")
+                }
+            }
+            _ => Ok(None),
+        }
     }
 }
 
-/// Parse a budget query.
-pub fn parse(text: &str) -> Result<Query> {
-    let mut p = P {
-        toks: tokenize(text)?,
-        i: 0,
-    };
-    p.keyword("SELECT")?;
-    let agg_name = p.ident()?;
-    let agg = match agg_name.to_ascii_uppercase().as_str() {
-        "SUM" => AggFunc::Sum,
-        "AVG" => AggFunc::Avg,
-        "COUNT" => AggFunc::Count,
-        "STDEV" => AggFunc::Stdev,
-        other => bail!("unsupported aggregate {other}"),
-    };
+fn agg_func(name: &str) -> Option<AggFunc> {
+    match name.to_ascii_uppercase().as_str() {
+        "SUM" => Some(AggFunc::Sum),
+        "AVG" => Some(AggFunc::Avg),
+        "COUNT" => Some(AggFunc::Count),
+        "STDEV" => Some(AggFunc::Stdev),
+        _ => None,
+    }
+}
+
+/// Parse one `FUNC '(' expr ')' (AS ident)?` call.
+fn agg_call(p: &mut P) -> Result<AggExpr> {
+    let name = p.ident()?;
+    let func = agg_func(&name).ok_or_else(|| anyhow!("unsupported aggregate {name}"))?;
     p.sym('(')?;
-    // expression: '*' | term ((+|*) term)*
-    let mut expr_tables = Vec::new();
+    let mut terms = Vec::new();
     let combine;
     if p.try_sym('*') {
         combine = CombineOp::Left;
     } else {
-        let (t, _col) = p.qualified()?;
-        expr_tables.push(t);
+        terms.push(p.colref()?);
         let mut op: Option<CombineOp> = None;
         loop {
             if p.try_sym('+') {
@@ -171,12 +221,52 @@ pub fn parse(text: &str) -> Result<Query> {
             } else {
                 break;
             }
-            let (t, _col) = p.qualified()?;
-            expr_tables.push(t);
+            terms.push(p.colref()?);
         }
         combine = op.unwrap_or(CombineOp::Left);
     }
     p.sym(')')?;
+    let alias = if p.try_keyword("AS") {
+        Some(p.ident()?)
+    } else {
+        None
+    };
+    Ok(AggExpr {
+        func,
+        combine,
+        terms,
+        alias,
+    })
+}
+
+/// Parse a budget query.
+pub fn parse(text: &str) -> Result<Query> {
+    let mut p = P {
+        toks: tokenize(text)?,
+        i: 0,
+    };
+    p.keyword("SELECT")?;
+
+    // ---- SELECT list: aggregate calls and (for grouped queries) the
+    // echoed group-key column
+    let mut aggregates: Vec<AggExpr> = Vec::new();
+    let mut echoed: Vec<ColumnRef> = Vec::new();
+    loop {
+        // an identifier followed by '(' is an aggregate call
+        let is_call = matches!(p.peek(), Some(Tok::Ident(_)))
+            && p.peek_at(1) == Some(&Tok::Sym('('));
+        if is_call {
+            aggregates.push(agg_call(&mut p)?);
+        } else {
+            echoed.push(p.colref()?);
+        }
+        if !p.try_sym(',') {
+            break;
+        }
+    }
+    if aggregates.is_empty() {
+        bail!("SELECT needs at least one aggregate (SUM/AVG/COUNT/STDEV)");
+    }
 
     p.keyword("FROM")?;
     let mut tables = vec![p.ident()?];
@@ -186,36 +276,190 @@ pub fn parse(text: &str) -> Result<Query> {
     if tables.len() < 2 {
         bail!("a join needs at least two tables");
     }
+    let known = |t: &str| tables.iter().any(|x| x.eq_ignore_ascii_case(t));
 
+    // ---- WHERE: a conjunction of join chains and selection predicates
     p.keyword("WHERE")?;
-    let (t0, attr) = p.qualified()?;
-    let mut chain_tables = vec![t0];
-    while p.try_sym('=') {
-        let (t, a) = p.qualified()?;
-        if !a.eq_ignore_ascii_case(&attr) {
-            bail!("join attributes differ: {attr} vs {a} (single-attribute equi-join only)");
+    let mut join_attr: Option<String> = None;
+    let mut chains: Vec<Vec<String>> = Vec::new();
+    let mut predicates: Vec<Predicate> = Vec::new();
+    loop {
+        let first = p.colref()?;
+        if let Some(op) = p.try_cmp()? {
+            // comparison predicate: colref cmp number
+            let lit = p.literal()?;
+            predicates.push(Predicate {
+                column: first,
+                op,
+                literal: lit,
+            });
+        } else if p.peek() == Some(&Tok::Sym('=')) {
+            // '=' starts either a join chain (RHS is a column) or an
+            // equality predicate (RHS is a number, possibly negative)
+            let rhs_is_num = matches!(p.peek_at(1), Some(Tok::Num(_)))
+                || (p.peek_at(1) == Some(&Tok::Sym('-'))
+                    && matches!(p.peek_at(2), Some(Tok::Num(_))));
+            if rhs_is_num {
+                p.sym('=')?;
+                let lit = p.literal()?;
+                predicates.push(Predicate {
+                    column: first,
+                    op: CmpOp::Eq,
+                    literal: lit,
+                });
+            } else {
+                let Some(t0) = first.table.clone() else {
+                    bail!("join clause needs table-qualified columns, got {first}");
+                };
+                let attr = first.column.clone();
+                match &join_attr {
+                    Some(a) if !a.eq_ignore_ascii_case(&attr) => {
+                        bail!(
+                            "join attributes differ: {a} vs {attr} \
+                             (single-attribute equi-join only)"
+                        );
+                    }
+                    Some(_) => {}
+                    None => join_attr = Some(attr.clone()),
+                }
+                let mut this_chain = vec![t0];
+                while p.try_sym('=') {
+                    let next = p.colref()?;
+                    let Some(t) = next.table.clone() else {
+                        bail!("join clause needs table-qualified columns, got {next}");
+                    };
+                    if !next.column.eq_ignore_ascii_case(&attr) {
+                        bail!(
+                            "join attributes differ: {attr} vs {} \
+                             (single-attribute equi-join only)",
+                            next.column
+                        );
+                    }
+                    this_chain.push(t);
+                }
+                chains.push(this_chain);
+            }
+        } else {
+            bail!("expected a comparison or join clause after {first}");
         }
-        chain_tables.push(t);
+        if !p.try_keyword("AND") {
+            break;
+        }
     }
-    if chain_tables.len() != tables.len() {
+    let Some(attr) = join_attr else {
+        bail!("WHERE needs an equi-join clause (t1.attr = t2.attr)");
+    };
+    // AND-ed chains must form ONE connected equi-join class — the engine
+    // runs a single transitive n-way equi-join, so disconnected chains
+    // would silently change the query's meaning. Connectivity is decided
+    // after all chains are collected (clause order must not matter):
+    // absorb chains sharing a table until a fixpoint.
+    let mut chain_tables: Vec<String> = Vec::new();
+    let mut remaining = chains;
+    if !remaining.is_empty() {
+        for t in remaining.remove(0) {
+            if !chain_tables.iter().any(|x| x.eq_ignore_ascii_case(&t)) {
+                chain_tables.push(t);
+            }
+        }
+    }
+    loop {
+        let before = remaining.len();
+        remaining.retain(|chain| {
+            let connected = chain
+                .iter()
+                .any(|t| chain_tables.iter().any(|x| x.eq_ignore_ascii_case(t)));
+            if connected {
+                for t in chain {
+                    if !chain_tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+                        chain_tables.push(t.clone());
+                    }
+                }
+            }
+            !connected
+        });
+        if remaining.is_empty() || remaining.len() == before {
+            break;
+        }
+    }
+    if let Some(stray) = remaining.first() {
+        bail!(
+            "join chains are disconnected: {} does not share a table with \
+             the other chain(s)",
+            stray.join(" = ")
+        );
+    }
+    // dedup within a chain happened above, so every distinct FROM table
+    // must appear (duplicate FROM entries — self-joins — count once)
+    let mut from_distinct: Vec<&String> = Vec::new();
+    for t in &tables {
+        if !from_distinct.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+            from_distinct.push(t);
+        }
+    }
+    if chain_tables.len() != from_distinct.len() {
         bail!(
             "WHERE chain covers {} tables but FROM lists {}",
             chain_tables.len(),
-            tables.len()
+            from_distinct.len()
         );
     }
     for t in &chain_tables {
-        if !tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+        if !known(t) {
             bail!("WHERE references unknown table {t}");
         }
     }
-    for t in &expr_tables {
-        if !tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
-            bail!("SELECT references unknown table {t}");
+    for pred in &predicates {
+        if let Some(t) = &pred.column.table {
+            if !known(t) {
+                bail!("WHERE references unknown table {t}");
+            }
+        }
+    }
+    for a in &aggregates {
+        for term in &a.terms {
+            if let Some(t) = &term.table {
+                if !known(t) {
+                    bail!("SELECT references unknown table {t}");
+                }
+            }
         }
     }
 
-    // budget clauses
+    // ---- GROUP BY
+    let mut group_by: Option<ColumnRef> = None;
+    if p.try_keyword("GROUP") {
+        p.keyword("BY")?;
+        let g = p.colref()?;
+        if let Some(t) = &g.table {
+            if !known(t) {
+                bail!("GROUP BY references unknown table {t}");
+            }
+        }
+        group_by = Some(g);
+    }
+    // bare SELECT items must echo the group key
+    match &group_by {
+        Some(g) => {
+            for e in &echoed {
+                let same_col = e.column.eq_ignore_ascii_case(&g.column);
+                let same_table = match (&e.table, &g.table) {
+                    (Some(a), Some(b)) => a.eq_ignore_ascii_case(b),
+                    _ => true,
+                };
+                if !same_col || !same_table {
+                    bail!("SELECT column {e} is not the GROUP BY column {g}");
+                }
+            }
+        }
+        None => {
+            if let Some(e) = echoed.first() {
+                bail!("SELECT column {e} without GROUP BY");
+            }
+        }
+    }
+
+    // ---- budget clauses
     let mut budget = Budget::unbounded();
     loop {
         if p.try_keyword("WITHIN") {
@@ -242,12 +486,16 @@ pub fn parse(text: &str) -> Result<Query> {
         bail!("trailing tokens after query: {:?}", p.peek());
     }
 
+    let first = aggregates[0].clone();
     Ok(Query {
-        agg,
-        combine,
+        agg: first.func,
+        combine: first.combine,
         tables,
         join_attr: attr,
         budget,
+        aggregates,
+        predicates,
+        group_by,
     })
 }
 
@@ -271,6 +519,9 @@ mod tests {
         let e = q.budget.error.unwrap();
         assert_eq!(e.bound, 0.01);
         assert!((e.confidence - 0.95).abs() < 1e-12);
+        assert_eq!(q.aggregates.len(), 1);
+        assert!(q.predicates.is_empty());
+        assert!(q.group_by.is_none());
     }
 
     #[test]
@@ -293,12 +544,14 @@ mod tests {
         assert_eq!(q.agg, AggFunc::Count);
         assert_eq!(q.combine, CombineOp::Left);
         assert!(q.budget.is_unbounded());
+        assert!(q.aggregates[0].terms.is_empty());
     }
 
     #[test]
     fn single_table_expr() {
         let q = parse("SELECT SUM(tcp.size) FROM tcp, udp WHERE tcp.f = udp.f").unwrap();
         assert_eq!(q.combine, CombineOp::Left);
+        assert_eq!(q.aggregates[0].terms.len(), 1);
     }
 
     #[test]
@@ -317,5 +570,146 @@ mod tests {
     fn case_insensitive_keywords() {
         let q = parse("select sum(a.v + b.v) from a, b where a.k = b.k within 5 seconds").unwrap();
         assert_eq!(q.budget.latency_secs, Some(5.0));
+    }
+
+    // ---- relational grammar ------------------------------------------
+
+    #[test]
+    fn where_predicates_parse_and_push() {
+        let q = parse(
+            "SELECT SUM(a.v + b.v) FROM a, b \
+             WHERE a.k = b.k AND a.x > 5 AND b.y <= 0.25 AND a.z != 3 AND a.w = 7",
+        )
+        .unwrap();
+        assert_eq!(q.join_attr, "k");
+        assert_eq!(q.predicates.len(), 4);
+        assert_eq!(q.predicates[0].to_string(), "a.x > 5");
+        assert_eq!(q.predicates[1].to_string(), "b.y <= 0.25");
+        assert_eq!(q.predicates[2].to_string(), "a.z != 3");
+        assert_eq!(q.predicates[3].to_string(), "a.w = 7");
+        assert!(q.has_relational_features());
+    }
+
+    #[test]
+    fn negative_predicate_literals() {
+        let q = parse(
+            "SELECT SUM(a.v + b.v) FROM a, b \
+             WHERE a.k = b.k AND a.x < -100 AND a.y = -2.5",
+        )
+        .unwrap();
+        assert_eq!(q.predicates[0].literal, -100.0);
+        assert_eq!(q.predicates[1].literal, -2.5);
+        // negative budgets remain rejected
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k WITHIN -5 SECONDS").is_err());
+        // stray '-' elsewhere still errors
+        assert!(parse("SELECT SUM(a.v - b.v) FROM a, b WHERE a.k = b.k").is_err());
+    }
+
+    #[test]
+    fn group_by_and_echoed_key() {
+        let q = parse(
+            "SELECT a.g, SUM(a.v + b.v) FROM a, b WHERE a.k = b.k GROUP BY a.g \
+             WITHIN 10 SECONDS",
+        )
+        .unwrap();
+        assert_eq!(q.group_by.as_ref().unwrap().to_string(), "a.g");
+        assert_eq!(q.budget.latency_secs, Some(10.0));
+
+        // unqualified group key (the acceptance-criteria shape)
+        let q = parse("SELECT g, SUM(a.v + b.v) FROM a, b WHERE a.k = b.k AND a.x > 2 GROUP BY g")
+            .unwrap();
+        assert_eq!(q.group_by.as_ref().unwrap().to_string(), "g");
+        assert_eq!(q.predicates.len(), 1);
+    }
+
+    #[test]
+    fn multiple_aggregates_and_aliases() {
+        let q = parse(
+            "SELECT SUM(a.v + b.v) AS total, AVG(a.v) AS mean_v, COUNT(*) \
+             FROM a, b WHERE a.k = b.k",
+        )
+        .unwrap();
+        assert_eq!(q.aggregates.len(), 3);
+        assert_eq!(q.aggregates[0].alias.as_deref(), Some("total"));
+        assert_eq!(q.aggregates[1].alias.as_deref(), Some("mean_v"));
+        assert_eq!(q.aggregates[1].label(), "mean_v");
+        assert_eq!(q.aggregates[2].label(), "COUNT(*)");
+        // the legacy mirror is the first aggregate
+        assert_eq!(q.agg, AggFunc::Sum);
+        assert_eq!(q.combine, CombineOp::Sum);
+    }
+
+    #[test]
+    fn split_join_chains_with_and() {
+        let q = parse(
+            "SELECT SUM(a.v + b.v + c.v) FROM a, b, c \
+             WHERE a.k = b.k AND b.k = c.k",
+        )
+        .unwrap();
+        assert_eq!(q.tables, vec!["a", "b", "c"]);
+        assert_eq!(q.join_attr, "k");
+
+        // chains that share no table would change the query's meaning
+        // (this engine runs one transitive equi-join class) — rejected
+        let err = parse(
+            "SELECT SUM(a.v + b.v + c.v + d.v) FROM a, b, c, d \
+             WHERE a.k = b.k AND c.k = d.k",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err:#}");
+
+        // ...but connectivity must not depend on clause order: a later
+        // clause may supply the link
+        let q = parse(
+            "SELECT SUM(a.v + b.v + c.v + d.v) FROM a, b, c, d \
+             WHERE a.k = b.k AND c.k = d.k AND b.k = c.k",
+        )
+        .unwrap();
+        assert_eq!(q.tables.len(), 4);
+    }
+
+    #[test]
+    fn legacy_fingerprints_are_stable() {
+        // pre-relational queries must keep their exact fingerprint so
+        // persisted feedback sigmas stay valid
+        let q = parse("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k").unwrap();
+        assert_eq!(q.fingerprint(), "SUM:Sum:a,b:k");
+        let q = parse("SELECT COUNT(*) FROM a, b WHERE a.k = b.k").unwrap();
+        assert_eq!(q.fingerprint(), "COUNT:Left:a,b:k");
+    }
+
+    #[test]
+    fn self_join_duplicate_from_entries() {
+        // FROM a, a joins a dataset with itself; the chain covers the one
+        // distinct table
+        let q = parse("SELECT SUM(a.v + a.v) FROM a, a WHERE a.k = a.k").unwrap();
+        assert_eq!(q.tables, vec!["a", "a"]);
+        assert_eq!(q.join_attr, "k");
+    }
+
+    #[test]
+    fn rejects_malformed_relational() {
+        // bare SELECT column without GROUP BY
+        assert!(parse("SELECT g, SUM(a.v) FROM a, b WHERE a.k = b.k").is_err());
+        // SELECT column that is not the group key
+        assert!(
+            parse("SELECT h, SUM(a.v) FROM a, b WHERE a.k = b.k GROUP BY g").is_err()
+        );
+        // GROUP BY on an unknown table
+        assert!(
+            parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k GROUP BY z.g").is_err()
+        );
+        // predicate on an unknown table
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k AND z.x > 1").is_err());
+        // split chains with different attributes
+        assert!(parse("SELECT SUM(a.v) FROM a, b, c WHERE a.k = b.k AND b.j = c.j").is_err());
+        // predicate-only WHERE (no join clause)
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.x > 1").is_err());
+        // bare columns in a join clause
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE k = b.k").is_err());
+        // dangling comparison
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k AND a.x >").is_err());
+        // '!' without '='
+        assert!(parse("SELECT SUM(a.v) FROM a, b WHERE a.k = b.k AND a.x ! 3").is_err());
     }
 }

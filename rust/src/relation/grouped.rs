@@ -1,0 +1,277 @@
+//! Per-group error bounds: the grouped result assembly that turns the
+//! kernel's per-stratum aggregates into one `estimate ± CI` per group.
+//!
+//! The lowering pass made every stratum a composite `(join key, group)`
+//! pair, so a group's estimate is simply the stratified estimator run
+//! over *its* strata — the same CLT / Horvitz-Thompson machinery as the
+//! ungrouped total, restricted to the group's slice. Strata are visited
+//! in ascending composite-id order, so every f64 accumulation is
+//! reproducible run-to-run and thread-count independent.
+
+use super::lowering::GroupDict;
+use super::Value;
+use crate::query::AggFunc;
+use crate::stats::{
+    clt_avg, clt_stdev, clt_sum, exact_count, horvitz_thompson_sum, ApproxResult, EstimatorKind,
+    StratumAgg,
+};
+use std::collections::HashMap;
+
+/// Estimator dispatch over already-sorted stratum slices — shared by the
+/// engine's scalar path ([`crate::coordinator`]) and the grouped assembly.
+pub fn estimate_slice(
+    func: AggFunc,
+    sampled: bool,
+    estimator: EstimatorKind,
+    strata: &[StratumAgg],
+    draws: &[f64],
+    confidence: f64,
+) -> ApproxResult {
+    match (func, sampled, estimator) {
+        (AggFunc::Count, _, _) => exact_count(strata, confidence),
+        (AggFunc::Sum, true, EstimatorKind::HorvitzThompson) => {
+            horvitz_thompson_sum(strata, draws, confidence)
+        }
+        (AggFunc::Sum, _, _) => clt_sum(strata, confidence),
+        (AggFunc::Avg, _, _) => clt_avg(strata, confidence),
+        (AggFunc::Stdev, _, _) => clt_stdev(strata, confidence),
+    }
+}
+
+/// Per-group sampling ledger: what the estimate is based on.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GroupLedger {
+    /// Composite (join key, group) strata contributing to this group.
+    pub strata: u64,
+    /// Σ B_i over the group's strata — the group's exact join-output
+    /// cardinality (known from the filter stage even when sampled).
+    pub population: f64,
+    /// Σ b_i samples the estimate is based on.
+    pub samples: u64,
+}
+
+/// One group's estimate with its confidence interval and ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupEstimate {
+    pub group: Value,
+    pub result: ApproxResult,
+    pub ledger: GroupLedger,
+}
+
+/// One aggregate expression's per-group estimates, groups in sorted order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupedAggregate {
+    /// The aggregate's display label (alias or rendered call).
+    pub label: String,
+    pub func: AggFunc,
+    pub groups: Vec<GroupEstimate>,
+}
+
+impl GroupedAggregate {
+    /// The estimate for one group value, if present.
+    pub fn group(&self, v: &Value) -> Option<&GroupEstimate> {
+        self.groups.iter().find(|g| &g.group == v)
+    }
+}
+
+/// The grouped half of a [`crate::coordinator::QueryOutcome`]: per-group
+/// estimates for every aggregate of the SELECT list. Ungrouped relational
+/// queries carry a single `*` group per aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupedApproxResult {
+    /// The GROUP BY column; `None` for ungrouped multi-aggregate queries.
+    pub group_column: Option<String>,
+    pub aggregates: Vec<GroupedAggregate>,
+}
+
+impl GroupedApproxResult {
+    pub fn aggregate(&self, label: &str) -> Option<&GroupedAggregate> {
+        self.aggregates.iter().find(|a| a.label == label)
+    }
+}
+
+/// Assemble one aggregate's per-group estimates from the kernel's
+/// composite strata.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_grouped(
+    dict: &GroupDict,
+    label: String,
+    func: AggFunc,
+    sampled: bool,
+    estimator: EstimatorKind,
+    strata: &HashMap<u64, StratumAgg>,
+    draws: &HashMap<u64, f64>,
+    confidence: f64,
+) -> GroupedAggregate {
+    let mut groups = Vec::new();
+    // one pass over the dictionary; BTreeMap keeps groups sorted
+    for (gv, ids) in dict.ids_by_group() {
+        // ascending composite ids -> deterministic accumulation order
+        let mut svec = Vec::new();
+        let mut dvec = Vec::new();
+        for id in ids {
+            if let Some(s) = strata.get(&id) {
+                svec.push(*s);
+                dvec.push(draws.get(&id).copied().unwrap_or(0.0));
+            }
+        }
+        let result = estimate_slice(func, sampled, estimator, &svec, &dvec, confidence);
+        let ledger = GroupLedger {
+            strata: svec.len() as u64,
+            population: svec.iter().map(|s| s.population).sum(),
+            samples: svec.iter().map(|s| s.count as u64).sum(),
+        };
+        groups.push(GroupEstimate {
+            group: gv,
+            result,
+            ledger,
+        });
+    }
+    GroupedAggregate {
+        label,
+        func,
+        groups,
+    }
+}
+
+/// The single-`*`-group shape for ungrouped relational aggregates.
+pub fn assemble_ungrouped(
+    label: String,
+    func: AggFunc,
+    result: ApproxResult,
+    strata: &HashMap<u64, StratumAgg>,
+) -> GroupedAggregate {
+    let ledger = GroupLedger {
+        strata: strata.len() as u64,
+        population: strata.values().map(|s| s.population).sum(),
+        samples: strata.values().map(|s| s.count as u64).sum(),
+    };
+    GroupedAggregate {
+        label,
+        func,
+        groups: vec![GroupEstimate {
+            group: Value::Str("*".into()),
+            result,
+            ledger,
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dict() -> GroupDict {
+        GroupDict {
+            column: "g".into(),
+            entries: vec![
+                (1, Value::Int(10)),
+                (1, Value::Int(20)),
+                (2, Value::Int(10)),
+            ],
+        }
+    }
+
+    fn stratum(population: f64, values: &[f64]) -> StratumAgg {
+        let mut s = StratumAgg {
+            population,
+            ..Default::default()
+        };
+        for &v in values {
+            s.push(v);
+        }
+        s
+    }
+
+    #[test]
+    fn exact_grouped_sums() {
+        // full samples (b == B): CLT bound is 0 and the sum is exact
+        let mut strata = HashMap::new();
+        strata.insert(0u64, stratum(2.0, &[1.0, 2.0]));
+        strata.insert(1u64, stratum(1.0, &[5.0]));
+        strata.insert(2u64, stratum(2.0, &[10.0, 10.0]));
+        let agg = assemble_grouped(
+            &dict(),
+            "SUM".into(),
+            AggFunc::Sum,
+            false,
+            EstimatorKind::Clt,
+            &strata,
+            &HashMap::new(),
+            0.95,
+        );
+        assert_eq!(agg.groups.len(), 2);
+        let g10 = agg.group(&Value::Int(10)).unwrap();
+        assert_eq!(g10.result.estimate, 23.0); // ids 0 and 2
+        assert_eq!(g10.result.error_bound, 0.0);
+        assert_eq!(g10.ledger.strata, 2);
+        assert_eq!(g10.ledger.population, 4.0);
+        let g20 = agg.group(&Value::Int(20)).unwrap();
+        assert_eq!(g20.result.estimate, 5.0);
+        assert_eq!(g20.ledger.samples, 1);
+    }
+
+    #[test]
+    fn sampled_group_scales_by_population() {
+        // stratum of 10 edges, 2 sampled with mean 3 -> estimate 30
+        let mut strata = HashMap::new();
+        strata.insert(0u64, stratum(10.0, &[2.0, 4.0]));
+        let agg = assemble_grouped(
+            &dict(),
+            "SUM".into(),
+            AggFunc::Sum,
+            true,
+            EstimatorKind::Clt,
+            &strata,
+            &HashMap::new(),
+            0.95,
+        );
+        let g10 = agg.group(&Value::Int(10)).unwrap();
+        assert_eq!(g10.result.estimate, 30.0);
+        assert!(g10.result.error_bound > 0.0);
+        // group 20 has no surviving strata -> zero estimate, zero ledger
+        let g20 = agg.group(&Value::Int(20)).unwrap();
+        assert_eq!(g20.result.estimate, 0.0);
+        assert_eq!(g20.ledger.strata, 0);
+    }
+
+    #[test]
+    fn ht_grouped_uses_draws() {
+        let mut strata = HashMap::new();
+        // dedup sample of 1 distinct edge from a 1-edge stratum
+        strata.insert(1u64, stratum(1.0, &[7.0]));
+        let mut draws = HashMap::new();
+        draws.insert(1u64, 3.0);
+        let agg = assemble_grouped(
+            &dict(),
+            "SUM".into(),
+            AggFunc::Sum,
+            true,
+            EstimatorKind::HorvitzThompson,
+            &strata,
+            &draws,
+            0.95,
+        );
+        let g20 = agg.group(&Value::Int(20)).unwrap();
+        // pi = 1 for B=1 -> estimate exactly 7
+        assert_eq!(g20.result.estimate, 7.0);
+    }
+
+    #[test]
+    fn ungrouped_wrapper_shape() {
+        let mut strata = HashMap::new();
+        strata.insert(5u64, stratum(2.0, &[1.0, 1.0]));
+        let res = estimate_slice(
+            AggFunc::Sum,
+            false,
+            EstimatorKind::Clt,
+            &[strata[&5u64]],
+            &[0.0],
+            0.95,
+        );
+        let agg = assemble_ungrouped("SUM(a.v)".into(), AggFunc::Sum, res, &strata);
+        assert_eq!(agg.groups.len(), 1);
+        assert_eq!(agg.groups[0].group, Value::Str("*".into()));
+        assert_eq!(agg.groups[0].ledger.population, 2.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! The logical plan above the join kernel:
+//! `scan → filter(Predicate) → equi-join(attr) → group_by → aggregate`.
+//!
+//! The plan is deliberately small — it captures exactly the query shapes
+//! the paper's case studies use (grouped, filtered aggregations over an
+//! n-way single-attribute equi-join) and nothing the kernel cannot
+//! execute. [`super::lowering`] turns it into kernel inputs.
+
+use crate::join::CombineOp;
+use crate::query::{AggFunc, Query};
+use std::fmt;
+
+/// A (possibly table-qualified) column reference. Unqualified references
+/// resolve at lowering time by searching every scanned relation's schema
+/// (ambiguity is an error).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColumnRef {
+    pub table: Option<String>,
+    pub column: String,
+}
+
+impl ColumnRef {
+    pub fn qualified(table: impl Into<String>, column: impl Into<String>) -> Self {
+        Self {
+            table: Some(table.into()),
+            column: column.into(),
+        }
+    }
+
+    pub fn bare(column: impl Into<String>) -> Self {
+        Self {
+            table: None,
+            column: column.into(),
+        }
+    }
+}
+
+impl fmt::Display for ColumnRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.table {
+            Some(t) => write!(f, "{t}.{}", self.column),
+            None => write!(f, "{}", self.column),
+        }
+    }
+}
+
+/// Comparison operators WHERE predicates support.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+        }
+    }
+
+    pub fn eval(&self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ne => lhs != rhs,
+        }
+    }
+}
+
+/// One pushable selection predicate: `column <op> literal`. Predicates
+/// compare numerically; the lowering pass rejects string columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Predicate {
+    pub column: ColumnRef,
+    pub op: CmpOp,
+    pub literal: f64,
+}
+
+impl fmt::Display for Predicate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {} {}", self.column, self.op.symbol(), self.literal)
+    }
+}
+
+/// One aggregate expression of the SELECT list:
+/// `FUNC(t1.c1 [+|*] t2.c2 ...) [AS alias]`, or `COUNT(*)` (empty terms).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggExpr {
+    pub func: AggFunc,
+    /// How the per-input values combine inside the aggregate.
+    pub combine: CombineOp,
+    /// The value column of each participating table. Tables absent from
+    /// the expression contribute the combine op's neutral element.
+    pub terms: Vec<ColumnRef>,
+    pub alias: Option<String>,
+}
+
+impl AggExpr {
+    /// COUNT(*) — population-exact, values are markers.
+    pub fn count_star() -> Self {
+        Self {
+            func: AggFunc::Count,
+            combine: CombineOp::Left,
+            terms: Vec::new(),
+            alias: None,
+        }
+    }
+
+    /// The display label: the alias when given, else the rendered call.
+    pub fn label(&self) -> String {
+        if let Some(a) = &self.alias {
+            return a.clone();
+        }
+        self.render()
+    }
+
+    /// The rendered call, e.g. `SUM(a.v + b.v)`.
+    pub fn render(&self) -> String {
+        if self.terms.is_empty() {
+            return format!("{}(*)", self.func.name());
+        }
+        let sep = match self.combine {
+            CombineOp::Product => " * ",
+            _ => " + ",
+        };
+        format!(
+            "{}({})",
+            self.func.name(),
+            self.terms
+                .iter()
+                .map(|t| t.to_string())
+                .collect::<Vec<_>>()
+                .join(sep)
+        )
+    }
+}
+
+impl fmt::Display for AggExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.render())?;
+        if let Some(a) = &self.alias {
+            write!(f, " AS {a}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The logical plan of one relational query. Built from a parsed
+/// [`Query`]; consumed by [`super::lowering::lower`].
+#[derive(Clone, Debug)]
+pub struct LogicalPlan {
+    /// Scanned relations, in FROM order.
+    pub tables: Vec<String>,
+    /// The single equi-join attribute (the paper's A).
+    pub join_attr: String,
+    /// Selection predicates, pushed below the join at lowering time.
+    pub predicates: Vec<Predicate>,
+    /// GROUP BY column, if any.
+    pub group_by: Option<ColumnRef>,
+    /// Aggregate expressions of the SELECT list, in order.
+    pub aggregates: Vec<AggExpr>,
+}
+
+impl LogicalPlan {
+    pub fn from_query(query: &Query) -> Self {
+        Self {
+            tables: query.tables.clone(),
+            join_attr: query.join_attr.clone(),
+            predicates: query.predicates.clone(),
+            group_by: query.group_by.clone(),
+            aggregates: query.aggregates.clone(),
+        }
+    }
+
+    /// EXPLAIN-style rendering of the operator tree, leaves first.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            let preds: Vec<String> = self
+                .predicates
+                .iter()
+                .filter(|p| p.column.table.as_deref() == Some(t.as_str()))
+                .map(|p| p.to_string())
+                .collect();
+            if preds.is_empty() {
+                out.push_str(&format!("    scan {t}\n"));
+            } else {
+                out.push_str(&format!("    scan {t} -> filter({})\n", preds.join(" AND ")));
+            }
+        }
+        out.push_str(&format!(
+            "    equi-join on {} ({} inputs)\n",
+            self.join_attr,
+            self.tables.len()
+        ));
+        if let Some(g) = &self.group_by {
+            out.push_str(&format!("    group_by {g}\n"));
+        }
+        out.push_str(&format!(
+            "    aggregate [{}]\n",
+            self.aggregates
+                .iter()
+                .map(|a| a.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_ops_evaluate() {
+        assert!(CmpOp::Gt.eval(2.0, 1.0));
+        assert!(!CmpOp::Gt.eval(1.0, 1.0));
+        assert!(CmpOp::Ge.eval(1.0, 1.0));
+        assert!(CmpOp::Lt.eval(0.0, 1.0));
+        assert!(CmpOp::Le.eval(1.0, 1.0));
+        assert!(CmpOp::Eq.eval(3.0, 3.0));
+        assert!(CmpOp::Ne.eval(3.0, 4.0));
+    }
+
+    #[test]
+    fn display_shapes() {
+        let p = Predicate {
+            column: ColumnRef::qualified("a", "x"),
+            op: CmpOp::Gt,
+            literal: 5.0,
+        };
+        assert_eq!(p.to_string(), "a.x > 5");
+        let e = AggExpr {
+            func: AggFunc::Sum,
+            combine: CombineOp::Sum,
+            terms: vec![ColumnRef::qualified("a", "v"), ColumnRef::qualified("b", "v")],
+            alias: Some("total".into()),
+        };
+        assert_eq!(e.render(), "SUM(a.v + b.v)");
+        assert_eq!(e.label(), "total");
+        assert_eq!(AggExpr::count_star().render(), "COUNT(*)");
+        assert_eq!(ColumnRef::bare("g").to_string(), "g");
+    }
+}

@@ -1,0 +1,762 @@
+//! Lowering: from a [`LogicalPlan`] over typed [`Relation`]s down to the
+//! bit-deterministic (key64, f64) join kernel.
+//!
+//! The pass does three things, all *before* a byte moves:
+//!
+//! 1. **Predicate pushdown** — WHERE predicates over non-join columns are
+//!    evaluated against the scanned rows first, so the Bloom sketching
+//!    stage sees post-filter keys only (fewer keys → smaller, tighter
+//!    join filter, fewer shuffled survivors).
+//! 2. **Projection** — each input is projected to the kernel's
+//!    `(key64, value)` record per aggregate expression. Tables absent
+//!    from an expression contribute the combine op's neutral element.
+//! 3. **Group encoding** — GROUP BY maps onto the existing per-stratum
+//!    machinery: the stratum key becomes a dense composite id for the
+//!    pair `(join key, group value)`. The grouping table keys each row by
+//!    its own group; every other input is replicated once per group its
+//!    join key co-occurs with (usually 1 — the replication factor is the
+//!    number of distinct groups per join key). Rows whose key never
+//!    appears in the grouping input are dropped at lowering time — a
+//!    semi-join prefilter, since they cannot join anyway. The kernel then
+//!    samples *per (join key, group)* stratum, which is exactly what
+//!    per-group CLT / Horvitz-Thompson confidence intervals need.
+//!
+//! The dictionary is built from sorted maps, so composite ids — and with
+//! them every downstream sampling decision — are bit-identical for any
+//! thread count.
+
+use super::logical::{AggExpr, ColumnRef, LogicalPlan, Predicate};
+use super::{ColumnType, Relation, Value};
+use crate::data::{Dataset, Record};
+use crate::join::{CombineOp, JoinError};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The composite-stratum dictionary of a grouped query: dense stratum id
+/// → (join key, group value), in sorted (key, group) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupDict {
+    /// Display name of the group column.
+    pub column: String,
+    /// entries[id] = (join key, group value).
+    pub entries: Vec<(u64, Value)>,
+}
+
+impl GroupDict {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The group value of one composite stratum id.
+    pub fn group_of(&self, id: u64) -> Option<&Value> {
+        self.entries.get(id as usize).map(|(_, g)| g)
+    }
+
+    /// Sorted distinct group values.
+    pub fn group_values(&self) -> Vec<Value> {
+        let set: BTreeSet<&Value> = self.entries.iter().map(|(_, g)| g).collect();
+        set.into_iter().cloned().collect()
+    }
+
+    /// Composite ids belonging to one group, ascending.
+    pub fn ids_of_group(&self, group: &Value) -> Vec<u64> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, g))| g == group)
+            .map(|(i, _)| i as u64)
+            .collect()
+    }
+
+    /// All groups with their composite ids (ascending), in one pass —
+    /// what per-group assembly iterates so high-cardinality GROUP BY
+    /// stays O(strata), not O(groups × strata).
+    pub fn ids_by_group(&self) -> BTreeMap<Value, Vec<u64>> {
+        let mut out: BTreeMap<Value, Vec<u64>> = BTreeMap::new();
+        for (i, (_, g)) in self.entries.iter().enumerate() {
+            out.entry(g.clone()).or_default().push(i as u64);
+        }
+        out
+    }
+}
+
+/// One pushed-down predicate, with its measured selectivity.
+#[derive(Clone, Debug)]
+pub struct PushedPredicate {
+    pub table: String,
+    pub predicate: String,
+    pub rows_before: u64,
+    pub rows_after: u64,
+}
+
+/// One input's projection onto the kernel record.
+#[derive(Clone, Debug)]
+pub struct ProjectionInfo {
+    pub table: String,
+    /// What the kernel key encodes (`k` or `(k, g) composite`).
+    pub key: String,
+    /// The first aggregate's value expression for this input.
+    pub value: String,
+    pub rows: u64,
+}
+
+/// GROUP BY lowering accounting.
+#[derive(Clone, Debug)]
+pub struct GroupLoweringInfo {
+    pub column: String,
+    pub groups: u64,
+    /// Composite (join key, group) strata.
+    pub strata: u64,
+    /// Extra records created by replicating non-grouping inputs.
+    pub replicated_rows: u64,
+    /// Records dropped because their key never joins the grouping input.
+    pub dropped_rows: u64,
+}
+
+/// Everything `JoinPlan::explain()` shows about the relational lowering.
+#[derive(Clone, Debug)]
+pub struct LoweringInfo {
+    /// The logical operator tree, rendered.
+    pub plan: String,
+    pub pushed: Vec<PushedPredicate>,
+    pub projections: Vec<ProjectionInfo>,
+    pub group: Option<GroupLoweringInfo>,
+    pub aggregates: Vec<String>,
+}
+
+impl LoweringInfo {
+    /// The explain section appended by [`crate::join::JoinPlan::explain`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("  relational lowering:\n");
+        out.push_str(&self.plan);
+        for p in &self.pushed {
+            out.push_str(&format!(
+                "    pushed down below join: {} [{}] ({} -> {} rows)\n",
+                p.predicate, p.table, p.rows_before, p.rows_after
+            ));
+        }
+        for pr in &self.projections {
+            out.push_str(&format!(
+                "    kernel input {}: key={} value={} ({} records)\n",
+                pr.table, pr.key, pr.value, pr.rows
+            ));
+        }
+        if let Some(g) = &self.group {
+            out.push_str(&format!(
+                "    group_by {}: {} groups -> {} composite strata \
+                 (+{} replicated, -{} non-joining records)\n",
+                g.column, g.groups, g.strata, g.replicated_rows, g.dropped_rows
+            ));
+        }
+        if self.aggregates.len() > 1 {
+            out.push_str(&format!(
+                "    aggregates: {}\n",
+                self.aggregates.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+/// The lowered query: one kernel input set per aggregate expression
+/// (identical keys, per-expression values), the effective kernel combine
+/// op per aggregate, and the group dictionary when grouped.
+#[derive(Clone, Debug)]
+pub struct LoweredQuery {
+    pub per_aggregate: Vec<Vec<Dataset>>,
+    /// Effective kernel combine op per aggregate (single-column terms
+    /// lower to Sum-with-neutral-fill so any table can own the column).
+    pub ops: Vec<CombineOp>,
+    pub groups: Option<GroupDict>,
+    pub info: LoweringInfo,
+}
+
+fn runtime_err(msg: String) -> JoinError {
+    JoinError::Runtime(msg)
+}
+
+/// Resolve a possibly-bare column against the scanned relations: returns
+/// (table index, column index). Bare references match strict schema
+/// columns only and must be unambiguous.
+fn resolve_column(
+    col: &ColumnRef,
+    tables: &[String],
+    relations: &[&Relation],
+    join_attr: &str,
+) -> Result<(usize, usize), JoinError> {
+    if let Some(t) = &col.table {
+        let ti = tables
+            .iter()
+            .position(|x| x.eq_ignore_ascii_case(t))
+            .ok_or_else(|| runtime_err(format!("unknown table {t} in {col}")))?;
+        let ci = relations[ti]
+            .resolve(&col.column, join_attr)
+            .ok_or_else(|| {
+                runtime_err(format!(
+                    "column {col} not found (table {} has: {})",
+                    tables[ti],
+                    relations[ti].schema.describe()
+                ))
+            })?;
+        return Ok((ti, ci));
+    }
+    let mut hits: Vec<(usize, usize)> = Vec::new();
+    for (ti, r) in relations.iter().enumerate() {
+        if let Some(ci) = r.schema.col(&col.column) {
+            hits.push((ti, ci));
+        }
+    }
+    match hits.len() {
+        1 => Ok(hits[0]),
+        0 => Err(runtime_err(format!(
+            "column {col} not found in any scanned relation"
+        ))),
+        _ => Err(runtime_err(format!(
+            "column {col} is ambiguous (matches {})",
+            hits.iter()
+                .map(|&(ti, _)| tables[ti].clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))),
+    }
+}
+
+/// Canonicalize a group cell by its column type so `Key(5)` and `Int(5)`
+/// land in the same group.
+fn canon_group(cell: &Value, ty: ColumnType) -> Value {
+    match ty {
+        ColumnType::Key => cell
+            .as_key()
+            .map(Value::Key)
+            .unwrap_or_else(|| cell.clone()),
+        ColumnType::Int => match cell.as_key() {
+            Some(k) => Value::Int(k as i64),
+            None => cell.clone(),
+        },
+        _ => cell.clone(),
+    }
+}
+
+/// Lower a logical plan over `relations` (FROM order, borrowed — the
+/// pass only reads them) onto kernel inputs.
+pub fn lower(
+    plan: &LogicalPlan,
+    relations: &[&Relation],
+    partitions: usize,
+) -> Result<LoweredQuery, JoinError> {
+    assert_eq!(plan.tables.len(), relations.len());
+    assert!(partitions > 0);
+    let n = relations.len();
+    if plan.aggregates.is_empty() {
+        return Err(runtime_err("query has no aggregates".into()));
+    }
+
+    // join-key column per input
+    let mut key_cols = Vec::with_capacity(n);
+    for (ti, r) in relations.iter().enumerate() {
+        let ci = r.resolve(&plan.join_attr, &plan.join_attr).ok_or_else(|| {
+            runtime_err(format!(
+                "join attribute {} not found in table {} ({})",
+                plan.join_attr,
+                plan.tables[ti],
+                r.schema.describe()
+            ))
+        })?;
+        let ty = r.schema.columns[ci].ty;
+        if !matches!(ty, ColumnType::Key | ColumnType::Int) {
+            return Err(runtime_err(format!(
+                "join attribute {}.{} must be a KEY/INT column, is {}",
+                plan.tables[ti],
+                plan.join_attr,
+                ty.name()
+            )));
+        }
+        key_cols.push(ci);
+    }
+
+    // ---- 1. predicate pushdown: filter each scan before anything else
+    let mut per_table_preds: Vec<Vec<(usize, &Predicate)>> = vec![Vec::new(); n];
+    for p in &plan.predicates {
+        let (ti, ci) = resolve_column(&p.column, &plan.tables, relations, &plan.join_attr)?;
+        if relations[ti].schema.columns[ci].ty == ColumnType::Str {
+            return Err(runtime_err(format!(
+                "predicate {p} compares a STR column numerically"
+            )));
+        }
+        per_table_preds[ti].push((ci, p));
+    }
+    let mut filtered: Vec<Vec<&super::Row>> = Vec::with_capacity(n);
+    let mut pushed = Vec::new();
+    for (ti, r) in relations.iter().enumerate() {
+        let rows_before = r.len();
+        let keep: Vec<&super::Row> = r
+            .iter()
+            .filter(|row| {
+                per_table_preds[ti].iter().all(|&(ci, p)| {
+                    row[ci]
+                        .as_f64()
+                        .map(|v| p.op.eval(v, p.literal))
+                        .unwrap_or(false)
+                })
+            })
+            .collect();
+        for &(_, p) in &per_table_preds[ti] {
+            pushed.push(PushedPredicate {
+                table: plan.tables[ti].clone(),
+                predicate: p.to_string(),
+                rows_before,
+                rows_after: keep.len() as u64,
+            });
+        }
+        filtered.push(keep);
+    }
+
+    // ---- 3a. group dictionary (built before projection: every input's
+    // stratum key depends on it)
+    struct GroupState {
+        /// FROM index of the grouping table.
+        table: usize,
+        /// Column index of the group key within it.
+        col: usize,
+        ty: ColumnType,
+        dict: GroupDict,
+        /// (join key, group value) -> composite stratum id.
+        ids: BTreeMap<(u64, Value), u64>,
+    }
+    let mut group_state: Option<GroupState> = None;
+    let mut replicated_rows = 0u64;
+    let mut dropped_rows = 0u64;
+    if let Some(g) = &plan.group_by {
+        let (gt, gc) = resolve_column(g, &plan.tables, relations, &plan.join_attr)?;
+        let gty = relations[gt].schema.columns[gc].ty;
+        // join key -> distinct groups, in sorted order
+        let mut by_key: BTreeMap<u64, BTreeSet<Value>> = BTreeMap::new();
+        for row in &filtered[gt] {
+            let Some(k) = row[key_cols[gt]].as_key() else {
+                return Err(runtime_err(format!(
+                    "join key {}.{} has a non-integral value",
+                    plan.tables[gt], plan.join_attr
+                )));
+            };
+            by_key
+                .entry(k)
+                .or_default()
+                .insert(canon_group(&row[gc], gty));
+        }
+        let mut entries = Vec::new();
+        let mut ids = BTreeMap::new();
+        for (k, groups) in &by_key {
+            for gv in groups {
+                ids.insert((*k, gv.clone()), entries.len() as u64);
+                entries.push((*k, gv.clone()));
+            }
+        }
+        group_state = Some(GroupState {
+            table: gt,
+            col: gc,
+            ty: gty,
+            dict: GroupDict {
+                column: g.to_string(),
+                entries,
+            },
+            ids,
+        });
+    }
+
+    // ---- 2 + 3b. project each input per aggregate expression
+    let mut per_aggregate = Vec::with_capacity(plan.aggregates.len());
+    let mut ops = Vec::with_capacity(plan.aggregates.len());
+    let mut projections: Vec<ProjectionInfo> = Vec::new();
+    for (ai, agg) in plan.aggregates.iter().enumerate() {
+        let (op, fill) = effective_op(agg);
+        // value column per input (None -> neutral fill)
+        let mut value_cols: Vec<Option<usize>> = vec![None; n];
+        for term in &agg.terms {
+            let (ti, ci) =
+                resolve_column(term, &plan.tables, relations, &plan.join_attr)?;
+            if value_cols[ti].is_some() {
+                return Err(runtime_err(format!(
+                    "aggregate {} references table {} twice",
+                    agg.render(),
+                    plan.tables[ti]
+                )));
+            }
+            value_cols[ti] = Some(ci);
+        }
+        let mut datasets = Vec::with_capacity(n);
+        for ti in 0..n {
+            let r = &relations[ti];
+            let kc = key_cols[ti];
+            let mut records = Vec::with_capacity(filtered[ti].len());
+            for row in &filtered[ti] {
+                let Some(k) = row[kc].as_key() else {
+                    return Err(runtime_err(format!(
+                        "join key {}.{} has a non-integral value",
+                        plan.tables[ti], plan.join_attr
+                    )));
+                };
+                let v = match value_cols[ti] {
+                    Some(ci) => row[ci].as_f64().ok_or_else(|| {
+                        runtime_err(format!(
+                            "aggregate {} reads non-numeric column {}.{}",
+                            agg.render(),
+                            plan.tables[ti],
+                            r.schema.columns[ci].name
+                        ))
+                    })?,
+                    None => fill,
+                };
+                match &group_state {
+                    Some(gs) if gs.table == ti => {
+                        let gv = canon_group(&row[gs.col], gs.ty);
+                        // the dictionary was built from exactly these rows
+                        let id = gs.ids[&(k, gv)];
+                        records.push(Record::new(id, v));
+                    }
+                    Some(gs) => {
+                        let ids = &gs.ids;
+                        // replicate per group this key co-occurs with;
+                        // keys absent from the grouping input cannot join
+                        use std::ops::Bound;
+                        let lo = Bound::Included((k, Value::Key(0)));
+                        let hi = match k.checked_add(1) {
+                            Some(next) => Bound::Excluded((next, Value::Key(0))),
+                            None => Bound::Unbounded,
+                        };
+                        let mut hit = false;
+                        for (&(ik, _), &id) in ids.range((lo, hi)) {
+                            debug_assert_eq!(ik, k);
+                            if hit && ai == 0 {
+                                replicated_rows += 1;
+                            }
+                            hit = true;
+                            records.push(Record::new(id, v));
+                        }
+                        if !hit && ai == 0 {
+                            dropped_rows += 1;
+                        }
+                    }
+                    None => records.push(Record::new(k, v)),
+                }
+            }
+            if ai == 0 {
+                projections.push(ProjectionInfo {
+                    table: plan.tables[ti].clone(),
+                    key: match &plan.group_by {
+                        Some(g) => format!("({}, {g}) composite", plan.join_attr),
+                        None => plan.join_attr.clone(),
+                    },
+                    value: match value_cols[ti] {
+                        Some(ci) => {
+                            format!("{}.{}", plan.tables[ti], r.schema.columns[ci].name)
+                        }
+                        None => fill.to_string(),
+                    },
+                    rows: records.len() as u64,
+                });
+            }
+            datasets.push(Dataset::from_records_unpartitioned(
+                plan.tables[ti].clone(),
+                records,
+                partitions,
+                r.row_bytes,
+            ));
+        }
+        per_aggregate.push(datasets);
+        ops.push(op);
+    }
+
+    let (groups, group_info) = match group_state {
+        Some(gs) => {
+            let info = GroupLoweringInfo {
+                column: gs.dict.column.clone(),
+                groups: gs.dict.group_values().len() as u64,
+                strata: gs.dict.len() as u64,
+                replicated_rows,
+                dropped_rows,
+            };
+            (Some(gs.dict), Some(info))
+        }
+        None => (None, None),
+    };
+
+    let info = LoweringInfo {
+        plan: plan.render(),
+        pushed,
+        projections,
+        group: group_info,
+        aggregates: plan.aggregates.iter().map(|a| a.label()).collect(),
+    };
+
+    Ok(LoweredQuery {
+        per_aggregate,
+        ops,
+        groups,
+        info,
+    })
+}
+
+/// The kernel combine op an aggregate expression lowers to, plus the
+/// neutral fill value for inputs absent from the expression. Single-term
+/// expressions lower to Sum-with-0-fill so *any* table can own the
+/// column (legacy `CombineOp::Left` only reads input 0).
+fn effective_op(agg: &AggExpr) -> (CombineOp, f64) {
+    if agg.terms.is_empty() {
+        // COUNT(*) — values are markers, the estimate is population-based
+        return (CombineOp::Left, 1.0);
+    }
+    match agg.combine {
+        CombineOp::Product => (CombineOp::Product, 1.0),
+        _ => (CombineOp::Sum, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::AggFunc;
+    use crate::relation::{CmpOp, ColumnType, Schema};
+
+    fn rel_a() -> Relation {
+        // k, g, v, x
+        let schema = Schema::new(vec![
+            ("k", ColumnType::Key),
+            ("g", ColumnType::Int),
+            ("v", ColumnType::Float),
+            ("x", ColumnType::Float),
+        ]);
+        let rows = vec![
+            vec![Value::Key(1), Value::Int(10), Value::Float(1.0), Value::Float(5.0)],
+            vec![Value::Key(1), Value::Int(20), Value::Float(2.0), Value::Float(1.0)],
+            vec![Value::Key(2), Value::Int(10), Value::Float(3.0), Value::Float(9.0)],
+            vec![Value::Key(3), Value::Int(30), Value::Float(4.0), Value::Float(9.0)],
+        ];
+        Relation::new("a", schema, rows, 2).unwrap()
+    }
+
+    fn rel_b() -> Relation {
+        let schema = Schema::new(vec![("k", ColumnType::Key), ("w", ColumnType::Float)]);
+        let rows = vec![
+            vec![Value::Key(1), Value::Float(10.0)],
+            vec![Value::Key(2), Value::Float(20.0)],
+            vec![Value::Key(2), Value::Float(30.0)],
+            vec![Value::Key(9), Value::Float(99.0)],
+        ];
+        Relation::new("b", schema, rows, 2).unwrap()
+    }
+
+    /// Lower over fresh rel_a/rel_b (lower borrows its relations).
+    fn lower_ab(plan: &LogicalPlan) -> Result<LoweredQuery, JoinError> {
+        let (a, b) = (rel_a(), rel_b());
+        lower(plan, &[&a, &b], 2)
+    }
+
+    fn plan(predicates: Vec<Predicate>, group_by: Option<ColumnRef>) -> LogicalPlan {
+        LogicalPlan {
+            tables: vec!["a".into(), "b".into()],
+            join_attr: "k".into(),
+            predicates,
+            group_by,
+            aggregates: vec![AggExpr {
+                func: AggFunc::Sum,
+                combine: CombineOp::Sum,
+                terms: vec![ColumnRef::qualified("a", "v"), ColumnRef::qualified("b", "w")],
+                alias: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn ungrouped_projection_keys_by_join_attr() {
+        let lowered = lower_ab(&plan(vec![], None)).unwrap();
+        assert_eq!(lowered.per_aggregate.len(), 1);
+        let ds = &lowered.per_aggregate[0];
+        assert_eq!(ds[0].len(), 4);
+        assert_eq!(ds[1].len(), 4);
+        assert!(lowered.groups.is_none());
+        assert_eq!(lowered.ops, vec![CombineOp::Sum]);
+        // keys are the raw join keys
+        let keys: std::collections::HashSet<u64> = ds[0].iter().map(|r| r.key).collect();
+        assert_eq!(keys, [1, 2, 3].into_iter().collect());
+    }
+
+    #[test]
+    fn pushdown_filters_before_projection() {
+        let p = Predicate {
+            column: ColumnRef::qualified("a", "x"),
+            op: CmpOp::Gt,
+            literal: 2.0,
+        };
+        let lowered = lower_ab(&plan(vec![p], None)).unwrap();
+        // rows (1,20,...) with x=1.0 dropped pre-kernel
+        assert_eq!(lowered.per_aggregate[0][0].len(), 3);
+        assert_eq!(lowered.info.pushed.len(), 1);
+        assert_eq!(lowered.info.pushed[0].rows_before, 4);
+        assert_eq!(lowered.info.pushed[0].rows_after, 3);
+        assert!(lowered.info.render().contains("pushed down below join"));
+    }
+
+    #[test]
+    fn grouped_lowering_builds_composite_strata() {
+        let lowered = lower_ab(&plan(vec![], Some(ColumnRef::qualified("a", "g"))))
+        .unwrap();
+        let dict = lowered.groups.as_ref().unwrap();
+        // (1,10) (1,20) (2,10) (3,30) — sorted by (key, group)
+        assert_eq!(dict.len(), 4);
+        assert_eq!(dict.entries[0], (1, Value::Int(10)));
+        assert_eq!(dict.entries[1], (1, Value::Int(20)));
+        assert_eq!(dict.entries[2], (2, Value::Int(10)));
+        assert_eq!(dict.entries[3], (3, Value::Int(30)));
+        assert_eq!(dict.group_values(), vec![Value::Int(10), Value::Int(20), Value::Int(30)]);
+        assert_eq!(dict.ids_of_group(&Value::Int(10)), vec![0, 2]);
+
+        // b: key 1 appears with 2 groups -> replicated; key 9 dropped
+        let b = &lowered.per_aggregate[0][1];
+        assert_eq!(b.len(), 4); // 1 -> ids {0,1}; 2,2 -> id 2 twice
+        let info = lowered.info.group.as_ref().unwrap();
+        assert_eq!(info.replicated_rows, 1);
+        assert_eq!(info.dropped_rows, 1);
+        assert_eq!(info.groups, 3);
+        assert_eq!(info.strata, 4);
+
+        // the a side keys by its own (k, g) composite
+        let a = &lowered.per_aggregate[0][0];
+        let ids: Vec<u64> = {
+            let mut v: Vec<u64> = a.iter().map(|r| r.key).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn grouped_join_matches_partitioned_exact_join() {
+        // the composite-key lowering must preserve join semantics: the
+        // exact grouped sums equal a hand-computed per-group join
+        use crate::cluster::{SimCluster, TimeModel};
+        use crate::join::native::native_join;
+        let lowered = lower_ab(&plan(vec![], Some(ColumnRef::qualified("a", "g"))))
+        .unwrap();
+        let mut cluster = SimCluster::new(2, TimeModel::default());
+        let run = native_join(
+            &mut cluster,
+            &lowered.per_aggregate[0],
+            lowered.ops[0],
+            u64::MAX,
+        )
+        .unwrap();
+        let dict = lowered.groups.as_ref().unwrap();
+        let mut by_group: BTreeMap<Value, f64> = BTreeMap::new();
+        for (id, agg) in &run.strata {
+            *by_group.entry(dict.group_of(*id).unwrap().clone()).or_default() += agg.sum;
+        }
+        // group 10: key1(a.v=1.0 x b.w=10) + key2(a.v=3 x {20,30})
+        //   = (1+10) + (3+20)+(3+30) = 11 + 56 = 67
+        // group 20: key1(a.v=2 x 10) = 12
+        // group 30: key3 joins nothing = absent or 0
+        assert_eq!(by_group.get(&Value::Int(10)).copied().unwrap_or(0.0), 67.0);
+        assert_eq!(by_group.get(&Value::Int(20)).copied().unwrap_or(0.0), 12.0);
+        assert_eq!(by_group.get(&Value::Int(30)).copied().unwrap_or(0.0), 0.0);
+    }
+
+    #[test]
+    fn single_term_aggregate_lowers_to_sum_with_fill() {
+        let mut p = plan(vec![], None);
+        p.aggregates = vec![AggExpr {
+            func: AggFunc::Sum,
+            combine: CombineOp::Left,
+            terms: vec![ColumnRef::qualified("b", "w")],
+            alias: None,
+        }];
+        let lowered = lower_ab(&p).unwrap();
+        assert_eq!(lowered.ops, vec![CombineOp::Sum]);
+        // a contributes the neutral 0.0
+        assert!(lowered.per_aggregate[0][0].iter().all(|r| r.value == 0.0));
+        assert!(lowered.per_aggregate[0][1].iter().any(|r| r.value == 10.0));
+    }
+
+    #[test]
+    fn multiple_aggregates_share_keys() {
+        let mut p = plan(vec![], Some(ColumnRef::qualified("a", "g")));
+        p.aggregates.push(AggExpr {
+            func: AggFunc::Avg,
+            combine: CombineOp::Left,
+            terms: vec![ColumnRef::qualified("a", "x")],
+            alias: Some("mean_x".into()),
+        });
+        let lowered = lower_ab(&p).unwrap();
+        assert_eq!(lowered.per_aggregate.len(), 2);
+        let keys = |ds: &Dataset| -> Vec<u64> {
+            let mut v: Vec<u64> = ds.iter().map(|r| r.key).collect();
+            v.sort_unstable();
+            v
+        };
+        // identical stratum keys across aggregates -> identical sampling
+        for ti in 0..2 {
+            assert_eq!(
+                keys(&lowered.per_aggregate[0][ti]),
+                keys(&lowered.per_aggregate[1][ti])
+            );
+        }
+    }
+
+    #[test]
+    fn resolution_errors_are_clean() {
+        // unknown column
+        let mut p = plan(vec![], None);
+        p.aggregates[0].terms[0] = ColumnRef::qualified("a", "nope");
+        assert!(matches!(
+            lower_ab(&p),
+            Err(JoinError::Runtime(_))
+        ));
+        // ambiguous bare column (k exists in both)
+        let p = plan(
+            vec![Predicate {
+                column: ColumnRef::bare("k"),
+                op: CmpOp::Gt,
+                literal: 0.0,
+            }],
+            None,
+        );
+        let err = lower_ab(&p).unwrap_err();
+        assert!(err.to_string().contains("ambiguous"), "{err}");
+        // bare column resolving uniquely works
+        let p = plan(
+            vec![Predicate {
+                column: ColumnRef::bare("x"),
+                op: CmpOp::Gt,
+                literal: 2.0,
+            }],
+            None,
+        );
+        assert!(lower_ab(&p).is_ok());
+    }
+
+    #[test]
+    fn degenerate_relations_lower_like_datasets() {
+        use crate::data::Record;
+        let da = Dataset::from_records_unpartitioned(
+            "a",
+            vec![Record::new(1, 1.0), Record::new(2, 2.0)],
+            2,
+            64,
+        );
+        let db = Dataset::from_records_unpartitioned(
+            "b",
+            vec![Record::new(1, 10.0), Record::new(2, 20.0)],
+            2,
+            64,
+        );
+        let p = plan(vec![], None);
+        let (ra, rb) = (Relation::from_dataset(&da), Relation::from_dataset(&db));
+        let lowered = lower(&p, &[&ra, &rb], 2).unwrap();
+        // free column names resolve: a.v -> value column, join attr k -> key
+        let a = &lowered.per_aggregate[0][0];
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().any(|r| r.key == 1 && r.value == 1.0));
+    }
+}

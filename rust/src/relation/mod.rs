@@ -1,0 +1,438 @@
+//! The typed relational data model: multi-column [`Relation`]s with a
+//! [`Schema`], the logical-plan layer above the (key64, f64) join kernel.
+//!
+//! The paper's case studies (TPC-H Q3-like queries, Netflix ratings,
+//! network monitoring, §5) are grouped, filtered aggregations over wide
+//! tuples — not `SUM(a.v + b.v)` over two-column records. This module is
+//! the front half of that workload:
+//!
+//! * [`Schema`] / [`ColumnType`] / [`Value`] / [`Row`] — a minimal typed
+//!   tuple model (join keys, ints, floats, strings).
+//! * [`Relation`] — a named, partitioned multi-column table. A legacy
+//!   [`crate::data::Dataset`] is the *degenerate* two-column relation
+//!   (`Relation::from_dataset`), so every existing front end keeps
+//!   working unchanged.
+//! * [`logical`] — the logical plan: `scan → filter(Predicate) →
+//!   equi-join(attr) → group_by(column) → aggregate([AggExpr...])`.
+//! * [`lowering`] — the lowering pass onto the bit-deterministic join
+//!   kernel: predicates are pushed below the join (Bloom sketching sees
+//!   post-filter keys only), each input is projected to the kernel's
+//!   `(key64, value)` pair per aggregate expression, and GROUP BY keys
+//!   are mapped onto the per-stratum machinery via composite
+//!   `(join key, group)` stratum ids — the kernel and the strategy inner
+//!   loops are untouched.
+//! * [`grouped`] — per-group estimates: one `estimate ± CI` per group
+//!   from the same stratified CLT / Horvitz-Thompson estimators.
+
+pub mod grouped;
+pub mod logical;
+pub mod lowering;
+
+pub use grouped::{GroupEstimate, GroupLedger, GroupedAggregate, GroupedApproxResult};
+pub use logical::{AggExpr, CmpOp, ColumnRef, LogicalPlan, Predicate};
+pub use lowering::{lower, GroupDict, LoweredQuery, LoweringInfo};
+
+use crate::data::Dataset;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Column types the relational layer understands. `Key` columns are the
+/// only legal equi-join attributes (the kernel joins on u64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnType {
+    /// 64-bit join key.
+    Key,
+    /// Signed integer attribute (group keys, dates, categories).
+    Int,
+    /// f64 measure — what aggregate expressions consume.
+    Float,
+    /// String attribute (labels; group keys only).
+    Str,
+}
+
+impl ColumnType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ColumnType::Key => "KEY",
+            ColumnType::Int => "INT",
+            ColumnType::Float => "FLOAT",
+            ColumnType::Str => "STR",
+        }
+    }
+
+    /// Wire width used for shuffle byte accounting.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            ColumnType::Key | ColumnType::Int | ColumnType::Float => 8,
+            ColumnType::Str => 16,
+        }
+    }
+}
+
+/// One typed cell. Equality and ordering are total (floats order via
+/// `total_cmp`), so values can key deterministic BTree maps — the group
+/// dictionary depends on that.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Key(u64),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl Value {
+    fn tag(&self) -> u8 {
+        match self {
+            Value::Key(_) => 0,
+            Value::Int(_) => 1,
+            Value::Float(_) => 2,
+            Value::Str(_) => 3,
+        }
+    }
+
+    pub fn type_of(&self) -> ColumnType {
+        match self {
+            Value::Key(_) => ColumnType::Key,
+            Value::Int(_) => ColumnType::Int,
+            Value::Float(_) => ColumnType::Float,
+            Value::Str(_) => ColumnType::Str,
+        }
+    }
+
+    /// The u64 join key this value denotes, if it can be one.
+    pub fn as_key(&self) -> Option<u64> {
+        match self {
+            Value::Key(k) => Some(*k),
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Numeric view (predicates and measures); `None` for strings.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Key(k) => Some(*k as f64),
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(v) => Some(*v),
+            Value::Str(_) => None,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Value {}
+
+impl PartialOrd for Value {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Value {
+    fn cmp(&self, other: &Self) -> Ordering {
+        match (self, other) {
+            (Value::Key(a), Value::Key(b)) => a.cmp(b),
+            (Value::Int(a), Value::Int(b)) => a.cmp(b),
+            (Value::Float(a), Value::Float(b)) => a.total_cmp(b),
+            (Value::Str(a), Value::Str(b)) => a.cmp(b),
+            _ => self.tag().cmp(&other.tag()),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Key(k) => write!(f, "{k}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// One named, typed column.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Column {
+    pub name: String,
+    pub ty: ColumnType,
+}
+
+/// An ordered set of columns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    pub columns: Vec<Column>,
+}
+
+impl Schema {
+    pub fn new(columns: Vec<(&str, ColumnType)>) -> Self {
+        Self {
+            columns: columns
+                .into_iter()
+                .map(|(name, ty)| Column {
+                    name: name.to_string(),
+                    ty,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.columns.is_empty()
+    }
+
+    /// Index of the column with this name (case-insensitive, SQL-style).
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns
+            .iter()
+            .position(|c| c.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Index of the single `Key` column, if exactly one exists.
+    pub fn sole_key_col(&self) -> Option<usize> {
+        let mut keys = self
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.ty == ColumnType::Key);
+        match (keys.next(), keys.next()) {
+            (Some((i, _)), None) => Some(i),
+            _ => None,
+        }
+    }
+
+    /// Default wire width of one row under this schema.
+    pub fn row_bytes(&self) -> u64 {
+        self.columns.iter().map(|c| c.ty.wire_bytes()).sum()
+    }
+
+    pub fn describe(&self) -> String {
+        self.columns
+            .iter()
+            .map(|c| format!("{}:{}", c.name, c.ty.name()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// One tuple. Cells are positional against the relation's [`Schema`].
+pub type Row = Vec<Value>;
+
+/// A named, partitioned, multi-column table — the generalization of
+/// [`Dataset`] the logical plan scans. Rows are stored round-robin across
+/// partitions (raw ingestion order); the lowering pass re-partitions by
+/// join key exactly as the kernel's shuffle would.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub name: String,
+    pub schema: Schema,
+    pub partitions: Vec<Vec<Row>>,
+    /// Serialized width of one row on the wire, for shuffle accounting.
+    pub row_bytes: u64,
+    /// True when this relation wraps a legacy two-column [`Dataset`]: any
+    /// column name resolves (join attribute → key column, everything else
+    /// → value column), preserving the old free-name query style.
+    pub degenerate: bool,
+}
+
+impl Relation {
+    /// Build a relation, validating every row against the schema.
+    pub fn new(
+        name: impl Into<String>,
+        schema: Schema,
+        rows: Vec<Row>,
+        num_partitions: usize,
+    ) -> anyhow::Result<Self> {
+        assert!(num_partitions > 0);
+        let name = name.into();
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != schema.len() {
+                anyhow::bail!(
+                    "relation {name}: row {i} has {} cells, schema has {} columns",
+                    row.len(),
+                    schema.len()
+                );
+            }
+            for (cell, col) in row.iter().zip(&schema.columns) {
+                let ok = match col.ty {
+                    // Int cells are accepted in Key columns (non-negative)
+                    ColumnType::Key => cell.as_key().is_some(),
+                    ColumnType::Int => matches!(cell, Value::Int(_) | Value::Key(_)),
+                    ColumnType::Float => cell.as_f64().is_some(),
+                    ColumnType::Str => matches!(cell, Value::Str(_)),
+                };
+                if !ok {
+                    anyhow::bail!(
+                        "relation {name}: row {i} column {} expects {}, got {cell:?}",
+                        col.name,
+                        col.ty.name()
+                    );
+                }
+            }
+        }
+        let mut partitions = vec![Vec::new(); num_partitions];
+        for (i, row) in rows.into_iter().enumerate() {
+            partitions[i % num_partitions].push(row);
+        }
+        let row_bytes = schema.row_bytes();
+        Ok(Self {
+            name,
+            schema,
+            partitions,
+            row_bytes,
+            degenerate: false,
+        })
+    }
+
+    /// Wrap a legacy two-column dataset as the degenerate relation
+    /// (`key: KEY, value: FLOAT`). Column references resolve loosely: the
+    /// query's join attribute maps to the key column, any other name to
+    /// the value column — exactly the old free-name query behavior.
+    pub fn from_dataset(dataset: &Dataset) -> Self {
+        let schema = Schema::new(vec![("key", ColumnType::Key), ("value", ColumnType::Float)]);
+        let partitions = dataset
+            .partitions
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|r| vec![Value::Key(r.key), Value::Float(r.value)])
+                    .collect()
+            })
+            .collect();
+        Self {
+            name: dataset.name.clone(),
+            schema,
+            partitions,
+            row_bytes: dataset.record_bytes,
+            degenerate: true,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.partitions.iter().map(|p| p.len() as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.iter().all(|p| p.is_empty())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Row> {
+        self.partitions.iter().flatten()
+    }
+
+    /// Resolve a column name against this relation. Degenerate relations
+    /// resolve loosely (see [`Relation::from_dataset`]); `join_attr` names
+    /// the query's join attribute for that fallback.
+    pub fn resolve(&self, column: &str, join_attr: &str) -> Option<usize> {
+        if let Some(i) = self.schema.col(column) {
+            return Some(i);
+        }
+        if self.degenerate {
+            return if column.eq_ignore_ascii_case(join_attr) {
+                self.schema.sole_key_col()
+            } else {
+                Some(1)
+            };
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Record;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            ("k", ColumnType::Key),
+            ("g", ColumnType::Int),
+            ("v", ColumnType::Float),
+        ])
+    }
+
+    #[test]
+    fn schema_lookup_and_bytes() {
+        let s = schema();
+        assert_eq!(s.col("k"), Some(0));
+        assert_eq!(s.col("G"), Some(1)); // case-insensitive
+        assert_eq!(s.col("nope"), None);
+        assert_eq!(s.sole_key_col(), Some(0));
+        assert_eq!(s.row_bytes(), 24);
+    }
+
+    #[test]
+    fn relation_validates_rows() {
+        let rows = vec![
+            vec![Value::Key(1), Value::Int(10), Value::Float(0.5)],
+            vec![Value::Key(2), Value::Int(20), Value::Float(1.5)],
+        ];
+        let r = Relation::new("t", schema(), rows, 2).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.num_partitions(), 2);
+
+        // arity mismatch
+        assert!(Relation::new("t", schema(), vec![vec![Value::Key(1)]], 2).is_err());
+        // type mismatch: string in a float column
+        assert!(Relation::new(
+            "t",
+            schema(),
+            vec![vec![Value::Key(1), Value::Int(1), Value::Str("x".into())]],
+            2
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn value_total_order_and_key_view() {
+        assert!(Value::Float(1.0) < Value::Float(2.0));
+        assert_eq!(Value::Float(2.0), Value::Float(2.0));
+        assert!(Value::Int(-1) < Value::Int(3));
+        assert!(Value::Str("a".into()) < Value::Str("b".into()));
+        assert_eq!(Value::Key(7).as_key(), Some(7));
+        assert_eq!(Value::Int(7).as_key(), Some(7));
+        assert_eq!(Value::Int(-7).as_key(), None);
+        assert_eq!(Value::Float(7.0).as_key(), None);
+        assert_eq!(Value::Str("7".into()).as_f64(), None);
+    }
+
+    #[test]
+    fn degenerate_relation_resolves_loosely() {
+        let d = Dataset::from_records_unpartitioned(
+            "a",
+            vec![Record::new(1, 10.0), Record::new(2, 20.0)],
+            2,
+            100,
+        );
+        let r = Relation::from_dataset(&d);
+        assert!(r.degenerate);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.row_bytes, 100);
+        // the join attribute resolves to the key column, anything else to
+        // the value column — old free-name queries keep working
+        assert_eq!(r.resolve("flow", "flow"), Some(0));
+        assert_eq!(r.resolve("size", "flow"), Some(1));
+        assert_eq!(r.resolve("key", "flow"), Some(0));
+        assert_eq!(r.resolve("value", "flow"), Some(1));
+    }
+
+    #[test]
+    fn typed_relation_resolves_strictly() {
+        let r = Relation::new("t", schema(), vec![], 2).unwrap();
+        assert_eq!(r.resolve("g", "k"), Some(1));
+        assert_eq!(r.resolve("nope", "k"), None);
+    }
+}

@@ -28,6 +28,7 @@
 //! ApproxJoin pipeline). `strategy(Named("bloom"))` forces one. `plan()` /
 //! `explain()` expose the ranking without executing anything.
 
+mod relational;
 pub mod streaming;
 
 pub use streaming::StreamingSession;
@@ -42,6 +43,7 @@ use crate::join::{
     NativeJoin, Planner, RepartitionJoin, StrategyRegistry,
 };
 use crate::query::{parse, Query};
+use crate::relation::{Relation, Row, Schema};
 use crate::stats::EstimatorKind;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -80,6 +82,9 @@ pub struct Session {
     engine: ApproxJoinEngine,
     registry: StrategyRegistry,
     datasets: HashMap<String, Dataset>,
+    /// Typed multi-column relations (the relational front end). Tables
+    /// and datasets share one namespace; queries resolve tables first.
+    tables: HashMap<String, Relation>,
 }
 
 impl Session {
@@ -90,6 +95,7 @@ impl Session {
             engine: ApproxJoinEngine::new(cfg)?,
             registry,
             datasets: HashMap::new(),
+            tables: HashMap::new(),
         })
     }
 
@@ -100,22 +106,154 @@ impl Session {
             engine: ApproxJoinEngine::without_runtime(cfg)?,
             registry,
             datasets: HashMap::new(),
+            tables: HashMap::new(),
         })
     }
 
+    /// True when `name` is already taken by a dataset or a table.
+    pub fn is_registered(&self, name: &str) -> bool {
+        self.datasets.contains_key(name) || self.tables.contains_key(name)
+    }
+
     /// Register a dataset under the name queries reference it by.
+    /// Replaces (and warns about) an existing registration of the same
+    /// name; use [`Session::try_with_data`] to make a conflict an error.
     pub fn with_data(mut self, name: &str, mut dataset: Dataset) -> Self {
+        if self.is_registered(name) {
+            eprintln!(
+                "warning: dataset {name} is already registered in this \
+                 session; replacing it"
+            );
+            self.tables.remove(name);
+        }
         dataset.name = name.to_string();
         self.datasets.insert(name.to_string(), dataset);
         self
     }
 
-    /// Register datasets under their own names.
+    /// Like [`Session::with_data`], but an already-registered name is an
+    /// error instead of a silent replacement.
+    pub fn try_with_data(self, name: &str, dataset: Dataset) -> Result<Self, JoinError> {
+        if self.is_registered(name) {
+            return Err(JoinError::Runtime(format!(
+                "dataset {name} is already registered in this session"
+            )));
+        }
+        Ok(self.with_data(name, dataset))
+    }
+
+    /// Register datasets under their own names. Replaces (and warns
+    /// about) existing registrations of the same name.
     pub fn with_datasets(mut self, datasets: impl IntoIterator<Item = Dataset>) -> Self {
         for d in datasets {
-            self.datasets.insert(d.name.clone(), d);
+            let name = d.name.clone();
+            self = self.with_data(&name, d);
         }
         self
+    }
+
+    /// Register a typed multi-column relation from a schema and rows —
+    /// the relational analogue of [`Session::with_data`]. Rows are
+    /// validated against the schema; a name collision (dataset or table)
+    /// is an error, never a silent replacement.
+    ///
+    /// ```
+    /// use approxjoin::coordinator::EngineConfig;
+    /// use approxjoin::relation::{ColumnType, Schema, Value};
+    /// use approxjoin::session::Session;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let customers = Schema::new(vec![
+    ///     ("custkey", ColumnType::Key),
+    ///     ("balance", ColumnType::Float),
+    /// ]);
+    /// let orders = Schema::new(vec![
+    ///     ("custkey", ColumnType::Key),
+    ///     ("region", ColumnType::Int),
+    ///     ("price", ColumnType::Float),
+    /// ]);
+    /// let mut session = Session::without_runtime(EngineConfig {
+    ///     workers: 2,
+    ///     ..Default::default()
+    /// })?
+    /// .register_table(
+    ///     "customers",
+    ///     customers,
+    ///     vec![
+    ///         vec![Value::Key(1), Value::Float(50.0)],
+    ///         vec![Value::Key(2), Value::Float(80.0)],
+    ///         vec![Value::Key(3), Value::Float(10.0)],
+    ///     ],
+    /// )?
+    /// .register_table(
+    ///     "orders",
+    ///     orders,
+    ///     vec![
+    ///         vec![Value::Key(1), Value::Int(7), Value::Float(10.0)],
+    ///         vec![Value::Key(1), Value::Int(8), Value::Float(30.0)],
+    ///         vec![Value::Key(2), Value::Int(7), Value::Float(20.0)],
+    ///         vec![Value::Key(3), Value::Int(7), Value::Float(40.0)],
+    ///     ],
+    /// )?;
+    /// // grouped + filtered: predicate pushed below the join, one
+    /// // estimate ± CI per region
+    /// let out = session
+    ///     .sql(
+    ///         "SELECT region, SUM(orders.price) AS revenue \
+    ///          FROM orders, customers \
+    ///          WHERE orders.custkey = customers.custkey \
+    ///            AND customers.balance > 40 \
+    ///          GROUP BY region",
+    ///     )?
+    ///     .run()?;
+    /// let grouped = out.grouped.expect("grouped query");
+    /// let revenue = &grouped.aggregates[0];
+    /// assert_eq!(revenue.label, "revenue");
+    /// // region 7: custkey 1 (10.0) + custkey 2 (20.0); custkey 3 was
+    /// // filtered out by balance > 40 before the join
+    /// assert_eq!(revenue.groups[0].result.estimate, 30.0);
+    /// assert_eq!(revenue.groups[1].result.estimate, 30.0); // region 8
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn register_table(
+        mut self,
+        name: &str,
+        schema: Schema,
+        rows: Vec<Row>,
+    ) -> Result<Self> {
+        if self.is_registered(name) {
+            anyhow::bail!("table {name} is already registered in this session");
+        }
+        let partitions = self.engine.cfg.workers.max(1) * 2;
+        let relation = Relation::new(name, schema, rows, partitions)?;
+        self.tables.insert(name.to_string(), relation);
+        Ok(self)
+    }
+
+    /// Register an already-built relation under a name (fluent). Replaces
+    /// (and warns about) an existing registration of the same name.
+    pub fn with_table(mut self, name: &str, mut relation: Relation) -> Self {
+        if self.is_registered(name) {
+            eprintln!(
+                "warning: table {name} is already registered in this \
+                 session; replacing it"
+            );
+            self.datasets.remove(name);
+        }
+        relation.name = name.to_string();
+        self.tables.insert(name.to_string(), relation);
+        self
+    }
+
+    /// A registered relation, if any.
+    pub fn table(&self, name: &str) -> Option<&Relation> {
+        self.tables.get(name)
+    }
+
+    /// A registered dataset, if any.
+    pub fn dataset(&self, name: &str) -> Option<&Dataset> {
+        self.datasets.get(name)
     }
 
     /// Use a profiled cost model (β_compute from this host / cluster).
@@ -212,7 +350,14 @@ impl QueryBuilder<'_> {
     }
 
     /// Produce the cost-based [`JoinPlan`] without executing anything.
+    /// Relational queries (predicates, GROUP BY, typed tables) are
+    /// lowered first, so the plan carries the pushed-down predicates and
+    /// the lowered kernel plan.
     pub fn plan(&self) -> Result<JoinPlan, JoinError> {
+        if relational::is_relational(self.session, &self.query) {
+            return relational::plan_relational(self.session, &self.query, &self.choice)
+                .map(|(plan, _)| plan);
+        }
         let inputs = self.session.resolve_inputs(&self.query)?;
         let stats = self.stats(&inputs);
         Planner::new(&self.session.registry, &self.session.engine.cost).plan(
@@ -228,8 +373,15 @@ impl QueryBuilder<'_> {
     }
 
     /// Plan and execute the query; returns the result with its confidence
-    /// interval, cluster metrics, and the plan that produced it.
+    /// interval, cluster metrics, and the plan that produced it. Queries
+    /// with relational features (predicates, GROUP BY, multiple
+    /// aggregates) or over typed tables run through the relational
+    /// lowering; `QueryOutcome::grouped` then carries one estimate ± CI
+    /// per group per aggregate.
     pub fn run(self) -> Result<QueryOutcome> {
+        if relational::is_relational(self.session, &self.query) {
+            return relational::run_relational(self.session, &self.query, &self.choice);
+        }
         let inputs = self.session.resolve_inputs(&self.query)?;
         let stats = self.stats(&inputs);
         let session = &mut *self.session;
@@ -324,6 +476,7 @@ impl QueryBuilder<'_> {
             strategy: plan.strategy.clone(),
             plan: Some(plan.with_measured_shuffle(ledger.total_bytes())),
             ledger,
+            grouped: None,
         })
     }
 }
@@ -485,6 +638,59 @@ mod tests {
         assert_eq!(out.ledger.total_bytes(), out.metrics.total_shuffled_bytes());
         let text = plan.explain();
         assert!(text.contains("measured"), "{text}");
+    }
+
+    #[test]
+    fn duplicate_registration_is_a_conflict_not_a_silent_drop() {
+        let inputs = workload(0.05);
+
+        // try_with_data: an existing name is an error
+        let s = Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone());
+        assert!(s.is_registered("a"));
+        let err = s.try_with_data("a", inputs[1].clone()).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+
+        // with_data / with_datasets replace deterministically (the last
+        // registration wins) and log the conflict instead of silently
+        // dropping one of the datasets
+        let mut small = inputs[1].clone();
+        small.partitions.truncate(1);
+        let s = Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone())
+            .with_data("a", small.clone());
+        assert_eq!(s.dataset("a").unwrap().len(), small.len());
+
+        let mut named = inputs[0].clone();
+        named.name = "dup".to_string();
+        let mut named2 = small.clone();
+        named2.name = "dup".to_string();
+        let s = Session::without_runtime(config())
+            .unwrap()
+            .with_datasets([named, named2.clone()]);
+        assert_eq!(s.dataset("dup").unwrap().len(), named2.len());
+
+        // register_table refuses both table and dataset collisions
+        use crate::relation::{ColumnType, Schema, Value};
+        let schema = Schema::new(vec![("k", ColumnType::Key), ("v", ColumnType::Float)]);
+        let rows = vec![vec![Value::Key(1), Value::Float(1.0)]];
+        let s = Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone())
+            .register_table("t", schema.clone(), rows.clone())
+            .unwrap();
+        assert!(s.table("t").is_some());
+        let err = s
+            .register_table("t", schema.clone(), rows.clone())
+            .unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err:#}");
+        let s = Session::without_runtime(config())
+            .unwrap()
+            .with_data("a", inputs[0].clone());
+        let err = s.register_table("a", schema, rows).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err:#}");
     }
 
     #[test]

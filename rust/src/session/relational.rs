@@ -1,0 +1,330 @@
+//! The relational execution path behind [`super::Session`]: resolve the
+//! FROM list against registered [`Relation`]s (legacy datasets wrap as
+//! degenerate two-column relations), build the logical plan, lower it
+//! onto the join kernel (predicate pushdown, per-aggregate projection,
+//! GROUP BY composite strata), rank strategies with the same cost-based
+//! [`Planner`], execute, and assemble per-group estimates.
+//!
+//! The kernel — the strategy implementations and the partition-parallel
+//! runtime — is untouched: this module only changes *what* records it
+//! joins (post-filter, composite-keyed) and how the resulting strata are
+//! read back out (per group instead of in one total).
+
+use crate::cluster::SimCluster;
+use crate::coordinator::{estimate_result, ExecutionMode, QueryOutcome};
+use crate::join::approx::{sample_stage, ApproxConfig, NativeAggregator, SamplingParams};
+use crate::join::bloom_join::{
+    cross_product_stage, filter_and_shuffle, FilterConfig, NativeProber,
+};
+use crate::join::{InputStats, JoinError, JoinPlan, Planner, StrategyChoice};
+use crate::query::{Budget, Query};
+use crate::relation::grouped::{assemble_grouped, assemble_ungrouped};
+use crate::relation::{lower, GroupedApproxResult, LogicalPlan, LoweredQuery, Relation};
+use crate::stats::{EstimatorKind, StratumAgg};
+use std::collections::HashMap;
+
+use super::Session;
+
+/// Whether a query must take the relational path: it uses relational
+/// grammar (predicates, GROUP BY, multiple aggregates) or scans at least
+/// one table registered as a typed relation.
+pub(crate) fn is_relational(session: &Session, query: &Query) -> bool {
+    query.has_relational_features()
+        || query.tables.iter().any(|t| session.tables.contains_key(t))
+}
+
+/// Wrap any dataset-backed FROM entries as degenerate relations (typed
+/// tables are borrowed from the session, never cloned). One `None` per
+/// table that resolves to a registered typed relation.
+fn wrap_datasets(
+    session: &Session,
+    query: &Query,
+) -> Result<Vec<Option<Relation>>, JoinError> {
+    let mut owned = Vec::with_capacity(query.tables.len());
+    for t in &query.tables {
+        if session.tables.contains_key(t) {
+            owned.push(None);
+        } else if let Some(d) = session.datasets.get(t) {
+            owned.push(Some(Relation::from_dataset(d)));
+        } else {
+            return Err(JoinError::Runtime(format!(
+                "dataset {t} not registered in this session"
+            )));
+        }
+    }
+    Ok(owned)
+}
+
+/// Lower the query and rank strategies on the lowered kernel inputs.
+pub(crate) fn plan_relational(
+    session: &Session,
+    query: &Query,
+    choice: &StrategyChoice,
+) -> Result<(JoinPlan, LoweredQuery), JoinError> {
+    let owned = wrap_datasets(session, query)?;
+    let relations: Vec<&Relation> = query
+        .tables
+        .iter()
+        .zip(&owned)
+        .map(|(t, o)| match o {
+            Some(r) => r,
+            None => session.tables.get(t).expect("checked by wrap_datasets"),
+        })
+        .collect();
+    let partitions = session.engine.cfg.workers.max(1) * 2;
+    let lowered = lower(&LogicalPlan::from_query(query), &relations, partitions)?;
+    let stats = InputStats::collect(
+        &lowered.per_aggregate[0],
+        session.engine.cfg.workers,
+        &session.engine.cfg.time_model,
+    );
+    let plan = Planner::new(&session.registry, &session.engine.cost)
+        .plan(&stats, choice, &query.budget)?
+        .with_lowering(lowered.info.clone());
+    Ok((plan, lowered))
+}
+
+/// The engine's §3.2 exact-vs-sampled decision, replayed on the lowered
+/// inputs with the *measured* filter+shuffle time d_dt. `n_aggregates`
+/// kernel runs share the user's latency budget, so each run is sized to
+/// an equal share — the query's total stays within `WITHIN D SECONDS`.
+fn section32_mode(
+    budget: &Budget,
+    cost: &crate::cost::CostModel,
+    d_dt: f64,
+    total_pairs: f64,
+    n_aggregates: usize,
+) -> ExecutionMode {
+    if let Some(d_desired) = budget.latency_secs {
+        let share = d_desired / n_aggregates.max(1) as f64;
+        let s = cost
+            .fraction_for_latency(share, d_dt, total_pairs)
+            .max(1e-6);
+        if s >= 1.0 {
+            return ExecutionMode::Exact;
+        }
+        return ExecutionMode::Sampled { fraction: s };
+    }
+    if budget.error.is_some() {
+        return ExecutionMode::Sampled { fraction: f64::NAN };
+    }
+    ExecutionMode::Exact
+}
+
+/// One aggregate's kernel execution result.
+struct AggRun {
+    strata: HashMap<u64, StratumAgg>,
+    draws: HashMap<u64, f64>,
+    sampled: bool,
+    metrics: crate::cluster::JoinMetrics,
+    ledger: crate::cluster::ShuffleLedger,
+    d_dt: f64,
+}
+
+/// Execute the full relational query: one kernel run per aggregate
+/// expression over identical stratum keys, then per-group assembly.
+pub(crate) fn run_relational(
+    session: &mut Session,
+    query: &Query,
+    choice: &StrategyChoice,
+) -> anyhow::Result<QueryOutcome> {
+    let (plan, lowered) = plan_relational(session, query, choice)?;
+    let cfg = session.engine.cfg.clone();
+    let confidence = query
+        .budget
+        .error
+        .map(|e| e.confidence)
+        .unwrap_or(0.95);
+
+    // the sampled §3.2 path re-decides per aggregate with measured d_dt
+    let budgeted_approx = plan.approximate && !query.budget.is_unbounded();
+    if !plan.approximate
+        && !query.budget.is_unbounded()
+        && matches!(choice, StrategyChoice::Named(_))
+    {
+        eprintln!(
+            "warning: strategy {} is exact; the query's latency/error \
+             budget is ignored",
+            plan.strategy
+        );
+    }
+
+    let mut runs: Vec<AggRun> = Vec::with_capacity(lowered.per_aggregate.len());
+    for (ai, inputs) in lowered.per_aggregate.iter().enumerate() {
+        let op = lowered.ops[ai];
+        let agg_fp = format!(
+            "{}#{}",
+            query.fingerprint(),
+            query.aggregates[ai].render()
+        );
+        let mut cluster =
+            SimCluster::new(cfg.workers, cfg.time_model).with_parallelism(cfg.parallelism);
+        let run = if budgeted_approx {
+            // §3.2 on the lowered inputs: measure filtering, then decide.
+            // This path runs the native prober/aggregator with eq-27
+            // filter sizing; unlike the scalar engine path it does not
+            // engage the pinned XLA artifact geometry (the engine owns
+            // those executors privately) — native execution is the
+            // always-available reference implementation.
+            let filter_cfg = FilterConfig::for_inputs(inputs, cfg.fp_rate);
+            let mut prober = NativeProber;
+            let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, &mut prober)?;
+            let d_dt = filtered.d_dt;
+            let total_pairs: f64 = filtered
+                .per_worker
+                .iter()
+                .flat_map(|g| g.values())
+                .map(|sides| sides.iter().map(|s| s.len() as f64).product::<f64>())
+                .sum();
+            let mode = section32_mode(
+                &query.budget,
+                &session.engine.cost,
+                d_dt,
+                total_pairs,
+                lowered.per_aggregate.len(),
+            );
+            let (strata, draws, sampled) = match mode {
+                ExecutionMode::Exact => {
+                    let strata = cross_product_stage(&mut cluster, &filtered, op);
+                    (strata, HashMap::new(), false)
+                }
+                ExecutionMode::Sampled { fraction } => {
+                    let params = if fraction.is_nan() {
+                        let err = query.budget.error.expect("error-driven plan needs budget");
+                        SamplingParams::ErrorBound {
+                            err_desired: err.bound,
+                            confidence: err.confidence,
+                            sigmas: session.engine.feedback.sigmas(&agg_fp),
+                            default_sigma: session.engine.feedback.default_sigma(&agg_fp),
+                        }
+                    } else {
+                        SamplingParams::Fraction(fraction)
+                    };
+                    let acfg = ApproxConfig {
+                        params,
+                        estimator: cfg.estimator,
+                        seed: cfg.seed,
+                    };
+                    let mut agg = NativeAggregator::default();
+                    let (strata, draws) =
+                        sample_stage(&mut cluster, &filtered, op, &acfg, &mut agg)?;
+                    (strata, draws, true)
+                }
+            };
+            AggRun {
+                strata,
+                draws,
+                sampled,
+                metrics: cluster.take_metrics(),
+                ledger: cluster.take_ledger(),
+                d_dt,
+            }
+        } else {
+            let strategy = session
+                .registry
+                .get(&plan.strategy)
+                .expect("planned strategy is registered");
+            let run = strategy.execute(&mut cluster, inputs, op)?;
+            let d_dt = run.metrics.stage_secs("build_filter")
+                + run.metrics.stage_secs("filter_shuffle");
+            AggRun {
+                strata: run.strata,
+                draws: run.draws,
+                sampled: run.sampled,
+                metrics: run.metrics,
+                ledger: run.ledger,
+                d_dt,
+            }
+        };
+        session.engine.feedback.record(&agg_fp, &run.strata);
+        runs.push(run);
+    }
+
+    // ---- assemble: overall result from the first aggregate, per-group
+    // estimates for every aggregate
+    let mut grouped_aggs = Vec::with_capacity(runs.len());
+    let mut overall = None;
+    for (ai, run) in runs.iter().enumerate() {
+        let estimator = if run.draws.is_empty() {
+            EstimatorKind::Clt
+        } else {
+            EstimatorKind::HorvitzThompson
+        };
+        let func = query.aggregates[ai].func;
+        let label = query.aggregates[ai].label();
+        let total = estimate_result(
+            func,
+            run.sampled,
+            estimator,
+            &run.strata,
+            &run.draws,
+            confidence,
+        );
+        if ai == 0 {
+            overall = Some(total);
+        }
+        grouped_aggs.push(match &lowered.groups {
+            Some(dict) => assemble_grouped(
+                dict,
+                label,
+                func,
+                run.sampled,
+                estimator,
+                &run.strata,
+                &run.draws,
+                confidence,
+            ),
+            None => assemble_ungrouped(label, func, total, &run.strata),
+        });
+    }
+
+    // ---- merge accounting: one aggregate keeps raw stage names; several
+    // get an `agg{i}/` prefix so attribution survives the merge
+    let multi = runs.len() > 1;
+    let mut metrics = crate::cluster::JoinMetrics::default();
+    let mut ledger = crate::cluster::ShuffleLedger::default();
+    for (ai, run) in runs.iter().enumerate() {
+        if multi {
+            let mut m = run.metrics.clone();
+            for s in &mut m.stages {
+                s.name = format!("agg{ai}/{}", s.name);
+            }
+            metrics.merge(m);
+            ledger.merge(run.ledger.tagged(&format!("agg{ai}")));
+        } else {
+            metrics.merge(run.metrics.clone());
+            ledger.merge(run.ledger.clone());
+        }
+    }
+
+    let first = &runs[0];
+    let output_cardinality: f64 = first.strata.values().map(|s| s.population).sum();
+    let sampled_count: f64 = first.strata.values().map(|s| s.count).sum();
+    let mode = if first.sampled {
+        ExecutionMode::Sampled {
+            fraction: if output_cardinality > 0.0 {
+                sampled_count / output_cardinality
+            } else {
+                1.0
+            },
+        }
+    } else {
+        ExecutionMode::Exact
+    };
+    let result = overall.expect("at least one aggregate");
+    Ok(QueryOutcome {
+        sim_secs: metrics.total_sim_secs(),
+        d_dt: first.d_dt,
+        result,
+        mode,
+        output_cardinality,
+        metrics,
+        strategy: plan.strategy.clone(),
+        plan: Some(plan.with_measured_shuffle(ledger.total_bytes())),
+        ledger,
+        grouped: Some(GroupedApproxResult {
+            group_column: lowered.groups.as_ref().map(|d| d.column.clone()),
+            aggregates: grouped_aggs,
+        }),
+    })
+}

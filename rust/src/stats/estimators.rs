@@ -21,7 +21,7 @@ pub enum EstimatorKind {
 }
 
 /// An approximate aggregate with its confidence interval.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ApproxResult {
     pub estimate: f64,
     /// Half-width of the two-sided confidence interval.

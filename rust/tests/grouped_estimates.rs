@@ -1,0 +1,206 @@
+//! Statistical soundness of per-group error bounds, plus the grouped
+//! determinism contract.
+//!
+//! * **Coverage trial** — on a skewed workload (Zipf group popularity ×
+//!   exponential values), 100 seeded sampled runs against the exact
+//!   grouped twin: at least 85% of all (trial, group) 95% CIs must cover
+//!   the true per-group total.
+//! * **Bit-identity** — the full `GroupedApproxResult` (estimates,
+//!   bounds, ledgers, group order) is identical for 1 / 2 / 8 executor
+//!   threads at a fixed seed.
+
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::ApproxJoin;
+use approxjoin::relation::{ColumnType, GroupedApproxResult, Schema, Value};
+use approxjoin::session::{Session, StrategyChoice};
+use approxjoin::stats::EstimatorKind;
+use approxjoin::util::Rng;
+
+const SQL: &str = "SELECT g, SUM(a.v + b.w) AS total FROM a, b \
+                   WHERE a.k = b.k GROUP BY g";
+
+/// Zipf groups × exponential values: a(k, g, v), b(k, w); every key has
+/// 20-59 b-side partners so per-stratum samples at 25% are ≥ 5.
+fn rows(seed: u64) -> (Vec<Vec<Value>>, Vec<Vec<Value>>) {
+    let mut r = Rng::new(seed);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for k in 0..150u64 {
+        let group = r.zipf(8, 1.2) as i64;
+        a.push(vec![
+            Value::Key(k),
+            Value::Int(group),
+            Value::Float(r.exponential(10.0)),
+        ]);
+        for _ in 0..(20 + r.index(40)) {
+            b.push(vec![Value::Key(k), Value::Float(r.exponential(5.0))]);
+        }
+    }
+    (a, b)
+}
+
+fn schemas() -> (Schema, Schema) {
+    (
+        Schema::new(vec![
+            ("k", ColumnType::Key),
+            ("g", ColumnType::Int),
+            ("v", ColumnType::Float),
+        ]),
+        Schema::new(vec![("k", ColumnType::Key), ("w", ColumnType::Float)]),
+    )
+}
+
+fn session(data_seed: u64, sampling_seed: u64, threads: usize, fraction: f64) -> Session {
+    let (a, b) = rows(data_seed);
+    let (sa, sb) = schemas();
+    Session::without_runtime(EngineConfig {
+        workers: 4,
+        parallelism: threads,
+        seed: sampling_seed,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_strategy(Box::new(ApproxJoin {
+        fp_rate: 0.01,
+        filter: None,
+        config: ApproxConfig {
+            params: SamplingParams::Fraction(fraction),
+            estimator: EstimatorKind::Clt,
+            seed: sampling_seed,
+        },
+    }))
+    .register_table("a", sa, a)
+    .unwrap()
+    .register_table("b", sb, b)
+    .unwrap()
+}
+
+fn grouped_run(s: &mut Session, choice: StrategyChoice) -> GroupedApproxResult {
+    s.sql(SQL)
+        .unwrap()
+        .strategy(choice)
+        .run()
+        .unwrap()
+        .grouped
+        .expect("grouped query")
+}
+
+#[test]
+fn per_group_cis_cover_the_exact_grouped_twin() {
+    // exact twin, computed once (the data is fixed across trials)
+    let mut s = session(42, 0, 1, 0.25);
+    let exact = grouped_run(&mut s, StrategyChoice::named("repartition"));
+    let truth: Vec<(Value, f64)> = exact.aggregates[0]
+        .groups
+        .iter()
+        .map(|g| (g.group.clone(), g.result.estimate))
+        .collect();
+    assert!(truth.len() >= 4, "want several groups, got {}", truth.len());
+
+    let trials = 100;
+    let mut checked = 0u32;
+    let mut covered = 0u32;
+    let mut width_sum = 0.0;
+    for trial in 0..trials {
+        let mut s = session(42, 1000 + trial, 1, 0.25);
+        let sampled = grouped_run(&mut s, StrategyChoice::named("approx"));
+        let groups = &sampled.aggregates[0].groups;
+        assert_eq!(groups.len(), truth.len(), "group set is data-determined");
+        for (g, (tv, tsum)) in groups.iter().zip(&truth) {
+            assert_eq!(&g.group, tv);
+            checked += 1;
+            width_sum += g.result.error_bound;
+            if (g.result.estimate - tsum).abs() <= g.result.error_bound {
+                covered += 1;
+            }
+        }
+    }
+    let rate = covered as f64 / checked as f64;
+    assert!(
+        rate >= 0.85,
+        "per-group 95% CI coverage {covered}/{checked} = {rate:.3} < 0.85"
+    );
+    assert!(width_sum > 0.0, "sampled runs must carry non-zero bounds");
+}
+
+#[test]
+fn grouped_result_is_bit_identical_across_thread_counts() {
+    let reference = grouped_run(
+        &mut session(7, 11, 1, 0.2),
+        StrategyChoice::named("approx"),
+    );
+    assert!(!reference.aggregates[0].groups.is_empty());
+    for threads in [2, 8] {
+        let parallel = grouped_run(
+            &mut session(7, 11, threads, 0.2),
+            StrategyChoice::named("approx"),
+        );
+        // PartialEq over the full structure: group order, estimates,
+        // bounds, dof, sample counts, per-group ledgers — to the bit
+        assert_eq!(
+            reference, parallel,
+            "grouped output diverged at {threads} threads"
+        );
+    }
+
+    // the exact grouped path is thread-invariant too
+    let exact_ref = grouped_run(
+        &mut session(7, 11, 1, 0.2),
+        StrategyChoice::named("bloom"),
+    );
+    for threads in [2, 8] {
+        let parallel = grouped_run(
+            &mut session(7, 11, threads, 0.2),
+            StrategyChoice::named("bloom"),
+        );
+        assert_eq!(exact_ref, parallel);
+    }
+}
+
+#[test]
+fn grouped_ht_estimator_is_sound_and_deterministic() {
+    // Horvitz-Thompson per group: estimates near the exact twin, draws
+    // recorded, and the same bit-identity contract
+    let mk = |threads: usize| {
+        let (a, b) = rows(13);
+        let (sa, sb) = schemas();
+        Session::without_runtime(EngineConfig {
+            workers: 4,
+            parallelism: threads,
+            estimator: EstimatorKind::HorvitzThompson,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap()
+        .with_strategy(Box::new(ApproxJoin {
+            fp_rate: 0.01,
+            filter: None,
+            config: ApproxConfig {
+                params: SamplingParams::Fraction(0.3),
+                estimator: EstimatorKind::HorvitzThompson,
+                seed: 5,
+            },
+        }))
+        .register_table("a", sa, a)
+        .unwrap()
+        .register_table("b", sb, b)
+        .unwrap()
+    };
+    let exact = grouped_run(&mut mk(1), StrategyChoice::named("repartition"));
+    let ht = grouped_run(&mut mk(1), StrategyChoice::named("approx"));
+    let mut rel_err_sum = 0.0;
+    let mut n = 0.0;
+    for (h, e) in ht.aggregates[0].groups.iter().zip(&exact.aggregates[0].groups) {
+        if e.result.estimate.abs() > 1e-9 {
+            rel_err_sum += (h.result.estimate - e.result.estimate).abs() / e.result.estimate.abs();
+            n += 1.0;
+        }
+    }
+    assert!(n > 0.0);
+    let mean_rel = rel_err_sum / n;
+    assert!(mean_rel < 0.25, "HT grouped mean rel err {mean_rel}");
+
+    let ht8 = grouped_run(&mut mk(8), StrategyChoice::named("approx"));
+    assert_eq!(ht, ht8);
+}

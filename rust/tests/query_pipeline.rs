@@ -235,16 +235,26 @@ fn quoted_and_malformed_identifiers_error_not_panic() {
 fn fuzzed_query_mutations_never_panic() {
     use approxjoin::query::parse;
     use approxjoin::util::Rng;
-    let base = "SELECT SUM(a.v + b.v + c.v) FROM a, b, c \
-                WHERE a.k = b.k = c.k WITHIN 120 SECONDS OR ERROR 0.01 CONFIDENCE 95%";
-    let noise: &[char] = &[
-        '"', '\'', '`', ';', '(', ')', '+', '*', '=', ',', '.', '%', '0', '9', 'x', '_', ' ',
-        '\t', '\n', 'Σ', '∞', '\u{0}',
+    // both grammars fuzz: the legacy budget query and the relational
+    // shape (AND-ed predicates, GROUP BY, aliases, multiple aggregates)
+    let bases = [
+        "SELECT SUM(a.v + b.v + c.v) FROM a, b, c \
+         WHERE a.k = b.k = c.k WITHIN 120 SECONDS OR ERROR 0.01 CONFIDENCE 95%",
+        "SELECT g, SUM(a.v + b.w) AS total, AVG(a.x) AS mean_x, COUNT(*) \
+         FROM a, b WHERE a.k = b.k AND a.x > 0.5 AND b.y <= 12 AND a.z != 3 \
+         GROUP BY g WITHIN 10 SECONDS",
     ];
-    // the unmutated base must parse — the fuzz loop is mutating a real query
-    assert!(parse(base).is_ok());
+    let noise: &[char] = &[
+        '"', '\'', '`', ';', '(', ')', '+', '*', '=', ',', '.', '%', '<', '>', '!', '0', '9',
+        'x', '_', ' ', '\t', '\n', 'Σ', '∞', '\u{0}',
+    ];
+    for base in bases {
+        // the unmutated base must parse — the fuzz loop mutates a real query
+        assert!(parse(base).is_ok(), "base must parse: {base}");
+    }
     let mut r = Rng::new(0xF022);
-    for case in 0..500 {
+    for case in 0..1000 {
+        let base = bases[r.index(bases.len())];
         let mut chars: Vec<char> = base.chars().collect();
         // 1-4 random mutations: delete, replace, insert, truncate
         for _ in 0..(1 + r.index(4)) {
@@ -275,6 +285,54 @@ fn fuzzed_query_mutations_never_panic() {
             panic!("parser panicked on mutated query (case {case}): {mutated:?}");
         }
     }
+}
+
+#[test]
+fn relational_malformed_queries_error_cleanly_through_the_session() {
+    // new-grammar malformed shapes surface as parse errors or JoinError,
+    // never as panics — including column-resolution failures that only
+    // trip at lowering time
+    use approxjoin::coordinator::EngineConfig;
+    use approxjoin::query::parse;
+    use approxjoin::session::Session;
+
+    for q in [
+        "SELECT g, SUM(a.v) FROM a, b WHERE a.k = b.k",       // bare col, no GROUP BY
+        "SELECT SUM(a.v) FROM a, b WHERE a.x > 1",            // predicate-only WHERE
+        "SELECT SUM(a.v) FROM a, b WHERE a.k = b.k AND a.x >",// dangling cmp
+        "SELECT SUM(a.v) FROM a, b WHERE a.k = b.k GROUP BY", // dangling GROUP BY
+        "SELECT SUM(a.v) FROM a, b WHERE a.k = b.k GROUP g",  // GROUP without BY
+        "SELECT SUM(a.v) AS FROM a, b WHERE a.k = b.k",       // dangling alias
+        "SELECT SUM(a.v) FROM a, b WHERE k = b.k",            // bare join column
+    ] {
+        let r = std::panic::catch_unwind(|| parse(q));
+        match r {
+            Ok(parsed) => assert!(parsed.is_err(), "should reject: {q}"),
+            Err(_) => panic!("parser panicked on: {q}"),
+        }
+    }
+
+    // lowering-time resolution errors come back as JoinError::Runtime
+    let inputs = workload();
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("a", inputs[0].clone())
+    .with_data("b", inputs[1].clone());
+    // GROUP BY a bare column no schema declares: degenerate tables only
+    // resolve qualified names, so this is ambiguous/unknown
+    let err = s
+        .sql("SELECT zzz, SUM(a.v + b.v) FROM a, b WHERE a.k = b.k GROUP BY zzz")
+        .unwrap()
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("join runtime error") || msg.contains("not found"),
+        "expected a clean lowering error, got: {msg}"
+    );
 }
 
 #[test]

@@ -1,0 +1,344 @@
+//! Acceptance: the relational front end end-to-end. A grouped, filtered
+//! SQL query runs through `Session::sql` on every registered strategy,
+//! returns per-group estimates with CIs, `explain()` shows the
+//! pushed-down predicate and the lowered kernel plan — and the legacy
+//! non-grouped API keeps working unchanged.
+
+use approxjoin::coordinator::{EngineConfig, ExecutionMode};
+use approxjoin::relation::{ColumnType, Schema, Value};
+use approxjoin::session::{Session, StrategyChoice};
+use approxjoin::util::Rng;
+
+const GROUPED_SQL: &str = "SELECT g, SUM(a.v + b.w) AS total FROM a, b \
+                           WHERE a.k = b.k AND a.x > 0.5 GROUP BY g";
+
+fn rows(seed: u64) -> (Vec<Vec<Value>>, Vec<Vec<Value>>) {
+    let mut r = Rng::new(seed);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for k in 0..120u64 {
+        let group = r.zipf(5, 1.1) as i64;
+        a.push(vec![
+            Value::Key(k),
+            Value::Int(group),
+            Value::Float(r.exponential(10.0)),
+            Value::Float(r.f64()), // x in [0,1): the a.x > 0.5 predicate halves it
+        ]);
+        for _ in 0..(3 + r.index(5)) {
+            b.push(vec![Value::Key(k), Value::Float(r.exponential(5.0))]);
+        }
+    }
+    (a, b)
+}
+
+fn a_schema() -> Schema {
+    Schema::new(vec![
+        ("k", ColumnType::Key),
+        ("g", ColumnType::Int),
+        ("v", ColumnType::Float),
+        ("x", ColumnType::Float),
+    ])
+}
+
+fn b_schema() -> Schema {
+    Schema::new(vec![("k", ColumnType::Key), ("w", ColumnType::Float)])
+}
+
+fn session(seed: u64) -> Session {
+    let (a, b) = rows(7);
+    Session::without_runtime(EngineConfig {
+        workers: 4,
+        seed,
+        ..Default::default()
+    })
+    .unwrap()
+    .register_table("a", a_schema(), a)
+    .unwrap()
+    .register_table("b", b_schema(), b)
+    .unwrap()
+}
+
+#[test]
+fn grouped_filtered_query_runs_on_every_strategy() {
+    // exact strategies agree on every per-group total; approx covers it
+    let mut exact_reference: Option<Vec<(Value, f64)>> = None;
+    for name in ["native", "repartition", "broadcast", "bloom"] {
+        let mut s = session(1);
+        let out = s
+            .sql(GROUPED_SQL)
+            .unwrap()
+            .strategy(StrategyChoice::named(name))
+            .run()
+            .unwrap();
+        assert_eq!(out.strategy, name);
+        assert_eq!(out.mode, ExecutionMode::Exact);
+        let grouped = out.grouped.expect("grouped query carries grouped results");
+        assert_eq!(grouped.group_column.as_deref(), Some("g"));
+        let agg = &grouped.aggregates[0];
+        assert_eq!(agg.label, "total");
+        assert!(!agg.groups.is_empty());
+        let totals: Vec<(Value, f64)> = agg
+            .groups
+            .iter()
+            .map(|g| (g.group.clone(), g.result.estimate))
+            .collect();
+        for g in &agg.groups {
+            assert_eq!(g.result.error_bound, 0.0, "{name} is exact");
+        }
+        match &exact_reference {
+            None => exact_reference = Some(totals),
+            Some(reference) => {
+                for ((gv, sum), (rv, rsum)) in totals.iter().zip(reference) {
+                    assert_eq!(gv, rv, "{name}: group order differs");
+                    assert!(
+                        (sum - rsum).abs() < 1e-6 * (1.0 + rsum.abs()),
+                        "{name}: group {gv} {sum} vs {rsum}"
+                    );
+                }
+            }
+        }
+    }
+
+    // the sampled strategy: per-group CIs that cover the exact totals
+    let reference = exact_reference.unwrap();
+    let mut s = session(1);
+    let out = s
+        .sql(GROUPED_SQL)
+        .unwrap()
+        .strategy(StrategyChoice::named("approx"))
+        .run()
+        .unwrap();
+    match out.mode {
+        ExecutionMode::Sampled { fraction } => assert!(fraction > 0.0 && fraction < 1.0),
+        m => panic!("expected sampled, got {m:?}"),
+    }
+    let grouped = out.grouped.unwrap();
+    let agg = &grouped.aggregates[0];
+    let mut covered = 0;
+    for (g, (rv, rsum)) in agg.groups.iter().zip(&reference) {
+        assert_eq!(&g.group, rv);
+        assert!(g.result.error_bound > 0.0, "sampled group needs a CI");
+        assert!(g.ledger.samples > 0);
+        assert!(g.ledger.population > 0.0);
+        if (g.result.estimate - rsum).abs() <= g.result.error_bound {
+            covered += 1;
+        }
+    }
+    // ~95% expected; tolerate a couple of stray groups on this small
+    // workload (the statistical coverage trial lives in
+    // tests/grouped_estimates.rs)
+    assert!(
+        covered + 2 >= agg.groups.len(),
+        "only {covered}/{} group CIs cover the exact totals",
+        agg.groups.len()
+    );
+}
+
+#[test]
+fn budgeted_grouped_query_samples_per_group() {
+    let mut s = session(3);
+    let out = s
+        .sql(&format!("{GROUPED_SQL} WITHIN 0.000001 SECONDS"))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(out.strategy, "approx");
+    match out.mode {
+        ExecutionMode::Sampled { fraction } => assert!(fraction < 1.0),
+        m => panic!("expected sampled, got {m:?}"),
+    }
+    let grouped = out.grouped.unwrap();
+    for g in &grouped.aggregates[0].groups {
+        if g.ledger.population > 0.0 {
+            assert!(g.result.error_bound > 0.0);
+        }
+    }
+    let plan = out.plan.expect("session queries carry a plan");
+    assert!(plan.approximate);
+    assert_eq!(
+        plan.measured_shuffle_bytes,
+        Some(out.ledger.total_bytes())
+    );
+}
+
+#[test]
+fn explain_shows_pushdown_and_lowered_plan() {
+    let mut s = session(1);
+    let text = s.sql(GROUPED_SQL).unwrap().explain().unwrap();
+    assert!(text.contains("relational lowering"), "{text}");
+    assert!(text.contains("pushed down below join"), "{text}");
+    assert!(text.contains("a.x > 0.5"), "{text}");
+    assert!(text.contains("group_by"), "{text}");
+    assert!(text.contains("composite"), "{text}");
+    assert!(text.contains("scan a -> filter"), "{text}");
+    assert!(text.contains("<- chosen"), "{text}");
+
+    // pushdown is visible in the measured selectivity: a.x > 0.5 keeps
+    // roughly half of a's 120 rows
+    let plan = s.sql(GROUPED_SQL).unwrap().plan().unwrap();
+    let lowering = plan.lowering.as_ref().unwrap();
+    let pushed = &lowering.pushed[0];
+    assert_eq!(pushed.rows_before, 120);
+    assert!(
+        pushed.rows_after < 80 && pushed.rows_after > 30,
+        "selectivity off: {} -> {}",
+        pushed.rows_before,
+        pushed.rows_after
+    );
+    // and the kernel sees post-filter keys only
+    assert_eq!(plan.stats.rows[0], pushed.rows_after);
+}
+
+#[test]
+fn multiple_aggregates_share_one_lowering() {
+    let mut s = session(1);
+    let out = s
+        .sql(
+            "SELECT g, SUM(a.v + b.w) AS total, AVG(a.v) AS mean_v, COUNT(*) \
+             FROM a, b WHERE a.k = b.k GROUP BY g",
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+    let grouped = out.grouped.unwrap();
+    assert_eq!(grouped.aggregates.len(), 3);
+    assert_eq!(grouped.aggregates[0].label, "total");
+    assert_eq!(grouped.aggregates[1].label, "mean_v");
+    assert_eq!(grouped.aggregates[2].label, "COUNT(*)");
+    // all aggregates see the same groups in the same order
+    for agg in &grouped.aggregates[1..] {
+        assert_eq!(agg.groups.len(), grouped.aggregates[0].groups.len());
+        for (x, y) in agg.groups.iter().zip(&grouped.aggregates[0].groups) {
+            assert_eq!(x.group, y.group);
+        }
+    }
+    // COUNT(*) per group equals the group's population (exact)
+    for g in &grouped.aggregates[2].groups {
+        assert_eq!(g.result.estimate, g.ledger.population);
+        assert_eq!(g.result.error_bound, 0.0);
+    }
+    // AVG per group is total/population where both are exact
+    for (m, t) in grouped.aggregates[1].groups.iter().zip(&grouped.aggregates[0].groups) {
+        if m.ledger.population > 0.0 {
+            assert!(m.result.estimate.is_finite());
+        }
+        assert_eq!(m.ledger.population, t.ledger.population);
+    }
+    // multi-aggregate accounting is tagged per aggregate
+    assert!(out
+        .metrics
+        .stages
+        .iter()
+        .any(|st| st.name.starts_with("agg0/")));
+    assert!(out
+        .ledger
+        .stages
+        .iter()
+        .any(|st| st.stage.starts_with("agg2/")));
+}
+
+#[test]
+fn ungrouped_relational_query_and_legacy_path_coexist() {
+    // predicates without GROUP BY: relational path, single `*` group
+    let mut s = session(1);
+    let out = s
+        .sql("SELECT SUM(a.v + b.w) FROM a, b WHERE a.k = b.k AND a.x > 0.5")
+        .unwrap()
+        .run()
+        .unwrap();
+    let grouped = out.grouped.unwrap();
+    assert!(grouped.group_column.is_none());
+    assert_eq!(grouped.aggregates[0].groups.len(), 1);
+    assert_eq!(
+        grouped.aggregates[0].groups[0].group,
+        Value::Str("*".into())
+    );
+    assert_eq!(
+        grouped.aggregates[0].groups[0].result.estimate,
+        out.result.estimate
+    );
+
+    // the legacy two-column dataset path is untouched: no grouped block
+    use approxjoin::data::{generate_overlapping, SyntheticSpec};
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 5_000,
+        overlap_fraction: 0.1,
+        lambda: 20.0,
+        partitions: 4,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut legacy = Session::without_runtime(EngineConfig {
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("a", inputs[0].clone())
+    .with_data("b", inputs[1].clone());
+    let out = legacy
+        .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(out.grouped.is_none());
+    assert!(out.result.estimate != 0.0);
+}
+
+#[test]
+fn grouped_error_budget_uses_per_aggregate_feedback() {
+    let mut s = session(9);
+    let sql = format!("{GROUPED_SQL} ERROR 2.0 CONFIDENCE 95%");
+    let first = s.sql(&sql).unwrap().run().unwrap();
+    match first.mode {
+        ExecutionMode::Sampled { .. } => {}
+        m => panic!("error budget must sample, got {m:?}"),
+    }
+    // the feedback store is keyed per (query, aggregate) fingerprint
+    let q = approxjoin::query::parse(&sql).unwrap();
+    let agg_fp = format!("{}#{}", q.fingerprint(), q.aggregates[0].render());
+    assert!(s.engine_mut().feedback.has(&agg_fp), "missing {agg_fp}");
+    // a second run with stored sigmas still produces grouped CIs
+    let second = s.sql(&sql).unwrap().run().unwrap();
+    assert!(second.grouped.is_some());
+}
+
+#[test]
+fn degenerate_tables_accept_group_by_on_value_column() {
+    // GROUP BY over a dataset-backed (degenerate) table groups by its
+    // value column — every distinct value becomes a group
+    use approxjoin::data::{Dataset, Record};
+    let a = Dataset::from_records_unpartitioned(
+        "a",
+        vec![
+            Record::new(1, 10.0),
+            Record::new(2, 10.0),
+            Record::new(3, 20.0),
+        ],
+        2,
+        64,
+    );
+    let b = Dataset::from_records_unpartitioned(
+        "b",
+        vec![Record::new(1, 1.0), Record::new(2, 2.0), Record::new(3, 3.0)],
+        2,
+        64,
+    );
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("a", a)
+    .with_data("b", b);
+    let out = s
+        .sql("SELECT a.v, SUM(b.v) FROM a, b WHERE a.k = b.k GROUP BY a.v")
+        .unwrap()
+        .run()
+        .unwrap();
+    let grouped = out.grouped.unwrap();
+    let agg = &grouped.aggregates[0];
+    assert_eq!(agg.groups.len(), 2);
+    assert_eq!(agg.groups[0].group, Value::Float(10.0));
+    assert_eq!(agg.groups[0].result.estimate, 3.0); // b values 1 + 2
+    assert_eq!(agg.groups[1].result.estimate, 3.0); // b value 3
+}
