@@ -1,32 +1,47 @@
 //! §Perf: hot-path microbenchmarks for the optimization pass — throughput
 //! of (1) the stratified edge sampler, (2) Bloom probing native vs the AOT
-//! XLA artifact, (3) per-stratum aggregation native vs XLA, (4) the exact
-//! cross product, and (5) end-to-end approx_join, sequential vs the
-//! partition-parallel runtime (the ≥2x-at-8-partitions budget). Results
-//! feed EXPERIMENTS.md §Perf (before/after log).
+//! XLA artifact and standard vs register-blocked layout, (3) per-stratum
+//! aggregation native vs XLA, (4) the exact cross product and the
+//! hashmap-vs-columnar cogroup, and (5) end-to-end approx_join, sequential
+//! vs the partition-parallel runtime (the ≥2x-at-8-partitions budget).
+//! Results feed EXPERIMENTS.md §Perf (before/after log).
+//!
+//! In quick mode the cogroup section *asserts* that the columnar path is
+//! at least as fast as the hashmap path — the PR-5 hot-path regression
+//! gate the CI bench-smoke job enforces.
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
 //!   BENCH_JSON=path            merge a machine-readable section into the
-//!                              given JSON report (BENCH_PR2.json)
+//!                              given JSON report (BENCH_PR5.json)
 
-use approxjoin::bloom::BloomFilter;
+use approxjoin::bloom::{BlockedBloomFilter, BloomFilter};
 use approxjoin::cluster::{SimCluster, TimeModel};
-use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::data::{generate_overlapping, Record, SyntheticSpec};
 use approxjoin::join::approx::{ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams};
 use approxjoin::join::bloom_join::{KeyProber, NativeProber};
 use approxjoin::join::{cross_product_agg, ApproxJoin, CombineOp, JoinStrategy};
 use approxjoin::row;
-use approxjoin::runtime::PjrtRuntime;
+use approxjoin::runtime::{CogroupColumns, PjrtRuntime};
 use approxjoin::sampling::edge_sampling::sample_edges_with_replacement;
 use approxjoin::stats::{clt_sum, EstimatorKind};
 use approxjoin::util::{fmt, Json, Rng, Table};
+use std::collections::HashMap;
 use std::time::Instant;
 
 fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let out = f();
     (out, t0.elapsed().as_secs_f64())
+}
+
+/// Best-of-3 wall time (allocator/cache warm-up noise hurts the slower
+/// path more; the minimum is the honest throughput of either).
+fn time_best3<T>(mut f: impl FnMut() -> T) -> (T, f64) {
+    let (_, d1) = time(&mut f);
+    let (_, d2) = time(&mut f);
+    let (out, d3) = time(&mut f);
+    (out, d1.min(d2).min(d3))
 }
 
 fn quick() -> bool {
@@ -101,6 +116,80 @@ fn main() {
         ]);
     }
 
+    // 2b) probe layout: standard (k scattered reads) vs register-blocked
+    // (one 64-byte line per key). Same geometry, same inserted keys. The
+    // hit workload evaluates all k probes per key (the high-overlap /
+    // worst case where layout matters most); the miss workload is
+    // uniform-random keys, where the standard filter often early-exits.
+    let probe_log2 = if quick { 23 } else { 24 }; // 1 MB / 2 MB of bits
+    let probe_items = if quick { 400_000u64 } else { 1_000_000 };
+    let n_probe = if quick { 1_000_000usize } else { 2_000_000 };
+    let mut std_f = BloomFilter::new(probe_log2, 5);
+    let mut blk_f = BlockedBloomFilter::new(probe_log2, 5);
+    let inserted: Vec<u32> = (0..probe_items).map(|_| r.next_u32()).collect();
+    for &k in &inserted {
+        std_f.insert(k);
+        blk_f.insert(k);
+    }
+    let hit_keys: Vec<u32> = (0..n_probe).map(|i| inserted[i % inserted.len()]).collect();
+    let miss_keys: Vec<u32> = (0..n_probe).map(|_| r.next_u32()).collect();
+    let count_std = |keys: &[u32]| -> u64 {
+        keys.iter().map(|&k| std_f.contains(k) as u64).sum()
+    };
+    let count_blk = |keys: &[u32]| -> u64 {
+        keys.iter().map(|&k| blk_f.contains(k) as u64).sum()
+    };
+    let (std_hits, dt_std_hit) = time_best3(|| count_std(&hit_keys));
+    let (blk_hits, dt_blk_hit) = time_best3(|| count_blk(&hit_keys));
+    let (_, dt_std_miss) = time_best3(|| count_std(&miss_keys));
+    let (_, dt_blk_miss) = time_best3(|| count_blk(&miss_keys));
+    assert_eq!(std_hits, n_probe as u64, "standard filter lost a member");
+    assert_eq!(blk_hits, n_probe as u64, "blocked filter lost a member");
+    let std_hit_rate = n_probe as f64 / dt_std_hit;
+    let blk_hit_rate = n_probe as f64 / dt_blk_hit;
+    t.row(row![
+        "bloom probe hits (standard)",
+        fmt::count(n_probe as u64),
+        fmt::duration(dt_std_hit),
+        format!("{}/s", fmt::count(std_hit_rate as u64))
+    ]);
+    t.row(row![
+        "bloom probe hits (blocked)",
+        fmt::count(n_probe as u64),
+        fmt::duration(dt_blk_hit),
+        format!(
+            "{}/s ({} vs standard)",
+            fmt::count(blk_hit_rate as u64),
+            fmt::speedup(blk_hit_rate / std_hit_rate)
+        )
+    ]);
+    t.row(row![
+        "bloom probe misses (standard)",
+        fmt::count(n_probe as u64),
+        fmt::duration(dt_std_miss),
+        format!("{}/s", fmt::count((n_probe as f64 / dt_std_miss) as u64))
+    ]);
+    t.row(row![
+        "bloom probe misses (blocked)",
+        fmt::count(n_probe as u64),
+        fmt::duration(dt_blk_miss),
+        format!("{}/s", fmt::count((n_probe as f64 / dt_blk_miss) as u64))
+    ]);
+    json.push(("probe_hit_keys_per_sec_standard", Json::num(std_hit_rate)));
+    json.push(("probe_hit_keys_per_sec_blocked", Json::num(blk_hit_rate)));
+    json.push((
+        "probe_miss_keys_per_sec_standard",
+        Json::num(n_probe as f64 / dt_std_miss),
+    ));
+    json.push((
+        "probe_miss_keys_per_sec_blocked",
+        Json::num(n_probe as f64 / dt_blk_miss),
+    ));
+    json.push((
+        "probe_blocked_speedup_hits",
+        Json::num(blk_hit_rate / std_hit_rate),
+    ));
+
     // 3) join_agg batches: native vs XLA
     let b = runtime
         .as_ref()
@@ -149,6 +238,90 @@ fn main() {
         fmt::duration(dt),
         format!("{}/s", fmt::count((agg.population / dt) as u64))
     ]);
+
+    // 4b) cogroup layout: per-key HashMap<u64, Vec<Vec<f64>>> (the old
+    // kernel layout, reproduced inline as the baseline) vs the flat
+    // columnar sort/run-directory buffers. Both build from the same
+    // shuffled record streams and then drain every joinable key's sides
+    // (the consumption shape of the sampling / cross-product stages).
+    let cg_rows = if quick { 120_000usize } else { 600_000 };
+    let cg_keys = if quick { 15_000u64 } else { 60_000 };
+    let per_input: Vec<Vec<Record>> = (0..2)
+        .map(|_| {
+            (0..cg_rows)
+                .map(|_| Record::new(r.below(cg_keys), r.f64()))
+                .collect()
+        })
+        .collect();
+    let total_rows = (2 * cg_rows) as f64;
+    let hashmap_pass = || -> f64 {
+        let n = per_input.len();
+        let mut groups: HashMap<u64, Vec<Vec<f64>>> = HashMap::new();
+        for (i, recs) in per_input.iter().enumerate() {
+            for rec in recs {
+                groups.entry(rec.key).or_insert_with(|| vec![Vec::new(); n])[i]
+                    .push(rec.value);
+            }
+        }
+        groups.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+        let mut keys: Vec<u64> = groups.keys().copied().collect();
+        keys.sort_unstable();
+        let mut acc = 0.0;
+        for key in keys {
+            for side in &groups[&key] {
+                acc += side.iter().sum::<f64>();
+            }
+        }
+        acc
+    };
+    let mut cg_buf = CogroupColumns::new(2);
+    let mut columnar_pass = || -> f64 {
+        let slices: Vec<&[Record]> = per_input.iter().map(|v| v.as_slice()).collect();
+        cg_buf.rebuild(&slices);
+        let mut acc = 0.0;
+        for idx in 0..cg_buf.num_keys() {
+            for i in 0..2 {
+                acc += cg_buf.side(idx, i).iter().sum::<f64>();
+            }
+        }
+        acc
+    };
+    let (hm_sum, dt_hm) = time_best3(hashmap_pass);
+    let (col_sum, dt_col) = time_best3(&mut columnar_pass);
+    assert!(
+        (hm_sum - col_sum).abs() < 1e-6 * (1.0 + hm_sum.abs()),
+        "cogroup layouts disagree: {hm_sum} vs {col_sum}"
+    );
+    let hm_rate = total_rows / dt_hm;
+    let col_rate = total_rows / dt_col;
+    t.row(row![
+        "cogroup build+drain (hashmap)",
+        format!("{} rows", fmt::count(total_rows as u64)),
+        fmt::duration(dt_hm),
+        format!("{}/s", fmt::count(hm_rate as u64))
+    ]);
+    t.row(row![
+        "cogroup build+drain (columnar)",
+        format!("{} rows", fmt::count(total_rows as u64)),
+        fmt::duration(dt_col),
+        format!(
+            "{}/s ({} vs hashmap)",
+            fmt::count(col_rate as u64),
+            fmt::speedup(col_rate / hm_rate)
+        )
+    ]);
+    json.push(("cogroup_rows_per_sec_hashmap", Json::num(hm_rate)));
+    json.push(("cogroup_rows_per_sec_columnar", Json::num(col_rate)));
+    json.push(("cogroup_columnar_speedup", Json::num(col_rate / hm_rate)));
+    if quick {
+        // the CI bench-smoke regression gate: the columnar layout must
+        // not lose to the hashmap layout it replaced
+        assert!(
+            col_rate >= hm_rate,
+            "columnar cogroup regressed below the hashmap path: \
+             {col_rate:.0} < {hm_rate:.0} rows/s"
+        );
+    }
 
     // 5) end-to-end approx_join wall time: sequential vs the
     // partition-parallel runtime (same seed -> bit-identical output)

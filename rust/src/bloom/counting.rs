@@ -3,26 +3,38 @@
 //! 4-bit-per-cell (here: 8-bit, the common implementation) size cost —
 //! exactly the trade-off Figure 15 plots.
 
-use super::hashing::{self, fold_key, probe_positions};
+use super::hashing::{self, fold_key};
 use super::standard::BloomFilter;
+use super::{positions_for, FilterKind, JoinFilter};
 
-/// Counting Bloom filter with u8 saturating cells.
+/// Counting Bloom filter with u8 saturating cells. Cells are addressed by
+/// the same position family as the bit filters — standard scattered
+/// positions by default, or cache-line-blocked positions
+/// ([`FilterKind::Blocked`]) so the sketch's bit view collapses to exactly
+/// a [`super::BlockedBloomFilter`] layout.
 #[derive(Clone, Debug)]
 pub struct CountingBloomFilter {
     cells: Vec<u8>,
     log2_cells: u32,
     num_hashes: u32,
     items: u64,
+    kind: FilterKind,
 }
 
 impl CountingBloomFilter {
     pub fn new(log2_cells: u32, num_hashes: u32) -> Self {
-        assert!((5..=30).contains(&log2_cells));
+        Self::new_kind(log2_cells, num_hashes, FilterKind::Standard)
+    }
+
+    /// A counting filter whose cells follow `kind`'s addressing scheme.
+    pub fn new_kind(log2_cells: u32, num_hashes: u32, kind: FilterKind) -> Self {
+        assert!((kind.min_log2().max(5)..=30).contains(&log2_cells));
         Self {
             cells: vec![0; 1usize << log2_cells],
             log2_cells,
             num_hashes,
             items: 0,
+            kind,
         }
     }
 
@@ -34,8 +46,14 @@ impl CountingBloomFilter {
     /// window sketch from that config, not from here, or the geometries
     /// can mismatch.
     pub fn with_capacity(items: u64, fp_rate: f64) -> Self {
-        let (log2, h) = hashing::pow2_geometry(items, fp_rate, 6, 26);
-        Self::new(log2, h)
+        Self::with_capacity_kind(items, fp_rate, FilterKind::Standard)
+    }
+
+    /// Capacity-sized filter with `kind` cell addressing (blocked kinds
+    /// floor the cell count at one 512-cell block).
+    pub fn with_capacity_kind(items: u64, fp_rate: f64, kind: FilterKind) -> Self {
+        let (log2, h) = hashing::pow2_geometry(items, fp_rate, kind.min_log2().max(6), 26);
+        Self::new_kind(log2, h, kind)
     }
 
     pub fn log2_cells(&self) -> u32 {
@@ -46,8 +64,12 @@ impl CountingBloomFilter {
         self.num_hashes
     }
 
+    pub fn kind(&self) -> FilterKind {
+        self.kind
+    }
+
     pub fn insert(&mut self, key: u32) {
-        for p in probe_positions(key, self.num_hashes, self.log2_cells) {
+        for p in positions_for(self.kind, key, self.num_hashes, self.log2_cells) {
             let c = &mut self.cells[p as usize];
             *c = c.saturating_add(1);
         }
@@ -55,7 +77,8 @@ impl CountingBloomFilter {
     }
 
     pub fn contains(&self, key: u32) -> bool {
-        probe_positions(key, self.num_hashes, self.log2_cells).all(|p| self.cells[p as usize] > 0)
+        positions_for(self.kind, key, self.num_hashes, self.log2_cells)
+            .all(|p| self.cells[p as usize] > 0)
     }
 
     /// Remove a key. Saturated cells (255) are left untouched to avoid
@@ -64,7 +87,7 @@ impl CountingBloomFilter {
         if !self.contains(key) {
             return;
         }
-        for p in probe_positions(key, self.num_hashes, self.log2_cells) {
+        for p in positions_for(self.kind, key, self.num_hashes, self.log2_cells) {
             let c = &mut self.cells[p as usize];
             if *c > 0 && *c < u8::MAX {
                 *c -= 1;
@@ -73,10 +96,15 @@ impl CountingBloomFilter {
         self.items = self.items.saturating_sub(1);
     }
 
-    /// Cell-wise sum (multiset union).
-    pub fn union_with(&mut self, other: &CountingBloomFilter) {
+    fn check_geometry(&self, other: &CountingBloomFilter) {
         assert_eq!(self.log2_cells, other.log2_cells, "geometry mismatch");
         assert_eq!(self.num_hashes, other.num_hashes, "geometry mismatch");
+        assert_eq!(self.kind, other.kind, "filter kind mismatch");
+    }
+
+    /// Cell-wise sum (multiset union).
+    pub fn union_with(&mut self, other: &CountingBloomFilter) {
+        self.check_geometry(other);
         for (a, b) in self.cells.iter_mut().zip(&other.cells) {
             *a = a.saturating_add(*b);
         }
@@ -85,8 +113,7 @@ impl CountingBloomFilter {
 
     /// Cell-wise min — the CBF analogue of the AND join-filter merge.
     pub fn intersect_with(&mut self, other: &CountingBloomFilter) {
-        assert_eq!(self.log2_cells, other.log2_cells, "geometry mismatch");
-        assert_eq!(self.num_hashes, other.num_hashes, "geometry mismatch");
+        self.check_geometry(other);
         for (a, b) in self.cells.iter_mut().zip(&other.cells) {
             *a = (*a).min(*b);
         }
@@ -110,14 +137,44 @@ impl CountingBloomFilter {
     /// bit set): membership answers are identical, at 1/8 the bytes. This is
     /// what the streaming runtime broadcasts as the per-window join filter —
     /// the counters stay at the workers, only the bit view travels.
+    /// Standard-addressed filters only; blocked sketches collapse through
+    /// [`CountingBloomFilter::to_join_filter`].
     pub fn to_bit_filter(&self) -> BloomFilter {
+        assert_eq!(
+            self.kind,
+            FilterKind::Standard,
+            "blocked sketches collapse via to_join_filter"
+        );
+        match self.to_join_filter() {
+            JoinFilter::Standard(f) => f,
+            JoinFilter::Blocked(_) => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Collapse to the bit filter of the same geometry *and kind* (cell > 0
+    /// ⇔ bit set). Because cells and bits share one position family per
+    /// kind, membership answers are identical to the counters' at 1/8 the
+    /// bytes — for blocked sketches the view is a genuine
+    /// [`super::BlockedBloomFilter`], probeable in one cache line.
+    pub fn to_join_filter(&self) -> JoinFilter {
         let mut words = vec![0u32; self.cells.len() / 32];
         for (p, &c) in self.cells.iter().enumerate() {
             if c > 0 {
                 words[p >> 5] |= 1 << (p & 31);
             }
         }
-        BloomFilter::from_words(words, self.log2_cells, self.num_hashes)
+        match self.kind {
+            FilterKind::Standard => JoinFilter::Standard(BloomFilter::from_words(
+                words,
+                self.log2_cells,
+                self.num_hashes,
+            )),
+            FilterKind::Blocked => JoinFilter::Blocked(super::BlockedBloomFilter::from_words(
+                words,
+                self.log2_cells,
+                self.num_hashes,
+            )),
+        }
     }
 
     pub fn items(&self) -> u64 {
@@ -256,6 +313,40 @@ mod tests {
             let k = r.next_u64();
             assert_eq!(bits.contains_key64(k), f.contains_key64(k), "probe {k}");
         }
+    }
+
+    #[test]
+    fn blocked_kind_churn_and_bit_view() {
+        use crate::bloom::{FilterKind, JoinFilter};
+        let mut r = Rng::new(33);
+        let mut f = CountingBloomFilter::new_kind(14, 5, FilterKind::Blocked);
+        let keys: Vec<u64> = (0..1500).map(|_| r.next_u64()).collect();
+        for &k in &keys {
+            f.insert_key64(k);
+        }
+        for &k in &keys[..700] {
+            f.remove_key64(k);
+        }
+        assert!(
+            keys[700..].iter().all(|&k| f.contains_key64(k)),
+            "blocked removal must not break remaining keys"
+        );
+        let view = f.to_join_filter();
+        assert!(matches!(view, JoinFilter::Blocked(_)));
+        for &k in &keys {
+            assert_eq!(view.contains_key64(k), f.contains_key64(k), "key {k}");
+        }
+        for _ in 0..5000 {
+            let k = r.next_u64();
+            assert_eq!(view.contains_key64(k), f.contains_key64(k), "probe {k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "to_join_filter")]
+    fn blocked_kind_rejects_standard_bit_view() {
+        let f = CountingBloomFilter::new_kind(14, 4, crate::bloom::FilterKind::Blocked);
+        let _ = f.to_bit_filter();
     }
 
     #[test]

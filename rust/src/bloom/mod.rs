@@ -1,15 +1,327 @@
 //! Bloom-filter substrate (paper §3.1 + Appendix B): the standard filter
-//! used by the join-filter construction, plus the three alternative designs
-//! the paper analyzes (counting, invertible, scalable) and the shared hash
-//! family that keeps Rust and the AOT Pallas kernel bit-compatible.
+//! used by the join-filter construction, the three alternative designs
+//! the paper analyzes (counting, invertible, scalable), the cache-line
+//! [`BlockedBloomFilter`] hot-path variant, and the shared hash family
+//! that keeps Rust and the AOT Pallas kernel bit-compatible.
+//!
+//! [`JoinFilter`] is the kind-dispatched filter the join kernel builds,
+//! merges and broadcasts: [`FilterKind::Standard`] is the default
+//! bit-compatible-with-the-XLA-artifact layout; [`FilterKind::Blocked`]
+//! is the opt-in one-cache-line-per-probe layout (same no-false-negative
+//! and OR/AND algebra, slightly higher false-positive rate).
 
+pub mod blocked;
 pub mod counting;
 pub mod hashing;
 pub mod invertible;
 pub mod scalable;
 pub mod standard;
 
+pub use blocked::BlockedBloomFilter;
 pub use counting::CountingBloomFilter;
 pub use invertible::InvertibleBloomFilter;
 pub use scalable::ScalableBloomFilter;
 pub use standard::BloomFilter;
+
+/// Which bit layout the join kernel's filters use — the planner/engine
+/// config switch behind the blocked hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FilterKind {
+    /// k independent scattered bit positions (the paper's filter; the AOT
+    /// `bloom_probe` artifact understands exactly this layout).
+    #[default]
+    Standard,
+    /// All k bits inside one 64-byte block: one memory access per probe,
+    /// two hash draws total, at a slightly higher false-positive rate.
+    Blocked,
+}
+
+impl FilterKind {
+    /// The minimum `log2_bits` / `log2_cells` a filter of this kind
+    /// supports (blocked filters need at least one 512-bit block).
+    pub fn min_log2(&self) -> u32 {
+        match self {
+            FilterKind::Standard => 5,
+            FilterKind::Blocked => blocked::BLOCK_SHIFT,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FilterKind::Standard => "standard",
+            FilterKind::Blocked => "blocked",
+        }
+    }
+}
+
+impl std::fmt::Display for FilterKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Either-style iterator unifying the two probe-position sequences.
+enum Positions<A, B> {
+    Standard(A),
+    Blocked(B),
+}
+
+impl<A: Iterator<Item = u32>, B: Iterator<Item = u32>> Iterator for Positions<A, B> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        match self {
+            Positions::Standard(it) => it.next(),
+            Positions::Blocked(it) => it.next(),
+        }
+    }
+}
+
+/// The probe/cell positions of `key` under either addressing scheme —
+/// shared by the counting sketch so its cell layout matches the bit
+/// filter of the same kind exactly.
+#[inline]
+pub fn positions_for(
+    kind: FilterKind,
+    key: u32,
+    num_hashes: u32,
+    log2_bits: u32,
+) -> impl Iterator<Item = u32> {
+    match kind {
+        FilterKind::Standard => {
+            Positions::Standard(hashing::probe_positions(key, num_hashes, log2_bits))
+        }
+        FilterKind::Blocked => {
+            Positions::Blocked(blocked::blocked_probe_positions(key, num_hashes, log2_bits))
+        }
+    }
+}
+
+/// What a join run reports about the filter it built — kind, geometry,
+/// and the fill-derived false-positive estimate measured *after* the
+/// build; `JoinPlan::explain()` renders it next to the predictions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FilterReport {
+    pub kind: FilterKind,
+    pub log2_bits: u32,
+    pub num_hashes: u32,
+    /// Expected fp rate at the measured fill (block-aware for blocked
+    /// filters: mean over blocks of fill_b^h).
+    pub fp_rate: f64,
+    pub size_bytes: u64,
+}
+
+impl FilterReport {
+    pub fn render(&self) -> String {
+        format!(
+            "{} filter 2^{} bits h={} ({} B), measured-fill fp {:.4}%",
+            self.kind,
+            self.log2_bits,
+            self.num_hashes,
+            self.size_bytes,
+            self.fp_rate * 100.0
+        )
+    }
+}
+
+/// A join-kernel filter of either kind, with the uniform build / OR / AND
+/// / broadcast surface Algorithm 1 needs. The standard arm wraps the
+/// exact [`BloomFilter`] the AOT prober understands; the blocked arm is
+/// the cache-line hot path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JoinFilter {
+    Standard(BloomFilter),
+    Blocked(BlockedBloomFilter),
+}
+
+impl JoinFilter {
+    /// An empty filter of the given kind and geometry.
+    pub fn new(kind: FilterKind, log2_bits: u32, num_hashes: u32) -> Self {
+        match kind {
+            FilterKind::Standard => JoinFilter::Standard(BloomFilter::new(log2_bits, num_hashes)),
+            FilterKind::Blocked => {
+                JoinFilter::Blocked(BlockedBloomFilter::new(log2_bits, num_hashes))
+            }
+        }
+    }
+
+    pub fn kind(&self) -> FilterKind {
+        match self {
+            JoinFilter::Standard(_) => FilterKind::Standard,
+            JoinFilter::Blocked(_) => FilterKind::Blocked,
+        }
+    }
+
+    /// The wrapped standard filter, when this is one — the XLA prober
+    /// only consumes the standard layout.
+    pub fn as_standard(&self) -> Option<&BloomFilter> {
+        match self {
+            JoinFilter::Standard(f) => Some(f),
+            JoinFilter::Blocked(_) => None,
+        }
+    }
+
+    pub fn log2_bits(&self) -> u32 {
+        match self {
+            JoinFilter::Standard(f) => f.log2_bits(),
+            JoinFilter::Blocked(f) => f.log2_bits(),
+        }
+    }
+
+    pub fn num_hashes(&self) -> u32 {
+        match self {
+            JoinFilter::Standard(f) => f.num_hashes(),
+            JoinFilter::Blocked(f) => f.num_hashes(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            JoinFilter::Standard(f) => f.size_bytes(),
+            JoinFilter::Blocked(f) => f.size_bytes(),
+        }
+    }
+
+    pub fn items(&self) -> u64 {
+        match self {
+            JoinFilter::Standard(f) => f.items(),
+            JoinFilter::Blocked(f) => f.items(),
+        }
+    }
+
+    pub fn insert(&mut self, key: u32) {
+        match self {
+            JoinFilter::Standard(f) => f.insert(key),
+            JoinFilter::Blocked(f) => f.insert(key),
+        }
+    }
+
+    pub fn insert_key64(&mut self, key: u64) {
+        self.insert(hashing::fold_key(key));
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u32) -> bool {
+        match self {
+            JoinFilter::Standard(f) => f.contains(key),
+            JoinFilter::Blocked(f) => f.contains(key),
+        }
+    }
+
+    #[inline]
+    pub fn contains_key64(&self, key: u64) -> bool {
+        self.contains(hashing::fold_key(key))
+    }
+
+    /// OR-merge; both sides must be the same kind and geometry.
+    pub fn union_with(&mut self, other: &JoinFilter) {
+        match (self, other) {
+            (JoinFilter::Standard(a), JoinFilter::Standard(b)) => a.union_with(b),
+            (JoinFilter::Blocked(a), JoinFilter::Blocked(b)) => a.union_with(b),
+            _ => panic!("filter kind mismatch in union"),
+        }
+    }
+
+    /// AND-merge; both sides must be the same kind and geometry.
+    pub fn intersect_with(&mut self, other: &JoinFilter) {
+        match (self, other) {
+            (JoinFilter::Standard(a), JoinFilter::Standard(b)) => a.intersect_with(b),
+            (JoinFilter::Blocked(a), JoinFilter::Blocked(b)) => a.intersect_with(b),
+            _ => panic!("filter kind mismatch in intersection"),
+        }
+    }
+
+    /// Expected false-positive rate at the current fill (block-aware on
+    /// the blocked arm).
+    pub fn current_fp_rate(&self) -> f64 {
+        match self {
+            JoinFilter::Standard(f) => f.current_fp_rate(),
+            JoinFilter::Blocked(f) => f.current_fp_rate(),
+        }
+    }
+
+    pub fn estimate_cardinality(&self) -> f64 {
+        match self {
+            JoinFilter::Standard(f) => f.estimate_cardinality(),
+            JoinFilter::Blocked(f) => f.estimate_cardinality(),
+        }
+    }
+
+    /// The post-build filter report `explain()` prints.
+    pub fn report(&self) -> FilterReport {
+        FilterReport {
+            kind: self.kind(),
+            log2_bits: self.log2_bits(),
+            num_hashes: self.num_hashes(),
+            fp_rate: self.current_fp_rate(),
+            size_bytes: self.size_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positions_for_dispatches_to_both_schemes() {
+        let std_pos: Vec<u32> = positions_for(FilterKind::Standard, 42, 5, 20).collect();
+        assert_eq!(std_pos, vec![650960, 828291, 1005622, 134377, 311708]);
+        let blk_pos: Vec<u32> = positions_for(FilterKind::Blocked, 42, 5, 20).collect();
+        let block = blk_pos[0] / blocked::BLOCK_BITS;
+        assert!(blk_pos.iter().all(|&p| p / blocked::BLOCK_BITS == block));
+        assert_eq!(
+            blk_pos,
+            blocked::blocked_probe_positions(42, 5, 20).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn join_filter_uniform_surface_both_kinds() {
+        for kind in [FilterKind::Standard, FilterKind::Blocked] {
+            let mut a = JoinFilter::new(kind, 16, 5);
+            let mut b = JoinFilter::new(kind, 16, 5);
+            for k in 0..500u64 {
+                a.insert_key64(k);
+                b.insert_key64(k + 250);
+            }
+            let mut u = a.clone();
+            u.union_with(&b);
+            assert!((0..750u64).all(|k| u.contains_key64(k)), "{kind}");
+            a.intersect_with(&b);
+            assert!((250..500u64).all(|k| a.contains_key64(k)), "{kind}");
+            assert_eq!(a.kind(), kind);
+            assert_eq!(a.size_bytes(), (1u64 << 16) / 8);
+            let r = a.report();
+            assert_eq!(r.kind, kind);
+            assert!(r.fp_rate >= 0.0 && r.fp_rate < 1.0);
+            assert!(r.render().contains(kind.label()));
+        }
+    }
+
+    #[test]
+    fn as_standard_only_on_standard() {
+        assert!(JoinFilter::new(FilterKind::Standard, 12, 4)
+            .as_standard()
+            .is_some());
+        assert!(JoinFilter::new(FilterKind::Blocked, 12, 4)
+            .as_standard()
+            .is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "kind mismatch")]
+    fn mixed_kind_merge_panics() {
+        let mut a = JoinFilter::new(FilterKind::Standard, 12, 4);
+        let b = JoinFilter::new(FilterKind::Blocked, 12, 4);
+        a.union_with(&b);
+    }
+
+    #[test]
+    fn min_log2_per_kind() {
+        assert_eq!(FilterKind::Standard.min_log2(), 5);
+        assert_eq!(FilterKind::Blocked.min_log2(), 9);
+        assert_eq!(FilterKind::default(), FilterKind::Standard);
+    }
+}

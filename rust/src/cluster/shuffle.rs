@@ -8,6 +8,12 @@
 //! parallelizing here. (The filtering stage's expensive predicate — the
 //! Bloom probe — runs data-parallel in `join::bloom_join` before its
 //! shuffle walk.)
+//!
+//! Filter traffic (tree-reduce merges, join-filter broadcasts) is
+//! accounted through the same [`Stage`] transfer primitives by
+//! [`super::tree_reduce`]; payload sizes come from
+//! [`super::tree_reduce::MergePayload`], so standard and blocked filter
+//! layouts of equal geometry cost identical bytes on the wire.
 
 use super::{SimCluster, Stage};
 use crate::data::{partition_of, Dataset, Record};

@@ -5,17 +5,44 @@
 //! workers adds tree *levels*, keeping the driver load flat.
 
 use super::{SimCluster, Stage};
-use crate::bloom::BloomFilter;
+use crate::bloom::{BlockedBloomFilter, BloomFilter, JoinFilter};
+use crate::join::bloom_join::FilterConfig;
+
+/// Anything the reduction tree can ship: it only needs the payload's wire
+/// size to account each merge's transfer. Implemented for every filter
+/// shape the kernel merges (standard, blocked, and the kind-dispatched
+/// [`JoinFilter`]).
+pub trait MergePayload {
+    fn payload_bytes(&self) -> u64;
+}
+
+impl MergePayload for BloomFilter {
+    fn payload_bytes(&self) -> u64 {
+        self.size_bytes()
+    }
+}
+
+impl MergePayload for BlockedBloomFilter {
+    fn payload_bytes(&self) -> u64 {
+        self.size_bytes()
+    }
+}
+
+impl MergePayload for JoinFilter {
+    fn payload_bytes(&self) -> u64 {
+        self.size_bytes()
+    }
+}
 
 /// Merge one filter per worker into a single filter at worker 0 via a
 /// binary reduction tree, accounting one filter-sized transfer per merge.
 /// `op` is the merge (union for partition→dataset, intersection never goes
 /// through the tree — it happens once at the master over n dataset filters).
-pub fn tree_reduce(
+pub fn tree_reduce<F: MergePayload>(
     stage: &mut Stage,
-    mut filters: Vec<(usize, BloomFilter)>,
-    op: impl Fn(&mut BloomFilter, &BloomFilter),
-) -> Option<BloomFilter> {
+    mut filters: Vec<(usize, F)>,
+    op: impl Fn(&mut F, &F),
+) -> Option<F> {
     if filters.is_empty() {
         return None;
     }
@@ -24,7 +51,7 @@ pub fn tree_reduce(
         let mut it = filters.into_iter();
         while let Some((w_dst, mut acc)) = it.next() {
             if let Some((w_src, other)) = it.next() {
-                stage.transfer(w_src, w_dst, other.size_bytes());
+                stage.transfer(w_src, w_dst, other.payload_bytes());
                 stage.task(w_dst, || op(&mut acc, &other));
             }
             next.push((w_dst, acc));
@@ -47,20 +74,42 @@ pub fn build_dataset_filter(
     log2_bits: u32,
     num_hashes: u32,
 ) -> BloomFilter {
+    let cfg = FilterConfig {
+        log2_bits,
+        num_hashes,
+        kind: crate::bloom::FilterKind::Standard,
+    };
+    match build_dataset_join_filter(cluster, stage, dataset, cfg) {
+        JoinFilter::Standard(f) => f,
+        JoinFilter::Blocked(_) => unreachable!("standard kind requested"),
+    }
+}
+
+/// Kind-dispatched [`build_dataset_filter`]: the same map-shards +
+/// tree-reduce construction, building filters of the configured
+/// [`crate::bloom::FilterKind`]. Shuffle accounting is identical — both
+/// kinds ship `size_bytes()` per merge.
+pub fn build_dataset_join_filter(
+    cluster: &SimCluster,
+    stage: &mut Stage,
+    dataset: &crate::data::Dataset,
+    cfg: FilterConfig,
+) -> JoinFilter {
     // map: one shard per worker, built from its striped partitions
     let k = cluster.k;
-    let shards: Vec<(Option<BloomFilter>, f64)> = cluster.exec.map(k, |w| {
+    let shards: Vec<(Option<JoinFilter>, f64)> = cluster.exec.map(k, |w| {
         let t0 = std::time::Instant::now();
-        let mut f: Option<BloomFilter> = None;
+        let mut f: Option<JoinFilter> = None;
         for part in dataset.partitions.iter().skip(w).step_by(k) {
-            let f = f.get_or_insert_with(|| BloomFilter::new(log2_bits, num_hashes));
+            let f = f
+                .get_or_insert_with(|| JoinFilter::new(cfg.kind, cfg.log2_bits, cfg.num_hashes));
             for r in part {
                 f.insert_key64(r.key);
             }
         }
         (f, t0.elapsed().as_secs_f64())
     });
-    let mut filters: Vec<(usize, BloomFilter)> = Vec::with_capacity(k);
+    let mut filters: Vec<(usize, JoinFilter)> = Vec::with_capacity(k);
     for (w, (f, secs)) in shards.into_iter().enumerate() {
         stage.add_compute(w, secs);
         if let Some(f) = f {
@@ -69,7 +118,7 @@ pub fn build_dataset_filter(
     }
     stage.add_items(dataset.len());
     tree_reduce(stage, filters, |a, b| a.union_with(b))
-        .unwrap_or_else(|| BloomFilter::new(log2_bits, num_hashes))
+        .unwrap_or_else(|| JoinFilter::new(cfg.kind, cfg.log2_bits, cfg.num_hashes))
 }
 
 #[cfg(test)]
@@ -135,6 +184,40 @@ mod tests {
         let f = build_dataset_filter(&c, &mut s, &d, 17, 5);
         s.finish(&mut c);
         assert!((0..5000u64).all(|k| f.contains_key64(k)));
+    }
+
+    #[test]
+    fn blocked_dataset_filter_covers_all_keys_same_accounting() {
+        use crate::bloom::FilterKind;
+        let d = Dataset::from_records(
+            "t",
+            (0..5000u64).map(|k| Record::new(k, 1.0)).collect(),
+            8,
+            10,
+        );
+        let mut run = |kind: FilterKind| {
+            let mut c = cluster(4);
+            let mut s = c.stage("build");
+            let f = build_dataset_join_filter(
+                &c,
+                &mut s,
+                &d,
+                FilterConfig {
+                    log2_bits: 17,
+                    num_hashes: 5,
+                    kind,
+                },
+            );
+            let bytes = s.shuffled_bytes();
+            s.finish(&mut c);
+            (f, bytes)
+        };
+        let (std_f, std_bytes) = run(FilterKind::Standard);
+        let (blk_f, blk_bytes) = run(FilterKind::Blocked);
+        assert!((0..5000u64).all(|k| std_f.contains_key64(k)));
+        assert!((0..5000u64).all(|k| blk_f.contains_key64(k)));
+        // equal geometry ⇒ equal tree-reduce traffic for either kind
+        assert_eq!(std_bytes, blk_bytes);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Engine configuration.
 
+use crate::bloom::FilterKind;
 use crate::cluster::TimeModel;
 use crate::stats::EstimatorKind;
 use std::path::PathBuf;
@@ -26,6 +27,13 @@ pub struct EngineConfig {
     /// Pin the artifact geometry regardless of input size (lets the XLA
     /// prober engage; costs filter bytes on small inputs).
     pub pin_artifact_filter_geometry: bool,
+    /// Bit layout of the join filters every strategy builds:
+    /// `FilterKind::Standard` (default, XLA-artifact compatible) or the
+    /// opt-in `FilterKind::Blocked` cache-line hot path (one memory
+    /// access per probe, slightly higher fp rate; native probing only).
+    /// Survivor *results* are identical either way — false positives are
+    /// dropped at the cogroup — only probe speed and shuffled bytes move.
+    pub filter_kind: FilterKind,
     pub estimator: EstimatorKind,
     /// Directory with AOT artifacts; None → pure-Rust execution.
     pub artifacts_dir: Option<PathBuf>,
@@ -44,6 +52,7 @@ impl Default for EngineConfig {
             time_model: TimeModel::default(),
             fp_rate: 0.01,
             pin_artifact_filter_geometry: false,
+            filter_kind: FilterKind::Standard,
             estimator: EstimatorKind::Clt,
             artifacts_dir: default_artifacts_dir(),
             memory_budget: crate::join::native::DEFAULT_MEMORY_BUDGET,

@@ -61,6 +61,9 @@ pub struct QueryOutcome {
     /// when the query went through the relational front end; `None` on
     /// the legacy scalar path.
     pub grouped: Option<crate::relation::GroupedApproxResult>,
+    /// The join filter the run built (kind, geometry, measured-fill fp
+    /// rate); `None` when the executed strategy does not filter.
+    pub filter_report: Option<crate::bloom::FilterReport>,
 }
 
 /// The ApproxJoin coordinator engine.
@@ -137,13 +140,24 @@ impl ApproxJoinEngine {
     fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
         if self.cfg.pin_artifact_filter_geometry {
             if let Some(rt) = &self.runtime {
+                // the AOT artifact only understands the standard layout —
+                // pinning its geometry overrides a blocked filter_kind,
+                // and silently would hide the downgrade from the user
+                if self.cfg.filter_kind != crate::bloom::FilterKind::Standard {
+                    eprintln!(
+                        "warning: pin_artifact_filter_geometry forces the \
+                         standard filter layout; filter_kind={} is ignored",
+                        self.cfg.filter_kind
+                    );
+                }
                 return FilterConfig {
                     log2_bits: rt.geometry.log2_bits,
                     num_hashes: rt.geometry.num_hashes,
+                    kind: crate::bloom::FilterKind::Standard,
                 };
             }
         }
-        FilterConfig::for_inputs(inputs, self.cfg.fp_rate)
+        FilterConfig::for_inputs_kind(inputs, self.cfg.fp_rate, self.cfg.filter_kind)
     }
 
     /// Execute a parsed query against named datasets (names must match the
@@ -184,13 +198,10 @@ impl ApproxJoinEngine {
         let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?;
         let d_dt = filtered.d_dt;
 
-        // exact output cardinality Σ B_i (known after filtering)
-        let total_pairs: f64 = filtered
-            .per_worker
-            .iter()
-            .flat_map(|g| g.values())
-            .map(|sides| sides.iter().map(|s| s.len() as f64).product::<f64>())
-            .sum();
+        // exact output cardinality Σ B_i (known after filtering), summed
+        // over the columnar directories in ascending key order
+        let total_pairs: f64 = filtered.total_pairs();
+        let filter_report = filtered.join_filter.report();
 
         // ---- stage 2.1: cost function decides the plan (§3.2)
         let confidence = query.budget.error.map(|e| e.confidence).unwrap_or(0.95);
@@ -261,6 +272,7 @@ impl ApproxJoinEngine {
             },
             plan: None,
             grouped: None,
+            filter_report: Some(filter_report),
         })
     }
 

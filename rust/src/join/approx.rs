@@ -177,6 +177,7 @@ pub fn approx_join(
     agg: &mut dyn BatchAggregator,
 ) -> Result<JoinRun, JoinError> {
     let filtered = filter_and_shuffle(cluster, inputs, filter_cfg, prober)?;
+    let filter_report = filtered.join_filter.report();
     let (strata, draws) = sample_stage(cluster, &filtered, op, cfg, agg)?;
     Ok(JoinRun {
         strata,
@@ -184,6 +185,7 @@ pub fn approx_join(
         ledger: cluster.take_ledger(),
         sampled: true,
         draws,
+        filter_report: Some(filter_report),
     })
 }
 
@@ -223,32 +225,34 @@ pub fn sample_stage(
             // stratum's pairs live only until its batch push, and every
             // worker owns a FRESH batch — batch boundaries decide where
             // partial f64 sums split, so a fixed per-worker geometry keeps
-            // the addition tree identical for any thread count. Keys are
-            // visited in sorted order: the per-worker RNG stream is shared
-            // across strata, so a deterministic order makes every run (and
-            // the XLA vs native paths) replayable.
+            // the addition tree identical for any thread count. Strata are
+            // visited as the columnar directory's contiguous key runs —
+            // already ascending, the same order the sorted hash-map walk
+            // produced — so the per-worker RNG stream (shared across
+            // strata) makes every run (and the XLA vs native paths)
+            // replayable.
             let rows = agg.batch_rows();
             let slots = agg.strata_slots();
             let drain_worker = |w: usize,
                                 local_agg: &mut dyn BatchAggregator|
              -> anyhow::Result<(HashMap<u64, StratumAgg>, u64, f64)> {
-                let groups = &filtered.per_worker[w];
+                let cg = &filtered.per_worker[w];
                 let mut r = worker_rngs[w].clone();
                 let t0 = Instant::now();
                 let mut local: HashMap<u64, StratumAgg> = HashMap::new();
                 let mut batch = Batch::new(rows, slots);
                 let mut sampled_pairs = 0u64;
-                let mut keys: Vec<u64> = groups.keys().copied().collect();
-                keys.sort_unstable();
-                for key in keys {
-                    let sides = &groups[&key];
-                    let pop = population(sides);
+                let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
+                for idx in 0..cg.num_keys() {
+                    let key = cg.key(idx);
+                    cg.sides_into(idx, &mut sides);
+                    let pop = population(&sides);
                     if pop == 0.0 {
                         continue;
                     }
                     let b = cfg.params.sample_size(key, pop);
                     let mut pairs = SampledPairs::default();
-                    sample_pairs_with_replacement(&mut r, sides, b, op, &mut pairs);
+                    sample_pairs_with_replacement(&mut r, &sides, b, op, &mut pairs);
                     sampled_pairs += pairs.len() as u64;
                     local
                         .entry(key)
@@ -286,25 +290,26 @@ pub fn sample_stage(
         EstimatorKind::HorvitzThompson => {
             // dedup sampling aggregates locally per worker (a hash set is
             // inherently sequential per stratum), fully parallel across
-            // workers; keys sorted for a replayable per-worker RNG stream
+            // workers; the columnar directory is ascending, so the
+            // per-worker RNG stream stays replayable
             type HtOut = (HashMap<u64, StratumAgg>, HashMap<u64, f64>, u64, f64);
             let results: Vec<HtOut> = exec.map(n_workers, |w| {
-                let groups = &filtered.per_worker[w];
+                let cg = &filtered.per_worker[w];
                 let mut r = worker_rngs[w].clone();
                 let t0 = Instant::now();
                 let mut local_strata = HashMap::new();
                 let mut local_draws = HashMap::new();
                 let mut sampled_pairs = 0u64;
-                let mut keys: Vec<u64> = groups.keys().copied().collect();
-                keys.sort_unstable();
-                for key in keys {
-                    let sides = &groups[&key];
-                    let pop = population(sides);
+                let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
+                for idx in 0..cg.num_keys() {
+                    let key = cg.key(idx);
+                    cg.sides_into(idx, &mut sides);
+                    let pop = population(&sides);
                     if pop == 0.0 {
                         continue;
                     }
                     let b = cfg.params.sample_size(key, pop);
-                    let (agg_k, dr) = sample_edges_dedup(&mut r, sides, b, op);
+                    let (agg_k, dr) = sample_edges_dedup(&mut r, &sides, b, op);
                     sampled_pairs += dr as u64;
                     local_strata.insert(key, agg_k);
                     local_draws.insert(key, dr);

@@ -9,27 +9,40 @@
 //! join filter; (4) drop every local record whose key misses the filter;
 //! (5) shuffle only the survivors and cogroup by key.
 //!
+//! Hot-path layout: filters are kind-dispatched ([`JoinFilter`]) — the
+//! default standard layout the AOT prober understands, or the opt-in
+//! cache-line-blocked layout (one memory access per probe). Keys are
+//! folded to the u32 hash domain **once per run** into flat per-partition
+//! buffers, and the shuffled survivors cogroup into flat columnar
+//! [`CogroupColumns`] (sorted `(key64, f64)` columns + run-span
+//! directories) instead of per-key hash-map allocations.
+//!
 //! Filter construction (per-worker Bloom shards), probing, cogrouping and
 //! the cross product all run data-parallel through the cluster's
 //! [`crate::runtime::ParallelExecutor`], bit-identical to the sequential
 //! path.
 
-use super::{group_by_key, CombineOp, JoinError, JoinRun};
+use super::{CombineOp, JoinError, JoinRun};
 use crate::bloom::hashing::fold_key;
-use crate::bloom::BloomFilter;
-use crate::cluster::tree_reduce::build_dataset_filter;
+use crate::bloom::{BloomFilter, FilterKind, JoinFilter};
+use crate::cluster::tree_reduce::build_dataset_join_filter;
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
+use crate::runtime::CogroupColumns;
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
 
-/// Bloom geometry for the join filter. The default (2^20 bits, 5 hashes)
-/// matches the AOT `bloom_probe` artifact so the XLA path can probe it.
+/// Bloom geometry + kind for the join filter. The default (2^20 bits, 5
+/// hashes, standard layout) matches the AOT `bloom_probe` artifact so the
+/// XLA path can probe it.
 #[derive(Clone, Copy, Debug)]
 pub struct FilterConfig {
     pub log2_bits: u32,
     pub num_hashes: u32,
+    /// Bit layout — [`FilterKind::Blocked`] opts into the one-cache-line
+    /// probe path (native probing only; the XLA artifact stays standard).
+    pub kind: FilterKind,
 }
 
 impl Default for FilterConfig {
@@ -37,6 +50,7 @@ impl Default for FilterConfig {
         Self {
             log2_bits: 20,
             num_hashes: 5,
+            kind: FilterKind::Standard,
         }
     }
 }
@@ -45,17 +59,54 @@ impl FilterConfig {
     /// Geometry from the largest input size + target fp rate (eq 27, with
     /// N = |R_n| as §A.1 prescribes), bits rounded up to a power of two.
     pub fn for_inputs(inputs: &[Dataset], fp_rate: f64) -> Self {
+        Self::for_inputs_kind(inputs, fp_rate, FilterKind::Standard)
+    }
+
+    /// [`FilterConfig::for_inputs`] for an explicit filter kind (blocked
+    /// geometries floor at one 512-bit block). Pure arithmetic — the same
+    /// eq-27 sizing as [`BloomFilter::with_capacity`], without allocating
+    /// a filter to read its geometry back.
+    pub fn for_inputs_kind(inputs: &[Dataset], fp_rate: f64, kind: FilterKind) -> Self {
         let n_max = inputs.iter().map(|d| d.len()).max().unwrap_or(1).max(1);
-        let f = BloomFilter::with_capacity(n_max, fp_rate);
+        let (log2_bits, num_hashes) =
+            crate::bloom::hashing::pow2_geometry(n_max, fp_rate, kind.min_log2().max(6), 30);
         Self {
-            log2_bits: f.log2_bits(),
-            num_hashes: f.num_hashes(),
+            log2_bits,
+            num_hashes,
+            kind,
+        }
+    }
+
+    /// A kind-only config: `log2_bits == 0` is the "size from the inputs
+    /// at execute time" sentinel the engine-level filter-kind switch uses
+    /// (a registry strategy knows its kind before it sees any data).
+    pub fn auto_sized(kind: FilterKind) -> Self {
+        Self {
+            log2_bits: 0,
+            num_hashes: 0,
+            kind,
+        }
+    }
+
+    pub fn is_auto_sized(&self) -> bool {
+        self.log2_bits == 0
+    }
+
+    /// Resolve an auto-sized config against concrete inputs; explicit
+    /// geometries pass through unchanged.
+    pub fn resolved(self, inputs: &[Dataset], fp_rate: f64) -> Self {
+        if self.is_auto_sized() {
+            Self::for_inputs_kind(inputs, fp_rate, self.kind)
+        } else {
+            self
         }
     }
 }
 
 /// Batched membership probing — implemented natively and by the runtime's
-/// AOT `bloom_probe` executor (runtime/batch.rs).
+/// AOT `bloom_probe` executor (runtime/batch.rs). Probers consume the
+/// standard filter layout; blocked filters are probed natively by the
+/// kernel itself (one cache line per key needs no batching help).
 pub trait KeyProber {
     /// For each folded key, whether it may be in the filter.
     fn probe(&mut self, filter: &BloomFilter, keys: &[u32]) -> anyhow::Result<Vec<bool>>;
@@ -81,60 +132,75 @@ impl KeyProber for NativeProber {
     }
 }
 
-/// Probe every partition of one dataset against the join filter, returning
-/// (mask, measured seconds) per partition. Forkable probers run the
-/// partitions data-parallel through `cluster.exec`; others probe
-/// sequentially in partition order. Probing is pure membership lookup, so
-/// both paths produce identical masks.
+/// Probe every partition's pre-folded keys against the join filter,
+/// returning (mask, measured seconds) per partition. Standard filters go
+/// through the [`KeyProber`] (forkable probers run data-parallel; the XLA
+/// prober stays sequential); blocked filters always probe natively and
+/// data-parallel — the probe is a pure one-cache-line lookup. Both paths
+/// produce identical masks for the same filter.
 fn probe_partitions(
     cluster: &SimCluster,
-    dataset: &Dataset,
-    join_filter: &BloomFilter,
+    folded: &[Vec<u32>],
+    join_filter: &JoinFilter,
     prober: &mut dyn KeyProber,
 ) -> anyhow::Result<Vec<(Vec<bool>, f64)>> {
-    let n_parts = dataset.partitions.len();
-    if !cluster.exec.is_sequential() {
-        // one independent prober per partition, each moved into its
-        // thread stripe by map_with (no locks)
-        let forks: Option<Vec<Box<dyn KeyProber + Send>>> =
-            (0..n_parts).map(|_| prober.fork()).collect();
-        if let Some(forks) = forks {
-            let results = cluster.exec.map_with(forks, |j, local| {
-                let t0 = Instant::now();
-                let keys: Vec<u32> =
-                    dataset.partitions[j].iter().map(|r| fold_key(r.key)).collect();
-                let mask = local.probe(join_filter, &keys);
-                (mask, t0.elapsed().as_secs_f64())
-            });
-            return results
-                .into_iter()
-                .map(|(mask, secs)| Ok((mask?, secs)))
-                .collect();
-        }
-    }
-    {
-        let mut out = Vec::with_capacity(n_parts);
-        for part in &dataset.partitions {
+    let n_parts = folded.len();
+    match join_filter {
+        JoinFilter::Blocked(f) => Ok(cluster.exec.map(n_parts, |j| {
             let t0 = Instant::now();
-            let keys: Vec<u32> = part.iter().map(|r| fold_key(r.key)).collect();
-            let mask = prober.probe(join_filter, &keys)?;
-            out.push((mask, t0.elapsed().as_secs_f64()));
+            let mask: Vec<bool> = folded[j].iter().map(|&k| f.contains(k)).collect();
+            (mask, t0.elapsed().as_secs_f64())
+        })),
+        JoinFilter::Standard(f) => {
+            if !cluster.exec.is_sequential() {
+                // one independent prober per partition, each moved into its
+                // thread stripe by map_with (no locks)
+                let forks: Option<Vec<Box<dyn KeyProber + Send>>> =
+                    (0..n_parts).map(|_| prober.fork()).collect();
+                if let Some(forks) = forks {
+                    let results = cluster.exec.map_with(forks, |j, local| {
+                        let t0 = Instant::now();
+                        let mask = local.probe(f, &folded[j]);
+                        (mask, t0.elapsed().as_secs_f64())
+                    });
+                    return results
+                        .into_iter()
+                        .map(|(mask, secs)| Ok((mask?, secs)))
+                        .collect();
+                }
+            }
+            let mut out = Vec::with_capacity(n_parts);
+            for keys in folded {
+                let t0 = Instant::now();
+                let mask = prober.probe(f, keys)?;
+                out.push((mask, t0.elapsed().as_secs_f64()));
+            }
+            Ok(out)
         }
-        Ok(out)
     }
 }
 
 /// Output of the filtering stage.
 pub struct Filtered {
-    /// Per-worker cogrouped survivors: key → one value-vec per input.
-    pub per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>>,
+    /// Per-worker cogrouped survivors in flat columnar form: sorted
+    /// `(key64, f64)` columns with a joinable-key run directory.
+    pub per_worker: Vec<CogroupColumns>,
     /// Simulated seconds spent in filtering + shuffling (the cost
     /// function's d_dt, eq 1).
     pub d_dt: f64,
-    /// The join filter (for cardinality estimates).
-    pub join_filter: BloomFilter,
+    /// The join filter (for cardinality estimates and fp reporting).
+    pub join_filter: JoinFilter,
     /// Survivor counts per input (diagnostics; Fig 4b-style reporting).
     pub survivors: Vec<u64>,
+}
+
+impl Filtered {
+    /// Σ B_i over every worker's joinable strata — the exact join-output
+    /// cardinality, summed in (worker, ascending key) order so the f64
+    /// total is deterministic.
+    pub fn total_pairs(&self) -> f64 {
+        self.per_worker.iter().map(|cg| cg.total_pairs()).sum()
+    }
 }
 
 /// Run stage 1. Keys surviving in *every* input are shuffled and cogrouped.
@@ -145,19 +211,22 @@ pub fn filter_and_shuffle(
     prober: &mut dyn KeyProber,
 ) -> anyhow::Result<Filtered> {
     assert!(inputs.len() >= 2);
+    // auto-sized (kind-only) configs carry no geometry and no fp target —
+    // the caller must resolve them against its own fp_rate first
+    // (strategies do, via FilterConfig::resolved); guessing a default
+    // here would silently override the caller's false-positive budget
+    assert!(
+        !cfg.is_auto_sized(),
+        "auto-sized FilterConfig must be resolved against the inputs \
+         (FilterConfig::resolved) before filtering"
+    );
     let n = inputs.len();
 
     // (1) dataset filters via map + treeReduce
     let mut s = cluster.stage("build_filter");
     let mut dataset_filters = Vec::with_capacity(n);
     for d in inputs {
-        dataset_filters.push(build_dataset_filter(
-            cluster,
-            &mut s,
-            d,
-            cfg.log2_bits,
-            cfg.num_hashes,
-        ));
+        dataset_filters.push(build_dataset_join_filter(cluster, &mut s, d, cfg));
     }
     // (2) AND at the master (worker 0) — cheap word-wise AND
     let mut join_filter = dataset_filters.pop().unwrap();
@@ -175,10 +244,24 @@ pub fn filter_and_shuffle(
     let mut shuffled_inputs: Vec<Vec<Vec<crate::data::Record>>> = Vec::with_capacity(n);
     let mut survivors = Vec::with_capacity(n);
     for d in inputs {
-        // probe per partition (data-parallel for forkable probers),
-        // attributed to the owning worker
+        // hoist the u32 key folding: each partition's keys fold exactly
+        // once per run into a flat buffer (data-parallel, attributed to
+        // the owning worker), instead of re-collecting inside every
+        // probe call
+        let folded_timed: Vec<(Vec<u32>, f64)> = cluster.exec.map(d.partitions.len(), |j| {
+            let t0 = Instant::now();
+            let keys: Vec<u32> = d.partitions[j].iter().map(|r| fold_key(r.key)).collect();
+            (keys, t0.elapsed().as_secs_f64())
+        });
+        let mut folded: Vec<Vec<u32>> = Vec::with_capacity(folded_timed.len());
+        for (j, (keys, secs)) in folded_timed.into_iter().enumerate() {
+            s.add_compute(cluster.worker_of_partition(j), secs);
+            folded.push(keys);
+        }
+        // probe per partition (data-parallel where safe), attributed to
+        // the owning worker
         let mut keep: Vec<Vec<bool>> = Vec::with_capacity(d.partitions.len());
-        for (j, (mask, secs)) in probe_partitions(cluster, d, &join_filter, prober)?
+        for (j, (mask, secs)) in probe_partitions(cluster, &folded, &join_filter, prober)?
             .into_iter()
             .enumerate()
         {
@@ -207,17 +290,16 @@ pub fn filter_and_shuffle(
     }
     d_dt += s.finish(cluster);
 
-    // cogroup per worker (data-parallel; each worker owns its shard)
-    let per_worker: Vec<HashMap<u64, Vec<Vec<f64>>>> = cluster.exec.map(cluster.k, |w| {
-        let per_input: Vec<Vec<crate::data::Record>> = shuffled_inputs
+    // cogroup per worker into flat columns (data-parallel; each worker
+    // owns its shard). The columnar joinable directory only lists keys
+    // present in every input, so false-positive survivors missing from
+    // some input drop out here — exactly the old retain()
+    let per_worker: Vec<CogroupColumns> = cluster.exec.map(cluster.k, |w| {
+        let per_input: Vec<&[crate::data::Record]> = shuffled_inputs
             .iter()
-            .map(|inp| inp[w].clone())
+            .map(|inp| inp[w].as_slice())
             .collect();
-        let mut g = group_by_key(&per_input);
-        // keys that survived the (false-positive-prone) filter but are
-        // missing from some input produce no output pairs; drop them
-        g.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
-        g
+        CogroupColumns::from_slices(&per_input)
     });
 
     Ok(Filtered {
@@ -238,18 +320,20 @@ pub fn cross_product_stage(
 ) -> HashMap<u64, StratumAgg> {
     let mut s = cluster.stage("crossproduct");
     let exec = cluster.exec;
-    // each worker streams its own keys' cross products in parallel; the
-    // hash shuffle put every key on exactly one worker, so the merged map
-    // is identical for any thread count
+    // each worker streams its own keys' cross products in parallel over
+    // contiguous columnar runs; the hash shuffle put every key on exactly
+    // one worker, so the merged map is identical for any thread count
     let per_worker = exec.map(filtered.per_worker.len(), |w| {
-        let groups = &filtered.per_worker[w];
+        let cg = &filtered.per_worker[w];
         let t0 = Instant::now();
-        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
+        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(cg.num_keys());
         let mut pairs = 0u64;
-        for (key, sides) in groups {
-            let agg = super::cross_product_agg(sides, op);
+        let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
+        for idx in 0..cg.num_keys() {
+            cg.sides_into(idx, &mut sides);
+            let agg = super::cross_product_agg(&sides, op);
             pairs += agg.population as u64;
-            local.insert(*key, agg);
+            local.insert(cg.key(idx), agg);
         }
         (local, pairs, t0.elapsed().as_secs_f64())
     });
@@ -273,9 +357,12 @@ pub fn bloom_join(
     prober: &mut dyn KeyProber,
 ) -> Result<JoinRun, JoinError> {
     let filtered = filter_and_shuffle(cluster, inputs, cfg, prober)?;
+    let report = filtered.join_filter.report();
     let strata = cross_product_stage(cluster, &filtered, op);
     let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
+    Ok(JoinRun::exact(strata, metrics)
+        .with_ledger(ledger)
+        .with_filter_report(report))
 }
 
 #[cfg(test)]
@@ -320,6 +407,31 @@ mod tests {
         let nat = native_join(&mut cluster(), &[a, b], CombineOp::Sum, u64::MAX).unwrap();
         assert!((bj.exact_sum() - nat.exact_sum()).abs() < 1e-9);
         assert_eq!(bj.output_cardinality(), nat.output_cardinality());
+        let report = bj.filter_report.expect("bloom join reports its filter");
+        assert_eq!(report.kind, FilterKind::Standard);
+        assert_eq!(report.log2_bits, 20);
+    }
+
+    #[test]
+    fn blocked_kind_matches_standard_results() {
+        let a = ds("a", (0..500u64).map(|i| (i, i as f64)).collect());
+        let b = ds("b", (250..750u64).map(|i| (i, 2.0 * i as f64)).collect());
+        let run_kind = |kind: FilterKind| {
+            bloom_join(
+                &mut cluster(),
+                &[a.clone(), b.clone()],
+                CombineOp::Sum,
+                FilterConfig::for_inputs_kind(&[a.clone(), b.clone()], 0.01, kind),
+                &mut NativeProber,
+            )
+            .unwrap()
+        };
+        let std_run = run_kind(FilterKind::Standard);
+        let blk_run = run_kind(FilterKind::Blocked);
+        // the cogroup stage drops false positives, so the *results* are
+        // identical — only shuffle traffic may differ
+        assert_eq!(std_run.strata, blk_run.strata);
+        assert_eq!(blk_run.filter_report.unwrap().kind, FilterKind::Blocked);
     }
 
     #[test]
@@ -394,16 +506,27 @@ mod tests {
         // ~100 truly-common keys per input (+ false positives)
         assert!((100..300).contains(&f.survivors[0]), "{:?}", f.survivors);
         assert!((100..300).contains(&f.survivors[1]), "{:?}", f.survivors);
-        let keys: usize = f.per_worker.iter().map(|g| g.len()).sum();
+        let keys: usize = f.per_worker.iter().map(|g| g.num_keys()).sum();
         assert!((90..=220).contains(&keys), "cogrouped keys {keys}");
+        // total_pairs is the exact joinable cardinality: 100 shared keys,
+        // one record each side
+        assert_eq!(f.total_pairs(), 100.0);
     }
 
     #[test]
     fn filter_config_for_inputs() {
         let a = ds("a", (0..10_000).map(|i| (i, 1.0)).collect());
         let b = ds("b", (0..100).map(|i| (i, 1.0)).collect());
-        let cfg = FilterConfig::for_inputs(&[a, b], 0.01);
+        let cfg = FilterConfig::for_inputs(&[a.clone(), b.clone()], 0.01);
         // sized for the largest input (10k): >= 96k bits -> log2 >= 17
         assert!(cfg.log2_bits >= 17, "log2={}", cfg.log2_bits);
+        assert_eq!(cfg.kind, FilterKind::Standard);
+        // auto-sized sentinel resolves to the same geometry
+        let auto = FilterConfig::auto_sized(FilterKind::Blocked);
+        assert!(auto.is_auto_sized());
+        let resolved = auto.resolved(&[a, b], 0.01);
+        assert!(!resolved.is_auto_sized());
+        assert_eq!(resolved.kind, FilterKind::Blocked);
+        assert!(resolved.log2_bits >= 17);
     }
 }

@@ -3,10 +3,11 @@
 //! are tiny, loses catastrophically as n or k grows — eq 18's
 //! (|R_1|+…+|R_{n−1}|)·(k−1) term, plotted in Fig 4a/14.
 
-use super::{group_by_key, CombineOp, JoinError, JoinRun};
+use super::{CombineOp, JoinError, JoinRun};
 use crate::cluster::shuffle::broadcast_dataset;
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
+use crate::runtime::CogroupColumns;
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -54,28 +55,29 @@ pub fn broadcast_join(
         .map(inputs[largest].partitions.len(), |j| {
             let part = &inputs[largest].partitions[j];
             let t0 = Instant::now();
-            // group: local slice of the big input + full copies of the
-            // others, ordered so combine() sees sides in input order
-            let mut per_input: Vec<Vec<crate::data::Record>> = Vec::with_capacity(n_inputs);
+            // cogroup the local slice of the big input with the fully
+            // replicated small inputs into flat columns, ordered so
+            // combine() sees sides in input order — no per-partition
+            // clones of the replicated inputs
+            let mut per_input: Vec<&[crate::data::Record]> = Vec::with_capacity(n_inputs);
             let mut si = 0;
             for i in 0..n_inputs {
                 if i == largest {
-                    per_input.push(part.clone());
+                    per_input.push(part.as_slice());
                 } else {
-                    per_input.push(small_all[si].clone());
+                    per_input.push(small_all[si].as_slice());
                     si += 1;
                 }
             }
-            let groups = group_by_key(&per_input);
-            let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
+            let cg = CogroupColumns::from_slices(&per_input);
+            let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(cg.num_keys());
             let mut pairs = 0u64;
-            for (key, sides) in groups {
-                if sides.iter().any(|s| s.is_empty()) {
-                    continue;
-                }
+            let mut sides: Vec<&[f64]> = Vec::with_capacity(n_inputs);
+            for idx in 0..cg.num_keys() {
+                cg.sides_into(idx, &mut sides);
                 let agg = super::cross_product_agg(&sides, op);
                 pairs += agg.population as u64;
-                local.insert(key, agg);
+                local.insert(cg.key(idx), agg);
             }
             (local, pairs, t0.elapsed().as_secs_f64())
         });

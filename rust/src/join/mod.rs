@@ -35,6 +35,7 @@ pub use strategy::{
     RepartitionJoin, StrategyRegistry,
 };
 
+use crate::bloom::FilterReport;
 use crate::cluster::{JoinMetrics, ShuffleLedger};
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
@@ -89,6 +90,9 @@ pub struct JoinRun {
     /// Raw draw counts per key for the Horvitz-Thompson path (empty for
     /// exact joins and for the CLT path).
     pub draws: HashMap<u64, f64>,
+    /// The join filter this run built (kind, geometry, measured-fill fp
+    /// rate) — `None` for the strategies that do not filter.
+    pub filter_report: Option<FilterReport>,
 }
 
 impl JoinRun {
@@ -99,12 +103,19 @@ impl JoinRun {
             ledger: ShuffleLedger::default(),
             sampled: false,
             draws: HashMap::new(),
+            filter_report: None,
         }
     }
 
     /// Attach the measured shuffle ledger of the run.
     pub fn with_ledger(mut self, ledger: ShuffleLedger) -> Self {
         self.ledger = ledger;
+        self
+    }
+
+    /// Attach the built join filter's post-build report.
+    pub fn with_filter_report(mut self, report: FilterReport) -> Self {
+        self.filter_report = Some(report);
         self
     }
 
@@ -192,20 +203,23 @@ pub(crate) fn group_by_key(
 /// Stream the full n-way cross product of one key group into a stratum
 /// aggregate. Cost is Π |side_i| combined-value evaluations — the honest
 /// cross-product work the paper's latency figures measure.
+/// Generic over the side container so both the legacy `&[Vec<f64>]`
+/// cogroups and the columnar `&[&[f64]]` run views share one
+/// implementation (identical f64 evaluation order either way).
 /// Public for benches and diagnostics.
-pub fn cross_product_agg(sides: &[Vec<f64>], op: CombineOp) -> StratumAgg {
-    let population: f64 = sides.iter().map(|s| s.len() as f64).product();
+pub fn cross_product_agg<S: AsRef<[f64]>>(sides: &[S], op: CombineOp) -> StratumAgg {
+    let population: f64 = sides.iter().map(|s| s.as_ref().len() as f64).product();
     let mut agg = StratumAgg {
         population,
         ..Default::default()
     };
-    if sides.iter().any(|s| s.is_empty()) {
+    if sides.iter().any(|s| s.as_ref().is_empty()) {
         return agg;
     }
     // odometer over the n sides
     let n = sides.len();
     let mut idx = vec![0usize; n];
-    let mut vals: Vec<f64> = idx.iter().zip(sides).map(|(&i, s)| s[i]).collect();
+    let mut vals: Vec<f64> = idx.iter().zip(sides).map(|(&i, s)| s.as_ref()[i]).collect();
     loop {
         agg.push(op.combine(&vals));
         // increment odometer
@@ -216,12 +230,13 @@ pub fn cross_product_agg(sides: &[Vec<f64>], op: CombineOp) -> StratumAgg {
             }
             d -= 1;
             idx[d] += 1;
-            if idx[d] < sides[d].len() {
-                vals[d] = sides[d][idx[d]];
+            let side = sides[d].as_ref();
+            if idx[d] < side.len() {
+                vals[d] = side[idx[d]];
                 break;
             }
             idx[d] = 0;
-            vals[d] = sides[d][0];
+            vals[d] = side[0];
         }
     }
 }

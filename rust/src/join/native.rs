@@ -6,10 +6,11 @@
 //! native join runs out of memory at 8-10% overlap in three-way joins
 //! (Fig 9a's missing bars). The memory guard reproduces that failure mode.
 
-use super::{group_by_key, CombineOp, JoinError, JoinRun};
+use super::{CombineOp, JoinError, JoinRun};
 use crate::cluster::shuffle::shuffle_dataset;
 use crate::cluster::SimCluster;
 use crate::data::{Dataset, Record};
+use crate::runtime::CogroupColumns;
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -46,32 +47,32 @@ pub fn native_join(
         // or its OOM error
         type StepOut = (HashMap<u64, StratumAgg>, Vec<Record>, u64, f64);
         let per_worker: Vec<Result<StepOut, JoinError>> = cluster.exec.map(cluster.k, |w| {
-            let groups = group_by_key(&[left_parts[w].clone(), right_parts[w].clone()]);
+            // flat columnar cogroup: the joinable directory is ascending
+            // by key, so the materialized intermediate (whose record order
+            // feeds the next step's f64 sums) stays deterministic — the
+            // same order the old sorted hash-map walk produced
+            let cg = CogroupColumns::from_slices(&[
+                left_parts[w].as_slice(),
+                right_parts[w].as_slice(),
+            ]);
             let t0 = Instant::now();
             let mut local: HashMap<u64, StratumAgg> = HashMap::new();
             let mut materialized: Vec<Record> = Vec::new();
             let mut pairs = 0u64;
-            // iterate keys in sorted order so the materialized intermediate
-            // (whose record order feeds the next step's f64 sums) is
-            // deterministic — HashMap iteration order is not
-            let mut keys: Vec<u64> = groups.keys().copied().collect();
-            keys.sort_unstable();
-            for key in keys {
-                let sides = &groups[&key];
-                if sides[0].is_empty() || sides[1].is_empty() {
-                    continue;
-                }
+            for idx in 0..cg.num_keys() {
+                let key = cg.key(idx);
+                let (lvals, rvals) = (cg.side(idx, 0), cg.side(idx, 1));
                 if last {
                     // final step: stream into aggregates. After the hash
                     // shuffle each key lives on exactly one worker, so a
                     // plain insert is safe.
-                    let agg = super::cross_product_agg(&[sides[0].clone(), sides[1].clone()], op);
+                    let agg = super::cross_product_agg(&[lvals, rvals], op);
                     pairs += agg.population as u64;
                     local.insert(key, agg);
                 } else {
                     // materialize the intermediate — the native-join sin
-                    for &lv in &sides[0] {
-                        for &rv in &sides[1] {
+                    for &lv in lvals {
+                        for &rv in rvals {
                             materialized.push(Record::new(key, op.fold(lv, rv)));
                             pairs += 1;
                         }

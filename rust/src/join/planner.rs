@@ -43,6 +43,11 @@ pub struct JoinPlan {
     /// executed (from the run's [`crate::cluster::ShuffleLedger`]); `None`
     /// before execution. `explain()` prints it next to the prediction.
     pub measured_shuffle_bytes: Option<u64>,
+    /// The join filter the executed run built — kind (standard/blocked),
+    /// geometry and the measured-fill false-positive rate; `None` before
+    /// execution or for strategies that do not filter. `explain()`
+    /// renders it.
+    pub filter: Option<crate::bloom::FilterReport>,
     /// The relational lowering behind this plan (pushed-down predicates,
     /// kernel projections, GROUP BY composite strata), when the query
     /// came through the relational front end. `explain()` renders it.
@@ -82,6 +87,16 @@ impl JoinPlan {
         self
     }
 
+    /// Attach the executed run's join-filter report (kind + measured fp),
+    /// when the run built one, for `explain()`.
+    pub fn with_filter_report(
+        mut self,
+        report: Option<crate::bloom::FilterReport>,
+    ) -> Self {
+        self.filter = report;
+        self
+    }
+
     /// Human-readable plan: inputs, overlap, stages, and the cost ranking.
     pub fn explain(&self) -> String {
         let mut out = String::new();
@@ -108,6 +123,9 @@ impl JoinPlan {
         let _ = writeln!(out, "  stages: {}", self.stages.join(" -> "));
         if let Some(lowering) = &self.lowering {
             out.push_str(&lowering.render());
+        }
+        if let Some(report) = &self.filter {
+            let _ = writeln!(out, "  filter: {}", report.render());
         }
         match self.measured_shuffle_bytes {
             Some(measured) => {
@@ -287,6 +305,7 @@ impl<'a> Planner<'a> {
             estimates,
             stages,
             measured_shuffle_bytes: None,
+            filter: None,
             lowering: None,
         })
     }

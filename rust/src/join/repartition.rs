@@ -4,10 +4,11 @@
 //! The paper's strongest exact baseline — ApproxJoin's filtering stage only
 //! beats it while the overlap fraction is small (Fig 8/9 crossovers).
 
-use super::{group_by_key, CombineOp, JoinError, JoinRun};
+use super::{CombineOp, JoinError, JoinRun};
 use crate::cluster::shuffle::shuffle_dataset;
 use crate::cluster::SimCluster;
 use crate::data::Dataset;
+use crate::runtime::CogroupColumns;
 use crate::stats::StratumAgg;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -28,24 +29,24 @@ pub fn repartition_join(
         .collect();
     s.finish(cluster);
 
-    // per worker: group n tagged streams by key, stream the cross product —
-    // data-parallel across workers; every key lives on one worker after the
-    // hash shuffle, so the merged map is thread-count independent
+    // per worker: cogroup the n tagged streams into flat columns, stream
+    // the cross product over contiguous key runs — data-parallel across
+    // workers; every key lives on one worker after the hash shuffle, so
+    // the merged map is thread-count independent
     let mut s = cluster.stage("crossproduct");
     let per_worker = cluster.exec.map(cluster.k, |w| {
-        let per_input: Vec<Vec<crate::data::Record>> =
-            shuffled.iter().map(|inp| inp[w].clone()).collect();
+        let per_input: Vec<&[crate::data::Record]> =
+            shuffled.iter().map(|inp| inp[w].as_slice()).collect();
         let t0 = Instant::now();
-        let groups = group_by_key(&per_input);
-        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(groups.len());
+        let cg = CogroupColumns::from_slices(&per_input);
+        let mut local: HashMap<u64, StratumAgg> = HashMap::with_capacity(cg.num_keys());
         let mut pairs = 0u64;
-        for (key, sides) in groups {
-            if sides.iter().any(|s| s.is_empty()) {
-                continue;
-            }
+        let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
+        for idx in 0..cg.num_keys() {
+            cg.sides_into(idx, &mut sides);
             let agg = super::cross_product_agg(&sides, op);
             pairs += agg.population as u64;
-            local.insert(key, agg);
+            local.insert(cg.key(idx), agg);
         }
         (local, pairs, t0.elapsed().as_secs_f64())
     });

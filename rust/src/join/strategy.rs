@@ -408,7 +408,10 @@ impl Default for BloomJoin {
 
 impl BloomJoin {
     fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
+        // explicit geometries pass through; auto-sized configs (kind-only,
+        // the engine filter-kind switch) and None size from the inputs
         self.filter
+            .map(|f| f.resolved(inputs, self.fp_rate))
             .unwrap_or_else(|| FilterConfig::for_inputs(inputs, self.fp_rate))
     }
 
@@ -534,6 +537,7 @@ impl ApproxJoin {
     ) -> Result<JoinRun, JoinError> {
         let filter = self
             .filter
+            .map(|f| f.resolved(inputs, self.fp_rate))
             .unwrap_or_else(|| FilterConfig::for_inputs(inputs, self.fp_rate));
         approx_join(cluster, inputs, op, filter, &self.config, prober, aggregator)
     }

@@ -1,0 +1,322 @@
+//! Flat columnar cogroup buffers — the cache-friendly replacement for the
+//! per-worker `HashMap<u64, Vec<Vec<f64>>>` cogroups on the join hot path.
+//!
+//! Instead of one hash entry + n inner `Vec<f64>` allocations per key, each
+//! input's shuffled records land in two flat columns (`key64`, `f64`) that
+//! are stably sorted by key; equal keys become **contiguous runs**, and an
+//! n-way merge of the per-input run lists yields the *joinable directory*:
+//! every key present in all n inputs, ascending, with one `(start, end)`
+//! span per input into the value columns. Consumers (cross products,
+//! stratified samplers) iterate contiguous key runs and read value slices
+//! straight out of the columns — no per-key allocation, no hash probes,
+//! sequential memory.
+//!
+//! Determinism contract: the stable sort preserves each input's record
+//! arrival order within a key, and the directory is ascending by key — so
+//! per-key value sequences and key visit order are **identical** to the
+//! old sorted-HashMap walk, down to the f64 accumulation order. The
+//! buffers are reusable ([`CogroupColumns::rebuild`]): the streaming join
+//! keeps one per worker across windows, so the columns, run lists and
+//! directory reuse their capacity (the stable sort's internal merge
+//! scratch is the one per-rebuild temporary that remains).
+
+use crate::data::Record;
+
+/// One worker's cogrouped survivors in flat columnar form.
+#[derive(Clone, Debug, Default)]
+pub struct CogroupColumns {
+    n_inputs: usize,
+    /// Per input: keys sorted ascending (stable), aligned with `vals`.
+    keys: Vec<Vec<u64>>,
+    /// Per input: values in key-sorted order (arrival order within a key).
+    vals: Vec<Vec<f64>>,
+    /// Keys present in *every* input, ascending.
+    dir_keys: Vec<u64>,
+    /// `spans[key_idx * n_inputs + input]` = (start, end) into
+    /// `vals[input]` for that key's run.
+    spans: Vec<(u32, u32)>,
+    /// Per input: (key, start, end) run boundaries — rebuild scratch kept
+    /// around so re-cogrouping reuses the allocation.
+    runs: Vec<Vec<(u64, u32, u32)>>,
+    /// Sort scratch: (key, value) pairs of the input being ingested.
+    pair_scratch: Vec<(u64, f64)>,
+}
+
+impl CogroupColumns {
+    /// An empty buffer for `n_inputs`-way cogroups.
+    pub fn new(n_inputs: usize) -> Self {
+        Self {
+            n_inputs,
+            keys: (0..n_inputs).map(|_| Vec::new()).collect(),
+            vals: (0..n_inputs).map(|_| Vec::new()).collect(),
+            runs: (0..n_inputs).map(|_| Vec::new()).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Build fresh from per-input record slices.
+    pub fn from_slices(per_input: &[&[Record]]) -> Self {
+        let mut cg = Self::new(per_input.len());
+        cg.rebuild(per_input);
+        cg
+    }
+
+    /// Convenience over owned per-input vectors.
+    pub fn from_records(per_input: &[Vec<Record>]) -> Self {
+        let slices: Vec<&[Record]> = per_input.iter().map(|v| v.as_slice()).collect();
+        Self::from_slices(&slices)
+    }
+
+    /// Re-cogroup new record sets into the existing buffers. The columns,
+    /// run lists, directory and pair scratch all reuse their capacity;
+    /// the only remaining per-call temporary is the stable sort's
+    /// internal merge buffer.
+    pub fn rebuild(&mut self, per_input: &[&[Record]]) {
+        let n = per_input.len();
+        assert!(n >= 1, "cogroup needs at least one input");
+        if n != self.n_inputs {
+            self.n_inputs = n;
+            self.keys.resize_with(n, Vec::new);
+            self.vals.resize_with(n, Vec::new);
+            self.runs.resize_with(n, Vec::new);
+        }
+        for (i, recs) in per_input.iter().enumerate() {
+            debug_assert!(recs.len() < u32::MAX as usize, "u32 span offsets");
+            // ingest into the sort scratch, stable-sort by key (arrival
+            // order within a key is preserved), split into flat columns
+            self.pair_scratch.clear();
+            self.pair_scratch.extend(recs.iter().map(|r| (r.key, r.value)));
+            self.pair_scratch.sort_by_key(|p| p.0);
+            let keys = &mut self.keys[i];
+            let vals = &mut self.vals[i];
+            keys.clear();
+            vals.clear();
+            keys.reserve(recs.len());
+            vals.reserve(recs.len());
+            for &(k, v) in &self.pair_scratch {
+                keys.push(k);
+                vals.push(v);
+            }
+            // contiguous key runs
+            let runs = &mut self.runs[i];
+            runs.clear();
+            let mut start = 0usize;
+            while start < keys.len() {
+                let key = keys[start];
+                let mut end = start + 1;
+                while end < keys.len() && keys[end] == key {
+                    end += 1;
+                }
+                runs.push((key, start as u32, end as u32));
+                start = end;
+            }
+        }
+        // joinable directory: n-way sorted-merge intersection of run lists
+        self.dir_keys.clear();
+        self.spans.clear();
+        let mut ptrs = vec![0usize; n];
+        'outer: for r0 in 0..self.runs[0].len() {
+            let (key, s0, e0) = self.runs[0][r0];
+            // advance every other input's cursor to `key`
+            for i in 1..n {
+                let runs_i = &self.runs[i];
+                while ptrs[i] < runs_i.len() && runs_i[ptrs[i]].0 < key {
+                    ptrs[i] += 1;
+                }
+                if ptrs[i] >= runs_i.len() {
+                    break 'outer; // input i exhausted: no further joins
+                }
+                if runs_i[ptrs[i]].0 != key {
+                    continue 'outer; // key missing from input i
+                }
+            }
+            self.dir_keys.push(key);
+            self.spans.push((s0, e0));
+            for (i, &p) in ptrs.iter().enumerate().skip(1) {
+                let (_, s, e) = self.runs[i][p];
+                self.spans.push((s, e));
+            }
+        }
+        debug_assert_eq!(self.spans.len(), self.dir_keys.len() * n);
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Number of joinable keys (present in every input), the directory
+    /// length.
+    pub fn num_keys(&self) -> usize {
+        self.dir_keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dir_keys.is_empty()
+    }
+
+    /// The idx-th joinable key; ascending in idx.
+    #[inline]
+    pub fn key(&self, idx: usize) -> u64 {
+        self.dir_keys[idx]
+    }
+
+    /// The joinable keys, ascending.
+    pub fn keys(&self) -> &[u64] {
+        &self.dir_keys
+    }
+
+    /// Value slice of `input` for the idx-th joinable key.
+    #[inline]
+    pub fn side(&self, idx: usize, input: usize) -> &[f64] {
+        let (s, e) = self.spans[idx * self.n_inputs + input];
+        &self.vals[input][s as usize..e as usize]
+    }
+
+    /// Fill `out` with all n value slices of the idx-th joinable key, in
+    /// input order — the borrow lives as long as `self`, so one scratch
+    /// `Vec` serves a whole drain loop.
+    #[inline]
+    pub fn sides_into<'a>(&'a self, idx: usize, out: &mut Vec<&'a [f64]>) {
+        out.clear();
+        for i in 0..self.n_inputs {
+            out.push(self.side(idx, i));
+        }
+    }
+
+    /// Σ over joinable keys of Π side lengths — the exact join-output
+    /// cardinality of this worker's shard, accumulated in ascending key
+    /// order (deterministic f64 sum).
+    pub fn total_pairs(&self) -> f64 {
+        let mut total = 0.0;
+        for idx in 0..self.num_keys() {
+            let mut p = 1.0;
+            for i in 0..self.n_inputs {
+                p *= self.side(idx, i).len() as f64;
+            }
+            total += p;
+        }
+        total
+    }
+
+    /// Rows ingested across all inputs (pre-intersection) — throughput
+    /// denominators for the benches.
+    pub fn total_rows(&self) -> u64 {
+        self.vals.iter().map(|v| v.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::join::group_by_key;
+    use crate::util::Rng;
+
+    fn random_inputs(seed: u64, n_inputs: usize, rows: usize, keyspace: u64) -> Vec<Vec<Record>> {
+        let mut r = Rng::new(seed);
+        (0..n_inputs)
+            .map(|_| {
+                (0..rows)
+                    .map(|_| Record::new(r.below(keyspace), r.f64()))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_hashmap_cogroup_exactly() {
+        for n in [2usize, 3] {
+            let inputs = random_inputs(7 + n as u64, n, 400, 60);
+            let cg = CogroupColumns::from_records(&inputs);
+            let mut groups = group_by_key(&inputs);
+            groups.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+            assert_eq!(cg.num_keys(), groups.len(), "{n}-way key count");
+            let mut expect: Vec<u64> = groups.keys().copied().collect();
+            expect.sort_unstable();
+            assert_eq!(cg.keys(), &expect[..], "ascending joinable keys");
+            for idx in 0..cg.num_keys() {
+                let key = cg.key(idx);
+                let sides = &groups[&key];
+                for i in 0..n {
+                    // same values in the same (arrival) order
+                    assert_eq!(cg.side(idx, i), &sides[i][..], "key {key} input {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_pairs_matches_product_sum() {
+        let inputs = random_inputs(3, 2, 500, 40);
+        let cg = CogroupColumns::from_records(&inputs);
+        let mut groups = group_by_key(&inputs);
+        groups.retain(|_, sides| sides.iter().all(|s| !s.is_empty()));
+        let mut keys: Vec<u64> = groups.keys().copied().collect();
+        keys.sort_unstable();
+        let expect: f64 = keys
+            .iter()
+            .map(|k| groups[k].iter().map(|s| s.len() as f64).product::<f64>())
+            .sum();
+        assert_eq!(cg.total_pairs(), expect);
+        assert_eq!(cg.total_rows(), 1000);
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_agrees_with_fresh() {
+        let a = random_inputs(11, 2, 300, 30);
+        let b = random_inputs(12, 2, 350, 25);
+        let mut cg = CogroupColumns::from_records(&a);
+        let first_keys: Vec<u64> = cg.keys().to_vec();
+        let slices_b: Vec<&[Record]> = b.iter().map(|v| v.as_slice()).collect();
+        cg.rebuild(&slices_b);
+        let fresh = CogroupColumns::from_records(&b);
+        assert_eq!(cg.keys(), fresh.keys());
+        for idx in 0..cg.num_keys() {
+            for i in 0..2 {
+                assert_eq!(cg.side(idx, i), fresh.side(idx, i));
+            }
+        }
+        // and rebuilding the first inputs again restores the first state
+        let slices_a: Vec<&[Record]> = a.iter().map(|v| v.as_slice()).collect();
+        cg.rebuild(&slices_a);
+        assert_eq!(cg.keys(), &first_keys[..]);
+    }
+
+    #[test]
+    fn disjoint_and_empty_inputs() {
+        let a = vec![Record::new(1, 1.0), Record::new(2, 2.0)];
+        let b = vec![Record::new(3, 3.0)];
+        let cg = CogroupColumns::from_records(&[a.clone(), b]);
+        assert_eq!(cg.num_keys(), 0);
+        assert_eq!(cg.total_pairs(), 0.0);
+        let cg = CogroupColumns::from_records(&[a, vec![]]);
+        assert!(cg.is_empty());
+    }
+
+    #[test]
+    fn sides_into_fills_input_order() {
+        let a = vec![Record::new(5, 1.0), Record::new(5, 2.0)];
+        let b = vec![Record::new(5, 10.0)];
+        let cg = CogroupColumns::from_records(&[a, b]);
+        let mut sides: Vec<&[f64]> = Vec::new();
+        cg.sides_into(0, &mut sides);
+        assert_eq!(sides, vec![&[1.0, 2.0][..], &[10.0][..]]);
+    }
+
+    #[test]
+    fn stable_sort_preserves_arrival_order_within_key() {
+        // duplicate keys with distinguishable values, deliberately
+        // interleaved: the column must keep arrival order per key
+        let a = vec![
+            Record::new(9, 1.0),
+            Record::new(4, 100.0),
+            Record::new(9, 2.0),
+            Record::new(4, 200.0),
+            Record::new(9, 3.0),
+        ];
+        let b = vec![Record::new(9, 7.0), Record::new(4, 8.0)];
+        let cg = CogroupColumns::from_records(&[a, b]);
+        assert_eq!(cg.keys(), &[4, 9]);
+        assert_eq!(cg.side(0, 0), &[100.0, 200.0]);
+        assert_eq!(cg.side(1, 0), &[1.0, 2.0, 3.0]);
+    }
+}

@@ -16,9 +16,11 @@
 //! through (deterministic, bit-identical to sequential execution).
 
 pub mod batch;
+pub mod columnar;
 pub mod parallel;
 
 pub use batch::{BloomProbeExecutor, CltExecutor, JoinAggExecutor};
+pub use columnar::CogroupColumns;
 pub use parallel::{default_parallelism, ParallelExecutor, NUM_PARTITIONS};
 
 use crate::util::Json;

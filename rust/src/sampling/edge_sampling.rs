@@ -35,26 +35,28 @@ impl SampledPairs {
     }
 }
 
-/// Population size Π |side_i| of a key group, saturating.
-pub fn population(sides: &[Vec<f64>]) -> f64 {
-    sides.iter().map(|s| s.len() as f64).product()
+/// Population size Π |side_i| of a key group, saturating. Generic over
+/// the side container (`Vec<f64>` cogroups or columnar `&[f64]` runs).
+pub fn population<S: AsRef<[f64]>>(sides: &[S]) -> f64 {
+    sides.iter().map(|s| s.as_ref().len() as f64).product()
 }
 
 /// Draw one edge: one uniform endpoint per side; returns the endpoint
 /// indices in `idx`.
 #[inline]
-fn draw<'a>(r: &mut Rng, sides: &'a [Vec<f64>], idx: &mut [usize]) {
+fn draw<S: AsRef<[f64]>>(r: &mut Rng, sides: &[S], idx: &mut [usize]) {
     for (d, side) in sides.iter().enumerate() {
-        idx[d] = r.index(side.len());
+        idx[d] = r.index(side.as_ref().len());
     }
-    let _ = &sides; // appease borrowck pattern
 }
 
 /// Stratified sampling with replacement (Alg 2 sampleAndExecute):
-/// aggregates b draws directly into a `StratumAgg`.
-pub fn sample_edges_with_replacement(
+/// aggregates b draws directly into a `StratumAgg`. The RNG consumption
+/// and f64 order depend only on side lengths and values, not on the
+/// container — `Vec<f64>` and columnar `&[f64]` sides sample identically.
+pub fn sample_edges_with_replacement<S: AsRef<[f64]>>(
     r: &mut Rng,
-    sides: &[Vec<f64>],
+    sides: &[S],
     b: u64,
     op: CombineOp,
 ) -> StratumAgg {
@@ -62,7 +64,7 @@ pub fn sample_edges_with_replacement(
         population: population(sides),
         ..Default::default()
     };
-    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+    if sides.iter().any(|s| s.as_ref().is_empty()) || b == 0 {
         return agg;
     }
     let n = sides.len();
@@ -71,7 +73,7 @@ pub fn sample_edges_with_replacement(
     for _ in 0..b {
         draw(r, sides, &mut idx);
         for d in 0..n {
-            vals[d] = sides[d][idx[d]];
+            vals[d] = sides[d].as_ref()[idx[d]];
         }
         agg.push(op.combine(&vals));
     }
@@ -81,15 +83,15 @@ pub fn sample_edges_with_replacement(
 /// With-replacement sampling that emits raw (left, right) pair values for
 /// the runtime path instead of aggregating locally. For n > 2 the first
 /// n−1 endpoint values are pre-reduced with `op` into `left`.
-pub fn sample_pairs_with_replacement(
+pub fn sample_pairs_with_replacement<S: AsRef<[f64]>>(
     r: &mut Rng,
-    sides: &[Vec<f64>],
+    sides: &[S],
     b: u64,
     op: CombineOp,
     out: &mut SampledPairs,
 ) -> f64 {
     let pop = population(sides);
-    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+    if sides.iter().any(|s| s.as_ref().is_empty()) || b == 0 {
         return pop;
     }
     let n = sides.len();
@@ -98,12 +100,12 @@ pub fn sample_pairs_with_replacement(
     out.right.reserve(b as usize);
     for _ in 0..b {
         draw(r, sides, &mut idx);
-        let mut left = sides[0][idx[0]];
+        let mut left = sides[0].as_ref()[idx[0]];
         for d in 1..n - 1 {
-            left = op.fold(left, sides[d][idx[d]]);
+            left = op.fold(left, sides[d].as_ref()[idx[d]]);
         }
         out.left.push(left);
-        out.right.push(sides[n - 1][idx[n - 1]]);
+        out.right.push(sides[n - 1].as_ref()[idx[n - 1]]);
     }
     pop
 }
@@ -112,9 +114,9 @@ pub fn sample_pairs_with_replacement(
 /// *distinct* edges are collected (capped at the stratum population and at
 /// `max_attempts` to bound the coupon-collector tail). Returns the
 /// deduplicated aggregate plus the raw draw count used for π_i.
-pub fn sample_edges_dedup(
+pub fn sample_edges_dedup<S: AsRef<[f64]>>(
     r: &mut Rng,
-    sides: &[Vec<f64>],
+    sides: &[S],
     b: u64,
     op: CombineOp,
 ) -> (StratumAgg, f64) {
@@ -123,7 +125,7 @@ pub fn sample_edges_dedup(
         population: pop,
         ..Default::default()
     };
-    if sides.iter().any(|s| s.is_empty()) || b == 0 {
+    if sides.iter().any(|s| s.as_ref().is_empty()) || b == 0 {
         return (agg, 0.0);
     }
     let n = sides.len();
@@ -139,11 +141,11 @@ pub fn sample_edges_dedup(
         // encode the edge as its odometer rank
         let mut rank = 0u128;
         for d in 0..n {
-            rank = rank * sides[d].len() as u128 + idx[d] as u128;
+            rank = rank * sides[d].as_ref().len() as u128 + idx[d] as u128;
         }
         if seen.insert(rank) {
             for d in 0..n {
-                vals[d] = sides[d][idx[d]];
+                vals[d] = sides[d].as_ref()[idx[d]];
             }
             agg.push(op.combine(&vals));
         }

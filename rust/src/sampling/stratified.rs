@@ -147,6 +147,52 @@ fn window_stratum_rng(seed: u64, key: u64, epoch: u64) -> Rng {
     )
 }
 
+/// One stratum's eviction-aware refresh decision: carry the previous
+/// reservoir verbatim when the stratum's window contents are untouched
+/// (no re-draw, no RNG consumption), otherwise redraw from the
+/// (seed, key, epoch)-derived RNG. Returns `None` for an empty stratum,
+/// else the reservoir plus whether it was carried. Generic over the side
+/// container — hash-map `Vec<f64>` cogroups and columnar `&[f64]` runs
+/// make identical decisions and identical draws.
+#[allow(clippy::too_many_arguments)]
+fn refresh_one<S: AsRef<[f64]>>(
+    key: u64,
+    sides: &[S],
+    changed: &HashSet<u64>,
+    previous: &HashMap<u64, StratumReservoir>,
+    params: &SamplingParams,
+    estimator: EstimatorKind,
+    op: CombineOp,
+    seed: u64,
+    epoch: u64,
+) -> Option<(StratumReservoir, bool)> {
+    if !changed.contains(&key) {
+        if let Some(prev) = previous.get(&key) {
+            debug_assert_eq!(
+                prev.agg.population,
+                population(sides),
+                "unchanged stratum {key} changed population — stale change tracking"
+            );
+            return Some((prev.clone(), true));
+        }
+    }
+    let pop = population(sides);
+    if pop == 0.0 {
+        return None;
+    }
+    let b = params.sample_size(key, pop);
+    let mut r = window_stratum_rng(seed, key, epoch);
+    let (agg, draws) = match estimator {
+        EstimatorKind::Clt => {
+            let agg = sample_edges_with_replacement(&mut r, sides, b, op);
+            let d = agg.count;
+            (agg, d)
+        }
+        EstimatorKind::HorvitzThompson => sample_edges_dedup(&mut r, sides, b, op),
+    };
+    Some((StratumReservoir { agg, draws, epoch }, false))
+}
+
 /// Eviction-aware refresh of per-stratum reservoirs over one window's
 /// cogrouped strata. A stratum whose contributing tuples did not change
 /// since the previous window (not in `changed`) carries its reservoir over
@@ -159,7 +205,7 @@ fn window_stratum_rng(seed: u64, key: u64, epoch: u64) -> Rng {
 /// (the streaming runtime shards by destination worker) produces
 /// bit-identical reservoirs. Returns the new reservoir map plus the
 /// (refreshed, carried) stratum counts.
-#[allow(clippy::too_many_arguments)] // one call site (the streaming join); a config struct would only restate it
+#[allow(clippy::too_many_arguments)] // mirrors refresh_one; a config struct would only restate it
 pub fn refresh_reservoir_strata(
     groups: &HashMap<u64, Vec<Vec<f64>>>,
     changed: &HashSet<u64>,
@@ -176,34 +222,55 @@ pub fn refresh_reservoir_strata(
     let (mut refreshed, mut carried) = (0u64, 0u64);
     for key in keys {
         let sides = &groups[&key];
-        if !changed.contains(&key) {
-            if let Some(prev) = previous.get(&key) {
-                debug_assert_eq!(
-                    prev.agg.population,
-                    population(sides),
-                    "unchanged stratum {key} changed population — stale change tracking"
-                );
-                out.insert(key, prev.clone());
+        match refresh_one(key, sides, changed, previous, params, estimator, op, seed, epoch) {
+            Some((res, true)) => {
+                out.insert(key, res);
                 carried += 1;
-                continue;
             }
-        }
-        let pop = population(sides);
-        if pop == 0.0 {
-            continue;
-        }
-        let b = params.sample_size(key, pop);
-        let mut r = window_stratum_rng(seed, key, epoch);
-        let (agg, draws) = match estimator {
-            EstimatorKind::Clt => {
-                let agg = sample_edges_with_replacement(&mut r, sides, b, op);
-                let d = agg.count;
-                (agg, d)
+            Some((res, false)) => {
+                out.insert(key, res);
+                refreshed += 1;
             }
-            EstimatorKind::HorvitzThompson => sample_edges_dedup(&mut r, sides, b, op),
-        };
-        out.insert(key, StratumReservoir { agg, draws, epoch });
-        refreshed += 1;
+            None => {}
+        }
+    }
+    (out, refreshed, carried)
+}
+
+/// [`refresh_reservoir_strata`] over a columnar cogroup: iterates the
+/// directory's contiguous key runs (already ascending — no key sort, no
+/// hash lookups) and reads value slices straight out of the columns.
+/// Per-stratum decisions, RNG streams and draws are identical to the
+/// hash-map version's, so window outputs stay bit-identical whichever
+/// cogroup representation the runtime uses.
+#[allow(clippy::too_many_arguments)]
+pub fn refresh_reservoir_strata_columnar(
+    cogroup: &crate::runtime::CogroupColumns,
+    changed: &HashSet<u64>,
+    previous: &HashMap<u64, StratumReservoir>,
+    params: &SamplingParams,
+    estimator: EstimatorKind,
+    op: CombineOp,
+    seed: u64,
+    epoch: u64,
+) -> (HashMap<u64, StratumReservoir>, u64, u64) {
+    let mut out = HashMap::with_capacity(cogroup.num_keys());
+    let (mut refreshed, mut carried) = (0u64, 0u64);
+    let mut sides: Vec<&[f64]> = Vec::with_capacity(cogroup.n_inputs());
+    for idx in 0..cogroup.num_keys() {
+        let key = cogroup.key(idx);
+        cogroup.sides_into(idx, &mut sides);
+        match refresh_one(key, &sides, changed, previous, params, estimator, op, seed, epoch) {
+            Some((res, true)) => {
+                out.insert(key, res);
+                carried += 1;
+            }
+            Some((res, false)) => {
+                out.insert(key, res);
+                refreshed += 1;
+            }
+            None => {}
+        }
     }
     (out, refreshed, carried)
 }
@@ -400,6 +467,50 @@ mod tests {
             } else {
                 assert_eq!(w1[&key], w0[&key], "unchanged stratum {key} must carry");
             }
+        }
+    }
+
+    #[test]
+    fn columnar_refresh_bit_identical_to_hashmap_refresh() {
+        use crate::data::Record;
+        use crate::runtime::CogroupColumns;
+        let params = SamplingParams::Fraction(0.3);
+        for estimator in [EstimatorKind::Clt, EstimatorKind::HorvitzThompson] {
+            let groups = window_groups(25, 3);
+            // columnar build from the equivalent record streams
+            let mut per_input: Vec<Vec<Record>> = vec![Vec::new(), Vec::new()];
+            let mut keys: Vec<u64> = groups.keys().copied().collect();
+            keys.sort_unstable();
+            for &key in &keys {
+                for (i, side) in groups[&key].iter().enumerate() {
+                    for &v in side {
+                        per_input[i].push(Record::new(key, v));
+                    }
+                }
+            }
+            let cg = CogroupColumns::from_records(&per_input);
+            let changed: HashSet<u64> = (0..10u64).collect();
+            // seed the previous map so carried strata exercise both paths
+            let all: HashSet<u64> = groups.keys().copied().collect();
+            let (prev, _, _) = refresh_reservoir_strata(
+                &groups,
+                &all,
+                &HashMap::new(),
+                &params,
+                estimator,
+                CombineOp::Sum,
+                11,
+                0,
+            );
+            let (a, ra, ca) = refresh_reservoir_strata(
+                &groups, &changed, &prev, &params, estimator, CombineOp::Sum, 11, 1,
+            );
+            let (b, rb, cb) = refresh_reservoir_strata_columnar(
+                &cg, &changed, &prev, &params, estimator, CombineOp::Sum, 11, 1,
+            );
+            assert_eq!(a, b, "{estimator:?}");
+            assert_eq!((ra, ca), (rb, cb));
+            assert_eq!(ca, 15);
         }
     }
 

@@ -54,10 +54,17 @@ pub use crate::join::StrategyChoice;
 /// `fp_rate`, `memory_budget`, `estimator` and `seed` carry through to the
 /// strategies the planner hands out.
 fn registry_for(cfg: &EngineConfig) -> StrategyRegistry {
+    // a kind-only (auto-sized) filter config pins the engine's filter
+    // kind while leaving the geometry to be sized from the inputs at
+    // execute time; the standard default keeps `filter: None`
+    let filter = match cfg.filter_kind {
+        crate::bloom::FilterKind::Standard => None,
+        kind => Some(crate::join::bloom_join::FilterConfig::auto_sized(kind)),
+    };
     let mut r = StrategyRegistry::empty();
     r.register(Box::new(BloomJoin {
         fp_rate: cfg.fp_rate,
-        filter: None,
+        filter,
     }));
     r.register(Box::new(RepartitionJoin));
     r.register(Box::new(BroadcastJoin));
@@ -66,7 +73,7 @@ fn registry_for(cfg: &EngineConfig) -> StrategyRegistry {
     }));
     r.register(Box::new(ApproxJoin {
         fp_rate: cfg.fp_rate,
-        filter: None,
+        filter,
         config: ApproxConfig {
             params: SamplingParams::Fraction(0.1),
             estimator: cfg.estimator,
@@ -399,7 +406,10 @@ impl QueryBuilder<'_> {
         // forced approx run uses the strategy's own fixed sampling config.
         if plan.approximate && !self.query.budget.is_unbounded() {
             let mut outcome = session.engine.execute_on(&self.query, &inputs)?;
-            outcome.plan = Some(plan.with_measured_shuffle(outcome.ledger.total_bytes()));
+            outcome.plan = Some(
+                plan.with_measured_shuffle(outcome.ledger.total_bytes())
+                    .with_filter_report(outcome.filter_report),
+            );
             return Ok(outcome);
         }
         if !plan.approximate
@@ -474,9 +484,13 @@ impl QueryBuilder<'_> {
             output_cardinality,
             metrics,
             strategy: plan.strategy.clone(),
-            plan: Some(plan.with_measured_shuffle(ledger.total_bytes())),
+            plan: Some(
+                plan.with_measured_shuffle(ledger.total_bytes())
+                    .with_filter_report(run.filter_report),
+            ),
             ledger,
             grouped: None,
+            filter_report: run.filter_report,
         })
     }
 }

@@ -119,6 +119,7 @@ struct AggRun {
     metrics: crate::cluster::JoinMetrics,
     ledger: crate::cluster::ShuffleLedger,
     d_dt: f64,
+    filter_report: Option<crate::bloom::FilterReport>,
 }
 
 /// Execute the full relational query: one kernel run per aggregate
@@ -166,16 +167,13 @@ pub(crate) fn run_relational(
             // engage the pinned XLA artifact geometry (the engine owns
             // those executors privately) — native execution is the
             // always-available reference implementation.
-            let filter_cfg = FilterConfig::for_inputs(inputs, cfg.fp_rate);
+            let filter_cfg =
+                FilterConfig::for_inputs_kind(inputs, cfg.fp_rate, cfg.filter_kind);
             let mut prober = NativeProber;
             let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, &mut prober)?;
             let d_dt = filtered.d_dt;
-            let total_pairs: f64 = filtered
-                .per_worker
-                .iter()
-                .flat_map(|g| g.values())
-                .map(|sides| sides.iter().map(|s| s.len() as f64).product::<f64>())
-                .sum();
+            let filter_report = filtered.join_filter.report();
+            let total_pairs: f64 = filtered.total_pairs();
             let mode = section32_mode(
                 &query.budget,
                 &session.engine.cost,
@@ -218,6 +216,7 @@ pub(crate) fn run_relational(
                 metrics: cluster.take_metrics(),
                 ledger: cluster.take_ledger(),
                 d_dt,
+                filter_report: Some(filter_report),
             }
         } else {
             let strategy = session
@@ -234,6 +233,7 @@ pub(crate) fn run_relational(
                 metrics: run.metrics,
                 ledger: run.ledger,
                 d_dt,
+                filter_report: run.filter_report,
             }
         };
         session.engine.feedback.record(&agg_fp, &run.strata);
@@ -320,11 +320,15 @@ pub(crate) fn run_relational(
         output_cardinality,
         metrics,
         strategy: plan.strategy.clone(),
-        plan: Some(plan.with_measured_shuffle(ledger.total_bytes())),
+        plan: Some(
+            plan.with_measured_shuffle(ledger.total_bytes())
+                .with_filter_report(first.filter_report),
+        ),
         ledger,
         grouped: Some(GroupedApproxResult {
             group_column: lowered.groups.as_ref().map(|d| d.column.clone()),
             aggregates: grouped_aggs,
         }),
+        filter_report: first.filter_report,
     })
 }

@@ -58,11 +58,19 @@ impl StreamingSession {
                 time_model: cfg.time_model,
                 parallelism: cfg.parallelism,
                 fp_rate: cfg.fp_rate,
+                filter_kind: cfg.filter_kind,
                 sampling: Some(base_sampling.clone()),
                 ..Default::default()
             },
             base_sampling,
         }
+    }
+
+    /// Sketch/filter bit layout — [`crate::bloom::FilterKind::Blocked`]
+    /// opts this stream into the one-cache-line probe path.
+    pub fn filter_kind(mut self, kind: crate::bloom::FilterKind) -> Self {
+        self.config.filter_kind = kind;
+        self
     }
 
     /// Window shape (tumbling or sliding), in micro-batch units.

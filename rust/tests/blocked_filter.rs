@@ -1,0 +1,307 @@
+//! The blocked-filter hot path's contracts: no false negatives under
+//! insert/OR/AND churn, a measured false-positive rate within 2x of the
+//! configured bound across geometries, survivor-superset + result
+//! equivalence against the standard filter on all five strategies, and
+//! thread-count bit-identity of the opt-in blocked path.
+
+use approxjoin::bloom::{BlockedBloomFilter, FilterKind, JoinFilter};
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::data::{generate_overlapping, Dataset, SyntheticSpec};
+use approxjoin::join::bloom_join::{filter_and_shuffle, FilterConfig, NativeProber};
+use approxjoin::join::{CombineOp, JoinRun, StrategyRegistry};
+use approxjoin::session::Session;
+use approxjoin::util::Rng;
+use std::collections::HashSet;
+
+fn cluster(threads: usize) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+}
+
+fn workload(overlap: f64, seed: u64) -> Vec<Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: 6_000,
+        overlap_fraction: overlap,
+        lambda: 25.0,
+        partitions: 8,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Insert/OR/AND churn across many merge rounds must never lose a key
+/// that was inserted on every AND side — the Algorithm 1 invariant the
+/// join-filter construction rests on.
+#[test]
+fn no_false_negatives_under_insert_or_and_churn() {
+    let mut r = Rng::new(1);
+    for round in 0..5u64 {
+        // partition shards OR-merge into two dataset filters, which AND
+        let mut shards_a: Vec<BlockedBloomFilter> =
+            (0..4).map(|_| BlockedBloomFilter::new(15, 5)).collect();
+        let mut shards_b: Vec<BlockedBloomFilter> =
+            (0..4).map(|_| BlockedBloomFilter::new(15, 5)).collect();
+        let common: Vec<u64> = (0..800).map(|_| r.next_u64()).collect();
+        for (i, &key) in common.iter().enumerate() {
+            shards_a[i % 4].insert_key64(key);
+            shards_b[(i + 1) % 4].insert_key64(key);
+        }
+        // churn: noise keys on both sides
+        for _ in 0..2000 {
+            shards_a[r.index(4)].insert_key64(r.next_u64());
+            shards_b[r.index(4)].insert_key64(r.next_u64());
+        }
+        let or_merge = |mut shards: Vec<BlockedBloomFilter>| {
+            let mut acc = shards.pop().unwrap();
+            for s in &shards {
+                acc.union_with(s);
+            }
+            acc
+        };
+        let mut join = or_merge(shards_a);
+        join.intersect_with(&or_merge(shards_b));
+        assert!(
+            common.iter().all(|&k| join.contains_key64(k)),
+            "round {round}: AND of OR-merged shards lost a common key"
+        );
+    }
+}
+
+/// Measured fp rate stays within 2x of the configured bound across
+/// geometries — the price of the blocked layout is bounded.
+#[test]
+fn measured_fp_within_2x_of_bound_across_geometries() {
+    let mut r = Rng::new(2);
+    for &(items, bound) in &[
+        (5_000u64, 0.01f64),
+        (20_000, 0.01),
+        (60_000, 0.02),
+        (200_000, 0.05),
+        (1_000, 0.001),
+    ] {
+        let mut f = BlockedBloomFilter::with_capacity(items, bound);
+        for _ in 0..items {
+            f.insert(r.next_u32());
+        }
+        let probes = 200_000u32;
+        let fps = (0..probes).filter(|_| f.contains(r.next_u32())).count();
+        let measured = fps as f64 / probes as f64;
+        assert!(
+            measured <= 2.0 * bound,
+            "items={items} bound={bound}: measured fp {measured} > 2x bound \
+             (geometry 2^{} h={})",
+            f.log2_bits(),
+            f.num_hashes()
+        );
+        // and the block-aware fill estimate tracks the measurement
+        let est = f.current_fp_rate();
+        assert!(
+            (measured - est).abs() < est * 0.5 + 0.002,
+            "items={items}: measured {measured} vs estimate {est}"
+        );
+    }
+}
+
+/// The filtering stage with either kind keeps every truly-participating
+/// record (no false negatives), and the blocked survivor set is a
+/// superset property: survivors >= true participants per input.
+#[test]
+fn survivor_sets_are_supersets_of_true_participants() {
+    let inputs = workload(0.1, 17);
+    // ground truth: records whose key appears in every input
+    let key_sets: Vec<HashSet<u64>> = inputs.iter().map(|d| d.distinct_keys()).collect();
+    let common: HashSet<u64> = key_sets[0]
+        .iter()
+        .filter(|k| key_sets[1..].iter().all(|s| s.contains(k)))
+        .copied()
+        .collect();
+    let participants: Vec<u64> = inputs
+        .iter()
+        .map(|d| d.iter().filter(|r| common.contains(&r.key)).count() as u64)
+        .collect();
+
+    for kind in [FilterKind::Standard, FilterKind::Blocked] {
+        let cfg = FilterConfig::for_inputs_kind(&inputs, 0.01, kind);
+        let mut c = cluster(1);
+        let f = filter_and_shuffle(&mut c, &inputs, cfg, &mut NativeProber).unwrap();
+        for (i, &p) in participants.iter().enumerate() {
+            assert!(
+                f.survivors[i] >= p,
+                "{kind}: input {i} survivors {} < participants {p}",
+                f.survivors[i]
+            );
+        }
+        // every truly-common key must appear in the cogrouped directory
+        let cogrouped: HashSet<u64> = f
+            .per_worker
+            .iter()
+            .flat_map(|cg| cg.keys().iter().copied())
+            .collect();
+        assert!(
+            common.iter().all(|k| cogrouped.contains(k)),
+            "{kind}: a participating key was filtered out"
+        );
+        match (kind, &f.join_filter) {
+            (FilterKind::Standard, JoinFilter::Standard(_)) => {}
+            (FilterKind::Blocked, JoinFilter::Blocked(_)) => {}
+            _ => panic!("filter kind not honored"),
+        }
+    }
+}
+
+fn result_fingerprint(run: &JoinRun) -> Vec<(u64, u64, u64, u64, u64)> {
+    let mut strata: Vec<(u64, u64, u64, u64, u64)> = run
+        .strata
+        .iter()
+        .map(|(&k, a)| {
+            (
+                k,
+                a.population.to_bits(),
+                a.count.to_bits(),
+                a.sum.to_bits(),
+                a.sumsq.to_bits(),
+            )
+        })
+        .collect();
+    strata.sort_unstable();
+    strata
+}
+
+/// All five strategies return identical per-stratum results whichever
+/// filter kind the engine config selects: the non-filtering strategies
+/// trivially, bloom/approx because false positives die at the cogroup.
+#[test]
+fn standard_vs_blocked_equivalence_on_all_five_strategies() {
+    let inputs = workload(0.08, 42);
+    let registry_for_kind = |kind: FilterKind| {
+        // the default registry is the standard-kind baseline; the blocked
+        // registry re-registers the two filtering strategies with a
+        // kind-only (auto-sized) filter config, exactly as the session's
+        // engine-config switch does
+        let mut r = StrategyRegistry::with_defaults();
+        if kind == FilterKind::Blocked {
+            r.register(Box::new(approxjoin::join::BloomJoin {
+                fp_rate: 0.01,
+                filter: Some(FilterConfig::auto_sized(kind)),
+            }));
+            r.register(Box::new(approxjoin::join::ApproxJoin {
+                fp_rate: 0.01,
+                filter: Some(FilterConfig::auto_sized(kind)),
+                config: Default::default(),
+            }));
+        }
+        r
+    };
+    let std_reg = registry_for_kind(FilterKind::Standard);
+    let blk_reg = registry_for_kind(FilterKind::Blocked);
+    for (std_s, blk_s) in std_reg.iter().zip(blk_reg.iter()) {
+        assert_eq!(std_s.name(), blk_s.name());
+        let a = std_s.execute(&mut cluster(1), &inputs, CombineOp::Sum).unwrap();
+        let b = blk_s.execute(&mut cluster(1), &inputs, CombineOp::Sum).unwrap();
+        assert_eq!(
+            result_fingerprint(&a),
+            result_fingerprint(&b),
+            "{} diverges between filter kinds",
+            std_s.name()
+        );
+        if std_s.name() == "bloom" || std_s.name() == "approx" {
+            assert_eq!(a.filter_report.unwrap().kind, FilterKind::Standard);
+            assert_eq!(b.filter_report.unwrap().kind, FilterKind::Blocked);
+        } else {
+            assert!(a.filter_report.is_none());
+        }
+    }
+}
+
+/// The blocked path obeys the same parallel bit-identity contract as the
+/// default path: 1/2/8 threads produce identical strata, draws, and
+/// measured traffic.
+#[test]
+fn blocked_path_bit_identical_across_thread_counts() {
+    let inputs = workload(0.15, 9);
+    let cfg = FilterConfig::for_inputs_kind(&inputs, 0.01, FilterKind::Blocked);
+    let reference = approxjoin::join::bloom_join::bloom_join(
+        &mut cluster(1),
+        &inputs,
+        CombineOp::Sum,
+        cfg,
+        &mut NativeProber,
+    )
+    .unwrap();
+    for threads in [2, 8] {
+        let parallel = approxjoin::join::bloom_join::bloom_join(
+            &mut cluster(threads),
+            &inputs,
+            CombineOp::Sum,
+            cfg,
+            &mut NativeProber,
+        )
+        .unwrap();
+        assert_eq!(result_fingerprint(&reference), result_fingerprint(&parallel));
+        assert_eq!(reference.ledger, parallel.ledger, "{threads} threads");
+    }
+}
+
+/// End-to-end through the session: the engine-config switch routes every
+/// query onto blocked filters, the answers match the standard engine
+/// bit-for-bit, and the executed plan reports the measured fp rate.
+#[test]
+fn session_filter_kind_switch_end_to_end() {
+    let inputs = workload(0.05, 33);
+    let run_with = |kind: FilterKind| {
+        let mut s = Session::without_runtime(EngineConfig {
+            workers: 4,
+            filter_kind: kind,
+            ..Default::default()
+        })
+        .unwrap()
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone());
+        s.sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let std_out = run_with(FilterKind::Standard);
+    let blk_out = run_with(FilterKind::Blocked);
+    assert_eq!(
+        std_out.result.estimate.to_bits(),
+        blk_out.result.estimate.to_bits()
+    );
+    assert_eq!(std_out.strategy, blk_out.strategy);
+    if let Some(report) = blk_out.filter_report {
+        assert_eq!(report.kind, FilterKind::Blocked);
+        assert!(report.fp_rate >= 0.0 && report.fp_rate < 1.0);
+        let text = blk_out.plan.as_ref().unwrap().explain();
+        assert!(text.contains("blocked filter"), "{text}");
+        assert!(text.contains("measured-fill fp"), "{text}");
+    } else {
+        // the planner picked a non-filtering strategy for this workload;
+        // force bloom to exercise the report path
+        let mut s = Session::without_runtime(EngineConfig {
+            workers: 4,
+            filter_kind: FilterKind::Blocked,
+            ..Default::default()
+        })
+        .unwrap()
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone());
+        let out = s
+            .sql("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+            .unwrap()
+            .strategy(approxjoin::session::StrategyChoice::named("bloom"))
+            .run()
+            .unwrap();
+        let report = out.filter_report.expect("bloom always filters");
+        assert_eq!(report.kind, FilterKind::Blocked);
+        assert!(out.plan.unwrap().explain().contains("blocked filter"));
+    }
+}

@@ -103,6 +103,7 @@ fn bloom_join_never_loses_output_pairs() {
             filter: Some(FilterConfig {
                 log2_bits: 8, // deliberately tiny: many false positives
                 num_hashes: 2,
+                kind: Default::default(),
             }),
         };
         let bj = tiny.execute(&mut cluster(4), &inputs, CombineOp::Sum).unwrap();
