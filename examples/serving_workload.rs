@@ -1,0 +1,108 @@
+//! Serving workload: the multi-tenant Server over a scripted concurrent
+//! client mix.
+//!
+//!   cargo run --release --example serving_workload
+//!
+//! Eight clients each run a three-query script through one [`Server`]:
+//! every client gets an isolated session (its own feedback scope and
+//! result cache) while all of them share a single sketch cache of
+//! stage-1 artifacts — built Bloom filters and filtered cogroups. The
+//! example shows
+//!
+//! 1. the shared sketch cache turning repeated stage-1 work across
+//!    clients into hits (visible as `[sketch cache: ...]` in explain),
+//! 2. per-client result caches answering exact repeats with a staleness-
+//!    widened CI instead of re-executing,
+//! 3. that the concurrent answers are bit-identical to a sequential
+//!    replay of the same workload, and
+//! 4. an over-SLO burst where admission *degrades* (shrinks sampling
+//!    budgets — wider CIs, not queueing) before it ever rejects.
+
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::row;
+use approxjoin::serve::{ServeConfig, Server, Workload};
+use approxjoin::util::Table;
+
+fn server(cfg: ServeConfig) -> Server {
+    // two overlapping inputs, registered server-wide as `a` and `b`
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: 5_000,
+        overlap_fraction: 0.1,
+        lambda: 20.0,
+        partitions: 8,
+        seed: 3,
+        ..Default::default()
+    });
+    Server::new(cfg)
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ServeConfig {
+        engine: EngineConfig {
+            workers: 4,
+            parallelism: 1,
+            ..Default::default()
+        },
+        serve_threads: 4,
+        ..Default::default()
+    };
+
+    // 1. steady state: 8 clients x 3 ERROR-budget queries. Per script:
+    //    q0 warms (or hits) the shared sketch cache, q1 repeats q0 and
+    //    hits the client's own result cache, q2 varies by client parity
+    //    (pushed predicate vs tighter error budget).
+    let workload = Workload::scripted(8, 3);
+    let report = server(cfg.clone()).run_workload(&workload)?;
+    println!("== steady state ==\n{}\n", report.render());
+
+    let mut t = Table::new(&["client", "q", "estimate", "± bound", "answered from", "age"]);
+    for r in report.responses.iter().take(9) {
+        let o = r.outcome.as_ref().expect("steady state never rejects");
+        let src = if o.from_result_cache {
+            "result cache"
+        } else if o.explain.as_deref().is_some_and(|e| e.contains("[sketch cache:")) {
+            "sketch cache + execute"
+        } else {
+            "cold execute"
+        };
+        t.row(row![
+            r.client,
+            r.index,
+            format!("{:.1}", o.result.estimate),
+            format!("{:.1}", o.result.error_bound),
+            src,
+            o.staleness_age
+        ]);
+    }
+    t.print();
+
+    // 2. determinism: the same workload replayed on one thread answers
+    //    bit-for-bit the same (signatures exclude wall time and which
+    //    client happened to warm the cache).
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.serve_threads = 1;
+    let replay = server(seq_cfg).run_workload(&workload)?;
+    assert_eq!(report.signature(), replay.signature());
+    println!("\nconcurrent answers are bit-identical to the sequential replay");
+
+    // 3. an over-SLO burst of tight WITHIN queries: a tiny SLO forces the
+    //    admission ladder — admit, degrade (shrinking budgets), and only
+    //    past the hard backlog limit reject with JoinError::Overloaded.
+    let mut burst_cfg = cfg;
+    burst_cfg.slo_secs = 1e-7;
+    burst_cfg.hard_limit_secs = 2e-7;
+    burst_cfg.min_budget_secs = 1e-7;
+    let burst = server(burst_cfg).run_workload(&Workload::burst(8, 4))?;
+    println!("\n== over-SLO burst ==\n{}", burst.render());
+    assert!(burst.admission.degraded > 0, "burst should degrade first");
+    assert!(burst.admission.rejected > 0, "burst should eventually reject");
+    println!(
+        "degradation before rejection: {} queries got shrunken sampling \
+         budgets (wider CIs), {} were rejected as Overloaded",
+        burst.admission.degraded, burst.admission.rejected
+    );
+    Ok(())
+}

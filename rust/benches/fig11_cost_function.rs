@@ -86,7 +86,8 @@ fn main() {
             ExecutionMode::Exact => 1.0,
         };
         let loss = ((out.result.estimate - exact) / exact).abs();
-        let ext = post_join_sampling(&mut mk(), &inputs, CombineOp::Sum, fraction.min(1.0), 0.95, 3);
+        let ext =
+            post_join_sampling(&mut mk(), &inputs, CombineOp::Sum, fraction.min(1.0), 0.95, 3);
         let ext_loss = ((ext.estimate.estimate - exact) / exact).abs();
         t.row(row![
             fmt::duration(desired),

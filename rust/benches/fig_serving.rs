@@ -1,0 +1,172 @@
+//! Serving bench: aggregate throughput and cache effectiveness of the
+//! multi-tenant Server under a scripted concurrent workload, plus the
+//! admission controller's degrade-before-reject ladder under an over-SLO
+//! burst.
+//!
+//! Like the other figure benches this is a plain main() that panics on
+//! any correctness violation, so CI's serving-smoke job fails on:
+//!   * any query of the >= 16-client scripted workload not completing,
+//!   * zero shared sketch-cache hits (or no `[sketch cache: ...]` marker
+//!     surfacing in an executed plan's explain output),
+//!   * zero per-client result-cache hits,
+//!   * the concurrent run's answers diverging from a sequential replay
+//!     (bit-level, via ServeReport::signature), and
+//!   * an over-SLO burst rejecting without having degraded first.
+//!
+//! Env knobs (the CI serving-smoke job sets all three):
+//!   APPROXJOIN_THREADS=N       serve-thread fan-out (default: host cores)
+//!   APPROXJOIN_BENCH_QUICK=1   smaller inputs and client count
+//!   BENCH_JSON=path            merge a `fig_serving_t{N}` section into
+//!                              the given JSON report
+
+use approxjoin::cluster::TimeModel;
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::data::{generate_overlapping, SyntheticSpec};
+use approxjoin::serve::{ServeConfig, Server, Workload};
+use approxjoin::util::Json;
+
+fn server(items: u64, serve_threads: usize) -> Server {
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: items,
+        overlap_fraction: 0.1,
+        lambda: 20.0,
+        partitions: 8,
+        seed: 19,
+        ..Default::default()
+    });
+    let cfg = ServeConfig {
+        engine: EngineConfig {
+            workers: 4,
+            // one engine thread per client: concurrency comes from the
+            // server fan-out, not nested parallelism
+            parallelism: 1,
+            time_model: TimeModel {
+                bandwidth: 1e6,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+            ..Default::default()
+        },
+        serve_threads,
+        ..Default::default()
+    };
+    Server::new(cfg)
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone())
+}
+
+fn main() {
+    let quick = std::env::var("APPROXJOIN_BENCH_QUICK").is_ok();
+    let threads = approxjoin::runtime::default_parallelism();
+    println!(
+        "== Serving: {} threads, scripted multi-tenant workload{} ==\n",
+        threads,
+        if quick { " (quick mode)" } else { "" }
+    );
+    let (items, clients, per_client) =
+        if quick { (2_000u64, 16usize, 3usize) } else { (10_000, 24, 6) };
+
+    // ---- steady state: ERROR-budget mix across >= 16 concurrent clients
+    let workload = Workload::scripted(clients, per_client);
+    let report = server(items, threads).run_workload(&workload).expect("serve");
+    println!("{}\n", report.render());
+    assert_eq!(
+        report.executed,
+        workload.total_queries(),
+        "steady-state workload must complete every query"
+    );
+    assert!(
+        report.sketch.cogroup_hits + report.sketch.filter_hits >= 1,
+        "clients share one sketch cache: expected at least one hit"
+    );
+    assert!(
+        report
+            .responses
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok())
+            .filter_map(|o| o.explain.as_deref())
+            .any(|e| e.contains("[sketch cache:")),
+        "a sketch-cache hit must surface in explain output"
+    );
+    assert!(
+        report.result_hits as usize >= clients,
+        "each client repeats its first query: expected >= {clients} result hits"
+    );
+
+    // ---- bit-identity: sequential replay answers the same bits
+    let replay = server(items, 1).run_workload(&workload).expect("replay");
+    assert_eq!(
+        report.signature(),
+        replay.signature(),
+        "{threads}-thread serving diverged from the sequential replay"
+    );
+    println!("bit-identity: {threads}-thread run == sequential replay\n");
+
+    // ---- over-SLO burst: tight WITHIN queries against a tiny SLO walk
+    // the admission ladder (admit -> degrade -> reject)
+    let steady = server(items, threads);
+    let burst_cfg = ServeConfig {
+        slo_secs: 1e-7,
+        hard_limit_secs: 2e-7,
+        min_budget_secs: 1e-7,
+        ..steady.config().clone()
+    };
+    let inputs = generate_overlapping(&SyntheticSpec {
+        items_per_input: items,
+        overlap_fraction: 0.1,
+        lambda: 20.0,
+        partitions: 8,
+        seed: 19,
+        ..Default::default()
+    });
+    let burst_server = Server::new(burst_cfg)
+        .with_data("a", inputs[0].clone())
+        .with_data("b", inputs[1].clone());
+    let burst = burst_server
+        .run_workload(&Workload::burst(clients, per_client))
+        .expect("burst");
+    println!("over-SLO burst:\n{}\n", burst.render());
+    assert!(
+        burst.admission.degraded > 0,
+        "the burst must degrade (shrink budgets) before rejecting"
+    );
+    assert!(burst.admission.rejected > 0, "the burst must hit the hard limit");
+
+    println!(
+        "steady state: {:.1} QPS, {:.0}% sketch hits, {:.0}% result hits; \
+         burst rejection {:.0}%",
+        report.qps(),
+        100.0 * report.sketch_hit_rate(),
+        100.0 * report.result_hit_rate(),
+        100.0 * burst.rejection_rate()
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            &format!("fig_serving_t{threads}"),
+            Json::obj(vec![
+                ("quick_mode", Json::Bool(quick)),
+                ("serve_threads", Json::num(threads as f64)),
+                ("clients", Json::num(clients as f64)),
+                ("queries_per_client", Json::num(per_client as f64)),
+                ("executed", Json::num(report.executed as f64)),
+                ("wall_secs", Json::num(report.wall_secs)),
+                ("qps", Json::num(report.qps())),
+                ("sketch_hit_rate", Json::num(report.sketch_hit_rate())),
+                ("sketch_cogroup_hits", Json::num(report.sketch.cogroup_hits as f64)),
+                ("sketch_filter_hits", Json::num(report.sketch.filter_hits as f64)),
+                ("result_hit_rate", Json::num(report.result_hit_rate())),
+                ("result_hits", Json::num(report.result_hits as f64)),
+                ("shuffled_bytes", Json::num(report.ledger.total_bytes() as f64)),
+                ("burst_admitted", Json::num(burst.admission.admitted as f64)),
+                ("burst_degraded", Json::num(burst.admission.degraded as f64)),
+                ("burst_rejected", Json::num(burst.admission.rejected as f64)),
+                ("burst_rejection_rate", Json::num(burst.rejection_rate())),
+            ]),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote fig_serving_t{threads} section to {}", path.display());
+    }
+}

@@ -98,6 +98,19 @@ pub fn positions_for(
     }
 }
 
+/// How much of a run's stage-1 work was served from the serving layer's
+/// sketch cache ([`crate::serve::SketchCache`]). `None` outside the
+/// serving layer; `Filter` means the built join filter was reused (probe
+/// and shuffle still ran); `Cogroup` means the whole filtered cogroup was
+/// replayed and stage 1 was skipped entirely.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SketchCacheHit {
+    #[default]
+    None,
+    Filter,
+    Cogroup,
+}
+
 /// What a join run reports about the filter it built — kind, geometry,
 /// and the fill-derived false-positive estimate measured *after* the
 /// build; `JoinPlan::explain()` renders it next to the predictions.
@@ -110,18 +123,32 @@ pub struct FilterReport {
     /// filters: mean over blocks of fill_b^h).
     pub fp_rate: f64,
     pub size_bytes: u64,
+    /// Whether this run reused a cached sketch instead of building one.
+    pub cached: SketchCacheHit,
 }
 
 impl FilterReport {
     pub fn render(&self) -> String {
+        let cache_note = match self.cached {
+            SketchCacheHit::None => "",
+            SketchCacheHit::Filter => " [sketch cache: filter hit]",
+            SketchCacheHit::Cogroup => " [sketch cache: cogroup hit]",
+        };
         format!(
-            "{} filter 2^{} bits h={} ({} B), measured-fill fp {:.4}%",
+            "{} filter 2^{} bits h={} ({} B), measured-fill fp {:.4}%{}",
             self.kind,
             self.log2_bits,
             self.num_hashes,
             self.size_bytes,
-            self.fp_rate * 100.0
+            self.fp_rate * 100.0,
+            cache_note
         )
+    }
+
+    /// The same report, marked as served from the sketch cache.
+    pub fn with_cache_hit(mut self, hit: SketchCacheHit) -> Self {
+        self.cached = hit;
+        self
     }
 }
 
@@ -256,6 +283,7 @@ impl JoinFilter {
             num_hashes: self.num_hashes(),
             fp_rate: self.current_fp_rate(),
             size_bytes: self.size_bytes(),
+            cached: SketchCacheHit::None,
         }
     }
 }

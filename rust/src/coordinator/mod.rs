@@ -71,6 +71,9 @@ pub struct ApproxJoinEngine {
     pub cfg: EngineConfig,
     pub cost: CostModel,
     pub feedback: FeedbackStore,
+    /// Shared sketch cache (the serving layer attaches one per
+    /// [`crate::serve::Server`]); `None` means stage 1 always rebuilds.
+    pub sketches: Option<std::sync::Arc<crate::serve::SketchCache>>,
     runtime: Option<PjrtRuntime>,
     join_agg: Option<JoinAggExecutor>,
     prober: Option<BloomProbeExecutor>,
@@ -104,6 +107,7 @@ impl ApproxJoinEngine {
             cfg,
             cost: CostModel::default(),
             feedback: FeedbackStore::in_memory(),
+            sketches: None,
             runtime,
             join_agg,
             prober,
@@ -129,6 +133,13 @@ impl ApproxJoinEngine {
 
     pub fn with_feedback(mut self, feedback: FeedbackStore) -> Self {
         self.feedback = feedback;
+        self
+    }
+
+    /// Attach a shared [`crate::serve::SketchCache`]: stage 1 consults it
+    /// before building filters/cogroups, and inserts what it builds.
+    pub fn with_sketches(mut self, sketches: std::sync::Arc<crate::serve::SketchCache>) -> Self {
+        self.sketches = Some(sketches);
         self
     }
 
@@ -188,20 +199,34 @@ impl ApproxJoinEngine {
         }
         let mut cluster = self.cluster();
         let filter_cfg = self.filter_config(inputs);
+        let sketches = self.sketches.clone();
 
-        // ---- stage 1: filtering (§3.1)
+        // ---- stage 1: filtering (§3.1), via the sketch cache when one is
+        // attached (cache hits replay bit-identical artifacts, so the
+        // answer never depends on who warmed the cache)
         let mut native_prober = NativeProber;
         let prober: &mut dyn KeyProber = match &mut self.prober {
             Some(p) => p,
             None => &mut native_prober,
         };
-        let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?;
+        let (filtered, cache_hit) = match &sketches {
+            Some(cache) => {
+                // the scalar path's cogroup depends only on the inputs and
+                // the filter geometry, so predicate/projection tags are
+                // empty and every scalar query over the same tables shares
+                cache.filtered(&mut cluster, inputs, &query.tables, "", "", filter_cfg, prober)?
+            }
+            None => (
+                filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?,
+                crate::bloom::SketchCacheHit::None,
+            ),
+        };
         let d_dt = filtered.d_dt;
 
         // exact output cardinality Σ B_i (known after filtering), summed
         // over the columnar directories in ascending key order
         let total_pairs: f64 = filtered.total_pairs();
-        let filter_report = filtered.join_filter.report();
+        let filter_report = filtered.join_filter.report().with_cache_hit(cache_hit);
 
         // ---- stage 2.1: cost function decides the plan (§3.2)
         let confidence = query.budget.error.map(|e| e.confidence).unwrap_or(0.95);

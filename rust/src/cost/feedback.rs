@@ -13,6 +13,11 @@ use std::path::PathBuf;
 pub struct FeedbackStore {
     path: Option<PathBuf>,
     runs: HashMap<String, HashMap<u64, f64>>,
+    /// Session scope prefixed onto every fingerprint. Empty (the default)
+    /// shares entries across all callers of this store; the serving layer
+    /// gives each concurrent client session its own scope so two sessions
+    /// running the same query shape never interleave σ feedback.
+    scope: String,
 }
 
 impl FeedbackStore {
@@ -21,12 +26,35 @@ impl FeedbackStore {
         Self::default()
     }
 
+    /// Namespace every fingerprint under `scope` — entries written through
+    /// a scoped store are invisible to other scopes (and to the unscoped
+    /// view) of the same underlying map.
+    pub fn with_scope(mut self, scope: impl Into<String>) -> Self {
+        self.scope = scope.into();
+        self
+    }
+
+    /// Change the scope in place (see [`FeedbackStore::with_scope`]).
+    pub fn set_scope(&mut self, scope: impl Into<String>) {
+        self.scope = scope.into();
+    }
+
+    /// The scoped key a fingerprint is stored under.
+    fn key(&self, fingerprint: &str) -> String {
+        if self.scope.is_empty() {
+            fingerprint.to_string()
+        } else {
+            format!("{}::{}", self.scope, fingerprint)
+        }
+    }
+
     /// Store backed by a JSON file; loads existing content if present.
     pub fn open(path: impl Into<PathBuf>) -> anyhow::Result<Self> {
         let path = path.into();
         let mut store = Self {
             path: Some(path.clone()),
             runs: HashMap::new(),
+            scope: String::new(),
         };
         if path.exists() {
             let j = Json::parse(&std::fs::read_to_string(&path)?)?;
@@ -49,7 +77,7 @@ impl FeedbackStore {
 
     /// Record the observed per-stratum σ of a finished run.
     pub fn record(&mut self, fingerprint: &str, strata: &HashMap<u64, StratumAgg>) {
-        let entry = self.runs.entry(fingerprint.to_string()).or_default();
+        let entry = self.runs.entry(self.key(fingerprint)).or_default();
         for (&key, agg) in strata {
             if agg.count > 1.0 {
                 entry.insert(key, agg.stddev());
@@ -59,18 +87,18 @@ impl FeedbackStore {
 
     /// Stored σ map for a query (empty on first execution).
     pub fn sigmas(&self, fingerprint: &str) -> HashMap<u64, f64> {
-        self.runs.get(fingerprint).cloned().unwrap_or_default()
+        self.runs.get(&self.key(fingerprint)).cloned().unwrap_or_default()
     }
 
     pub fn has(&self, fingerprint: &str) -> bool {
-        self.runs.contains_key(fingerprint)
+        self.runs.contains_key(&self.key(fingerprint))
     }
 
     /// Median stored σ — the `default_sigma` for strata unseen so far.
     pub fn default_sigma(&self, fingerprint: &str) -> f64 {
         let mut v: Vec<f64> = self
             .runs
-            .get(fingerprint)
+            .get(&self.key(fingerprint))
             .map(|m| m.values().copied().collect())
             .unwrap_or_default();
         if v.is_empty() {
@@ -147,6 +175,28 @@ mod tests {
         let d = s.default_sigma("q");
         assert!((d - 3.0).abs() < 1e-9, "median {d}");
         assert_eq!(FeedbackStore::in_memory().default_sigma("nope"), 1.0);
+    }
+
+    #[test]
+    fn scoped_entries_never_interleave() {
+        let mut strata = HashMap::new();
+        strata.insert(1u64, agg(10.0, 50.0, 300.0));
+
+        // two scoped views writing the same fingerprint stay disjoint
+        let mut s1 = FeedbackStore::in_memory().with_scope("client0");
+        s1.record("q", &strata);
+        assert!(s1.has("q"));
+        let mut s2 = s1.clone();
+        s2.set_scope("client1");
+        assert!(!s2.has("q"), "client1 must not see client0's sigmas");
+        s2.record("q", &strata);
+        assert!(s2.has("q"));
+
+        // the unscoped view of the same map sees neither
+        let mut unscoped = s2.clone();
+        unscoped.set_scope("");
+        assert!(!unscoped.has("q"));
+        assert_eq!(unscoped.default_sigma("q"), 1.0);
     }
 
     #[test]

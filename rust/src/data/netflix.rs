@@ -79,8 +79,18 @@ pub fn generate(spec: &NetflixSpec) -> Vec<Dataset> {
     }
 
     vec![
-        Dataset::from_records_unpartitioned("training_set", training, spec.partitions, TRAINING_BYTES),
-        Dataset::from_records_unpartitioned("qualifying", qualifying, spec.partitions, QUALIFYING_BYTES),
+        Dataset::from_records_unpartitioned(
+            "training_set",
+            training,
+            spec.partitions,
+            TRAINING_BYTES,
+        ),
+        Dataset::from_records_unpartitioned(
+            "qualifying",
+            qualifying,
+            spec.partitions,
+            QUALIFYING_BYTES,
+        ),
     ]
 }
 

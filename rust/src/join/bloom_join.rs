@@ -220,6 +220,20 @@ pub fn filter_and_shuffle(
         "auto-sized FilterConfig must be resolved against the inputs \
          (FilterConfig::resolved) before filtering"
     );
+    let (join_filter, d_dt) = build_join_filter(cluster, inputs, cfg);
+    probe_and_shuffle(cluster, inputs, join_filter, d_dt, prober)
+}
+
+/// Steps (1)-(3) of stage 1: per-dataset filters via map + treeReduce,
+/// the AND at the master, and the broadcast. Returns the join filter and
+/// the stage's simulated seconds. Split out so the serving layer's
+/// [`crate::serve::SketchCache`] can reuse a built filter across queries
+/// and pay only the probe + shuffle half.
+pub fn build_join_filter(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    cfg: FilterConfig,
+) -> (JoinFilter, f64) {
     let n = inputs.len();
 
     // (1) dataset filters via map + treeReduce
@@ -237,7 +251,24 @@ pub fn filter_and_shuffle(
     });
     // (3) broadcast the join filter
     s.broadcast(0, join_filter.size_bytes());
-    let mut d_dt = s.finish(cluster);
+    let d_dt = s.finish(cluster);
+    (join_filter, d_dt)
+}
+
+/// Steps (4)-(5) of stage 1: probe local records against an already-built
+/// join filter, shuffle the survivors, and cogroup per worker. `d_dt0`
+/// carries the build stage's simulated seconds into [`Filtered::d_dt`]
+/// (zero when the filter was replayed from a cache — the cost dial then
+/// sees the build as already paid).
+pub fn probe_and_shuffle(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    join_filter: JoinFilter,
+    d_dt0: f64,
+    prober: &mut dyn KeyProber,
+) -> anyhow::Result<Filtered> {
+    let n = inputs.len();
+    let mut d_dt = d_dt0;
 
     // (4) probe local records, (5) shuffle survivors
     let mut s = cluster.stage("filter_shuffle");

@@ -136,7 +136,8 @@ mod tests {
             vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0), (5, 4.0), (6, 4.0)],
             4,
         );
-        let bc = broadcast_join(&mut cluster(4), &[a.clone(), big.clone()], CombineOp::Sum).unwrap();
+        let bc = broadcast_join(&mut cluster(4), &[a.clone(), big.clone()], CombineOp::Sum)
+            .unwrap();
         let nat = native_join(&mut cluster(4), &[a, big], CombineOp::Sum, u64::MAX).unwrap();
         assert!(
             (bc.exact_sum() - nat.exact_sum()).abs() < 1e-9,
@@ -178,8 +179,12 @@ mod tests {
         let a = ds("a", vec![(1, 1.0), (2, 2.0)], 2);
         let b = ds("b", vec![(1, 10.0), (1, 20.0), (2, 30.0)], 2);
         let big = ds("c", vec![(1, 100.0), (3, 0.0), (4, 1.0), (5, 1.0)], 2);
-        let bc = broadcast_join(&mut cluster(2), &[a.clone(), b.clone(), big.clone()], CombineOp::Sum)
-            .unwrap();
+        let bc = broadcast_join(
+            &mut cluster(2),
+            &[a.clone(), b.clone(), big.clone()],
+            CombineOp::Sum,
+        )
+        .unwrap();
         let nat = native_join(&mut cluster(2), &[a, b, big], CombineOp::Sum, u64::MAX).unwrap();
         assert!((bc.exact_sum() - nat.exact_sum()).abs() < 1e-9);
     }

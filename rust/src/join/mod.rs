@@ -161,6 +161,13 @@ pub enum JoinError {
     Unsupported { strategy: String, reason: String },
     /// A lower layer (Bloom prober, batch aggregator, runtime) failed.
     Runtime(String),
+    /// The serving layer's admission controller refused the query: the
+    /// predicted queue wait already exceeds the hard limit, so even a
+    /// maximally degraded sampling budget could not meet the latency SLO.
+    Overloaded {
+        predicted_wait_secs: f64,
+        hard_limit_secs: f64,
+    },
 }
 
 impl std::fmt::Display for JoinError {
@@ -173,6 +180,14 @@ impl std::fmt::Display for JoinError {
                 write!(f, "strategy {strategy} unsupported: {reason}")
             }
             JoinError::Runtime(msg) => write!(f, "join runtime error: {msg}"),
+            JoinError::Overloaded {
+                predicted_wait_secs,
+                hard_limit_secs,
+            } => write!(
+                f,
+                "server overloaded: predicted queue wait {predicted_wait_secs:.3}s \
+                 exceeds the hard limit {hard_limit_secs:.3}s"
+            ),
         }
     }
 }

@@ -93,7 +93,8 @@ mod tests {
     fn matches_native_join_result() {
         let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]);
         let b = ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]);
-        let rep = repartition_join(&mut cluster(), &[a.clone(), b.clone()], CombineOp::Sum).unwrap();
+        let rep = repartition_join(&mut cluster(), &[a.clone(), b.clone()], CombineOp::Sum)
+            .unwrap();
         let nat = native_join(&mut cluster(), &[a, b], CombineOp::Sum, u64::MAX).unwrap();
         assert!((rep.exact_sum() - nat.exact_sum()).abs() < 1e-9);
         assert_eq!(rep.output_cardinality(), nat.output_cardinality());

@@ -120,6 +120,26 @@
 //!   [`relation::GroupedApproxResult`]: one `estimate ± CI` per group
 //!   per aggregate, from the same stratified CLT / Horvitz-Thompson
 //!   estimators — bit-identical at any thread count.
+//!
+//! ## Serving layer
+//!
+//! The [`serve`] module turns the one-shot session API into a
+//! multi-tenant front: a [`serve::Server`] runs scripted concurrent
+//! clients ([`serve::Workload`]), each in an isolated session with its
+//! own feedback scope and [`serve::ResultCache`] (staleness surfaces as
+//! *widened* confidence intervals), while all clients share one
+//! [`serve::SketchCache`] of stage-1 artifacts — built Bloom filters and
+//! filtered cogroups keyed by `(tables@epoch, pushed predicates, filter
+//! kind/geometry, workers)`, invalidated by re-registration, with hits
+//! visible in `explain()`. An [`serve::AdmissionController`] schedules
+//! under a latency SLO over deterministic virtual-time lanes: it admits,
+//! then *degrades* (shrinks sampling budgets — the §3.2 dial — answers
+//! get wider CIs, not slower), and only past a hard backlog limit
+//! rejects with the typed `JoinError::Overloaded`. Admission never reads
+//! host concurrency, and cached sketches replay bit-identically, so a
+//! concurrent run's answers equal a sequential replay
+//! ([`serve::ServeReport::signature`]). Front ends: `approxjoin serve`,
+//! `examples/serving_workload.rs`, and the `fig_serving` bench.
 
 pub mod bloom;
 pub mod cluster;
@@ -131,6 +151,7 @@ pub mod query;
 pub mod relation;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod session;
 pub mod simulation;
 pub mod stats;

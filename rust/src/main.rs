@@ -5,6 +5,8 @@
 //!   explain   print the cost-based JoinPlan for a query without running it
 //!   compare   run every registered join strategy on one workload
 //!   stream    windowed streaming join over the unbounded event generator
+//!   serve     multi-tenant serving: concurrent scripted clients, shared
+//!             sketch cache, per-client result caches, SLO admission
 //!   profile   profile β_compute (Fig 5) and persist the cost model
 //!   simulate  closed-form shuffle-volume models (Figs 4/14/15)
 //!
@@ -33,6 +35,7 @@ fn main() {
         Some("explain") => cmd_explain(&args[1..]),
         Some("compare") => cmd_compare(&args[1..]),
         Some("stream") => cmd_stream(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("help") | None => {
@@ -55,7 +58,7 @@ fn print_help() {
     println!(
         "approxjoin — approximate distributed joins behind a cost-based planner\n\
          (JoinStrategy trait: native | repartition | broadcast | bloom | approx)\n\n\
-         USAGE: approxjoin <query|explain|compare|profile|simulate> [flags]\n\n\
+         USAGE: approxjoin <query|explain|compare|stream|serve|profile|simulate> [flags]\n\n\
          query    --sql <QUERY> [--data <SPEC>] [--workers N] [--threads T]\n\
          \u{20}         [--estimator clt|ht] [--blocked-filter]\n\
          \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx]\n\
@@ -74,6 +77,20 @@ fn print_help() {
          \u{20}         deleted, never rebuilt), eviction-aware per-stratum\n\
          \u{20}         reservoirs, per-window estimate \u{b1} bound and measured\n\
          \u{20}         shuffle ledger\n\
+         serve    [--clients N] [--queries N] [--data <SPEC>] [--workers N]\n\
+         \u{20}         [--threads T] [--slo SECS] [--hard-limit SECS]\n\
+         \u{20}         [--burst] [--check]\n\
+         \u{20}         runs a scripted concurrent workload through the\n\
+         \u{20}         multi-tenant Server: one isolated session per client\n\
+         \u{20}         (own feedback scope + result cache), one shared sketch\n\
+         \u{20}         cache of built Bloom filters and filtered cogroups,\n\
+         \u{20}         and SLO admission control that degrades sampling\n\
+         \u{20}         budgets (wider CIs) before rejecting. --burst swaps in\n\
+         \u{20}         a uniform tight-WITHIN workload that overruns the SLO;\n\
+         \u{20}         --check replays the workload sequentially and asserts\n\
+         \u{20}         the answers are bit-identical to the concurrent run.\n\
+         \u{20}         SLO/limit are simulated cluster seconds, the same unit\n\
+         \u{20}         as WITHIN budgets.\n\
          profile  [--out PATH]\n\
          simulate --fig <4a|4b|14|15>\n\n\
          --threads T runs the partition-parallel executor on T OS threads\n\
@@ -545,6 +562,111 @@ fn cmd_stream(args: &[String]) -> anyhow::Result<()> {
         run.windows.len(),
         fmt::bytes(run.ledger.total_bytes())
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    use approxjoin::serve::{ServeConfig, Server, Workload};
+
+    let workers: usize = flag(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let threads = threads_flag(args)?;
+    let clients: usize = flag(args, "--clients").map(|v| v.parse()).transpose()?.unwrap_or(16);
+    let queries: usize = flag(args, "--queries").map(|v| v.parse()).transpose()?.unwrap_or(3);
+    if clients == 0 || queries == 0 {
+        anyhow::bail!("--clients and --queries must be >= 1");
+    }
+    let slo: f64 = flag(args, "--slo").map(|v| v.parse()).transpose()?.unwrap_or(1.0);
+    let hard: f64 = flag(args, "--hard-limit")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(5.0 * slo);
+    let burst = args.iter().any(|a| a == "--burst");
+    let check = args.iter().any(|a| a == "--check");
+    let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
+
+    // each client session runs its engine single-threaded; concurrency
+    // comes from fanning the clients out over --threads server threads
+    let cfg = ServeConfig {
+        engine: EngineConfig {
+            workers,
+            parallelism: 1,
+            filter_kind: filter_kind_flag(args),
+            ..Default::default()
+        },
+        serve_threads: threads,
+        slo_secs: slo,
+        hard_limit_secs: hard,
+        ..Default::default()
+    };
+    let inputs = load_data(&data, workers)?;
+    let mut server = Server::new(cfg);
+    for (d, name) in inputs.into_iter().zip(["a", "b"]) {
+        server = server.with_data(name, d);
+    }
+    let profile = std::path::Path::new("artifacts/cost_profile.json");
+    if profile.exists() {
+        server = server.with_cost_model(CostModel::load(profile)?);
+    }
+
+    let workload = if burst {
+        Workload::burst(clients, queries)
+    } else {
+        Workload::scripted(clients, queries)
+    };
+    println!(
+        "serving {} clients x {} queries ({}) on {} threads, SLO {}, hard limit {}",
+        clients,
+        queries,
+        if burst { "WITHIN burst" } else { "scripted ERROR mix" },
+        threads,
+        fmt::duration(slo),
+        fmt::duration(hard)
+    );
+    let report = server.run_workload(&workload)?;
+    println!("{}", report.render());
+
+    let mut t =
+        Table::new(&["client", "queries", "answered", "result hits", "rejected", "degraded"]);
+    for (ci, c) in workload.clients.iter().enumerate() {
+        let rs: Vec<_> = report.responses.iter().filter(|r| r.client == ci).collect();
+        t.row(row![
+            c.name.clone(),
+            rs.len(),
+            rs.iter().filter(|r| r.outcome.is_ok()).count(),
+            rs.iter()
+                .filter(|r| r.outcome.as_ref().is_ok_and(|o| o.from_result_cache))
+                .count(),
+            rs.iter().filter(|r| r.outcome.is_err()).count(),
+            rs.iter().filter(|r| r.degraded_to.is_some()).count()
+        ]);
+    }
+    t.print();
+
+    if check {
+        if burst {
+            println!("--check skipped: WITHIN burst answers follow measured wall time");
+        } else {
+            let mut seq_cfg = server.config().clone();
+            seq_cfg.serve_threads = 1;
+            let mut seq = Server::new(seq_cfg);
+            let seq_inputs = load_data(&data, workers)?;
+            for (d, name) in seq_inputs.into_iter().zip(["a", "b"]) {
+                seq = seq.with_data(name, d);
+            }
+            if profile.exists() {
+                seq = seq.with_cost_model(CostModel::load(profile)?);
+            }
+            let replay = seq.run_workload(&workload)?;
+            anyhow::ensure!(
+                replay.signature() == report.signature(),
+                "sequential replay diverged from the concurrent run"
+            );
+            println!(
+                "check: sequential replay bit-identical to the {}-thread run",
+                threads
+            );
+        }
+    }
     Ok(())
 }
 

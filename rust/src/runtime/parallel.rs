@@ -16,7 +16,7 @@
 //! their shuffle traffic, while the executor decides how many OS threads
 //! actually chew through the per-worker tasks on this host.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Default number of execution partitions (worker threads) a parallel
 /// cluster uses — the paper's experiments shard work 8 ways per node.
@@ -193,6 +193,84 @@ impl ParallelExecutor {
     }
 }
 
+impl ParallelExecutor {
+    /// Like [`ParallelExecutor::map`], but indices are claimed dynamically
+    /// from a shared atomic counter instead of being striped up front —
+    /// work stealing in its simplest form. Threads that finish a cheap
+    /// index immediately claim the next unclaimed one, so wildly uneven
+    /// per-index costs (a serving workload's client scripts, not the
+    /// kernel's balanced partitions) keep every thread busy. Results are
+    /// still returned **in index order**: each thread collects `(i, f(i))`
+    /// pairs and the pairs are merged back into their slots after the
+    /// scope joins, so scheduling cannot reorder anything. A panic in any
+    /// body propagates to the caller after the scope joins.
+    pub fn map_dynamic<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let poisoned = AtomicBool::new(false);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let next = &next;
+            let poisoned = &poisoned;
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, T)> = Vec::new();
+                        loop {
+                            if poisoned.load(Ordering::Relaxed) {
+                                return local;
+                            }
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                return local;
+                            }
+                            let out = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| f(i)),
+                            );
+                            match out {
+                                Ok(v) => local.push((i, v)),
+                                Err(payload) => {
+                                    poisoned.store(true, Ordering::Relaxed);
+                                    std::panic::resume_unwind(payload);
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let mut panic_payload = None;
+            for h in handles {
+                match h.join() {
+                    Ok(local) => {
+                        for (i, v) in local {
+                            slots[i] = Some(v);
+                        }
+                    }
+                    Err(payload) => {
+                        panic_payload.get_or_insert(payload);
+                    }
+                }
+            }
+            if let Some(payload) = panic_payload {
+                std::panic::resume_unwind(payload);
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index mapped"))
+            .collect()
+    }
+}
+
 impl Default for ParallelExecutor {
     fn default() -> Self {
         Self::sequential()
@@ -270,6 +348,42 @@ mod tests {
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             exec.map(8, |i| {
                 if i == 5 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn map_dynamic_preserves_index_order() {
+        for threads in [1, 2, 3, 8] {
+            let exec = ParallelExecutor::new(threads);
+            let out = exec.map_dynamic(37, |i| i * 3);
+            assert_eq!(out, (0..37).map(|i| i * 3).collect::<Vec<_>>(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn map_dynamic_runs_every_index_once() {
+        let exec = ParallelExecutor::new(4);
+        let calls = AtomicUsize::new(0);
+        let out = exec.map_dynamic(100, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+        assert_eq!(exec.map_dynamic(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn map_dynamic_panics_propagate() {
+        let exec = ParallelExecutor::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.map_dynamic(16, |i| {
+                if i == 7 {
                     panic!("boom at {i}");
                 }
                 i

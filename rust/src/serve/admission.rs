@@ -1,0 +1,253 @@
+//! Admission control under a global latency SLO.
+//!
+//! The controller models the serving pool as `lanes` parallel executor
+//! lanes with *virtual* finish times — deterministic list scheduling over
+//! the predicted cost of every query admitted so far, in arrival order.
+//! Decisions therefore depend only on the submission sequence, never on
+//! racy completion timing, so a concurrent run admits and degrades exactly
+//! like a sequential replay of the same workload.
+//!
+//! Per query, with `wait` the earliest lane's virtual backlog:
+//!
+//! 1. **Admit** when `wait + demand <= slo` — the query runs with its own
+//!    budget (`demand` is the declared latency budget, else the planner's
+//!    [`crate::join::CostEstimate`] prediction).
+//! 2. **Degrade** otherwise, while the SLO still leaves slack: the query's
+//!    sampling budget is shrunk to `slo - wait` (§3.2's latency/accuracy
+//!    dial — answers get wider CIs, not slower). Past zero slack the query
+//!    still queues at the floor budget while the backlog stays under the
+//!    hard limit.
+//! 3. **Reject** with [`crate::join::JoinError::Overloaded`] only when the
+//!    predicted wait alone exceeds `hard_limit_secs`.
+
+/// Counters over every decision the controller has made.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub degraded: u64,
+    pub rejected: u64,
+}
+
+impl AdmissionStats {
+    pub fn total(&self) -> u64 {
+        self.admitted + self.degraded + self.rejected
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / t as f64
+    }
+}
+
+/// The controller's verdict for one query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionDecision {
+    /// Run with the query's own budget.
+    Admit,
+    /// Run, but cap the sampling latency budget at `budget_secs`.
+    Degrade { budget_secs: f64 },
+    /// Refuse: predicted wait already past the hard limit.
+    Reject { predicted_wait_secs: f64 },
+}
+
+/// Deterministic SLO scheduler for the [`crate::serve::Server`].
+pub struct AdmissionController {
+    slo_secs: f64,
+    hard_limit_secs: f64,
+    min_budget_secs: f64,
+    /// Virtual finish time per executor lane.
+    lanes: Vec<f64>,
+    stats: AdmissionStats,
+}
+
+impl AdmissionController {
+    pub fn new(
+        slo_secs: f64,
+        hard_limit_secs: f64,
+        min_budget_secs: f64,
+        lanes: usize,
+    ) -> Self {
+        Self {
+            slo_secs,
+            hard_limit_secs: hard_limit_secs.max(slo_secs),
+            min_budget_secs: min_budget_secs.max(1e-9),
+            lanes: vec![0.0; lanes.max(1)],
+            stats: AdmissionStats::default(),
+        }
+    }
+
+    /// Decide one query, in arrival order. `predicted_secs` is the
+    /// planner's cost estimate for the chosen strategy;
+    /// `declared_budget_secs` the query's own `WITHIN` budget, if any.
+    pub fn admit(
+        &mut self,
+        predicted_secs: f64,
+        declared_budget_secs: Option<f64>,
+    ) -> AdmissionDecision {
+        let lane = self.earliest_lane();
+        let wait = self.lanes[lane];
+        // a budgeted query occupies its declared budget (the engine sizes
+        // the run to finish within it); an unbudgeted one occupies the
+        // planner's predicted cost
+        let demand = declared_budget_secs.unwrap_or(predicted_secs).max(0.0);
+
+        if wait + demand <= self.slo_secs {
+            self.lanes[lane] = wait + demand;
+            self.stats.admitted += 1;
+            return AdmissionDecision::Admit;
+        }
+        let slack = (self.slo_secs - wait).max(0.0);
+        if slack >= self.min_budget_secs {
+            self.lanes[lane] = wait + slack;
+            self.stats.degraded += 1;
+            return AdmissionDecision::Degrade { budget_secs: slack };
+        }
+        if wait <= self.hard_limit_secs {
+            self.lanes[lane] = wait + self.min_budget_secs;
+            self.stats.degraded += 1;
+            return AdmissionDecision::Degrade {
+                budget_secs: self.min_budget_secs,
+            };
+        }
+        self.stats.rejected += 1;
+        AdmissionDecision::Reject {
+            predicted_wait_secs: wait,
+        }
+    }
+
+    fn earliest_lane(&self) -> usize {
+        let mut best = 0;
+        for (i, &t) in self.lanes.iter().enumerate() {
+            if t < self.lanes[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The deepest lane's virtual backlog, in predicted seconds.
+    pub fn predicted_backlog(&self) -> f64 {
+        self.lanes.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats
+    }
+
+    pub fn slo_secs(&self) -> f64 {
+        self.slo_secs
+    }
+
+    pub fn hard_limit_secs(&self) -> f64 {
+        self.hard_limit_secs
+    }
+
+    /// Drain the virtual queue (burst boundary); counters are kept.
+    pub fn reset(&mut self) {
+        for l in &mut self.lanes {
+            *l = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_slo_admits_with_full_budget() {
+        let mut c = AdmissionController::new(1.0, 4.0, 1e-3, 2);
+        for _ in 0..4 {
+            // two lanes of 1.0s each fit four 0.5s queries
+            assert_eq!(c.admit(0.5, None), AdmissionDecision::Admit);
+        }
+        assert_eq!(c.stats().admitted, 4);
+        assert_eq!(c.predicted_backlog(), 1.0);
+    }
+
+    #[test]
+    fn over_slo_degrades_before_rejecting() {
+        let mut c = AdmissionController::new(0.1, 0.105, 1e-3, 1);
+        let mut seen_degrade = false;
+        let mut seen_reject = false;
+        let mut decisions = Vec::new();
+        for _ in 0..16 {
+            let d = c.admit(0.06, Some(0.06));
+            match d {
+                AdmissionDecision::Admit => {
+                    assert!(!seen_degrade && !seen_reject, "admit after degrade")
+                }
+                AdmissionDecision::Degrade { budget_secs } => {
+                    assert!(!seen_reject, "degrade after reject");
+                    assert!(budget_secs > 0.0 && budget_secs <= 0.06 + 1e-12);
+                    seen_degrade = true;
+                }
+                AdmissionDecision::Reject {
+                    predicted_wait_secs,
+                } => {
+                    assert!(predicted_wait_secs > 0.105);
+                    seen_reject = true;
+                }
+            }
+            decisions.push(d);
+        }
+        assert!(seen_degrade, "burst must degrade first: {decisions:?}");
+        assert!(seen_reject, "burst must eventually reject: {decisions:?}");
+        let s = c.stats();
+        assert!(s.admitted > 0 && s.degraded > 0 && s.rejected > 0);
+        assert_eq!(s.total(), 16);
+    }
+
+    #[test]
+    fn degraded_budget_shrinks_monotonically_to_the_floor() {
+        let mut c = AdmissionController::new(0.1, 10.0, 1e-3, 1);
+        assert_eq!(c.admit(0.06, Some(0.06)), AdmissionDecision::Admit);
+        let mut last = f64::INFINITY;
+        for _ in 0..3 {
+            match c.admit(0.06, Some(0.06)) {
+                AdmissionDecision::Degrade { budget_secs } => {
+                    assert!(budget_secs <= last + 1e-12);
+                    last = budget_secs;
+                }
+                d => panic!("expected degrade, got {d:?}"),
+            }
+        }
+        // slack exhausted: the floor budget keeps queueing under the
+        // (generous) hard limit
+        match c.admit(0.06, Some(0.06)) {
+            AdmissionDecision::Degrade { budget_secs } => {
+                assert!((budget_secs - 1e-3).abs() < 1e-12)
+            }
+            d => panic!("expected floor degrade, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn reset_drains_the_virtual_queue() {
+        let mut c = AdmissionController::new(0.1, 0.2, 1e-3, 1);
+        for _ in 0..8 {
+            c.admit(0.1, None);
+        }
+        assert!(c.predicted_backlog() > 0.0);
+        c.reset();
+        assert_eq!(c.predicted_backlog(), 0.0);
+        assert_eq!(c.admit(0.05, None), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn unbudgeted_exact_queries_get_a_budget_when_degraded() {
+        // an expensive exact query over SLO is not rejected outright — it
+        // is converted to a budgeted approximation first
+        let mut c = AdmissionController::new(0.5, 2.0, 1e-3, 1);
+        assert_eq!(c.admit(0.4, None), AdmissionDecision::Admit);
+        match c.admit(10.0, None) {
+            AdmissionDecision::Degrade { budget_secs } => {
+                assert!((budget_secs - 0.1).abs() < 1e-12, "{budget_secs}")
+            }
+            d => panic!("expected degrade, got {d:?}"),
+        }
+    }
+}

@@ -1,0 +1,423 @@
+//! Cross-query sketch reuse and per-client result reuse.
+//!
+//! [`SketchCache`] holds the expensive artifacts of ApproxJoin stage 1 —
+//! built [`JoinFilter`]s and filtered columnar [`CogroupColumns`] — keyed
+//! by what determines them bit-for-bit: the FROM tables (with a
+//! registration epoch each), the pushed-down predicates, the per-aggregate
+//! projection, the filter kind + geometry, and the worker count. Because
+//! stage 1 is a pure function of those inputs, replaying a cached sketch
+//! yields the *same* filtered cogroup the query would have built, so a
+//! cache hit changes only the measured traffic (and frees the latency
+//! budget for sampling), never the answer. Re-registering a table bumps
+//! its epoch, which orphans and prunes every entry built over the old
+//! contents.
+//!
+//! [`ResultCache`] is the layer above: whole `estimate ± CI` answers keyed
+//! by fingerprint + budget + table epochs. It is client-session-scoped
+//! (never shared across concurrent clients, keeping replies deterministic)
+//! and expresses staleness as a *widened* confidence interval: an answer
+//! served `age` queries after it was computed carries
+//! `error_bound * (1 + widening * age)` until `max_age` evicts it.
+
+use crate::bloom::{JoinFilter, SketchCacheHit};
+use crate::cluster::SimCluster;
+use crate::coordinator::ExecutionMode;
+use crate::data::Dataset;
+use crate::join::bloom_join::{
+    build_join_filter, probe_and_shuffle, FilterConfig, Filtered, KeyProber,
+};
+use crate::runtime::CogroupColumns;
+use crate::stats::ApproxResult;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cumulative lookup counters of a [`SketchCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SketchStats {
+    /// Stage 1 skipped entirely: the filtered cogroup was replayed.
+    pub cogroup_hits: u64,
+    /// The join filter was reused; probe + shuffle still ran.
+    pub filter_hits: u64,
+    pub misses: u64,
+}
+
+impl SketchStats {
+    pub fn lookups(&self) -> u64 {
+        self.cogroup_hits + self.filter_hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            return 0.0;
+        }
+        (self.cogroup_hits + self.filter_hits) as f64 / l as f64
+    }
+
+    /// Counters accumulated since `earlier` was snapshotted.
+    pub fn since(&self, earlier: &SketchStats) -> SketchStats {
+        SketchStats {
+            cogroup_hits: self.cogroup_hits - earlier.cogroup_hits,
+            filter_hits: self.filter_hits - earlier.filter_hits,
+            misses: self.misses - earlier.misses,
+        }
+    }
+}
+
+/// A cached stage-1 output: the filtered per-worker cogroup plus the
+/// filter and survivor counts that describe it.
+#[derive(Clone)]
+struct CachedCogroup {
+    per_worker: Arc<Vec<CogroupColumns>>,
+    join_filter: JoinFilter,
+    survivors: Vec<u64>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Registration epoch per table name; bumped by invalidation.
+    epochs: HashMap<String, u64>,
+    filters: HashMap<String, JoinFilter>,
+    cogroups: HashMap<String, CachedCogroup>,
+    stats: SketchStats,
+}
+
+/// Shared, thread-safe sketch cache for the serving layer. One instance
+/// is attached to every concurrent [`crate::session::Session`] a
+/// [`crate::serve::Server`] spawns; the engine's budgeted execution paths
+/// consult it before running stage 1.
+#[derive(Default)]
+pub struct SketchCache {
+    inner: Mutex<Inner>,
+}
+
+impl SketchCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current registration epoch of a table (0 until invalidated).
+    pub fn epoch_of(&self, table: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.epochs.get(table).copied().unwrap_or(0)
+    }
+
+    /// Bump `table`'s epoch and prune every entry built over it. Called
+    /// by `Session::register_table` / `with_data` / `with_table` when a
+    /// cache is attached, so re-registration can never serve stale
+    /// sketches.
+    pub fn invalidate(&self, table: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.epochs.entry(table.to_string()).or_insert(0) += 1;
+        let needle = format!("|t={table}@");
+        inner.filters.retain(|k, _| !k.contains(&needle));
+        inner.cogroups.retain(|k, _| !k.contains(&needle));
+    }
+
+    /// Drop every cached sketch (epochs are kept).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.filters.clear();
+        inner.cogroups.clear();
+    }
+
+    pub fn stats(&self) -> SketchStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// (cached filters, cached cogroups).
+    pub fn entry_counts(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.filters.len(), inner.cogroups.len())
+    }
+
+    /// The cache key of the join filter for a query shape. Epochs are
+    /// embedded per table, so re-registering a table orphans old entries
+    /// even before the prune runs.
+    fn filter_key(
+        epochs: &HashMap<String, u64>,
+        tables: &[String],
+        predicate_tag: &str,
+        cfg: FilterConfig,
+        workers: usize,
+    ) -> String {
+        let mut key = String::new();
+        for t in tables {
+            let e = epochs.get(t).copied().unwrap_or(0);
+            key.push_str(&format!("|t={t}@{e}"));
+        }
+        key.push_str(&format!(
+            "|p={predicate_tag}|k={}|g={}/{}|w={workers}",
+            cfg.kind, cfg.log2_bits, cfg.num_hashes
+        ));
+        key
+    }
+
+    /// Run (or replay) stage 1 for a query over `inputs`, consulting the
+    /// cache at both granularities. Returns the [`Filtered`] output plus
+    /// how much of it was served from cache:
+    ///
+    /// - **cogroup hit** — the whole filtered cogroup is replayed;
+    ///   `d_dt = 0` (the cost dial sees the filtering as already paid)
+    ///   and no cluster stages run.
+    /// - **filter hit** — the built join filter is reused; the probe +
+    ///   shuffle half runs normally on top of it.
+    /// - **miss** — full build, and both artifacts are inserted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn filtered(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        tables: &[String],
+        predicate_tag: &str,
+        projection_tag: &str,
+        cfg: FilterConfig,
+        prober: &mut dyn KeyProber,
+    ) -> anyhow::Result<(Filtered, SketchCacheHit)> {
+        assert!(
+            !cfg.is_auto_sized(),
+            "sketch-cache keys need a resolved filter geometry"
+        );
+        let workers = cluster.k;
+        let (fkey, ckey, cached_cogroup, cached_filter) = {
+            let mut inner = self.inner.lock().unwrap();
+            let fkey =
+                Self::filter_key(&inner.epochs, tables, predicate_tag, cfg, workers);
+            let ckey = format!("{fkey}|proj={projection_tag}");
+            let cg = inner.cogroups.get(&ckey).cloned();
+            let jf = if cg.is_none() {
+                inner.filters.get(&fkey).cloned()
+            } else {
+                None
+            };
+            match (&cg, &jf) {
+                (Some(_), _) => inner.stats.cogroup_hits += 1,
+                (None, Some(_)) => inner.stats.filter_hits += 1,
+                (None, None) => inner.stats.misses += 1,
+            }
+            (fkey, ckey, cg, jf)
+        };
+
+        if let Some(c) = cached_cogroup {
+            // replay: bit-identical to a rebuild over the same inputs, no
+            // cluster stages, and the filtering time is already paid
+            return Ok((
+                Filtered {
+                    per_worker: (*c.per_worker).clone(),
+                    d_dt: 0.0,
+                    join_filter: c.join_filter,
+                    survivors: c.survivors,
+                },
+                SketchCacheHit::Cogroup,
+            ));
+        }
+
+        let (filtered, hit) = if let Some(jf) = cached_filter {
+            // the build + treeReduce + broadcast half is skipped
+            let filtered = probe_and_shuffle(cluster, inputs, jf, 0.0, prober)?;
+            (filtered, SketchCacheHit::Filter)
+        } else {
+            let (join_filter, d_dt) = build_join_filter(cluster, inputs, cfg);
+            let filtered =
+                probe_and_shuffle(cluster, inputs, join_filter, d_dt, prober)?;
+            (filtered, SketchCacheHit::None)
+        };
+
+        let mut inner = self.inner.lock().unwrap();
+        if hit == SketchCacheHit::None {
+            inner
+                .filters
+                .insert(fkey, filtered.join_filter.clone());
+        }
+        inner.cogroups.insert(
+            ckey,
+            CachedCogroup {
+                per_worker: Arc::new(filtered.per_worker.clone()),
+                join_filter: filtered.join_filter.clone(),
+                survivors: filtered.survivors.clone(),
+            },
+        );
+        Ok((filtered, hit))
+    }
+}
+
+/// A cached whole-query answer with its insertion time (logical, counted
+/// in queries the owning client session has since processed).
+#[derive(Clone)]
+struct CachedResult {
+    result: ApproxResult,
+    strategy: String,
+    mode: ExecutionMode,
+    inserted: u64,
+}
+
+/// What a [`ResultCache`] lookup returns: the stored answer with its CI
+/// widened by age.
+#[derive(Clone, Debug)]
+pub struct CachedAnswer {
+    pub result: ApproxResult,
+    pub strategy: String,
+    pub mode: ExecutionMode,
+    /// Queries processed by this client since the answer was computed.
+    pub age: u64,
+}
+
+/// Per-client-session result cache. Staleness is not hidden: a hit aged
+/// `age` logical queries widens the stored half-width by
+/// `1 + widening * age`, so a consumer can always see how much confidence
+/// the shortcut cost. Entries older than `max_age` are recomputed.
+pub struct ResultCache {
+    widening: f64,
+    max_age: u64,
+    entries: HashMap<String, CachedResult>,
+    seq: u64,
+    hits: u64,
+    lookups: u64,
+}
+
+impl ResultCache {
+    pub fn new(widening: f64, max_age: u64) -> Self {
+        Self {
+            widening,
+            max_age,
+            entries: HashMap::new(),
+            seq: 0,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Advance the logical clock — one tick per query the owning session
+    /// processes (hit or miss), so `age` means "queries since computed".
+    pub fn tick(&mut self) {
+        self.seq += 1;
+    }
+
+    pub fn lookup(&mut self, key: &str) -> Option<CachedAnswer> {
+        self.lookups += 1;
+        let Some(entry) = self.entries.get(key) else {
+            return None;
+        };
+        let age = self.seq.saturating_sub(entry.inserted);
+        if age > self.max_age {
+            self.entries.remove(key);
+            return None;
+        }
+        self.hits += 1;
+        let mut result = entry.result;
+        result.error_bound *= 1.0 + self.widening * age as f64;
+        Some(CachedAnswer {
+            result,
+            strategy: entry.strategy.clone(),
+            mode: entry.mode,
+            age,
+        })
+    }
+
+    pub fn insert(
+        &mut self,
+        key: String,
+        result: ApproxResult,
+        strategy: &str,
+        mode: ExecutionMode,
+    ) {
+        self.entries.insert(
+            key,
+            CachedResult {
+                result,
+                strategy: strategy.to_string(),
+                mode,
+                inserted: self.seq,
+            },
+        );
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bloom::FilterKind;
+
+    fn cfg() -> FilterConfig {
+        FilterConfig {
+            log2_bits: 12,
+            num_hashes: 4,
+            kind: FilterKind::Standard,
+        }
+    }
+
+    fn tables() -> Vec<String> {
+        vec!["a".to_string(), "b".to_string()]
+    }
+
+    #[test]
+    fn filter_key_changes_with_each_component() {
+        let epochs = HashMap::new();
+        let base = SketchCache::filter_key(&epochs, &tables(), "", cfg(), 4);
+        // predicate
+        assert_ne!(base, SketchCache::filter_key(&epochs, &tables(), "a.value>0.5", cfg(), 4));
+        // filter kind
+        let blocked = FilterConfig {
+            kind: FilterKind::Blocked,
+            ..cfg()
+        };
+        assert_ne!(base, SketchCache::filter_key(&epochs, &tables(), "", blocked, 4));
+        // geometry
+        let bigger = FilterConfig {
+            log2_bits: 13,
+            ..cfg()
+        };
+        assert_ne!(base, SketchCache::filter_key(&epochs, &tables(), "", bigger, 4));
+        // workers
+        assert_ne!(base, SketchCache::filter_key(&epochs, &tables(), "", cfg(), 8));
+        // table registration epoch
+        let mut bumped = HashMap::new();
+        bumped.insert("a".to_string(), 1u64);
+        assert_ne!(base, SketchCache::filter_key(&bumped, &tables(), "", cfg(), 4));
+    }
+
+    #[test]
+    fn invalidate_bumps_epoch_and_prunes() {
+        let c = SketchCache::new();
+        assert_eq!(c.epoch_of("a"), 0);
+        c.invalidate("a");
+        assert_eq!(c.epoch_of("a"), 1);
+        assert_eq!(c.epoch_of("b"), 0);
+    }
+
+    #[test]
+    fn result_cache_widens_with_age_and_expires() {
+        let mut rc = ResultCache::new(0.5, 2);
+        let r = ApproxResult {
+            estimate: 100.0,
+            error_bound: 10.0,
+            confidence: 0.95,
+            degrees_of_freedom: 9.0,
+            samples: 10,
+        };
+        rc.insert("k".into(), r, "approx", ExecutionMode::Exact);
+        // same tick: age 0, unwidened
+        let a = rc.lookup("k").unwrap();
+        assert_eq!(a.age, 0);
+        assert_eq!(a.result.error_bound, 10.0);
+        // two ticks later: widened by 1 + 0.5*2
+        rc.tick();
+        rc.tick();
+        let a = rc.lookup("k").unwrap();
+        assert_eq!(a.age, 2);
+        assert!((a.result.error_bound - 20.0).abs() < 1e-12);
+        // past max_age: evicted, recompute
+        rc.tick();
+        assert!(rc.lookup("k").is_none());
+        assert_eq!(rc.hits(), 2);
+        assert_eq!(rc.lookups(), 3);
+    }
+}

@@ -1,0 +1,612 @@
+//! Multi-tenant serving layer: concurrent budgeted sessions, sketch and
+//! result caching, and SLO admission control.
+//!
+//! A [`Server`] owns the registered data and runs a scripted [`Workload`]
+//! of many concurrent clients. Each client gets an isolated
+//! [`crate::session::Session`] — its own engine, its own
+//! [`crate::cost::FeedbackStore`] scope, its own [`ResultCache`] — while
+//! all clients share one [`SketchCache`] of stage-1 artifacts (built
+//! [`crate::bloom::JoinFilter`]s and filtered cogroups).
+//!
+//! Determinism is the design constraint everything here serves:
+//!
+//! - **Admission** ([`AdmissionController`]) is decided *sequentially at
+//!   submission time* over virtual-time lanes, so the admit / degrade /
+//!   reject pattern is a pure function of the workload, never of racy
+//!   completion timing.
+//! - **Sketch sharing** is safe across threads because a cached artifact
+//!   is bit-identical to what a rebuild would produce, and a hit sets
+//!   `d_dt = 0` deterministically. ERROR-budget and exact queries are
+//!   therefore hit/miss-insensitive; only `WITHIN` queries read the
+//!   measured `d_dt` (documented on [`Workload::burst`]).
+//! - **Execution** fans clients out over
+//!   [`crate::runtime::ParallelExecutor::map_dynamic`] work stealing;
+//!   responses are merged back in client order, so a concurrent run's
+//!   [`ServeReport::signature`] is byte-identical to a sequential one.
+
+mod admission;
+mod cache;
+mod workload;
+
+pub use admission::{AdmissionController, AdmissionDecision, AdmissionStats};
+pub use cache::{CachedAnswer, ResultCache, SketchCache, SketchStats};
+pub use workload::{ClientScript, Workload};
+
+use crate::cluster::ShuffleLedger;
+use crate::coordinator::{EngineConfig, ExecutionMode};
+use crate::cost::CostModel;
+use crate::data::Dataset;
+use crate::join::JoinError;
+use crate::query::Query;
+use crate::relation::Relation;
+use crate::runtime::ParallelExecutor;
+use crate::session::Session;
+use crate::stats::ApproxResult;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Serving knobs on top of the per-query [`EngineConfig`]. The latency
+/// numbers are in *simulated* cluster seconds — the same unit as
+/// `WITHIN` budgets and the planner's predictions — so admission
+/// decisions stay deterministic across hosts.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub engine: EngineConfig,
+    /// OS threads the server fans clients out over. Never consulted by
+    /// admission — decisions must not depend on host concurrency.
+    pub serve_threads: usize,
+    /// Virtual executor lanes the admission controller schedules over.
+    /// Deliberately decoupled from `serve_threads`: the admit / degrade /
+    /// reject pattern (and therefore every answer) stays identical when
+    /// the same workload runs on a different thread count.
+    pub admission_lanes: usize,
+    /// Target latency per admission lane (admit while under this).
+    pub slo_secs: f64,
+    /// Reject only when the predicted queue wait alone exceeds this.
+    pub hard_limit_secs: f64,
+    /// Floor for degraded sampling budgets.
+    pub min_budget_secs: f64,
+    /// Result-cache CI widening per logical query of staleness.
+    pub result_widening: f64,
+    /// Result-cache entries older than this many queries are recomputed.
+    pub result_max_age: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::default(),
+            serve_threads: crate::runtime::default_parallelism(),
+            admission_lanes: 1,
+            slo_secs: 1.0,
+            hard_limit_secs: 5.0,
+            min_budget_secs: 1e-4,
+            result_widening: 0.25,
+            result_max_age: 8,
+        }
+    }
+}
+
+/// What one executed (or shortcut) query returned.
+#[derive(Clone, Debug)]
+pub struct ServedOutcome {
+    pub result: ApproxResult,
+    pub strategy: String,
+    pub mode: ExecutionMode,
+    /// Answered from this client's [`ResultCache`]; the CI in `result`
+    /// is already widened by `staleness_age`.
+    pub from_result_cache: bool,
+    pub staleness_age: u64,
+    /// EXPLAIN text of the executed plan (cache hits carry `None`);
+    /// includes the `[sketch cache: ...]` marker on its filter line.
+    pub explain: Option<String>,
+    /// Shuffle bytes this execution moved (0 for result-cache hits).
+    pub ledger_bytes: u64,
+}
+
+/// One query's reply, tagged with who asked and where in their script.
+#[derive(Debug)]
+pub struct QueryResponse {
+    pub client: usize,
+    pub index: usize,
+    pub sql: String,
+    /// The admission controller shrank this query's sampling budget to
+    /// this many (simulated) seconds.
+    pub degraded_to: Option<f64>,
+    pub outcome: Result<ServedOutcome, JoinError>,
+}
+
+/// Aggregate report of one [`Server::run_workload`] call.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Every reply, in (client, script index) order.
+    pub responses: Vec<QueryResponse>,
+    /// Real wall-clock seconds of the concurrent execution phase.
+    pub wall_secs: f64,
+    /// Queries answered (executions + result-cache hits).
+    pub executed: usize,
+    pub admission: AdmissionStats,
+    /// Sketch-cache counters accumulated by *this* run.
+    pub sketch: SketchStats,
+    pub result_hits: u64,
+    pub result_lookups: u64,
+    /// Per-stage shuffle traffic, tagged `client{c}/...`.
+    pub ledger: ShuffleLedger,
+    pub serve_threads: usize,
+}
+
+impl ServeReport {
+    /// Answered queries per wall-clock second.
+    pub fn qps(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.executed as f64 / self.wall_secs
+    }
+
+    pub fn sketch_hit_rate(&self) -> f64 {
+        self.sketch.hit_rate()
+    }
+
+    pub fn result_hit_rate(&self) -> f64 {
+        if self.result_lookups == 0 {
+            return 0.0;
+        }
+        self.result_hits as f64 / self.result_lookups as f64
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        self.admission.rejection_rate()
+    }
+
+    /// A deterministic transcript of every answer's bits — two runs of
+    /// the same workload (any thread count) must produce equal
+    /// signatures. Excludes anything scheduling-dependent: wall time,
+    /// shuffle bytes, and which client happened to warm the sketch cache.
+    pub fn signature(&self) -> String {
+        let mut s = String::new();
+        for r in &self.responses {
+            let _ = write!(s, "c{}q{}:", r.client, r.index);
+            match &r.outcome {
+                Ok(o) => {
+                    let _ = write!(
+                        s,
+                        "est={:016x},err={:016x},mode={:?},strat={},rc={},age={}",
+                        o.result.estimate.to_bits(),
+                        o.result.error_bound.to_bits(),
+                        o.mode,
+                        o.strategy,
+                        o.from_result_cache,
+                        o.staleness_age,
+                    );
+                }
+                Err(e) => {
+                    let _ = write!(s, "error({e})");
+                }
+            }
+            if let Some(b) = r.degraded_to {
+                let _ = write!(s, ",degraded={:016x}", b.to_bits());
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        format!(
+            "served {}/{} queries in {:.3}s on {} threads ({:.1} QPS)\n\
+             admission: {} admitted, {} degraded, {} rejected ({:.0}% rejection)\n\
+             sketch cache: {} cogroup + {} filter hits / {} lookups ({:.0}% hit rate)\n\
+             result cache: {} hits / {} lookups ({:.0}% hit rate)\n\
+             shuffle: {} bytes",
+            self.executed,
+            self.responses.len(),
+            self.wall_secs,
+            self.serve_threads,
+            self.qps(),
+            self.admission.admitted,
+            self.admission.degraded,
+            self.admission.rejected,
+            100.0 * self.rejection_rate(),
+            self.sketch.cogroup_hits,
+            self.sketch.filter_hits,
+            self.sketch.lookups(),
+            100.0 * self.sketch_hit_rate(),
+            self.result_hits,
+            self.result_lookups,
+            100.0 * self.result_hit_rate(),
+            self.ledger.total_bytes(),
+        )
+    }
+}
+
+/// What phase 0 decided for one scripted query.
+#[derive(Clone, Debug)]
+enum Directive {
+    /// Execute; `Some(b)` caps the sampling latency budget at `b`.
+    Run { budget: Option<f64> },
+    Reject { predicted_wait_secs: f64 },
+}
+
+/// Per-client results carried back from the execution phase.
+struct ClientRun {
+    responses: Vec<QueryResponse>,
+    ledger: ShuffleLedger,
+    result_hits: u64,
+    result_lookups: u64,
+}
+
+/// The multi-tenant serving front: registered data + a shared
+/// [`SketchCache`] + an [`AdmissionController`] per workload run.
+pub struct Server {
+    cfg: ServeConfig,
+    cost: Option<CostModel>,
+    datasets: Vec<(String, Dataset)>,
+    tables: Vec<(String, Relation)>,
+    sketches: Arc<SketchCache>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Self {
+        Self {
+            cfg,
+            cost: None,
+            datasets: Vec::new(),
+            tables: Vec::new(),
+            sketches: Arc::new(SketchCache::new()),
+        }
+    }
+
+    /// Register (or replace) a dataset server-wide. Re-registration bumps
+    /// the sketch cache's epoch for `name`, so no later query can reuse a
+    /// sketch built over the old contents.
+    pub fn with_data(mut self, name: &str, mut dataset: Dataset) -> Self {
+        dataset.name = name.to_string();
+        self.datasets.retain(|(n, _)| n != name);
+        self.datasets.push((name.to_string(), dataset));
+        self.sketches.invalidate(name);
+        self
+    }
+
+    /// Register (or replace) a typed relation server-wide; invalidates
+    /// like [`Server::with_data`].
+    pub fn with_table(mut self, name: &str, mut relation: Relation) -> Self {
+        relation.name = name.to_string();
+        self.tables.retain(|(n, _)| n != name);
+        self.tables.push((name.to_string(), relation));
+        self.sketches.invalidate(name);
+        self
+    }
+
+    /// Use a profiled cost model for every client session and the planner.
+    pub fn with_cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    /// The shared sketch cache (inspection / tests).
+    pub fn sketches(&self) -> &Arc<SketchCache> {
+        &self.sketches
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// A fresh isolated session over the server's registered data. The
+    /// sketch cache is attached *after* registration (the server already
+    /// owns invalidation), and `scope` namespaces the feedback store.
+    fn client_session(&self, scope: Option<&str>) -> anyhow::Result<Session> {
+        let mut session = Session::without_runtime(self.cfg.engine.clone())?;
+        for (name, d) in &self.datasets {
+            session = session.with_data(name, d.clone());
+        }
+        for (name, r) in &self.tables {
+            session = session.with_table(name, r.clone());
+        }
+        if let Some(cost) = &self.cost {
+            session = session.with_cost_model(*cost);
+        }
+        if let Some(scope) = scope {
+            session = session
+                .with_feedback_scope(scope)
+                .with_sketch_cache(self.sketches.clone());
+        }
+        Ok(session)
+    }
+
+    /// The per-client result-cache key: query shape + effective budget +
+    /// the registration epoch of every scanned table (a re-registered
+    /// table silently orphans old answers).
+    fn result_key(&self, query: &Query) -> String {
+        let mut key = format!("{}|b={:?}", query.fingerprint(), query.budget);
+        for t in &query.tables {
+            let _ = write!(key, "|{t}@{}", self.sketches.epoch_of(t));
+        }
+        key
+    }
+
+    /// Run a scripted workload: phase 0 admits every query sequentially
+    /// in round-robin arrival order (deterministic virtual-time lanes),
+    /// phase 1 executes the per-client scripts concurrently with work
+    /// stealing. Replies come back in (client, index) order.
+    pub fn run_workload(&self, workload: &Workload) -> anyhow::Result<ServeReport> {
+        // ---- phase 0: sequential admission at submission time
+        let mut admission = AdmissionController::new(
+            self.cfg.slo_secs,
+            self.cfg.hard_limit_secs,
+            self.cfg.min_budget_secs,
+            self.cfg.admission_lanes.max(1),
+        );
+        let mut planner = self.client_session(None)?;
+        let mut directives: Vec<Vec<Directive>> = workload
+            .clients
+            .iter()
+            .map(|c| vec![Directive::Run { budget: None }; c.queries.len()])
+            .collect();
+        let rounds = workload.clients.iter().map(|c| c.queries.len()).max();
+        for qi in 0..rounds.unwrap_or(0) {
+            for (ci, client) in workload.clients.iter().enumerate() {
+                let Some(sql) = client.queries.get(qi) else {
+                    continue;
+                };
+                // malformed / unplannable queries surface their error at
+                // execution time and never occupy an admission lane
+                let Ok(parsed) = crate::query::parse(sql) else {
+                    continue;
+                };
+                let Some(predicted) = planner
+                    .sql(sql)
+                    .ok()
+                    .and_then(|b| b.plan().ok())
+                    .map(|p| p.predicted_secs())
+                else {
+                    continue;
+                };
+                match admission.admit(predicted, parsed.budget.latency_secs) {
+                    AdmissionDecision::Admit => {}
+                    AdmissionDecision::Degrade { budget_secs } => {
+                        directives[ci][qi] = Directive::Run {
+                            budget: Some(budget_secs),
+                        };
+                    }
+                    AdmissionDecision::Reject {
+                        predicted_wait_secs,
+                    } => {
+                        directives[ci][qi] = Directive::Reject {
+                            predicted_wait_secs,
+                        };
+                    }
+                }
+            }
+        }
+
+        // ---- phase 1: concurrent execution, one isolated session per
+        // client, shared sketch cache, work-stealing over clients
+        let sketch_before = self.sketches.stats();
+        let exec = ParallelExecutor::new(self.cfg.serve_threads);
+        let started = std::time::Instant::now();
+        let per_client = exec.map_dynamic(workload.clients.len(), |ci| {
+            self.run_client(ci, &workload.clients[ci], &directives[ci])
+        });
+        let wall_secs = started.elapsed().as_secs_f64();
+
+        let mut responses = Vec::with_capacity(workload.total_queries());
+        let mut ledger = ShuffleLedger::default();
+        let (mut result_hits, mut result_lookups) = (0u64, 0u64);
+        for (ci, run) in per_client.into_iter().enumerate() {
+            let run = run?;
+            ledger.merge(run.ledger.tagged(&format!("client{ci}")));
+            result_hits += run.result_hits;
+            result_lookups += run.result_lookups;
+            responses.extend(run.responses);
+        }
+        let executed = responses.iter().filter(|r| r.outcome.is_ok()).count();
+        Ok(ServeReport {
+            responses,
+            wall_secs,
+            executed,
+            admission: admission.stats(),
+            sketch: self.sketches.stats().since(&sketch_before),
+            result_hits,
+            result_lookups,
+            ledger,
+            serve_threads: self.cfg.serve_threads,
+        })
+    }
+
+    fn run_client(
+        &self,
+        ci: usize,
+        script: &ClientScript,
+        directives: &[Directive],
+    ) -> anyhow::Result<ClientRun> {
+        let mut session = self.client_session(Some(&script.name))?;
+        let mut results =
+            ResultCache::new(self.cfg.result_widening, self.cfg.result_max_age);
+        let mut ledger = ShuffleLedger::default();
+        let mut responses = Vec::with_capacity(script.queries.len());
+        for (qi, sql) in script.queries.iter().enumerate() {
+            let (degraded_to, outcome) = match &directives[qi] {
+                Directive::Reject {
+                    predicted_wait_secs,
+                } => (
+                    None,
+                    Err(JoinError::Overloaded {
+                        predicted_wait_secs: *predicted_wait_secs,
+                        hard_limit_secs: self.cfg.hard_limit_secs,
+                    }),
+                ),
+                Directive::Run { budget } => (
+                    *budget,
+                    self.run_one(&mut session, &mut results, &mut ledger, sql, *budget),
+                ),
+            };
+            responses.push(QueryResponse {
+                client: ci,
+                index: qi,
+                sql: sql.clone(),
+                degraded_to,
+                outcome,
+            });
+        }
+        Ok(ClientRun {
+            responses,
+            ledger,
+            result_hits: results.hits(),
+            result_lookups: results.lookups(),
+        })
+    }
+
+    fn run_one(
+        &self,
+        session: &mut Session,
+        results: &mut ResultCache,
+        ledger: &mut ShuffleLedger,
+        sql: &str,
+        budget: Option<f64>,
+    ) -> Result<ServedOutcome, JoinError> {
+        results.tick();
+        let mut query =
+            crate::query::parse(sql).map_err(|e| JoinError::Runtime(format!("{e:#}")))?;
+        if let Some(b) = budget {
+            // degrade = shrink the sampling budget (§3.2 dial): cap an
+            // existing WITHIN, or impose one on unbudgeted/ERROR queries
+            query.budget.latency_secs = Some(match query.budget.latency_secs {
+                Some(l) => l.min(b),
+                None => b,
+            });
+        }
+        let key = self.result_key(&query);
+        if let Some(hit) = results.lookup(&key) {
+            return Ok(ServedOutcome {
+                result: hit.result,
+                strategy: hit.strategy,
+                mode: hit.mode,
+                from_result_cache: true,
+                staleness_age: hit.age,
+                explain: None,
+                ledger_bytes: 0,
+            });
+        }
+        let out = session.query(query).run().map_err(|e| {
+            match e.downcast::<JoinError>() {
+                Ok(je) => je,
+                Err(e) => JoinError::Runtime(format!("{e:#}")),
+            }
+        })?;
+        ledger.merge(out.ledger.clone());
+        results.insert(key, out.result, &out.strategy, out.mode);
+        Ok(ServedOutcome {
+            result: out.result,
+            strategy: out.strategy,
+            mode: out.mode,
+            from_result_cache: false,
+            staleness_age: 0,
+            explain: out.plan.map(|p| p.explain()),
+            ledger_bytes: out.ledger.total_bytes(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::{generate_overlapping, SyntheticSpec};
+
+    fn server() -> Server {
+        let inputs = generate_overlapping(&SyntheticSpec {
+            items_per_input: 2_000,
+            overlap_fraction: 0.2,
+            lambda: 10.0,
+            partitions: 4,
+            seed: 11,
+            ..Default::default()
+        });
+        let cfg = ServeConfig {
+            engine: EngineConfig {
+                workers: 4,
+                time_model: TimeModel {
+                    bandwidth: 1e6,
+                    stage_latency: 0.0,
+                    compute_scale: 1.0,
+                },
+                ..Default::default()
+            },
+            serve_threads: 2,
+            // generous SLO: the steady-state tests exercise caching, not
+            // degradation (the burst test tightens these)
+            slo_secs: 1e6,
+            hard_limit_secs: 1e7,
+            ..Default::default()
+        };
+        Server::new(cfg)
+            .with_data("a", inputs[0].clone())
+            .with_data("b", inputs[1].clone())
+    }
+
+    #[test]
+    fn scripted_workload_serves_and_hits_both_caches() {
+        let s = server();
+        let w = Workload::scripted(4, 3);
+        let report = s.run_workload(&w).unwrap();
+        assert_eq!(report.responses.len(), 12);
+        assert_eq!(report.executed, 12, "{}", report.render());
+        // q1 repeats q0 per client: four result-cache hits
+        assert!(report.result_hits >= 4, "{}", report.render());
+        // clients share sketches: at least one cross-client hit
+        assert!(
+            report.sketch.cogroup_hits + report.sketch.filter_hits >= 1,
+            "{}",
+            report.render()
+        );
+        assert!(report.qps() > 0.0);
+        // a served (non-cached) execution carries an explain text
+        let explained = report
+            .responses
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok())
+            .filter_map(|o| o.explain.as_deref())
+            .collect::<Vec<_>>();
+        assert!(!explained.is_empty());
+    }
+
+    #[test]
+    fn concurrent_signature_matches_sequential() {
+        let w = Workload::scripted(4, 3);
+        let seq = {
+            let mut s = server();
+            s.cfg.serve_threads = 1;
+            s.run_workload(&w).unwrap()
+        };
+        let par = {
+            let mut s = server();
+            s.cfg.serve_threads = 4;
+            s.run_workload(&w).unwrap()
+        };
+        assert_eq!(seq.signature(), par.signature());
+    }
+
+    #[test]
+    fn rejected_queries_are_typed_overloaded() {
+        let mut s = server();
+        s.cfg.slo_secs = 1e-7;
+        s.cfg.hard_limit_secs = 2e-7;
+        s.cfg.min_budget_secs = 1e-7;
+        s.cfg.serve_threads = 1;
+        let w = Workload::burst(4, 4);
+        let report = s.run_workload(&w).unwrap();
+        assert!(report.admission.rejected > 0, "{}", report.render());
+        assert!(report.admission.degraded > 0, "{}", report.render());
+        let overloaded = report
+            .responses
+            .iter()
+            .filter(|r| {
+                matches!(r.outcome, Err(JoinError::Overloaded { .. }))
+            })
+            .count();
+        assert_eq!(overloaded as u64, report.admission.rejected);
+    }
+}

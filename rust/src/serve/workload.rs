@@ -1,0 +1,120 @@
+//! Scripted multi-client workloads for the serving layer.
+//!
+//! A [`Workload`] is a deterministic set of per-client SQL scripts — no
+//! randomness, no timestamps — so a concurrent run and a sequential
+//! replay see byte-identical query streams (the bit-identity tests and
+//! `benches/fig_serving.rs` depend on that). The built-in generators
+//! assume two datasets registered as `a` and `b` (schema `key`/`value`
+//! when wrapped relationally, which is what
+//! [`crate::relation::Relation::from_dataset`] produces).
+
+/// One client's query script, executed in order by its session.
+#[derive(Clone, Debug)]
+pub struct ClientScript {
+    pub name: String,
+    pub queries: Vec<String>,
+}
+
+/// A fixed multi-client workload.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub clients: Vec<ClientScript>,
+}
+
+impl Workload {
+    pub fn total_queries(&self) -> usize {
+        self.clients.iter().map(|c| c.queries.len()).sum()
+    }
+
+    /// The steady-state serving mix: ERROR-budget queries (whose answers
+    /// are independent of wall-clock timing, so cache hits can never
+    /// change them). Per client, the script cycles through
+    ///
+    /// 1. a base aggregate — the first client to run it warms the shared
+    ///    sketch cache, everyone else gets a cogroup hit;
+    /// 2. the same query again — a per-client *result*-cache hit;
+    /// 3. a variant: even clients push a predicate (different sketch-cache
+    ///    key, exercising the relational path), odd clients tighten the
+    ///    error budget (same sketch key — a guaranteed sketch hit — but a
+    ///    different result key, so it executes).
+    pub fn scripted(clients: usize, per_client: usize) -> Self {
+        const BASE: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                            WHERE a.key = b.key ERROR 0.2 CONFIDENCE 95%";
+        const PRED: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                            WHERE a.key = b.key AND a.value > 0.25 \
+                            ERROR 0.2 CONFIDENCE 95%";
+        const TIGHT: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                             WHERE a.key = b.key ERROR 0.1 CONFIDENCE 95%";
+        let clients = (0..clients)
+            .map(|c| ClientScript {
+                name: format!("client{c}"),
+                queries: (0..per_client)
+                    .map(|i| match i % 3 {
+                        0 | 1 => BASE.to_string(),
+                        _ if c % 2 == 0 => PRED.to_string(),
+                        _ => TIGHT.to_string(),
+                    })
+                    .collect(),
+            })
+            .collect();
+        Self { clients }
+    }
+
+    /// An over-SLO burst: every query declares the same tight `WITHIN`
+    /// budget, so a small SLO forces the admission controller through its
+    /// whole ladder — admit, then degrade (shrinking budgets), then
+    /// reject. WITHIN answers depend on measured wall time, so this
+    /// workload is for admission/SLO behavior, not bit-identity checks.
+    pub fn burst(clients: usize, per_client: usize) -> Self {
+        const Q: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                         WHERE a.key = b.key WITHIN 0.05 SECONDS";
+        let clients = (0..clients)
+            .map(|c| ClientScript {
+                name: format!("client{c}"),
+                queries: vec![Q.to_string(); per_client],
+            })
+            .collect();
+        Self { clients }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_shape_and_determinism() {
+        let w = Workload::scripted(4, 5);
+        assert_eq!(w.clients.len(), 4);
+        assert_eq!(w.total_queries(), 20);
+        // deterministic: two builds are identical
+        let w2 = Workload::scripted(4, 5);
+        for (a, b) in w.clients.iter().zip(&w2.clients) {
+            assert_eq!(a.queries, b.queries);
+        }
+        // q0 == q1 (result-cache repeat); q2 differs by client parity
+        let c0 = &w.clients[0].queries;
+        assert_eq!(c0[0], c0[1]);
+        assert!(c0[2].contains("a.value > 0.25"), "{}", c0[2]);
+        let c1 = &w.clients[1].queries;
+        assert!(c1[2].contains("ERROR 0.1"), "{}", c1[2]);
+        // every query parses
+        for c in &w.clients {
+            for q in &c.queries {
+                crate::query::parse(q).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn burst_is_uniform_within_queries() {
+        let w = Workload::burst(3, 2);
+        assert_eq!(w.total_queries(), 6);
+        for c in &w.clients {
+            for q in &c.queries {
+                let parsed = crate::query::parse(q).unwrap();
+                assert!(parsed.budget.latency_secs.is_some());
+            }
+        }
+    }
+}

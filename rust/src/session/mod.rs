@@ -34,7 +34,9 @@ pub mod streaming;
 pub use streaming::StreamingSession;
 
 use crate::cluster::SimCluster;
-use crate::coordinator::{estimate_result, ApproxJoinEngine, EngineConfig, ExecutionMode, QueryOutcome};
+use crate::coordinator::{
+    estimate_result, ApproxJoinEngine, EngineConfig, ExecutionMode, QueryOutcome,
+};
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::join::approx::{ApproxConfig, SamplingParams};
@@ -135,6 +137,7 @@ impl Session {
         }
         dataset.name = name.to_string();
         self.datasets.insert(name.to_string(), dataset);
+        self.invalidate_sketches(name);
         self
     }
 
@@ -235,6 +238,7 @@ impl Session {
         let partitions = self.engine.cfg.workers.max(1) * 2;
         let relation = Relation::new(name, schema, rows, partitions)?;
         self.tables.insert(name.to_string(), relation);
+        self.invalidate_sketches(name);
         Ok(self)
     }
 
@@ -250,6 +254,33 @@ impl Session {
         }
         relation.name = name.to_string();
         self.tables.insert(name.to_string(), relation);
+        self.invalidate_sketches(name);
+        self
+    }
+
+    /// Bump the attached sketch cache's epoch for `name` — every (re-)
+    /// registration path funnels through here so a cache can never serve a
+    /// sketch built over a table's previous contents.
+    fn invalidate_sketches(&self, name: &str) {
+        if let Some(cache) = &self.engine.sketches {
+            cache.invalidate(name);
+        }
+    }
+
+    /// Attach a shared [`crate::serve::SketchCache`]: budgeted queries in
+    /// this session reuse (and contribute) stage-1 sketches. Attach the
+    /// cache *before* registering data so the registrations invalidate
+    /// against it.
+    pub fn with_sketch_cache(mut self, cache: std::sync::Arc<crate::serve::SketchCache>) -> Self {
+        self.engine = self.engine.with_sketches(cache);
+        self
+    }
+
+    /// Namespace this session's σ feedback under `scope` (see
+    /// [`crate::cost::FeedbackStore::with_scope`]) — concurrent serving
+    /// sessions use one scope per client so feedback never interleaves.
+    pub fn with_feedback_scope(mut self, scope: impl Into<String>) -> Self {
+        self.engine.feedback.set_scope(scope);
         self
     }
 

@@ -131,6 +131,21 @@ pub(crate) fn run_relational(
 ) -> anyhow::Result<QueryOutcome> {
     let (plan, lowered) = plan_relational(session, query, choice)?;
     let cfg = session.engine.cfg.clone();
+    let sketches = session.engine.sketches.clone();
+    // everything that shapes the lowered *keys* (and therefore the join
+    // filter): the join attribute, the pushed predicates, the GROUP BY
+    // composite strata — but not the per-aggregate value projection,
+    // which only the cogroup cache entry keys on
+    let predicate_tag = {
+        let mut t = format!("attr={}", query.join_attr);
+        for p in &query.predicates {
+            t.push_str(&format!(";{p}"));
+        }
+        if let Some(g) = &query.group_by {
+            t.push_str(&format!(";g={g}"));
+        }
+        t
+    };
     let confidence = query
         .budget
         .error
@@ -170,9 +185,23 @@ pub(crate) fn run_relational(
             let filter_cfg =
                 FilterConfig::for_inputs_kind(inputs, cfg.fp_rate, cfg.filter_kind);
             let mut prober = NativeProber;
-            let filtered = filter_and_shuffle(&mut cluster, inputs, filter_cfg, &mut prober)?;
+            let (filtered, cache_hit) = match &sketches {
+                Some(cache) => cache.filtered(
+                    &mut cluster,
+                    inputs,
+                    &query.tables,
+                    &predicate_tag,
+                    &query.aggregates[ai].render(),
+                    filter_cfg,
+                    &mut prober,
+                )?,
+                None => (
+                    filter_and_shuffle(&mut cluster, inputs, filter_cfg, &mut prober)?,
+                    crate::bloom::SketchCacheHit::None,
+                ),
+            };
             let d_dt = filtered.d_dt;
-            let filter_report = filtered.join_filter.report();
+            let filter_report = filtered.join_filter.report().with_cache_hit(cache_hit);
             let total_pairs: f64 = filtered.total_pairs();
             let mode = section32_mode(
                 &query.budget,

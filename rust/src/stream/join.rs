@@ -711,8 +711,10 @@ mod tests {
             estimator: EstimatorKind::Clt,
             seed: 5,
         };
-        let mut j =
-            StreamingApproxJoin::new(cfg(WindowSpec::sliding(2, 1), Some(sampling)), vec![100, 100]);
+        let mut j = StreamingApproxJoin::new(
+            cfg(WindowSpec::sliding(2, 1), Some(sampling)),
+            vec![100, 100],
+        );
         let b0 = batch(&[(8, 1.0), (8, 2.0)], &[(8, 10.0)]);
         let b1 = batch(&[(7, 3.0), (8, 4.0)], &[(7, 30.0), (8, 40.0)]);
         let b2 = batch(&[(9, 1.0)], &[(9, 2.0)]);

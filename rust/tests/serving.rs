@@ -1,0 +1,247 @@
+//! Serving-layer soundness: the query fingerprint (+ predicate/filter
+//! tags + table epochs) really is a sound sketch-cache key, result
+//! caching stays per-client, and the multi-tenant Server answers a
+//! concurrent workload bit-identically to a sequential replay.
+
+use approxjoin::bloom::FilterKind;
+use approxjoin::cluster::TimeModel;
+use approxjoin::coordinator::EngineConfig;
+use approxjoin::data::{generate_overlapping, Dataset, SyntheticSpec};
+use approxjoin::join::JoinError;
+use approxjoin::serve::{ServeConfig, Server, SketchCache, Workload};
+use approxjoin::session::Session;
+use std::sync::Arc;
+
+const BASE: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                    WHERE a.key = b.key ERROR 0.2 CONFIDENCE 95%";
+const PRED: &str = "SELECT SUM(a.value + b.value) FROM a, b \
+                    WHERE a.key = b.key AND a.value > 0.25 \
+                    ERROR 0.2 CONFIDENCE 95%";
+
+fn inputs() -> Vec<Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: 2_000,
+        overlap_fraction: 0.2,
+        lambda: 10.0,
+        partitions: 4,
+        seed: 23,
+        ..Default::default()
+    })
+}
+
+fn engine_cfg(kind: FilterKind) -> EngineConfig {
+    EngineConfig {
+        workers: 4,
+        parallelism: 1,
+        filter_kind: kind,
+        time_model: TimeModel {
+            bandwidth: 1e6,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+        ..Default::default()
+    }
+}
+
+/// A tenant session sharing `cache`, attached *after* registration —
+/// the Server's pattern: registration/invalidation is owned elsewhere,
+/// so spawning a tenant never prunes another tenant's warm sketches.
+fn tenant_session(cache: &Arc<SketchCache>, kind: FilterKind) -> Session {
+    let ds = inputs();
+    Session::without_runtime(engine_cfg(kind))
+        .unwrap()
+        .with_data("a", ds[0].clone())
+        .with_data("b", ds[1].clone())
+        .with_sketch_cache(cache.clone())
+}
+
+/// A standalone session that *owns* its registrations: the cache is
+/// attached before data, so every (re-)registration invalidates.
+fn owning_session(cache: &Arc<SketchCache>, kind: FilterKind) -> Session {
+    let ds = inputs();
+    Session::without_runtime(engine_cfg(kind))
+        .unwrap()
+        .with_sketch_cache(cache.clone())
+        .with_data("a", ds[0].clone())
+        .with_data("b", ds[1].clone())
+}
+
+#[test]
+fn equal_queries_hit_the_sketch_cache_across_tenants() {
+    // two tenants (fresh sessions, independent σ feedback) sharing one
+    // cache — the serving scenario. The second tenant's identical query
+    // replays the first's stage-1 artifacts bit-for-bit, so its answer
+    // equals what a cold rebuild would have produced.
+    let cache = Arc::new(SketchCache::new());
+    let mut warm = tenant_session(&cache, FilterKind::Standard);
+    let first = warm.sql(BASE).unwrap().run().unwrap();
+    assert_eq!(cache.stats().misses, 1);
+    assert_eq!(cache.stats().cogroup_hits, 0);
+
+    let mut tenant = tenant_session(&cache, FilterKind::Standard);
+    let second = tenant.sql(BASE).unwrap().run().unwrap();
+    assert_eq!(cache.stats().cogroup_hits, 1, "{:?}", cache.stats());
+    // the replayed stage 1 is bit-identical, so the answer is too
+    assert_eq!(
+        first.result.estimate.to_bits(),
+        second.result.estimate.to_bits()
+    );
+    assert_eq!(
+        first.result.error_bound.to_bits(),
+        second.result.error_bound.to_bits()
+    );
+    // and the hit is visible in the executed plan's explain output
+    let explain = second.plan.expect("executed plan").explain();
+    assert!(
+        explain.contains("[sketch cache: cogroup hit]"),
+        "{explain}"
+    );
+}
+
+#[test]
+fn changing_the_pushed_predicate_misses() {
+    let cache = Arc::new(SketchCache::new());
+    let mut s = tenant_session(&cache, FilterKind::Standard);
+    s.sql(BASE).unwrap().run().unwrap();
+    let before = cache.stats();
+    // same tables, same budget — but the pushed predicate changes the
+    // post-filter key population, so reusing the sketch would be unsound
+    s.sql(PRED).unwrap().run().unwrap();
+    let after = cache.stats();
+    assert!(after.misses > before.misses, "{after:?} vs {before:?}");
+    assert_eq!(after.cogroup_hits, before.cogroup_hits);
+    assert_eq!(after.filter_hits, before.filter_hits);
+}
+
+#[test]
+fn changing_the_filter_kind_misses() {
+    // two tenants sharing one cache but configured with different filter
+    // layouts must never swap sketches: bit layouts are incompatible
+    let cache = Arc::new(SketchCache::new());
+    let mut std_s = tenant_session(&cache, FilterKind::Standard);
+    let mut blk_s = tenant_session(&cache, FilterKind::Blocked);
+    std_s.sql(BASE).unwrap().run().unwrap();
+    blk_s.sql(BASE).unwrap().run().unwrap();
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 2, "{stats:?}");
+    assert_eq!(stats.cogroup_hits + stats.filter_hits, 0, "{stats:?}");
+}
+
+#[test]
+fn reregistering_a_table_invalidates_its_sketches() {
+    let cache = Arc::new(SketchCache::new());
+    let mut s = owning_session(&cache, FilterKind::Standard);
+    s.sql(BASE).unwrap().run().unwrap();
+    assert_eq!(cache.entry_counts().1, 1);
+    let epoch = cache.epoch_of("a");
+
+    // re-register `a` (same rows, new registration): the epoch bumps,
+    // cached entries over `a` are pruned, and the next run rebuilds
+    let ds = inputs();
+    s = s.with_data("a", ds[0].clone());
+    assert_eq!(cache.epoch_of("a"), epoch + 1);
+    assert_eq!(cache.entry_counts(), (0, 0));
+    let before = cache.stats();
+    s.sql(BASE).unwrap().run().unwrap();
+    let after = cache.stats();
+    assert_eq!(after.misses, before.misses + 1, "{after:?}");
+    assert_eq!(after.cogroup_hits, before.cogroup_hits);
+}
+
+fn serving_server(serve_threads: usize) -> Server {
+    let ds = inputs();
+    let cfg = ServeConfig {
+        engine: engine_cfg(FilterKind::Standard),
+        serve_threads,
+        // generous SLO: these tests exercise caching + determinism, not
+        // degradation (the burst test below tightens the knobs)
+        slo_secs: 1e6,
+        hard_limit_secs: 1e7,
+        ..Default::default()
+    };
+    Server::new(cfg)
+        .with_data("a", ds[0].clone())
+        .with_data("b", ds[1].clone())
+}
+
+#[test]
+fn sixteen_concurrent_clients_match_the_sequential_replay() {
+    let workload = Workload::scripted(16, 3);
+    assert!(workload.total_queries() >= 16 * 3);
+    let par = serving_server(8).run_workload(&workload).unwrap();
+    assert_eq!(par.executed, workload.total_queries(), "{}", par.render());
+    assert!(
+        par.sketch.cogroup_hits + par.sketch.filter_hits >= 1,
+        "{}",
+        par.render()
+    );
+    assert!(par.result_hits >= 16, "{}", par.render());
+    // a sketch-cache hit surfaces in at least one explain
+    assert!(par
+        .responses
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok())
+        .filter_map(|o| o.explain.as_deref())
+        .any(|e| e.contains("[sketch cache:")));
+
+    let seq = serving_server(1).run_workload(&workload).unwrap();
+    assert_eq!(par.signature(), seq.signature());
+}
+
+#[test]
+fn over_slo_burst_degrades_before_rejecting() {
+    let ds = inputs();
+    let cfg = ServeConfig {
+        engine: engine_cfg(FilterKind::Standard),
+        serve_threads: 2,
+        slo_secs: 1e-7,
+        hard_limit_secs: 2e-7,
+        min_budget_secs: 1e-7,
+        ..Default::default()
+    };
+    let server = Server::new(cfg)
+        .with_data("a", ds[0].clone())
+        .with_data("b", ds[1].clone());
+    let report = server.run_workload(&Workload::burst(6, 4)).unwrap();
+    assert!(report.admission.degraded > 0, "{}", report.render());
+    assert!(report.admission.rejected > 0, "{}", report.render());
+
+    // replay the round-robin arrival order the controller saw: the first
+    // rejection must come after at least one degradation (the ladder
+    // shrinks budgets before it sheds load)
+    let mut arrivals = Vec::new();
+    for qi in 0..4 {
+        for ci in 0..6 {
+            let r = report
+                .responses
+                .iter()
+                .find(|r| r.client == ci && r.index == qi)
+                .unwrap();
+            arrivals.push(r);
+        }
+    }
+    let first_reject = arrivals
+        .iter()
+        .position(|r| matches!(r.outcome, Err(JoinError::Overloaded { .. })))
+        .expect("burst must reject");
+    let first_degrade = arrivals
+        .iter()
+        .position(|r| r.degraded_to.is_some())
+        .expect("burst must degrade");
+    assert!(
+        first_degrade < first_reject,
+        "degradation (arrival {first_degrade}) must precede rejection \
+         (arrival {first_reject})"
+    );
+
+    // rejections are the typed overload error, carrying the hard limit
+    for r in &report.responses {
+        if let Err(JoinError::Overloaded {
+            predicted_wait_secs,
+            hard_limit_secs,
+        }) = &r.outcome
+        {
+            assert!(*predicted_wait_secs > *hard_limit_secs);
+        }
+    }
+}
