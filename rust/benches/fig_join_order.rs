@@ -1,0 +1,225 @@
+//! §Perf + CI gate: join-order optimization on TPC-H-style chains.
+//!
+//! Two star-schema-flavoured chain joins (3-way lineitem ⋈ orders ⋈
+//! customer, 4-way … ⋈ nation) are written with an adversarially bad
+//! FROM order — the two largest relations first. The bench:
+//!
+//! 1. asserts the optimized order never shuffles more *measured* bytes
+//!    than the naive FROM order (strictly fewer on the 4-way case — this
+//!    is the PR's acceptance criterion, enforced by the `cost-accuracy`
+//!    CI job);
+//! 2. runs the optimized query twice in one session and asserts that
+//!    after the feedback warm-up every step's predicted cardinality is
+//!    within a bounded factor of the measured one;
+//! 3. re-asserts the determinism contract: the chosen order and the
+//!    estimate are identical at 1 and 8 threads.
+//!
+//! Env knobs (the CI cost-accuracy job sets both):
+//!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
+//!   BENCH_JSON=path            merge a machine-readable section into the
+//!                              given JSON report (BENCH_PR7.json)
+
+use approxjoin::coordinator::{EngineConfig, QueryOutcome};
+use approxjoin::data::{Dataset, Record};
+use approxjoin::row;
+use approxjoin::session::{Session, StrategyChoice};
+use approxjoin::util::{fmt, Json, Rng, Table};
+
+fn quick() -> bool {
+    std::env::var("APPROXJOIN_BENCH_QUICK").is_ok()
+}
+
+/// TPC-H-flavoured chain tables over a shared key domain `1..=keys`:
+/// lineitem is widest and most multiplied, nation is tiny. Per-key
+/// multiplicities are mildly skewed so the cold containment default is
+/// not already exact and the warm-up has something to learn.
+fn tables(keys: u64, seed: u64) -> Vec<(&'static str, Dataset)> {
+    let mut r = Rng::new(seed);
+    let mut mk = |name: &'static str,
+                  key_limit: u64,
+                  base_mult: u64,
+                  extra: u64,
+                  bytes: u64,
+                  value: f64| {
+        let mut recs = Vec::new();
+        for k in 1..=key_limit {
+            for _ in 0..(base_mult + r.index(extra as usize + 1) as u64) {
+                recs.push(Record::new(k, value));
+            }
+        }
+        (name, Dataset::from_records(name, recs, 16, bytes))
+    };
+    vec![
+        mk("lineitem", keys, 4, 4, 96, 1.0),
+        mk("orders", keys, 2, 2, 32, 2.0),
+        mk("customer", keys / 2, 1, 1, 24, 3.0),
+        mk("nation", (keys / 20).max(1), 1, 0, 16, 4.0),
+    ]
+}
+
+fn session(data: &[(&'static str, Dataset)], reorder: bool, threads: usize) -> Session {
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 8,
+        parallelism: threads,
+        reorder_joins: reorder,
+        ..Default::default()
+    })
+    .unwrap();
+    for (name, d) in data {
+        s = s.with_data(name, d.clone());
+    }
+    s
+}
+
+fn run(s: &mut Session, sql: &str) -> QueryOutcome {
+    s.sql(sql)
+        .unwrap()
+        .strategy(StrategyChoice::named("native"))
+        .run()
+        .unwrap()
+}
+
+const SQL_3WAY: &str = "SELECT SUM(lineitem.v + orders.v + customer.v) \
+     FROM lineitem, orders, customer \
+     WHERE lineitem.k = orders.k AND orders.k = customer.k";
+
+const SQL_4WAY: &str = "SELECT SUM(lineitem.v + orders.v + customer.v + nation.v) \
+     FROM lineitem, orders, customer, nation \
+     WHERE lineitem.k = orders.k AND orders.k = customer.k \
+       AND customer.k = nation.k";
+
+/// Largest predicted/measured (or inverse) cardinality ratio over the
+/// join steps of an executed order report.
+fn max_step_factor(out: &QueryOutcome) -> f64 {
+    let report = out.join_order.as_ref().expect("optimizer ran");
+    let mut worst: f64 = 1.0;
+    for s in &report.steps[1..] {
+        let measured = s.measured_rows.expect("measured after execution");
+        if measured <= 0.0 || s.predicted_rows <= 0.0 {
+            continue;
+        }
+        let f = (s.predicted_rows / measured).max(measured / s.predicted_rows);
+        worst = worst.max(f);
+    }
+    worst
+}
+
+fn main() {
+    let quick = quick();
+    println!(
+        "== fig_join_order: DP/greedy join ordering vs naive FROM order{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let keys = if quick { 400 } else { 4_000 };
+    let data = tables(keys, 11);
+
+    let mut t = Table::new(&["case", "naive bytes", "optimized bytes", "order"]);
+    let mut json = Vec::new();
+    let mut factors = Vec::new();
+
+    for (case, sql) in [("3way", SQL_3WAY), ("4way", SQL_4WAY)] {
+        let threads = approxjoin::runtime::default_parallelism();
+        let naive = run(&mut session(&data, false, threads), sql);
+        let mut opt_session = session(&data, true, threads);
+        let first = run(&mut opt_session, sql);
+        // warm-up: the first run calibrated the feedback store; the
+        // second plans from learned selectivities
+        let warm = run(&mut opt_session, sql);
+        let report = warm.join_order.as_ref().expect("optimizer ran");
+
+        // results must agree exactly (integer values, exact joins)
+        assert_eq!(
+            naive.result.estimate.to_bits(),
+            warm.result.estimate.to_bits(),
+            "{case}: reordering changed the answer"
+        );
+
+        // gate 1: never more measured shuffle than the FROM order
+        let (nb, ob) = (naive.ledger.total_bytes(), warm.ledger.total_bytes());
+        assert!(
+            ob <= nb,
+            "{case}: optimized order shuffled {ob} bytes > naive {nb}"
+        );
+        if case == "4way" {
+            assert!(report.reordered, "4-way large×large-first must reorder");
+            assert!(
+                ob < nb,
+                "4way: optimized shuffle must be strictly lower ({ob} vs {nb})"
+            );
+        }
+
+        // gate 2: after warm-up, predicted within a bounded factor of
+        // measured on every join step
+        assert!(
+            report.steps[1..].iter().any(|s| s.calibrated),
+            "{case}: warm plan must use learned selectivities"
+        );
+        let factor = max_step_factor(&warm);
+        assert!(
+            factor < 4.0,
+            "{case}: predicted cardinality off by {factor:.2}x after warm-up"
+        );
+        factors.push(factor);
+
+        // gate 3: determinism — same order and bit-identical estimate at
+        // 1 and 8 threads (fresh sessions, cold feedback on both sides)
+        let one = run(&mut session(&data, true, 1), sql);
+        let eight = run(&mut session(&data, true, 8), sql);
+        assert_eq!(
+            one.join_order.as_ref().unwrap().tables,
+            eight.join_order.as_ref().unwrap().tables,
+            "{case}: chosen order depends on thread count"
+        );
+        assert_eq!(one.result.estimate.to_bits(), eight.result.estimate.to_bits());
+
+        t.row(row![
+            case,
+            fmt::bytes(nb),
+            fmt::bytes(ob),
+            report.render_inline()
+        ]);
+        json.push((case, nb, ob, factor));
+        println!("{case}: predicted-vs-measured step factor {factor:.3}");
+        for line in report.render() {
+            println!("  {line}");
+        }
+        println!();
+    }
+    t.print();
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        let mut fields = Vec::new();
+        for (case, nb, ob, factor) in &json {
+            fields.push((
+                match *case {
+                    "3way" => "naive_bytes_3way",
+                    _ => "naive_bytes_4way",
+                },
+                Json::num(*nb as f64),
+            ));
+            fields.push((
+                match *case {
+                    "3way" => "optimized_bytes_3way",
+                    _ => "optimized_bytes_4way",
+                },
+                Json::num(*ob as f64),
+            ));
+            fields.push((
+                match *case {
+                    "3way" => "card_factor_3way",
+                    _ => "card_factor_4way",
+                },
+                Json::num(*factor),
+            ));
+        }
+        fields.push((
+            "max_card_factor",
+            Json::num(factors.iter().cloned().fold(1.0, f64::max)),
+        ));
+        fields.push(("quick_mode", Json::Bool(quick)));
+        Json::update_file(&path, "fig_join_order", Json::obj(fields))
+            .expect("write BENCH_JSON");
+        println!("wrote fig_join_order section to {}", path.display());
+    }
+}

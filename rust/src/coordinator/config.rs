@@ -39,6 +39,12 @@ pub struct EngineConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Per-worker memory budget for native-join intermediates.
     pub memory_budget: u64,
+    /// Reorder multi-way (3+ relation) joins with the DP/greedy join-order
+    /// optimizer (`join::order`) before execution. On by default; planning
+    /// is a pure function of (query, stats, feedback snapshot), so results
+    /// stay bit-identical at any thread count. Only commutative combine
+    /// ops (`Sum`, `Product`) are ever reordered.
+    pub reorder_joins: bool,
     /// Overlap fraction above which filtering alone cannot help and the
     /// engine refuses an exact plan under a latency budget (§3.1.1 check).
     pub seed: u64,
@@ -56,6 +62,7 @@ impl Default for EngineConfig {
             estimator: EstimatorKind::Clt,
             artifacts_dir: default_artifacts_dir(),
             memory_budget: crate::join::native::DEFAULT_MEMORY_BUDGET,
+            reorder_joins: true,
             seed: 42,
         }
     }

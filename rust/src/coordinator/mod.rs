@@ -64,6 +64,11 @@ pub struct QueryOutcome {
     /// The join filter the run built (kind, geometry, measured-fill fp
     /// rate); `None` when the executed strategy does not filter.
     pub filter_report: Option<crate::bloom::FilterReport>,
+    /// The join-order optimizer's decision for this run (chosen order,
+    /// DP vs greedy, per-step predicted vs *measured* cardinality);
+    /// `None` when ordering was skipped — two-way join, disabled by
+    /// `EngineConfig::reorder_joins`, or a non-commutative combine op.
+    pub join_order: Option<crate::join::JoinOrderReport>,
 }
 
 /// The ApproxJoin coordinator engine.
@@ -197,6 +202,41 @@ impl ApproxJoinEngine {
                 inputs.len()
             );
         }
+
+        // ---- stage 0: join-order optimization. The engine owns ordering
+        // on this path (the session front end passes inputs in FROM order
+        // and copies the report out of the outcome). Planning reads only
+        // (query, per-table stats, feedback snapshot), so it is
+        // deterministic and thread-count independent; query.tables is
+        // never permuted — fingerprints must stay byte-stable.
+        let commutative = matches!(
+            query.combine,
+            crate::join::CombineOp::Sum | crate::join::CombineOp::Product
+        );
+        let order_ctx = crate::join::order::OrderContext {
+            feedback: Some(&self.feedback),
+            predicate_tag: String::new(),
+            beta_compute: self.cost.beta_compute,
+            workers: self.cfg.workers,
+            bandwidth: self.cfg.time_model.bandwidth,
+            enabled: self.cfg.reorder_joins,
+        };
+        let table_stats = crate::join::TableStats::collect(inputs, &query.tables);
+        let mut join_order = crate::join::order::plan_query_order(
+            &query.tables,
+            &query.join_clauses,
+            commutative,
+            &table_stats,
+            &order_ctx,
+        );
+        let (exec_inputs, exec_tables): (Vec<Dataset>, Vec<String>) = match &join_order {
+            Some(r) if r.reordered => {
+                (crate::join::order::permute(inputs, &r.order), r.tables.clone())
+            }
+            _ => (inputs.to_vec(), query.tables.clone()),
+        };
+        let inputs: &[Dataset] = &exec_inputs;
+
         let mut cluster = self.cluster();
         let filter_cfg = self.filter_config(inputs);
         let sketches = self.sketches.clone();
@@ -214,7 +254,7 @@ impl ApproxJoinEngine {
                 // the scalar path's cogroup depends only on the inputs and
                 // the filter geometry, so predicate/projection tags are
                 // empty and every scalar query over the same tables shares
-                cache.filtered(&mut cluster, inputs, &query.tables, "", "", filter_cfg, prober)?
+                cache.filtered(&mut cluster, inputs, &exec_tables, "", "", filter_cfg, prober)?
             }
             None => (
                 filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?,
@@ -281,6 +321,24 @@ impl ApproxJoinEngine {
 
         let metrics = cluster.take_metrics();
         let ledger = cluster.take_ledger();
+
+        // close the calibration loop: per-step measured cardinalities into
+        // the report, exact pair selectivities + the measured/predicted
+        // byte ratio into the feedback store for the next plan
+        if let Some(r) = join_order.as_mut() {
+            r.set_measured(&crate::join::order::measure_step_cardinalities(
+                &exec_inputs,
+            ));
+            crate::join::order::calibrate(
+                &mut self.feedback,
+                "",
+                &exec_tables,
+                &exec_inputs,
+                r.cost.shuffle_bytes,
+                ledger.total_bytes() as f64,
+            );
+        }
+
         Ok(QueryOutcome {
             sim_secs: metrics.total_sim_secs(),
             result,
@@ -298,6 +356,7 @@ impl ApproxJoinEngine {
             plan: None,
             grouped: None,
             filter_report: Some(filter_report),
+            join_order,
         })
     }
 

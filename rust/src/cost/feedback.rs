@@ -85,6 +85,26 @@ impl FeedbackStore {
         }
     }
 
+    /// Record one scalar calibration value under `fingerprint`/`slot` —
+    /// the join-order optimizer stores learned pair selectivities
+    /// (`joinsel:…`) and measured/predicted shuffle-byte ratios
+    /// (`joinbytes:…`) this way, riding the same scoping and JSON
+    /// persistence as the σ feedback.
+    pub fn record_value(&mut self, fingerprint: &str, slot: u64, value: f64) {
+        self.runs
+            .entry(self.key(fingerprint))
+            .or_default()
+            .insert(slot, value);
+    }
+
+    /// Read back a scalar recorded with [`FeedbackStore::record_value`].
+    pub fn value(&self, fingerprint: &str, slot: u64) -> Option<f64> {
+        self.runs
+            .get(&self.key(fingerprint))
+            .and_then(|m| m.get(&slot))
+            .copied()
+    }
+
     /// Stored σ map for a query (empty on first execution).
     pub fn sigmas(&self, fingerprint: &str) -> HashMap<u64, f64> {
         self.runs.get(&self.key(fingerprint)).cloned().unwrap_or_default()
@@ -175,6 +195,23 @@ mod tests {
         let d = s.default_sigma("q");
         assert!((d - 3.0).abs() < 1e-9, "median {d}");
         assert_eq!(FeedbackStore::in_memory().default_sigma("nope"), 1.0);
+    }
+
+    #[test]
+    fn scalar_values_roundtrip_and_respect_scope() {
+        let mut s = FeedbackStore::in_memory();
+        assert_eq!(s.value("joinsel:a|b:", 0), None);
+        s.record_value("joinsel:a|b:", 0, 0.25);
+        assert_eq!(s.value("joinsel:a|b:", 0), Some(0.25));
+        s.record_value("joinsel:a|b:", 0, 0.5); // latest wins
+        assert_eq!(s.value("joinsel:a|b:", 0), Some(0.5));
+
+        let mut scoped = s.clone();
+        scoped.set_scope("client0");
+        assert_eq!(scoped.value("joinsel:a|b:", 0), None);
+        scoped.record_value("joinsel:a|b:", 0, 0.75);
+        assert_eq!(scoped.value("joinsel:a|b:", 0), Some(0.75));
+        assert_eq!(s.value("joinsel:a|b:", 0), Some(0.5));
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Join graph over the FROM-clause relations.
+//!
+//! The parser collects the AND-ed equi-join chains (`a.k = b.k = c.k AND
+//! c.k = d.k`) as `Vec<Vec<String>>`. This module is the **single source
+//! of truth** for chain connectivity — the parser's legality check and the
+//! join-order optimizer's adjacency structure both call into it, so the
+//! two can never disagree about which multi-way queries are well-formed
+//! (previously the fixpoint absorption lived inline in `query/parser.rs`
+//! and any second consumer would have had to duplicate it).
+//!
+//! Two views:
+//!
+//! * [`connected_component`] — fixpoint absorption of chains into one
+//!   connected table set; `Err` carries the first stray chain exactly as
+//!   the parser reports it. Case-insensitive, clause-order independent.
+//! * [`JoinGraph`] — adjacency over FROM *positions* (not names), so
+//!   self-joins via duplicate FROM entries (`FROM a, a`) get distinct
+//!   vertices that the optimizer can still permute.
+
+/// Absorb equi-join chains into one connected component of table names.
+///
+/// Returns the distinct tables covered (first-appearance order,
+/// case-insensitive dedup). `Err(msg)` reproduces the parser's exact
+/// disconnected-chains message for the first chain that shares no table
+/// with the component built so far — the result is clause-order
+/// independent because absorption runs to a fixpoint before failing.
+/// Empty input yields an empty component (no chains, nothing to check).
+pub fn connected_component(chains: &[Vec<String>]) -> Result<Vec<String>, String> {
+    let mut component: Vec<String> = Vec::new();
+    let mut remaining: Vec<&Vec<String>> = chains.iter().collect();
+    if !remaining.is_empty() {
+        for t in remaining.remove(0) {
+            if !component.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+                component.push(t.clone());
+            }
+        }
+    }
+    loop {
+        let before = remaining.len();
+        remaining.retain(|chain| {
+            let connected = chain
+                .iter()
+                .any(|t| component.iter().any(|x| x.eq_ignore_ascii_case(t)));
+            if connected {
+                for t in chain.iter() {
+                    if !component.iter().any(|x| x.eq_ignore_ascii_case(t)) {
+                        component.push(t.clone());
+                    }
+                }
+            }
+            !connected
+        });
+        if remaining.is_empty() || remaining.len() == before {
+            break;
+        }
+    }
+    if let Some(stray) = remaining.first() {
+        return Err(format!(
+            "join chains are disconnected: {} does not share a table with \
+             the other chain(s)",
+            stray.join(" = ")
+        ));
+    }
+    Ok(component)
+}
+
+/// Adjacency over the FROM-clause positions of a multi-way equi-join.
+///
+/// Vertices are FROM positions (0-based), so `FROM a, a` yields two
+/// vertices both named `a`. An edge `(i, j)` means a join clause links the
+/// two relations directly; the order optimizer only extends a prefix
+/// through edges, keeping enumeration cross-product free.
+#[derive(Clone, Debug)]
+pub struct JoinGraph {
+    tables: Vec<String>,
+    edges: Vec<(usize, usize)>,
+}
+
+impl JoinGraph {
+    /// Build the graph from the FROM list and the parsed join chains.
+    ///
+    /// Each chain `[t0, t1, t2]` contributes edges between consecutive
+    /// members (resolved to their *first* FROM position). Duplicate FROM
+    /// entries of the same name (self-joins) are additionally chained
+    /// together position-by-position, since `a.k = a.k` necessarily links
+    /// every copy of `a`. With no chains at all (programmatic legacy
+    /// queries), the FROM order is treated as a linear chain — exactly
+    /// what the engine executes.
+    pub fn build(tables: &[String], clauses: &[Vec<String>]) -> Self {
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        let mut add = |a: usize, b: usize, edges: &mut Vec<(usize, usize)>| {
+            if a == b {
+                return;
+            }
+            let e = (a.min(b), a.max(b));
+            if !edges.contains(&e) {
+                edges.push(e);
+            }
+        };
+        let pos_of = |name: &str| {
+            tables
+                .iter()
+                .position(|t| t.eq_ignore_ascii_case(name))
+                .unwrap_or(0)
+        };
+        if clauses.is_empty() {
+            for i in 1..tables.len() {
+                add(i - 1, i, &mut edges);
+            }
+        } else {
+            for chain in clauses {
+                for w in chain.windows(2) {
+                    add(pos_of(&w[0]), pos_of(&w[1]), &mut edges);
+                }
+            }
+        }
+        // duplicate FROM entries (self-joins) share the join attribute by
+        // construction: chain each repeated name's positions together
+        for i in 0..tables.len() {
+            for j in (i + 1)..tables.len() {
+                if tables[i].eq_ignore_ascii_case(&tables[j]) {
+                    add(i, j, &mut edges);
+                }
+            }
+        }
+        Self {
+            tables: tables.to_vec(),
+            edges,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn tables(&self) -> &[String] {
+        &self.tables
+    }
+
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    pub fn adjacent(&self, i: usize, j: usize) -> bool {
+        let e = (i.min(j), i.max(j));
+        self.edges.contains(&e)
+    }
+
+    /// Whether every vertex is reachable from vertex 0.
+    pub fn is_connected(&self) -> bool {
+        if self.tables.is_empty() {
+            return true;
+        }
+        let mut seen = vec![false; self.tables.len()];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for &(a, b) in &self.edges {
+                let o = if a == v {
+                    b
+                } else if b == v {
+                    a
+                } else {
+                    continue;
+                };
+                if !seen[o] {
+                    seen[o] = true;
+                    stack.push(o);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn component_absorbs_out_of_order_chains() {
+        // c=d connects only via the later b=c clause — order must not matter
+        let chains = vec![t(&["a", "b"]), t(&["c", "d"]), t(&["b", "c"])];
+        let comp = connected_component(&chains).unwrap();
+        assert_eq!(comp, t(&["a", "b", "c", "d"]));
+    }
+
+    #[test]
+    fn component_rejects_disconnected() {
+        let chains = vec![t(&["a", "b"]), t(&["c", "d"])];
+        let err = connected_component(&chains).unwrap_err();
+        assert!(err.contains("disconnected"), "{err}");
+        assert!(err.contains("c = d"), "{err}");
+    }
+
+    #[test]
+    fn component_is_case_insensitive_and_dedups() {
+        let chains = vec![t(&["A", "b"]), t(&["B", "a", "c"])];
+        let comp = connected_component(&chains).unwrap();
+        assert_eq!(comp, t(&["A", "b", "c"]));
+        assert!(connected_component(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn graph_edges_follow_chains() {
+        let g = JoinGraph::build(&t(&["a", "b", "c", "d"]), &[t(&["a", "b", "c"]), t(&["c", "d"])]);
+        assert!(g.adjacent(0, 1));
+        assert!(g.adjacent(1, 2));
+        assert!(g.adjacent(2, 3));
+        assert!(!g.adjacent(0, 3));
+        assert!(!g.adjacent(0, 2));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn graph_without_clauses_is_from_order_chain() {
+        let g = JoinGraph::build(&t(&["x", "y", "z"]), &[]);
+        assert!(g.adjacent(0, 1));
+        assert!(g.adjacent(1, 2));
+        assert!(!g.adjacent(0, 2));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn self_join_duplicate_from_entries_are_linked() {
+        // FROM a, a WHERE a.k = a.k: the chain resolves to position 0 twice,
+        // but the duplicate-name rule links the two copies
+        let g = JoinGraph::build(&t(&["a", "a"]), &[t(&["a", "a"])]);
+        assert_eq!(g.n(), 2);
+        assert!(g.adjacent(0, 1));
+        assert!(g.is_connected());
+
+        // self-join alongside a third table stays connected through it
+        let g = JoinGraph::build(&t(&["a", "a", "b"]), &[t(&["a", "b"])]);
+        assert!(g.adjacent(0, 1));
+        assert!(g.adjacent(0, 2));
+        assert!(g.is_connected());
+    }
+}

@@ -24,11 +24,15 @@
 pub mod approx;
 pub mod bloom_join;
 pub mod broadcast;
+pub mod join_graph;
 pub mod native;
+pub mod order;
 pub mod planner;
 pub mod repartition;
 pub mod strategy;
 
+pub use join_graph::JoinGraph;
+pub use order::{JoinOrderReport, TableStats};
 pub use planner::{JoinPlan, Planner, StrategyChoice};
 pub use strategy::{
     ApproxJoin, BloomJoin, BroadcastJoin, CostEstimate, InputStats, JoinStrategy, NativeJoin,

@@ -1,0 +1,843 @@
+//! Join-order optimization: Selinger-style dynamic programming for small
+//! relation counts, a greedy min-cost heuristic above, both driven by a
+//! cardinality estimator that *learns* per-(table-pair, predicate-tag)
+//! selectivities from measured executions via the [`FeedbackStore`].
+//!
+//! The planner has always ranked the five *strategies* over a fixed chain;
+//! this module is the first pass that rewrites the chain itself. For 3+
+//! relations the order dominates shuffle volume: chained binary joins
+//! materialize and shuffle every intermediate prefix, so putting the
+//! selective pairs first shrinks every downstream stage.
+//!
+//! Determinism contract: [`plan_query_order`] is a **pure function of
+//! (tables, join clauses, per-table statistics, feedback snapshot)** — no
+//! wall clock, no randomness, no thread-count dependence. DP iterates
+//! masks and candidate tables in ascending order with strict-improvement
+//! updates; greedy breaks ties lexicographically. Two calls with the same
+//! inputs return the same permutation, so the 1/2/8-thread bit-identity
+//! suites hold with ordering enabled by default.
+//!
+//! Calibration closes the predicted-vs-measured loop that `explain()`
+//! already displays: after a run, [`calibrate`] records the *exact*
+//! pairwise join selectivities (one counting pass, same machinery as
+//! [`InputStats::collect`]) and the measured/predicted shuffle-byte ratio
+//! under `joinsel:`/`joinbytes:` fingerprints in the same persistent
+//! [`FeedbackStore`] the §3.2 sigma feedback uses. The next plan of the
+//! same query shape sees them and can change its mind — and only then.
+
+use super::join_graph::JoinGraph;
+use super::strategy::{InputStats, INTERMEDIATE_PAIR_BYTES};
+use crate::cost::FeedbackStore;
+use crate::data::Dataset;
+use crate::util::fmt;
+use std::collections::HashMap;
+
+/// Largest relation count the exhaustive left-deep DP enumerates;
+/// above this the greedy heuristic takes over (DP is O(2^n · n^2)).
+pub const DP_MAX_TABLES: usize = 8;
+
+/// Per-relation statistics the order optimizer consumes — a projection of
+/// [`InputStats`] onto one input, or collected directly from a dataset.
+#[derive(Clone, Debug)]
+pub struct TableStats {
+    pub name: String,
+    pub rows: f64,
+    pub record_bytes: f64,
+    pub distinct_keys: f64,
+}
+
+impl TableStats {
+    /// Split an already-collected [`InputStats`] into per-table stats.
+    pub fn from_input_stats(stats: &InputStats, tables: &[String]) -> Vec<TableStats> {
+        (0..stats.n_inputs())
+            .map(|i| TableStats {
+                name: tables.get(i).cloned().unwrap_or_else(|| format!("r{i}")),
+                rows: stats.rows[i] as f64,
+                record_bytes: stats.record_bytes[i] as f64,
+                distinct_keys: stats.distinct_keys[i] as f64,
+            })
+            .collect()
+    }
+
+    /// One pass per dataset: rows, wire width, distinct join keys.
+    pub fn collect(inputs: &[Dataset], tables: &[String]) -> Vec<TableStats> {
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut keys = std::collections::HashSet::new();
+                for r in d.iter() {
+                    keys.insert(r.key);
+                }
+                TableStats {
+                    name: tables.get(i).cloned().unwrap_or_else(|| format!("r{i}")),
+                    rows: d.len() as f64,
+                    record_bytes: d.record_bytes as f64,
+                    distinct_keys: keys.len() as f64,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Feedback fingerprint for the learned selectivity of one table pair
+/// under one predicate tag. Symmetric and case-insensitive (sorted,
+/// lowercased pair), so `a⋈b` and `b⋈a` share one entry.
+pub fn pair_fingerprint(a: &str, b: &str, tag: &str) -> String {
+    let (a, b) = (a.to_ascii_lowercase(), b.to_ascii_lowercase());
+    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+    format!("joinsel:{lo}|{hi}:{tag}")
+}
+
+/// Feedback fingerprint for the measured/predicted shuffle-byte ratio of
+/// one query shape (predicate tag).
+pub fn bytes_fingerprint(tag: &str) -> String {
+    format!("joinbytes:{tag}")
+}
+
+/// Slot within a feedback fingerprint where scalar calibration values live.
+const CALIBRATION_SLOT: u64 = 0;
+
+/// Cardinality estimator: per-pair selectivity, feedback-calibrated.
+///
+/// Cold (nothing learned), the classic containment assumption:
+/// `sel(a, b) = 1 / max(distinct_a, distinct_b)` — exact under uniform
+/// per-key multiplicity with full containment, and the standard default
+/// when nothing better is known. Once [`calibrate`] has recorded a
+/// measured selectivity for the pair under this predicate tag, the learned
+/// value wins.
+pub struct CardinalityEstimator<'a> {
+    feedback: Option<&'a FeedbackStore>,
+    tag: &'a str,
+}
+
+impl<'a> CardinalityEstimator<'a> {
+    pub fn new(feedback: Option<&'a FeedbackStore>, tag: &'a str) -> Self {
+        Self { feedback, tag }
+    }
+
+    /// `(selectivity, learned)` for joining `a` with `b` on the equi-join
+    /// attribute; `learned` is true when the value came from feedback.
+    pub fn selectivity(&self, a: &TableStats, b: &TableStats) -> (f64, bool) {
+        if let Some(fb) = self.feedback {
+            if let Some(v) = fb.value(&pair_fingerprint(&a.name, &b.name, self.tag), CALIBRATION_SLOT)
+            {
+                return (v.clamp(0.0, 1.0), true);
+            }
+        }
+        (1.0 / a.distinct_keys.max(b.distinct_keys).max(1.0), false)
+    }
+
+    /// Multiplier on predicted shuffle bytes, learned from the measured /
+    /// predicted ratio of past runs (1.0 cold).
+    pub fn byte_scale(&self) -> f64 {
+        self.feedback
+            .and_then(|fb| fb.value(&bytes_fingerprint(self.tag), CALIBRATION_SLOT))
+            .unwrap_or(1.0)
+    }
+}
+
+/// One join step of a chosen order: which table joins in, the predicted
+/// cumulative cardinality after the step, and (after execution) the
+/// measured one.
+#[derive(Clone, Debug)]
+pub struct OrderStep {
+    pub table: String,
+    /// Predicted cumulative join cardinality after this step (for step 0,
+    /// the base table's row count).
+    pub predicted_rows: f64,
+    /// Exact cumulative cardinality measured after execution.
+    pub measured_rows: Option<f64>,
+    /// Whether a feedback-learned selectivity drove this step's prediction.
+    pub calibrated: bool,
+}
+
+/// Multi-objective cost of one join order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OrderCost {
+    /// Σ intermediate cardinalities (rows flowing between join steps).
+    pub rows: f64,
+    /// Cross-product pairs priced at β_compute.
+    pub cpu: f64,
+    /// Bytes of materialized intermediates.
+    pub io: f64,
+    /// Predicted shuffle bytes: the full input shuffle plus every
+    /// non-final intermediate, scaled by the learned byte ratio.
+    pub shuffle_bytes: f64,
+}
+
+/// The optimizer's decision, surfaced through `JoinPlan::explain()`,
+/// `QueryOutcome::join_order`, and the CLI.
+#[derive(Clone, Debug)]
+pub struct JoinOrderReport {
+    /// Chosen permutation of FROM positions (`order[0]` joins first).
+    pub order: Vec<usize>,
+    /// Table names in chosen order.
+    pub tables: Vec<String>,
+    /// `"dp"`, `"greedy"`, or `"from"` (identity kept by the guard).
+    pub algorithm: String,
+    /// True when the chosen order differs from the FROM order.
+    pub reordered: bool,
+    pub steps: Vec<OrderStep>,
+    /// Predicted cost of the chosen order.
+    pub cost: OrderCost,
+    /// Predicted cost of the naive FROM order, for comparison.
+    pub from_cost: OrderCost,
+}
+
+impl JoinOrderReport {
+    /// Whether the FROM order was kept (either because it was already
+    /// optimal or because no strictly better order was predicted).
+    pub fn is_identity(&self) -> bool {
+        self.order.iter().enumerate().all(|(i, &p)| i == p)
+    }
+
+    /// Fill per-step measured cardinalities (`measured[i]` is the exact
+    /// cumulative cardinality after join step `i+1`, as returned by
+    /// [`measure_step_cardinalities`] on the *reordered* inputs).
+    pub fn set_measured(&mut self, measured: &[f64]) {
+        for (i, m) in measured.iter().enumerate() {
+            if let Some(s) = self.steps.get_mut(i + 1) {
+                s.measured_rows = Some(*m);
+            }
+        }
+    }
+
+    /// One-line rendering for CLI output.
+    pub fn render_inline(&self) -> String {
+        format!(
+            "{} [{}{}]",
+            self.tables.join(" > "),
+            self.algorithm,
+            if self.reordered { ", reordered" } else { "" }
+        )
+    }
+
+    /// Multi-line rendering for `explain()`.
+    pub fn render(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!(
+            "join order: {}   ({}{})",
+            self.tables.join(" > "),
+            self.algorithm,
+            if self.reordered {
+                ", reordered from FROM order"
+            } else {
+                ", FROM order kept"
+            }
+        ));
+        out.push(format!(
+            "  predicted shuffle {} vs FROM-order {}  (cpu {:.0} vs {:.0} pairs)",
+            fmt::bytes(self.cost.shuffle_bytes as u64),
+            fmt::bytes(self.from_cost.shuffle_bytes as u64),
+            self.cost.cpu,
+            self.from_cost.cpu,
+        ));
+        for (i, s) in self.steps.iter().enumerate() {
+            let role = if i == 0 { "base" } else { "join" };
+            let measured = match s.measured_rows {
+                Some(m) => format!("   measured {m:.0} rows"),
+                None => String::new(),
+            };
+            out.push(format!(
+                "  step {i}: {role} {:<12} predicted {:.0} rows{}{}",
+                s.table,
+                s.predicted_rows,
+                measured,
+                if s.calibrated { "   [calibrated]" } else { "" },
+            ));
+        }
+        out
+    }
+}
+
+/// Everything the optimizer needs besides the per-table stats.
+pub struct OrderContext<'a> {
+    /// Feedback snapshot for learned selectivities (`None` → cold).
+    pub feedback: Option<&'a FeedbackStore>,
+    /// Predicate tag scoping the learned values (same tag the sketch
+    /// cache uses, so pushed predicates never alias calibrations).
+    pub predicate_tag: String,
+    /// β_compute of the engine's cost model.
+    pub beta_compute: f64,
+    pub workers: usize,
+    pub bandwidth: f64,
+    /// `EngineConfig::reorder_joins`; disabled → [`plan_query_order`]
+    /// returns `None` and execution keeps the FROM order untouched.
+    pub enabled: bool,
+}
+
+struct OrderPlanner<'a> {
+    graph: &'a JoinGraph,
+    stats: &'a [TableStats],
+    est: CardinalityEstimator<'a>,
+    ctx: &'a OrderContext<'a>,
+}
+
+impl<'a> OrderPlanner<'a> {
+    /// Evaluate one complete order: multi-objective cost + per-step trace.
+    fn evaluate(&self, order: &[usize]) -> (OrderCost, Vec<OrderStep>) {
+        let k = self.ctx.workers.max(1) as f64;
+        let n = order.len();
+        // every input crosses the fabric once regardless of order
+        let mut shuffle: f64 = self
+            .stats
+            .iter()
+            .map(|t| t.rows * t.record_bytes)
+            .sum::<f64>()
+            * (k - 1.0)
+            / k;
+        let mut steps = vec![OrderStep {
+            table: self.stats[order[0]].name.clone(),
+            predicted_rows: self.stats[order[0]].rows,
+            measured_rows: None,
+            calibrated: false,
+        }];
+        let mut prefix_rows = self.stats[order[0]].rows;
+        let (mut rows, mut cpu, mut io) = (0.0f64, 0.0f64, 0.0f64);
+        for step in 1..n {
+            let t = order[step];
+            // tightest selectivity over edges into the already-joined set
+            let mut sel = 1.0;
+            let mut any = false;
+            let mut calibrated = false;
+            for &j in &order[..step] {
+                if self.graph.adjacent(j, t) {
+                    let (s, learned) = self.est.selectivity(&self.stats[j], &self.stats[t]);
+                    if !any || s < sel {
+                        sel = s;
+                        calibrated = learned;
+                    }
+                    any = true;
+                }
+            }
+            prefix_rows = (prefix_rows * self.stats[t].rows * sel).max(0.0);
+            rows += prefix_rows;
+            cpu += prefix_rows;
+            if step + 1 < n {
+                io += prefix_rows * INTERMEDIATE_PAIR_BYTES;
+                shuffle += prefix_rows * INTERMEDIATE_PAIR_BYTES * (k - 1.0) / k;
+            }
+            steps.push(OrderStep {
+                table: self.stats[t].name.clone(),
+                predicted_rows: prefix_rows,
+                measured_rows: None,
+                calibrated,
+            });
+        }
+        let scale = self.est.byte_scale();
+        (
+            OrderCost {
+                rows,
+                cpu,
+                io,
+                shuffle_bytes: shuffle * scale,
+            },
+            steps,
+        )
+    }
+
+    fn cost_of(&self, order: &[usize]) -> OrderCost {
+        self.evaluate(order).0
+    }
+
+    /// Collapse a multi-objective cost to simulated seconds for ranking.
+    fn scalar_secs(&self, c: &OrderCost) -> f64 {
+        self.ctx.beta_compute * c.cpu
+            + 2.0 * c.shuffle_bytes / (self.ctx.workers.max(1) as f64 * self.ctx.bandwidth.max(1.0))
+    }
+
+    /// Like [`Self::evaluate`] but charging the final step's intermediate
+    /// too — the monotone partial objective the DP compares prefixes with
+    /// (a prefix that will be extended shuffles *all* its intermediates).
+    fn partial_secs(&self, order: &[usize]) -> f64 {
+        let k = self.ctx.workers.max(1) as f64;
+        let mut prefix_rows = self.stats[order[0]].rows;
+        let (mut cpu, mut shuffle) = (0.0f64, 0.0f64);
+        for step in 1..order.len() {
+            let t = order[step];
+            let mut sel = 1.0;
+            let mut any = false;
+            for &j in &order[..step] {
+                if self.graph.adjacent(j, t) {
+                    let (s, _) = self.est.selectivity(&self.stats[j], &self.stats[t]);
+                    if !any || s < sel {
+                        sel = s;
+                    }
+                    any = true;
+                }
+            }
+            prefix_rows = (prefix_rows * self.stats[t].rows * sel).max(0.0);
+            cpu += prefix_rows;
+            shuffle += prefix_rows * INTERMEDIATE_PAIR_BYTES * (k - 1.0) / k;
+        }
+        self.ctx.beta_compute * cpu
+            + 2.0 * shuffle / (k * self.ctx.bandwidth.max(1.0))
+    }
+
+    /// Exhaustive left-deep DP over connected subsets (Selinger).
+    /// Deterministic: masks ascending, candidates ascending, strict `<`
+    /// improvement. Cross-product-free — a table only extends a prefix it
+    /// shares a join edge with. Falls back to the identity order if the
+    /// graph leaves the full set unreachable (disconnected input, which
+    /// the parser rejects anyway).
+    fn dp_order(&self) -> Vec<usize> {
+        let n = self.stats.len();
+        let full: usize = (1usize << n) - 1;
+        let mut best: Vec<Option<(f64, Vec<usize>)>> = vec![None; 1usize << n];
+        for i in 0..n {
+            best[1usize << i] = Some((0.0, vec![i]));
+        }
+        for mask in 1..=full {
+            let Some(entry) = best[mask].clone() else {
+                continue;
+            };
+            let order = entry.1;
+            for t in 0..n {
+                if mask & (1usize << t) != 0 {
+                    continue;
+                }
+                if !order.iter().any(|&j| self.graph.adjacent(j, t)) {
+                    continue;
+                }
+                let mut next = order.clone();
+                next.push(t);
+                let nm = mask | (1usize << t);
+                let secs = if nm == full {
+                    self.scalar_secs(&self.cost_of(&next))
+                } else {
+                    self.partial_secs(&next)
+                };
+                let better = match &best[nm] {
+                    Some((b, _)) => secs < *b,
+                    None => true,
+                };
+                if better {
+                    best[nm] = Some((secs, next));
+                }
+            }
+        }
+        best[full]
+            .clone()
+            .map(|(_, o)| o)
+            .unwrap_or_else(|| (0..n).collect())
+    }
+
+    /// Greedy min-cost heuristic for n > [`DP_MAX_TABLES`]: start from the
+    /// cheapest two-table join (lexicographic tie-break), then repeatedly
+    /// append the adjacent table minimizing the partial objective
+    /// (smallest-index tie-break). Disconnected leftovers (cannot happen
+    /// through the parser) append in index order.
+    fn greedy_order(&self) -> Vec<usize> {
+        let n = self.stats.len();
+        if n < 2 {
+            return (0..n).collect();
+        }
+        let mut start: Option<(f64, usize, usize)> = None;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !self.graph.adjacent(i, j) {
+                    continue;
+                }
+                let secs = self.partial_secs(&[i, j]);
+                let better = match start {
+                    Some((b, _, _)) => secs < b,
+                    None => true,
+                };
+                if better {
+                    start = Some((secs, i, j));
+                }
+            }
+        }
+        let mut order = match start {
+            Some((_, i, j)) => vec![i, j],
+            None => vec![0],
+        };
+        while order.len() < n {
+            let mut pick: Option<(f64, usize)> = None;
+            for t in 0..n {
+                if order.contains(&t) {
+                    continue;
+                }
+                if !order.iter().any(|&j| self.graph.adjacent(j, t)) {
+                    continue;
+                }
+                let mut cand = order.clone();
+                cand.push(t);
+                let secs = self.partial_secs(&cand);
+                let better = match pick {
+                    Some((b, _)) => secs < b,
+                    None => true,
+                };
+                if better {
+                    pick = Some((secs, t));
+                }
+            }
+            match pick {
+                Some((_, t)) => order.push(t),
+                None => {
+                    // disconnected leftover: append smallest remaining
+                    let t = (0..n).find(|t| !order.contains(t)).unwrap();
+                    order.push(t);
+                }
+            }
+        }
+        order
+    }
+
+    /// Choose the order: DP for n ≤ [`DP_MAX_TABLES`], greedy above, then
+    /// a never-worse-than-FROM guard — the candidate replaces the identity
+    /// only when its predicted scalar cost is *strictly* lower.
+    fn plan(&self, algo: Algorithm) -> JoinOrderReport {
+        let n = self.stats.len();
+        let identity: Vec<usize> = (0..n).collect();
+        let from_cost = self.cost_of(&identity);
+        let use_dp = match algo {
+            Algorithm::Dp => true,
+            Algorithm::Greedy => false,
+            Algorithm::Auto => n <= DP_MAX_TABLES,
+        };
+        let (candidate, algorithm) = if use_dp {
+            (self.dp_order(), "dp")
+        } else {
+            (self.greedy_order(), "greedy")
+        };
+        let use_candidate = candidate != identity
+            && self.scalar_secs(&self.cost_of(&candidate)) < self.scalar_secs(&from_cost);
+        let (order, algorithm) = if use_candidate {
+            (candidate, algorithm.to_string())
+        } else {
+            // keep the FROM order but still report which search ran
+            (identity, algorithm.to_string())
+        };
+        let (cost, steps) = self.evaluate(&order);
+        let reordered = order.iter().enumerate().any(|(i, &p)| i != p);
+        JoinOrderReport {
+            tables: order.iter().map(|&i| self.stats[i].name.clone()).collect(),
+            order,
+            algorithm,
+            reordered,
+            steps,
+            cost,
+            from_cost,
+        }
+    }
+}
+
+/// Which search [`plan_query_order_with`] runs. `Auto` — what
+/// [`plan_query_order`] uses — picks DP up to [`DP_MAX_TABLES`] relations
+/// and greedy above. Forcing one lets tests and the CI cost-accuracy gate
+/// cross-check the two searches on the same inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Auto,
+    Dp,
+    Greedy,
+}
+
+/// Plan a join order for one query. Returns `None` when ordering is
+/// skipped entirely — disabled by config, fewer than three relations
+/// (binary joins have one order up to the combine semantics), or a
+/// non-commutative combine op (`CombineOp::Left` takes the *first*
+/// input's value, so permuting would change answers). A `Some` report
+/// with `reordered == false` means the optimizer ran and kept the FROM
+/// order.
+///
+/// Pure function of its arguments — see the module docs' determinism
+/// contract.
+pub fn plan_query_order(
+    tables: &[String],
+    clauses: &[Vec<String>],
+    commutative: bool,
+    stats: &[TableStats],
+    ctx: &OrderContext,
+) -> Option<JoinOrderReport> {
+    plan_query_order_with(tables, clauses, commutative, stats, ctx, Algorithm::Auto)
+}
+
+/// [`plan_query_order`] with the search algorithm forced.
+pub fn plan_query_order_with(
+    tables: &[String],
+    clauses: &[Vec<String>],
+    commutative: bool,
+    stats: &[TableStats],
+    ctx: &OrderContext,
+    algo: Algorithm,
+) -> Option<JoinOrderReport> {
+    if !ctx.enabled || tables.len() < 3 || !commutative || stats.len() != tables.len() {
+        return None;
+    }
+    let graph = JoinGraph::build(tables, clauses);
+    let est = CardinalityEstimator::new(ctx.feedback, &ctx.predicate_tag);
+    let planner = OrderPlanner {
+        graph: &graph,
+        stats,
+        est,
+        ctx,
+    };
+    Some(planner.plan(algo))
+}
+
+/// Apply a permutation: `out[i] = items[order[i]]`.
+pub fn permute<T: Clone>(items: &[T], order: &[usize]) -> Vec<T> {
+    order.iter().map(|&i| items[i].clone()).collect()
+}
+
+/// Exact cumulative join cardinality after each chained step, in the
+/// given input order: entry `i` is `Σ_key Π_{j ≤ i+1} count_j(key)`.
+/// One counting pass per input — the measured twin of the optimizer's
+/// per-step predictions.
+pub fn measure_step_cardinalities(inputs: &[Dataset]) -> Vec<f64> {
+    if inputs.len() < 2 {
+        return Vec::new();
+    }
+    let counts: Vec<HashMap<u64, f64>> = inputs
+        .iter()
+        .map(|d| {
+            let mut m: HashMap<u64, f64> = HashMap::new();
+            for r in d.iter() {
+                *m.entry(r.key).or_insert(0.0) += 1.0;
+            }
+            m
+        })
+        .collect();
+    let mut prefix = counts[0].clone();
+    let mut out = Vec::new();
+    for c in &counts[1..] {
+        let mut next: HashMap<u64, f64> = HashMap::new();
+        for (k, v) in &prefix {
+            if let Some(w) = c.get(k) {
+                next.insert(*k, v * w);
+            }
+        }
+        out.push(next.values().sum());
+        prefix = next;
+    }
+    out
+}
+
+/// Close the loop after a run: record the **exact** pairwise selectivities
+/// of this execution's inputs and the measured/predicted shuffle-byte
+/// ratio (clamped to [0.25, 4] so one outlier run cannot swing future
+/// plans wildly) into the feedback store under this predicate tag.
+/// `tables`/`inputs` are in *execution* order; pair fingerprints are
+/// symmetric so the order does not matter.
+pub fn calibrate(
+    feedback: &mut FeedbackStore,
+    tag: &str,
+    tables: &[String],
+    inputs: &[Dataset],
+    predicted_shuffle_bytes: f64,
+    measured_shuffle_bytes: f64,
+) {
+    let counts: Vec<HashMap<u64, f64>> = inputs
+        .iter()
+        .map(|d| {
+            let mut m: HashMap<u64, f64> = HashMap::new();
+            for r in d.iter() {
+                *m.entry(r.key).or_insert(0.0) += 1.0;
+            }
+            m
+        })
+        .collect();
+    let rows: Vec<f64> = inputs.iter().map(|d| d.len() as f64).collect();
+    for i in 0..inputs.len().min(tables.len()) {
+        for j in (i + 1)..inputs.len().min(tables.len()) {
+            if tables[i].eq_ignore_ascii_case(&tables[j]) {
+                continue; // self-join pair: selectivity of a table with itself
+            }
+            let pairs: f64 = counts[i]
+                .iter()
+                .map(|(k, c)| c * counts[j].get(k).copied().unwrap_or(0.0))
+                .sum();
+            let denom = rows[i] * rows[j];
+            if denom > 0.0 {
+                feedback.record_value(
+                    &pair_fingerprint(&tables[i], &tables[j], tag),
+                    CALIBRATION_SLOT,
+                    (pairs / denom).clamp(0.0, 1.0),
+                );
+            }
+        }
+    }
+    if predicted_shuffle_bytes > 0.0 && measured_shuffle_bytes > 0.0 {
+        feedback.record_value(
+            &bytes_fingerprint(tag),
+            CALIBRATION_SLOT,
+            (measured_shuffle_bytes / predicted_shuffle_bytes).clamp(0.25, 4.0),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Record};
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn ts(name: &str, rows: f64, distinct: f64) -> TableStats {
+        TableStats {
+            name: name.into(),
+            rows,
+            record_bytes: 100.0,
+            distinct_keys: distinct,
+        }
+    }
+
+    fn ctx<'a>(feedback: Option<&'a FeedbackStore>) -> OrderContext<'a> {
+        OrderContext {
+            feedback,
+            predicate_tag: String::new(),
+            beta_compute: 1e-7,
+            workers: 4,
+            bandwidth: 1e9,
+            enabled: true,
+        }
+    }
+
+    fn chain_clauses(tables: &[&str]) -> Vec<Vec<String>> {
+        tables
+            .windows(2)
+            .map(|w| names(&[w[0], w[1]]))
+            .collect()
+    }
+
+    #[test]
+    fn dp_puts_small_tables_first_on_adversarial_from_order() {
+        // FROM order joins the two largest first; DP should lead with the
+        // small end of the chain
+        let tables = names(&["big1", "big2", "mid", "tiny"]);
+        let clauses = chain_clauses(&["big1", "big2", "mid", "tiny"]);
+        let stats = vec![
+            ts("big1", 10_000.0, 100.0),
+            ts("big2", 10_000.0, 100.0),
+            ts("mid", 1_000.0, 100.0),
+            ts("tiny", 100.0, 100.0),
+        ];
+        let c = ctx(None);
+        let r = plan_query_order(&tables, &clauses, true, &stats, &c).unwrap();
+        assert!(r.reordered, "{:?}", r.order);
+        assert_eq!(r.algorithm, "dp");
+        assert!(r.cost.shuffle_bytes < r.from_cost.shuffle_bytes);
+        // the chain must still be walked edge-by-edge (no cross products):
+        // tiny > mid > big2 > big1 is the unique cheapest left-deep walk
+        assert_eq!(r.tables, names(&["tiny", "mid", "big2", "big1"]));
+    }
+
+    #[test]
+    fn identity_kept_when_from_order_is_optimal() {
+        let tables = names(&["tiny", "mid", "big"]);
+        let clauses = chain_clauses(&["tiny", "mid", "big"]);
+        let stats = vec![
+            ts("tiny", 10.0, 10.0),
+            ts("mid", 100.0, 10.0),
+            ts("big", 1_000.0, 10.0),
+        ];
+        let c = ctx(None);
+        let r = plan_query_order(&tables, &clauses, true, &stats, &c).unwrap();
+        assert!(!r.reordered);
+        assert!(r.is_identity());
+        assert_eq!(r.cost.shuffle_bytes, r.from_cost.shuffle_bytes);
+    }
+
+    #[test]
+    fn skipped_when_disabled_small_or_noncommutative() {
+        let tables = names(&["a", "b", "c"]);
+        let clauses = chain_clauses(&["a", "b", "c"]);
+        let stats = vec![ts("a", 10.0, 5.0), ts("b", 10.0, 5.0), ts("c", 10.0, 5.0)];
+        let mut c = ctx(None);
+        c.enabled = false;
+        assert!(plan_query_order(&tables, &clauses, true, &stats, &c).is_none());
+        let c = ctx(None);
+        assert!(plan_query_order(&tables, &clauses, false, &stats, &c).is_none());
+        assert!(plan_query_order(
+            &names(&["a", "b"]),
+            &[],
+            true,
+            &stats[..2],
+            &c
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let tables = names(&["w", "x", "y", "z"]);
+        let clauses = chain_clauses(&["w", "x", "y", "z"]);
+        let stats = vec![
+            ts("w", 5_000.0, 50.0),
+            ts("x", 700.0, 50.0),
+            ts("y", 9_000.0, 50.0),
+            ts("z", 40.0, 40.0),
+        ];
+        let c = ctx(None);
+        let a = plan_query_order(&tables, &clauses, true, &stats, &c).unwrap();
+        let b = plan_query_order(&tables, &clauses, true, &stats, &c).unwrap();
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.cost.shuffle_bytes, b.cost.shuffle_bytes);
+    }
+
+    #[test]
+    fn feedback_overrides_default_selectivity() {
+        let a = ts("a", 100.0, 50.0);
+        let b = ts("b", 100.0, 50.0);
+        let cold = CardinalityEstimator::new(None, "");
+        let (s, learned) = cold.selectivity(&a, &b);
+        assert!(!learned);
+        assert!((s - 1.0 / 50.0).abs() < 1e-12);
+
+        let mut fb = FeedbackStore::in_memory();
+        fb.record_value(&pair_fingerprint("a", "b", ""), 0, 0.5);
+        let warm = CardinalityEstimator::new(Some(&fb), "");
+        let (s, learned) = warm.selectivity(&a, &b);
+        assert!(learned);
+        assert_eq!(s, 0.5);
+        // symmetric + case-insensitive lookup
+        let (s2, _) = warm.selectivity(&b, &a);
+        assert_eq!(s2, 0.5);
+        assert_eq!(
+            pair_fingerprint("B", "a", "t"),
+            pair_fingerprint("a", "b", "t")
+        );
+    }
+
+    #[test]
+    fn measured_cardinalities_and_calibration_roundtrip() {
+        let ds = |name: &str, recs: Vec<(u64, f64)>| {
+            Dataset::from_records_unpartitioned(
+                name,
+                recs.into_iter().map(|(k, v)| Record::new(k, v)).collect(),
+                2,
+                100,
+            )
+        };
+        let a = ds("a", vec![(1, 1.0), (1, 1.0), (2, 1.0)]);
+        let b = ds("b", vec![(1, 1.0), (2, 1.0), (2, 1.0)]);
+        let c = ds("c", vec![(2, 1.0), (3, 1.0)]);
+        let inputs = vec![a, b, c];
+        // a⋈b: key1 2·1 + key2 1·2 = 4; (a⋈b)⋈c: key2 2·1 = 2
+        let m = measure_step_cardinalities(&inputs);
+        assert_eq!(m, vec![4.0, 2.0]);
+
+        let mut fb = FeedbackStore::in_memory();
+        calibrate(&mut fb, "", &names(&["a", "b", "c"]), &inputs, 1000.0, 500.0);
+        let sel_ab = fb.value(&pair_fingerprint("a", "b", ""), 0).unwrap();
+        assert!((sel_ab - 4.0 / 9.0).abs() < 1e-12);
+        let sel_bc = fb.value(&pair_fingerprint("b", "c", ""), 0).unwrap();
+        assert!((sel_bc - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(fb.value(&bytes_fingerprint(""), 0), Some(0.5));
+
+        // ratio clamped so one outlier cannot swing future plans
+        calibrate(&mut fb, "", &names(&["a", "b", "c"]), &inputs, 1.0, 1e9);
+        assert_eq!(fb.value(&bytes_fingerprint(""), 0), Some(4.0));
+    }
+
+    #[test]
+    fn permute_applies_order() {
+        let v = vec!["a", "b", "c"];
+        assert_eq!(permute(&v, &[2, 0, 1]), vec!["c", "a", "b"]);
+    }
+}

@@ -52,6 +52,11 @@ pub struct JoinPlan {
     /// kernel projections, GROUP BY composite strata), when the query
     /// came through the relational front end. `explain()` renders it.
     pub lowering: Option<crate::relation::LoweringInfo>,
+    /// The join-order optimizer's decision (chosen order, DP vs greedy,
+    /// per-step predicted vs measured cardinality); `None` when ordering
+    /// was skipped (two-way join, disabled, or a non-commutative combine
+    /// op). `explain()` renders it.
+    pub order: Option<super::order::JoinOrderReport>,
 }
 
 impl JoinPlan {
@@ -84,6 +89,13 @@ impl JoinPlan {
     /// predicates + the lowered kernel plan), for `explain()`.
     pub fn with_lowering(mut self, lowering: crate::relation::LoweringInfo) -> Self {
         self.lowering = Some(lowering);
+        self
+    }
+
+    /// Attach the join-order optimizer's report (or `None` when ordering
+    /// was skipped), for `explain()` and `QueryOutcome::join_order`.
+    pub fn with_order(mut self, order: Option<super::order::JoinOrderReport>) -> Self {
+        self.order = order;
         self
     }
 
@@ -123,6 +135,11 @@ impl JoinPlan {
         let _ = writeln!(out, "  stages: {}", self.stages.join(" -> "));
         if let Some(lowering) = &self.lowering {
             out.push_str(&lowering.render());
+        }
+        if let Some(order) = &self.order {
+            for line in order.render() {
+                let _ = writeln!(out, "  {line}");
+            }
         }
         if let Some(report) = &self.filter {
             let _ = writeln!(out, "  filter: {}", report.render());
@@ -307,6 +324,7 @@ impl<'a> Planner<'a> {
             measured_shuffle_bytes: None,
             filter: None,
             lowering: None,
+            order: None,
         })
     }
 }

@@ -132,6 +132,19 @@ impl InputStats {
         2.0 * bytes / (self.workers as f64 * self.bandwidth)
     }
 
+    /// These stats with the per-input vectors permuted into a new join
+    /// order (`order[i]` = original position of the i-th input). The
+    /// aggregate fields (common keys, overlap, output cardinality) are
+    /// order-invariant and carry over unchanged.
+    pub fn permuted(&self, order: &[usize]) -> Self {
+        let mut s = self.clone();
+        s.rows = order.iter().map(|&i| self.rows[i]).collect();
+        s.record_bytes = order.iter().map(|&i| self.record_bytes[i]).collect();
+        s.distinct_keys = order.iter().map(|&i| self.distinct_keys[i]).collect();
+        s.participating = order.iter().map(|&i| self.participating[i]).collect();
+        s
+    }
+
     /// Record bytes a full shuffle moves: (k−1)/k of every input.
     pub fn full_shuffle_bytes(&self) -> f64 {
         let k = self.workers as f64;
@@ -244,8 +257,9 @@ impl Default for NativeJoin {
 }
 
 /// Bytes one materialized (key, combined value) intermediate pair costs —
-/// mirrors `native_join`'s accounting.
-const INTERMEDIATE_PAIR_BYTES: f64 = 24.0;
+/// mirrors `native_join`'s accounting (shared with the join-order
+/// optimizer's per-step shuffle model in [`super::order`]).
+pub(crate) const INTERMEDIATE_PAIR_BYTES: f64 = 24.0;
 
 impl JoinStrategy for NativeJoin {
     fn name(&self) -> &'static str {

@@ -140,6 +140,31 @@
 //! concurrent run's answers equal a sequential replay
 //! ([`serve::ServeReport::signature`]). Front ends: `approxjoin serve`,
 //! `examples/serving_workload.rs`, and the `fig_serving` bench.
+//!
+//! ## Join ordering
+//!
+//! Multi-way (3+ relation) joins are reordered before execution by
+//! [`join::order`]: the AND-ed equi-join chains of the query become a
+//! join graph ([`join::JoinGraph`], sharing one connectivity check with
+//! the parser), and a Selinger-style dynamic program over connected
+//! subsets (exhaustive for ≤ 8 relations, greedy min-cost above) picks
+//! the left-deep order minimizing a multi-objective cost — intermediate
+//! rows, cpu, io, and shuffled bytes — under the same time model the
+//! strategy planner uses. Cardinalities come from a
+//! [`join::order::CardinalityEstimator`] that starts from a containment
+//! default (`1/max(distinct)`) and *learns*: after every run the
+//! measured [`cluster::ShuffleLedger`] bytes and exact per-pair join
+//! selectivities are written into the [`cost::FeedbackStore`] keyed by
+//! (table pair, predicate tag), so later plans for the same shape are
+//! calibrated by observation. Planning is a pure function of (query,
+//! input stats, feedback snapshot) — never of thread count — so
+//! reordered runs stay bit-identical at any parallelism; only
+//! commutative combines (`Sum`, `Product`) are ever reordered, the
+//! original FROM order is kept unless the optimizer's order is strictly
+//! cheaper, and `explain()` prints the chosen order with per-step
+//! predicted vs measured cardinality
+//! ([`join::JoinOrderReport`]). `EngineConfig::reorder_joins` (default
+//! on) disables it.
 
 pub mod bloom;
 pub mod cluster;

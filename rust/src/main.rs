@@ -308,6 +308,9 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
 
     let out = session.query(q).strategy(choice).run()?;
     println!("strategy: {}   mode: {:?}", out.strategy, out.mode);
+    if let Some(order) = &out.join_order {
+        println!("join order: {}", order.render_inline());
+    }
     println!(
         "result: {:.4} \u{b1} {:.4}  ({}% confidence, {} samples, df={:.0})",
         out.result.estimate,

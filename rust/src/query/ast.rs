@@ -66,6 +66,13 @@ pub struct Query {
     pub tables: Vec<String>,
     /// The join attribute name (the paper's A; single-attribute equi-join).
     pub join_attr: String,
+    /// The AND-ed equi-join chains as written (`a.k = b.k = c.k AND
+    /// c.k = d.k` → `[[a,b,c],[c,d]]`) — the join-order optimizer builds
+    /// its [`crate::join::JoinGraph`] from these. Programmatic
+    /// (non-parsed) queries default to one chain in FROM order.
+    /// Not part of [`Query::fingerprint`]: the chains are derivable from
+    /// the query text and legacy fingerprints must stay byte-stable.
+    pub join_clauses: Vec<Vec<String>>,
     pub budget: Budget,
     /// Every aggregate of the SELECT list (first mirrors `agg`/`combine`).
     pub aggregates: Vec<AggExpr>,
@@ -84,11 +91,13 @@ impl Query {
         join_attr: impl Into<String>,
         budget: Budget,
     ) -> Self {
+        let join_clauses = vec![tables.clone()];
         Self {
             agg,
             combine,
             tables,
             join_attr: join_attr.into(),
+            join_clauses,
             budget,
             aggregates: vec![AggExpr {
                 func: agg,

@@ -352,43 +352,12 @@ pub fn parse(text: &str) -> Result<Query> {
     // AND-ed chains must form ONE connected equi-join class — the engine
     // runs a single transitive n-way equi-join, so disconnected chains
     // would silently change the query's meaning. Connectivity is decided
-    // after all chains are collected (clause order must not matter):
-    // absorb chains sharing a table until a fixpoint.
-    let mut chain_tables: Vec<String> = Vec::new();
-    let mut remaining = chains;
-    if !remaining.is_empty() {
-        for t in remaining.remove(0) {
-            if !chain_tables.iter().any(|x| x.eq_ignore_ascii_case(&t)) {
-                chain_tables.push(t);
-            }
-        }
-    }
-    loop {
-        let before = remaining.len();
-        remaining.retain(|chain| {
-            let connected = chain
-                .iter()
-                .any(|t| chain_tables.iter().any(|x| x.eq_ignore_ascii_case(t)));
-            if connected {
-                for t in chain {
-                    if !chain_tables.iter().any(|x| x.eq_ignore_ascii_case(t)) {
-                        chain_tables.push(t.clone());
-                    }
-                }
-            }
-            !connected
-        });
-        if remaining.is_empty() || remaining.len() == before {
-            break;
-        }
-    }
-    if let Some(stray) = remaining.first() {
-        bail!(
-            "join chains are disconnected: {} does not share a table with \
-             the other chain(s)",
-            stray.join(" = ")
-        );
-    }
+    // after all chains are collected (clause order must not matter) by
+    // the shared join-graph implementation — the same absorption the
+    // join-order optimizer builds its adjacency from, so the parser and
+    // the optimizer can never disagree about well-formedness.
+    let chain_tables = crate::join::join_graph::connected_component(&chains)
+        .map_err(|e| anyhow!(e))?;
     // dedup within a chain happened above, so every distinct FROM table
     // must appear (duplicate FROM entries — self-joins — count once)
     let mut from_distinct: Vec<&String> = Vec::new();
@@ -492,6 +461,7 @@ pub fn parse(text: &str) -> Result<Query> {
         combine: first.combine,
         tables,
         join_attr: attr,
+        join_clauses: chains,
         budget,
         aggregates,
         predicates,
@@ -648,6 +618,11 @@ mod tests {
         .unwrap();
         assert_eq!(q.tables, vec!["a", "b", "c"]);
         assert_eq!(q.join_attr, "k");
+        // the raw chains survive on the query for the join-order optimizer
+        assert_eq!(
+            q.join_clauses,
+            vec![vec!["a", "b"], vec!["b", "c"]]
+        );
 
         // chains that share no table would change the query's meaning
         // (this engine runs one transitive equi-join class) — rejected

@@ -133,7 +133,10 @@ impl SketchCache {
 
     /// The cache key of the join filter for a query shape. Epochs are
     /// embedded per table, so re-registering a table orphans old entries
-    /// even before the prune runs.
+    /// even before the prune runs. Per-table components are sorted: the
+    /// join filter is an intersection over all inputs' key sets, so two
+    /// join orders over the same tables share one filter entry (the
+    /// order-sensitive cogroup key adds the executed order on top).
     fn filter_key(
         epochs: &HashMap<String, u64>,
         tables: &[String],
@@ -141,16 +144,30 @@ impl SketchCache {
         cfg: FilterConfig,
         workers: usize,
     ) -> String {
-        let mut key = String::new();
-        for t in tables {
-            let e = epochs.get(t).copied().unwrap_or(0);
-            key.push_str(&format!("|t={t}@{e}"));
-        }
+        let mut parts: Vec<String> = tables
+            .iter()
+            .map(|t| {
+                let e = epochs.get(t).copied().unwrap_or(0);
+                format!("|t={t}@{e}")
+            })
+            .collect();
+        parts.sort();
+        let mut key = parts.concat();
         key.push_str(&format!(
             "|p={predicate_tag}|k={}|g={}/{}|w={workers}",
             cfg.kind, cfg.log2_bits, cfg.num_hashes
         ));
         key
+    }
+
+    /// The cache key of a filtered cogroup: the filter key plus the
+    /// *executed* table order and the per-aggregate projection. Stage-1
+    /// cogroup artifacts are order-sensitive — the join-order optimizer
+    /// may permute inputs, and the cogroup built over `a > b > c` is not
+    /// the cogroup built over `c > a > b` — so the order is part of the
+    /// key even though the filter is shared.
+    fn cogroup_key(fkey: &str, tables: &[String], projection_tag: &str) -> String {
+        format!("{fkey}|ord={}|proj={projection_tag}", tables.join(">"))
     }
 
     /// Run (or replay) stage 1 for a query over `inputs`, consulting the
@@ -183,7 +200,7 @@ impl SketchCache {
             let mut inner = self.inner.lock().unwrap();
             let fkey =
                 Self::filter_key(&inner.epochs, tables, predicate_tag, cfg, workers);
-            let ckey = format!("{fkey}|proj={projection_tag}");
+            let ckey = Self::cogroup_key(&fkey, tables, projection_tag);
             let cg = inner.cogroups.get(&ckey).cloned();
             let jf = if cg.is_none() {
                 inner.filters.get(&fkey).cloned()
@@ -382,6 +399,23 @@ mod tests {
         let mut bumped = HashMap::new();
         bumped.insert("a".to_string(), 1u64);
         assert_ne!(base, SketchCache::filter_key(&bumped, &tables(), "", cfg(), 4));
+    }
+
+    #[test]
+    fn permuted_table_order_shares_filter_key_not_cogroup_key() {
+        let epochs = HashMap::new();
+        let ab = tables();
+        let ba = vec!["b".to_string(), "a".to_string()];
+        let f1 = SketchCache::filter_key(&epochs, &ab, "", cfg(), 4);
+        let f2 = SketchCache::filter_key(&epochs, &ba, "", cfg(), 4);
+        // the join filter is order-independent: one entry serves both
+        assert_eq!(f1, f2);
+        // the filtered cogroup is order-sensitive: distinct entries
+        let c1 = SketchCache::cogroup_key(&f1, &ab, "value");
+        let c2 = SketchCache::cogroup_key(&f2, &ba, "value");
+        assert_ne!(c1, c2);
+        assert!(c1.contains("|ord=a>b|"));
+        assert!(c2.contains("|ord=b>a|"));
     }
 
     #[test]

@@ -387,6 +387,35 @@ impl QueryBuilder<'_> {
         )
     }
 
+    /// Run the join-order optimizer for this query over `inputs` (given in
+    /// FROM order). `None` when ordering is skipped — see
+    /// [`crate::join::order::plan_query_order`]. Pure function of the
+    /// session's (config, feedback snapshot) and the query, so the plan
+    /// and the engine recompute identical orders.
+    fn order_report(&self, inputs: &[Dataset]) -> Option<crate::join::JoinOrderReport> {
+        let engine = &self.session.engine;
+        let commutative = matches!(
+            self.query.combine,
+            crate::join::CombineOp::Sum | crate::join::CombineOp::Product
+        );
+        let ctx = crate::join::order::OrderContext {
+            feedback: Some(&engine.feedback),
+            predicate_tag: String::new(),
+            beta_compute: engine.cost.beta_compute,
+            workers: engine.cfg.workers,
+            bandwidth: engine.cfg.time_model.bandwidth,
+            enabled: engine.cfg.reorder_joins,
+        };
+        let stats = crate::join::TableStats::collect(inputs, &self.query.tables);
+        crate::join::order::plan_query_order(
+            &self.query.tables,
+            &self.query.join_clauses,
+            commutative,
+            &stats,
+            &ctx,
+        )
+    }
+
     /// Produce the cost-based [`JoinPlan`] without executing anything.
     /// Relational queries (predicates, GROUP BY, typed tables) are
     /// lowered first, so the plan carries the pushed-down predicates and
@@ -397,12 +426,16 @@ impl QueryBuilder<'_> {
                 .map(|(plan, _)| plan);
         }
         let inputs = self.session.resolve_inputs(&self.query)?;
-        let stats = self.stats(&inputs);
-        Planner::new(&self.session.registry, &self.session.engine.cost).plan(
-            &stats,
-            &self.choice,
-            &self.query.budget,
-        )
+        let order = self.order_report(&inputs);
+        let mut stats = self.stats(&inputs);
+        if let Some(r) = &order {
+            if r.reordered {
+                stats = stats.permuted(&r.order);
+            }
+        }
+        Planner::new(&self.session.registry, &self.session.engine.cost)
+            .plan(&stats, &self.choice, &self.query.budget)
+            .map(|p| p.with_order(order))
     }
 
     /// `plan()` rendered as an EXPLAIN-style string.
@@ -421,13 +454,19 @@ impl QueryBuilder<'_> {
             return relational::run_relational(self.session, &self.query, &self.choice);
         }
         let inputs = self.session.resolve_inputs(&self.query)?;
-        let stats = self.stats(&inputs);
+        // join-order optimization: plan on FROM-order inputs, execute on
+        // the permuted ones (query.tables is never mutated — fingerprints
+        // and feedback continuity depend on it)
+        let order = self.order_report(&inputs);
+        let exec_inputs: Vec<Dataset> = match &order {
+            Some(r) if r.reordered => crate::join::order::permute(&inputs, &r.order),
+            _ => inputs.clone(),
+        };
+        let stats = self.stats(&exec_inputs);
         let session = &mut *self.session;
-        let plan = Planner::new(&session.registry, &session.engine.cost).plan(
-            &stats,
-            &self.choice,
-            &self.query.budget,
-        )?;
+        let plan = Planner::new(&session.registry, &session.engine.cost)
+            .plan(&stats, &self.choice, &self.query.budget)?
+            .with_order(order.clone());
 
         // An approximate plan for a budgeted query goes through the engine:
         // its §3.2 cost function sizes the sampling fraction from the
@@ -435,10 +474,14 @@ impl QueryBuilder<'_> {
         // conclude the budget is loose enough for the exact (bloom) path.
         // This covers both Auto and Named("approx") — only an unbudgeted
         // forced approx run uses the strategy's own fixed sampling config.
+        // The engine receives the ORIGINAL (FROM-order) inputs and owns the
+        // reordering itself — both sides plan from the same feedback
+        // snapshot, so they compute the same order.
         if plan.approximate && !self.query.budget.is_unbounded() {
             let mut outcome = session.engine.execute_on(&self.query, &inputs)?;
             outcome.plan = Some(
-                plan.with_measured_shuffle(outcome.ledger.total_bytes())
+                plan.with_order(outcome.join_order.clone())
+                    .with_measured_shuffle(outcome.ledger.total_bytes())
                     .with_filter_report(outcome.filter_report),
             );
             return Ok(outcome);
@@ -465,7 +508,7 @@ impl QueryBuilder<'_> {
             session.engine.cfg.time_model,
         )
         .with_parallelism(session.engine.cfg.parallelism);
-        let run = strategy.execute(&mut cluster, &inputs, self.query.combine)?;
+        let run = strategy.execute(&mut cluster, &exec_inputs, self.query.combine)?;
 
         let confidence = self
             .query
@@ -507,6 +550,25 @@ impl QueryBuilder<'_> {
         };
         let metrics = run.metrics;
         let ledger = run.ledger;
+
+        // close the calibration loop for the direct-strategy path (the
+        // engine path calibrates inside execute_on)
+        let mut join_order = order;
+        if let Some(r) = join_order.as_mut() {
+            r.set_measured(&crate::join::order::measure_step_cardinalities(
+                &exec_inputs,
+            ));
+            let exec_tables = r.tables.clone();
+            crate::join::order::calibrate(
+                &mut session.engine.feedback,
+                "",
+                &exec_tables,
+                &exec_inputs,
+                r.cost.shuffle_bytes,
+                ledger.total_bytes() as f64,
+            );
+        }
+
         Ok(QueryOutcome {
             sim_secs: metrics.total_sim_secs(),
             d_dt: metrics.stage_secs("build_filter") + metrics.stage_secs("filter_shuffle"),
@@ -516,12 +578,14 @@ impl QueryBuilder<'_> {
             metrics,
             strategy: plan.strategy.clone(),
             plan: Some(
-                plan.with_measured_shuffle(ledger.total_bytes())
+                plan.with_order(join_order.clone())
+                    .with_measured_shuffle(ledger.total_bytes())
                     .with_filter_report(run.filter_report),
             ),
             ledger,
             grouped: None,
             filter_report: run.filter_report,
+            join_order,
         })
     }
 }

@@ -55,7 +55,27 @@ fn wrap_datasets(
     Ok(owned)
 }
 
+/// Everything that shapes the lowered *keys* (and therefore the join
+/// filter): the join attribute, the pushed predicates, the GROUP BY
+/// composite strata — but not the per-aggregate value projection, which
+/// only the cogroup cache entry keys on. Also tags the join-order
+/// optimizer's learned selectivities, so different predicate mixes
+/// calibrate independently.
+pub(crate) fn predicate_tag(query: &Query) -> String {
+    let mut t = format!("attr={}", query.join_attr);
+    for p in &query.predicates {
+        t.push_str(&format!(";{p}"));
+    }
+    if let Some(g) = &query.group_by {
+        t.push_str(&format!(";g={g}"));
+    }
+    t
+}
+
 /// Lower the query and rank strategies on the lowered kernel inputs.
+/// When the join-order optimizer reorders, the lowered per-aggregate
+/// inputs come back permuted into execution order (the report on the
+/// returned plan records the mapping; `query.tables` is never mutated).
 pub(crate) fn plan_relational(
     session: &Session,
     query: &Query,
@@ -72,7 +92,44 @@ pub(crate) fn plan_relational(
         })
         .collect();
     let partitions = session.engine.cfg.workers.max(1) * 2;
-    let lowered = lower(&LogicalPlan::from_query(query), &relations, partitions)?;
+    let mut lowered = lower(&LogicalPlan::from_query(query), &relations, partitions)?;
+
+    // Join-order optimization over the *lowered* (post-pushdown) inputs:
+    // predicate selectivity is already baked into their cardinalities, and
+    // learned selectivities are tagged by the predicate mix. Reordering is
+    // only sound when every aggregate's combine op is commutative.
+    let commutative = lowered.ops.iter().all(|op| {
+        matches!(
+            op,
+            crate::join::CombineOp::Sum | crate::join::CombineOp::Product
+        )
+    });
+    let tag = predicate_tag(query);
+    let ctx = crate::join::order::OrderContext {
+        feedback: Some(&session.engine.feedback),
+        predicate_tag: tag,
+        beta_compute: session.engine.cost.beta_compute,
+        workers: session.engine.cfg.workers,
+        bandwidth: session.engine.cfg.time_model.bandwidth,
+        enabled: session.engine.cfg.reorder_joins,
+    };
+    let tstats =
+        crate::join::TableStats::collect(&lowered.per_aggregate[0], &query.tables);
+    let order = crate::join::order::plan_query_order(
+        &query.tables,
+        &query.join_clauses,
+        commutative,
+        &tstats,
+        &ctx,
+    );
+    if let Some(r) = &order {
+        if r.reordered {
+            for inputs in &mut lowered.per_aggregate {
+                *inputs = crate::join::order::permute(inputs, &r.order);
+            }
+        }
+    }
+
     let stats = InputStats::collect(
         &lowered.per_aggregate[0],
         session.engine.cfg.workers,
@@ -80,7 +137,8 @@ pub(crate) fn plan_relational(
     );
     let plan = Planner::new(&session.registry, &session.engine.cost)
         .plan(&stats, choice, &query.budget)?
-        .with_lowering(lowered.info.clone());
+        .with_lowering(lowered.info.clone())
+        .with_order(order);
     Ok((plan, lowered))
 }
 
@@ -132,20 +190,15 @@ pub(crate) fn run_relational(
     let (plan, lowered) = plan_relational(session, query, choice)?;
     let cfg = session.engine.cfg.clone();
     let sketches = session.engine.sketches.clone();
-    // everything that shapes the lowered *keys* (and therefore the join
-    // filter): the join attribute, the pushed predicates, the GROUP BY
-    // composite strata — but not the per-aggregate value projection,
-    // which only the cogroup cache entry keys on
-    let predicate_tag = {
-        let mut t = format!("attr={}", query.join_attr);
-        for p in &query.predicates {
-            t.push_str(&format!(";{p}"));
-        }
-        if let Some(g) = &query.group_by {
-            t.push_str(&format!(";g={g}"));
-        }
-        t
-    };
+    let predicate_tag = predicate_tag(query);
+    // per_aggregate inputs are already in execution order (plan_relational
+    // permuted them when the optimizer reordered); cache keys and the
+    // calibration loop use the executed table order
+    let exec_tables: Vec<String> = plan
+        .order
+        .as_ref()
+        .map(|r| r.tables.clone())
+        .unwrap_or_else(|| query.tables.clone());
     let confidence = query
         .budget
         .error
@@ -189,7 +242,7 @@ pub(crate) fn run_relational(
                 Some(cache) => cache.filtered(
                     &mut cluster,
                     inputs,
-                    &query.tables,
+                    &exec_tables,
                     &predicate_tag,
                     &query.aggregates[ai].render(),
                     filter_cfg,
@@ -341,6 +394,24 @@ pub(crate) fn run_relational(
         ExecutionMode::Exact
     };
     let result = overall.expect("at least one aggregate");
+
+    // close the calibration loop: record measured per-pair selectivities
+    // and the predicted→measured byte ratio under this predicate tag
+    let mut join_order = plan.order.clone();
+    if let Some(r) = join_order.as_mut() {
+        r.set_measured(&crate::join::order::measure_step_cardinalities(
+            &lowered.per_aggregate[0],
+        ));
+        crate::join::order::calibrate(
+            &mut session.engine.feedback,
+            &predicate_tag,
+            &exec_tables,
+            &lowered.per_aggregate[0],
+            r.cost.shuffle_bytes,
+            ledger.total_bytes() as f64,
+        );
+    }
+
     Ok(QueryOutcome {
         sim_secs: metrics.total_sim_secs(),
         d_dt: first.d_dt,
@@ -350,7 +421,8 @@ pub(crate) fn run_relational(
         metrics,
         strategy: plan.strategy.clone(),
         plan: Some(
-            plan.with_measured_shuffle(ledger.total_bytes())
+            plan.with_order(join_order.clone())
+                .with_measured_shuffle(ledger.total_bytes())
                 .with_filter_report(first.filter_report),
         ),
         ledger,
@@ -359,5 +431,6 @@ pub(crate) fn run_relational(
             aggregates: grouped_aggs,
         }),
         filter_report: first.filter_report,
+        join_order,
     })
 }
