@@ -17,7 +17,7 @@
 //! Env knobs (the CI cost-accuracy job sets both):
 //!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
 //!   BENCH_JSON=path            merge a machine-readable section into the
-//!                              given JSON report (BENCH_PR7.json)
+//!                              given JSON report (BENCH_PR8.json)
 
 use approxjoin::coordinator::{EngineConfig, QueryOutcome};
 use approxjoin::data::{Dataset, Record};

@@ -1,0 +1,233 @@
+//! §Variants + CI gate: quality vs cost across join variants.
+//!
+//! Every registered strategy — the in-join approximations AND the
+//! centralized sample-first baselines from "Joins on Samples" — answers
+//! all six join variants on a Zipf-multiplicity × exponential-value
+//! workload with left-only, matched, and right-only key ranges. The
+//! bench reports estimate quality (relative error vs the brute-force
+//! [`ExactJoinOracle`]) against measured shuffle cost, and enforces the
+//! PR's acceptance criteria:
+//!
+//! 1. SEMI/ANTI on the Bloom-based strategies move **zero** stage-2
+//!    shuffle bytes — membership is resolved from stage 1 alone (the
+//!    8-bytes-per-key `membership` stage is the only key traffic);
+//! 2. exact strategies reproduce the oracle on every variant;
+//! 3. every (strategy, variant) estimate is bit-identical at 1 thread
+//!    and at `APPROXJOIN_THREADS` (the CI matrix runs 1 and 8).
+//!
+//! Env knobs (the CI variant-smoke job sets both):
+//!   APPROXJOIN_BENCH_QUICK=1   shrink workloads for a CI smoke pass
+//!   BENCH_JSON=path            merge a machine-readable section into the
+//!                              given JSON report (BENCH_PR8.json)
+
+use approxjoin::cluster::{ShuffleLedger, SimCluster, TimeModel};
+use approxjoin::data::{Dataset, Record};
+use approxjoin::join::{CombineOp, JoinRun, JoinVariant, StrategyRegistry};
+use approxjoin::query::AggFunc;
+use approxjoin::relation::grouped::estimate_slice;
+use approxjoin::row;
+use approxjoin::stats::{EstimatorKind, StratumAgg};
+use approxjoin::testkit::ExactJoinOracle;
+use approxjoin::util::{fmt, Json, Rng, Table};
+
+fn quick() -> bool {
+    std::env::var("APPROXJOIN_BENCH_QUICK").is_ok()
+}
+
+fn cluster(threads: usize) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+}
+
+/// Three-way key split (left-only / matched / right-only) so every
+/// variant's pad and complement sets are non-empty and material.
+fn inputs(keys: u64, seed: u64) -> Vec<Dataset> {
+    let mut r = Rng::new(seed);
+    let mut a = Vec::new();
+    for key in 0..(2 * keys / 3) {
+        for _ in 0..(2 + r.zipf(10, 1.1)) {
+            a.push(Record::new(key, r.exponential(10.0)));
+        }
+    }
+    let mut b = Vec::new();
+    for key in (keys / 3)..keys {
+        for _ in 0..(20 + r.below(20)) {
+            b.push(Record::new(key, r.exponential(5.0)));
+        }
+    }
+    vec![
+        Dataset::from_records_unpartitioned("a", a, 4, 64),
+        Dataset::from_records_unpartitioned("b", b, 4, 64),
+    ]
+}
+
+/// Scalar SUM estimate of a run: baseline report when present, otherwise
+/// the session's estimator dispatch over ascending-key strata.
+fn estimate_of(run: &JoinRun) -> (f64, f64) {
+    if let Some(report) = &run.baseline {
+        let res = report.result_for(AggFunc::Sum, 0.95).expect("baseline SUM");
+        return (res.estimate, res.error_bound);
+    }
+    let mut keys: Vec<u64> = run.strata.keys().copied().collect();
+    keys.sort_unstable();
+    let strata: Vec<StratumAgg> = keys.iter().map(|k| run.strata[k]).collect();
+    let res = estimate_slice(
+        AggFunc::Sum,
+        run.sampled,
+        EstimatorKind::Clt,
+        &strata,
+        &[],
+        0.95,
+    );
+    (res.estimate, res.error_bound)
+}
+
+fn stage2_bytes(ledger: &ShuffleLedger) -> u64 {
+    ["filter_shuffle", "shuffle", "crossproduct", "sample"]
+        .iter()
+        .map(|s| ledger.stage_bytes(s))
+        .sum()
+}
+
+fn main() {
+    let quick = quick();
+    println!(
+        "== fig_join_variants: quality vs cost across join variants{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let keys = if quick { 90 } else { 600 };
+    let data = inputs(keys, 31);
+    let oracle = ExactJoinOracle::new(&data);
+    let registry = StrategyRegistry::with_defaults();
+    let threads = approxjoin::runtime::default_parallelism();
+
+    let mut t = Table::new(&[
+        "variant", "strategy", "estimate", "rel err", "bound", "shuffle", "stage2",
+    ]);
+    let mut json_fields = Vec::new();
+    let mut max_exact_rel = 0.0f64;
+    let mut max_sampled_rel = 0.0f64;
+
+    for &variant in &JoinVariant::ALL {
+        let truth = oracle.sum(CombineOp::Sum, variant);
+        for strategy in registry.iter() {
+            let run = match strategy.execute_variant(
+                &mut cluster(threads),
+                &data,
+                CombineOp::Sum,
+                variant,
+            ) {
+                Ok(run) => run,
+                Err(_) => {
+                    // bernoulli's typed refusal of non-inner variants:
+                    // sampled rows cannot prove a key's absence
+                    assert!(
+                        strategy.name() == "bernoulli" && !variant.is_inner(),
+                        "unexpected refusal: {}/{}",
+                        strategy.name(),
+                        variant.tag()
+                    );
+                    continue;
+                }
+            };
+            let (estimate, bound) = estimate_of(&run);
+            let rel = (estimate - truth).abs() / (1.0 + truth.abs());
+
+            // gate 2: exact strategies reproduce the oracle
+            if !run.sampled && run.baseline.is_none() {
+                assert!(
+                    rel <= 1e-9,
+                    "{}/{}: exact run off by {rel:.2e}",
+                    strategy.name(),
+                    variant.tag()
+                );
+                max_exact_rel = max_exact_rel.max(rel);
+            } else {
+                max_sampled_rel = max_sampled_rel.max(rel);
+            }
+
+            // gate 1: membership variants never shuffle records on the
+            // Bloom-based strategies
+            let s2 = stage2_bytes(&run.ledger);
+            if variant.membership_only() && matches!(strategy.name(), "bloom" | "approx") {
+                assert_eq!(
+                    s2,
+                    0,
+                    "{}/{}: membership variants must move zero stage-2 bytes",
+                    strategy.name(),
+                    variant.tag()
+                );
+                assert!(
+                    run.ledger.stage_bytes("membership") > 0,
+                    "{}/{}: membership key traffic must be measured",
+                    strategy.name(),
+                    variant.tag()
+                );
+            }
+
+            // gate 3: thread-count invariance of the estimate
+            let sequential = strategy
+                .execute_variant(&mut cluster(1), &data, CombineOp::Sum, variant)
+                .expect("sequential twin");
+            let (seq_estimate, _) = estimate_of(&sequential);
+            assert_eq!(
+                estimate.to_bits(),
+                seq_estimate.to_bits(),
+                "{}/{}: estimate diverges between 1 and {threads} threads",
+                strategy.name(),
+                variant.tag()
+            );
+
+            t.row(row![
+                variant.tag(),
+                strategy.name(),
+                format!("{estimate:.4e}"),
+                format!("{rel:.2e}"),
+                format!("{bound:.2e}"),
+                fmt::bytes(run.ledger.total_bytes()),
+                fmt::bytes(s2)
+            ]);
+            json_fields.push((
+                format!("{}_{}_rel_err", variant.tag(), strategy.name()),
+                Json::num(rel),
+            ));
+            json_fields.push((
+                format!("{}_{}_shuffle_bytes", variant.tag(), strategy.name()),
+                Json::num(run.ledger.total_bytes() as f64),
+            ));
+            if variant.membership_only() && matches!(strategy.name(), "bloom" | "approx") {
+                json_fields.push((
+                    format!("{}_{}_stage2_bytes", variant.tag(), strategy.name()),
+                    Json::num(s2 as f64),
+                ));
+            }
+        }
+    }
+    t.print();
+    println!(
+        "\nmax rel err: exact {max_exact_rel:.2e}, sampled {max_sampled_rel:.2e} \
+         (threads={threads})"
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        let mut fields: Vec<(&str, Json)> = json_fields
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        fields.push(("max_exact_rel_err", Json::num(max_exact_rel)));
+        fields.push(("max_sampled_rel_err", Json::num(max_sampled_rel)));
+        fields.push(("threads", Json::num(threads as f64)));
+        fields.push(("quick_mode", Json::Bool(quick)));
+        Json::update_file(&path, "fig_join_variants", Json::obj(fields))
+            .expect("write BENCH_JSON");
+        println!("wrote fig_join_variants section to {}", path.display());
+    }
+}

@@ -202,6 +202,20 @@ impl ApproxJoinEngine {
                 inputs.len()
             );
         }
+        // the engine's §3.2 budget loop sizes stage-2 sampling for the
+        // inner cross product; non-inner variants run through the session's
+        // strategy dispatch (semi/anti never reach stage 2 at all)
+        if !query.variant.is_inner() {
+            return Err(crate::join::JoinError::Unsupported {
+                strategy: "engine".to_string(),
+                reason: format!(
+                    "the budgeted engine path is inner-join only; run {} \
+                     through the session strategy dispatch",
+                    query.variant.tag()
+                ),
+            }
+            .into());
+        }
 
         // ---- stage 0: join-order optimization. The engine owns ordering
         // on this path (the session front end passes inputs in FROM order
@@ -254,7 +268,16 @@ impl ApproxJoinEngine {
                 // the scalar path's cogroup depends only on the inputs and
                 // the filter geometry, so predicate/projection tags are
                 // empty and every scalar query over the same tables shares
-                cache.filtered(&mut cluster, inputs, &exec_tables, "", "", filter_cfg, prober)?
+                cache.filtered(
+                    &mut cluster,
+                    inputs,
+                    &exec_tables,
+                    "",
+                    "",
+                    query.variant,
+                    filter_cfg,
+                    prober,
+                )?
             }
             None => (
                 filter_and_shuffle(&mut cluster, inputs, filter_cfg, prober)?,

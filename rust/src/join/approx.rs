@@ -186,6 +186,7 @@ pub fn approx_join(
         sampled: true,
         draws,
         filter_report: Some(filter_report),
+        baseline: None,
     })
 }
 

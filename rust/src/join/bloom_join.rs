@@ -22,7 +22,7 @@
 //! [`crate::runtime::ParallelExecutor`], bit-identical to the sequential
 //! path.
 
-use super::{CombineOp, JoinError, JoinRun};
+use super::{CombineOp, JoinError, JoinRun, JoinVariant};
 use crate::bloom::hashing::fold_key;
 use crate::bloom::{BloomFilter, FilterKind, JoinFilter};
 use crate::cluster::tree_reduce::build_dataset_join_filter;
@@ -30,7 +30,7 @@ use crate::cluster::SimCluster;
 use crate::data::Dataset;
 use crate::runtime::CogroupColumns;
 use crate::stats::StratumAgg;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 /// Bloom geometry + kind for the join filter. The default (2^20 bits, 5
@@ -396,6 +396,123 @@ pub fn bloom_join(
         .with_filter_report(report))
 }
 
+/// Semi/anti join on Bloom membership alone (no stage-2 shuffle): stage 1's
+/// join filter decides which keys *may* join, the workers send one 8-byte
+/// key fingerprint per distinct surviving key to the master, and the master
+/// intersects the two surviving key sets. The intersection is **exact**
+/// despite Bloom false positives — a false-positive key of one input
+/// survives only on that input, and the other set contains nothing but real
+/// keys of the other input, so `surv(L) ∩ surv(R) = keys(L) ∩ keys(R)`.
+/// The resolved joinable set broadcasts back and each worker scores its
+/// left-input records locally; no record ever crosses the wire, so the
+/// `ShuffleLedger` shows zero bytes in any shuffle/crossproduct stage.
+pub fn bloom_membership_join(
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    cfg: FilterConfig,
+    variant: JoinVariant,
+    prober: &mut dyn KeyProber,
+) -> Result<JoinRun, JoinError> {
+    assert_eq!(inputs.len(), 2, "membership join is binary");
+    assert!(
+        variant.membership_only(),
+        "bloom_membership_join handles SEMI/ANTI only"
+    );
+    assert!(
+        !cfg.is_auto_sized(),
+        "auto-sized FilterConfig must be resolved against the inputs \
+         (FilterConfig::resolved) before filtering"
+    );
+    let (join_filter, _d_dt) = build_join_filter(cluster, inputs, cfg);
+    let report = join_filter.report();
+
+    let mut s = cluster.stage("membership");
+    // per input: probe locally, then ship one fingerprint per distinct
+    // surviving key to the master (worker 0)
+    let mut surviving: Vec<HashSet<u64>> = Vec::with_capacity(2);
+    for d in inputs {
+        let folded_timed: Vec<(Vec<u32>, f64)> = cluster.exec.map(d.partitions.len(), |j| {
+            let t0 = Instant::now();
+            let keys: Vec<u32> = d.partitions[j].iter().map(|r| fold_key(r.key)).collect();
+            (keys, t0.elapsed().as_secs_f64())
+        });
+        let mut folded: Vec<Vec<u32>> = Vec::with_capacity(folded_timed.len());
+        for (j, (keys, secs)) in folded_timed.into_iter().enumerate() {
+            s.add_compute(cluster.worker_of_partition(j), secs);
+            folded.push(keys);
+        }
+        let mut keep: Vec<Vec<bool>> = Vec::with_capacity(d.partitions.len());
+        for (j, (mask, secs)) in probe_partitions(cluster, &folded, &join_filter, prober)?
+            .into_iter()
+            .enumerate()
+        {
+            s.add_compute(cluster.worker_of_partition(j), secs);
+            keep.push(mask);
+        }
+        let mut set: HashSet<u64> = HashSet::new();
+        for (j, part) in d.partitions.iter().enumerate() {
+            let src = cluster.worker_of_partition(j);
+            for (i, r) in part.iter().enumerate() {
+                if keep[j][i] && set.insert(r.key) {
+                    s.transfer(src, 0, 8);
+                }
+            }
+        }
+        surviving.push(set);
+    }
+    // exact joinable key set at the master (intersection kills every fp)
+    let joinable: HashSet<u64> = surviving[0]
+        .intersection(&surviving[1])
+        .copied()
+        .collect();
+    s.broadcast(0, 8 * joinable.len() as u64);
+
+    // score left-input records against the broadcast set, locally per
+    // partition; SEMI keeps members, ANTI keeps the complement (exact in
+    // both directions: the joinable set is fp-free, and anti members that
+    // failed their own Bloom probe still fail `joinable.contains`)
+    let want_member = variant == JoinVariant::Semi;
+    let left = &inputs[0];
+    let per_part = cluster.exec.map(left.partitions.len(), |j| {
+        let t0 = Instant::now();
+        let mut local: HashMap<u64, StratumAgg> = HashMap::new();
+        let mut rows = 0u64;
+        for r in &left.partitions[j] {
+            if joinable.contains(&r.key) == want_member {
+                let e = local.entry(r.key).or_default();
+                e.population += 1.0;
+                e.push(super::padded_value(op, 0, r.value));
+                rows += 1;
+            }
+        }
+        (local, rows, t0.elapsed().as_secs_f64())
+    });
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    let mut total_rows = 0u64;
+    for (j, (local, rows, secs)) in per_part.into_iter().enumerate() {
+        s.add_compute(cluster.worker_of_partition(j), secs);
+        total_rows += rows;
+        // additive field merge in partition order — a key's rows can span
+        // partitions, and the partial strata carry partial populations
+        // (StratumAgg::merge assumes full-population halves)
+        for (k, agg) in local {
+            let e = strata.entry(k).or_default();
+            e.population += agg.population;
+            e.count += agg.count;
+            e.sum += agg.sum;
+            e.sumsq += agg.sumsq;
+        }
+    }
+    s.add_items(total_rows);
+    s.finish(cluster);
+
+    let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+    Ok(JoinRun::exact(strata, metrics)
+        .with_ledger(ledger)
+        .with_filter_report(report))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +659,41 @@ mod tests {
         // total_pairs is the exact joinable cardinality: 100 shared keys,
         // one record each side
         assert_eq!(f.total_pairs(), 100.0);
+    }
+
+    #[test]
+    fn membership_join_is_exact_with_zero_record_shuffle() {
+        let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]);
+        let b = ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]);
+        let run = |variant: JoinVariant| {
+            bloom_membership_join(
+                &mut cluster(),
+                &[a.clone(), b.clone()],
+                CombineOp::Left,
+                FilterConfig::default(),
+                variant,
+                &mut NativeProber,
+            )
+            .unwrap()
+        };
+        let semi = run(JoinVariant::Semi);
+        // left rows with a joinable key: (1,1.0) (1,2.0) (2,10.0)
+        assert_eq!(semi.output_cardinality(), 3.0);
+        assert!((semi.exact_sum() - 13.0).abs() < 1e-9);
+        let anti = run(JoinVariant::Anti);
+        // the complement: (3,5.0)
+        assert_eq!(anti.output_cardinality(), 1.0);
+        assert!((anti.exact_sum() - 5.0).abs() < 1e-9);
+        for r in [&semi, &anti] {
+            assert!(!r.sampled);
+            // only filter construction + key fingerprints travel: no
+            // record shuffle stage exists at all
+            for stage in ["filter_shuffle", "crossproduct", "shuffle", "sample"] {
+                assert_eq!(r.ledger.stage_bytes(stage), 0, "stage {stage}");
+            }
+            assert!(r.ledger.stage_bytes("membership") > 0);
+            assert!(r.filter_report.is_some());
+        }
     }
 
     #[test]

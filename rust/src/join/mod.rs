@@ -13,6 +13,15 @@
 //!   sampling during the join + CLT/HT estimation, optionally pushing the
 //!   per-stratum aggregation through the AOT `join_agg` artifact.
 //!
+//! Two centralized sample-first baselines from "Joins on Samples" ride in
+//! [`sample_first`] (Bernoulli row sampling and universe key sampling,
+//! joined *after* sampling at the master) — registered alongside the
+//! distributed strategies for quality-vs-cost comparisons, never chosen
+//! by `Auto` planning. Every strategy also answers the non-inner
+//! [`JoinVariant`]s (outer/semi/anti) through
+//! [`JoinStrategy::execute_variant`]; semi/anti ride the stage-1 Bloom
+//! membership with zero stage-2 shuffle.
+//!
 //! All five implement the [`JoinStrategy`] trait ([`strategy`]) and live in
 //! a [`StrategyRegistry`]; the cost-based [`Planner`] ([`planner`]) ranks
 //! them per workload and the [`crate::session::Session`] front end is how
@@ -29,11 +38,13 @@ pub mod native;
 pub mod order;
 pub mod planner;
 pub mod repartition;
+pub mod sample_first;
 pub mod strategy;
 
 pub use join_graph::JoinGraph;
 pub use order::{JoinOrderReport, TableStats};
 pub use planner::{JoinPlan, Planner, StrategyChoice};
+pub use sample_first::{BernoulliJoin, SampleFirstReport, UniverseJoin};
 pub use strategy::{
     ApproxJoin, BloomJoin, BroadcastJoin, CostEstimate, InputStats, JoinStrategy, NativeJoin,
     RepartitionJoin, StrategyRegistry,
@@ -41,8 +52,9 @@ pub use strategy::{
 
 use crate::bloom::FilterReport;
 use crate::cluster::{JoinMetrics, ShuffleLedger};
+use crate::data::Dataset;
 use crate::stats::StratumAgg;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// How the values of the n joined sides combine into the aggregated value
 /// (the expression inside the query's SUM/AVG/...).
@@ -78,6 +90,267 @@ impl CombineOp {
     }
 }
 
+/// Which rows of a two-table equi-join survive into the output.
+///
+/// `Inner` is the n-way join every strategy always supported; the five
+/// non-inner variants are binary (exactly two inputs) and are resolved
+/// *exactly* even on the sampling strategies:
+///
+/// * `Semi` / `Anti` are pure membership questions — the stage-1 Bloom
+///   pre-filter the paper already pays for answers them with **no stage-2
+///   shuffle at all** (a `membership` ledger stage replaces
+///   `filter_shuffle` + `crossproduct` / `sample`). Bloom false positives
+///   are removed by one exact key-set intersection at the master, so the
+///   answer is exact, not approximate.
+/// * `LeftOuter` / `RightOuter` / `FullOuter` run the strategy's inner
+///   join unchanged, then pad every unmatched key of the padded side(s)
+///   as a dedicated fully-enumerated stratum with neutral-fill values
+///   (missing side contributes the combine op's identity). Fully
+///   enumerated strata have zero CLT variance (fpc = 0) and inclusion
+///   probability 1 under Horvitz-Thompson, so approximate outer joins
+///   stay unbiased and their CIs still cover.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum JoinVariant {
+    #[default]
+    Inner,
+    LeftOuter,
+    RightOuter,
+    FullOuter,
+    Semi,
+    Anti,
+}
+
+impl JoinVariant {
+    /// Every variant, in a fixed order (tests and benches sweep this).
+    pub const ALL: [JoinVariant; 6] = [
+        JoinVariant::Inner,
+        JoinVariant::LeftOuter,
+        JoinVariant::RightOuter,
+        JoinVariant::FullOuter,
+        JoinVariant::Semi,
+        JoinVariant::Anti,
+    ];
+
+    /// Short stable tag — enters query fingerprints and serve cache keys.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            JoinVariant::Inner => "inner",
+            JoinVariant::LeftOuter => "left_outer",
+            JoinVariant::RightOuter => "right_outer",
+            JoinVariant::FullOuter => "full_outer",
+            JoinVariant::Semi => "semi",
+            JoinVariant::Anti => "anti",
+        }
+    }
+
+    /// The SQL spelling of the variant's JOIN keyword(s).
+    pub fn sql(&self) -> &'static str {
+        match self {
+            JoinVariant::Inner => "JOIN",
+            JoinVariant::LeftOuter => "LEFT OUTER JOIN",
+            JoinVariant::RightOuter => "RIGHT OUTER JOIN",
+            JoinVariant::FullOuter => "FULL OUTER JOIN",
+            JoinVariant::Semi => "SEMI JOIN",
+            JoinVariant::Anti => "ANTI JOIN",
+        }
+    }
+
+    pub fn is_inner(&self) -> bool {
+        matches!(self, JoinVariant::Inner)
+    }
+
+    /// Does the output keep unmatched LEFT rows (padded)?
+    pub fn pads_left(&self) -> bool {
+        matches!(self, JoinVariant::LeftOuter | JoinVariant::FullOuter)
+    }
+
+    /// Does the output keep unmatched RIGHT rows (padded)?
+    pub fn pads_right(&self) -> bool {
+        matches!(self, JoinVariant::RightOuter | JoinVariant::FullOuter)
+    }
+
+    /// Semi/anti: the output is decided by key membership alone, so the
+    /// stage-1 filter answers it without any stage-2 shuffle.
+    pub fn membership_only(&self) -> bool {
+        matches!(self, JoinVariant::Semi | JoinVariant::Anti)
+    }
+}
+
+impl std::fmt::Display for JoinVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// The combined value of a single-side (padded or membership) row: the
+/// missing side contributes the combine op's identity, so Sum keeps v,
+/// Product keeps v, and Left keeps v only when the surviving side IS the
+/// left input (COUNT-style markers stay 0 for right-padded rows).
+#[inline]
+pub(crate) fn padded_value(op: CombineOp, input: usize, v: f64) -> f64 {
+    match op {
+        CombineOp::Sum | CombineOp::Product => v,
+        CombineOp::Left => {
+            if input == 0 {
+                v
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Non-inner variants are binary joins — reject anything else with a
+/// typed error so fuzzed plans never panic.
+pub(crate) fn require_binary(
+    strategy: &str,
+    n_inputs: usize,
+    variant: JoinVariant,
+) -> Result<(), JoinError> {
+    if n_inputs == 2 {
+        Ok(())
+    } else {
+        Err(JoinError::Unsupported {
+            strategy: strategy.to_string(),
+            reason: format!(
+                "{} join is binary: got {n_inputs} inputs (chain inner joins first)",
+                variant.tag()
+            ),
+        })
+    }
+}
+
+/// The exact per-key key set of a dataset.
+pub(crate) fn key_set(d: &Dataset) -> HashSet<u64> {
+    let mut s = HashSet::new();
+    for part in &d.partitions {
+        for r in part {
+            s.insert(r.key);
+        }
+    }
+    s
+}
+
+/// Exact semi/anti strata, computed sequentially from the raw inputs:
+/// one fully-enumerated stratum per surviving LEFT key (population ==
+/// count == the key's left multiplicity). Deterministic regardless of
+/// thread count — accumulation follows partition/record order.
+pub(crate) fn exact_semi_anti_strata(
+    inputs: &[Dataset],
+    op: CombineOp,
+    variant: JoinVariant,
+) -> HashMap<u64, StratumAgg> {
+    debug_assert!(variant.membership_only() && inputs.len() == 2);
+    let right_keys = key_set(&inputs[1]);
+    let want_member = variant == JoinVariant::Semi;
+    let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+    for part in &inputs[0].partitions {
+        for r in part {
+            if right_keys.contains(&r.key) == want_member {
+                let e = strata.entry(r.key).or_default();
+                e.population += 1.0;
+                e.push(padded_value(op, 0, r.value));
+            }
+        }
+    }
+    strata
+}
+
+/// Pad an inner-join run into an outer-join run: every key of a padded
+/// side that has no partner on the other side becomes a dedicated,
+/// fully-enumerated stratum of neutral-fill values. On the
+/// Horvitz-Thompson path the padded keys get `draws = ∞` so their
+/// inclusion probability is exactly 1 (zero variance contribution).
+pub(crate) fn pad_outer_strata(
+    run: &mut JoinRun,
+    inputs: &[Dataset],
+    op: CombineOp,
+    variant: JoinVariant,
+) {
+    debug_assert!(inputs.len() == 2);
+    let ht = !run.draws.is_empty();
+    let mut pad_side = |side: usize| {
+        let other_keys = key_set(&inputs[1 - side]);
+        for part in &inputs[side].partitions {
+            for r in part {
+                if !other_keys.contains(&r.key) {
+                    let e = run.strata.entry(r.key).or_default();
+                    e.population += 1.0;
+                    e.push(padded_value(op, side, r.value));
+                    if ht {
+                        run.draws.insert(r.key, f64::INFINITY);
+                    }
+                }
+            }
+        }
+    };
+    if variant.pads_left() {
+        pad_side(0);
+    }
+    if variant.pads_right() {
+        pad_side(1);
+    }
+}
+
+/// Resolve a variant's exact per-key strata from one binary cogroup that
+/// holds EVERY key of both inputs (i.e. a full, unfiltered shuffle) — the
+/// streaming window join's exact path. Keys are walked in ascending
+/// order on both the joinable directory and the per-input runs, so the
+/// result is bit-identical for any thread count.
+pub fn variant_strata_from_cogroup(
+    cg: &crate::runtime::columnar::CogroupColumns,
+    op: CombineOp,
+    variant: JoinVariant,
+) -> BTreeMap<u64, StratumAgg> {
+    assert_eq!(cg.n_inputs(), 2, "variant cogroup resolution is binary");
+    let mut strata: BTreeMap<u64, StratumAgg> = BTreeMap::new();
+    // matched keys: the cogroup directory is exactly keys(L) ∩ keys(R)
+    if !variant.membership_only() {
+        let mut sides: Vec<&[f64]> = Vec::new();
+        for i in 0..cg.num_keys() {
+            cg.sides_into(i, &mut sides);
+            strata.insert(cg.key(i), cross_product_agg(&sides, op));
+        }
+    } else if variant == JoinVariant::Semi {
+        for i in 0..cg.num_keys() {
+            let left = cg.side(i, 0);
+            let mut agg = StratumAgg {
+                population: left.len() as f64,
+                ..Default::default()
+            };
+            for &v in left {
+                agg.push(padded_value(op, 0, v));
+            }
+            strata.insert(cg.key(i), agg);
+        }
+    }
+    // single-side keys: walk each input's full run directory and keep
+    // the keys absent from the matched directory
+    let mut pad_input = |input: usize| {
+        for ri in 0..cg.num_runs(input) {
+            let (k, vals) = cg.run(input, ri);
+            if cg.contains_key(k) {
+                continue;
+            }
+            let mut agg = StratumAgg {
+                population: vals.len() as f64,
+                ..Default::default()
+            };
+            for &v in vals {
+                agg.push(padded_value(op, input, v));
+            }
+            strata.insert(k, agg);
+        }
+    };
+    if variant.pads_left() || variant == JoinVariant::Anti {
+        pad_input(0);
+    }
+    if variant.pads_right() {
+        pad_input(1);
+    }
+    strata
+}
+
 /// The outcome of a join execution.
 #[derive(Clone, Debug)]
 pub struct JoinRun {
@@ -97,6 +370,10 @@ pub struct JoinRun {
     /// The join filter this run built (kind, geometry, measured-fill fp
     /// rate) — `None` for the strategies that do not filter.
     pub filter_report: Option<FilterReport>,
+    /// Present only for the centralized sample-first baselines ("Joins on
+    /// Samples"): their estimator is join-level, not stratum-level, so the
+    /// run carries the closed-form estimates alongside the sampled strata.
+    pub baseline: Option<SampleFirstReport>,
 }
 
 impl JoinRun {
@@ -108,6 +385,7 @@ impl JoinRun {
             sampled: false,
             draws: HashMap::new(),
             filter_report: None,
+            baseline: None,
         }
     }
 

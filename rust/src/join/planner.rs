@@ -241,6 +241,7 @@ impl<'a> Planner<'a> {
             let mut e = s.estimate_cost(stats, self.cost);
             e.strategy = s.name().to_string();
             e.approximate = s.is_approximate();
+            e.baseline = s.is_baseline();
             estimates.push(e);
         }
         // feasible first, then by predicted latency; the sort is stable so
@@ -280,7 +281,12 @@ impl<'a> Planner<'a> {
                     });
                 }
                 if self.budget_requires_sampling(budget, stats) {
-                    match estimates.iter().find(|e| e.approximate && e.feasible) {
+                    // baselines never win Auto: they exist for comparison,
+                    // and centralizing a sample is not the paper's plan
+                    match estimates
+                        .iter()
+                        .find(|e| e.approximate && e.feasible && !e.baseline)
+                    {
                         Some(e) => e.strategy.clone(),
                         None => {
                             return Err(JoinError::Unsupported {
@@ -292,7 +298,10 @@ impl<'a> Planner<'a> {
                         }
                     }
                 } else {
-                    match estimates.iter().find(|e| e.feasible && !e.approximate) {
+                    match estimates
+                        .iter()
+                        .find(|e| e.feasible && !e.approximate && !e.baseline)
+                    {
                         Some(e) => e.strategy.clone(),
                         None => {
                             return Err(JoinError::Unsupported {
@@ -468,11 +477,42 @@ mod tests {
     fn explain_lists_every_strategy() {
         let p = plan(&stats_for(0.05), StrategyChoice::Auto, Budget::unbounded()).unwrap();
         let text = p.explain();
-        for name in ["bloom", "repartition", "broadcast", "native", "approx"] {
+        for name in [
+            "bloom",
+            "repartition",
+            "broadcast",
+            "native",
+            "approx",
+            "bernoulli",
+            "universe",
+        ] {
             assert!(text.contains(name), "missing {name} in:\n{text}");
         }
         assert!(text.contains("<- chosen"));
         assert!(text.contains("stages:"));
+    }
+
+    #[test]
+    fn baselines_never_win_auto_but_answer_by_name() {
+        let stats = stats_for(0.2);
+        // error budget forces sampling; the distributed approx strategy
+        // must win even if a baseline predicts cheaper
+        let budget = Budget {
+            latency_secs: None,
+            error: Some(ErrorBudget {
+                bound: 0.1,
+                confidence: 0.95,
+            }),
+        };
+        let p = plan(&stats, StrategyChoice::Auto, budget).unwrap();
+        assert_eq!(p.strategy, "approx");
+        for name in ["bernoulli", "universe"] {
+            let p = plan(&stats, StrategyChoice::named(name), Budget::unbounded()).unwrap();
+            assert_eq!(p.strategy, name);
+            assert!(p.approximate);
+            assert!(p.chosen().baseline);
+            assert_eq!(p.stages, vec!["sample_inputs", "centralized_join"]);
+        }
     }
 
     #[test]

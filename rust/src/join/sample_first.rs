@@ -1,0 +1,720 @@
+//! Centralized sample-first baselines from "Joins on Samples": sample the
+//! *inputs* first, ship the sampled rows to one node, and join there —
+//! the opposite order of the paper's join-then-sample ApproxJoin. Two
+//! samplers:
+//!
+//! * [`BernoulliJoin`] — independent per-row Bernoulli(q) sampling. A join
+//!   output pair survives with probability q², so estimates blow up in
+//!   variance at small q, and sampled rows can never prove a key's
+//!   *absence* — only the inner variant is answerable.
+//! * [`UniverseJoin`] — universe (key) sampling: both inputs keep exactly
+//!   the keys whose seeded hash falls under the fraction-p threshold. The
+//!   sampled join is the true join restricted to sampled keys, so every
+//!   [`JoinVariant`] (outer/semi/anti included) is answerable.
+//!
+//! Both register in the [`super::StrategyRegistry`] as explicit-name-only
+//! baselines ([`super::JoinStrategy::is_baseline`]) for quality-vs-cost
+//! comparison against the distributed strategies; `Auto` planning never
+//! picks them. Their estimators are join-level closed forms, not
+//! per-stratum CLT/HT sums, so runs carry a [`SampleFirstReport`] in
+//! [`JoinRun::baseline`] and the session reads the estimate from there.
+
+use super::strategy::{CostEstimate, InputStats, JoinStrategy};
+use super::{
+    cross_product_agg, padded_value, require_binary, CombineOp, JoinError, JoinRun, JoinVariant,
+};
+use crate::cluster::SimCluster;
+use crate::cost::CostModel;
+use crate::data::Dataset;
+use crate::query::AggFunc;
+use crate::stats::{z_critical, ApproxResult, StratumAgg};
+use crate::util::fmt;
+use crate::util::rng::splitmix64;
+use std::collections::{BTreeMap, HashMap};
+
+/// Map a 64-bit hash to [0,1) with 53 uniform bits.
+#[inline]
+fn u01(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Closed-form join-level estimates of a sample-first run. The SUM and
+/// COUNT estimators are unbiased under the sampler's inclusion
+/// probabilities; AVG is their ratio with a delta-method variance, which
+/// needs the covariance term.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleFirstReport {
+    /// Sampler name (`"bernoulli"` or `"universe"`).
+    pub method: &'static str,
+    /// Row fraction q (Bernoulli) or key fraction p (universe).
+    pub fraction: f64,
+    /// Unbiased estimate of the full-output SUM of combined values.
+    pub est_sum: f64,
+    /// Estimated variance of `est_sum`.
+    pub var_sum: f64,
+    /// Unbiased estimate of the full-output cardinality.
+    pub est_count: f64,
+    /// Estimated variance of `est_count`.
+    pub var_count: f64,
+    /// Estimated covariance of (`est_sum`, `est_count`) — AVG's delta
+    /// method needs it.
+    pub cov_sum_count: f64,
+    /// Sampled input rows the estimate is based on.
+    pub samples: u64,
+}
+
+impl SampleFirstReport {
+    /// Resolve the report into an [`ApproxResult`] for one aggregate at a
+    /// confidence level (normal critical values — the estimators are
+    /// join-level sums, not small-sample stratum means).
+    pub fn result_for(&self, agg: AggFunc, confidence: f64) -> Result<ApproxResult, JoinError> {
+        let z = z_critical(confidence);
+        let (estimate, variance) = match agg {
+            AggFunc::Sum => (self.est_sum, self.var_sum),
+            AggFunc::Count => (self.est_count, self.var_count),
+            AggFunc::Avg => {
+                if self.est_count <= 0.0 {
+                    return Err(JoinError::Unsupported {
+                        strategy: self.method.to_string(),
+                        reason: "sample produced no join output; AVG undefined".to_string(),
+                    });
+                }
+                let r = self.est_sum / self.est_count;
+                // delta method on the ratio of two correlated estimators
+                let var = (self.var_sum - 2.0 * r * self.cov_sum_count
+                    + r * r * self.var_count)
+                    / (self.est_count * self.est_count);
+                (r, var)
+            }
+            AggFunc::Stdev => {
+                return Err(JoinError::Unsupported {
+                    strategy: self.method.to_string(),
+                    reason: "STDEV has no closed-form sample-first estimator".to_string(),
+                })
+            }
+        };
+        Ok(ApproxResult {
+            estimate,
+            error_bound: z * variance.max(0.0).sqrt(),
+            confidence,
+            degrees_of_freedom: f64::INFINITY,
+            samples: self.samples,
+        })
+    }
+}
+
+/// Sampled rows of every input, shipped to the master in (input,
+/// partition, row) order — the honest centralization the ledger prices.
+fn centralize_sampled(
+    cluster: &mut SimCluster,
+    stage: &mut crate::cluster::Stage,
+    inputs: &[Dataset],
+    mut keep: impl FnMut(usize, usize, usize, u64) -> bool,
+) -> (Vec<Vec<crate::data::Record>>, u64) {
+    let mut sampled: Vec<Vec<crate::data::Record>> = Vec::with_capacity(inputs.len());
+    let mut total = 0u64;
+    for (i, d) in inputs.iter().enumerate() {
+        let mut rows = Vec::new();
+        for (j, part) in d.partitions.iter().enumerate() {
+            let src = cluster.worker_of_partition(j);
+            let kept = stage.task(src, || {
+                part.iter()
+                    .enumerate()
+                    .filter(|(ri, r)| keep(i, j, *ri, r.key))
+                    .map(|(_, r)| *r)
+                    .collect::<Vec<_>>()
+            });
+            for _ in &kept {
+                stage.transfer(src, 0, d.record_bytes);
+            }
+            rows.extend(kept);
+        }
+        total += rows.len() as u64;
+        sampled.push(rows);
+    }
+    (sampled, total)
+}
+
+/// Group one input's sampled rows by key, in ascending key order (row
+/// order within a key follows arrival order — deterministic).
+fn by_key(rows: &[crate::data::Record]) -> BTreeMap<u64, Vec<f64>> {
+    let mut m: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+    for r in rows {
+        m.entry(r.key).or_default().push(r.value);
+    }
+    m
+}
+
+/// The sampled join's per-key strata for a variant, computed at the master
+/// over the centralized sample. Binary for the non-inner variants (the
+/// callers enforce it); inner handles n inputs.
+fn sampled_variant_strata(
+    sampled: &[Vec<crate::data::Record>],
+    op: CombineOp,
+    variant: JoinVariant,
+) -> BTreeMap<u64, StratumAgg> {
+    let groups: Vec<BTreeMap<u64, Vec<f64>>> = sampled.iter().map(|r| by_key(r)).collect();
+    let mut strata: BTreeMap<u64, StratumAgg> = BTreeMap::new();
+    if variant.is_inner() {
+        'keys: for (k, left) in &groups[0] {
+            let mut sides: Vec<&[f64]> = Vec::with_capacity(groups.len());
+            sides.push(left.as_slice());
+            for g in &groups[1..] {
+                match g.get(k) {
+                    Some(v) => sides.push(v.as_slice()),
+                    None => continue 'keys,
+                }
+            }
+            strata.insert(*k, cross_product_agg(&sides, op));
+        }
+        return strata;
+    }
+    let (lg, rg) = (&groups[0], &groups[1]);
+    let single_side = |vals: &[f64], input: usize| {
+        let mut agg = StratumAgg {
+            population: vals.len() as f64,
+            ..Default::default()
+        };
+        for &v in vals {
+            agg.push(padded_value(op, input, v));
+        }
+        agg
+    };
+    match variant {
+        JoinVariant::Semi | JoinVariant::Anti => {
+            let want_member = variant == JoinVariant::Semi;
+            for (k, left) in lg {
+                if rg.contains_key(k) == want_member {
+                    strata.insert(*k, single_side(left, 0));
+                }
+            }
+        }
+        _ => {
+            for (k, left) in lg {
+                if let Some(right) = rg.get(k) {
+                    strata.insert(
+                        *k,
+                        cross_product_agg(&[left.as_slice(), right.as_slice()], op),
+                    );
+                }
+            }
+            if variant.pads_left() {
+                for (k, left) in lg {
+                    if !rg.contains_key(k) {
+                        strata.insert(*k, single_side(left, 0));
+                    }
+                }
+            }
+            if variant.pads_right() {
+                for (k, right) in rg {
+                    if !lg.contains_key(k) {
+                        strata.insert(*k, single_side(right, 1));
+                    }
+                }
+            }
+        }
+    }
+    strata
+}
+
+/// Universe (key) sampling baseline: both inputs keep the keys whose
+/// seeded hash lands under the fraction-p threshold, so the sampled join
+/// is the exact join restricted to a p-fraction of the key universe.
+#[derive(Clone, Copy, Debug)]
+pub struct UniverseJoin {
+    /// Key-universe inclusion fraction p in (0, 1].
+    pub fraction: f64,
+    /// Seed of the key-hash threshold predicate.
+    pub seed: u64,
+}
+
+impl Default for UniverseJoin {
+    fn default() -> Self {
+        Self {
+            fraction: 0.1,
+            seed: 0x5EED_u64,
+        }
+    }
+}
+
+impl UniverseJoin {
+    /// The shared inclusion predicate — identical on every input, which is
+    /// what makes key sampling join-compatible.
+    #[inline]
+    pub fn key_sampled(&self, key: u64) -> bool {
+        let mut st = key ^ self.seed;
+        u01(splitmix64(&mut st)) < self.fraction
+    }
+
+    fn run(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        if !variant.is_inner() {
+            require_binary(self.name(), inputs.len(), variant)?;
+        }
+        assert!(inputs.len() >= 2);
+        let p = self.fraction.clamp(f64::MIN_POSITIVE, 1.0);
+        let mut s = cluster.stage("sample_inputs");
+        let (sampled, n_rows) =
+            centralize_sampled(cluster, &mut s, inputs, |_, _, _, key| self.key_sampled(key));
+        s.add_items(n_rows);
+        s.finish(cluster);
+
+        let mut s = cluster.stage("centralized_join");
+        let strata = s.task(0, || sampled_variant_strata(&sampled, op, variant));
+        // per-key Horvitz-Thompson over Poisson key sampling: inclusion
+        // probability p, independent across keys
+        let (mut st1, mut st2, mut sc1, mut sc2, mut stc) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for agg in strata.values() {
+            let (t, c) = (agg.sum, agg.population);
+            st1 += t;
+            st2 += t * t;
+            sc1 += c;
+            sc2 += c * c;
+            stc += t * c;
+        }
+        let scale = (1.0 - p) / (p * p);
+        let report = SampleFirstReport {
+            method: "universe",
+            fraction: p,
+            est_sum: st1 / p,
+            var_sum: scale * st2,
+            est_count: sc1 / p,
+            var_count: scale * sc2,
+            cov_sum_count: scale * stc,
+            samples: n_rows,
+        };
+        s.add_items(strata.len() as u64);
+        s.finish(cluster);
+
+        let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+        Ok(JoinRun {
+            strata: strata.into_iter().collect::<HashMap<_, _>>(),
+            metrics,
+            ledger,
+            sampled: true,
+            draws: HashMap::new(),
+            filter_report: None,
+            baseline: Some(report),
+        })
+    }
+}
+
+impl JoinStrategy for UniverseJoin {
+    fn name(&self) -> &'static str {
+        "universe"
+    }
+
+    fn is_approximate(&self) -> bool {
+        true
+    }
+
+    fn is_baseline(&self) -> bool {
+        true
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        self.run(cluster, inputs, op, JoinVariant::Inner)
+    }
+
+    fn execute_variant(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        self.run(cluster, inputs, op, variant)
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        baseline_cost(
+            stats,
+            cost,
+            self.fraction,
+            self.fraction * stats.est_output_pairs,
+            "universe key sample centralized at the master",
+        )
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec!["sample_inputs".to_string(), "centralized_join".to_string()]
+    }
+}
+
+/// Bernoulli per-row sampling baseline. Inner, binary only: an output pair
+/// needs both of its rows sampled (probability q²), and a sampled row set
+/// cannot certify key absence, so outer/semi/anti are refused with a typed
+/// error rather than a biased answer.
+#[derive(Clone, Copy, Debug)]
+pub struct BernoulliJoin {
+    /// Per-row inclusion probability q in (0, 1].
+    pub fraction: f64,
+    /// Seed of the per-row inclusion predicate.
+    pub seed: u64,
+}
+
+impl Default for BernoulliJoin {
+    fn default() -> Self {
+        Self {
+            fraction: 0.1,
+            seed: 0xB0B_u64,
+        }
+    }
+}
+
+impl BernoulliJoin {
+    /// Deterministic per-row inclusion: hashes the row's (input,
+    /// partition, index) coordinates, so resampling under a different
+    /// thread count keeps the identical sample.
+    #[inline]
+    pub fn row_sampled(&self, input: usize, part: usize, idx: usize) -> bool {
+        let mut st = self.seed
+            ^ ((input as u64) << 58)
+            ^ ((part as u64) << 36)
+            ^ (idx as u64);
+        u01(splitmix64(&mut st)) < self.fraction
+    }
+}
+
+impl JoinStrategy for BernoulliJoin {
+    fn name(&self) -> &'static str {
+        "bernoulli"
+    }
+
+    fn is_approximate(&self) -> bool {
+        true
+    }
+
+    fn is_baseline(&self) -> bool {
+        true
+    }
+
+    fn execute(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+    ) -> Result<JoinRun, JoinError> {
+        if inputs.len() != 2 {
+            return Err(JoinError::Unsupported {
+                strategy: self.name().to_string(),
+                reason: format!(
+                    "bernoulli baseline is a binary join: got {} inputs",
+                    inputs.len()
+                ),
+            });
+        }
+        let q = self.fraction.clamp(f64::MIN_POSITIVE, 1.0);
+        let mut s = cluster.stage("sample_inputs");
+        let (sampled, n_rows) = centralize_sampled(cluster, &mut s, inputs, |i, j, ri, _| {
+            self.row_sampled(i, j, ri)
+        });
+        s.add_items(n_rows);
+        s.finish(cluster);
+
+        let mut s = cluster.stage("centralized_join");
+        let strata = s.task(0, || {
+            sampled_variant_strata(&sampled, op, JoinVariant::Inner)
+        });
+        // unbiased SUM/COUNT over pair-inclusion probability q², with the
+        // "Joins on Samples" covariance correction for output pairs that
+        // share an input row (inclusions correlate through the shared row)
+        let (lg, rg) = (by_key(&sampled[0]), by_key(&sampled[1]));
+        let (mut s1, mut s2, mut c1) = (0.0, 0.0, 0.0);
+        let (mut share_tt, mut share_t1, mut share_11) = (0.0, 0.0, 0.0);
+        let pair_value = |l: f64, r: f64| match op {
+            CombineOp::Sum => l + r,
+            CombineOp::Product => l * r,
+            CombineOp::Left => l,
+        };
+        for (k, left) in &lg {
+            let Some(right) = rg.get(k) else { continue };
+            let (nl, nr) = (left.len() as f64, right.len() as f64);
+            c1 += nl * nr;
+            // row-wise pass: totals + pairs sharing a left row
+            for &lv in left {
+                let (mut row_t, mut row_t2) = (0.0, 0.0);
+                for &rv in right {
+                    let t = pair_value(lv, rv);
+                    s1 += t;
+                    s2 += t * t;
+                    row_t += t;
+                    row_t2 += t * t;
+                }
+                share_tt += row_t * row_t - row_t2;
+                share_t1 += row_t * nr - row_t;
+                share_11 += nr * nr - nr;
+            }
+            // column-wise pass: pairs sharing a right row
+            for &rv in right {
+                let (mut col_t, mut col_t2) = (0.0, 0.0);
+                for &lv in left {
+                    let t = pair_value(lv, rv);
+                    col_t += t;
+                    col_t2 += t * t;
+                }
+                share_tt += col_t * col_t - col_t2;
+                share_t1 += col_t * nl - col_t;
+                share_11 += nl * nl - nl;
+            }
+        }
+        let q2 = q * q;
+        let q4 = q2 * q2;
+        let report = SampleFirstReport {
+            method: "bernoulli",
+            fraction: q,
+            est_sum: s1 / q2,
+            var_sum: s2 * (1.0 - q2) / q4 + share_tt * (1.0 - q) / q4,
+            est_count: c1 / q2,
+            var_count: c1 * (1.0 - q2) / q4 + share_11 * (1.0 - q) / q4,
+            cov_sum_count: s1 * (1.0 - q2) / q4 + share_t1 * (1.0 - q) / q4,
+            samples: n_rows,
+        };
+        s.add_items(c1 as u64);
+        s.finish(cluster);
+
+        let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
+        Ok(JoinRun {
+            strata: strata.into_iter().collect::<HashMap<_, _>>(),
+            metrics,
+            ledger,
+            sampled: true,
+            draws: HashMap::new(),
+            filter_report: None,
+            baseline: Some(report),
+        })
+    }
+
+    fn execute_variant(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        if variant.is_inner() {
+            self.execute(cluster, inputs, op)
+        } else {
+            Err(JoinError::Unsupported {
+                strategy: self.name().to_string(),
+                reason: format!(
+                    "bernoulli row sampling cannot answer {} joins (sampled rows \
+                     cannot prove a key's absence); use the universe baseline",
+                    variant.tag()
+                ),
+            })
+        }
+    }
+
+    fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
+        baseline_cost(
+            stats,
+            cost,
+            self.fraction,
+            self.fraction * self.fraction * stats.est_output_pairs,
+            "bernoulli row sample centralized at the master (pairs survive at q^2)",
+        )
+    }
+
+    fn stage_names(&self, _n_inputs: usize) -> Vec<String> {
+        vec!["sample_inputs".to_string(), "centralized_join".to_string()]
+    }
+}
+
+/// Shared cost shape of both baselines: a fraction of every input crosses
+/// the network to one node, and that node joins alone.
+fn baseline_cost(
+    stats: &InputStats,
+    cost: &CostModel,
+    fraction: f64,
+    joined_pairs: f64,
+    what: &str,
+) -> CostEstimate {
+    let k = stats.workers as f64;
+    let centralize = fraction * stats.total_bytes() as f64 * (k - 1.0) / k;
+    let pairs = joined_pairs + fraction * stats.total_rows() as f64;
+    let mut e = CostEstimate::build(
+        stats,
+        cost,
+        centralize,
+        pairs,
+        2,
+        format!("{what}: {} to one worker", fmt::bytes(centralize as u64)),
+    );
+    e.approximate = true;
+    e.baseline = true;
+    // the whole sample is resident on the master
+    e.peak_intermediate_bytes = fraction * stats.total_bytes() as f64;
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TimeModel;
+    use crate::data::Record;
+    use crate::join::native::native_join;
+
+    fn cluster() -> SimCluster {
+        SimCluster::new(
+            4,
+            TimeModel {
+                bandwidth: 1e9,
+                stage_latency: 0.0,
+                compute_scale: 1.0,
+            },
+        )
+    }
+
+    fn ds(name: &str, recs: Vec<(u64, f64)>) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            name,
+            recs.into_iter().map(|(k, v)| Record::new(k, v)).collect(),
+            4,
+            100,
+        )
+    }
+
+    fn wide_inputs() -> Vec<Dataset> {
+        let a: Vec<(u64, f64)> = (0..4000u64).map(|i| (i % 800, (i % 13) as f64)).collect();
+        let b: Vec<(u64, f64)> = (0..3000u64)
+            .map(|i| (i % 1000, (i % 7) as f64))
+            .collect();
+        vec![ds("a", a), ds("b", b)]
+    }
+
+    #[test]
+    fn full_fraction_universe_matches_exact_join() {
+        let ins = wide_inputs();
+        let u = UniverseJoin {
+            fraction: 1.0,
+            seed: 1,
+        };
+        let run = u.execute(&mut cluster(), &ins, CombineOp::Sum).unwrap();
+        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX).unwrap();
+        let b = run.baseline.expect("baseline report");
+        assert!((b.est_sum - nat.exact_sum()).abs() < 1e-6 * nat.exact_sum().abs());
+        assert!((b.est_count - nat.output_cardinality()).abs() < 1e-9);
+        // p = 1 leaves no sampling variance
+        assert!(b.var_sum.abs() < 1e-9);
+        assert!(b.var_count.abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_fraction_bernoulli_matches_exact_join() {
+        let ins = wide_inputs();
+        let bj = BernoulliJoin {
+            fraction: 1.0,
+            seed: 1,
+        };
+        let run = bj.execute(&mut cluster(), &ins, CombineOp::Sum).unwrap();
+        let nat = native_join(&mut cluster(), &ins, CombineOp::Sum, u64::MAX).unwrap();
+        let b = run.baseline.expect("baseline report");
+        assert!((b.est_sum - nat.exact_sum()).abs() < 1e-6 * nat.exact_sum().abs());
+        assert!((b.est_count - nat.output_cardinality()).abs() < 1e-9);
+        assert!(b.var_sum.abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampling_moves_roughly_the_sampled_fraction() {
+        let ins = wide_inputs();
+        let u = UniverseJoin {
+            fraction: 0.2,
+            seed: 3,
+        };
+        let run = u.execute(&mut cluster(), &ins, CombineOp::Sum).unwrap();
+        let moved = run.ledger.stage_bytes("sample_inputs") as f64;
+        // <= total bytes * fraction * 2 slack (hash predicate noise, and
+        // worker-0-local rows are free so it can also undershoot)
+        let total = 7000.0 * 100.0;
+        assert!(moved < total * 0.4, "moved {moved}");
+        assert!(moved > total * 0.05, "moved {moved}");
+        assert!(run.sampled);
+        assert!(run.baseline.is_some());
+    }
+
+    #[test]
+    fn universe_answers_variants_bernoulli_refuses() {
+        let a = ds("a", vec![(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]);
+        let b = ds("b", vec![(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]);
+        let ins = vec![a, b];
+        let u = UniverseJoin {
+            fraction: 1.0,
+            seed: 9,
+        };
+        let semi = u
+            .execute_variant(&mut cluster(), &ins, CombineOp::Left, JoinVariant::Semi)
+            .unwrap();
+        let br = semi.baseline.unwrap();
+        assert!((br.est_count - 3.0).abs() < 1e-9);
+        assert!((br.est_sum - 13.0).abs() < 1e-9);
+        let anti = u
+            .execute_variant(&mut cluster(), &ins, CombineOp::Left, JoinVariant::Anti)
+            .unwrap();
+        assert!((anti.baseline.unwrap().est_sum - 5.0).abs() < 1e-9);
+        let fo = u
+            .execute_variant(&mut cluster(), &ins, CombineOp::Sum, JoinVariant::FullOuter)
+            .unwrap();
+        assert!((fo.baseline.unwrap().est_sum - 729.0).abs() < 1e-9);
+
+        let bj = BernoulliJoin::default();
+        assert!(matches!(
+            bj.execute_variant(&mut cluster(), &ins, CombineOp::Left, JoinVariant::Semi),
+            Err(JoinError::Unsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn report_resolves_aggregates() {
+        let r = SampleFirstReport {
+            method: "universe",
+            fraction: 0.5,
+            est_sum: 100.0,
+            var_sum: 4.0,
+            est_count: 50.0,
+            var_count: 1.0,
+            cov_sum_count: 1.5,
+            samples: 10,
+        };
+        let sum = r.result_for(AggFunc::Sum, 0.95).unwrap();
+        assert_eq!(sum.estimate, 100.0);
+        assert!((sum.error_bound - z_critical(0.95) * 2.0).abs() < 1e-12);
+        let avg = r.result_for(AggFunc::Avg, 0.95).unwrap();
+        assert!((avg.estimate - 2.0).abs() < 1e-12);
+        assert!(avg.error_bound > 0.0);
+        assert!(matches!(
+            r.result_for(AggFunc::Stdev, 0.95),
+            Err(JoinError::Unsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn baseline_cost_is_flagged_and_fraction_scaled() {
+        let ins = wide_inputs();
+        let stats = InputStats::collect(&ins, 4, &TimeModel::default());
+        let cost = CostModel::default();
+        let small = UniverseJoin {
+            fraction: 0.1,
+            seed: 0,
+        }
+        .estimate_cost(&stats, &cost);
+        let big = UniverseJoin {
+            fraction: 0.9,
+            seed: 0,
+        }
+        .estimate_cost(&stats, &cost);
+        assert!(small.baseline && big.baseline);
+        assert!(small.approximate);
+        assert!(small.shuffle_bytes < big.shuffle_bytes);
+    }
+}

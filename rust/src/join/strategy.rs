@@ -13,11 +13,12 @@
 //! code path.
 
 use super::approx::{approx_join, ApproxConfig, BatchAggregator, NativeAggregator, SamplingParams};
-use super::bloom_join::{bloom_join, FilterConfig, KeyProber, NativeProber};
+use super::bloom_join::{bloom_join, bloom_membership_join, FilterConfig, KeyProber, NativeProber};
 use super::broadcast::broadcast_join;
 use super::native::{native_join, DEFAULT_MEMORY_BUDGET};
 use super::repartition::repartition_join;
-use super::{CombineOp, JoinError, JoinRun};
+use super::sample_first::{BernoulliJoin, UniverseJoin};
+use super::{CombineOp, JoinError, JoinRun, JoinVariant};
 use crate::cluster::{SimCluster, TimeModel};
 use crate::cost::CostModel;
 use crate::data::Dataset;
@@ -166,6 +167,9 @@ pub struct CostEstimate {
     pub strategy: String,
     /// Whether this strategy returns a sampled estimate.
     pub approximate: bool,
+    /// Whether this strategy is a centralized sample-first baseline —
+    /// never chosen by `Auto` planning, only by explicit name.
+    pub baseline: bool,
     /// False when the strategy is predicted to fail on these inputs
     /// (e.g. native-join intermediates exceeding the memory budget).
     pub feasible: bool,
@@ -183,7 +187,7 @@ pub struct CostEstimate {
 }
 
 impl CostEstimate {
-    fn build(
+    pub(crate) fn build(
         stats: &InputStats,
         cost: &CostModel,
         shuffle_bytes: f64,
@@ -198,6 +202,7 @@ impl CostEstimate {
         Self {
             strategy: String::new(),
             approximate: false,
+            baseline: false,
             feasible: true,
             shuffle_bytes,
             compute_pairs,
@@ -229,6 +234,24 @@ pub trait JoinStrategy {
         op: CombineOp,
     ) -> Result<JoinRun, JoinError>;
 
+    /// Run a specific [`JoinVariant`]. `Inner` delegates to
+    /// [`JoinStrategy::execute`] unchanged (n-way); the non-inner variants
+    /// are binary joins. The default implementation resolves outer
+    /// variants by running the inner join and padding each unmatched key
+    /// of the padded side(s) as an exact neutral-fill stratum, and
+    /// semi/anti by the exact key-set membership; the Bloom-filtering
+    /// strategies override semi/anti to answer them from stage 1 alone —
+    /// zero stage-2 shuffle, visible in the returned ledger.
+    fn execute_variant(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        run_variant(self, cluster, inputs, op, variant)
+    }
+
     /// Predict this strategy's cost on inputs described by `stats`.
     fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate;
 
@@ -237,8 +260,45 @@ pub trait JoinStrategy {
         false
     }
 
+    /// Whether this strategy is a centralized sample-first baseline
+    /// ("Joins on Samples") — registered for quality-vs-cost comparison,
+    /// skipped by `Auto` planning.
+    fn is_baseline(&self) -> bool {
+        false
+    }
+
     /// The stage names `execute` records, for plan explanation.
     fn stage_names(&self, n_inputs: usize) -> Vec<String>;
+}
+
+/// The default [`JoinStrategy::execute_variant`] body, shared so overrides
+/// can fall back to it for the variants they do not specialize.
+pub(crate) fn run_variant<S: JoinStrategy + ?Sized>(
+    s: &S,
+    cluster: &mut SimCluster,
+    inputs: &[Dataset],
+    op: CombineOp,
+    variant: JoinVariant,
+) -> Result<JoinRun, JoinError> {
+    match variant {
+        JoinVariant::Inner => s.execute(cluster, inputs, op),
+        JoinVariant::Semi | JoinVariant::Anti => {
+            super::require_binary(s.name(), inputs.len(), variant)?;
+            // pay the strategy's usual data movement, then reduce the run
+            // to the membership answer: exact key sets decide stratum fate
+            let mut run = s.execute(cluster, inputs, op)?;
+            run.strata = super::exact_semi_anti_strata(inputs, op, variant);
+            run.sampled = false;
+            run.draws.clear();
+            Ok(run)
+        }
+        JoinVariant::LeftOuter | JoinVariant::RightOuter | JoinVariant::FullOuter => {
+            super::require_binary(s.name(), inputs.len(), variant)?;
+            let mut run = s.execute(cluster, inputs, op)?;
+            super::pad_outer_strata(&mut run, inputs, op, variant);
+            Ok(run)
+        }
+    }
 }
 
 /// Native Spark RDD join: chained binary cogroups, materialized
@@ -473,6 +533,28 @@ impl JoinStrategy for BloomJoin {
         )
     }
 
+    fn execute_variant(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        if variant.membership_only() {
+            super::require_binary(self.name(), inputs.len(), variant)?;
+            bloom_membership_join(
+                cluster,
+                inputs,
+                op,
+                self.filter_config(inputs),
+                variant,
+                &mut NativeProber,
+            )
+        } else {
+            run_variant(self, cluster, inputs, op, variant)
+        }
+    }
+
     fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
         let filter_bytes = self.filter_traffic_bytes(stats);
         // every record is probed once; priced like one cross-product pair
@@ -581,6 +663,27 @@ impl JoinStrategy for ApproxJoin {
         )
     }
 
+    fn execute_variant(
+        &self,
+        cluster: &mut SimCluster,
+        inputs: &[Dataset],
+        op: CombineOp,
+        variant: JoinVariant,
+    ) -> Result<JoinRun, JoinError> {
+        if variant.membership_only() {
+            // semi/anti need no stage-2 sampling at all: the stage-1
+            // membership answer is already exact
+            super::require_binary(self.name(), inputs.len(), variant)?;
+            let filter = self
+                .filter
+                .map(|f| f.resolved(inputs, self.fp_rate))
+                .unwrap_or_else(|| FilterConfig::for_inputs(inputs, self.fp_rate));
+            bloom_membership_join(cluster, inputs, op, filter, variant, &mut NativeProber)
+        } else {
+            run_variant(self, cluster, inputs, op, variant)
+        }
+    }
+
     fn estimate_cost(&self, stats: &InputStats, cost: &CostModel) -> CostEstimate {
         let bloom = BloomJoin {
             fp_rate: self.fp_rate,
@@ -625,7 +728,8 @@ impl StrategyRegistry {
         Self { items: Vec::new() }
     }
 
-    /// All five paper strategies with default configurations. Order is the
+    /// All five paper strategies with default configurations, plus the
+    /// two sample-first baselines (explicit-name only). Order is the
     /// planner's tie-break: bloom, repartition, broadcast, native, approx.
     pub fn with_defaults() -> Self {
         let mut r = Self::empty();
@@ -634,6 +738,8 @@ impl StrategyRegistry {
         r.register(Box::new(BroadcastJoin));
         r.register(Box::new(NativeJoin::default()));
         r.register(Box::new(ApproxJoin::default()));
+        r.register(Box::new(BernoulliJoin::default()));
+        r.register(Box::new(UniverseJoin::default()));
         r
     }
 
@@ -711,22 +817,37 @@ mod tests {
     #[test]
     fn registry_defaults_and_lookup() {
         let r = StrategyRegistry::with_defaults();
-        assert_eq!(r.len(), 5);
+        assert_eq!(r.len(), 7);
         assert_eq!(
             r.names(),
-            vec!["bloom", "repartition", "broadcast", "native", "approx"]
+            vec![
+                "bloom",
+                "repartition",
+                "broadcast",
+                "native",
+                "approx",
+                "bernoulli",
+                "universe"
+            ]
         );
         assert!(r.get("bloom").is_some());
         assert!(r.get("hash").is_none());
         assert!(r.get("approx").unwrap().is_approximate());
         assert!(!r.get("bloom").unwrap().is_approximate());
+        // the sample-first baselines are approximate AND baseline-flagged
+        for name in ["bernoulli", "universe"] {
+            let s = r.get(name).unwrap();
+            assert!(s.is_approximate(), "{name}");
+            assert!(s.is_baseline(), "{name}");
+        }
+        assert!(!r.get("approx").unwrap().is_baseline());
     }
 
     #[test]
     fn registry_register_replaces_by_name() {
         let mut r = StrategyRegistry::with_defaults();
         r.register(Box::new(NativeJoin { memory_budget: 7 }));
-        assert_eq!(r.len(), 5);
+        assert_eq!(r.len(), 7);
         let e = r.get("native").unwrap().estimate_cost(
             &InputStats::collect(&inputs(), 4, &TimeModel::default()),
             &CostModel::default(),
@@ -743,7 +864,14 @@ mod tests {
             .filter(|s| s.is_approximate())
             .map(|s| s.name())
             .collect();
-        assert_eq!(approx, vec!["approx"]);
+        assert_eq!(approx, vec!["approx", "bernoulli", "universe"]);
+        // only the baselines carry the baseline flag
+        let baselines: Vec<&str> = r
+            .iter()
+            .filter(|s| s.is_baseline())
+            .map(|s| s.name())
+            .collect();
+        assert_eq!(baselines, vec!["bernoulli", "universe"]);
     }
 
     #[test]
@@ -760,6 +888,59 @@ mod tests {
         for (name, sum, card) in &sums {
             assert!((sum - 723.0).abs() < 1e-9, "{name}: {sum}");
             assert_eq!(*card, 4.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn variant_execution_through_the_trait() {
+        use super::super::JoinVariant as V;
+        let ins = inputs();
+        let r = StrategyRegistry::with_defaults();
+        // every exact strategy resolves every variant to the same answer
+        for s in r.iter().filter(|s| !s.is_approximate()) {
+            let semi = s
+                .execute_variant(&mut cluster(), &ins, CombineOp::Left, V::Semi)
+                .unwrap();
+            assert_eq!(semi.output_cardinality(), 3.0, "{} semi", s.name());
+            assert!((semi.exact_sum() - 13.0).abs() < 1e-9, "{} semi", s.name());
+            let anti = s
+                .execute_variant(&mut cluster(), &ins, CombineOp::Left, V::Anti)
+                .unwrap();
+            assert_eq!(anti.output_cardinality(), 1.0, "{} anti", s.name());
+            assert!((anti.exact_sum() - 5.0).abs() < 1e-9, "{} anti", s.name());
+            // inner SUM 723; left pads a's key 3 (+5); full also pads b's
+            // key 9 (+1)
+            let lo = s
+                .execute_variant(&mut cluster(), &ins, CombineOp::Sum, V::LeftOuter)
+                .unwrap();
+            assert!((lo.exact_sum() - 728.0).abs() < 1e-9, "{} louter", s.name());
+            let fo = s
+                .execute_variant(&mut cluster(), &ins, CombineOp::Sum, V::FullOuter)
+                .unwrap();
+            assert!((fo.exact_sum() - 729.0).abs() < 1e-9, "{} fouter", s.name());
+            assert_eq!(fo.output_cardinality(), 6.0, "{} fouter", s.name());
+            // non-inner variants are binary: typed error on 3 inputs
+            let three = vec![ins[0].clone(), ins[1].clone(), ins[0].clone()];
+            assert!(matches!(
+                s.execute_variant(&mut cluster(), &three, CombineOp::Sum, V::Semi),
+                Err(JoinError::Unsupported { .. })
+            ));
+        }
+        // the Bloom path answers semi/anti from stage 1: a membership
+        // stage replaces filter_shuffle + crossproduct entirely
+        for name in ["bloom", "approx"] {
+            let run = r
+                .get(name)
+                .unwrap()
+                .execute_variant(&mut cluster(), &ins, CombineOp::Left, V::Semi)
+                .unwrap();
+            assert!(!run.sampled, "{name}");
+            let stages: Vec<&str> =
+                run.ledger.stages.iter().map(|s| s.stage.as_str()).collect();
+            assert!(stages.contains(&"membership"), "{name}: {stages:?}");
+            for gone in ["filter_shuffle", "crossproduct", "sample", "shuffle"] {
+                assert!(!stages.contains(&gone), "{name} still runs {gone}");
+            }
         }
     }
 

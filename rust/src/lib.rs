@@ -99,6 +99,34 @@
 //! [`session::StreamingSession`], the `approxjoin stream` CLI subcommand,
 //! `examples/streaming_windows.rs`, and the `fig_stream_windows` bench.
 //!
+//! ## Join variants & sample-first baselines
+//!
+//! Beyond the inner equi-join, every strategy answers the binary variants
+//! of [`join::JoinVariant`] through `JoinStrategy::execute_variant`:
+//! `FROM a LEFT/RIGHT/FULL OUTER JOIN b ON a.k = b.k` pads each unmatched
+//! key as a dedicated stratum (neutral-fill values via the combine op, so
+//! padded estimates stay bit-identical at any thread count), and
+//! `SEMI / ANTI JOIN` resolve from **stage-1 Bloom membership alone** — an
+//! exact key-set intersection at the master cancels the filter's false
+//! positives, the `membership` stage ships 8 bytes per distinct surviving
+//! key, and the measured [`cluster::ShuffleLedger`] shows *zero* stage-2
+//! shuffle bytes (no `filter_shuffle` / `shuffle` / `crossproduct` /
+//! `sample` stages at all). The streaming operator answers the same
+//! variants per window on its exact unfiltered path
+//! (`StreamConfig::variant`). Alongside the sample-*during*-the-join
+//! pipeline, the registry carries the centralized sample-*first* baselines
+//! of "Joins on Samples": [`join::BernoulliJoin`] (row-level sampling,
+//! inner only — a sampled row cannot prove a key's absence) and
+//! [`join::UniverseJoin`] (shared-hash key sampling, all variants), each
+//! shipping its sample to the master, joining there, and answering through
+//! its own closed-form estimator — they never win `Auto` planning, but are
+//! selectable by name for quality-vs-cost comparisons
+//! (`benches/fig_join_variants.rs`). The exact twins live in
+//! [`testkit::oracle::ExactJoinOracle`], which `tests/join_variants.rs`
+//! uses to check differential algebra identities (left outer = inner +
+//! anti-left pads; anti = semi's complement; full outer = left ∪ right)
+//! and CI coverage for every variant.
+//!
 //! ## Relational front end
 //!
 //! The [`relation`] module generalizes the two-column `Dataset` into

@@ -57,11 +57,13 @@ fn main() {
 fn print_help() {
     println!(
         "approxjoin — approximate distributed joins behind a cost-based planner\n\
-         (JoinStrategy trait: native | repartition | broadcast | bloom | approx)\n\n\
+         (JoinStrategy trait: native | repartition | broadcast | bloom | approx,\n\
+         plus the centralized sample-first baselines bernoulli | universe)\n\n\
          USAGE: approxjoin <query|explain|compare|stream|serve|profile|simulate> [flags]\n\n\
          query    --sql <QUERY> [--data <SPEC>] [--workers N] [--threads T]\n\
          \u{20}         [--estimator clt|ht] [--blocked-filter]\n\
-         \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx]\n\
+         \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx|\n\
+         \u{20}          bernoulli|universe]\n\
          explain  --sql <QUERY> [--data <SPEC>] [--workers N] [--strategy <S>]\n\
          \u{20}         prints the JoinPlan: input statistics, chosen strategy and\n\
          \u{20}         the full cost ranking, without executing the join\n\
@@ -71,7 +73,7 @@ fn print_help() {
          stream   [--batches N] [--window W] [--slide S] [--events N]\n\
          \u{20}         [--overlap F] [--fraction F] [--estimator clt|ht]\n\
          \u{20}         [--workers N] [--threads T] [--seed S] [--unfiltered]\n\
-         \u{20}         [--blocked-filter]\n\
+         \u{20}         [--blocked-filter] [--variant inner|left|right|full|semi|anti]\n\
          \u{20}         windowed streaming join over the unbounded event\n\
          \u{20}         generator: incremental Bloom sketching (expired tuples\n\
          \u{20}         deleted, never rebuilt), eviction-aware per-stratum\n\
@@ -105,6 +107,16 @@ fn print_help() {
          model (--strategy auto, the default); budget clauses in the query\n\
          (WITHIN ... SECONDS, ERROR ... CONFIDENCE ...) route to the sampled\n\
          ApproxJoin pipeline.\n\n\
+         JOIN VARIANTS: the FROM clause takes explicit binary variants —\n\
+         \u{20}  FROM a LEFT OUTER JOIN b ON a.k = b.k   (also RIGHT / FULL)\n\
+         \u{20}  FROM a SEMI JOIN b ON a.k = b.k         (also ANTI)\n\
+         Outer variants pad unmatched keys as dedicated strata; SEMI/ANTI\n\
+         resolve from stage-1 Bloom membership alone — no stage-2 shuffle.\n\
+         Non-inner variants are exactly binary, with no predicates or\n\
+         GROUP BY. The sample-first baselines (--strategy bernoulli or\n\
+         universe) sample each input first and join centrally at the\n\
+         master — the \"Joins on Samples\" comparison point; universe\n\
+         answers every variant, bernoulli inner only.\n\n\
          RELATIONAL QUERIES: WHERE takes AND-ed selection predicates over\n\
          any column (pushed below the join, so Bloom sketching sees\n\
          post-filter keys only), GROUP BY returns one estimate \u{b1} CI per\n\
@@ -306,8 +318,18 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         if session.has_runtime() { "xla/pjrt" } else { "native" }
     );
 
+    let variant = q.variant;
     let out = session.query(q).strategy(choice).run()?;
-    println!("strategy: {}   mode: {:?}", out.strategy, out.mode);
+    if variant.is_inner() {
+        println!("strategy: {}   mode: {:?}", out.strategy, out.mode);
+    } else {
+        println!(
+            "strategy: {}   mode: {:?}   variant: {}",
+            out.strategy,
+            out.mode,
+            variant.tag()
+        );
+    }
     if let Some(order) = &out.join_order {
         println!("join order: {}", order.render_inline());
     }
@@ -445,7 +467,11 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
         let est_bytes = fmt::bytes(est.shuffle_bytes as u64);
         match strategy.execute(&mut mk(), &inputs, CombineOp::Sum) {
             Ok(run) => {
-                let sum = if run.sampled {
+                let sum = if let Some(report) = &run.baseline {
+                    // sample-first baselines carry their own join-level
+                    // closed-form estimator
+                    report.est_sum
+                } else if run.sampled {
                     // sampled strategies report the stratified estimate
                     approxjoin::stats::clt_sum(&run.strata_vec(), 0.95).estimate
                 } else {
@@ -502,6 +528,17 @@ fn cmd_stream(args: &[String]) -> anyhow::Result<()> {
         _ => approxjoin::stats::EstimatorKind::Clt,
     };
     let unfiltered = args.iter().any(|a| a == "--unfiltered");
+    let variant = match flag(args, "--variant").as_deref() {
+        None | Some("inner") => approxjoin::join::JoinVariant::Inner,
+        Some("left") => approxjoin::join::JoinVariant::LeftOuter,
+        Some("right") => approxjoin::join::JoinVariant::RightOuter,
+        Some("full") => approxjoin::join::JoinVariant::FullOuter,
+        Some("semi") => approxjoin::join::JoinVariant::Semi,
+        Some("anti") => approxjoin::join::JoinVariant::Anti,
+        Some(other) => anyhow::bail!(
+            "unknown --variant {other} (try inner|left|right|full|semi|anti)"
+        ),
+    };
 
     let mut source = EventStream::new(EventStreamSpec {
         events_per_batch: events,
@@ -522,14 +559,24 @@ fn cmd_stream(args: &[String]) -> anyhow::Result<()> {
     if unfiltered {
         session = session.unfiltered();
     }
+    if !variant.is_inner() {
+        // switches the stream onto the exact unfiltered path: padding /
+        // complementing needs every window record at the cogroup
+        session = session.variant(variant);
+    }
     println!(
         "streaming: {} workers, {} threads, window {wsize}x{slide} batches, \
-         {events} events/batch/input, overlap {}, fraction {}, {}",
+         {events} events/batch/input, overlap {}, fraction {}, {}, variant {}",
         workers,
         threads,
         fmt::pct(overlap),
         fmt::pct(fraction),
-        if unfiltered { "UNFILTERED baseline" } else { "bloom-filtered" }
+        if unfiltered || !variant.is_inner() {
+            "UNFILTERED baseline"
+        } else {
+            "bloom-filtered"
+        },
+        variant.tag()
     );
 
     let run = session.run(&mut source, batches);

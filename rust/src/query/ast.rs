@@ -1,7 +1,7 @@
 //! Query AST: aggregate(s)-over-equi-join with selection predicates, an
 //! optional GROUP BY, and a query execution budget.
 
-use crate::join::CombineOp;
+use crate::join::{CombineOp, JoinVariant};
 use crate::relation::{AggExpr, ColumnRef, Predicate};
 
 /// Algebraic aggregation functions the paper supports (§2).
@@ -80,6 +80,10 @@ pub struct Query {
     pub predicates: Vec<Predicate>,
     /// GROUP BY column, if any.
     pub group_by: Option<ColumnRef>,
+    /// Join variant. `Inner` for comma-FROM and plain `JOIN` queries; the
+    /// non-inner variants are binary and come from the explicit
+    /// `LEFT/RIGHT/FULL OUTER | SEMI | ANTI JOIN` grammar.
+    pub variant: JoinVariant,
 }
 
 impl Query {
@@ -107,7 +111,14 @@ impl Query {
             }],
             predicates: Vec::new(),
             group_by: None,
+            variant: JoinVariant::Inner,
         }
+    }
+
+    /// Builder: set the join variant (binary joins only for non-inner).
+    pub fn with_variant(mut self, variant: JoinVariant) -> Self {
+        self.variant = variant;
+        self
     }
 
     /// Whether this query needs the relational front end: predicates,
@@ -147,6 +158,10 @@ impl Query {
             for a in &self.aggregates {
                 fp.push_str(&format!(";a={}", a.render()));
             }
+        }
+        // inner joins keep the exact pre-variant fingerprint byte-stable
+        if !self.variant.is_inner() {
+            fp.push_str(&format!(";v={}", self.variant.tag()));
         }
         fp
     }
@@ -219,6 +234,16 @@ mod tests {
         let mut filtered2 = filtered.clone();
         filtered2.predicates[0].literal = 6.0;
         assert_ne!(filtered.fingerprint(), filtered2.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_covers_variant_but_inner_stays_legacy() {
+        let plain = base();
+        assert_eq!(plain.fingerprint(), "SUM:Sum:a,b:k");
+        let semi = plain.clone().with_variant(JoinVariant::Semi);
+        assert!(semi.fingerprint().ends_with(";v=semi"));
+        let louter = plain.clone().with_variant(JoinVariant::LeftOuter);
+        assert_ne!(semi.fingerprint(), louter.fingerprint());
     }
 
     #[test]

@@ -5,13 +5,20 @@
 //! Grammar (case-insensitive keywords):
 //!
 //! ```text
-//! query    := SELECT selects FROM tables WHERE conj group? budget?
+//! query    := SELECT selects FROM from (WHERE conj)? group? budget?
 //! selects  := item (',' item)*
 //! item     := agg '(' expr ')' (AS ident)? | colref
 //! agg      := SUM | AVG | COUNT | STDEV
 //! expr     := colref (('+' | '*') colref)* | '*'
 //! colref   := ident ('.' ident)?
-//! tables   := ident (',' ident)*
+//! from     := ident (',' ident)*            -- comma list: inner join
+//!           | ident joined+                 -- explicit JOIN clauses
+//! joined   := variant ident (ON colref '=' colref)?
+//! variant  := JOIN | INNER JOIN
+//!           | LEFT  OUTER? JOIN
+//!           | RIGHT OUTER? JOIN
+//!           | FULL  OUTER? JOIN
+//!           | SEMI JOIN | ANTI JOIN
 //! conj     := cond (AND cond)*
 //! cond     := colref ('=' colref)+          -- join chain
 //!           | colref cmp number             -- selection predicate
@@ -24,10 +31,14 @@
 //!
 //! A bare (unqualified) column reference resolves against the registered
 //! schemas at lowering time. Bare items in the SELECT list must name the
-//! GROUP BY column (the echoed group key).
+//! GROUP BY column (the echoed group key). WHERE may be omitted only when
+//! every JOIN clause carries an ON condition. The non-inner variants
+//! (outer/semi/anti) are binary joins: exactly two tables, one unaliased
+//! aggregate, no predicates or GROUP BY; SEMI/ANTI aggregates may only
+//! reference the left table (the output has no right-side columns).
 
 use super::ast::{AggFunc, Budget, ErrorBudget, Query};
-use crate::join::CombineOp;
+use crate::join::{CombineOp, JoinVariant};
 use crate::relation::{AggExpr, CmpOp, ColumnRef, Predicate};
 use anyhow::{anyhow, bail, Result};
 
@@ -195,6 +206,55 @@ fn agg_func(name: &str) -> Option<AggFunc> {
     }
 }
 
+/// If the next tokens start a JOIN clause, consume through the `JOIN`
+/// keyword and return the variant; `None` leaves the cursor untouched.
+/// `LEFT SEMI JOIN` / `LEFT ANTI JOIN` (the Spark spellings) are rejected
+/// with a pointed error rather than mis-parsing.
+fn try_join_variant(p: &mut P) -> Result<Option<JoinVariant>> {
+    let word = |p: &P| match p.peek() {
+        Some(Tok::Ident(s)) => Some(s.to_ascii_uppercase()),
+        _ => None,
+    };
+    let v = match word(p).as_deref() {
+        Some("JOIN") => {
+            p.keyword("JOIN")?;
+            JoinVariant::Inner
+        }
+        Some("INNER") => {
+            p.keyword("INNER")?;
+            p.keyword("JOIN")?;
+            JoinVariant::Inner
+        }
+        Some(side @ ("LEFT" | "RIGHT" | "FULL")) => {
+            let variant = match side {
+                "LEFT" => JoinVariant::LeftOuter,
+                "RIGHT" => JoinVariant::RightOuter,
+                _ => JoinVariant::FullOuter,
+            };
+            let side = side.to_string();
+            p.next()?;
+            if let Some(w @ ("SEMI" | "ANTI")) = word(p).as_deref() {
+                bail!("{side} {w} JOIN is not supported: write {w} JOIN");
+            }
+            p.try_keyword("OUTER");
+            p.keyword("JOIN")?;
+            variant
+        }
+        Some("SEMI") => {
+            p.keyword("SEMI")?;
+            p.keyword("JOIN")?;
+            JoinVariant::Semi
+        }
+        Some("ANTI") => {
+            p.keyword("ANTI")?;
+            p.keyword("JOIN")?;
+            JoinVariant::Anti
+        }
+        _ => return Ok(None),
+    };
+    Ok(Some(v))
+}
+
 /// Parse one `FUNC '(' expr ')' (AS ident)?` call.
 fn agg_call(p: &mut P) -> Result<AggExpr> {
     let name = p.ident()?;
@@ -270,8 +330,63 @@ pub fn parse(text: &str) -> Result<Query> {
 
     p.keyword("FROM")?;
     let mut tables = vec![p.ident()?];
-    while p.try_sym(',') {
-        tables.push(p.ident()?);
+    let mut variant = JoinVariant::Inner;
+    let mut join_attr: Option<String> = None;
+    let mut chains: Vec<Vec<String>> = Vec::new();
+    if p.peek() == Some(&Tok::Sym(',')) {
+        // legacy comma list: an inner join, chained in WHERE
+        while p.try_sym(',') {
+            tables.push(p.ident()?);
+        }
+    } else {
+        // explicit JOIN clauses, optionally with ON conditions
+        while let Some(v) = try_join_variant(&mut p)? {
+            if !v.is_inner() {
+                if !variant.is_inner() {
+                    bail!(
+                        "at most one non-inner join variant per query \
+                         ({} then {})",
+                        variant.sql(),
+                        v.sql()
+                    );
+                }
+                variant = v;
+            }
+            tables.push(p.ident()?);
+            if p.try_keyword("ON") {
+                let l = p.colref()?;
+                p.sym('=')?;
+                let r = p.colref()?;
+                let (Some(lt), Some(rt)) = (l.table.clone(), r.table.clone()) else {
+                    bail!("ON clause needs table-qualified columns, got {l} = {r}");
+                };
+                if !l.column.eq_ignore_ascii_case(&r.column) {
+                    bail!(
+                        "join attributes differ: {} vs {} \
+                         (single-attribute equi-join only)",
+                        l.column,
+                        r.column
+                    );
+                }
+                match &join_attr {
+                    Some(a) if !a.eq_ignore_ascii_case(&l.column) => {
+                        bail!(
+                            "join attributes differ: {a} vs {} \
+                             (single-attribute equi-join only)",
+                            l.column
+                        );
+                    }
+                    Some(_) => {}
+                    None => join_attr = Some(l.column.clone()),
+                }
+                chains.push(vec![lt, rt]);
+            } else if !v.is_inner() {
+                // a non-inner JOIN's chain cannot be recovered from WHERE
+                // order-insensitively — require ON
+                bail!("{} requires an ON condition", v.sql());
+            }
+            // plain JOIN without ON: the chain comes from WHERE
+        }
     }
     if tables.len() < 2 {
         bail!("a join needs at least two tables");
@@ -279,75 +394,77 @@ pub fn parse(text: &str) -> Result<Query> {
     let known = |t: &str| tables.iter().any(|x| x.eq_ignore_ascii_case(t));
 
     // ---- WHERE: a conjunction of join chains and selection predicates
-    p.keyword("WHERE")?;
-    let mut join_attr: Option<String> = None;
-    let mut chains: Vec<Vec<String>> = Vec::new();
     let mut predicates: Vec<Predicate> = Vec::new();
-    loop {
-        let first = p.colref()?;
-        if let Some(op) = p.try_cmp()? {
-            // comparison predicate: colref cmp number
-            let lit = p.literal()?;
-            predicates.push(Predicate {
-                column: first,
-                op,
-                literal: lit,
-            });
-        } else if p.peek() == Some(&Tok::Sym('=')) {
-            // '=' starts either a join chain (RHS is a column) or an
-            // equality predicate (RHS is a number, possibly negative)
-            let rhs_is_num = matches!(p.peek_at(1), Some(Tok::Num(_)))
-                || (p.peek_at(1) == Some(&Tok::Sym('-'))
-                    && matches!(p.peek_at(2), Some(Tok::Num(_))));
-            if rhs_is_num {
-                p.sym('=')?;
+    if p.try_keyword("WHERE") {
+        loop {
+            let first = p.colref()?;
+            if let Some(op) = p.try_cmp()? {
+                // comparison predicate: colref cmp number
                 let lit = p.literal()?;
                 predicates.push(Predicate {
                     column: first,
-                    op: CmpOp::Eq,
+                    op,
                     literal: lit,
                 });
-            } else {
-                let Some(t0) = first.table.clone() else {
-                    bail!("join clause needs table-qualified columns, got {first}");
-                };
-                let attr = first.column.clone();
-                match &join_attr {
-                    Some(a) if !a.eq_ignore_ascii_case(&attr) => {
-                        bail!(
-                            "join attributes differ: {a} vs {attr} \
-                             (single-attribute equi-join only)"
-                        );
-                    }
-                    Some(_) => {}
-                    None => join_attr = Some(attr.clone()),
-                }
-                let mut this_chain = vec![t0];
-                while p.try_sym('=') {
-                    let next = p.colref()?;
-                    let Some(t) = next.table.clone() else {
-                        bail!("join clause needs table-qualified columns, got {next}");
+            } else if p.peek() == Some(&Tok::Sym('=')) {
+                // '=' starts either a join chain (RHS is a column) or an
+                // equality predicate (RHS is a number, possibly negative)
+                let rhs_is_num = matches!(p.peek_at(1), Some(Tok::Num(_)))
+                    || (p.peek_at(1) == Some(&Tok::Sym('-'))
+                        && matches!(p.peek_at(2), Some(Tok::Num(_))));
+                if rhs_is_num {
+                    p.sym('=')?;
+                    let lit = p.literal()?;
+                    predicates.push(Predicate {
+                        column: first,
+                        op: CmpOp::Eq,
+                        literal: lit,
+                    });
+                } else {
+                    let Some(t0) = first.table.clone() else {
+                        bail!("join clause needs table-qualified columns, got {first}");
                     };
-                    if !next.column.eq_ignore_ascii_case(&attr) {
-                        bail!(
-                            "join attributes differ: {attr} vs {} \
-                             (single-attribute equi-join only)",
-                            next.column
-                        );
+                    let attr = first.column.clone();
+                    match &join_attr {
+                        Some(a) if !a.eq_ignore_ascii_case(&attr) => {
+                            bail!(
+                                "join attributes differ: {a} vs {attr} \
+                                 (single-attribute equi-join only)"
+                            );
+                        }
+                        Some(_) => {}
+                        None => join_attr = Some(attr.clone()),
                     }
-                    this_chain.push(t);
+                    let mut this_chain = vec![t0];
+                    while p.try_sym('=') {
+                        let next = p.colref()?;
+                        let Some(t) = next.table.clone() else {
+                            bail!("join clause needs table-qualified columns, got {next}");
+                        };
+                        if !next.column.eq_ignore_ascii_case(&attr) {
+                            bail!(
+                                "join attributes differ: {attr} vs {} \
+                                 (single-attribute equi-join only)",
+                                next.column
+                            );
+                        }
+                        this_chain.push(t);
+                    }
+                    chains.push(this_chain);
                 }
-                chains.push(this_chain);
+            } else {
+                bail!("expected a comparison or join clause after {first}");
             }
-        } else {
-            bail!("expected a comparison or join clause after {first}");
-        }
-        if !p.try_keyword("AND") {
-            break;
+            if !p.try_keyword("AND") {
+                break;
+            }
         }
     }
     let Some(attr) = join_attr else {
-        bail!("WHERE needs an equi-join clause (t1.attr = t2.attr)");
+        bail!(
+            "query needs an equi-join clause \
+             (t1.attr = t2.attr in WHERE, or JOIN ... ON)"
+        );
     };
     // AND-ed chains must form ONE connected equi-join class — the engine
     // runs a single transitive n-way equi-join, so disconnected chains
@@ -428,6 +545,38 @@ pub fn parse(text: &str) -> Result<Query> {
         }
     }
 
+    // ---- non-inner variants are binary scalar joins
+    if !variant.is_inner() {
+        let vsql = variant.sql();
+        if tables.len() != 2 {
+            bail!("{vsql} is binary: FROM must join exactly two tables");
+        }
+        if group_by.is_some() {
+            bail!("GROUP BY is not supported with {vsql}");
+        }
+        if !predicates.is_empty() {
+            bail!("selection predicates are not supported with {vsql}");
+        }
+        if aggregates.len() > 1 || aggregates[0].alias.is_some() {
+            bail!("{vsql} supports a single unaliased aggregate");
+        }
+        // semi/anti output only has left-side columns (self-joins excepted:
+        // the two names are indistinguishable)
+        if variant.membership_only() && !tables[0].eq_ignore_ascii_case(&tables[1]) {
+            for term in &aggregates[0].terms {
+                if let Some(t) = &term.table {
+                    if t.eq_ignore_ascii_case(&tables[1]) {
+                        bail!(
+                            "{vsql} output has no columns of {t}: \
+                             the aggregate may only reference {}",
+                            tables[0]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
     // ---- budget clauses
     let mut budget = Budget::unbounded();
     loop {
@@ -466,6 +615,7 @@ pub fn parse(text: &str) -> Result<Query> {
         aggregates,
         predicates,
         group_by,
+        variant,
     })
 }
 
@@ -660,6 +810,110 @@ mod tests {
         let q = parse("SELECT SUM(a.v + a.v) FROM a, a WHERE a.k = a.k").unwrap();
         assert_eq!(q.tables, vec!["a", "a"]);
         assert_eq!(q.join_attr, "k");
+    }
+
+    // ---- join-variant grammar ----------------------------------------
+
+    #[test]
+    fn explicit_join_clauses_parse() {
+        // inner JOIN ... ON is the comma form with the chain inlined
+        let q = parse("SELECT SUM(a.v + b.v) FROM a JOIN b ON a.k = b.k").unwrap();
+        assert_eq!(q.variant, JoinVariant::Inner);
+        assert_eq!(q.tables, vec!["a", "b"]);
+        assert_eq!(q.join_attr, "k");
+        assert_eq!(q.join_clauses, vec![vec!["a", "b"]]);
+        // inner fingerprint unchanged by the JOIN spelling
+        assert_eq!(q.fingerprint(), "SUM:Sum:a,b:k");
+
+        // chained inner JOINs
+        let q = parse(
+            "SELECT SUM(a.v + b.v + c.v) FROM a JOIN b ON a.k = b.k \
+             JOIN c ON b.k = c.k",
+        )
+        .unwrap();
+        assert_eq!(q.tables, vec!["a", "b", "c"]);
+        assert_eq!(q.join_clauses.len(), 2);
+
+        // JOIN without ON falls back to the WHERE chain
+        let q = parse("SELECT SUM(a.v + b.v) FROM a JOIN b WHERE a.k = b.k").unwrap();
+        assert_eq!(q.variant, JoinVariant::Inner);
+        assert_eq!(q.join_attr, "k");
+    }
+
+    #[test]
+    fn variant_grammar_parses() {
+        for (sql, want) in [
+            ("LEFT OUTER JOIN", JoinVariant::LeftOuter),
+            ("LEFT JOIN", JoinVariant::LeftOuter),
+            ("RIGHT OUTER JOIN", JoinVariant::RightOuter),
+            ("RIGHT JOIN", JoinVariant::RightOuter),
+            ("FULL OUTER JOIN", JoinVariant::FullOuter),
+            ("FULL JOIN", JoinVariant::FullOuter),
+            ("INNER JOIN", JoinVariant::Inner),
+        ] {
+            let q = parse(&format!(
+                "SELECT SUM(a.v + b.v) FROM a {sql} b ON a.k = b.k"
+            ))
+            .unwrap_or_else(|e| panic!("{sql}: {e:#}"));
+            assert_eq!(q.variant, want, "{sql}");
+        }
+        // semi/anti aggregates reference the left side only
+        for (sql, want) in [("SEMI JOIN", JoinVariant::Semi), ("ANTI JOIN", JoinVariant::Anti)] {
+            let q = parse(&format!(
+                "SELECT SUM(a.v) FROM a {sql} b ON a.k = b.k WITHIN 10 SECONDS"
+            ))
+            .unwrap_or_else(|e| panic!("{sql}: {e:#}"));
+            assert_eq!(q.variant, want, "{sql}");
+            assert_eq!(q.budget.latency_secs, Some(10.0));
+            assert!(q.fingerprint().ends_with(&format!(";v={}", want.tag())));
+        }
+        // COUNT(*) works for every variant
+        let q = parse("SELECT COUNT(*) FROM a ANTI JOIN b ON a.k = b.k").unwrap();
+        assert_eq!(q.agg, AggFunc::Count);
+    }
+
+    #[test]
+    fn rejects_malformed_variants() {
+        // the Spark LEFT SEMI spelling gets a pointed error
+        let e = parse("SELECT SUM(a.v) FROM a LEFT SEMI JOIN b ON a.k = b.k").unwrap_err();
+        assert!(e.to_string().contains("SEMI JOIN"), "{e:#}");
+        assert!(parse("SELECT SUM(a.v) FROM a LEFT ANTI JOIN b ON a.k = b.k").is_err());
+        // non-inner variants are binary
+        assert!(parse(
+            "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k JOIN c ON b.k = c.k"
+        )
+        .is_err());
+        assert!(parse(
+            "SELECT SUM(a.v) FROM a JOIN b ON a.k = b.k ANTI JOIN c ON b.k = c.k"
+        )
+        .is_err());
+        // at most one non-inner variant
+        assert!(parse(
+            "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k LEFT JOIN c ON b.k = c.k"
+        )
+        .is_err());
+        // non-inner joins need ON
+        assert!(parse("SELECT SUM(a.v) FROM a SEMI JOIN b WHERE a.k = b.k").is_err());
+        // GROUP BY / predicates / aliases are inner-only
+        assert!(parse(
+            "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k GROUP BY a.g"
+        )
+        .is_err());
+        assert!(parse(
+            "SELECT SUM(a.v) FROM a LEFT JOIN b ON a.k = b.k AND a.x > 1"
+        )
+        .is_err());
+        assert!(parse(
+            "SELECT SUM(a.v) AS s FROM a ANTI JOIN b ON a.k = b.k"
+        )
+        .is_err());
+        // semi/anti aggregates must not touch the right table
+        assert!(parse("SELECT SUM(a.v + b.v) FROM a SEMI JOIN b ON a.k = b.k").is_err());
+        // mixing comma-FROM with JOIN clauses is rejected
+        assert!(parse("SELECT SUM(a.v) FROM a, b JOIN c ON b.k = c.k WHERE a.k = b.k").is_err());
+        // dangling variant keywords
+        assert!(parse("SELECT SUM(a.v) FROM a LEFT OUTER b ON a.k = b.k").is_err());
+        assert!(parse("SELECT SUM(a.v) FROM a SEMI b ON a.k = b.k").is_err());
     }
 
     #[test]

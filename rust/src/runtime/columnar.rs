@@ -203,6 +203,26 @@ impl CogroupColumns {
     pub fn total_rows(&self) -> u64 {
         self.vals.iter().map(|v| v.len() as u64).sum()
     }
+
+    /// Number of key runs of one input — ALL of that input's distinct
+    /// keys, not just the joinable directory. The outer/semi/anti
+    /// resolution walks these to find single-side keys.
+    pub fn num_runs(&self, input: usize) -> usize {
+        self.runs[input].len()
+    }
+
+    /// The idx-th key run of `input`: (key, value slice), ascending in
+    /// idx, values in arrival order.
+    #[inline]
+    pub fn run(&self, input: usize, idx: usize) -> (u64, &[f64]) {
+        let (k, s, e) = self.runs[input][idx];
+        (k, &self.vals[input][s as usize..e as usize])
+    }
+
+    /// Is `key` present in every input (i.e. in the joinable directory)?
+    pub fn contains_key(&self, key: u64) -> bool {
+        self.dir_keys.binary_search(&key).is_ok()
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ use crate::data::Dataset;
 use crate::join::bloom_join::{
     build_join_filter, probe_and_shuffle, FilterConfig, Filtered, KeyProber,
 };
+use crate::join::JoinVariant;
 use crate::runtime::CogroupColumns;
 use crate::stats::ApproxResult;
 use std::collections::HashMap;
@@ -161,13 +162,26 @@ impl SketchCache {
     }
 
     /// The cache key of a filtered cogroup: the filter key plus the
-    /// *executed* table order and the per-aggregate projection. Stage-1
-    /// cogroup artifacts are order-sensitive — the join-order optimizer
-    /// may permute inputs, and the cogroup built over `a > b > c` is not
-    /// the cogroup built over `c > a > b` — so the order is part of the
-    /// key even though the filter is shared.
-    fn cogroup_key(fkey: &str, tables: &[String], projection_tag: &str) -> String {
-        format!("{fkey}|ord={}|proj={projection_tag}", tables.join(">"))
+    /// *executed* table order, the per-aggregate projection, and the join
+    /// variant. Stage-1 cogroup artifacts are order-sensitive — the
+    /// join-order optimizer may permute inputs, and the cogroup built over
+    /// `a > b > c` is not the cogroup built over `c > a > b` — so the
+    /// order is part of the key even though the filter is shared. The
+    /// variant is part of the key because a filtered cogroup answers only
+    /// the variant it was built for: an inner cogroup has already dropped
+    /// the unmatched keys an outer or anti join must pad, so replaying it
+    /// across variants would silently change answers.
+    fn cogroup_key(
+        fkey: &str,
+        tables: &[String],
+        projection_tag: &str,
+        variant: JoinVariant,
+    ) -> String {
+        format!(
+            "{fkey}|ord={}|proj={projection_tag}|v={}",
+            tables.join(">"),
+            variant.tag()
+        )
     }
 
     /// Run (or replay) stage 1 for a query over `inputs`, consulting the
@@ -188,6 +202,7 @@ impl SketchCache {
         tables: &[String],
         predicate_tag: &str,
         projection_tag: &str,
+        variant: JoinVariant,
         cfg: FilterConfig,
         prober: &mut dyn KeyProber,
     ) -> anyhow::Result<(Filtered, SketchCacheHit)> {
@@ -200,7 +215,7 @@ impl SketchCache {
             let mut inner = self.inner.lock().unwrap();
             let fkey =
                 Self::filter_key(&inner.epochs, tables, predicate_tag, cfg, workers);
-            let ckey = Self::cogroup_key(&fkey, tables, projection_tag);
+            let ckey = Self::cogroup_key(&fkey, tables, projection_tag, variant);
             let cg = inner.cogroups.get(&ckey).cloned();
             let jf = if cg.is_none() {
                 inner.filters.get(&fkey).cloned()
@@ -411,11 +426,27 @@ mod tests {
         // the join filter is order-independent: one entry serves both
         assert_eq!(f1, f2);
         // the filtered cogroup is order-sensitive: distinct entries
-        let c1 = SketchCache::cogroup_key(&f1, &ab, "value");
-        let c2 = SketchCache::cogroup_key(&f2, &ba, "value");
+        let c1 = SketchCache::cogroup_key(&f1, &ab, "value", JoinVariant::Inner);
+        let c2 = SketchCache::cogroup_key(&f2, &ba, "value", JoinVariant::Inner);
         assert_ne!(c1, c2);
         assert!(c1.contains("|ord=a>b|"));
         assert!(c2.contains("|ord=b>a|"));
+    }
+
+    #[test]
+    fn cogroup_key_separates_join_variants() {
+        let epochs = HashMap::new();
+        let fkey = SketchCache::filter_key(&epochs, &tables(), "", cfg(), 4);
+        let keys: Vec<String> = JoinVariant::ALL
+            .iter()
+            .map(|&v| SketchCache::cogroup_key(&fkey, &tables(), "value", v))
+            .collect();
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b, "variants must never share a cogroup entry");
+            }
+        }
+        assert!(keys[0].ends_with("|v=inner"));
     }
 
     #[test]

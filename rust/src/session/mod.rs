@@ -41,8 +41,8 @@ use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::join::approx::{ApproxConfig, SamplingParams};
 use crate::join::{
-    ApproxJoin, BloomJoin, BroadcastJoin, InputStats, JoinError, JoinPlan, JoinStrategy,
-    NativeJoin, Planner, RepartitionJoin, StrategyRegistry,
+    ApproxJoin, BernoulliJoin, BloomJoin, BroadcastJoin, InputStats, JoinError, JoinPlan,
+    JoinStrategy, NativeJoin, Planner, RepartitionJoin, StrategyRegistry, UniverseJoin,
 };
 use crate::query::{parse, Query};
 use crate::relation::{Relation, Row, Schema};
@@ -81,6 +81,16 @@ fn registry_for(cfg: &EngineConfig) -> StrategyRegistry {
             estimator: cfg.estimator,
             seed: cfg.seed,
         },
+    }));
+    // centralized sample-first baselines — explicit-name only (the planner
+    // never Auto-picks a baseline), seeded from the session config
+    r.register(Box::new(BernoulliJoin {
+        fraction: 0.1,
+        seed: cfg.seed,
+    }));
+    r.register(Box::new(UniverseJoin {
+        fraction: 0.1,
+        seed: cfg.seed,
     }));
     r
 }
@@ -394,10 +404,13 @@ impl QueryBuilder<'_> {
     /// and the engine recompute identical orders.
     fn order_report(&self, inputs: &[Dataset]) -> Option<crate::join::JoinOrderReport> {
         let engine = &self.session.engine;
+        // non-inner joins are not freely commutable — an outer join's
+        // padded side is positional, semi/anti are left-anchored — so the
+        // optimizer only ever reorders inner joins
         let commutative = matches!(
             self.query.combine,
             crate::join::CombineOp::Sum | crate::join::CombineOp::Product
-        );
+        ) && self.query.variant.is_inner();
         let ctx = crate::join::order::OrderContext {
             feedback: Some(&engine.feedback),
             predicate_tag: String::new(),
@@ -477,7 +490,11 @@ impl QueryBuilder<'_> {
         // The engine receives the ORIGINAL (FROM-order) inputs and owns the
         // reordering itself — both sides plan from the same feedback
         // snapshot, so they compute the same order.
-        if plan.approximate && !self.query.budget.is_unbounded() {
+        if plan.approximate
+            && !self.query.budget.is_unbounded()
+            && self.query.variant.is_inner()
+            && !plan.chosen().baseline
+        {
             let mut outcome = session.engine.execute_on(&self.query, &inputs)?;
             outcome.plan = Some(
                 plan.with_order(outcome.join_order.clone())
@@ -508,7 +525,12 @@ impl QueryBuilder<'_> {
             session.engine.cfg.time_model,
         )
         .with_parallelism(session.engine.cfg.parallelism);
-        let run = strategy.execute(&mut cluster, &exec_inputs, self.query.combine)?;
+        let run = strategy.execute_variant(
+            &mut cluster,
+            &exec_inputs,
+            self.query.combine,
+            self.query.variant,
+        )?;
 
         let confidence = self
             .query
@@ -522,14 +544,19 @@ impl QueryBuilder<'_> {
         } else {
             EstimatorKind::HorvitzThompson
         };
-        let result = estimate_result(
-            self.query.agg,
-            run.sampled,
-            estimator,
-            &run.strata,
-            &run.draws,
-            confidence,
-        );
+        // sample-first baselines carry a join-level closed-form estimator;
+        // everything else estimates from the per-stratum aggregates
+        let result = match &run.baseline {
+            Some(report) => report.result_for(self.query.agg, confidence)?,
+            None => estimate_result(
+                self.query.agg,
+                run.sampled,
+                estimator,
+                &run.strata,
+                &run.draws,
+                confidence,
+            ),
+        };
         session
             .engine
             .feedback
@@ -539,10 +566,12 @@ impl QueryBuilder<'_> {
         let sampled_count: f64 = run.strata.values().map(|s| s.count).sum();
         let mode = if run.sampled {
             ExecutionMode::Sampled {
-                fraction: if output_cardinality > 0.0 {
-                    sampled_count / output_cardinality
-                } else {
-                    1.0
+                // baselines report their input sampling fraction; sampled
+                // strata report the per-stratum draw fraction
+                fraction: match &run.baseline {
+                    Some(report) => report.fraction,
+                    None if output_cardinality > 0.0 => sampled_count / output_cardinality,
+                    None => 1.0,
                 },
             }
         } else {

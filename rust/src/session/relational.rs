@@ -81,6 +81,20 @@ pub(crate) fn plan_relational(
     query: &Query,
     choice: &StrategyChoice,
 ) -> Result<(JoinPlan, LoweredQuery), JoinError> {
+    // the relational lowering (predicate pushdown, GROUP BY composite
+    // strata, kernel projections) is inner-join algebra throughout; the
+    // parser already rejects non-inner + relational features, so this gate
+    // only fires for programmatically-built queries over typed tables
+    if !query.variant.is_inner() {
+        return Err(JoinError::Unsupported {
+            strategy: "relational".to_string(),
+            reason: format!(
+                "{} joins are not supported on the relational path \
+                 (typed tables / predicates / GROUP BY); use plain datasets",
+                query.variant.tag()
+            ),
+        });
+    }
     let owned = wrap_datasets(session, query)?;
     let relations: Vec<&Relation> = query
         .tables
@@ -245,6 +259,7 @@ pub(crate) fn run_relational(
                     &exec_tables,
                     &predicate_tag,
                     &query.aggregates[ai].render(),
+                    query.variant,
                     filter_cfg,
                     &mut prober,
                 )?,

@@ -124,6 +124,21 @@ impl StreamingSession {
         self
     }
 
+    /// Join variant of every emitted window. Non-inner variants need every
+    /// window record at the cogroup (unmatched keys are padded or
+    /// complemented there), so selecting one switches the session onto the
+    /// exact unfiltered path — sampling and Bloom filtering turn off, as
+    /// if [`StreamingSession::exact`] and [`StreamingSession::unfiltered`]
+    /// had been called.
+    pub fn variant(mut self, variant: crate::join::JoinVariant) -> Self {
+        self.config.variant = variant;
+        if !variant.is_inner() {
+            self.config.sampling = None;
+            self.config.bloom_filtering = false;
+        }
+        self
+    }
+
     pub fn aggregate(mut self, agg: AggFunc) -> Self {
         self.config.agg = agg;
         self
@@ -269,6 +284,30 @@ mod tests {
             assert_eq!(w.bounds, cont.bounds);
             assert_eq!(w.result.estimate.to_bits(), cont.result.estimate.to_bits());
             assert_eq!(w.strata, cont.strata);
+        }
+    }
+
+    #[test]
+    fn variant_builder_switches_to_the_exact_unfiltered_path() {
+        use crate::join::JoinVariant;
+        let session = StreamingSession::new(&engine_config())
+            .window(WindowSpec::tumbling(2))
+            .sampling_fraction(0.3)
+            .variant(JoinVariant::LeftOuter);
+        assert!(session.config().sampling.is_none());
+        assert!(!session.config().bloom_filtering);
+        let outer = session.run(&mut source(13), 4);
+        let inner = StreamingSession::new(&engine_config())
+            .window(WindowSpec::tumbling(2))
+            .exact()
+            .unfiltered()
+            .run(&mut source(13), 4);
+        assert_eq!(outer.windows.len(), inner.windows.len());
+        for (o, i) in outer.windows.iter().zip(&inner.windows) {
+            assert!(!o.sampled);
+            // the outer result covers the inner pairs plus left-side pads
+            assert!(o.output_cardinality() >= i.output_cardinality());
+            assert!(o.strata.len() >= i.strata.len());
         }
     }
 

@@ -43,7 +43,7 @@ use crate::bloom::{CountingBloomFilter, FilterKind, JoinFilter};
 use crate::cluster::{JoinMetrics, ShuffleLedger, SimCluster, TimeModel};
 use crate::data::{partition_of, Record};
 use crate::join::approx::ApproxConfig;
-use crate::join::CombineOp;
+use crate::join::{CombineOp, JoinVariant};
 use crate::query::AggFunc;
 use crate::runtime::CogroupColumns;
 use crate::sampling::stratified::{refresh_reservoir_strata_columnar, StratumReservoir};
@@ -113,6 +113,12 @@ pub struct StreamConfig {
     pub filter_kind: FilterKind,
     pub agg: AggFunc,
     pub combine: CombineOp,
+    /// Join variant of every emitted window. Non-inner variants run only
+    /// on the exact unfiltered path (`sampling: None`,
+    /// `bloom_filtering: false`): padding an unmatched key requires every
+    /// window record at the cogroup, and the Bloom stage exists precisely
+    /// to drop non-joinable records before the shuffle.
+    pub variant: JoinVariant,
     pub confidence: f64,
 }
 
@@ -130,6 +136,7 @@ impl Default for StreamConfig {
             filter_kind: FilterKind::Standard,
             agg: AggFunc::Sum,
             combine: CombineOp::Sum,
+            variant: JoinVariant::Inner,
             confidence: 0.95,
         }
     }
@@ -244,6 +251,15 @@ impl StreamingApproxJoin {
         assert!(cfg.workers >= 1);
         assert!((0.0..1.0).contains(&cfg.fp_rate) && cfg.fp_rate > 0.0);
         assert!(!record_bytes.is_empty(), "need at least one record width");
+        if !cfg.variant.is_inner() {
+            assert!(
+                cfg.sampling.is_none() && !cfg.bloom_filtering,
+                "streaming {} joins need the exact unfiltered path \
+                 (sampling: None, bloom_filtering: false): unmatched keys \
+                 must reach the cogroup to be padded or complemented",
+                cfg.variant.tag()
+            );
+        }
         if let Some(g) = cfg.sketch {
             // validate an explicit geometry against the kind's floor NOW,
             // not at the first window emission deep inside emit()
@@ -304,6 +320,12 @@ impl StreamingApproxJoin {
     pub fn push_batch(&mut self, batch: Vec<Vec<Record>>) -> Option<WindowResult> {
         let n = batch.len();
         assert!(n >= 2, "streaming join needs >= 2 inputs");
+        assert!(
+            self.cfg.variant.is_inner() || n == 2,
+            "streaming {} joins are binary: got {} inputs",
+            self.cfg.variant.tag(),
+            n
+        );
         match self.n_inputs {
             None => self.n_inputs = Some(n),
             Some(m) => assert_eq!(m, n, "input arity changed mid-stream"),
@@ -574,17 +596,30 @@ impl StreamingApproxJoin {
             None => {
                 let mut s = cluster.stage("crossproduct");
                 let groups_ref = &groups;
+                let variant = self.cfg.variant;
                 let per_worker: Vec<(HashMap<u64, StratumAgg>, u64, f64)> = exec.map(k, |w| {
                     let t0 = Instant::now();
                     let cg = &groups_ref[w];
                     let mut local = HashMap::with_capacity(cg.num_keys());
                     let mut pairs = 0u64;
-                    let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
-                    for idx in 0..cg.num_keys() {
-                        cg.sides_into(idx, &mut sides);
-                        let agg = crate::join::cross_product_agg(&sides, combine);
-                        pairs += agg.population as u64;
-                        local.insert(cg.key(idx), agg);
+                    if variant.is_inner() {
+                        let mut sides: Vec<&[f64]> = Vec::with_capacity(cg.n_inputs());
+                        for idx in 0..cg.num_keys() {
+                            cg.sides_into(idx, &mut sides);
+                            let agg = crate::join::cross_product_agg(&sides, combine);
+                            pairs += agg.population as u64;
+                            local.insert(cg.key(idx), agg);
+                        }
+                    } else {
+                        // unfiltered shuffle put every window record of a
+                        // key on this worker, so the full run directories
+                        // support padding/complement resolution locally
+                        for (key, agg) in
+                            crate::join::variant_strata_from_cogroup(cg, combine, variant)
+                        {
+                            pairs += agg.population as u64;
+                            local.insert(key, agg);
+                        }
                     }
                     (local, pairs, t0.elapsed().as_secs_f64())
                 });
@@ -796,6 +831,57 @@ mod tests {
             assert_eq!(a.result.estimate.to_bits(), b.result.estimate.to_bits());
             assert_eq!(a.strata, b.strata);
         }
+    }
+
+    #[test]
+    fn exact_window_variants_pad_and_complement() {
+        // window: a = {1:[1,2], 2:[5]}, b = {1:[10], 3:[7]}
+        let a: &[(u64, f64)] = &[(1, 1.0), (1, 2.0), (2, 5.0)];
+        let b: &[(u64, f64)] = &[(1, 10.0), (3, 7.0)];
+        let run = |variant: JoinVariant| {
+            let mut c = cfg(WindowSpec::tumbling(1), None);
+            c.bloom_filtering = false;
+            c.variant = variant;
+            let mut j = StreamingApproxJoin::new(c, vec![100, 100]);
+            j.push_batch(batch(a, b)).expect("tumbling(1) emits")
+        };
+        let inner = run(JoinVariant::Inner);
+        assert_eq!(inner.output_cardinality(), 2.0);
+        assert!((inner.result.estimate - 23.0).abs() < 1e-9);
+        // left outer pads key 2 with its own values
+        let lo = run(JoinVariant::LeftOuter);
+        assert_eq!(lo.output_cardinality(), 3.0);
+        assert!((lo.result.estimate - 28.0).abs() < 1e-9);
+        // full outer additionally pads key 3 from the right
+        let fo = run(JoinVariant::FullOuter);
+        assert_eq!(fo.output_cardinality(), 4.0);
+        assert!((fo.result.estimate - 35.0).abs() < 1e-9);
+        // semi keeps a's rows under matched keys; anti the complement
+        let semi = run(JoinVariant::Semi);
+        assert_eq!(semi.output_cardinality(), 2.0);
+        assert!((semi.result.estimate - 3.0).abs() < 1e-9);
+        let anti = run(JoinVariant::Anti);
+        assert_eq!(anti.output_cardinality(), 1.0);
+        assert!((anti.result.estimate - 5.0).abs() < 1e-9);
+        for w in [&inner, &lo, &fo, &semi, &anti] {
+            assert!(!w.sampled);
+            assert_eq!(w.result.error_bound, 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exact unfiltered path")]
+    fn non_inner_streaming_rejects_sampling() {
+        let mut c = cfg(
+            WindowSpec::tumbling(1),
+            Some(ApproxConfig {
+                params: SamplingParams::Fraction(0.5),
+                estimator: EstimatorKind::Clt,
+                seed: 1,
+            }),
+        );
+        c.variant = JoinVariant::LeftOuter;
+        let _ = StreamingApproxJoin::new(c, vec![100, 100]);
     }
 
     #[test]

@@ -5,6 +5,9 @@
 
 use crate::util::Rng;
 
+pub mod oracle;
+pub use oracle::ExactJoinOracle;
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct PropConfig {

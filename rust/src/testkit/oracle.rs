@@ -1,0 +1,251 @@
+//! The exact-twin oracle behind the differential test harness.
+//!
+//! [`ExactJoinOracle`] enumerates a join's ground truth — per-key strata,
+//! output cardinality, and the exact aggregate — for **every**
+//! [`JoinVariant`] by brute force over the raw per-input key groups,
+//! completely independent of the engine's execution machinery (no
+//! clusters, no shuffles, no filters, no sampling). Differential tests
+//! (`tests/join_variants.rs`, `tests/estimator_soundness.rs`,
+//! `tests/grouped_estimates.rs`, `tests/stream_windows.rs`) compare every
+//! strategy's output against it: an agreement bug would have to exist in
+//! both a one-screen enumeration and the distributed path to go unseen.
+
+use crate::data::Dataset;
+use crate::join::{cross_product_agg, padded_value, CombineOp, JoinVariant};
+use crate::query::AggFunc;
+use crate::stats::{ApproxResult, EstimatorKind, StratumAgg};
+use std::collections::BTreeMap;
+
+/// Brute-force ground truth of a join over concrete inputs.
+///
+/// Construction groups every input by key once; each query against the
+/// oracle is then a pure function of those groups. `BTreeMap`s keep all
+/// iteration in ascending key order, so repeated oracle calls are
+/// bit-identical — the same determinism contract the engine itself is
+/// tested for.
+#[derive(Clone, Debug)]
+pub struct ExactJoinOracle {
+    groups: Vec<BTreeMap<u64, Vec<f64>>>,
+}
+
+impl ExactJoinOracle {
+    /// Group each input's records by key (partitioning is irrelevant to
+    /// the logical join result).
+    pub fn new(inputs: &[Dataset]) -> Self {
+        assert!(inputs.len() >= 2, "a join oracle needs >= 2 inputs");
+        let groups = inputs
+            .iter()
+            .map(|d| {
+                let mut g: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+                for p in &d.partitions {
+                    for r in p {
+                        g.entry(r.key).or_default().push(r.value);
+                    }
+                }
+                g
+            })
+            .collect();
+        Self { groups }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The exact per-key strata of `variant`: population is the variant's
+    /// per-key output cardinality and the moments cover every output
+    /// value. Inner joins are n-way; every other variant is binary, like
+    /// the engine's `execute_variant`.
+    pub fn strata(&self, op: CombineOp, variant: JoinVariant) -> BTreeMap<u64, StratumAgg> {
+        if !variant.is_inner() {
+            assert_eq!(
+                self.n_inputs(),
+                2,
+                "{} oracle strata are binary",
+                variant.tag()
+            );
+        }
+        let mut strata: BTreeMap<u64, StratumAgg> = BTreeMap::new();
+        match variant {
+            JoinVariant::Inner
+            | JoinVariant::LeftOuter
+            | JoinVariant::RightOuter
+            | JoinVariant::FullOuter => {
+                // matched keys: the full cross product
+                let mut sides: Vec<&[f64]> = Vec::with_capacity(self.n_inputs());
+                'keys: for (&k, left) in &self.groups[0] {
+                    sides.clear();
+                    sides.push(left.as_slice());
+                    for g in &self.groups[1..] {
+                        match g.get(&k) {
+                            Some(v) => sides.push(v.as_slice()),
+                            None => continue 'keys,
+                        }
+                    }
+                    strata.insert(k, cross_product_agg(&sides, op));
+                }
+                // unmatched keys of each padded side, one output row per
+                // input row, neutral-filled through the combine op
+                if variant.pads_left() {
+                    self.pad_unmatched(&mut strata, op, 0);
+                }
+                if variant.pads_right() {
+                    self.pad_unmatched(&mut strata, op, 1);
+                }
+            }
+            JoinVariant::Semi | JoinVariant::Anti => {
+                let want_member = variant == JoinVariant::Semi;
+                let right = &self.groups[1];
+                for (&k, left) in &self.groups[0] {
+                    if right.contains_key(&k) != want_member {
+                        continue;
+                    }
+                    strata.insert(k, Self::single_side(left, op, 0));
+                }
+            }
+        }
+        strata
+    }
+
+    fn pad_unmatched(
+        &self,
+        strata: &mut BTreeMap<u64, StratumAgg>,
+        op: CombineOp,
+        input: usize,
+    ) {
+        let other = &self.groups[1 - input];
+        for (&k, vals) in &self.groups[input] {
+            if !other.contains_key(&k) {
+                strata.insert(k, Self::single_side(vals, op, input));
+            }
+        }
+    }
+
+    fn single_side(vals: &[f64], op: CombineOp, input: usize) -> StratumAgg {
+        let mut agg = StratumAgg {
+            population: vals.len() as f64,
+            ..Default::default()
+        };
+        for &v in vals {
+            agg.push(padded_value(op, input, v));
+        }
+        agg
+    }
+
+    /// Exact join-output cardinality of `variant` (Σ per-key populations;
+    /// independent of the combine op).
+    pub fn cardinality(&self, variant: JoinVariant) -> f64 {
+        self.strata(CombineOp::Sum, variant)
+            .values()
+            .map(|s| s.population)
+            .sum()
+    }
+
+    /// Exact Σ over every output value of `variant`.
+    pub fn sum(&self, op: CombineOp, variant: JoinVariant) -> f64 {
+        self.strata(op, variant).values().map(|s| s.sum).sum()
+    }
+
+    /// The exact answer as an [`ApproxResult`] (zero-width interval),
+    /// through the same estimator dispatch the engine's exact path uses —
+    /// so a coverage test's `|estimate - oracle| <= bound` comparison
+    /// needs no special-casing per aggregate.
+    pub fn result(
+        &self,
+        agg: AggFunc,
+        op: CombineOp,
+        variant: JoinVariant,
+        confidence: f64,
+    ) -> ApproxResult {
+        let strata = self.strata(op, variant);
+        let strata_vec: Vec<StratumAgg> = strata.into_values().collect();
+        crate::relation::grouped::estimate_slice(
+            agg,
+            false,
+            EstimatorKind::Clt,
+            &strata_vec,
+            &[],
+            confidence,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Record;
+
+    fn input(name: &str, recs: &[(u64, f64)]) -> Dataset {
+        Dataset::from_records_unpartitioned(
+            name,
+            recs.iter().map(|&(k, v)| Record::new(k, v)).collect(),
+            3,
+            64,
+        )
+    }
+
+    fn oracle() -> ExactJoinOracle {
+        // a = {1:[1,2], 2:[10], 3:[5]}, b = {1:[100], 2:[200,300], 9:[1]}
+        ExactJoinOracle::new(&[
+            input("a", &[(1, 1.0), (1, 2.0), (2, 10.0), (3, 5.0)]),
+            input("b", &[(1, 100.0), (2, 200.0), (2, 300.0), (9, 1.0)]),
+        ])
+    }
+
+    #[test]
+    fn hand_computed_variants() {
+        let o = oracle();
+        let op = CombineOp::Sum;
+        // inner: key1 (1+100)+(2+100), key2 (10+200)+(10+300)
+        assert_eq!(o.cardinality(JoinVariant::Inner), 4.0);
+        assert!((o.sum(op, JoinVariant::Inner) - (203.0 + 520.0)).abs() < 1e-9);
+        // left outer adds key3 padded with 5
+        assert_eq!(o.cardinality(JoinVariant::LeftOuter), 5.0);
+        assert!((o.sum(op, JoinVariant::LeftOuter) - 728.0).abs() < 1e-9);
+        // right outer adds key9 padded with 1
+        assert_eq!(o.cardinality(JoinVariant::RightOuter), 5.0);
+        assert!((o.sum(op, JoinVariant::RightOuter) - 724.0).abs() < 1e-9);
+        // full outer has both pads
+        assert_eq!(o.cardinality(JoinVariant::FullOuter), 6.0);
+        assert!((o.sum(op, JoinVariant::FullOuter) - 729.0).abs() < 1e-9);
+        // semi keeps a's rows under matched keys {1, 2}
+        assert_eq!(o.cardinality(JoinVariant::Semi), 3.0);
+        assert!((o.sum(op, JoinVariant::Semi) - 13.0).abs() < 1e-9);
+        // anti is the complement {3}
+        assert_eq!(o.cardinality(JoinVariant::Anti), 1.0);
+        assert!((o.sum(op, JoinVariant::Anti) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variant_algebra_holds_on_random_inputs() {
+        // the identities tests/join_variants.rs checks against the engine
+        // must hold inside the oracle itself
+        let mut r = crate::util::Rng::new(0xACE);
+        for _ in 0..20 {
+            let inputs = crate::testkit::gen::join_inputs(&mut r, 2, 4);
+            let o = ExactJoinOracle::new(&inputs);
+            let (inner, left, right, full) = (
+                o.cardinality(JoinVariant::Inner),
+                o.cardinality(JoinVariant::LeftOuter),
+                o.cardinality(JoinVariant::RightOuter),
+                o.cardinality(JoinVariant::FullOuter),
+            );
+            let semi = o.cardinality(JoinVariant::Semi);
+            let anti = o.cardinality(JoinVariant::Anti);
+            let left_rows: f64 = o.groups[0].values().map(|v| v.len() as f64).sum();
+            assert_eq!(semi + anti, left_rows, "semi/anti partition the left");
+            assert_eq!(left, inner + anti, "left outer = inner + left pads");
+            assert_eq!(full, left + (right - inner), "full = left ∪ right pads");
+        }
+    }
+
+    #[test]
+    fn result_is_exact_with_zero_width_interval() {
+        let o = oracle();
+        let res = o.result(AggFunc::Sum, CombineOp::Sum, JoinVariant::FullOuter, 0.95);
+        assert!((res.estimate - 729.0).abs() < 1e-9);
+        assert_eq!(res.error_bound, 0.0);
+        let count = o.result(AggFunc::Count, CombineOp::Sum, JoinVariant::Anti, 0.95);
+        assert!((count.estimate - 1.0).abs() < 1e-9);
+    }
+}

@@ -8,9 +8,9 @@ use approxjoin::cluster::{SimCluster, TimeModel};
 use approxjoin::data::Dataset;
 use approxjoin::join::approx::{ApproxConfig, NativeAggregator, SamplingParams};
 use approxjoin::join::bloom_join::NativeProber;
-use approxjoin::join::{ApproxJoin, CombineOp, JoinStrategy, NativeJoin};
+use approxjoin::join::{ApproxJoin, CombineOp, JoinStrategy, JoinVariant};
 use approxjoin::stats::{clt_sum, horvitz_thompson_sum, EstimatorKind, StratumAgg};
-use approxjoin::testkit::{check, gen, PropConfig};
+use approxjoin::testkit::{check, gen, ExactJoinOracle, PropConfig};
 use approxjoin::util::Rng;
 
 fn cluster() -> SimCluster {
@@ -25,12 +25,9 @@ fn cluster() -> SimCluster {
 }
 
 fn exact_sum(inputs: &[Dataset]) -> f64 {
-    NativeJoin {
-        memory_budget: u64::MAX,
-    }
-    .execute(&mut cluster(), inputs, CombineOp::Sum)
-    .unwrap()
-    .exact_sum()
+    // the brute-force oracle, not another engine strategy: agreement
+    // bugs shared by all execution paths cannot hide the truth
+    ExactJoinOracle::new(inputs).sum(CombineOp::Sum, JoinVariant::Inner)
 }
 
 #[test]
@@ -360,12 +357,7 @@ fn count_aggregation_is_exact_under_sampling() {
         },
         |r| {
             let inputs = gen::join_inputs(r, 2, 4);
-            let exact = NativeJoin {
-                memory_budget: u64::MAX,
-            }
-            .execute(&mut cluster(), &inputs, CombineOp::Sum)
-            .unwrap()
-            .output_cardinality();
+            let exact = ExactJoinOracle::new(&inputs).cardinality(JoinVariant::Inner);
             let strategy = ApproxJoin::with_config(ApproxConfig {
                 params: SamplingParams::Fraction(0.1),
                 estimator: EstimatorKind::Clt,

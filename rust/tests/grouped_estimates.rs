@@ -98,6 +98,45 @@ fn per_group_cis_cover_the_exact_grouped_twin() {
         .collect();
     assert!(truth.len() >= 4, "want several groups, got {}", truth.len());
 
+    // anchor the exact twin itself: the grouped totals must sum to the
+    // brute-force oracle's enumeration of SUM(a.v + b.w) over the join
+    {
+        use approxjoin::data::{Dataset, Record};
+        use approxjoin::join::{CombineOp, JoinVariant};
+        use approxjoin::testkit::ExactJoinOracle;
+        let key_of = |v: &Value| match v {
+            Value::Key(k) => *k,
+            other => panic!("expected key column, got {other:?}"),
+        };
+        let float_of = |v: &Value| match v {
+            Value::Float(f) => *f,
+            other => panic!("expected float column, got {other:?}"),
+        };
+        let (ar, br) = rows(42);
+        let da = Dataset::from_records_unpartitioned(
+            "a",
+            ar.iter()
+                .map(|row| Record::new(key_of(&row[0]), float_of(&row[2])))
+                .collect(),
+            4,
+            64,
+        );
+        let db = Dataset::from_records_unpartitioned(
+            "b",
+            br.iter()
+                .map(|row| Record::new(key_of(&row[0]), float_of(&row[1])))
+                .collect(),
+            4,
+            64,
+        );
+        let brute = ExactJoinOracle::new(&[da, db]).sum(CombineOp::Sum, JoinVariant::Inner);
+        let total: f64 = truth.iter().map(|(_, t)| t).sum();
+        assert!(
+            (total - brute).abs() <= 1e-6 * (1.0 + brute.abs()),
+            "grouped twin total {total} vs oracle {brute}"
+        );
+    }
+
     let trials = 100;
     let mut checked = 0u32;
     let mut covered = 0u32;

@@ -1,0 +1,425 @@
+//! The exact-twin differential harness for join variants.
+//!
+//! Every registered strategy answers all six [`JoinVariant`]s; this suite
+//! checks them against the brute-force [`ExactJoinOracle`] and against
+//! each other on seeded Zipf-multiplicity × exponential-value workloads:
+//!
+//! * **Differential algebra** — left outer = inner + anti pads,
+//!   semi ∪ anti partitions the left input, anti is semi's complement,
+//!   full outer = left ∪ right — on measured runs, per strategy.
+//! * **Zero stage-2 shuffle for SEMI/ANTI** — the Bloom-based strategies
+//!   resolve membership variants from stage 1 alone: the measured
+//!   [`ShuffleLedger`] must show 0 bytes in every record-shuffle stage.
+//! * **Bit-identity** — every (strategy, variant) output is bit-identical
+//!   at 1 / 2 / 8 executor threads.
+//! * **Coverage** — 100 seeded trials per variant (CLT and
+//!   Horvitz-Thompson, padded outer strata included) plus the
+//!   sample-first baselines: ≥ 85% of 95% CIs must cover oracle truth.
+
+use approxjoin::cluster::{ShuffleLedger, SimCluster, TimeModel};
+use approxjoin::data::{Dataset, Record};
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{
+    ApproxJoin, BernoulliJoin, CombineOp, JoinError, JoinRun, JoinStrategy, JoinVariant,
+    StrategyRegistry, UniverseJoin,
+};
+use approxjoin::query::AggFunc;
+use approxjoin::relation::grouped::estimate_slice;
+use approxjoin::stats::{ApproxResult, EstimatorKind, StratumAgg};
+use approxjoin::testkit::ExactJoinOracle;
+use approxjoin::util::Rng;
+
+fn cluster(threads: usize) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+}
+
+/// Zipf multiplicities × exponential values with a three-way key split:
+/// keys 0..20 live only in `a`, 20..50 in both, 50..70 only in `b` — so
+/// every variant's pad / complement sets are non-empty. The b side gets
+/// 20+ partners per key so sampled per-stratum variances are estimable.
+fn zipf_exp_inputs(seed: u64) -> Vec<Dataset> {
+    let mut r = Rng::new(seed);
+    let mut a = Vec::new();
+    for key in 0..50u64 {
+        let copies = 2 + r.zipf(10, 1.1);
+        for _ in 0..copies {
+            a.push(Record::new(key, r.exponential(10.0)));
+        }
+    }
+    let mut b = Vec::new();
+    for key in 20..70u64 {
+        let copies = 20 + r.below(20);
+        for _ in 0..copies {
+            b.push(Record::new(key, r.exponential(5.0)));
+        }
+    }
+    vec![
+        Dataset::from_records_unpartitioned("a", a, 4, 64),
+        Dataset::from_records_unpartitioned("b", b, 4, 64),
+    ]
+}
+
+/// Estimator dispatch mirroring the session's scalar result assembly:
+/// ascending-key stratum order, HT draw counts aligned to it.
+fn result_of(run: &JoinRun, estimator: EstimatorKind, confidence: f64) -> ApproxResult {
+    let mut keys: Vec<u64> = run.strata.keys().copied().collect();
+    keys.sort_unstable();
+    let strata: Vec<StratumAgg> = keys.iter().map(|k| run.strata[k]).collect();
+    let draws: Vec<f64> = if run.sampled && estimator == EstimatorKind::HorvitzThompson {
+        keys.iter()
+            .map(|k| run.draws.get(k).copied().unwrap_or(0.0))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    estimate_slice(AggFunc::Sum, run.sampled, estimator, &strata, &draws, confidence)
+}
+
+fn strata_match_oracle(run: &JoinRun, oracle: &ExactJoinOracle, variant: JoinVariant, who: &str) {
+    let truth = oracle.strata(CombineOp::Sum, variant);
+    assert_eq!(
+        run.strata.len(),
+        truth.len(),
+        "{who}/{}: stratum key sets differ",
+        variant.tag()
+    );
+    for (k, t) in &truth {
+        let got = run
+            .strata
+            .get(k)
+            .unwrap_or_else(|| panic!("{who}/{}: key {k} missing", variant.tag()));
+        assert_eq!(
+            got.population,
+            t.population,
+            "{who}/{}: population of key {k}",
+            variant.tag()
+        );
+        if !run.sampled {
+            assert!(
+                (got.sum - t.sum).abs() <= 1e-9 * (1.0 + t.sum.abs()),
+                "{who}/{}: sum of key {k}: {} vs oracle {}",
+                variant.tag(),
+                got.sum,
+                t.sum
+            );
+        }
+    }
+}
+
+/// Measured bytes of the stage-2 record-shuffle stages (everything after
+/// the stage-1 filter build/membership resolution).
+fn stage2_bytes(ledger: &ShuffleLedger) -> u64 {
+    ["filter_shuffle", "shuffle", "crossproduct", "sample"]
+        .iter()
+        .map(|s| ledger.stage_bytes(s))
+        .sum()
+}
+
+#[test]
+fn every_strategy_matches_the_oracle_on_every_variant() {
+    let registry = StrategyRegistry::with_defaults();
+    for seed in [11u64, 23, 47] {
+        let inputs = zipf_exp_inputs(seed);
+        let oracle = ExactJoinOracle::new(&inputs);
+        for strategy in registry.iter() {
+            for &variant in &JoinVariant::ALL {
+                let run = match strategy.execute_variant(
+                    &mut cluster(1),
+                    &inputs,
+                    CombineOp::Sum,
+                    variant,
+                ) {
+                    Ok(run) => run,
+                    Err(JoinError::Unsupported { .. }) => {
+                        // the only refusal in the registry: bernoulli
+                        // cannot answer non-inner variants
+                        assert!(
+                            strategy.name() == "bernoulli" && !variant.is_inner(),
+                            "{} refused {}",
+                            strategy.name(),
+                            variant.tag()
+                        );
+                        continue;
+                    }
+                    Err(e) => panic!("{}/{}: {e}", strategy.name(), variant.tag()),
+                };
+                if strategy.is_baseline() {
+                    // join-level estimator, sampled strata — checked by
+                    // the coverage trial below, not key-by-key
+                    assert!(run.baseline.is_some());
+                    continue;
+                }
+                strata_match_oracle(&run, &oracle, variant, strategy.name());
+                assert_eq!(run.output_cardinality(), oracle.cardinality(variant));
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_algebra_holds_on_measured_runs() {
+    // the identities are checked on the engine's own outputs, one exact
+    // strategy (repartition) and one Bloom-based one (bloom)
+    let registry = StrategyRegistry::with_defaults();
+    for seed in [3u64, 91] {
+        let inputs = zipf_exp_inputs(seed);
+        let left_rows: f64 = inputs[0].partitions.iter().map(|p| p.len() as f64).sum();
+        for name in ["repartition", "bloom"] {
+            let strategy = registry.get(name).unwrap();
+            let card = |variant: JoinVariant| {
+                strategy
+                    .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, variant)
+                    .unwrap()
+                    .output_cardinality()
+            };
+            let (inner, left, right, full) = (
+                card(JoinVariant::Inner),
+                card(JoinVariant::LeftOuter),
+                card(JoinVariant::RightOuter),
+                card(JoinVariant::FullOuter),
+            );
+            let (semi, anti) = (card(JoinVariant::Semi), card(JoinVariant::Anti));
+            // left outer = inner pairs + one padded row per anti row
+            assert_eq!(left, inner + anti, "{name}: left outer identity");
+            // semi/anti partition the left input's rows
+            assert_eq!(semi + anti, left_rows, "{name}: semi/anti partition");
+            // full outer = left ∪ right (right pads added once)
+            assert_eq!(full, left + (right - inner), "{name}: full outer identity");
+
+            // semi = distinct-key-filtered inner; anti = its complement
+            let semi_run = strategy
+                .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, JoinVariant::Semi)
+                .unwrap();
+            let inner_run = strategy
+                .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, JoinVariant::Inner)
+                .unwrap();
+            let anti_run = strategy
+                .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, JoinVariant::Anti)
+                .unwrap();
+            let mut semi_keys: Vec<u64> = semi_run.strata.keys().copied().collect();
+            let mut inner_keys: Vec<u64> = inner_run.strata.keys().copied().collect();
+            semi_keys.sort_unstable();
+            inner_keys.sort_unstable();
+            assert_eq!(semi_keys, inner_keys, "{name}: semi keys = matched keys");
+            for k in anti_run.strata.keys() {
+                assert!(
+                    !semi_run.strata.contains_key(k),
+                    "{name}: anti key {k} also in semi"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn semi_anti_run_with_zero_stage2_shuffle_on_bloom_strategies() {
+    let registry = StrategyRegistry::with_defaults();
+    let inputs = zipf_exp_inputs(7);
+    let oracle = ExactJoinOracle::new(&inputs);
+    for name in ["bloom", "approx"] {
+        let strategy = registry.get(name).unwrap();
+        for variant in [JoinVariant::Semi, JoinVariant::Anti] {
+            let run = strategy
+                .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, variant)
+                .unwrap();
+            assert_eq!(
+                stage2_bytes(&run.ledger),
+                0,
+                "{name}/{}: membership variants must never shuffle records",
+                variant.tag()
+            );
+            assert!(
+                run.ledger.stage_bytes("membership") > 0,
+                "{name}/{}: the membership stage's key traffic is measured",
+                variant.tag()
+            );
+            assert!(!run.sampled, "membership answers are exact");
+            strata_match_oracle(&run, &oracle, variant, name);
+        }
+        // the inner join on the same strategy DOES move stage-2 bytes —
+        // the zero above is a property of the variant, not of the ledger
+        let inner = strategy
+            .execute_variant(&mut cluster(1), &inputs, CombineOp::Sum, JoinVariant::Inner)
+            .unwrap();
+        assert!(stage2_bytes(&inner.ledger) > 0, "{name}: inner shuffles");
+    }
+}
+
+/// The thread-invariance fingerprint of a run: strata bits, draw bits,
+/// per-stage per-worker ledger byte vectors.
+type RunPrint = (
+    Vec<(u64, u64, u64, u64, u64)>,
+    Vec<(u64, u64)>,
+    Vec<(String, Vec<u64>, Vec<u64>)>,
+);
+
+fn run_print(run: &JoinRun) -> RunPrint {
+    let mut strata: Vec<(u64, u64, u64, u64, u64)> = run
+        .strata
+        .iter()
+        .map(|(&k, a)| {
+            (
+                k,
+                a.population.to_bits(),
+                a.count.to_bits(),
+                a.sum.to_bits(),
+                a.sumsq.to_bits(),
+            )
+        })
+        .collect();
+    strata.sort_unstable();
+    let mut draws: Vec<(u64, u64)> = run.draws.iter().map(|(&k, d)| (k, d.to_bits())).collect();
+    draws.sort_unstable();
+    let ledger = run
+        .ledger
+        .stages
+        .iter()
+        .map(|s| (s.stage.clone(), s.bytes_in.clone(), s.bytes_out.clone()))
+        .collect();
+    (strata, draws, ledger)
+}
+
+#[test]
+fn every_variant_is_bit_identical_across_thread_counts() {
+    let registry = StrategyRegistry::with_defaults();
+    let inputs = zipf_exp_inputs(29);
+    for strategy in registry.iter() {
+        for &variant in &JoinVariant::ALL {
+            let runs: Vec<Option<RunPrint>> = [1usize, 2, 8]
+                .iter()
+                .map(|&t| {
+                    strategy
+                        .execute_variant(&mut cluster(t), &inputs, CombineOp::Sum, variant)
+                        .ok()
+                        .map(|r| run_print(&r))
+                })
+                .collect();
+            assert_eq!(
+                runs[0], runs[1],
+                "{}/{}: 1 vs 2 threads",
+                strategy.name(),
+                variant.tag()
+            );
+            assert_eq!(
+                runs[0], runs[2],
+                "{}/{}: 1 vs 8 threads",
+                strategy.name(),
+                variant.tag()
+            );
+        }
+    }
+}
+
+fn coverage_trial(
+    trials: u64,
+    variant: JoinVariant,
+    run_one: impl Fn(u64, &[Dataset]) -> Option<(f64, f64)>,
+    what: &str,
+) {
+    let mut seed_rng = Rng::new(0xD1FF);
+    let mut covered = 0u64;
+    let mut n = 0u64;
+    for _ in 0..trials {
+        let data_seed = seed_rng.next_u64();
+        let trial_seed = seed_rng.next_u64();
+        let inputs = zipf_exp_inputs(data_seed);
+        let Some((estimate, bound)) = run_one(trial_seed, &inputs) else {
+            continue;
+        };
+        let truth = ExactJoinOracle::new(&inputs).sum(CombineOp::Sum, variant);
+        n += 1;
+        // zero-width intervals (exact membership answers, padded-only
+        // outer strata) still count through the fp tolerance
+        if (estimate - truth).abs() <= bound + 1e-9 * (1.0 + truth.abs()) {
+            covered += 1;
+        }
+    }
+    assert_eq!(n, trials, "{what}: every trial must produce an answer");
+    assert!(
+        covered * 100 >= n * 85,
+        "{what}: coverage {covered}/{n} below 85% (95% nominal)"
+    );
+}
+
+#[test]
+fn coverage_100_trials_per_variant_clt_and_ht() {
+    for &variant in &JoinVariant::ALL {
+        for estimator in [EstimatorKind::Clt, EstimatorKind::HorvitzThompson] {
+            let label = format!("{}/{:?}", variant.tag(), estimator);
+            coverage_trial(
+                100,
+                variant,
+                |seed, inputs| {
+                    let strategy = ApproxJoin::with_config(ApproxConfig {
+                        params: SamplingParams::Fraction(0.4),
+                        estimator,
+                        seed,
+                    });
+                    let run = strategy
+                        .execute_variant(&mut cluster(1), inputs, CombineOp::Sum, variant)
+                        .ok()?;
+                    let res = result_of(&run, estimator, 0.95);
+                    Some((res.estimate, res.error_bound))
+                },
+                &label,
+            );
+        }
+    }
+}
+
+#[test]
+fn coverage_100_trials_sample_first_baselines() {
+    // universe key-sampling answers every variant; bernoulli row sampling
+    // answers inner only (a sampled row cannot prove a key's absence)
+    for &variant in &JoinVariant::ALL {
+        let label = format!("{}/universe", variant.tag());
+        coverage_trial(
+            100,
+            variant,
+            |seed, inputs| {
+                let strategy = UniverseJoin {
+                    fraction: 0.5,
+                    seed,
+                };
+                let run = strategy
+                    .execute_variant(&mut cluster(1), inputs, CombineOp::Sum, variant)
+                    .ok()?;
+                let res = run
+                    .baseline
+                    .expect("baseline report")
+                    .result_for(AggFunc::Sum, 0.95)
+                    .unwrap();
+                Some((res.estimate, res.error_bound))
+            },
+            &label,
+        );
+    }
+    coverage_trial(
+        100,
+        JoinVariant::Inner,
+        |seed, inputs| {
+            let strategy = BernoulliJoin {
+                fraction: 0.5,
+                seed,
+            };
+            let run = strategy
+                .execute_variant(&mut cluster(1), inputs, CombineOp::Sum, JoinVariant::Inner)
+                .ok()?;
+            let res = run
+                .baseline
+                .expect("baseline report")
+                .result_for(AggFunc::Sum, 0.95)
+                .unwrap();
+            Some((res.estimate, res.error_bound))
+        },
+        "inner/bernoulli",
+    );
+}

@@ -288,6 +288,155 @@ fn fuzzed_query_mutations_never_panic() {
 }
 
 #[test]
+fn variant_grammar_fuzz_never_panics_and_errors_are_typed() {
+    use approxjoin::query::parse;
+    use approxjoin::util::Rng;
+
+    // hand-picked malformed variant shapes: each must come back as a typed
+    // parse error with a message, never a panic
+    for q in [
+        // the Spark LEFT SEMI / LEFT ANTI spellings
+        "SELECT SUM(a.v) FROM a LEFT SEMI JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v) FROM a LEFT ANTI JOIN b ON a.k = b.k",
+        // variant + GROUP BY
+        "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k GROUP BY a.g",
+        "SELECT g, SUM(a.v) FROM a ANTI JOIN b ON a.k = b.k GROUP BY g",
+        // variants inside 3-way chains (non-inner joins are binary)
+        "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k JOIN c ON b.k = c.k",
+        "SELECT SUM(a.v) FROM a JOIN b ON a.k = b.k FULL JOIN c ON b.k = c.k",
+        "SELECT SUM(a.v) FROM a LEFT JOIN b ON a.k = b.k RIGHT JOIN c ON b.k = c.k",
+        // dangling / bare keywords
+        "SELECT SUM(a.v) FROM a OUTER JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v) FROM a SEMI JOIN b",
+        // anti aggregate reading the complemented side
+        "SELECT SUM(a.v + b.v) FROM a ANTI JOIN b ON a.k = b.k",
+    ] {
+        match std::panic::catch_unwind(|| parse(q)) {
+            Ok(parsed) => {
+                let e = parsed.expect_err("should reject");
+                assert!(!e.to_string().is_empty(), "typed error must explain: {q}");
+            }
+            Err(_) => panic!("parser panicked on: {q}"),
+        }
+    }
+
+    // 1000-case token-level mutation loop over the variant grammar: every
+    // outcome is Ok or a typed Err — a panic is the only failure
+    let bases = [
+        "SELECT SUM(a.v + b.v) FROM a LEFT OUTER JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v + b.v) FROM a RIGHT JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v + b.v) FROM a FULL OUTER JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k",
+        "SELECT COUNT(*) FROM a ANTI JOIN b ON a.k = b.k",
+        "SELECT SUM(a.v + b.v + c.v) FROM a JOIN b ON a.k = b.k JOIN c ON b.k = c.k",
+    ];
+    for base in bases {
+        assert!(parse(base).is_ok(), "base must parse: {base}");
+    }
+    let kw = [
+        "LEFT", "RIGHT", "FULL", "SEMI", "ANTI", "OUTER", "INNER", "JOIN", "ON", "GROUP", "BY",
+        "WHERE", ",", "=", "a.k", "c", "(", ")",
+    ];
+    let mut r = Rng::new(0xFA22);
+    for case in 0..1000 {
+        let base = bases[r.index(bases.len())];
+        let mut toks: Vec<String> = base.split_whitespace().map(str::to_string).collect();
+        // 1-3 token mutations: delete, replace, insert, swap
+        for _ in 0..(1 + r.index(3)) {
+            if toks.is_empty() {
+                break;
+            }
+            match r.index(4) {
+                0 => {
+                    let i = r.index(toks.len());
+                    toks.remove(i);
+                }
+                1 => {
+                    let i = r.index(toks.len());
+                    toks[i] = kw[r.index(kw.len())].to_string();
+                }
+                2 => {
+                    let i = r.index(toks.len() + 1);
+                    toks.insert(i, kw[r.index(kw.len())].to_string());
+                }
+                _ => {
+                    let i = r.index(toks.len());
+                    let j = r.index(toks.len());
+                    toks.swap(i, j);
+                }
+            }
+        }
+        let mutated = toks.join(" ");
+        match std::panic::catch_unwind(|| parse(&mutated)) {
+            Ok(Ok(_)) => {} // a mutation can still land on a legal query
+            Ok(Err(e)) => assert!(
+                !e.to_string().is_empty(),
+                "typed error must explain (case {case}): {mutated:?}"
+            ),
+            Err(_) => panic!("parser panicked on mutated variant query (case {case}): {mutated:?}"),
+        }
+    }
+}
+
+#[test]
+fn outer_joins_keep_from_order_in_the_optimizer() {
+    use approxjoin::coordinator::EngineConfig;
+    use approxjoin::data::{Dataset, Record};
+    use approxjoin::session::Session;
+
+    let mk = |name: &str, keys: u64, mult: u64, value: f64| {
+        let mut recs = Vec::new();
+        for k in 1..=keys {
+            for _ in 0..mult {
+                recs.push(Record::new(k, value));
+            }
+        }
+        Dataset::from_records(name, recs, 8, 16)
+    };
+    let mut s = Session::without_runtime(EngineConfig {
+        workers: 4,
+        reorder_joins: true,
+        ..Default::default()
+    })
+    .unwrap()
+    .with_data("big1", mk("big1", 200, 6, 2.0))
+    .with_data("big2", mk("big2", 200, 5, 3.0))
+    .with_data("mid", mk("mid", 40, 2, 1.0))
+    .with_data("tiny", mk("tiny", 10, 1, 4.0));
+
+    // control: on the same session the optimizer DOES rewrite an
+    // adversarial inner chain (largest tables first)
+    let inner = s
+        .sql(
+            "SELECT SUM(big1.v + big2.v + mid.v + tiny.v) \
+             FROM big1, big2, mid, tiny \
+             WHERE big1.k = big2.k AND big2.k = mid.k AND mid.k = tiny.k",
+        )
+        .unwrap()
+        .plan()
+        .unwrap();
+    let inner_order = inner.order.expect("optimizer ran on the inner chain");
+    assert!(inner_order.reordered, "adversarial inner chain must reorder");
+    assert_eq!(inner_order.tables[0], "tiny");
+
+    // an outer join's padded side is positional — no matter how lopsided
+    // the sizes, big1 LEFT JOIN tiny must keep its FROM order
+    let outer = s
+        .sql("SELECT SUM(big1.v + tiny.v) FROM big1 LEFT OUTER JOIN tiny ON big1.k = tiny.k")
+        .unwrap()
+        .plan()
+        .unwrap();
+    if let Some(r) = outer.order {
+        assert!(
+            !r.reordered,
+            "outer join must keep FROM order, got {:?}",
+            r.tables
+        );
+        assert_eq!(r.tables, vec!["big1", "tiny"]);
+    }
+}
+
+#[test]
 fn relational_malformed_queries_error_cleanly_through_the_session() {
     // new-grammar malformed shapes surface as parse errors or JoinError,
     // never as panics — including column-resolution failures that only

@@ -89,6 +89,47 @@ fn windows_cover_the_exact_per_window_sum_at_nominal_rate() {
 }
 
 #[test]
+fn exact_windows_match_the_brute_force_oracle() {
+    // the exact streaming twin every other assertion trusts is itself
+    // anchored: replay the source, enumerate each window's contents, and
+    // compare against the engine-free ExactJoinOracle
+    use approxjoin::data::{Dataset, Record};
+    use approxjoin::join::{CombineOp, JoinVariant};
+    use approxjoin::stream::StreamSource;
+    use approxjoin::testkit::ExactJoinOracle;
+
+    let exact = run_with(1, |s| s.exact());
+    let mut src = EventStream::new(spec(5));
+    let batches: Vec<Vec<Vec<Record>>> = (0..BATCHES).map(|t| src.batch(t)).collect();
+    assert!(!exact.windows.is_empty());
+    for w in &exact.windows {
+        let (first, last) = (w.bounds.first_batch as usize, w.bounds.last_batch as usize);
+        let mut per_input: Vec<Vec<Record>> = vec![Vec::new(); 2];
+        for b in &batches[first..=last] {
+            for (i, recs) in b.iter().enumerate() {
+                per_input[i].extend_from_slice(recs);
+            }
+        }
+        let inputs: Vec<Dataset> = per_input
+            .into_iter()
+            .enumerate()
+            .map(|(i, recs)| {
+                Dataset::from_records_unpartitioned(&format!("in{i}"), recs, 4, 64)
+            })
+            .collect();
+        let oracle = ExactJoinOracle::new(&inputs);
+        let truth = oracle.sum(CombineOp::Sum, JoinVariant::Inner);
+        assert!(
+            (w.result.estimate - truth).abs() <= 1e-6 * (1.0 + truth.abs()),
+            "window {}: engine {} vs oracle {truth}",
+            w.bounds.index,
+            w.result.estimate
+        );
+        assert_eq!(w.output_cardinality(), oracle.cardinality(JoinVariant::Inner));
+    }
+}
+
+#[test]
 fn filtered_windows_measure_strictly_less_shuffle_than_unfiltered() {
     let filtered = run_with(1, |s| s);
     let unfiltered = run_with(1, |s| s.unfiltered());
