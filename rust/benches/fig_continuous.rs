@@ -1,0 +1,164 @@
+//! Continuous-query bench: delta maintenance vs from-scratch recompute
+//! for a 32-standing-query workload over a sliding micro-batch window.
+//!
+//! Like the other figure benches this is a plain main() that panics on
+//! any correctness violation, so CI's continuous-smoke job fails on:
+//!   * the incremental per-batch update not beating a from-scratch
+//!     recompute of every standing query (rows/sec),
+//!   * the delta path touching a non-minority of the live strata on a
+//!     skewed feed (update cost must be O(touched), not O(window)),
+//!   * an empty micro-batch producing notifications (changes only for
+//!     touched groups), and
+//!   * the incremental state diverging bit-for-bit from a from-scratch
+//!     window recompute (strata moments, draw counts, estimates, CIs).
+//!
+//! Env knobs (the CI continuous-smoke job sets all three):
+//!   APPROXJOIN_THREADS=N       engine parallelism (default: host cores)
+//!   APPROXJOIN_BENCH_QUICK=1   fewer batches and smaller feed
+//!   BENCH_JSON=path            merge a `fig_continuous_t{N}` section into
+//!                              the given JSON report
+
+use approxjoin::continuous::feed::{feed_schema, standing_queries, FeedSpec, RowFeed};
+use approxjoin::continuous::{BatchUpdate, ContinuousConfig, ContinuousEngine};
+use approxjoin::util::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("APPROXJOIN_BENCH_QUICK").is_ok();
+    let threads = approxjoin::runtime::default_parallelism();
+    // keyspace >> rows/batch: each micro-batch's key set is a small
+    // minority of the 8-batch window's live strata, the regime where
+    // delta maintenance pays (touched << carried)
+    let (batches, rows_per_batch, keyspace) =
+        if quick { (10u64, 96usize, 1024u64) } else { (24, 256, 4096) };
+    let window_batches = 8usize;
+    let n_queries = 32usize;
+    println!(
+        "== Continuous: {n_queries} standing queries, {batches} batches x \
+         {rows_per_batch} rows/table, window {window_batches}, {threads} threads{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    let mut engine = ContinuousEngine::new(ContinuousConfig {
+        window_batches,
+        parallelism: threads,
+        ..Default::default()
+    })
+    .with_table("a", feed_schema())
+    .with_table("b", feed_schema());
+    for sql in standing_queries(n_queries) {
+        engine.register(&sql).expect("register standing query");
+    }
+    let mut feed = RowFeed::new(
+        7,
+        FeedSpec {
+            rows_per_batch,
+            keyspace,
+            ..Default::default()
+        },
+    );
+
+    // ---- push the feed, timing the incremental path and a from-scratch
+    // recompute of every standing query after each batch
+    let (mut incr_secs, mut scratch_secs) = (0.0f64, 0.0f64);
+    let (mut touched, mut carried, mut notifications, mut spliced) = (0u64, 0u64, 0u64, 0u64);
+    let mut rows_pushed = 0u64;
+    for b in 0..batches {
+        let batch = feed.next_batch();
+        rows_pushed += batch.iter().map(|rows| rows.len() as u64).sum::<u64>();
+        let t = Instant::now();
+        let up = engine.push_batch(batch).expect("push batch");
+        incr_secs += t.elapsed().as_secs_f64();
+        touched += up.touched_strata;
+        carried += up.carried_strata;
+        notifications += up.notifications.len() as u64;
+        spliced += up.spliced_rows;
+
+        let t = Instant::now();
+        for qid in 0..engine.num_queries() {
+            let _ = engine.recompute(qid).expect("recompute");
+        }
+        scratch_secs += t.elapsed().as_secs_f64();
+
+        // bit-identity at every batch, every query: strata moments, HT
+        // draw counts, and per-group estimates +/- CIs
+        if b == batches - 1 || b % 5 == 0 {
+            for qid in 0..engine.num_queries() {
+                assert_eq!(
+                    engine.current(qid).expect("current"),
+                    engine.recompute(qid).expect("recompute"),
+                    "query {qid} diverged from the from-scratch twin at batch {b}"
+                );
+            }
+        }
+        println!(
+            "batch {b:>2}: {:>3} notifications, {:>5} touched / {:>5} carried strata",
+            up.notifications.len(),
+            up.touched_strata,
+            up.carried_strata
+        );
+    }
+
+    // ---- gates
+    assert!(
+        incr_secs < scratch_secs,
+        "incremental updates ({incr_secs:.3}s) must beat from-scratch \
+         recomputes ({scratch_secs:.3}s) on a {n_queries}-query workload"
+    );
+    assert!(
+        carried > touched,
+        "the skewed feed must leave most strata carried (touched {touched}, \
+         carried {carried}): update cost is O(touched), not O(window)"
+    );
+    // an empty arrival still evicts the oldest window batch, so strata can
+    // change — but once the window is drained entirely, nothing may touch
+    // or notify. Push window + 1 empties to drain it:
+    let mut last = BatchUpdate::default();
+    for _ in 0..=window_batches {
+        last = engine.push_batch(vec![Vec::new(), Vec::new()]).expect("empty batch");
+    }
+    assert!(
+        last.notifications.is_empty() && last.touched_strata == 0,
+        "an empty window must stop notifying (got {} notifications, {} touched)",
+        last.notifications.len(),
+        last.touched_strata
+    );
+
+    let incr_rows_per_sec = rows_pushed as f64 / incr_secs.max(1e-9);
+    let scratch_rows_per_sec = rows_pushed as f64 / scratch_secs.max(1e-9);
+    let speedup = scratch_secs / incr_secs.max(1e-9);
+    println!(
+        "\nincremental: {incr_secs:.3}s ({incr_rows_per_sec:.0} rows/s)  \
+         from-scratch: {scratch_secs:.3}s ({scratch_rows_per_sec:.0} rows/s)  \
+         speedup {speedup:.1}x"
+    );
+    println!(
+        "delta economy: {touched} strata touched vs {carried} carried; \
+         {notifications} notifications, {spliced} rows spliced"
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            &format!("fig_continuous_t{threads}"),
+            Json::obj(vec![
+                ("quick_mode", Json::Bool(quick)),
+                ("threads", Json::num(threads as f64)),
+                ("standing_queries", Json::num(n_queries as f64)),
+                ("batches", Json::num(batches as f64)),
+                ("rows_per_batch", Json::num(rows_per_batch as f64)),
+                ("incremental_secs", Json::num(incr_secs)),
+                ("recompute_secs", Json::num(scratch_secs)),
+                ("speedup", Json::num(speedup)),
+                ("rows_per_sec", Json::num(incr_rows_per_sec)),
+                ("touched_strata", Json::num(touched as f64)),
+                ("carried_strata", Json::num(carried as f64)),
+                ("notifications", Json::num(notifications as f64)),
+                ("spliced_rows", Json::num(spliced as f64)),
+            ]),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote fig_continuous_t{threads} section to {}", path.display());
+    }
+}

@@ -1,0 +1,181 @@
+//! Deterministic synthetic row feeds for continuous-query demos, benches
+//! and tests.
+//!
+//! Every consumer of the standing-query engine (CLI subcommand, example,
+//! `fig_continuous` bench, serving subscriptions, integration tests)
+//! needs the same thing: a reproducible stream of micro-batches with a
+//! hot-key skew so deltas touch a minority of strata. One generator keeps
+//! those workloads comparable across entry points.
+
+use crate::relation::{ColumnType, Row, Schema, Value};
+use crate::util::Rng;
+
+/// The feed's fixed table shape: join key, group, and two measures.
+pub fn feed_schema() -> Schema {
+    Schema::new(vec![
+        ("k", ColumnType::Key),
+        ("g", ColumnType::Int),
+        ("v", ColumnType::Float),
+        ("x", ColumnType::Float),
+    ])
+}
+
+/// Workload shape knobs. `hot_fraction` of rows concentrate on the
+/// lowest eighth of the keyspace, so each micro-batch leaves most cold
+/// strata untouched — the regime where delta maintenance pays.
+#[derive(Clone, Debug)]
+pub struct FeedSpec {
+    pub tables: usize,
+    pub rows_per_batch: usize,
+    pub keyspace: u64,
+    pub groups: u64,
+    pub hot_fraction: f64,
+}
+
+impl Default for FeedSpec {
+    fn default() -> Self {
+        Self {
+            tables: 2,
+            rows_per_batch: 256,
+            keyspace: 64,
+            groups: 4,
+            hot_fraction: 0.25,
+        }
+    }
+}
+
+/// A seeded micro-batch generator; identical (seed, spec) pairs yield
+/// identical batch sequences on every platform.
+pub struct RowFeed {
+    spec: FeedSpec,
+    rng: Rng,
+}
+
+impl RowFeed {
+    pub fn new(seed: u64, spec: FeedSpec) -> Self {
+        assert!(spec.tables >= 1 && spec.rows_per_batch >= 1);
+        assert!(spec.keyspace >= 1 && spec.groups >= 1);
+        Self {
+            spec,
+            rng: Rng::new(seed ^ 0xFEED_5EED_0BA7_C4E5),
+        }
+    }
+
+    pub fn spec(&self) -> &FeedSpec {
+        &self.spec
+    }
+
+    /// One micro-batch: `out[t]` holds table `t`'s new rows, each row
+    /// matching [`feed_schema`].
+    pub fn next_batch(&mut self) -> Vec<Vec<Row>> {
+        let hot_space = (self.spec.keyspace / 8).max(1);
+        let mut out = Vec::with_capacity(self.spec.tables);
+        for _ in 0..self.spec.tables {
+            let mut rows = Vec::with_capacity(self.spec.rows_per_batch);
+            for _ in 0..self.spec.rows_per_batch {
+                let k = if self.rng.f64() < self.spec.hot_fraction {
+                    self.rng.below(hot_space)
+                } else {
+                    self.rng.below(self.spec.keyspace)
+                };
+                let g = self.rng.below(self.spec.groups) as i64;
+                let v = self.rng.f64() * 9.0 + 1.0;
+                let x = self.rng.f64() * 100.0;
+                rows.push(vec![
+                    Value::Key(k),
+                    Value::Int(g),
+                    Value::Float(v),
+                    Value::Float(x),
+                ]);
+            }
+            out.push(rows);
+        }
+        out
+    }
+}
+
+/// A catalog of `n` distinct standing queries over feed tables `a` and
+/// `b` — what the 32-query bench workload registers. Cycles through
+/// grouped/ungrouped, predicated, multi-aggregate, and variant shapes
+/// with varying literals so no two of the first 32 share a plan.
+pub fn standing_queries(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            let j = i / 8;
+            match i % 8 {
+                0 => format!(
+                    "SELECT g, SUM(a.v * b.x) FROM a, b WHERE a.k = b.k AND a.v > {j} \
+                     GROUP BY a.g"
+                ),
+                1 => format!(
+                    "SELECT g, AVG(a.v) FROM a, b WHERE a.k = b.k AND b.x > {} GROUP BY a.g",
+                    5 + j
+                ),
+                2 => format!(
+                    "SELECT g, COUNT(*) FROM a, b WHERE a.k = b.k AND a.v > {j} GROUP BY a.g"
+                ),
+                3 => format!(
+                    "SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k AND a.x > {}",
+                    2 * j
+                ),
+                4 => format!("SELECT AVG(b.x) FROM a, b WHERE a.k = b.k AND a.v > {j}"),
+                5 => format!(
+                    "SELECT g, SUM(a.x) AS sx, COUNT(*) AS n FROM a, b \
+                     WHERE a.k = b.k AND b.v > {j} GROUP BY a.g"
+                ),
+                6 => {
+                    let (f, c) = [("SUM", "a.v"), ("AVG", "a.v"), ("SUM", "a.x"), ("AVG", "a.x")]
+                        [j % 4];
+                    format!("SELECT {f}({c}) FROM a SEMI JOIN b ON a.k = b.k")
+                }
+                _ => {
+                    let agg = ["COUNT(*)", "SUM(a.v)", "AVG(a.x)", "SUM(a.x)"][j % 4];
+                    format!("SELECT {agg} FROM a ANTI JOIN b ON a.k = b.k")
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_seeds_yield_identical_batches() {
+        let mut a = RowFeed::new(3, FeedSpec::default());
+        let mut b = RowFeed::new(3, FeedSpec::default());
+        for _ in 0..3 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    fn batches_respect_the_spec() {
+        let spec = FeedSpec {
+            tables: 3,
+            rows_per_batch: 17,
+            keyspace: 9,
+            groups: 2,
+            hot_fraction: 0.5,
+        };
+        let mut f = RowFeed::new(1, spec);
+        let batch = f.next_batch();
+        assert_eq!(batch.len(), 3);
+        for rows in &batch {
+            assert_eq!(rows.len(), 17);
+            for row in rows {
+                assert!(matches!(row[0], Value::Key(k) if k < 9));
+                assert!(matches!(row[1], Value::Int(g) if (0..2).contains(&g)));
+            }
+        }
+    }
+
+    #[test]
+    fn standing_queries_are_distinct() {
+        let qs = standing_queries(32);
+        assert_eq!(qs.len(), 32);
+        let uniq: std::collections::BTreeSet<&String> = qs.iter().collect();
+        assert_eq!(uniq.len(), 32, "catalog repeats a query");
+    }
+}

@@ -1,0 +1,1341 @@
+//! Continuous standing queries — DBSP-style delta maintenance of grouped
+//! approximate joins (ROADMAP item 2).
+//!
+//! The streaming path (PR 3) maintains its counting-Bloom sketches
+//! incrementally but still recomputes cogroups, samples, and estimates
+//! from scratch every window. This module closes that gap: clients
+//! **register** standing queries once (the PR-4 relational plans —
+//! pushdown predicates, composite group strata, and join-variant checks
+//! are all resolved at registration time) and from then on receive
+//! per-group `estimate ± CI` updates computed from **arrival/eviction
+//! deltas**, never from a full-window recomputation.
+//!
+//! The pipeline per micro-batch:
+//!
+//! 1. **Delta projection** — each query filters the batch through its
+//!    pushdown predicates and projects `(key64, f64)` records per
+//!    aggregate, plus per-key retraction counts for the evicted batch.
+//! 2. **Cogroup splice** — [`CogroupColumns::apply_delta`] merges the
+//!    arriving runs and drops the retracting per-key prefixes in place of
+//!    a rebuild. Because batches evict FIFO and arrivals append, the
+//!    oldest-prefix retraction is exactly the evicted batch's rows.
+//! 3. **Stratum redraw** — only the strata of *changed* keys are
+//!    recomputed: exact cross-product moments, or CLT/HT resampling with
+//!    an RNG derived from `(seed, key, group-salt, arrival-epoch)`. The
+//!    arrival epoch of a key is itself a pure function of the window
+//!    contents, so a from-scratch replay derives the identical streams.
+//! 4. **Group re-estimation** — only groups owning a touched stratum are
+//!    folded through [`crate::coordinator::estimate_result`] (the same
+//!    routine the one-shot paths use), and a [`Notification`] is emitted
+//!    only when the group's results actually changed bits.
+//!
+//! The standing invariant, enforced by [`ContinuousEngine::recompute`]:
+//! **incremental state after N batches is bit-identical to a from-scratch
+//! window recompute at any thread count**. `recompute` shares no mutable
+//! state with the incremental path — it replays the retained window
+//! through a fresh plan and must land on byte-equal strata, draw counts,
+//! and confidence intervals.
+//!
+//! Multi-query sharing: all registered queries consume one pass over each
+//! micro-batch (parallelized across queries by [`ParallelExecutor`]), and
+//! the engine's per-table counting-Bloom sketches — maintained once,
+//! evictions before arrivals, exactly as the PR-3 stream path does — give
+//! every inner-join query a shared "key definitely joins nothing" fast
+//! path that never changes outcomes, only skips dead work.
+
+pub mod feed;
+
+use crate::bloom::CountingBloomFilter;
+use crate::coordinator::estimate_result;
+use crate::data::Record;
+use crate::join::approx::ApproxConfig;
+use crate::join::{
+    cross_product_agg, variant_stratum_for_key, CombineOp, JoinError, JoinVariant,
+};
+use crate::query::{parse, AggFunc};
+use crate::relation::lowering::{canon_group, effective_op, resolve_column};
+use crate::relation::{ColumnType, LogicalPlan, Relation, Row, Schema, Value};
+use crate::runtime::columnar::CogroupColumns;
+use crate::runtime::parallel::{default_parallelism, ParallelExecutor};
+use crate::sampling::edge_sampling::population;
+use crate::sampling::{sample_edges_dedup, sample_edges_with_replacement};
+use crate::stats::{ApproxResult, EstimatorKind, StratumAgg};
+use crate::util::Rng;
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+
+/// Engine-level knobs. Per-query confidence can still be overridden by an
+/// `ERROR .. CONFIDENCE ..` clause in the registered SQL.
+#[derive(Clone, Debug)]
+pub struct ContinuousConfig {
+    /// Sliding window length in micro-batches; batch N evicts batch
+    /// N - `window_batches` once the window is full.
+    pub window_batches: usize,
+    /// Worker threads for the per-query update fan-out.
+    pub parallelism: usize,
+    /// Sampling policy shared by all inner-join queries; `None` runs
+    /// every query exact. Non-inner variants always run exact (the same
+    /// rule the PR-8 streaming path applies).
+    pub sampling: Option<ApproxConfig>,
+    /// Default confidence level for queries without an error budget.
+    pub confidence: f64,
+    /// False-positive rate for the shared per-table key sketches.
+    pub fp_rate: f64,
+}
+
+impl Default for ContinuousConfig {
+    fn default() -> Self {
+        Self {
+            window_batches: 4,
+            parallelism: default_parallelism(),
+            sampling: Some(ApproxConfig::default()),
+            confidence: 0.95,
+            fp_rate: 0.01,
+        }
+    }
+}
+
+/// A change notice for one (query, group) pair. `old == None` means the
+/// group was born this batch, `new == None` means it died (its last
+/// window row was evicted). Emitted in deterministic (query id, group
+/// value) order, and only when the results actually changed bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Notification {
+    pub query: usize,
+    pub group: Value,
+    pub old: Option<Vec<ApproxResult>>,
+    pub new: Option<Vec<ApproxResult>>,
+}
+
+/// What one [`ContinuousEngine::push_batch`] call did, summed over every
+/// registered query — the evidence that updates cost O(touched strata),
+/// not O(window).
+#[derive(Clone, Debug, Default)]
+pub struct BatchUpdate {
+    /// Epoch of the batch (0-based push index).
+    pub batch: u64,
+    pub notifications: Vec<Notification>,
+    /// Strata examined because their key changed (including removals).
+    pub touched_strata: u64,
+    /// Strata actually redrawn (live after the update).
+    pub redrawn_strata: u64,
+    /// Strata carried over untouched — the work the delta path skipped.
+    pub carried_strata: u64,
+    /// Live strata across all queries after the update.
+    pub total_strata: u64,
+    /// Arrival + eviction records spliced across all queries.
+    pub spliced_rows: u64,
+}
+
+/// One stratum of a query snapshot: the per-aggregate moment accumulators
+/// of a (group, join key) cell, plus its HT draw count and the arrival
+/// epoch its sampler RNG was derived from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StratumLine {
+    pub group: Value,
+    pub key: u64,
+    pub aggs: Vec<StratumAgg>,
+    pub draws: f64,
+    pub epoch: u64,
+}
+
+/// Full observable state of one standing query: per-group results and the
+/// underlying strata. [`PartialEq`] is the bit-identity check between the
+/// incremental path and a from-scratch recompute.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuerySnapshot {
+    pub groups: Vec<(Value, Vec<ApproxResult>)>,
+    pub strata: Vec<StratumLine>,
+}
+
+/// Incremental per-stratum state: per-aggregate running moments
+/// (Σ, Σx, Σx² live inside [`StratumAgg`]), the shared HT draw count, and
+/// the key's arrival epoch at draw time.
+#[derive(Clone, Debug)]
+struct StratumState {
+    aggs: Vec<StratumAgg>,
+    draws: f64,
+    epoch: u64,
+}
+
+/// What one query's update contributed to the [`BatchUpdate`].
+struct QueryDelta {
+    notifications: Vec<Notification>,
+    touched_strata: u64,
+    redrawn_strata: u64,
+    total_strata: u64,
+    spliced_rows: u64,
+}
+
+/// The ungrouped pseudo-group — same convention as the grouped one-shot
+/// path, so snapshots read uniformly.
+fn star() -> Value {
+    Value::Str("*".to_string())
+}
+
+/// Deterministic salt for a group value: FNV-1a over a tagged byte
+/// rendering. Value-based (not intern-order-based) so the incremental
+/// path and a fresh replay sample identically no matter which order the
+/// groups were first seen in.
+fn group_salt(v: &Value) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    };
+    match v {
+        Value::Key(k) => {
+            eat(0);
+            k.to_le_bytes().into_iter().for_each(&mut eat);
+        }
+        Value::Int(i) => {
+            eat(1);
+            i.to_le_bytes().into_iter().for_each(&mut eat);
+        }
+        Value::Float(f) => {
+            eat(2);
+            f.to_bits().to_le_bytes().into_iter().for_each(&mut eat);
+        }
+        Value::Str(s) => {
+            eat(3);
+            s.as_bytes().iter().copied().for_each(&mut eat);
+        }
+    }
+    h
+}
+
+/// Per-stratum sampler RNG: the PR-3 window derivation extended with a
+/// group salt so composite (key, group) strata decorrelate.
+fn stratum_rng(seed: u64, key: u64, salt: u64, epoch: u64) -> Rng {
+    Rng::new(
+        seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ salt
+            ^ epoch.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    )
+}
+
+fn intern(
+    gid_of: &mut BTreeMap<Value, u32>,
+    group_vals: &mut Vec<Value>,
+    rows_per_gid: &mut Vec<i64>,
+    gv: &Value,
+) -> u32 {
+    if let Some(&g) = gid_of.get(gv) {
+        return g;
+    }
+    let g = group_vals.len() as u32;
+    gid_of.insert(gv.clone(), g);
+    group_vals.push(gv.clone());
+    rows_per_gid.push(0);
+    g
+}
+
+/// A registered standing query: the plan resolved once at registration
+/// plus all incremental state. The engine owns one per query and updates
+/// them in parallel, one pass per micro-batch.
+struct PlanState {
+    // --- resolved plan (immutable after registration) ---
+    sql: String,
+    join_attr: String,
+    /// Engine table index per query input, FROM order.
+    tables: Vec<usize>,
+    key_cols: Vec<usize>,
+    /// Pushdown predicates per input: (column, op, literal).
+    preds: Vec<Vec<(usize, crate::relation::CmpOp, f64)>>,
+    /// Value column per (aggregate, input); `None` reads the fill value.
+    value_cols: Vec<Vec<Option<usize>>>,
+    ops: Vec<CombineOp>,
+    fills: Vec<f64>,
+    funcs: Vec<AggFunc>,
+    labels: Vec<String>,
+    /// Grouping column as (input, column, type); `None` = ungrouped.
+    group: Option<(usize, usize, ColumnType)>,
+    variant: JoinVariant,
+    sampling: Option<ApproxConfig>,
+    estimator: EstimatorKind,
+    confidence: f64,
+    seed: u64,
+    /// All join columns are their tables' sketch columns, so the shared
+    /// sketches can pre-filter definitely-dead keys.
+    use_sketch: bool,
+    // --- incremental state ---
+    /// One spliced cogroup per aggregate; identical stable sorts keep
+    /// them positionally aligned with each other and with `gid_cg`.
+    agg_cgs: Vec<CogroupColumns>,
+    /// Grouping-input rows carry their group id as the value; other
+    /// inputs carry 0. Positionally aligned with `agg_cgs`.
+    gid_cg: Option<CogroupColumns>,
+    gid_of: BTreeMap<Value, u32>,
+    group_vals: Vec<Value>,
+    /// Live window rows per group id; a group is live iff > 0.
+    rows_per_gid: Vec<i64>,
+    /// Newest arrival epoch per join key — a pure function of the window
+    /// contents (FIFO eviction can never outlive a newer arrival), which
+    /// is what makes the redraw RNG replayable from scratch.
+    key_epoch: HashMap<u64, u64>,
+    /// Group-major, key-ascending — the same fold order the one-shot
+    /// grouped path uses.
+    strata: BTreeMap<(Value, u64), StratumState>,
+    /// Group ids with a live stratum at each key (sorted).
+    key_groups: HashMap<u64, Vec<u32>>,
+    results: BTreeMap<Value, Vec<ApproxResult>>,
+}
+
+impl PlanState {
+    /// A metadata clone with blank incremental state — what `recompute`
+    /// replays the window through.
+    fn fresh(&self) -> PlanState {
+        let n = self.key_cols.len();
+        let mut st = PlanState {
+            sql: self.sql.clone(),
+            join_attr: self.join_attr.clone(),
+            tables: self.tables.clone(),
+            key_cols: self.key_cols.clone(),
+            preds: self.preds.clone(),
+            value_cols: self.value_cols.clone(),
+            ops: self.ops.clone(),
+            fills: self.fills.clone(),
+            funcs: self.funcs.clone(),
+            labels: self.labels.clone(),
+            group: self.group,
+            variant: self.variant,
+            sampling: self.sampling.clone(),
+            estimator: self.estimator,
+            confidence: self.confidence,
+            seed: self.seed,
+            use_sketch: self.use_sketch,
+            agg_cgs: self.funcs.iter().map(|_| CogroupColumns::new(n)).collect(),
+            gid_cg: self.group.map(|_| CogroupColumns::new(n)),
+            gid_of: BTreeMap::new(),
+            group_vals: Vec::new(),
+            rows_per_gid: Vec::new(),
+            key_epoch: HashMap::new(),
+            strata: BTreeMap::new(),
+            key_groups: HashMap::new(),
+            results: BTreeMap::new(),
+        };
+        st.init_results();
+        st
+    }
+
+    /// Ungrouped queries always expose their `*` row, even over an empty
+    /// window — matching what a from-scratch estimate over zero strata
+    /// produces.
+    fn init_results(&mut self) {
+        if self.group.is_none() {
+            let s = star();
+            let r = self.estimate_group(&s);
+            self.results.insert(s, r);
+        }
+    }
+
+    fn row_passes(&self, i: usize, row: &Row) -> bool {
+        self.preds[i]
+            .iter()
+            .all(|p| row[p.0].as_f64().map(|v| p.1.eval(v, p.2)).unwrap_or(false))
+    }
+
+    fn key_of(&self, i: usize, row: &Row) -> Result<u64, JoinError> {
+        row.get(self.key_cols[i]).and_then(|v| v.as_key()).ok_or_else(|| {
+            JoinError::Runtime(format!(
+                "join attribute {} holds a non-key value in input {i}",
+                self.join_attr
+            ))
+        })
+    }
+
+    fn value_of(&self, ai: usize, i: usize, row: &Row) -> Result<f64, JoinError> {
+        match self.value_cols[ai][i] {
+            Some(ci) => row[ci].as_f64().ok_or_else(|| {
+                JoinError::Runtime(format!(
+                    "aggregate {} reads a non-numeric cell in input {i}",
+                    self.labels[ai]
+                ))
+            }),
+            None => Ok(self.fills[ai]),
+        }
+    }
+
+    /// True when the shared sketches prove the key joins nothing. Safe as
+    /// a pure fast path: counting Blooms have no false negatives, so an
+    /// "absent" verdict means the table holds no window rows for the key
+    /// and the run checks below would come up empty anyway.
+    fn dead_by_sketch(&self, k: u64, sketches: &[Option<CountingBloomFilter>]) -> bool {
+        if !self.use_sketch || !self.variant.is_inner() {
+            return false;
+        }
+        self.tables.iter().any(|&ti| match &sketches[ti] {
+            Some(s) => !s.contains_key64(k),
+            None => false,
+        })
+    }
+
+    /// Sample (or exactly fold) one aggregate's sides into a stratum agg.
+    /// Fresh identically-seeded RNG per aggregate: the samplers consume
+    /// randomness by side lengths and drawn indices only, so every
+    /// aggregate of a stratum draws the same edges and HT draw counts
+    /// agree.
+    fn draw_into(
+        &self,
+        ai: usize,
+        k: u64,
+        salt: u64,
+        epoch: u64,
+        sides: &[&[f64]],
+        aggs: &mut Vec<StratumAgg>,
+        draws: &mut f64,
+    ) {
+        match &self.sampling {
+            None => aggs.push(cross_product_agg(sides, self.ops[ai])),
+            Some(cfg) => {
+                let pop = population(sides);
+                let b = cfg.params.sample_size(k, pop);
+                let mut rng = stratum_rng(self.seed, k, salt, epoch);
+                match self.estimator {
+                    EstimatorKind::Clt => {
+                        aggs.push(sample_edges_with_replacement(&mut rng, sides, b, self.ops[ai]));
+                    }
+                    EstimatorKind::HorvitzThompson => {
+                        let (a, d) = sample_edges_dedup(&mut rng, sides, b, self.ops[ai]);
+                        if ai == 0 {
+                            *draws = d;
+                        } else {
+                            debug_assert_eq!(*draws, d, "draw counts diverged across aggregates");
+                        }
+                        aggs.push(a);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Redraw the (group, key) stratum of a grouped query. Caller
+    /// guarantees liveness: the grouping run contains `gid` and every
+    /// other input has a run at `k`.
+    fn draw_grouped(&self, k: u64, gid: u32, gi: usize) -> StratumState {
+        let n = self.key_cols.len();
+        let gv = &self.group_vals[gid as usize];
+        let epoch = *self.key_epoch.get(&k).expect("live key has an arrival epoch");
+        let salt = group_salt(gv);
+        let gid_run = self
+            .gid_cg
+            .as_ref()
+            .expect("grouped plan")
+            .run_of_key(gi, k)
+            .expect("live stratum has grouping rows");
+        let gval = gid as f64;
+        let mut aggs = Vec::with_capacity(self.funcs.len());
+        let mut draws = 0.0;
+        for ai in 0..self.funcs.len() {
+            let agg_run = self.agg_cgs[ai].run_of_key(gi, k).expect("aligned agg run");
+            debug_assert_eq!(agg_run.len(), gid_run.len(), "gid/agg runs misaligned");
+            let subset: Vec<f64> = gid_run
+                .iter()
+                .zip(agg_run)
+                .filter(|(g, _)| **g == gval)
+                .map(|(_, &v)| v)
+                .collect();
+            let mut sides: Vec<&[f64]> = Vec::with_capacity(n);
+            for i in 0..n {
+                if i == gi {
+                    sides.push(subset.as_slice());
+                } else {
+                    sides.push(self.agg_cgs[ai].run_of_key(i, k).expect("live stratum side"));
+                }
+            }
+            self.draw_into(ai, k, salt, epoch, &sides, &mut aggs, &mut draws);
+        }
+        StratumState { aggs, draws, epoch }
+    }
+
+    /// Redraw the key's stratum of an ungrouped query; `None` = dead
+    /// (inner: some input has no rows; variants: the key contributes
+    /// nothing, e.g. a matched anti-join key).
+    fn draw_ungrouped(&self, k: u64) -> Option<StratumState> {
+        let n = self.key_cols.len();
+        let epoch = *self.key_epoch.get(&k)?;
+        let salt = group_salt(&star());
+        let mut aggs = Vec::with_capacity(self.funcs.len());
+        let mut draws = 0.0;
+        if self.variant.is_inner() {
+            for ai in 0..self.funcs.len() {
+                let mut sides: Vec<&[f64]> = Vec::with_capacity(n);
+                for i in 0..n {
+                    sides.push(self.agg_cgs[ai].run_of_key(i, k)?);
+                }
+                self.draw_into(ai, k, salt, epoch, &sides, &mut aggs, &mut draws);
+            }
+        } else {
+            for ai in 0..self.funcs.len() {
+                let l = self.agg_cgs[ai].run_of_key(0, k);
+                let r = self.agg_cgs[ai].run_of_key(1, k);
+                aggs.push(variant_stratum_for_key(l, r, self.ops[ai], self.variant)?);
+            }
+        }
+        Some(StratumState { aggs, draws, epoch })
+    }
+
+    /// Fold one group's strata through the shared estimator — the exact
+    /// routine the one-shot coordinator uses, so a from-scratch recompute
+    /// is the bit-identical twin.
+    fn estimate_group(&self, gv: &Value) -> Vec<ApproxResult> {
+        let sampled = self.sampling.is_some();
+        let entries: Vec<(u64, &StratumState)> = self
+            .strata
+            .range((gv.clone(), 0u64)..=(gv.clone(), u64::MAX))
+            .map(|((_, k), s)| (*k, s))
+            .collect();
+        (0..self.funcs.len())
+            .map(|ai| {
+                let mut smap: HashMap<u64, StratumAgg> = HashMap::with_capacity(entries.len());
+                let mut dmap: HashMap<u64, f64> = HashMap::new();
+                for (k, s) in &entries {
+                    smap.insert(*k, s.aggs[ai]);
+                    if s.draws > 0.0 {
+                        dmap.insert(*k, s.draws);
+                    }
+                }
+                estimate_result(
+                    self.funcs[ai],
+                    sampled,
+                    self.estimator,
+                    &smap,
+                    &dmap,
+                    self.confidence,
+                )
+            })
+            .collect()
+    }
+
+    /// Apply one micro-batch delta: project, splice, redraw touched
+    /// strata, re-estimate touched groups. Validation happens before any
+    /// splice, so an error leaves the incremental state untouched (bar
+    /// interning of new group values, which is observationally inert).
+    fn update(
+        &mut self,
+        qi: usize,
+        batch: &[Vec<Row>],
+        evicted: &[Vec<Row>],
+        epoch: u64,
+        sketches: &[Option<CountingBloomFilter>],
+    ) -> Result<QueryDelta, JoinError> {
+        let n = self.key_cols.len();
+        let n_aggs = self.funcs.len();
+
+        // Phase 1 — validate + project the delta.
+        let mut arr: Vec<Vec<Vec<Record>>> = vec![vec![Vec::new(); n]; n_aggs];
+        let mut gid_arr: Vec<Vec<Record>> = vec![Vec::new(); n];
+        let mut retr: Vec<Vec<(u64, u32)>> = Vec::with_capacity(n);
+        let mut gid_delta: BTreeMap<u32, i64> = BTreeMap::new();
+        let mut changed: BTreeSet<u64> = BTreeSet::new();
+        let mut arrived: BTreeSet<u64> = BTreeSet::new();
+        let mut spliced_rows = 0u64;
+        for i in 0..n {
+            let ti = self.tables[i];
+            for row in &batch[ti] {
+                if !self.row_passes(i, row) {
+                    continue;
+                }
+                let k = self.key_of(i, row)?;
+                changed.insert(k);
+                arrived.insert(k);
+                spliced_rows += 1;
+                for (ai, recs) in arr.iter_mut().enumerate() {
+                    let v = self.value_of(ai, i, row)?;
+                    recs[i].push(Record::new(k, v));
+                }
+                if let Some((gi, gc, gty)) = self.group {
+                    let g = if gi == i {
+                        let gv = canon_group(&row[gc], gty);
+                        let gid = intern(
+                            &mut self.gid_of,
+                            &mut self.group_vals,
+                            &mut self.rows_per_gid,
+                            &gv,
+                        );
+                        *gid_delta.entry(gid).or_insert(0) += 1;
+                        gid as f64
+                    } else {
+                        0.0
+                    };
+                    gid_arr[i].push(Record::new(k, g));
+                }
+            }
+            let mut counts: BTreeMap<u64, u32> = BTreeMap::new();
+            for row in &evicted[ti] {
+                if !self.row_passes(i, row) {
+                    continue;
+                }
+                let k = self.key_of(i, row)?;
+                changed.insert(k);
+                spliced_rows += 1;
+                *counts.entry(k).or_insert(0) += 1;
+                if let Some((gi, gc, gty)) = self.group {
+                    if gi == i {
+                        let gv = canon_group(&row[gc], gty);
+                        let gid = *self
+                            .gid_of
+                            .get(&gv)
+                            .expect("evicted group was interned on arrival");
+                        *gid_delta.entry(gid).or_insert(0) -= 1;
+                    }
+                }
+            }
+            retr.push(counts.into_iter().collect());
+        }
+
+        // Phase 2 — splice the delta into the persistent cogroups.
+        for (ai, recs) in arr.iter().enumerate() {
+            let slices: Vec<&[Record]> = recs.iter().map(|v| v.as_slice()).collect();
+            self.agg_cgs[ai].apply_delta(&slices, &retr);
+        }
+        if let Some(cg) = self.gid_cg.as_mut() {
+            let slices: Vec<&[Record]> = gid_arr.iter().map(|v| v.as_slice()).collect();
+            cg.apply_delta(&slices, &retr);
+        }
+        for &k in &arrived {
+            self.key_epoch.insert(k, epoch);
+        }
+
+        // Group liveness bookkeeping: births and deaths must notify even
+        // when no live stratum changed (e.g. a group whose rows all sit
+        // at unmatched keys).
+        let mut touched_groups: BTreeSet<Value> = BTreeSet::new();
+        for (gid, d) in gid_delta {
+            let slot = &mut self.rows_per_gid[gid as usize];
+            let was = *slot > 0;
+            *slot += d;
+            debug_assert!(*slot >= 0, "group row count went negative");
+            if (*slot > 0) != was {
+                touched_groups.insert(self.group_vals[gid as usize].clone());
+            }
+        }
+
+        // Phase 3 — redraw the strata of changed keys only.
+        let mut touched_strata = 0u64;
+        let mut redrawn = 0u64;
+        match self.group {
+            Some((gi, _, _)) => {
+                for &k in &changed {
+                    let dead = self.dead_by_sketch(k, sketches);
+                    let new_gids: Vec<u32> = if dead {
+                        Vec::new()
+                    } else {
+                        match self.gid_cg.as_ref().expect("grouped plan").run_of_key(gi, k) {
+                            Some(run) => {
+                                let s: BTreeSet<u32> = run.iter().map(|&g| g as u32).collect();
+                                s.into_iter().collect()
+                            }
+                            None => Vec::new(),
+                        }
+                    };
+                    let old_gids = self.key_groups.get(&k).cloned().unwrap_or_default();
+                    let others_ok = !dead
+                        && (0..n)
+                            .filter(|&i| i != gi)
+                            .all(|i| self.agg_cgs[0].run_of_key(i, k).is_some());
+                    let union: BTreeSet<u32> =
+                        new_gids.iter().chain(old_gids.iter()).copied().collect();
+                    let mut live_gids: Vec<u32> = Vec::new();
+                    for gid in union {
+                        touched_strata += 1;
+                        let gv = self.group_vals[gid as usize].clone();
+                        touched_groups.insert(gv.clone());
+                        if others_ok && new_gids.binary_search(&gid).is_ok() {
+                            let s = self.draw_grouped(k, gid, gi);
+                            redrawn += 1;
+                            self.strata.insert((gv, k), s);
+                            live_gids.push(gid);
+                        } else {
+                            self.strata.remove(&(gv, k));
+                        }
+                    }
+                    if live_gids.is_empty() {
+                        self.key_groups.remove(&k);
+                    } else {
+                        self.key_groups.insert(k, live_gids);
+                    }
+                }
+            }
+            None => {
+                for &k in &changed {
+                    touched_strata += 1;
+                    let drawn = if self.dead_by_sketch(k, sketches) {
+                        None
+                    } else {
+                        self.draw_ungrouped(k)
+                    };
+                    match drawn {
+                        Some(s) => {
+                            redrawn += 1;
+                            self.strata.insert((star(), k), s);
+                        }
+                        None => {
+                            self.strata.remove(&(star(), k));
+                        }
+                    }
+                }
+                if !changed.is_empty() {
+                    touched_groups.insert(star());
+                }
+            }
+        }
+        // Drop arrival epochs of keys that no longer hold any rows.
+        for &k in &changed {
+            if (0..n).all(|i| self.agg_cgs[0].run_of_key(i, k).is_none()) {
+                self.key_epoch.remove(&k);
+            }
+        }
+
+        // Phase 4 — re-estimate touched groups, notify on changed bits.
+        let mut notifications = Vec::new();
+        for gv in touched_groups {
+            let live = match self.group {
+                Some(_) => self
+                    .gid_of
+                    .get(&gv)
+                    .map(|&g| self.rows_per_gid[g as usize] > 0)
+                    .unwrap_or(false),
+                None => true,
+            };
+            if !live {
+                if let Some(old) = self.results.remove(&gv) {
+                    notifications.push(Notification {
+                        query: qi,
+                        group: gv,
+                        old: Some(old),
+                        new: None,
+                    });
+                }
+                continue;
+            }
+            let new = self.estimate_group(&gv);
+            let old = self.results.get(&gv).cloned();
+            if old.as_deref() == Some(new.as_slice()) {
+                continue;
+            }
+            self.results.insert(gv.clone(), new.clone());
+            notifications.push(Notification {
+                query: qi,
+                group: gv,
+                old,
+                new: Some(new),
+            });
+        }
+        Ok(QueryDelta {
+            notifications,
+            touched_strata,
+            redrawn_strata: redrawn,
+            total_strata: self.strata.len() as u64,
+            spliced_rows,
+        })
+    }
+
+    fn snapshot(&self) -> QuerySnapshot {
+        let strata = self
+            .strata
+            .iter()
+            .map(|((g, k), s)| StratumLine {
+                group: g.clone(),
+                key: *k,
+                aggs: s.aggs.clone(),
+                draws: s.draws,
+                epoch: s.epoch,
+            })
+            .collect();
+        let groups = self
+            .results
+            .iter()
+            .map(|(g, r)| (g.clone(), r.clone()))
+            .collect();
+        QuerySnapshot { groups, strata }
+    }
+}
+
+/// The standing-query engine: register tables, register queries, push
+/// micro-batches, receive notifications.
+pub struct ContinuousEngine {
+    cfg: ContinuousConfig,
+    /// Empty (schema-only) relations — registration resolves columns
+    /// against these with the same rules the one-shot lowering uses.
+    tables: Vec<Relation>,
+    /// Each table's sole KEY column, if any — the sketched attribute.
+    sketch_cols: Vec<Option<usize>>,
+    sketches: Vec<Option<CountingBloomFilter>>,
+    /// Retained micro-batches, oldest first; each entry is per-table rows.
+    window: VecDeque<Vec<Vec<Row>>>,
+    queries: Vec<PlanState>,
+    batches_pushed: u64,
+}
+
+impl ContinuousEngine {
+    pub fn new(cfg: ContinuousConfig) -> Self {
+        assert!(cfg.window_batches >= 1, "window needs at least one batch");
+        assert!(cfg.parallelism >= 1, "parallelism must be at least 1");
+        Self {
+            cfg,
+            tables: Vec::new(),
+            sketch_cols: Vec::new(),
+            sketches: Vec::new(),
+            window: VecDeque::new(),
+            queries: Vec::new(),
+            batches_pushed: 0,
+        }
+    }
+
+    /// Register a table schema. All tables must be registered before the
+    /// first batch so batch arity stays fixed.
+    pub fn add_table(&mut self, name: &str, schema: Schema) -> Result<usize, JoinError> {
+        if self.batches_pushed > 0 {
+            return Err(JoinError::Runtime(
+                "tables must be registered before the first batch".to_string(),
+            ));
+        }
+        let rel = Relation::new(name, schema, Vec::new(), 1)
+            .map_err(|e| JoinError::Runtime(format!("{e:#}")))?;
+        let kc = rel.schema.sole_key_col();
+        self.tables.push(rel);
+        self.sketch_cols.push(kc);
+        self.sketches.push(None);
+        Ok(self.tables.len() - 1)
+    }
+
+    /// Builder-style [`Self::add_table`].
+    pub fn with_table(mut self, name: &str, schema: Schema) -> Self {
+        self.add_table(name, schema).expect("table registration");
+        self
+    }
+
+    /// Register a standing query. The SQL is parsed and lowered **once**:
+    /// predicates, value/grouping columns, and the join variant are
+    /// resolved here, and every later batch only pays for the delta. A
+    /// query registered mid-stream replays the retained window so its
+    /// state is indistinguishable from one registered at batch 0.
+    pub fn register(&mut self, sql: &str) -> Result<usize, JoinError> {
+        let query =
+            parse(sql).map_err(|e| JoinError::Runtime(format!("parse error: {e:#}")))?;
+        let plan = LogicalPlan::from_query(&query);
+        let n = plan.tables.len();
+        let mut tables = Vec::with_capacity(n);
+        for t in &plan.tables {
+            let ti = self
+                .tables
+                .iter()
+                .position(|r| r.name.eq_ignore_ascii_case(t))
+                .ok_or_else(|| {
+                    JoinError::Runtime(format!(
+                        "table {t} is not registered with the continuous engine"
+                    ))
+                })?;
+            tables.push(ti);
+        }
+        let rels: Vec<&Relation> = tables.iter().map(|&ti| &self.tables[ti]).collect();
+        let names = plan.tables.clone();
+
+        let mut key_cols = Vec::with_capacity(n);
+        for (i, r) in rels.iter().enumerate() {
+            let ci = r.resolve(&plan.join_attr, &plan.join_attr).ok_or_else(|| {
+                JoinError::Runtime(format!(
+                    "join attribute {} not found in table {}",
+                    plan.join_attr, names[i]
+                ))
+            })?;
+            let ty = r.schema.columns[ci].ty;
+            if !matches!(ty, ColumnType::Key | ColumnType::Int) {
+                return Err(JoinError::Runtime(format!(
+                    "join attribute {} of table {} has type {}, joins need KEY or INT",
+                    plan.join_attr,
+                    names[i],
+                    ty.name()
+                )));
+            }
+            key_cols.push(ci);
+        }
+
+        let mut preds: Vec<Vec<(usize, crate::relation::CmpOp, f64)>> = vec![Vec::new(); n];
+        for p in &plan.predicates {
+            let (ti, ci) = resolve_column(&p.column, &names, &rels, &plan.join_attr)?;
+            if rels[ti].schema.columns[ci].ty == ColumnType::Str {
+                return Err(JoinError::Runtime(format!(
+                    "predicate {p} compares a STR column numerically"
+                )));
+            }
+            preds[ti].push((ci, p.op, p.literal));
+        }
+
+        let group = match &plan.group_by {
+            Some(col) => {
+                let (ti, ci) = resolve_column(col, &names, &rels, &plan.join_attr)?;
+                Some((ti, ci, rels[ti].schema.columns[ci].ty))
+            }
+            None => None,
+        };
+
+        let n_aggs = plan.aggregates.len();
+        let mut value_cols = Vec::with_capacity(n_aggs);
+        let mut ops = Vec::with_capacity(n_aggs);
+        let mut fills = Vec::with_capacity(n_aggs);
+        let mut funcs = Vec::with_capacity(n_aggs);
+        let mut labels = Vec::with_capacity(n_aggs);
+        for agg in &plan.aggregates {
+            let (op, fill) = effective_op(agg);
+            let mut cols: Vec<Option<usize>> = vec![None; n];
+            for term in &agg.terms {
+                let (ti, ci) = resolve_column(term, &names, &rels, &plan.join_attr)?;
+                if cols[ti].is_some() {
+                    return Err(JoinError::Runtime(format!(
+                        "aggregate {} references table {} twice",
+                        agg.label(),
+                        names[ti]
+                    )));
+                }
+                if rels[ti].schema.columns[ci].ty == ColumnType::Str {
+                    return Err(JoinError::Runtime(format!(
+                        "aggregate {} reads STR column {term}",
+                        agg.label()
+                    )));
+                }
+                cols[ti] = Some(ci);
+            }
+            value_cols.push(cols);
+            ops.push(op);
+            fills.push(fill);
+            funcs.push(agg.func);
+            labels.push(agg.label());
+        }
+
+        let variant = query.variant;
+        if !variant.is_inner() {
+            // The parser already rejects relational features on variant
+            // SQL; re-check here so programmatic plans fail loudly too.
+            if n != 2 || group.is_some() || !plan.predicates.is_empty() || n_aggs != 1 {
+                return Err(JoinError::Unsupported {
+                    strategy: "continuous".to_string(),
+                    reason: format!(
+                        "{} joins support exactly two tables, one aggregate, \
+                         no predicates and no GROUP BY",
+                        variant.tag()
+                    ),
+                });
+            }
+        }
+
+        // Non-inner variants run exact (membership semantics don't
+        // survive edge sampling) — the PR-8 streaming rule.
+        let sampling = if variant.is_inner() {
+            self.cfg.sampling.clone()
+        } else {
+            None
+        };
+        let estimator = self
+            .cfg
+            .sampling
+            .as_ref()
+            .map(|c| c.estimator)
+            .unwrap_or(EstimatorKind::Clt);
+        let base_seed = self.cfg.sampling.as_ref().map(|c| c.seed).unwrap_or(7);
+        let qid = self.queries.len();
+        let seed = base_seed ^ (qid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let confidence = query
+            .budget
+            .error
+            .map(|e| e.confidence)
+            .unwrap_or(self.cfg.confidence);
+        let use_sketch = variant.is_inner()
+            && tables
+                .iter()
+                .zip(&key_cols)
+                .all(|(&ti, &kc)| self.sketch_cols[ti] == Some(kc));
+
+        let mut st = PlanState {
+            sql: sql.to_string(),
+            join_attr: plan.join_attr.clone(),
+            tables,
+            key_cols,
+            preds,
+            value_cols,
+            ops,
+            fills,
+            funcs,
+            labels,
+            group,
+            variant,
+            sampling,
+            estimator,
+            confidence,
+            seed,
+            use_sketch,
+            agg_cgs: (0..n_aggs).map(|_| CogroupColumns::new(n)).collect(),
+            gid_cg: group.map(|_| CogroupColumns::new(n)),
+            gid_of: BTreeMap::new(),
+            group_vals: Vec::new(),
+            rows_per_gid: Vec::new(),
+            key_epoch: HashMap::new(),
+            strata: BTreeMap::new(),
+            key_groups: HashMap::new(),
+            results: BTreeMap::new(),
+        };
+        st.init_results();
+
+        // Mid-stream registration: replay the retained window at its
+        // original epochs so the new query's state matches batch-0
+        // registration bit for bit.
+        let first_epoch = self.batches_pushed - self.window.len() as u64;
+        let empty: Vec<Vec<Row>> = vec![Vec::new(); self.tables.len()];
+        for (j, b) in self.window.iter().enumerate() {
+            st.update(qid, b, &empty, first_epoch + j as u64, &self.sketches)?;
+        }
+        self.queries.push(st);
+        Ok(qid)
+    }
+
+    /// Ingest one micro-batch (`batch[t]` = new rows of table `t`),
+    /// evicting the oldest batch once the window is full. Every
+    /// registered query updates from the delta in one shared pass,
+    /// parallelized across queries.
+    pub fn push_batch(&mut self, batch: Vec<Vec<Row>>) -> Result<BatchUpdate, JoinError> {
+        if batch.len() != self.tables.len() {
+            return Err(JoinError::Runtime(format!(
+                "batch has {} tables, engine has {}",
+                batch.len(),
+                self.tables.len()
+            )));
+        }
+        let epoch = self.batches_pushed;
+        let evicted: Vec<Vec<Row>> = if self.window.len() >= self.cfg.window_batches {
+            self.window.pop_front().expect("window non-empty")
+        } else {
+            vec![Vec::new(); self.tables.len()]
+        };
+
+        // Size the shared sketches off the first batch.
+        if epoch == 0 {
+            for (ti, rows) in batch.iter().enumerate() {
+                if self.sketch_cols[ti].is_some() {
+                    let cap =
+                        ((rows.len() as u64) * self.cfg.window_batches as u64 * 2).max(1024);
+                    self.sketches[ti] =
+                        Some(CountingBloomFilter::with_capacity(cap, self.cfg.fp_rate));
+                }
+            }
+        }
+        // Evictions out before arrivals in — the PR-3 master order.
+        for (ti, rows) in evicted.iter().enumerate() {
+            if let (Some(kc), Some(sk)) = (self.sketch_cols[ti], self.sketches[ti].as_mut()) {
+                for row in rows {
+                    if let Some(k) = row.get(kc).and_then(|v| v.as_key()) {
+                        sk.remove_key64(k);
+                    }
+                }
+            }
+        }
+        for (ti, rows) in batch.iter().enumerate() {
+            if let (Some(kc), Some(sk)) = (self.sketch_cols[ti], self.sketches[ti].as_mut()) {
+                for row in rows {
+                    if let Some(k) = row.get(kc).and_then(|v| v.as_key()) {
+                        sk.insert_key64(k);
+                    }
+                }
+            }
+        }
+
+        // One pass, all queries — deterministic regardless of thread
+        // count because each query's update is self-contained and the
+        // merge below runs in query-id order.
+        let exec = ParallelExecutor::new(self.cfg.parallelism);
+        let states: Vec<Option<PlanState>> =
+            std::mem::take(&mut self.queries).into_iter().map(Some).collect();
+        let batch_ref: &[Vec<Row>] = &batch;
+        let evicted_ref: &[Vec<Row>] = &evicted;
+        let sketches_ref: &[Option<CountingBloomFilter>] = &self.sketches;
+        let outcomes = exec.map_with(states, move |qi, slot: &mut Option<PlanState>| {
+            let mut st = slot.take().expect("plan state present");
+            let out = st.update(qi, batch_ref, evicted_ref, epoch, sketches_ref);
+            (st, out)
+        });
+
+        let mut up = BatchUpdate {
+            batch: epoch,
+            ..Default::default()
+        };
+        let mut first_err = None;
+        for (st, out) in outcomes {
+            match out {
+                Ok(d) => {
+                    up.notifications.extend(d.notifications);
+                    up.touched_strata += d.touched_strata;
+                    up.redrawn_strata += d.redrawn_strata;
+                    up.carried_strata += d.total_strata.saturating_sub(d.redrawn_strata);
+                    up.total_strata += d.total_strata;
+                    up.spliced_rows += d.spliced_rows;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+            self.queries.push(st);
+        }
+        self.window.push_back(batch);
+        self.batches_pushed += 1;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(up),
+        }
+    }
+
+    /// The query's current incremental state, in snapshot form.
+    pub fn current(&self, qid: usize) -> Result<QuerySnapshot, JoinError> {
+        self.queries
+            .get(qid)
+            .map(|st| st.snapshot())
+            .ok_or_else(|| JoinError::Runtime(format!("unknown query id {qid}")))
+    }
+
+    /// The from-scratch twin: replay the retained window through a fresh
+    /// copy of the plan and snapshot the result. Shares no incremental
+    /// state with [`Self::current`]; the two must be `==` after every
+    /// batch, at every thread count — that equality is the subsystem's
+    /// standing invariant.
+    pub fn recompute(&self, qid: usize) -> Result<QuerySnapshot, JoinError> {
+        let st0 = self
+            .queries
+            .get(qid)
+            .ok_or_else(|| JoinError::Runtime(format!("unknown query id {qid}")))?;
+        let mut st = st0.fresh();
+        let first_epoch = self.batches_pushed - self.window.len() as u64;
+        let empty: Vec<Vec<Row>> = vec![Vec::new(); self.tables.len()];
+        for (j, b) in self.window.iter().enumerate() {
+            st.update(qid, b, &empty, first_epoch + j as u64, &self.sketches)?;
+        }
+        Ok(st.snapshot())
+    }
+
+    /// Current per-group results of a query (group-ascending).
+    pub fn results(&self, qid: usize) -> Option<&BTreeMap<Value, Vec<ApproxResult>>> {
+        self.queries.get(qid).map(|st| &st.results)
+    }
+
+    /// Aggregate labels of a query, SELECT order.
+    pub fn labels(&self, qid: usize) -> Option<&[String]> {
+        self.queries.get(qid).map(|st| st.labels.as_slice())
+    }
+
+    /// The SQL a query was registered with.
+    pub fn sql(&self, qid: usize) -> Option<&str> {
+        self.queries.get(qid).map(|st| st.sql.as_str())
+    }
+
+    pub fn num_queries(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn batches_pushed(&self) -> u64 {
+        self.batches_pushed
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn config(&self) -> &ContinuousConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_table_engine(cfg: ContinuousConfig) -> ContinuousEngine {
+        ContinuousEngine::new(cfg)
+            .with_table("a", feed::feed_schema())
+            .with_table("b", feed::feed_schema())
+    }
+
+    fn row(k: u64, g: i64, v: f64, x: f64) -> Row {
+        vec![Value::Key(k), Value::Int(g), Value::Float(v), Value::Float(x)]
+    }
+
+    fn exact_cfg(window: usize) -> ContinuousConfig {
+        ContinuousConfig {
+            window_batches: window,
+            parallelism: 1,
+            sampling: None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ungrouped_exact_count_tracks_the_window() {
+        let mut eng = two_table_engine(exact_cfg(2));
+        let q = eng
+            .register("SELECT COUNT(*) FROM a, b WHERE a.k = b.k")
+            .unwrap();
+        // batch 0: key 1 has 2x1 pairs, key 2 unmatched
+        eng.push_batch(vec![
+            vec![row(1, 0, 1.0, 0.0), row(1, 0, 2.0, 0.0), row(2, 0, 9.0, 0.0)],
+            vec![row(1, 1, 5.0, 0.0)],
+        ])
+        .unwrap();
+        let r = eng.results(q).unwrap().get(&star()).unwrap()[0];
+        assert_eq!(r.estimate, 2.0);
+        // batch 1: key 2 gets a partner (1 pair), key 1 gains one left row
+        eng.push_batch(vec![vec![row(1, 0, 3.0, 0.0)], vec![row(2, 1, 4.0, 0.0)]])
+            .unwrap();
+        let r = eng.results(q).unwrap().get(&star()).unwrap()[0];
+        assert_eq!(r.estimate, 3.0 + 1.0);
+        // batch 2 evicts batch 0: key 1 keeps only its batch-1 row (1x0
+        // pairs -> dead), key 2 keeps its right row only
+        eng.push_batch(vec![vec![], vec![]]).unwrap();
+        let r = eng.results(q).unwrap().get(&star()).unwrap()[0];
+        assert_eq!(r.estimate, 0.0);
+    }
+
+    #[test]
+    fn incremental_matches_recompute_over_churn() {
+        for sampling in [
+            None,
+            Some(ApproxConfig::default()),
+            Some(ApproxConfig {
+                estimator: EstimatorKind::HorvitzThompson,
+                ..Default::default()
+            }),
+        ] {
+            let cfg = ContinuousConfig {
+                window_batches: 3,
+                parallelism: 2,
+                sampling,
+                ..Default::default()
+            };
+            let mut eng = two_table_engine(cfg);
+            let q0 = eng
+                .register("SELECT g, SUM(a.v * b.x) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+                .unwrap();
+            let q1 = eng
+                .register("SELECT AVG(a.v) FROM a, b WHERE a.k = b.k AND a.v > 3")
+                .unwrap();
+            let mut feed = feed::RowFeed::new(11, feed::FeedSpec {
+                rows_per_batch: 40,
+                keyspace: 12,
+                groups: 3,
+                ..Default::default()
+            });
+            for _ in 0..10 {
+                eng.push_batch(feed.next_batch()).unwrap();
+                for q in [q0, q1] {
+                    assert_eq!(
+                        eng.current(q).unwrap(),
+                        eng.recompute(q).unwrap(),
+                        "incremental state diverged from the from-scratch twin"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn notifications_fire_only_for_touched_groups() {
+        let mut eng = two_table_engine(exact_cfg(4));
+        let q = eng
+            .register("SELECT g, COUNT(*) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+            .unwrap();
+        eng.push_batch(vec![
+            vec![row(1, 10, 1.0, 0.0), row(2, 20, 1.0, 0.0)],
+            vec![row(1, 0, 1.0, 0.0), row(2, 0, 1.0, 0.0)],
+        ])
+        .unwrap();
+        // touch key 1 only -> group 10 must notify, group 20 must not
+        let up = eng
+            .push_batch(vec![vec![row(1, 10, 1.0, 0.0)], vec![]])
+            .unwrap();
+        let groups: Vec<&Value> = up.notifications.iter().map(|n| &n.group).collect();
+        assert_eq!(groups, vec![&Value::Int(10)], "query {q}: {groups:?}");
+        // untouched batch -> no notifications at all
+        let up = eng.push_batch(vec![vec![], vec![]]).unwrap();
+        assert!(up.notifications.is_empty());
+    }
+
+    #[test]
+    fn group_death_notifies_with_new_none() {
+        let mut eng = two_table_engine(exact_cfg(1));
+        eng.register("SELECT g, COUNT(*) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+            .unwrap();
+        eng.push_batch(vec![vec![row(1, 7, 1.0, 0.0)], vec![row(1, 0, 1.0, 0.0)]])
+            .unwrap();
+        // window of 1: next batch evicts everything, group 7 dies
+        let up = eng.push_batch(vec![vec![], vec![]]).unwrap();
+        let death = up
+            .notifications
+            .iter()
+            .find(|n| n.group == Value::Int(7))
+            .expect("death notification");
+        assert!(death.old.is_some() && death.new.is_none());
+    }
+
+    #[test]
+    fn mid_stream_registration_matches_batch_zero_registration() {
+        let spec = feed::FeedSpec {
+            rows_per_batch: 30,
+            keyspace: 10,
+            groups: 3,
+            ..Default::default()
+        };
+        let sql = "SELECT g, SUM(a.v + b.v) FROM a, b WHERE a.k = b.k GROUP BY a.g";
+        let mut early = two_table_engine(ContinuousConfig {
+            window_batches: 3,
+            ..Default::default()
+        });
+        let qe = early.register(sql).unwrap();
+        let mut feed_a = feed::RowFeed::new(5, spec.clone());
+        let mut late = two_table_engine(ContinuousConfig {
+            window_batches: 3,
+            ..Default::default()
+        });
+        let mut feed_b = feed::RowFeed::new(5, spec);
+        for _ in 0..5 {
+            early.push_batch(feed_a.next_batch()).unwrap();
+            late.push_batch(feed_b.next_batch()).unwrap();
+        }
+        let ql = late.register(sql).unwrap();
+        assert_eq!(early.current(qe).unwrap(), late.current(ql).unwrap());
+    }
+
+    #[test]
+    fn semi_join_variant_runs_exact_and_matches_recompute() {
+        let mut eng = two_table_engine(ContinuousConfig {
+            window_batches: 2,
+            ..Default::default()
+        });
+        let q = eng
+            .register("SELECT SUM(a.v) FROM a SEMI JOIN b ON a.k = b.k")
+            .unwrap();
+        eng.push_batch(vec![
+            vec![row(1, 0, 2.0, 0.0), row(2, 0, 5.0, 0.0)],
+            vec![row(1, 0, 1.0, 0.0)],
+        ])
+        .unwrap();
+        // only key 1 is matched: SUM(a.v) over matched left rows = 2
+        let r = eng.results(q).unwrap().get(&star()).unwrap()[0];
+        assert_eq!(r.estimate, 2.0);
+        assert_eq!(eng.current(q).unwrap(), eng.recompute(q).unwrap());
+    }
+
+    #[test]
+    fn registration_rejects_unknown_tables_and_bad_columns() {
+        let mut eng = two_table_engine(ContinuousConfig::default());
+        assert!(eng
+            .register("SELECT SUM(c.v) FROM c, b WHERE c.k = b.k")
+            .is_err());
+        assert!(eng
+            .register("SELECT SUM(a.nope + b.v) FROM a, b WHERE a.k = b.k")
+            .is_err());
+        assert_eq!(eng.num_queries(), 0);
+    }
+}

@@ -305,50 +305,76 @@ pub fn variant_strata_from_cogroup(
     assert_eq!(cg.n_inputs(), 2, "variant cogroup resolution is binary");
     let mut strata: BTreeMap<u64, StratumAgg> = BTreeMap::new();
     // matched keys: the cogroup directory is exactly keys(L) ∩ keys(R)
-    if !variant.membership_only() {
-        let mut sides: Vec<&[f64]> = Vec::new();
-        for i in 0..cg.num_keys() {
-            cg.sides_into(i, &mut sides);
-            strata.insert(cg.key(i), cross_product_agg(&sides, op));
-        }
-    } else if variant == JoinVariant::Semi {
-        for i in 0..cg.num_keys() {
-            let left = cg.side(i, 0);
-            let mut agg = StratumAgg {
-                population: left.len() as f64,
-                ..Default::default()
-            };
-            for &v in left {
-                agg.push(padded_value(op, 0, v));
-            }
+    for i in 0..cg.num_keys() {
+        if let Some(agg) =
+            variant_stratum_for_key(Some(cg.side(i, 0)), Some(cg.side(i, 1)), op, variant)
+        {
             strata.insert(cg.key(i), agg);
         }
     }
     // single-side keys: walk each input's full run directory and keep
     // the keys absent from the matched directory
-    let mut pad_input = |input: usize| {
+    let mut pad_input = |input: usize, strata: &mut BTreeMap<u64, StratumAgg>| {
         for ri in 0..cg.num_runs(input) {
             let (k, vals) = cg.run(input, ri);
             if cg.contains_key(k) {
                 continue;
             }
-            let mut agg = StratumAgg {
-                population: vals.len() as f64,
-                ..Default::default()
+            let (l, r) = if input == 0 {
+                (Some(vals), None)
+            } else {
+                (None, Some(vals))
             };
-            for &v in vals {
-                agg.push(padded_value(op, input, v));
+            if let Some(agg) = variant_stratum_for_key(l, r, op, variant) {
+                strata.insert(k, agg);
             }
-            strata.insert(k, agg);
         }
     };
     if variant.pads_left() || variant == JoinVariant::Anti {
-        pad_input(0);
+        pad_input(0, &mut strata);
     }
     if variant.pads_right() {
-        pad_input(1);
+        pad_input(1, &mut strata);
     }
     strata
+}
+
+/// One key's variant stratum from its per-input value runs (either side
+/// absent when the key is missing from that input) — the per-key unit
+/// [`variant_strata_from_cogroup`] is built from, factored out so the
+/// continuous engine updates only the keys a delta touched. Returns
+/// `None` when the key contributes no stratum under `variant` (matched
+/// key under ANTI, right-only key under LEFT, ...).
+pub(crate) fn variant_stratum_for_key(
+    left: Option<&[f64]>,
+    right: Option<&[f64]>,
+    op: CombineOp,
+    variant: JoinVariant,
+) -> Option<StratumAgg> {
+    let pad = |input: usize, vals: &[f64]| {
+        let mut agg = StratumAgg {
+            population: vals.len() as f64,
+            ..Default::default()
+        };
+        for &v in vals {
+            agg.push(padded_value(op, input, v));
+        }
+        agg
+    };
+    match (left, right) {
+        (Some(l), Some(r)) => {
+            if !variant.membership_only() {
+                Some(cross_product_agg(&[l, r], op))
+            } else if variant == JoinVariant::Semi {
+                Some(pad(0, l))
+            } else {
+                None // ANTI: matched keys contribute nothing
+            }
+        }
+        (Some(l), None) => (variant.pads_left() || variant == JoinVariant::Anti).then(|| pad(0, l)),
+        (None, Some(r)) => variant.pads_right().then(|| pad(1, r)),
+        (None, None) => None,
+    }
 }
 
 /// The outcome of a join execution.

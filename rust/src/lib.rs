@@ -193,9 +193,31 @@
 //! predicted vs measured cardinality
 //! ([`join::JoinOrderReport`]). `EngineConfig::reorder_joins` (default
 //! on) disables it.
+//!
+//! ## Continuous standing queries
+//!
+//! The [`continuous`] module closes ROADMAP item 2 (DBSP-style delta
+//! maintenance): a [`continuous::ContinuousEngine`] holds standing
+//! relational queries registered once — predicates, group columns, and
+//! join-variant checks resolved at registration — and updates every one
+//! of them from each micro-batch's **arrival/eviction delta**. Columnar
+//! cogroups are spliced in place ([`runtime::CogroupColumns::apply_delta`]
+//! merges arriving runs and retracts evicted per-key prefixes), only the
+//! strata of changed keys re-draw their CLT/HT samples, and only groups
+//! owning a touched stratum re-estimate, emitting
+//! [`continuous::Notification`]s in deterministic order when results
+//! change bits. The standing invariant — incremental state after N
+//! batches is **bit-identical** to a from-scratch window recompute
+//! ([`continuous::ContinuousEngine::recompute`]) at any thread count —
+//! is asserted per batch in `tests/continuous_queries.rs`. Front ends:
+//! [`session::StreamingSession::open_continuous`], the `approxjoin
+//! continuous` CLI subcommand, serving subscriptions
+//! (`serve::SubscriptionWorkload`), `examples/continuous_queries.rs`,
+//! and the `fig_continuous` bench.
 
 pub mod bloom;
 pub mod cluster;
+pub mod continuous;
 pub mod coordinator;
 pub mod cost;
 pub mod data;

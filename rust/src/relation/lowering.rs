@@ -182,7 +182,7 @@ fn runtime_err(msg: String) -> JoinError {
 /// Resolve a possibly-bare column against the scanned relations: returns
 /// (table index, column index). Bare references match strict schema
 /// columns only and must be unambiguous.
-fn resolve_column(
+pub(crate) fn resolve_column(
     col: &ColumnRef,
     tables: &[String],
     relations: &[&Relation],
@@ -227,7 +227,7 @@ fn resolve_column(
 
 /// Canonicalize a group cell by its column type so `Key(5)` and `Int(5)`
 /// land in the same group.
-fn canon_group(cell: &Value, ty: ColumnType) -> Value {
+pub(crate) fn canon_group(cell: &Value, ty: ColumnType) -> Value {
     match ty {
         ColumnType::Key => cell
             .as_key()
@@ -504,7 +504,7 @@ pub fn lower(
 /// neutral fill value for inputs absent from the expression. Single-term
 /// expressions lower to Sum-with-0-fill so *any* table can own the
 /// column (legacy `CombineOp::Left` only reads input 0).
-fn effective_op(agg: &AggExpr) -> (CombineOp, f64) {
+pub(crate) fn effective_op(agg: &AggExpr) -> (CombineOp, f64) {
     if agg.terms.is_empty() {
         // COUNT(*) — values are markers, the estimate is population-based
         return (CombineOp::Left, 1.0);

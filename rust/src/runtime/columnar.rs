@@ -40,6 +40,10 @@ pub struct CogroupColumns {
     runs: Vec<Vec<(u64, u32, u32)>>,
     /// Sort scratch: (key, value) pairs of the input being ingested.
     pair_scratch: Vec<(u64, f64)>,
+    /// Delta-apply merge scratch: the spliced key/value columns are built
+    /// here and swapped in, so steady-state splices reuse capacity.
+    key_scratch: Vec<u64>,
+    val_scratch: Vec<f64>,
 }
 
 impl CogroupColumns {
@@ -97,6 +101,105 @@ impl CogroupColumns {
                 keys.push(k);
                 vals.push(v);
             }
+        }
+        self.reindex();
+    }
+
+    /// Splice one micro-batch's deltas into the persistent columns in one
+    /// merge pass — the incremental alternative to [`CogroupColumns::rebuild`].
+    ///
+    /// `arrivals[i]` are input `i`'s newly arrived records (any order;
+    /// they are stably sorted by key here, appending to each key's run in
+    /// arrival order). `retractions[i]` is sorted ascending by key and
+    /// retracts `count` records from the *front* of that key's run — the
+    /// oldest records, which is exactly what sliding-window eviction
+    /// removes when arrivals only ever append. The splice is O(rows + Δ)
+    /// memcpy-bound and never re-sorts the surviving window; the runs and
+    /// joinable directory are then re-derived by the same indexing pass a
+    /// fresh rebuild uses, so the spliced state is **bit-identical** to
+    /// `rebuild` over the equivalent window contents (the invariant the
+    /// continuous engine's from-scratch twin asserts).
+    ///
+    /// Panics if a retraction names a key the columns do not hold, or
+    /// retracts more records than the key's run contains.
+    pub fn apply_delta(&mut self, arrivals: &[&[Record]], retractions: &[Vec<(u64, u32)>]) {
+        assert_eq!(arrivals.len(), self.n_inputs, "arrival arity");
+        assert_eq!(retractions.len(), self.n_inputs, "retraction arity");
+        for i in 0..self.n_inputs {
+            self.pair_scratch.clear();
+            self.pair_scratch
+                .extend(arrivals[i].iter().map(|r| (r.key, r.value)));
+            self.pair_scratch.sort_by_key(|p| p.0);
+            let retr = &retractions[i];
+            debug_assert!(
+                retr.windows(2).all(|w| w[0].0 < w[1].0),
+                "retractions must be sorted by key, one entry per key"
+            );
+            let old_keys = &self.keys[i];
+            let old_vals = &self.vals[i];
+            let arr = &self.pair_scratch;
+            let merged_cap = old_keys.len() + arr.len();
+            self.key_scratch.clear();
+            self.val_scratch.clear();
+            self.key_scratch.reserve(merged_cap);
+            self.val_scratch.reserve(merged_cap);
+            let (mut p, mut a, mut r) = (0usize, 0usize, 0usize);
+            while p < old_keys.len() || a < arr.len() {
+                // the next key in ascending order, from either side
+                let k = match (old_keys.get(p), arr.get(a)) {
+                    (Some(&ko), Some(&(ka, _))) => ko.min(ka),
+                    (Some(&ko), None) => ko,
+                    (None, Some(&(ka, _))) => ka,
+                    (None, None) => unreachable!(),
+                };
+                // surviving old records first (they are older) ...
+                if p < old_keys.len() && old_keys[p] == k {
+                    let mut end = p + 1;
+                    while end < old_keys.len() && old_keys[end] == k {
+                        end += 1;
+                    }
+                    let mut drop = 0usize;
+                    if r < retr.len() && retr[r].0 == k {
+                        drop = retr[r].1 as usize;
+                        assert!(
+                            drop <= end - p,
+                            "retracting {} records from key {k} input {i}, run holds {}",
+                            drop,
+                            end - p
+                        );
+                        r += 1;
+                    }
+                    for j in p + drop..end {
+                        self.key_scratch.push(k);
+                        self.val_scratch.push(old_vals[j]);
+                    }
+                    p = end;
+                }
+                // ... then this batch's arrivals, in arrival order
+                while a < arr.len() && arr[a].0 == k {
+                    self.key_scratch.push(k);
+                    self.val_scratch.push(arr[a].1);
+                    a += 1;
+                }
+            }
+            assert!(
+                r == retr.len(),
+                "retraction key {} absent from input {i}'s columns",
+                retr.get(r).map(|e| e.0).unwrap_or(0)
+            );
+            std::mem::swap(&mut self.keys[i], &mut self.key_scratch);
+            std::mem::swap(&mut self.vals[i], &mut self.val_scratch);
+        }
+        self.reindex();
+    }
+
+    /// Derive the per-input run lists and the joinable directory from the
+    /// key columns — shared by [`CogroupColumns::rebuild`] and
+    /// [`CogroupColumns::apply_delta`], so both paths index identically.
+    fn reindex(&mut self) {
+        let n = self.n_inputs;
+        for i in 0..n {
+            let keys = &self.keys[i];
             // contiguous key runs
             let runs = &mut self.runs[i];
             runs.clear();
@@ -223,6 +326,38 @@ impl CogroupColumns {
     pub fn contains_key(&self, key: u64) -> bool {
         self.dir_keys.binary_search(&key).is_ok()
     }
+
+    /// Directory position of `key`, if it is joinable.
+    pub fn index_of(&self, key: u64) -> Option<usize> {
+        self.dir_keys.binary_search(&key).ok()
+    }
+
+    /// Value slice of `input` for `key`, whether or not the key is
+    /// joinable — `None` only when the input holds no records for it.
+    /// Runs are ascending by key, so this is a binary search.
+    pub fn run_of_key(&self, input: usize, key: u64) -> Option<&[f64]> {
+        let runs = &self.runs[input];
+        let idx = runs.binary_search_by_key(&key, |&(k, _, _)| k).ok()?;
+        let (_, s, e) = runs[idx];
+        Some(&self.vals[input][s as usize..e as usize])
+    }
+
+    /// Estimated heap footprint in bytes (columns, run lists, directory,
+    /// scratch) — the unit the serve-layer sketch-cache LRU budgets.
+    pub fn heap_bytes(&self) -> u64 {
+        let mut b = 0u64;
+        for i in 0..self.n_inputs {
+            b += (self.keys[i].capacity() * 8) as u64;
+            b += (self.vals[i].capacity() * 8) as u64;
+            b += (self.runs[i].capacity() * std::mem::size_of::<(u64, u32, u32)>()) as u64;
+        }
+        b += (self.dir_keys.capacity() * 8) as u64;
+        b += (self.spans.capacity() * std::mem::size_of::<(u32, u32)>()) as u64;
+        b += (self.pair_scratch.capacity() * 16) as u64;
+        b += (self.key_scratch.capacity() * 8) as u64;
+        b += (self.val_scratch.capacity() * 8) as u64;
+        b
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +455,105 @@ mod tests {
         let mut sides: Vec<&[f64]> = Vec::new();
         cg.sides_into(0, &mut sides);
         assert_eq!(sides, vec![&[1.0, 2.0][..], &[10.0][..]]);
+    }
+
+    /// Simulate sliding-window churn: per batch, evict the oldest batch's
+    /// per-key counts and append new arrivals, via `apply_delta` on one
+    /// buffer and `rebuild` over the surviving window on another. The two
+    /// must agree bit-for-bit every batch.
+    #[test]
+    fn apply_delta_matches_rebuild_under_churn() {
+        let n_inputs = 2usize;
+        let window = 3usize;
+        let mut r = Rng::new(42);
+        let mut incr = CogroupColumns::new(n_inputs);
+        // window contents per input, as batches (front = oldest)
+        let mut held: Vec<Vec<Vec<Record>>> = vec![Vec::new(); n_inputs];
+        for batch in 0..20usize {
+            let arrivals: Vec<Vec<Record>> = (0..n_inputs)
+                .map(|_| {
+                    (0..40 + batch)
+                        .map(|_| Record::new(r.below(25), r.f64()))
+                        .collect()
+                })
+                .collect();
+            let mut retractions: Vec<Vec<(u64, u32)>> = vec![Vec::new(); n_inputs];
+            if held[0].len() == window {
+                for (i, held_i) in held.iter_mut().enumerate() {
+                    let evicted = held_i.remove(0);
+                    let mut counts: std::collections::BTreeMap<u64, u32> =
+                        std::collections::BTreeMap::new();
+                    for rec in &evicted {
+                        *counts.entry(rec.key).or_insert(0) += 1;
+                    }
+                    retractions[i] = counts.into_iter().collect();
+                }
+            }
+            let arr_slices: Vec<&[Record]> = arrivals.iter().map(|v| v.as_slice()).collect();
+            incr.apply_delta(&arr_slices, &retractions);
+            for (i, a) in arrivals.into_iter().enumerate() {
+                held[i].push(a);
+            }
+            // from-scratch twin over the surviving window contents
+            let flat: Vec<Vec<Record>> = held
+                .iter()
+                .map(|batches| batches.iter().flatten().copied().collect())
+                .collect();
+            let fresh = CogroupColumns::from_records(&flat);
+            assert_eq!(incr.keys(), fresh.keys(), "batch {batch} directory");
+            assert_eq!(incr.total_rows(), fresh.total_rows(), "batch {batch} rows");
+            for idx in 0..incr.num_keys() {
+                for i in 0..n_inputs {
+                    assert_eq!(
+                        incr.side(idx, i),
+                        fresh.side(idx, i),
+                        "batch {batch} key {} input {i}",
+                        incr.key(idx)
+                    );
+                }
+            }
+            for i in 0..n_inputs {
+                assert_eq!(incr.num_runs(i), fresh.num_runs(i), "batch {batch} runs");
+                for ridx in 0..incr.num_runs(i) {
+                    assert_eq!(incr.run(i, ridx), fresh.run(i, ridx));
+                }
+            }
+        }
+    }
+
+    /// A key fully retracted then re-inserted must come back with only the
+    /// new values — no stale residue from before the eviction.
+    #[test]
+    fn full_retraction_then_reinsert_is_clean() {
+        let a = vec![Record::new(5, 1.0), Record::new(5, 2.0), Record::new(7, 3.0)];
+        let b = vec![Record::new(5, 10.0), Record::new(7, 20.0)];
+        let mut cg = CogroupColumns::from_records(&[a, b]);
+        assert_eq!(cg.keys(), &[5, 7]);
+        // evict all of key 5 from both inputs
+        cg.apply_delta(&[&[], &[]], &[vec![(5, 2)], vec![(5, 1)]]);
+        assert_eq!(cg.keys(), &[7]);
+        assert_eq!(cg.run_of_key(0, 5), None);
+        // re-insert key 5 with new values: only the new values appear
+        let a2 = [Record::new(5, 99.0)];
+        let b2 = [Record::new(5, 88.0)];
+        cg.apply_delta(&[&a2, &b2], &[vec![], vec![]]);
+        assert_eq!(cg.keys(), &[5, 7]);
+        assert_eq!(cg.side(0, 0), &[99.0]);
+        assert_eq!(cg.side(0, 1), &[88.0]);
+        // partial retraction removes the oldest entries of the run
+        let a3 = [Record::new(7, 4.0)];
+        cg.apply_delta(&[&a3, &[]], &[vec![(7, 1)], vec![]]);
+        assert_eq!(cg.run_of_key(0, 7), Some(&[4.0][..]));
+        assert_eq!(cg.index_of(7), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "absent")]
+    fn retracting_unknown_key_panics() {
+        let a = vec![Record::new(1, 1.0)];
+        let b = vec![Record::new(1, 2.0)];
+        let mut cg = CogroupColumns::from_records(&[a, b]);
+        cg.apply_delta(&[&[], &[]], &[vec![(9, 1)], vec![]]);
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub struct SketchStats {
     /// The join filter was reused; probe + shuffle still ran.
     pub filter_hits: u64,
     pub misses: u64,
+    /// Entries dropped by the byte-budget LRU (never by invalidation).
+    pub evictions: u64,
 }
 
 impl SketchStats {
@@ -61,6 +63,7 @@ impl SketchStats {
             cogroup_hits: self.cogroup_hits - earlier.cogroup_hits,
             filter_hits: self.filter_hits - earlier.filter_hits,
             misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
         }
     }
 }
@@ -72,6 +75,8 @@ struct CachedCogroup {
     per_worker: Arc<Vec<CogroupColumns>>,
     join_filter: JoinFilter,
     survivors: Vec<u64>,
+    /// Heap footprint of this entry, fixed at insertion time.
+    bytes: u64,
 }
 
 #[derive(Default)]
@@ -80,21 +85,93 @@ struct Inner {
     epochs: HashMap<String, u64>,
     filters: HashMap<String, JoinFilter>,
     cogroups: HashMap<String, CachedCogroup>,
+    /// Logical LRU clock; bumped on every hit and insert.
+    clock: u64,
+    /// Last-use stamp per filter / cogroup entry.
+    filter_use: HashMap<String, u64>,
+    cogroup_use: HashMap<String, u64>,
     stats: SketchStats,
+}
+
+impl Inner {
+    fn cached_bytes(&self) -> u64 {
+        self.cogroups.values().map(|c| c.bytes).sum::<u64>()
+            + self.filters.values().map(|f| f.size_bytes()).sum::<u64>()
+    }
+
+    fn touch(clock: &mut u64, uses: &mut HashMap<String, u64>, key: &str) {
+        *clock += 1;
+        uses.insert(key.to_string(), *clock);
+    }
+
+    /// Evict least-recently-used entries until the cache fits `budget`.
+    /// Cogroups go first (they dominate the footprint and are cheapest to
+    /// rebuild from a retained filter), then filters. Ties on the use
+    /// stamp break by key so eviction order is deterministic.
+    fn enforce_budget(&mut self, budget: u64) {
+        while self.cached_bytes() > budget && !self.cogroups.is_empty() {
+            let victim = self
+                .cogroups
+                .keys()
+                .min_by_key(|k| (self.cogroup_use.get(*k).copied().unwrap_or(0), (*k).clone()))
+                .expect("non-empty map has a minimum")
+                .clone();
+            self.cogroups.remove(&victim);
+            self.cogroup_use.remove(&victim);
+            self.stats.evictions += 1;
+        }
+        while self.cached_bytes() > budget && !self.filters.is_empty() {
+            let victim = self
+                .filters
+                .keys()
+                .min_by_key(|k| (self.filter_use.get(*k).copied().unwrap_or(0), (*k).clone()))
+                .expect("non-empty map has a minimum")
+                .clone();
+            self.filters.remove(&victim);
+            self.filter_use.remove(&victim);
+            self.stats.evictions += 1;
+        }
+    }
 }
 
 /// Shared, thread-safe sketch cache for the serving layer. One instance
 /// is attached to every concurrent [`crate::session::Session`] a
 /// [`crate::serve::Server`] spawns; the engine's budgeted execution paths
 /// consult it before running stage 1.
+///
+/// By default the cache is unbounded and only invalidation prunes it.
+/// [`SketchCache::with_budget`] caps the total heap footprint: once the
+/// cached filters + cogroups exceed the budget, least-recently-used
+/// entries are evicted (cogroups before filters) and counted in
+/// [`SketchStats::evictions`].
 #[derive(Default)]
 pub struct SketchCache {
     inner: Mutex<Inner>,
+    budget: Option<u64>,
 }
 
 impl SketchCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A cache capped at `budget` bytes of cached sketch state
+    /// (`None` = unbounded, same as [`SketchCache::new`]).
+    pub fn with_budget(budget: Option<u64>) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            budget,
+        }
+    }
+
+    /// The configured byte budget, if any.
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Current heap footprint of all cached filters + cogroups.
+    pub fn cached_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().cached_bytes()
     }
 
     /// The current registration epoch of a table (0 until invalidated).
@@ -113,6 +190,8 @@ impl SketchCache {
         let needle = format!("|t={table}@");
         inner.filters.retain(|k, _| !k.contains(&needle));
         inner.cogroups.retain(|k, _| !k.contains(&needle));
+        inner.filter_use.retain(|k, _| !k.contains(&needle));
+        inner.cogroup_use.retain(|k, _| !k.contains(&needle));
     }
 
     /// Drop every cached sketch (epochs are kept).
@@ -120,6 +199,8 @@ impl SketchCache {
         let mut inner = self.inner.lock().unwrap();
         inner.filters.clear();
         inner.cogroups.clear();
+        inner.filter_use.clear();
+        inner.cogroup_use.clear();
     }
 
     pub fn stats(&self) -> SketchStats {
@@ -222,10 +303,23 @@ impl SketchCache {
             } else {
                 None
             };
+            let Inner {
+                clock,
+                filter_use,
+                cogroup_use,
+                stats,
+                ..
+            } = &mut *inner;
             match (&cg, &jf) {
-                (Some(_), _) => inner.stats.cogroup_hits += 1,
-                (None, Some(_)) => inner.stats.filter_hits += 1,
-                (None, None) => inner.stats.misses += 1,
+                (Some(_), _) => {
+                    stats.cogroup_hits += 1;
+                    Inner::touch(clock, cogroup_use, &ckey);
+                }
+                (None, Some(_)) => {
+                    stats.filter_hits += 1;
+                    Inner::touch(clock, filter_use, &fkey);
+                }
+                (None, None) => stats.misses += 1,
             }
             (fkey, ckey, cg, jf)
         };
@@ -256,19 +350,40 @@ impl SketchCache {
         };
 
         let mut inner = self.inner.lock().unwrap();
+        let Inner {
+            clock,
+            filter_use,
+            cogroup_use,
+            ..
+        } = &mut *inner;
+        if hit == SketchCacheHit::None {
+            Inner::touch(clock, filter_use, &fkey);
+        }
+        Inner::touch(clock, cogroup_use, &ckey);
         if hit == SketchCacheHit::None {
             inner
                 .filters
                 .insert(fkey, filtered.join_filter.clone());
         }
+        let bytes = filtered
+            .per_worker
+            .iter()
+            .map(|cg| cg.heap_bytes())
+            .sum::<u64>()
+            + filtered.join_filter.size_bytes()
+            + filtered.survivors.len() as u64 * 8;
         inner.cogroups.insert(
             ckey,
             CachedCogroup {
                 per_worker: Arc::new(filtered.per_worker.clone()),
                 join_filter: filtered.join_filter.clone(),
                 survivors: filtered.survivors.clone(),
+                bytes,
             },
         );
+        if let Some(budget) = self.budget {
+            inner.enforce_budget(budget);
+        }
         Ok((filtered, hit))
     }
 }
@@ -447,6 +562,109 @@ mod tests {
             }
         }
         assert!(keys[0].ends_with("|v=inner"));
+    }
+
+    fn cg_entry(bytes: u64) -> CachedCogroup {
+        CachedCogroup {
+            per_worker: Arc::new(Vec::new()),
+            join_filter: JoinFilter::new(FilterKind::Standard, 6, 2),
+            survivors: Vec::new(),
+            bytes,
+        }
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_cogroups_before_filters() {
+        // 3 cogroups x 60 B + one 8 B filter = 188 B against a 70 B budget:
+        // the two least-recently-used cogroups go, the filter stays.
+        let c = SketchCache::with_budget(Some(70));
+        {
+            let mut inner = c.inner.lock().unwrap();
+            for (key, stamp) in [("c1", 1u64), ("c2", 5), ("c3", 3)] {
+                inner.cogroups.insert(key.to_string(), cg_entry(60));
+                inner.cogroup_use.insert(key.to_string(), stamp);
+            }
+            inner
+                .filters
+                .insert("f1".to_string(), JoinFilter::new(FilterKind::Standard, 6, 2));
+            inner.filter_use.insert("f1".to_string(), 2);
+            inner.clock = 6;
+            inner.enforce_budget(70);
+            assert!(inner.cogroups.contains_key("c2"), "newest cogroup survives");
+            assert!(inner.filters.contains_key("f1"), "filters evict only after cogroups");
+        }
+        assert_eq!(c.entry_counts(), (1, 1));
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.cached_bytes(), 68);
+    }
+
+    #[test]
+    fn filters_evict_when_cogroups_alone_cannot_fit_the_budget() {
+        let c = SketchCache::with_budget(Some(4));
+        {
+            let mut inner = c.inner.lock().unwrap();
+            for (key, stamp) in [("f-old", 1u64), ("f-new", 2)] {
+                inner
+                    .filters
+                    .insert(key.to_string(), JoinFilter::new(FilterKind::Standard, 6, 2));
+                inner.filter_use.insert(key.to_string(), stamp);
+            }
+            inner.clock = 2;
+            inner.enforce_budget(4);
+        }
+        // 16 B of filters against a 4 B budget: both go.
+        assert_eq!(c.entry_counts(), (0, 0));
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn touching_an_entry_protects_it_from_eviction() {
+        let c = SketchCache::with_budget(Some(60));
+        let mut inner = c.inner.lock().unwrap();
+        for (key, stamp) in [("c1", 1u64), ("c2", 2)] {
+            inner.cogroups.insert(key.to_string(), cg_entry(60));
+            inner.cogroup_use.insert(key.to_string(), stamp);
+        }
+        inner.clock = 2;
+        {
+            let Inner {
+                clock, cogroup_use, ..
+            } = &mut *inner;
+            // a replay hit re-stamps c1, so c2 becomes the LRU victim
+            Inner::touch(clock, cogroup_use, "c1");
+        }
+        inner.enforce_budget(60);
+        assert_eq!(inner.clock, 3);
+        assert!(inner.cogroups.contains_key("c1"));
+        assert!(!inner.cogroups.contains_key("c2"));
+        assert_eq!(inner.stats.evictions, 1);
+    }
+
+    #[test]
+    fn stats_since_subtracts_evictions() {
+        let a = SketchStats {
+            cogroup_hits: 2,
+            filter_hits: 1,
+            misses: 3,
+            evictions: 1,
+        };
+        let b = SketchStats {
+            cogroup_hits: 5,
+            filter_hits: 1,
+            misses: 4,
+            evictions: 3,
+        };
+        let d = b.since(&a);
+        assert_eq!(
+            d,
+            SketchStats {
+                cogroup_hits: 3,
+                filter_hits: 0,
+                misses: 1,
+                evictions: 2,
+            }
+        );
     }
 
     #[test]

@@ -30,15 +30,16 @@ mod workload;
 
 pub use admission::{AdmissionController, AdmissionDecision, AdmissionStats};
 pub use cache::{CachedAnswer, ResultCache, SketchCache, SketchStats};
-pub use workload::{ClientScript, Workload};
+pub use workload::{ClientScript, SubscriptionWorkload, Workload};
 
 use crate::cluster::ShuffleLedger;
+use crate::continuous::{feed, ContinuousConfig, ContinuousEngine};
 use crate::coordinator::{EngineConfig, ExecutionMode};
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::join::JoinError;
 use crate::query::Query;
-use crate::relation::Relation;
+use crate::relation::{Relation, Value};
 use crate::runtime::ParallelExecutor;
 use crate::session::Session;
 use crate::stats::ApproxResult;
@@ -70,6 +71,10 @@ pub struct ServeConfig {
     pub result_widening: f64,
     /// Result-cache entries older than this many queries are recomputed.
     pub result_max_age: u64,
+    /// Byte budget for the shared [`SketchCache`] (`None` = unbounded).
+    /// When set, least-recently-used sketches are evicted once the cache
+    /// exceeds it; evictions are counted in [`ServeReport::sketch`].
+    pub sketch_cache_bytes: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +88,7 @@ impl Default for ServeConfig {
             min_budget_secs: 1e-4,
             result_widening: 0.25,
             result_max_age: 8,
+            sketch_cache_bytes: None,
         }
     }
 }
@@ -197,7 +203,7 @@ impl ServeReport {
         format!(
             "served {}/{} queries in {:.3}s on {} threads ({:.1} QPS)\n\
              admission: {} admitted, {} degraded, {} rejected ({:.0}% rejection)\n\
-             sketch cache: {} cogroup + {} filter hits / {} lookups ({:.0}% hit rate)\n\
+             sketch cache: {} cogroup + {} filter hits / {} lookups ({:.0}% hit rate, {} evicted)\n\
              result cache: {} hits / {} lookups ({:.0}% hit rate)\n\
              shuffle: {} bytes",
             self.executed,
@@ -213,10 +219,75 @@ impl ServeReport {
             self.sketch.filter_hits,
             self.sketch.lookups(),
             100.0 * self.sketch_hit_rate(),
+            self.sketch.evictions,
             self.result_hits,
             self.result_lookups,
             100.0 * self.result_hit_rate(),
             self.ledger.total_bytes(),
+        )
+    }
+}
+
+/// Aggregate report of one [`Server::run_subscriptions`] call.
+#[derive(Clone, Debug)]
+pub struct SubscriptionReport {
+    pub queries: usize,
+    pub batches: usize,
+    /// Change notices delivered across all batches.
+    pub notifications: u64,
+    /// Strata the delta path examined because their key changed.
+    pub touched_strata: u64,
+    /// Strata carried over untouched — the work delta maintenance skipped.
+    pub carried_strata: u64,
+    /// Arrival + eviction records spliced through the columnar cogroups.
+    pub spliced_rows: u64,
+    /// Final per-query (group, results) tables, in registration order.
+    pub finals: Vec<Vec<(Value, Vec<ApproxResult>)>>,
+    /// Real wall-clock seconds of the push phase.
+    pub wall_secs: f64,
+    pub serve_threads: usize,
+}
+
+impl SubscriptionReport {
+    /// A deterministic transcript of the final answers and the
+    /// notification/delta counters — two runs of the same workload at any
+    /// `serve_threads` must produce equal signatures. Excludes wall time.
+    pub fn signature(&self) -> String {
+        let mut s = format!(
+            "n={},touched={},carried={},spliced={}\n",
+            self.notifications, self.touched_strata, self.carried_strata, self.spliced_rows
+        );
+        for (qi, groups) in self.finals.iter().enumerate() {
+            for (gv, rs) in groups {
+                let _ = write!(s, "q{qi}:{gv:?}:");
+                for r in rs {
+                    let _ = write!(
+                        s,
+                        "est={:016x},err={:016x};",
+                        r.estimate.to_bits(),
+                        r.error_bound.to_bits()
+                    );
+                }
+                s.push('\n');
+            }
+        }
+        s
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        format!(
+            "{} standing queries over {} batches in {:.3}s on {} threads\n\
+             notifications: {}\n\
+             delta maintenance: {} strata touched, {} carried, {} rows spliced",
+            self.queries,
+            self.batches,
+            self.wall_secs,
+            self.serve_threads,
+            self.notifications,
+            self.touched_strata,
+            self.carried_strata,
+            self.spliced_rows,
         )
     }
 }
@@ -249,12 +320,13 @@ pub struct Server {
 
 impl Server {
     pub fn new(cfg: ServeConfig) -> Self {
+        let sketches = Arc::new(SketchCache::with_budget(cfg.sketch_cache_bytes));
         Self {
             cfg,
             cost: None,
             datasets: Vec::new(),
             tables: Vec::new(),
-            sketches: Arc::new(SketchCache::new()),
+            sketches,
         }
     }
 
@@ -416,6 +488,64 @@ impl Server {
         })
     }
 
+    /// Host a continuous-subscription workload: register every standing
+    /// query on one shared [`ContinuousEngine`], push the scripted feed,
+    /// and tally the change notifications subscribers would receive. The
+    /// engine updates each query from arrival/eviction deltas only, and
+    /// its answers are bit-identical at any `serve_threads`, so a
+    /// subscription run's [`SubscriptionReport::signature`] is as
+    /// thread-count-invariant as the request/response path's.
+    pub fn run_subscriptions(
+        &self,
+        sub: &SubscriptionWorkload,
+    ) -> Result<SubscriptionReport, JoinError> {
+        assert_eq!(
+            sub.spec.tables, 2,
+            "subscription feeds drive the two-table catalog (tables a, b)"
+        );
+        let mut engine = ContinuousEngine::new(ContinuousConfig {
+            window_batches: sub.window_batches,
+            parallelism: self.cfg.serve_threads.max(1),
+            ..ContinuousConfig::default()
+        })
+        .with_table("a", feed::feed_schema())
+        .with_table("b", feed::feed_schema());
+        for sql in &sub.queries {
+            engine.register(sql)?;
+        }
+        let mut rows = feed::RowFeed::new(sub.feed_seed, sub.spec.clone());
+        let started = std::time::Instant::now();
+        let (mut notifications, mut touched, mut carried, mut spliced) =
+            (0u64, 0u64, 0u64, 0u64);
+        for _ in 0..sub.batches {
+            let up = engine.push_batch(rows.next_batch())?;
+            notifications += up.notifications.len() as u64;
+            touched += up.touched_strata;
+            carried += up.carried_strata;
+            spliced += up.spliced_rows;
+        }
+        let wall_secs = started.elapsed().as_secs_f64();
+        let finals = (0..engine.num_queries())
+            .map(|qi| {
+                engine
+                    .results(qi)
+                    .map(|m| m.iter().map(|(g, r)| (g.clone(), r.clone())).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        Ok(SubscriptionReport {
+            queries: sub.queries.len(),
+            batches: sub.batches,
+            notifications,
+            touched_strata: touched,
+            carried_strata: carried,
+            spliced_rows: spliced,
+            finals,
+            wall_secs,
+            serve_threads: self.cfg.serve_threads,
+        })
+    }
+
     fn run_client(
         &self,
         ci: usize,
@@ -516,16 +646,8 @@ mod tests {
     use crate::cluster::TimeModel;
     use crate::data::{generate_overlapping, SyntheticSpec};
 
-    fn server() -> Server {
-        let inputs = generate_overlapping(&SyntheticSpec {
-            items_per_input: 2_000,
-            overlap_fraction: 0.2,
-            lambda: 10.0,
-            partitions: 4,
-            seed: 11,
-            ..Default::default()
-        });
-        let cfg = ServeConfig {
+    fn base_cfg() -> ServeConfig {
+        ServeConfig {
             engine: EngineConfig {
                 workers: 4,
                 time_model: TimeModel {
@@ -541,10 +663,25 @@ mod tests {
             slo_secs: 1e6,
             hard_limit_secs: 1e7,
             ..Default::default()
-        };
+        }
+    }
+
+    fn server_from(cfg: ServeConfig) -> Server {
+        let inputs = generate_overlapping(&SyntheticSpec {
+            items_per_input: 2_000,
+            overlap_fraction: 0.2,
+            lambda: 10.0,
+            partitions: 4,
+            seed: 11,
+            ..Default::default()
+        });
         Server::new(cfg)
             .with_data("a", inputs[0].clone())
             .with_data("b", inputs[1].clone())
+    }
+
+    fn server() -> Server {
+        server_from(base_cfg())
     }
 
     #[test]
@@ -587,6 +724,49 @@ mod tests {
             s.run_workload(&w).unwrap()
         };
         assert_eq!(seq.signature(), par.signature());
+    }
+
+    #[test]
+    fn sketch_cache_budget_evicts_without_changing_answers() {
+        let w = Workload::scripted(4, 3);
+        let unbounded = server().run_workload(&w).unwrap();
+        let mut cfg = base_cfg();
+        // far below any single cogroup entry: every insert evicts
+        cfg.sketch_cache_bytes = Some(64);
+        let s = server_from(cfg);
+        assert_eq!(s.sketches().budget(), Some(64));
+        let capped = s.run_workload(&w).unwrap();
+        assert!(capped.sketch.evictions > 0, "{}", capped.render());
+        assert!(s.sketches().cached_bytes() <= 64);
+        // eviction changes only what is cached, never an answer
+        assert_eq!(unbounded.signature(), capped.signature());
+        assert!(capped.render().contains("evicted"));
+    }
+
+    #[test]
+    fn subscription_signature_is_thread_count_invariant() {
+        let mut w = SubscriptionWorkload::standing(8, 6);
+        // sparse feed: each batch touches a minority of the window's keys
+        w.spec.keyspace = 512;
+        w.spec.rows_per_batch = 64;
+        let r1 = {
+            let mut cfg = base_cfg();
+            cfg.serve_threads = 1;
+            Server::new(cfg).run_subscriptions(&w).unwrap()
+        };
+        let r4 = {
+            let mut cfg = base_cfg();
+            cfg.serve_threads = 4;
+            Server::new(cfg).run_subscriptions(&w).unwrap()
+        };
+        assert_eq!(r1.signature(), r4.signature());
+        assert_eq!(r1.queries, 8);
+        assert!(r1.notifications > 0, "{}", r1.render());
+        assert!(
+            r1.carried_strata > 0,
+            "the skewed feed should leave cold strata untouched"
+        );
+        assert!(r1.finals.iter().any(|g| !g.is_empty()));
     }
 
     #[test]

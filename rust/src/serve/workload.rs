@@ -78,9 +78,56 @@ impl Workload {
     }
 }
 
+/// A continuous-query workload: the third client kind the server hosts,
+/// next to [`Workload::scripted`] and [`Workload::burst`] request/response
+/// scripts. Standing queries are registered once on a shared
+/// [`crate::continuous::ContinuousEngine`], then a deterministic
+/// [`crate::continuous::feed::RowFeed`] pushes micro-batches through it
+/// and subscribers receive per-group change notifications
+/// ([`crate::serve::Server::run_subscriptions`]).
+#[derive(Clone, Debug)]
+pub struct SubscriptionWorkload {
+    /// Standing queries to register, one subscription each.
+    pub queries: Vec<String>,
+    /// Micro-batches to push after registration.
+    pub batches: usize,
+    /// Sliding-window width in batches.
+    pub window_batches: usize,
+    /// Feed seed: same seed, same batch stream, same notifications.
+    pub feed_seed: u64,
+    /// Feed shape (must drive the two catalog tables `a` and `b`).
+    pub spec: crate::continuous::feed::FeedSpec,
+}
+
+impl SubscriptionWorkload {
+    /// The bench/demo default: `n` distinct standing queries from the
+    /// feed catalog over a 4-batch sliding window.
+    pub fn standing(n: usize, batches: usize) -> Self {
+        Self {
+            queries: crate::continuous::feed::standing_queries(n),
+            batches,
+            window_batches: 4,
+            feed_seed: 7,
+            spec: crate::continuous::feed::FeedSpec::default(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn standing_subscriptions_parse_and_are_distinct() {
+        let w = SubscriptionWorkload::standing(16, 5);
+        assert_eq!(w.queries.len(), 16);
+        assert_eq!(w.batches, 5);
+        let uniq: std::collections::BTreeSet<&String> = w.queries.iter().collect();
+        assert_eq!(uniq.len(), 16);
+        for q in &w.queries {
+            crate::query::parse(q).unwrap();
+        }
+    }
 
     #[test]
     fn scripted_shape_and_determinism() {

@@ -167,6 +167,22 @@ impl StreamingSession {
         StreamingApproxJoin::new(self.config.clone(), record_bytes)
     }
 
+    /// Open a continuous standing-query engine
+    /// ([`crate::continuous::ContinuousEngine`]) on this session's
+    /// cluster knobs: parallelism, sampling policy (including `.exact()`
+    /// and the estimator/seed defaults) and sketch fp rate carry over;
+    /// `window_batches` is the engine's sliding-window length. Register
+    /// tables and SQL on the returned engine, then feed it micro-batches.
+    pub fn open_continuous(&self, window_batches: usize) -> crate::continuous::ContinuousEngine {
+        crate::continuous::ContinuousEngine::new(crate::continuous::ContinuousConfig {
+            window_batches,
+            parallelism: self.config.parallelism,
+            sampling: self.config.sampling.clone(),
+            fp_rate: self.config.fp_rate,
+            ..crate::continuous::ContinuousConfig::default()
+        })
+    }
+
     /// Drive `batches` micro-batches from a source and collect every
     /// emitted window plus the tagged run ledger.
     pub fn run(&self, source: &mut dyn StreamSource, batches: u64) -> StreamRun {
@@ -260,6 +276,29 @@ mod tests {
         let sampling = s.config().sampling.as_ref().expect("sampling re-enabled");
         assert_eq!(sampling.estimator, EstimatorKind::HorvitzThompson);
         assert_eq!(sampling.seed, 123);
+    }
+
+    #[test]
+    fn open_continuous_inherits_session_knobs() {
+        use crate::continuous::feed;
+        let session = StreamingSession::new(&engine_config()).sampling_fraction(0.25);
+        let mut eng = session
+            .open_continuous(3)
+            .with_table("a", feed::feed_schema())
+            .with_table("b", feed::feed_schema());
+        assert_eq!(eng.config().window_batches, 3);
+        assert_eq!(eng.config().parallelism, 1);
+        let q = eng
+            .register("SELECT g, COUNT(*) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+            .unwrap();
+        let mut feed = feed::RowFeed::new(2, feed::FeedSpec::default());
+        for _ in 0..4 {
+            eng.push_batch(feed.next_batch()).unwrap();
+        }
+        assert_eq!(eng.current(q).unwrap(), eng.recompute(q).unwrap());
+        // exact sessions hand their exactness to the engine too
+        let exact = StreamingSession::new(&engine_config()).exact().open_continuous(2);
+        assert!(exact.config().sampling.is_none());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Integration tests of the continuous standing-query engine.
+//!
+//! Three properties anchor the subsystem:
+//!
+//! 1. **Bit-identity** — after any number of micro-batches, at any thread
+//!    count, the incrementally maintained state (strata moments, HT draw
+//!    counts, per-group estimates ± CIs) equals a from-scratch recompute
+//!    of the whole window.
+//! 2. **Retraction soundness** — insert → evict → re-insert churn through
+//!    the sliding window never corrupts the moment accumulators: the
+//!    exact (unsampled) path tracks [`ExactJoinOracle`] grouped twins
+//!    built from the window's literal contents.
+//! 3. **CI coverage under eviction** — across 100 seeded feeds, the 95%
+//!    intervals of both the CLT and Horvitz-Thompson estimators cover
+//!    the oracle truth at least 85% of the time.
+
+use approxjoin::continuous::feed::{feed_schema, standing_queries, FeedSpec, RowFeed};
+use approxjoin::continuous::{ContinuousConfig, ContinuousEngine, QuerySnapshot};
+use approxjoin::data::{Dataset, Record};
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{CombineOp, JoinVariant};
+use approxjoin::relation::{Row, Value};
+use approxjoin::stats::EstimatorKind;
+use approxjoin::testkit::ExactJoinOracle;
+use std::collections::VecDeque;
+
+fn two_table_engine(cfg: ContinuousConfig) -> ContinuousEngine {
+    ContinuousEngine::new(cfg)
+        .with_table("a", feed_schema())
+        .with_table("b", feed_schema())
+}
+
+/// Flatten one table's window rows into oracle records, optionally
+/// restricted to group `g`, taking `val_col` as the record value.
+fn window_records(
+    window: &VecDeque<Vec<Vec<Row>>>,
+    table: usize,
+    group: Option<i64>,
+    val_col: usize,
+) -> Vec<Record> {
+    let mut out = Vec::new();
+    for batch in window {
+        for row in &batch[table] {
+            if let Some(g) = group {
+                if row[1] != Value::Int(g) {
+                    continue;
+                }
+            }
+            let Value::Key(k) = row[0] else {
+                panic!("feed schema column 0 is the join key")
+            };
+            let Value::Float(v) = row[val_col] else {
+                panic!("feed schema column {val_col} is a measure")
+            };
+            out.push(Record::new(k, v));
+        }
+    }
+    out
+}
+
+fn oracle(a: Vec<Record>, b: Vec<Record>) -> ExactJoinOracle {
+    ExactJoinOracle::new(&[
+        Dataset::from_records_unpartitioned("a", a, 1, 64),
+        Dataset::from_records_unpartitioned("b", b, 1, 64),
+    ])
+}
+
+fn star() -> Value {
+    Value::Str("*".to_string())
+}
+
+#[test]
+fn bit_identity_across_thread_counts_over_twenty_plus_batches() {
+    let spec = FeedSpec {
+        rows_per_batch: 48,
+        keyspace: 24,
+        groups: 3,
+        ..Default::default()
+    };
+    let sqls = standing_queries(12);
+    let mut finals: Vec<Vec<QuerySnapshot>> = Vec::new();
+    for &threads in &[1usize, 2, 8] {
+        let mut engine = two_table_engine(ContinuousConfig {
+            window_batches: 4,
+            parallelism: threads,
+            ..Default::default()
+        });
+        for sql in &sqls {
+            engine.register(sql).expect("register");
+        }
+        let mut feed = RowFeed::new(3, spec.clone());
+        for b in 0..22u64 {
+            engine.push_batch(feed.next_batch()).expect("push");
+            // the standing invariant, incremental == from-scratch twin,
+            // checked mid-stream and at the end
+            if b % 2 == 1 || b == 21 {
+                for q in 0..engine.num_queries() {
+                    assert_eq!(
+                        engine.current(q).unwrap(),
+                        engine.recompute(q).unwrap(),
+                        "query {q} ({}) diverged at batch {b}, {threads} threads",
+                        engine.sql(q).unwrap()
+                    );
+                }
+            }
+        }
+        finals.push(
+            (0..engine.num_queries())
+                .map(|q| engine.current(q).unwrap())
+                .collect(),
+        );
+    }
+    // the same feed answers the same bits at 1, 2 and 8 threads
+    assert_eq!(finals[0], finals[1], "1-thread vs 2-thread state diverged");
+    assert_eq!(finals[0], finals[2], "1-thread vs 8-thread state diverged");
+}
+
+#[test]
+fn retraction_churn_matches_exact_oracle_twins() {
+    // tiny keyspace + short window: every key is inserted, evicted, and
+    // re-inserted many times across 24 batches
+    let mut engine = two_table_engine(ContinuousConfig {
+        window_batches: 3,
+        parallelism: 2,
+        sampling: None,
+        ..Default::default()
+    });
+    let grouped = engine
+        .register("SELECT g, SUM(a.v * b.x) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+        .unwrap();
+    let counted = engine
+        .register("SELECT g, COUNT(*) FROM a, b WHERE a.k = b.k GROUP BY a.g")
+        .unwrap();
+    let total = engine
+        .register("SELECT SUM(a.v + b.v) FROM a, b WHERE a.k = b.k")
+        .unwrap();
+
+    let spec = FeedSpec {
+        rows_per_batch: 40,
+        keyspace: 12,
+        groups: 3,
+        ..Default::default()
+    };
+    let mut feed = RowFeed::new(9, spec);
+    let mut window: VecDeque<Vec<Vec<Row>>> = VecDeque::new();
+    for batch_no in 0..24 {
+        let batch = feed.next_batch();
+        if window.len() == 3 {
+            window.pop_front();
+        }
+        window.push_back(batch.clone());
+        engine.push_batch(batch).expect("push");
+
+        // grouped SUM(a.v * b.x): per group, a's rows of that group cross
+        // b's full runs under a Product combine — the oracle twin of the
+        // engine's grouped lowering
+        for g in 0..3i64 {
+            let truth = oracle(
+                window_records(&window, 0, Some(g), 2),
+                window_records(&window, 1, None, 3),
+            )
+            .sum(CombineOp::Product, JoinVariant::Inner);
+            let live = engine.results(grouped).unwrap().get(&Value::Int(g));
+            let est = live.map(|rs| rs[0].estimate).unwrap_or(0.0);
+            assert!(
+                (est - truth).abs() <= 1e-6 * truth.abs().max(1.0),
+                "grouped SUM, group {g}, batch {batch_no}: {est} vs oracle {truth}"
+            );
+
+            let card = oracle(
+                window_records(&window, 0, Some(g), 2),
+                window_records(&window, 1, None, 3),
+            )
+            .cardinality(JoinVariant::Inner);
+            let cnt = engine
+                .results(counted)
+                .unwrap()
+                .get(&Value::Int(g))
+                .map(|rs| rs[0].estimate)
+                .unwrap_or(0.0);
+            assert!(
+                (cnt - card).abs() <= 1e-9,
+                "grouped COUNT, group {g}, batch {batch_no}: {cnt} vs oracle {card}"
+            );
+        }
+
+        // ungrouped SUM(a.v + b.v): both sides contribute column v under
+        // a Sum combine
+        let truth = oracle(
+            window_records(&window, 0, None, 2),
+            window_records(&window, 1, None, 2),
+        )
+        .sum(CombineOp::Sum, JoinVariant::Inner);
+        let est = engine
+            .results(total)
+            .unwrap()
+            .get(&star())
+            .map(|rs| rs[0].estimate)
+            .unwrap_or(0.0);
+        assert!(
+            (est - truth).abs() <= 1e-6 * truth.abs().max(1.0),
+            "ungrouped SUM, batch {batch_no}: {est} vs oracle {truth}"
+        );
+    }
+}
+
+#[test]
+fn ci_coverage_under_eviction_for_clt_and_ht() {
+    let spec = FeedSpec {
+        rows_per_batch: 64,
+        keyspace: 16,
+        groups: 2,
+        ..Default::default()
+    };
+    for estimator in [EstimatorKind::Clt, EstimatorKind::HorvitzThompson] {
+        let mut hits = 0u32;
+        for seed in 0..100u64 {
+            let mut engine = two_table_engine(ContinuousConfig {
+                window_batches: 3,
+                parallelism: 1,
+                sampling: Some(ApproxConfig {
+                    params: SamplingParams::Fraction(0.5),
+                    estimator,
+                    seed,
+                }),
+                confidence: 0.95,
+                ..Default::default()
+            });
+            let q = engine
+                .register("SELECT SUM(a.v * b.x) FROM a, b WHERE a.k = b.k")
+                .unwrap();
+            let mut feed = RowFeed::new(seed, spec.clone());
+            let mut window: VecDeque<Vec<Vec<Row>>> = VecDeque::new();
+            // 6 batches over a 3-batch window: half the stream has been
+            // retracted by the time we read the estimate
+            for _ in 0..6 {
+                let batch = feed.next_batch();
+                if window.len() == 3 {
+                    window.pop_front();
+                }
+                window.push_back(batch.clone());
+                engine.push_batch(batch).expect("push");
+            }
+            let truth = oracle(
+                window_records(&window, 0, None, 2),
+                window_records(&window, 1, None, 3),
+            )
+            .sum(CombineOp::Product, JoinVariant::Inner);
+            let rs = &engine.results(q).unwrap()[&star()];
+            if (rs[0].estimate - truth).abs() <= rs[0].error_bound {
+                hits += 1;
+            }
+        }
+        assert!(
+            hits >= 85,
+            "{estimator:?} 95% CIs covered the oracle truth only {hits}/100 \
+             times under eviction churn"
+        );
+    }
+}
