@@ -1,0 +1,292 @@
+//! Fault-injection bench: deterministic chaos over every join strategy.
+//!
+//! Like the other figure benches this is a plain main() that panics on
+//! any correctness violation, so CI's chaos-smoke job fails on:
+//!   * any strategy not completing under a crash+lost fault plan with an
+//!     ample failure budget (recovery must absorb every event),
+//!   * recovery mutating results: the recovered run's strata/draws must
+//!     be bit-identical to the fault-free run (recovery is additive),
+//!   * recovery re-fetching more bytes than the primary shuffle moved
+//!     (lineage re-execution must beat a full re-shuffle),
+//!   * faulted runs diverging between the sequential and the parallel
+//!     executor (fault decisions are thread-count independent),
+//!   * degraded runs (budget exhausted, workers dead) whose re-weighted
+//!     CIs fail to widen, blow past a bounded relative error, or stop
+//!     covering the exact-oracle truth at smoke rate, and
+//!   * a zero-probability plan not being bit-identical to no plan.
+//!
+//! Env knobs (the CI chaos-smoke job sets all three):
+//!   APPROXJOIN_THREADS=N       engine parallelism (default: host cores)
+//!   APPROXJOIN_BENCH_QUICK=1   fewer degradation seeds, smaller inputs
+//!   BENCH_JSON=path            merge a `fig_faults_t{N}` section into the
+//!                              given JSON report
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::data::{generate_overlapping, Dataset, SyntheticSpec};
+use approxjoin::faults::{FaultPlan, FaultReport};
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{ApproxJoin, CombineOp, JoinError, JoinRun, JoinStrategy, JoinVariant, StrategyRegistry};
+use approxjoin::stats::{clt_sum, EstimatorKind};
+use approxjoin::testkit::ExactJoinOracle;
+use approxjoin::util::Json;
+
+fn cluster(threads: usize, faults: Option<FaultPlan>) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+    .with_faults(faults)
+}
+
+fn workload(items: usize, seed: u64) -> Vec<Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: items,
+        overlap_fraction: 0.3,
+        lambda: 25.0,
+        partitions: 8,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Result payload + fault signature; everything thread-count invariant.
+fn fingerprint(run: &JoinRun) -> (Vec<(u64, u64, u64, u64, u64)>, Vec<(u64, u64)>, Option<String>) {
+    let mut strata: Vec<(u64, u64, u64, u64, u64)> = run
+        .strata
+        .iter()
+        .map(|(&k, a)| {
+            (
+                k,
+                a.population.to_bits(),
+                a.count.to_bits(),
+                a.sum.to_bits(),
+                a.sumsq.to_bits(),
+            )
+        })
+        .collect();
+    strata.sort_unstable();
+    let mut draws: Vec<(u64, u64)> = run.draws.iter().map(|(&k, d)| (k, d.to_bits())).collect();
+    draws.sort_unstable();
+    (strata, draws, run.fault_report.as_ref().map(|f| f.signature()))
+}
+
+fn main() {
+    let quick = std::env::var("APPROXJOIN_BENCH_QUICK").is_ok();
+    let threads = approxjoin::runtime::default_parallelism();
+    let (items, seeds) = if quick { (3_000usize, 12u64) } else { (8_000, 40) };
+    println!(
+        "== Faults: chaos over every strategy, {items} items/input, \
+         {seeds} degradation seeds, {threads} threads{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let inputs = workload(items, 42);
+    let registry = StrategyRegistry::with_defaults();
+
+    // ---- recovery plan: crashes + lost partitions + stragglers + send
+    // failures on every stage, budget ample enough that nothing degrades
+    let recovery_plan = FaultPlan {
+        seed: 11,
+        crash_prob: 0.1,
+        lost_prob: 0.1,
+        straggler_prob: 0.05,
+        send_prob: 0.05,
+        ..FaultPlan::default()
+    };
+    let mut total = FaultReport::default();
+    let mut retry_bytes = 0u64;
+    let mut primary_bytes = 0u64;
+    for strategy in registry.iter() {
+        let bare = strategy
+            .execute(&mut cluster(threads, None), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} fault-free run failed: {e}", strategy.name()));
+        let faulted = strategy
+            .execute(&mut cluster(threads, Some(recovery_plan)), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} did not survive the recovery plan: {e}", strategy.name()));
+        let report = faulted
+            .fault_report
+            .clone()
+            .unwrap_or_else(|| panic!("{}: no fault report", strategy.name()));
+        assert!(
+            report.any_injected() && report.recovered > 0,
+            "{}: recovery plan injected nothing",
+            strategy.name()
+        );
+        assert!(
+            report.dead_workers.is_empty(),
+            "{}: ample budget must recover, not degrade",
+            strategy.name()
+        );
+        // recovery is additive: the answer payload is bit-identical to the
+        // fault-free run (only the ledger gains recovery/ rows)
+        let (bs, bd, _) = fingerprint(&bare);
+        let (fs, fd, _) = fingerprint(&faulted);
+        assert!(
+            bs == fs && bd == fd,
+            "{}: recovery changed the result payload",
+            strategy.name()
+        );
+        // thread-count independence of the fault decisions themselves
+        let sequential = strategy
+            .execute(&mut cluster(1, Some(recovery_plan)), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} sequential faulted run failed: {e}", strategy.name()));
+        assert_eq!(
+            fingerprint(&sequential),
+            fingerprint(&faulted),
+            "{}: fault decisions depend on the thread count",
+            strategy.name()
+        );
+        let primary: u64 = faulted
+            .metrics
+            .stages
+            .iter()
+            .filter(|s| !s.name.starts_with("recovery/"))
+            .map(|s| s.shuffled_bytes)
+            .sum();
+        assert!(
+            report.retry_bytes < primary.max(1),
+            "{}: recovery re-fetched {} bytes >= the {} bytes of primary \
+             shuffle — lineage recovery must beat a full re-shuffle",
+            strategy.name(),
+            report.retry_bytes,
+            primary
+        );
+        println!(
+            "{:<22} injected {:>3}  recovered {:>3}  retry {:>9} B / primary {:>10} B  (+{:.3}s virtual)",
+            strategy.name(),
+            report.injected,
+            report.recovered,
+            report.retry_bytes,
+            primary,
+            report.extra_sim_secs
+        );
+        retry_bytes += report.retry_bytes;
+        primary_bytes += primary;
+        total.merge(&report);
+    }
+
+    // ---- zero-probability plan == no plan, bit for bit
+    for strategy in registry.iter() {
+        let bare = strategy
+            .execute(&mut cluster(threads, None), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", strategy.name()));
+        let zeroed = strategy
+            .execute(&mut cluster(threads, Some(FaultPlan::default())), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} failed under zero plan: {e}", strategy.name()));
+        let (bs, bd, _) = fingerprint(&bare);
+        let (zs, zd, _) = fingerprint(&zeroed);
+        assert!(
+            bs == zs && bd == zd,
+            "{}: zero-probability plan changed the run",
+            strategy.name()
+        );
+        assert_eq!(
+            zeroed.fault_report,
+            Some(FaultReport::default()),
+            "{}: zero plan must report nothing",
+            strategy.name()
+        );
+    }
+    println!("\nzero-probability plan: bit-identical to no plan across all strategies");
+
+    // ---- degradation: budget small enough that workers die; the
+    // re-weighted, variance-widened CI must stay bounded and keep covering
+    // the exact-oracle truth at smoke rate
+    let mut completed = 0u64;
+    let mut degraded = 0u64;
+    let mut fatal = 0u64;
+    let mut covered = 0u64;
+    let mut widen_sum = 0.0f64;
+    let mut widen_n = 0u64;
+    for seed in 0..seeds {
+        let inputs = workload(items.min(3_000), 500 + seed);
+        let truth = ExactJoinOracle::new(&inputs).sum(CombineOp::Sum, JoinVariant::Inner);
+        let plan = FaultPlan {
+            seed: 9000 + seed,
+            crash_prob: 0.15,
+            lost_prob: 0.15,
+            failure_budget: 4,
+            ..FaultPlan::default()
+        };
+        let strategy = ApproxJoin::with_config(ApproxConfig {
+            params: SamplingParams::Fraction(0.5),
+            estimator: EstimatorKind::Clt,
+            seed: 31 + seed,
+        });
+        let baseline = strategy
+            .execute(&mut cluster(threads, None), &inputs, CombineOp::Sum)
+            .expect("fault-free baseline");
+        let base_res = clt_sum(&baseline.strata_vec(), 0.95);
+        let run = match strategy.execute(&mut cluster(threads, Some(plan)), &inputs, CombineOp::Sum) {
+            Ok(run) => run,
+            Err(JoinError::Degraded { .. }) => {
+                fatal += 1;
+                continue;
+            }
+            Err(e) => panic!("seed {seed}: unexpected error under degradation plan: {e}"),
+        };
+        completed += 1;
+        let res = clt_sum(&run.strata_vec(), 0.95);
+        if (res.estimate - truth).abs() <= res.error_bound {
+            covered += 1;
+        }
+        if run.fault_report.as_ref().is_some_and(|f| f.is_degraded()) {
+            degraded += 1;
+            let widen = res.error_bound / base_res.error_bound.max(1e-12);
+            assert!(
+                widen >= 1.0,
+                "seed {seed}: degraded CI narrower than fault-free ({widen:.2}x)"
+            );
+            assert!(
+                res.relative_error() <= 0.75,
+                "seed {seed}: degraded CI unbounded (relative error {:.2})",
+                res.relative_error()
+            );
+            widen_sum += widen;
+            widen_n += 1;
+        }
+    }
+    assert!(
+        completed > 0 && degraded > 0,
+        "degradation plan never exercised the degraded path \
+         ({completed} completed, {degraded} degraded, {fatal} fatal)"
+    );
+    assert!(
+        covered * 100 >= completed * 70,
+        "smoke coverage {covered}/{completed} below 70% under degradation"
+    );
+    let mean_widen = widen_sum / widen_n.max(1) as f64;
+    println!(
+        "degradation: {completed}/{seeds} completed, {degraded} degraded, {fatal} fatal, \
+         coverage {covered}/{completed}, mean CI widening {mean_widen:.2}x"
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let path = std::path::PathBuf::from(path);
+        Json::update_file(
+            &path,
+            &format!("fig_faults_t{threads}"),
+            Json::obj(vec![
+                ("quick_mode", Json::Bool(quick)),
+                ("threads", Json::num(threads as f64)),
+                ("injected", Json::num(total.injected as f64)),
+                ("recovered", Json::num(total.recovered as f64)),
+                ("speculative", Json::num(total.speculative as f64)),
+                ("retry_bytes", Json::num(retry_bytes as f64)),
+                ("primary_bytes", Json::num(primary_bytes as f64)),
+                ("extra_sim_secs", Json::num(total.extra_sim_secs)),
+                ("degradation_seeds", Json::num(seeds as f64)),
+                ("degraded_runs", Json::num(degraded as f64)),
+                ("fatal_runs", Json::num(fatal as f64)),
+                ("coverage", Json::num(covered as f64 / completed.max(1) as f64)),
+                ("mean_ci_widening", Json::num(mean_widen)),
+            ]),
+        )
+        .expect("write BENCH_JSON");
+        println!("wrote fig_faults_t{threads} section to {}", path.display());
+    }
+}

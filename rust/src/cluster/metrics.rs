@@ -74,6 +74,8 @@ impl StageTraffic {
     }
 
     /// in + out of the most-loaded worker — the stage's network bottleneck.
+    /// A stage with no workers (empty vectors) has no bottleneck: 0, not a
+    /// panic — the `max()` edge is absorbed, never unwrapped.
     pub fn max_worker_bytes(&self) -> u64 {
         self.bytes_in
             .iter()
@@ -115,6 +117,12 @@ impl ShuffleLedger {
 
     /// Ratio of the most-loaded worker's traffic to the per-worker mean,
     /// over the whole run — 1.0 means perfectly balanced partitions.
+    ///
+    /// Degenerate edges all answer 1.0 (perfectly balanced) instead of
+    /// panicking or dividing by zero: an empty ledger, stages with no
+    /// workers, and runs that moved zero bytes. Stages with ragged
+    /// per-worker vectors (shorter than the run's widest stage) only
+    /// contribute the workers they report — zip truncation, no indexing.
     pub fn skew(&self) -> f64 {
         let k = self
             .stages
@@ -236,6 +244,38 @@ mod tests {
         });
         assert!((hot.skew() - 2.0).abs() < 1e-12);
         assert!((ShuffleLedger::default().skew() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_edges_answer_instead_of_panicking() {
+        // no workers at all: no bottleneck, no skew, no bytes
+        let empty = StageTraffic {
+            stage: "empty".into(),
+            bytes_in: vec![],
+            bytes_out: vec![],
+        };
+        assert_eq!(empty.max_worker_bytes(), 0);
+        assert_eq!(empty.total_bytes(), 0);
+        let mut l = ShuffleLedger::default();
+        l.push(empty);
+        assert!((l.skew() - 1.0).abs() < 1e-12);
+        // zero-byte stages with workers: balanced by definition
+        l.push(StageTraffic {
+            stage: "idle".into(),
+            bytes_in: vec![0, 0, 0],
+            bytes_out: vec![0, 0, 0],
+        });
+        assert!((l.skew() - 1.0).abs() < 1e-12);
+        assert_eq!(l.total_bytes(), 0);
+        // ragged per-worker vectors (a 2-worker stage in a 3-worker run)
+        // truncate safely instead of indexing out of bounds
+        l.push(StageTraffic {
+            stage: "ragged".into(),
+            bytes_in: vec![30, 0],
+            bytes_out: vec![0, 30],
+        });
+        assert!(l.skew() >= 1.0);
+        assert_eq!(l.stage_bytes("ragged"), 30);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod tree_reduce;
 pub use metrics::{JoinMetrics, ShuffleLedger, StageMetrics, StageTraffic};
 pub use time_model::TimeModel;
 
+use crate::faults::{FaultPlan, FaultReport, FaultState};
 use crate::runtime::parallel::ParallelExecutor;
 use std::time::Instant;
 
@@ -37,6 +38,9 @@ pub struct SimCluster {
     pub ledger: ShuffleLedger,
     /// Partition-parallel executor the strategies run their loops through.
     pub exec: ParallelExecutor,
+    /// Deterministic fault injection + recovery state (None: perfect
+    /// cluster, the default — bit-identical to pre-fault behaviour).
+    faults: Option<FaultState>,
 }
 
 impl SimCluster {
@@ -49,6 +53,7 @@ impl SimCluster {
             metrics: JoinMetrics::default(),
             ledger: ShuffleLedger::default(),
             exec: ParallelExecutor::sequential(),
+            faults: None,
         }
     }
 
@@ -56,6 +61,25 @@ impl SimCluster {
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.exec = ParallelExecutor::new(threads);
         self
+    }
+
+    /// Inject a deterministic [`FaultPlan`] into every recorded stage.
+    /// `None` (and a zero plan) leave every run bit-identical to a
+    /// fault-free cluster.
+    pub fn with_faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan.map(FaultState::new);
+        self
+    }
+
+    /// The injected plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref().map(|f| f.plan())
+    }
+
+    /// Detach the finished run's [`FaultReport`] and reset the fault state
+    /// for the next run; `None` when no plan is injected.
+    pub fn take_fault_report(&mut self) -> Option<FaultReport> {
+        self.faults.as_mut().map(|f| f.take_report())
     }
 
     /// Begin a named stage. Finish it with [`Stage::finish`] to record
@@ -73,14 +97,28 @@ impl SimCluster {
         }
     }
 
-    /// Record a finished stage; returns its simulated seconds.
+    /// Record a finished stage; returns its simulated seconds (including
+    /// any priced fault-recovery time). The injected fault plan, if any,
+    /// is consulted here — the one chokepoint every strategy's stages
+    /// pass through — and recovery appends *additive* `recovery/{stage}`
+    /// ledger/metrics rows after the untouched primary rows, so a
+    /// zero-fault plan stays bit-identical.
     pub fn record(&mut self, stage: Stage) -> f64 {
         let per_worker_bytes: Vec<u64> = (0..self.k)
             .map(|w| stage.bytes_in[w] + stage.bytes_out[w])
             .collect();
-        let sim = self
+        let mut sim = self
             .time_model
             .stage_secs(&stage.compute, &per_worker_bytes);
+        let recovery = self.faults.as_mut().and_then(|f| {
+            f.inject(
+                &stage.name,
+                &stage.compute,
+                &stage.bytes_in,
+                &stage.bytes_out,
+                &self.time_model,
+            )
+        });
         self.ledger.push(StageTraffic {
             stage: stage.name.clone(),
             bytes_in: stage.bytes_in,
@@ -93,6 +131,11 @@ impl SimCluster {
             shuffled_bytes: stage.shuffled,
             items: stage.items,
         });
+        if let Some(rec) = recovery {
+            sim += rec.extra_secs;
+            self.ledger.push(rec.traffic);
+            self.metrics.push(rec.metrics);
+        }
         sim
     }
 
@@ -266,6 +309,51 @@ mod tests {
         let l = c.take_ledger();
         assert_eq!(l.stages.len(), 2);
         assert!(c.ledger.stages.is_empty());
+    }
+
+    #[test]
+    fn zero_fault_plan_is_bit_identical_to_no_plan() {
+        let run = |faults: Option<FaultPlan>| {
+            let mut c = SimCluster::new(4, tm0()).with_faults(faults);
+            let mut s = c.stage("shuffle");
+            s.transfer(0, 1, 500);
+            s.transfer(2, 3, 250);
+            s.finish(&mut c);
+            c.stage("sample").finish(&mut c);
+            (c.take_ledger(), c.metrics.total_shuffled_bytes())
+        };
+        let baseline = run(None);
+        let zero = run(Some(FaultPlan::default()));
+        assert_eq!(baseline, zero);
+    }
+
+    #[test]
+    fn faulted_stage_appends_additive_recovery_rows() {
+        let plan = FaultPlan {
+            lost_prob: 1.0,
+            ..FaultPlan::default()
+        };
+        let mut c = SimCluster::new(4, tm0()).with_faults(Some(plan));
+        let mut s = c.stage("shuffle");
+        s.transfer(0, 1, 500);
+        s.transfer(2, 3, 250);
+        let sim = s.finish(&mut c);
+        // primary rows untouched, one recovery row appended after them
+        assert_eq!(c.ledger.stages[0].stage, "shuffle");
+        assert_eq!(c.ledger.stage_bytes("shuffle"), 750);
+        assert_eq!(c.ledger.stages[1].stage, "recovery/shuffle");
+        assert!(c.ledger.stage_bytes("recovery/shuffle") > 0);
+        // ledger and metrics shuffled bytes stay in lockstep
+        assert_eq!(c.ledger.total_bytes(), c.metrics.total_shuffled_bytes());
+        // the returned stage time includes the priced recovery seconds
+        assert!(sim > 0.75, "sim={sim} must include recovery time");
+        let report = c.take_fault_report().expect("plan injected");
+        assert!(report.any_injected());
+        assert_eq!(report.retry_bytes, c.ledger.stage_bytes("recovery/shuffle"));
+        assert!(report.extra_sim_secs > 0.0);
+        // the report harvest resets state for the next run
+        let fresh = c.take_fault_report().expect("plan persists");
+        assert!(!fresh.any_injected());
     }
 
     #[test]

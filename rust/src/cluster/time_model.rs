@@ -59,6 +59,12 @@ impl TimeModel {
         compute / self.compute_scale + bytes as f64 / self.bandwidth + self.stage_latency
     }
 
+    /// Seconds to move `bytes` across one link — the unit the fault
+    /// recovery layer prices retransmits and lineage re-fetches in.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth
+    }
+
     /// Simulated seconds for a broadcast of `bytes` from one node to k-1
     /// others (tree topology: ceil(log2 k) rounds of full-bandwidth sends).
     pub fn broadcast_secs(&self, bytes: u64, k: usize) -> f64 {

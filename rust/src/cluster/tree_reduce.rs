@@ -43,9 +43,6 @@ pub fn tree_reduce<F: MergePayload>(
     mut filters: Vec<(usize, F)>,
     op: impl Fn(&mut F, &F),
 ) -> Option<F> {
-    if filters.is_empty() {
-        return None;
-    }
     while filters.len() > 1 {
         let mut next = Vec::with_capacity(filters.len().div_ceil(2));
         let mut it = filters.into_iter();
@@ -58,7 +55,9 @@ pub fn tree_reduce<F: MergePayload>(
         }
         filters = next;
     }
-    Some(filters.pop().unwrap().1)
+    // the loop only exits at length 0 (empty input: every round preserves
+    // non-emptiness) or exactly 1 — pop() is the root, never a panic
+    filters.pop().map(|(_, f)| f)
 }
 
 /// Build the dataset filter for one input (Alg 1 buildInputFilter): map
@@ -81,6 +80,10 @@ pub fn build_dataset_filter(
     };
     match build_dataset_join_filter(cluster, stage, dataset, cfg) {
         JoinFilter::Standard(f) => f,
+        // invariant, not a runtime condition: `build_dataset_join_filter`
+        // constructs every shard and the empty-dataset fallback from
+        // `cfg.kind` (Standard here), so a Blocked variant can only mean a
+        // bug in that function — covered by the degenerate-input tests
         JoinFilter::Blocked(_) => unreachable!("standard kind requested"),
     }
 }
@@ -218,6 +221,39 @@ mod tests {
         assert!((0..5000u64).all(|k| blk_f.contains_key64(k)));
         // equal geometry ⇒ equal tree-reduce traffic for either kind
         assert_eq!(std_bytes, blk_bytes);
+    }
+
+    #[test]
+    fn empty_dataset_builds_empty_filter_without_panicking() {
+        // zero records → zero shards → tree_reduce(None) → the fallback
+        // empty filter; the empty-filter edge must not unwrap its way into
+        // a panic on any cluster size, including the k=1 degenerate
+        for k in [1usize, 4] {
+            let mut c = cluster(k);
+            let d = Dataset::from_records("empty", Vec::new(), 4, 10);
+            let mut s = c.stage("build");
+            let f = build_dataset_filter(&c, &mut s, &d, 12, 3);
+            assert_eq!(s.shuffled_bytes(), 0);
+            s.finish(&mut c);
+            assert!(!f.contains_key64(1));
+        }
+    }
+
+    #[test]
+    fn single_worker_cluster_reduces_locally() {
+        // k=1: every shard lives on worker 0, the tree has no transfers
+        let mut c = cluster(1);
+        let d = Dataset::from_records(
+            "t",
+            (0..100u64).map(|k| Record::new(k, 1.0)).collect(),
+            4,
+            10,
+        );
+        let mut s = c.stage("build");
+        let f = build_dataset_filter(&c, &mut s, &d, 12, 3);
+        assert_eq!(s.shuffled_bytes(), 0);
+        s.finish(&mut c);
+        assert!((0..100u64).all(|k| f.contains_key64(k)));
     }
 
     #[test]

@@ -80,6 +80,13 @@ pub struct ContinuousConfig {
     pub confidence: f64,
     /// False-positive rate for the shared per-table key sketches.
     pub fp_rate: f64,
+    /// Deterministic fault injection: after each batch, every query draws
+    /// a crash decision from `(plan, epoch, query id)`; a hit loses its
+    /// incremental state, which is recovered by replaying the retained
+    /// window from scratch. The standing `current == recompute` invariant
+    /// guarantees the replay reconverges bit-for-bit. `None` (default)
+    /// runs fault-free.
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for ContinuousConfig {
@@ -90,6 +97,7 @@ impl Default for ContinuousConfig {
             sampling: Some(ApproxConfig::default()),
             confidence: 0.95,
             fp_rate: 0.01,
+            faults: None,
         }
     }
 }
@@ -124,6 +132,9 @@ pub struct BatchUpdate {
     pub total_strata: u64,
     /// Arrival + eviction records spliced across all queries.
     pub spliced_rows: u64,
+    /// Queries whose incremental state was lost to an injected fault this
+    /// batch and rebuilt by replaying the retained window.
+    pub recovered_queries: u64,
 }
 
 /// One stratum of a query snapshot: the per-aggregate moment accumulators
@@ -1080,6 +1091,31 @@ impl ContinuousEngine {
         }
         self.window.push_back(batch);
         self.batches_pushed += 1;
+
+        // Fault injection: a query whose state-loss draw hits loses its
+        // incremental state and recovers by replaying the retained window
+        // through a fresh plan copy — the same path `recompute` exercises,
+        // so the standing `current == recompute` invariant IS the proof
+        // that the rebuilt state reconverges bit-for-bit (results and
+        // notifications downstream are unchanged).
+        if let Some(plan) = self.cfg.faults {
+            if first_err.is_none() {
+                let first_epoch = self.batches_pushed - self.window.len() as u64;
+                let empty: Vec<Vec<Row>> = vec![Vec::new(); self.tables.len()];
+                for qid in 0..self.queries.len() {
+                    if !plan.state_lost(epoch, qid as u64) {
+                        continue;
+                    }
+                    let mut st = self.queries[qid].fresh();
+                    for (j, b) in self.window.iter().enumerate() {
+                        st.update(qid, b, &empty, first_epoch + j as u64, &self.sketches)?;
+                    }
+                    self.queries[qid] = st;
+                    up.recovered_queries += 1;
+                }
+            }
+        }
+
         match first_err {
             Some(e) => Err(e),
             None => Ok(up),

@@ -48,6 +48,11 @@ pub struct EngineConfig {
     /// Overlap fraction above which filtering alone cannot help and the
     /// engine refuses an exact plan under a latency budget (§3.1.1 check).
     pub seed: u64,
+    /// Deterministic fault-injection plan threaded into every
+    /// [`crate::cluster::SimCluster`] the engine builds; `None` (the
+    /// default) runs the pipeline fault-free and bit-identically to a
+    /// build without the faults subsystem.
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -64,6 +69,7 @@ impl Default for EngineConfig {
             memory_budget: crate::join::native::DEFAULT_MEMORY_BUDGET,
             reorder_joins: true,
             seed: 42,
+            faults: None,
         }
     }
 }

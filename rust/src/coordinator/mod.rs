@@ -69,6 +69,10 @@ pub struct QueryOutcome {
     /// `None` when ordering was skipped — two-way join, disabled by
     /// `EngineConfig::reorder_joins`, or a non-commutative combine op.
     pub join_order: Option<crate::join::JoinOrderReport>,
+    /// What the fault injector did to this run and how the engine
+    /// recovered (retries, speculative copies, dropped strata, widened
+    /// CI). `None` when no [`crate::faults::FaultPlan`] was configured.
+    pub fault_report: Option<crate::faults::FaultReport>,
 }
 
 /// The ApproxJoin coordinator engine.
@@ -151,6 +155,7 @@ impl ApproxJoinEngine {
     fn cluster(&self) -> SimCluster {
         SimCluster::new(self.cfg.workers, self.cfg.time_model)
             .with_parallelism(self.cfg.parallelism)
+            .with_faults(self.cfg.faults)
     }
 
     fn filter_config(&self, inputs: &[Dataset]) -> FilterConfig {
@@ -297,7 +302,7 @@ impl ApproxJoinEngine {
 
         // ---- stage 2.2: execute
         let fingerprint = query.fingerprint();
-        let (strata, draws, sampled) = match mode {
+        let (mut strata, mut draws, sampled) = match mode {
             ExecutionMode::Exact => {
                 let strata = cross_product_stage(&mut cluster, &filtered, query.combine);
                 (strata, HashMap::new(), false)
@@ -328,6 +333,20 @@ impl ApproxJoinEngine {
                 (strata, draws, true)
             }
         };
+
+        // ---- fault harvest: accuracy-preserving degradation happens
+        // BEFORE estimation, so unrecoverable strata are dropped,
+        // survivors re-weighted and the CI widened rather than erroring
+        let mut fault_report = cluster.take_fault_report();
+        if let Some(rep) = fault_report.as_mut() {
+            crate::faults::degrade_strata(
+                rep,
+                &mut strata,
+                &mut draws,
+                self.cfg.workers,
+                sampled,
+            )?;
+        }
 
         // ---- stage 2.3: error estimation (§3.4)
         let result = estimate_result(
@@ -380,6 +399,7 @@ impl ApproxJoinEngine {
             grouped: None,
             filter_report: Some(filter_report),
             join_order,
+            fault_report,
         })
     }
 

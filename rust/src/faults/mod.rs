@@ -1,0 +1,927 @@
+//! Deterministic fault injection and accuracy-preserving recovery.
+//!
+//! A [`FaultPlan`] is a pure function of a seed: whether worker `w` crashes
+//! at the boundary of the `n`-th occurrence of stage `s`, loses its shuffle
+//! payload, straggles, or drops a send is decided by hashing
+//! `(plan seed, fault kind, stage name, occurrence, worker)` — never by
+//! thread count, wall time, or host randomness. The plan is injected into
+//! [`SimCluster::record`], the one chokepoint every strategy's stages pass
+//! through, so all five join strategies, the sample-first baselines, the
+//! budgeted engine path, streaming windows and continuous batches are
+//! covered without per-strategy injection code.
+//!
+//! Recovery is layered, mirroring Spark's lineage model:
+//!
+//! * **bounded retry with exponential backoff in virtual time** — the
+//!   [`TimeModel`] prices every retransmit and re-fetch; backoff seconds
+//!   are simulated, not slept;
+//! * **lineage re-execution** — a crashed worker's stage is rebuilt by
+//!   re-fetching its inputs from retained upstream partitions and
+//!   re-running the task (re-fetch bytes are deterministic and go to the
+//!   ledger; the re-run's compute is wall-measured like any task);
+//! * **speculative re-execution** — a straggler past
+//!   [`FaultPlan::speculation_factor`] gets a backup copy (one duplicated
+//!   input fetch) instead of stalling the stage.
+//!
+//! Every recovery is *additive*: the primary stage's ledger and metrics
+//! rows are untouched and a `recovery/{stage}` row carries the retry
+//! bytes and the priced extra seconds, so `explain()` shows recovery
+//! traffic next to the traffic it repairs and a zero-fault plan is
+//! bit-identical to no plan at all.
+//!
+//! When the failure budget runs out the worker is marked dead and the run
+//! **degrades instead of erroring**: [`degrade_strata`] drops the strata
+//! whose samples lived on dead workers, re-weights the survivors'
+//! populations by `(lost + surviving) / surviving` — the CLT sum scales
+//! back up and its CI widens; the Horvitz-Thompson inclusion
+//! probabilities shrink through the same population term — and the query
+//! answers with a populated [`FaultReport`]. Exact (unsampled) runs have
+//! no error bound to absorb the loss, so they fail with the typed
+//! [`JoinError::Degraded`] instead.
+
+use crate::cluster::{SimCluster, StageMetrics, StageTraffic, TimeModel};
+use crate::join::{JoinError, JoinRun};
+use crate::stats::StratumAgg;
+use crate::util::rng::splitmix64;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+const KIND_CRASH: u64 = 1;
+const KIND_LOST: u64 = 2;
+const KIND_STRAGGLE: u64 = 3;
+const KIND_SEND: u64 = 4;
+
+/// A deterministic chaos schedule: per-(stage, worker) fault probabilities
+/// plus the recovery knobs. Two runs with the same plan (and the same
+/// stage sequence) inject byte-identical faults at any thread count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed all fault decisions hash from.
+    pub seed: u64,
+    /// P(worker crashes at a stage boundary) per (stage, worker).
+    pub crash_prob: f64,
+    /// P(a worker's received shuffle partition is lost) per (stage, worker).
+    pub lost_prob: f64,
+    /// P(a worker straggles) per (stage, worker).
+    pub straggler_prob: f64,
+    /// Slowdown multiple of a straggling worker's transfer time.
+    pub straggler_factor: f64,
+    /// P(a worker's sent bytes need retransmission) per (stage, worker).
+    pub send_prob: f64,
+    /// Retry attempts per fault before the backoff stops doubling.
+    pub max_retries: u32,
+    /// Base backoff in *virtual* seconds; attempt r waits `2^r` times this.
+    pub backoff_secs: f64,
+    /// Total recoveries allowed per run; past it, faulted workers die and
+    /// the run degrades.
+    pub failure_budget: u32,
+    /// Stragglers at/above this factor get a speculative backup copy
+    /// (duplicated input fetch) instead of stalling the stage.
+    pub speculation_factor: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            crash_prob: 0.0,
+            lost_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 4.0,
+            send_prob: 0.0,
+            max_retries: 3,
+            backoff_secs: 0.05,
+            failure_budget: 64,
+            speculation_factor: 2.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A moderate all-fault-kinds plan for tests and benches.
+    pub fn chaos(seed: u64) -> Self {
+        Self {
+            seed,
+            crash_prob: 0.08,
+            lost_prob: 0.08,
+            straggler_prob: 0.08,
+            send_prob: 0.08,
+            ..Self::default()
+        }
+    }
+
+    /// True when no fault can ever fire — the plan is bit-identical to
+    /// running with no plan at all.
+    pub fn is_zero(&self) -> bool {
+        self.crash_prob <= 0.0
+            && self.lost_prob <= 0.0
+            && self.straggler_prob <= 0.0
+            && self.send_prob <= 0.0
+    }
+
+    /// Parse a `--faults` spec: comma-separated `key=value` with keys
+    /// `crash`, `lost`, `straggle` (`PROB` or `PROBxFACTOR`), `send`,
+    /// `retries`, `backoff`, `budget`, `spec-factor`, `seed`; e.g.
+    /// `crash=0.1,lost=0.05,straggle=0.1x4,send=0.2,budget=8,seed=7`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = Self::default();
+        for kv in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--faults: expected key=value, got `{kv}`"))?;
+            let num = |v: &str| -> anyhow::Result<f64> {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("--faults: bad number `{v}` for `{key}`"))
+            };
+            match key {
+                "crash" => plan.crash_prob = num(val)?,
+                "lost" => plan.lost_prob = num(val)?,
+                "send" => plan.send_prob = num(val)?,
+                "straggle" => match val.split_once('x') {
+                    Some((p, f)) => {
+                        plan.straggler_prob = num(p)?;
+                        plan.straggler_factor = num(f)?;
+                    }
+                    None => plan.straggler_prob = num(val)?,
+                },
+                "retries" => plan.max_retries = num(val)? as u32,
+                "backoff" => plan.backoff_secs = num(val)?,
+                "budget" => plan.failure_budget = num(val)? as u32,
+                "spec-factor" => plan.speculation_factor = num(val)?,
+                "seed" => plan.seed = num(val)? as u64,
+                other => anyhow::bail!(
+                    "--faults: unknown key `{other}` (try crash|lost|straggle|send|\
+                     retries|backoff|budget|spec-factor|seed)"
+                ),
+            }
+        }
+        for (name, p) in [
+            ("crash", plan.crash_prob),
+            ("lost", plan.lost_prob),
+            ("straggle", plan.straggler_prob),
+            ("send", plan.send_prob),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&p),
+                "--faults: {name} probability must be in [0, 1] (got {p})"
+            );
+        }
+        Ok(plan)
+    }
+
+    /// The same plan under a different decision stream — how per-window /
+    /// per-batch paths give each window its own fault draws while staying
+    /// a pure function of `(plan, tag)`.
+    pub fn salted(&self, tag: u64) -> Self {
+        let mut s = self.seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self {
+            seed: splitmix64(&mut s),
+            ..*self
+        }
+    }
+
+    /// Deterministic multiplier on a query's predicted seconds under this
+    /// plan — what fault-aware admission budgets for expected retries
+    /// before any stage has run. 1.0 for a zero plan.
+    pub fn expected_overhead_factor(&self) -> f64 {
+        1.0 + self.crash_prob
+            + self.lost_prob
+            + self.send_prob
+            + self.straggler_prob * (self.straggler_factor - 1.0).clamp(0.0, 4.0)
+    }
+
+    /// Total virtual-time backoff over `retries` exponentially-spaced
+    /// attempts: `backoff * (2^retries - 1)`.
+    pub fn backoff_total(&self, retries: u32) -> f64 {
+        self.backoff_secs * ((1u64 << retries.min(20)) - 1) as f64
+    }
+
+    /// The decision word for one (kind, stage occurrence, worker) cell —
+    /// a pure hash, reused for the hit test, the retry count, and nothing
+    /// else.
+    fn decide(&self, kind: u64, stage_tag: u64, seq: u64, worker: usize) -> u64 {
+        let mut s = self
+            .seed
+            .wrapping_add(kind.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(stage_tag.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(seq.wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add((worker as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        splitmix64(&mut s)
+    }
+
+    /// Deterministic retry count for a fault event, in `1..=max_retries`.
+    fn retry_count(&self, h: u64) -> u32 {
+        1 + ((h >> 53) % u64::from(self.max_retries.max(1))) as u32
+    }
+
+    /// Deterministic "this consumer's incremental state was lost at this
+    /// epoch" draw for checkpoint/replay consumers (the continuous
+    /// engine): a crash decision over `(plan, epoch, consumer id)`,
+    /// independent of the per-stage decision stream.
+    pub fn state_lost(&self, epoch: u64, consumer: u64) -> bool {
+        let h = self.decide(KIND_CRASH, stage_tag("continuous/state"), epoch, consumer as usize);
+        hits(h, self.crash_prob)
+    }
+}
+
+/// Top 53 bits of the decision word as a uniform draw in [0, 1).
+fn hits(h: u64, prob: f64) -> bool {
+    prob > 0.0 && ((h >> 11) as f64 / (1u64 << 53) as f64) < prob
+}
+
+/// FNV-1a over the stage name: stable, allocation-free stage identity for
+/// the per-name occurrence counters and the decision hash.
+fn stage_tag(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// What a run's faults added up to. Every field is a deterministic
+/// function of `(FaultPlan, stage sequence, byte counts)` — wall-measured
+/// re-execution compute is *excluded* (it lives in the recovery rows'
+/// `wall_secs`), so the report is safe to include in bit-identity
+/// signatures.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultReport {
+    /// Fault events injected (crashes + lost partitions + stragglers +
+    /// send failures).
+    pub injected: u64,
+    /// Events repaired within the retry/failure budget.
+    pub recovered: u64,
+    /// Stragglers answered by a speculative backup copy (subset of
+    /// `recovered`).
+    pub speculative: u64,
+    /// Events past the failure budget — each marks its worker dead.
+    pub degraded: u64,
+    /// Bytes re-fetched / retransmitted by recovery (ledger `recovery/`
+    /// stages sum to exactly this).
+    pub retry_bytes: u64,
+    /// Priced virtual seconds recovery added (backoff + retransfer +
+    /// recovery-stage latency).
+    pub extra_sim_secs: f64,
+    /// Workers dead at the end of the run (ascending).
+    pub dead_workers: Vec<usize>,
+    /// Strata dropped by degradation.
+    pub dropped_strata: u64,
+    /// Population of the dropped strata.
+    pub lost_population: f64,
+    /// Population of the surviving strata *before* re-weighting.
+    pub surviving_population: f64,
+}
+
+impl FaultReport {
+    /// True when at least one fault fired.
+    pub fn any_injected(&self) -> bool {
+        self.injected > 0
+    }
+
+    /// True when the answer was re-weighted around lost strata (or a
+    /// worker died with nothing to drop).
+    pub fn is_degraded(&self) -> bool {
+        !self.dead_workers.is_empty()
+    }
+
+    /// Fold another run's report in (multi-aggregate / multi-window runs).
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.injected += other.injected;
+        self.recovered += other.recovered;
+        self.speculative += other.speculative;
+        self.degraded += other.degraded;
+        self.retry_bytes += other.retry_bytes;
+        self.extra_sim_secs += other.extra_sim_secs;
+        self.dropped_strata += other.dropped_strata;
+        self.lost_population += other.lost_population;
+        self.surviving_population += other.surviving_population;
+        let dead: BTreeSet<usize> = self
+            .dead_workers
+            .iter()
+            .chain(&other.dead_workers)
+            .copied()
+            .collect();
+        self.dead_workers = dead.into_iter().collect();
+    }
+
+    /// Bit-exact rendering for determinism signatures: f64s as raw bits,
+    /// so 1/2/8-thread runs can be compared with string equality.
+    pub fn signature(&self) -> String {
+        format!(
+            "inj={},rec={},spec={},deg={},bytes={},secs={:016x},dead={:?},\
+             dropped={},lost={:016x},surv={:016x}",
+            self.injected,
+            self.recovered,
+            self.speculative,
+            self.degraded,
+            self.retry_bytes,
+            self.extra_sim_secs.to_bits(),
+            self.dead_workers,
+            self.dropped_strata,
+            self.lost_population.to_bits(),
+            self.surviving_population.to_bits(),
+        )
+    }
+}
+
+/// One `record()`'s recovery work, ready to append after the primary rows.
+pub(crate) struct Recovery {
+    pub traffic: StageTraffic,
+    pub metrics: StageMetrics,
+    pub extra_secs: f64,
+}
+
+/// Live fault state carried by a [`SimCluster`]: the plan plus the
+/// accumulating report, per-stage-name occurrence counters, the dead set,
+/// and the remaining failure budget.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    report: FaultReport,
+    /// stage-name tag → how many stages of that name have finished.
+    seq: BTreeMap<u64, u64>,
+    dead: BTreeSet<usize>,
+    budget_left: u32,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            report: FaultReport::default(),
+            seq: BTreeMap::new(),
+            dead: BTreeSet::new(),
+            budget_left: plan.failure_budget,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Spend one unit of failure budget on worker `w`; past the budget the
+    /// worker dies and the event is counted as degraded instead.
+    fn consume_budget(&mut self, w: usize) -> bool {
+        if self.budget_left > 0 {
+            self.budget_left -= 1;
+            true
+        } else {
+            self.dead.insert(w);
+            self.report.degraded += 1;
+            false
+        }
+    }
+
+    /// Route `bytes` of recovery traffic into worker `dst` from its
+    /// deterministic lineage peer. With one worker there is no network to
+    /// re-cross (local re-read, free) — matching `Stage::transfer`.
+    fn refetch(
+        rec_in: &mut [u64],
+        rec_out: &mut [u64],
+        shuffled: &mut u64,
+        dst: usize,
+        bytes: u64,
+    ) {
+        let k = rec_in.len();
+        let src = (dst + 1) % k;
+        if src == dst || bytes == 0 {
+            return;
+        }
+        rec_out[src] += bytes;
+        rec_in[dst] += bytes;
+        *shuffled += bytes;
+    }
+
+    /// Decide and price this stage's faults. Called (deterministically, in
+    /// program order) by [`SimCluster::record`] with the stage's byte
+    /// counts before they are moved into the primary rows. Returns the
+    /// additive `recovery/{name}` rows, or `None` when nothing fired.
+    pub(crate) fn inject(
+        &mut self,
+        name: &str,
+        compute: &[f64],
+        bytes_in: &[u64],
+        bytes_out: &[u64],
+        tm: &TimeModel,
+    ) -> Option<Recovery> {
+        if self.plan.is_zero() {
+            return None;
+        }
+        let k = bytes_in.len();
+        let tag = stage_tag(name);
+        let seq = {
+            let e = self.seq.entry(tag).or_insert(0);
+            let s = *e;
+            *e += 1;
+            s
+        };
+        let mut rec_in = vec![0u64; k];
+        let mut rec_out = vec![0u64; k];
+        let mut rec_wall = 0.0f64;
+        let mut shuffled = 0u64;
+        let mut extra = 0.0f64;
+        let mut events = 0u64;
+        for w in 0..k {
+            if self.dead.contains(&w) {
+                continue;
+            }
+            // worker crash at the stage boundary → lineage re-execution:
+            // re-fetch the worker's inputs and re-run its task
+            let h = self.plan.decide(KIND_CRASH, tag, seq, w);
+            if hits(h, self.plan.crash_prob) {
+                self.report.injected += 1;
+                if self.consume_budget(w) {
+                    extra += self.plan.backoff_total(self.plan.retry_count(h))
+                        + tm.transfer_secs(bytes_in[w]);
+                    Self::refetch(&mut rec_in, &mut rec_out, &mut shuffled, w, bytes_in[w]);
+                    rec_wall += compute[w];
+                    self.report.recovered += 1;
+                    events += 1;
+                }
+            }
+            // lost shuffle partition → the sender's retained map output is
+            // re-sent (no re-execution needed)
+            let h = self.plan.decide(KIND_LOST, tag, seq, w);
+            if hits(h, self.plan.lost_prob) && bytes_in[w] > 0 {
+                self.report.injected += 1;
+                if self.consume_budget(w) {
+                    extra += self.plan.backoff_total(self.plan.retry_count(h))
+                        + tm.transfer_secs(bytes_in[w]);
+                    Self::refetch(&mut rec_in, &mut rec_out, &mut shuffled, w, bytes_in[w]);
+                    self.report.recovered += 1;
+                    events += 1;
+                }
+            }
+            // straggler: speculative backup copy past the threshold
+            // (duplicated input fetch, finishes at full speed), otherwise
+            // the stall is absorbed as priced slowdown
+            let h = self.plan.decide(KIND_STRAGGLE, tag, seq, w);
+            if hits(h, self.plan.straggler_prob) {
+                self.report.injected += 1;
+                if self.plan.straggler_factor >= self.plan.speculation_factor && k > 1 {
+                    extra += tm.transfer_secs(bytes_in[w]);
+                    Self::refetch(&mut rec_in, &mut rec_out, &mut shuffled, w, bytes_in[w]);
+                    self.report.speculative += 1;
+                } else {
+                    extra += (self.plan.straggler_factor - 1.0).max(0.0)
+                        * tm.transfer_secs(bytes_in[w] + bytes_out[w]);
+                }
+                self.report.recovered += 1;
+                events += 1;
+            }
+            // transient send failure → bounded retransmit with backoff
+            let h = self.plan.decide(KIND_SEND, tag, seq, w);
+            if hits(h, self.plan.send_prob) && bytes_out[w] > 0 {
+                self.report.injected += 1;
+                if self.consume_budget(w) {
+                    let retries = self.plan.retry_count(h);
+                    extra += self.plan.backoff_total(retries) + tm.transfer_secs(bytes_out[w]);
+                    Self::refetch(
+                        &mut rec_out,
+                        &mut rec_in,
+                        &mut shuffled,
+                        w,
+                        bytes_out[w],
+                    );
+                    self.report.recovered += 1;
+                    events += 1;
+                }
+            }
+        }
+        if events == 0 && shuffled == 0 && extra == 0.0 {
+            return None;
+        }
+        extra += tm.stage_latency; // the recovery stage's own launch cost
+        self.report.retry_bytes += shuffled;
+        self.report.extra_sim_secs += extra;
+        let name = format!("recovery/{name}");
+        Some(Recovery {
+            traffic: StageTraffic {
+                stage: name.clone(),
+                bytes_in: rec_in,
+                bytes_out: rec_out,
+            },
+            metrics: StageMetrics {
+                name,
+                sim_secs: extra,
+                wall_secs: rec_wall,
+                shuffled_bytes: shuffled,
+                items: events,
+            },
+            extra_secs: extra,
+        })
+    }
+
+    /// Detach the finished run's report (dead set included) and reset for
+    /// the next run on this cluster handle.
+    pub fn take_report(&mut self) -> FaultReport {
+        let mut r = std::mem::take(&mut self.report);
+        r.dead_workers = self.dead.iter().copied().collect();
+        self.seq.clear();
+        self.dead.clear();
+        self.budget_left = self.plan.failure_budget;
+        r
+    }
+}
+
+/// The worker a stratum's sample lived on: deterministic striping of
+/// stratum keys onto workers, independent of thread count and of the
+/// physical partition layout (this is the *loss* model, not the routing
+/// table).
+pub fn stratum_worker(key: u64, k: usize) -> usize {
+    let mut s = key ^ 0xA076_1D64_78BD_642F;
+    (splitmix64(&mut s) % k.max(1) as u64) as usize
+}
+
+/// Accuracy-preserving degradation: drop the strata whose samples lived
+/// on dead workers and re-weight the survivors so the estimators still
+/// target the full population.
+///
+/// Each surviving stratum's `population` is scaled by
+/// `(lost + surviving) / surviving`: the CLT sum estimate scales back up
+/// and its variance term widens the CI, and the Horvitz-Thompson
+/// inclusion probability `1 - (1 - 1/B)^b` shrinks through the same
+/// population term, expanding its estimate identically. Dead keys' raw
+/// draw counts are dropped with their strata.
+///
+/// Re-scaling re-centers the estimate, but the within-stratum variance
+/// terms know nothing about the strata that vanished — the dominant
+/// error of a degraded run is *which* stratum totals were lost, not the
+/// sampling noise inside the survivors. So the loss variance is priced
+/// explicitly: the between-strata dispersion of the survivors' total
+/// estimates, scaled by the dropped count (`d·σ̂τ²·(1 + d/s)`), is folded
+/// into the survivors' excess second moments. Only `sumsq − sum²/count`
+/// is inflated, so every estimate (CLT, HT, mean) is bit-unchanged and
+/// only the confidence intervals widen.
+///
+/// Exact (unsampled) runs have no error bound to absorb the loss: if any
+/// stratum is doomed they fail with [`JoinError::Degraded`]. Losing
+/// *every* stratum is unrecoverable for sampled runs too.
+///
+/// All floating-point accumulation walks strata in ascending key order —
+/// `HashMap` iteration order is not deterministic across processes, and
+/// a last-bit difference in `scale` would break the bit-identity
+/// contract.
+pub fn degrade_strata(
+    report: &mut FaultReport,
+    strata: &mut HashMap<u64, StratumAgg>,
+    draws: &mut HashMap<u64, f64>,
+    k: usize,
+    sampled: bool,
+) -> Result<(), JoinError> {
+    if report.dead_workers.is_empty() {
+        return Ok(());
+    }
+    let dead: BTreeSet<usize> = report.dead_workers.iter().copied().collect();
+    let mut keys: Vec<u64> = strata.keys().copied().collect();
+    keys.sort_unstable();
+    let doomed: Vec<u64> = keys
+        .iter()
+        .copied()
+        .filter(|&key| dead.contains(&stratum_worker(key, k)))
+        .collect();
+    if doomed.is_empty() {
+        report.surviving_population = keys.iter().map(|k| strata[k].population).sum();
+        return Ok(());
+    }
+    if !sampled {
+        return Err(JoinError::Degraded {
+            dead_workers: dead.len(),
+            dropped_strata: doomed.len() as u64,
+            reason: "exact join output lost with its workers (no error bound to widen)".into(),
+        });
+    }
+    let mut lost = 0.0;
+    for key in &doomed {
+        if let Some(s) = strata.remove(key) {
+            lost += s.population;
+        }
+        draws.remove(key);
+    }
+    keys.retain(|key| strata.contains_key(key));
+    let surviving: f64 = keys.iter().map(|k| strata[k].population).sum();
+    if strata.is_empty() || surviving <= 0.0 {
+        return Err(JoinError::Degraded {
+            dead_workers: dead.len(),
+            dropped_strata: doomed.len() as u64,
+            reason: "every stratum lost with its workers".into(),
+        });
+    }
+    // Between-strata dispersion of the survivors' (pre-scaling) total
+    // estimates — the model for how much the d dropped totals can differ
+    // from the re-weighting's implicit imputation.
+    let totals: Vec<f64> = keys
+        .iter()
+        .map(|k| &strata[k])
+        .filter(|s| s.count > 0.0)
+        .map(|s| s.population / s.count * s.sum)
+        .collect();
+    let scale = (surviving + lost) / surviving;
+    for s in strata.values_mut() {
+        s.population *= scale;
+    }
+    let d = doomed.len() as f64;
+    let s_n = totals.len() as f64;
+    if s_n >= 2.0 {
+        let mean_t = totals.iter().sum::<f64>() / s_n;
+        let var_t = totals.iter().map(|t| (t - mean_t).powi(2)).sum::<f64>() / (s_n - 1.0);
+        let loss_var = d * var_t * (1.0 + d / s_n);
+        // Within-stratum CLT variance after re-scaling: the denominator of
+        // the inflation factor that folds loss_var into the excess moments.
+        let within: f64 = keys
+            .iter()
+            .map(|k| {
+                let s = &strata[k];
+                if s.count > 1.0 {
+                    s.population * (s.population - s.count).max(0.0) * s.variance() / s.count
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        if loss_var > 0.0 && within > 0.0 {
+            let lambda = 1.0 + loss_var / within;
+            for key in &keys {
+                let s = strata.get_mut(key).expect("surviving key");
+                if s.count > 1.0 {
+                    let base = s.sum * s.sum / s.count;
+                    s.sumsq = base + lambda * (s.sumsq - base).max(0.0);
+                }
+            }
+        }
+    }
+    report.dropped_strata += doomed.len() as u64;
+    report.lost_population += lost;
+    report.surviving_population += surviving;
+    Ok(())
+}
+
+/// The per-strategy tail hook: harvest the cluster's fault report, apply
+/// degradation to the finished run, and attach the report. A cluster with
+/// no plan passes the run through untouched. Sample-first baselines carry
+/// a join-level closed-form estimator that stratum re-weighting cannot
+/// repair, so they refuse degradation the way exact runs do.
+pub fn finalize_run(mut run: JoinRun, cluster: &mut SimCluster) -> Result<JoinRun, JoinError> {
+    if let Some(mut report) = cluster.take_fault_report() {
+        let reweightable = run.sampled && run.baseline.is_none();
+        degrade_strata(
+            &mut report,
+            &mut run.strata,
+            &mut run.draws,
+            cluster.k,
+            reweightable,
+        )?;
+        run.fault_report = Some(report);
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(pop: f64, sum: f64) -> StratumAgg {
+        let mut a = StratumAgg {
+            population: pop,
+            ..Default::default()
+        };
+        a.push(sum);
+        a
+    }
+
+    #[test]
+    fn zero_plan_never_fires() {
+        let mut st = FaultState::new(FaultPlan::default());
+        let tm = TimeModel::default();
+        for i in 0..50 {
+            let name = format!("stage{i}");
+            assert!(st
+                .inject(&name, &[0.0; 4], &[1000; 4], &[1000; 4], &tm)
+                .is_none());
+        }
+        let r = st.take_report();
+        assert_eq!(r, FaultReport::default());
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let plan = FaultPlan::chaos(42);
+        let tm = TimeModel::default();
+        let run = || {
+            let mut st = FaultState::new(plan);
+            let mut sigs = Vec::new();
+            for i in 0..20 {
+                let name = if i % 2 == 0 { "shuffle" } else { "sample" };
+                if let Some(rec) = st.inject(name, &[0.0; 8], &[4096; 8], &[4096; 8], &tm) {
+                    sigs.push(format!(
+                        "{}:{:?}:{:?}:{}",
+                        rec.traffic.stage,
+                        rec.traffic.bytes_in,
+                        rec.traffic.bytes_out,
+                        rec.metrics.shuffled_bytes
+                    ));
+                }
+            }
+            (sigs, st.take_report().signature())
+        };
+        assert_eq!(run(), run());
+        assert!(FaultState::new(plan).plan().crash_prob > 0.0);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let tm = TimeModel::default();
+        let report = |seed| {
+            let mut st = FaultState::new(FaultPlan::chaos(seed));
+            for i in 0..40 {
+                let name = format!("s{}", i % 3);
+                st.inject(&name, &[0.0; 8], &[4096; 8], &[4096; 8], &tm);
+            }
+            st.take_report()
+        };
+        assert_ne!(report(1).signature(), report(2).signature());
+        // salting re-seeds through splitmix, so it also differs
+        assert_ne!(
+            FaultPlan::chaos(1).salted(3).seed,
+            FaultPlan::chaos(1).seed
+        );
+    }
+
+    #[test]
+    fn budget_exhaustion_marks_workers_dead() {
+        let plan = FaultPlan {
+            crash_prob: 1.0,
+            failure_budget: 2,
+            ..FaultPlan::default()
+        };
+        let mut st = FaultState::new(plan);
+        let tm = TimeModel::default();
+        for _ in 0..4 {
+            st.inject("s", &[0.0; 3], &[100; 3], &[100; 3], &tm);
+        }
+        let r = st.take_report();
+        assert_eq!(r.recovered, 2);
+        assert!(r.degraded >= 1);
+        assert!(!r.dead_workers.is_empty());
+        // dead workers take no further faults, so injected stops growing
+        // once all three are dead
+        assert!(r.injected <= 3 * 4);
+    }
+
+    #[test]
+    fn recovery_rows_balance_ledger_and_metrics() {
+        let plan = FaultPlan {
+            lost_prob: 1.0,
+            ..FaultPlan::default()
+        };
+        let mut st = FaultState::new(plan);
+        let tm = TimeModel::default();
+        let rec = st
+            .inject("shuffle", &[0.0; 4], &[1000; 4], &[1000; 4], &tm)
+            .expect("certain fault must fire");
+        assert_eq!(rec.traffic.stage, "recovery/shuffle");
+        assert_eq!(rec.traffic.total_bytes(), rec.metrics.shuffled_bytes);
+        assert!(rec.extra_secs > 0.0);
+        let r = st.take_report();
+        assert_eq!(r.retry_bytes, rec.metrics.shuffled_bytes);
+        assert_eq!(r.injected, 4);
+        assert_eq!(r.recovered, 4);
+    }
+
+    #[test]
+    fn degrade_reweights_surviving_strata() {
+        let k = 4;
+        let mut report = FaultReport {
+            dead_workers: vec![stratum_worker(11, k)],
+            ..Default::default()
+        };
+        let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+        strata.insert(11, agg(10.0, 5.0));
+        // pick survivors on other workers
+        let mut survivors = Vec::new();
+        for key in 0..200u64 {
+            if stratum_worker(key, k) != report.dead_workers[0] {
+                survivors.push(key);
+                strata.insert(key, agg(10.0, 1.0));
+            }
+            if survivors.len() == 3 {
+                break;
+            }
+        }
+        let total: f64 = strata.values().map(|s| s.population).sum();
+        let mut draws: HashMap<u64, f64> = strata.keys().map(|&k| (k, 1.0)).collect();
+        degrade_strata(&mut report, &mut strata, &mut draws, k, true).expect("sampled degrades");
+        assert!(!strata.contains_key(&11));
+        assert!(!draws.contains_key(&11));
+        assert_eq!(report.dropped_strata, 1);
+        // re-weighted populations still sum to the original total
+        let reweighted: f64 = strata.values().map(|s| s.population).sum();
+        assert!((reweighted - total).abs() < 1e-9, "{reweighted} vs {total}");
+    }
+
+    #[test]
+    fn degrade_widens_ci_but_keeps_the_estimate() {
+        let k = 4;
+        let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+        for key in 0..40u64 {
+            let mut a = StratumAgg {
+                population: 50.0 + (key % 9) as f64,
+                ..Default::default()
+            };
+            a.push((key % 7) as f64);
+            a.push((key % 5) as f64 + 1.0);
+            strata.insert(key, a);
+        }
+        let dead = stratum_worker(7, k);
+        let mut report = FaultReport {
+            dead_workers: vec![dead],
+            ..Default::default()
+        };
+        let mut draws: HashMap<u64, f64> = strata.keys().map(|&k| (k, 2.0)).collect();
+        let original = strata.clone();
+        degrade_strata(&mut report, &mut strata, &mut draws, k, true).expect("sampled degrades");
+        assert!(report.dropped_strata > 0);
+        // hand-build the population-scaling-only twin for comparison
+        let mut scaled_only = original;
+        scaled_only.retain(|key, _| !report.dead_workers.contains(&stratum_worker(*key, k)));
+        let scale =
+            (report.surviving_population + report.lost_population) / report.surviving_population;
+        for s in scaled_only.values_mut() {
+            s.population *= scale;
+        }
+        let sorted = |m: &HashMap<u64, StratumAgg>| -> Vec<StratumAgg> {
+            let mut keys: Vec<u64> = m.keys().copied().collect();
+            keys.sort_unstable();
+            keys.iter().map(|k| m[k]).collect()
+        };
+        let degraded = crate::stats::clt_sum(&sorted(&strata), 0.95);
+        let scaled = crate::stats::clt_sum(&sorted(&scaled_only), 0.95);
+        // loss-variance inflation touches only the excess second moment:
+        // the point estimate is bit-identical, the interval strictly wider
+        assert_eq!(degraded.estimate.to_bits(), scaled.estimate.to_bits());
+        assert!(
+            degraded.error_bound > scaled.error_bound,
+            "{} !> {}",
+            degraded.error_bound,
+            scaled.error_bound
+        );
+    }
+
+    #[test]
+    fn degrade_errors_on_exact_runs() {
+        let k = 2;
+        let key = 5u64;
+        let mut report = FaultReport {
+            dead_workers: vec![stratum_worker(key, k)],
+            ..Default::default()
+        };
+        let mut strata: HashMap<u64, StratumAgg> = HashMap::new();
+        strata.insert(key, agg(1.0, 1.0));
+        let mut draws = HashMap::new();
+        let err = degrade_strata(&mut report, &mut strata, &mut draws, k, false)
+            .expect_err("exact runs cannot absorb loss");
+        assert!(matches!(err, JoinError::Degraded { .. }));
+    }
+
+    #[test]
+    fn parse_round_trip_and_errors() {
+        let p = FaultPlan::parse("crash=0.1,lost=0.05,straggle=0.2x4,send=0.3,budget=8,seed=9")
+            .expect("valid spec");
+        assert_eq!(p.crash_prob, 0.1);
+        assert_eq!(p.lost_prob, 0.05);
+        assert_eq!(p.straggler_prob, 0.2);
+        assert_eq!(p.straggler_factor, 4.0);
+        assert_eq!(p.send_prob, 0.3);
+        assert_eq!(p.failure_budget, 8);
+        assert_eq!(p.seed, 9);
+        assert!(FaultPlan::parse("crash=2.0").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("crash").is_err());
+        assert!(FaultPlan::parse("").expect("empty is zero plan").is_zero());
+    }
+
+    #[test]
+    fn overhead_factor_is_one_for_zero_plans() {
+        assert_eq!(FaultPlan::default().expected_overhead_factor(), 1.0);
+        assert!(FaultPlan::chaos(1).expected_overhead_factor() > 1.0);
+    }
+
+    #[test]
+    fn report_merge_unions_dead_workers() {
+        let mut a = FaultReport {
+            injected: 2,
+            recovered: 1,
+            dead_workers: vec![0, 3],
+            ..Default::default()
+        };
+        let b = FaultReport {
+            injected: 1,
+            degraded: 1,
+            dead_workers: vec![1, 3],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.injected, 3);
+        assert_eq!(a.dead_workers, vec![0, 1, 3]);
+    }
+}

@@ -179,7 +179,7 @@ pub fn approx_join(
     let filtered = filter_and_shuffle(cluster, inputs, filter_cfg, prober)?;
     let filter_report = filtered.join_filter.report();
     let (strata, draws) = sample_stage(cluster, &filtered, op, cfg, agg)?;
-    Ok(JoinRun {
+    let run = JoinRun {
         strata,
         metrics: cluster.take_metrics(),
         ledger: cluster.take_ledger(),
@@ -187,7 +187,9 @@ pub fn approx_join(
         draws,
         filter_report: Some(filter_report),
         baseline: None,
-    })
+        fault_report: None,
+    };
+    crate::faults::finalize_run(run, cluster)
 }
 
 /// The sampling stage alone (Alg 2 over already-filtered groups) — used by

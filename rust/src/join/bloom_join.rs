@@ -391,9 +391,12 @@ pub fn bloom_join(
     let report = filtered.join_filter.report();
     let strata = cross_product_stage(cluster, &filtered, op);
     let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-    Ok(JoinRun::exact(strata, metrics)
-        .with_ledger(ledger)
-        .with_filter_report(report))
+    crate::faults::finalize_run(
+        JoinRun::exact(strata, metrics)
+            .with_ledger(ledger)
+            .with_filter_report(report),
+        cluster,
+    )
 }
 
 /// Semi/anti join on Bloom membership alone (no stage-2 shuffle): stage 1's
@@ -508,9 +511,12 @@ pub fn bloom_membership_join(
     s.finish(cluster);
 
     let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-    Ok(JoinRun::exact(strata, metrics)
-        .with_ledger(ledger)
-        .with_filter_report(report))
+    crate::faults::finalize_run(
+        JoinRun::exact(strata, metrics)
+            .with_ledger(ledger)
+            .with_filter_report(report),
+        cluster,
+    )
 }
 
 #[cfg(test)]

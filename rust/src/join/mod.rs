@@ -400,6 +400,10 @@ pub struct JoinRun {
     /// Samples"): their estimator is join-level, not stratum-level, so the
     /// run carries the closed-form estimates alongside the sampled strata.
     pub baseline: Option<SampleFirstReport>,
+    /// What the injected fault plan did to this run (`None` when the
+    /// cluster had no plan): injected/recovered/degraded counts, retry
+    /// bytes, priced extra sim-seconds, and any degradation re-weighting.
+    pub fault_report: Option<crate::faults::FaultReport>,
 }
 
 impl JoinRun {
@@ -412,6 +416,7 @@ impl JoinRun {
             draws: HashMap::new(),
             filter_report: None,
             baseline: None,
+            fault_report: None,
         }
     }
 
@@ -476,6 +481,16 @@ pub enum JoinError {
         predicted_wait_secs: f64,
         hard_limit_secs: f64,
     },
+    /// Injected faults exhausted the failure budget and the lost data
+    /// cannot be absorbed: exact (unsampled) runs lost output strata with
+    /// their workers, or a sampled run lost *every* stratum. Sampled runs
+    /// that keep at least one stratum degrade gracefully (wider CIs, a
+    /// populated `FaultReport`) instead of raising this.
+    Degraded {
+        dead_workers: usize,
+        dropped_strata: u64,
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for JoinError {
@@ -495,6 +510,15 @@ impl std::fmt::Display for JoinError {
                 f,
                 "server overloaded: predicted queue wait {predicted_wait_secs:.3}s \
                  exceeds the hard limit {hard_limit_secs:.3}s"
+            ),
+            JoinError::Degraded {
+                dead_workers,
+                dropped_strata,
+                reason,
+            } => write!(
+                f,
+                "degraded past recovery: {dead_workers} dead worker(s), \
+                 {dropped_strata} stratum/strata lost — {reason}"
             ),
         }
     }

@@ -112,7 +112,7 @@ pub fn native_join(
     }
 
     let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-    Ok(JoinRun::exact(strata, metrics).with_ledger(ledger))
+    crate::faults::finalize_run(JoinRun::exact(strata, metrics).with_ledger(ledger), cluster)
 }
 
 #[cfg(test)]

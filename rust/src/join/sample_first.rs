@@ -292,7 +292,7 @@ impl UniverseJoin {
         s.finish(cluster);
 
         let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-        Ok(JoinRun {
+        let run = JoinRun {
             strata: strata.into_iter().collect::<HashMap<_, _>>(),
             metrics,
             ledger,
@@ -300,7 +300,9 @@ impl UniverseJoin {
             draws: HashMap::new(),
             filter_report: None,
             baseline: Some(report),
-        })
+            fault_report: None,
+        };
+        crate::faults::finalize_run(run, cluster)
     }
 }
 
@@ -484,7 +486,7 @@ impl JoinStrategy for BernoulliJoin {
         s.finish(cluster);
 
         let (metrics, ledger) = (cluster.take_metrics(), cluster.take_ledger());
-        Ok(JoinRun {
+        let run = JoinRun {
             strata: strata.into_iter().collect::<HashMap<_, _>>(),
             metrics,
             ledger,
@@ -492,7 +494,9 @@ impl JoinStrategy for BernoulliJoin {
             draws: HashMap::new(),
             filter_report: None,
             baseline: Some(report),
-        })
+            fault_report: None,
+        };
+        crate::faults::finalize_run(run, cluster)
     }
 
     fn execute_variant(

@@ -214,6 +214,32 @@
 //! continuous` CLI subcommand, serving subscriptions
 //! (`serve::SubscriptionWorkload`), `examples/continuous_queries.rs`,
 //! and the `fig_continuous` bench.
+//!
+//! ## Fault injection & accuracy-preserving recovery
+//!
+//! The [`faults`] module makes the simulated cluster unreliable on
+//! purpose — deterministically. A [`faults::FaultPlan`] decides crashes,
+//! lost shuffle partitions, stragglers, and send failures as pure
+//! hashes of `(seed, kind, stage, occurrence, worker)`, consulted at the
+//! [`cluster::SimCluster::record`] chokepoint so every execution path is
+//! covered without per-strategy code (`SimCluster::with_faults`,
+//! `EngineConfig::faults`, CLI `--faults`). Recovery mirrors Spark's
+//! lineage model — bounded retry with virtual-time backoff, upstream
+//! re-fetch and task re-execution, speculative straggler copies — and is
+//! strictly *additive*: `recovery/{stage}` ledger/metrics rows price the
+//! repair next to the traffic it repairs, primary rows stay untouched,
+//! and a zero-probability plan is bit-identical to no plan. When the
+//! failure budget runs out, workers die and sampled runs **degrade
+//! instead of erroring** ([`faults::degrade_strata`]): dead workers'
+//! strata drop, survivors re-weight to keep targeting the full
+//! population, and the measured between-strata loss variance widens the
+//! confidence interval — the estimate is bit-unchanged, the interval
+//! honest. Exact runs fail with the typed `JoinError::Degraded`. Every
+//! outcome carries a [`faults::FaultReport`], and the serving layer's
+//! admission prices the plan's expected overhead before any stage runs.
+//! `tests/fault_recovery.rs` holds the chaos contract: 100-seed ≥ 85%
+//! CI coverage under worker death, 1/2/8-thread bit-identity of faulted
+//! runs, and kill-all fuzz without a single panic.
 
 pub mod bloom;
 pub mod cluster;
@@ -221,6 +247,7 @@ pub mod continuous;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod faults;
 pub mod join;
 pub mod query;
 pub mod relation;

@@ -65,19 +65,20 @@ fn print_help() {
          USAGE: approxjoin <query|explain|compare|stream|serve|continuous|\n\
          \u{20}               profile|simulate> [flags]\n\n\
          query    --sql <QUERY> [--data <SPEC>] [--workers N] [--threads T]\n\
-         \u{20}         [--estimator clt|ht] [--blocked-filter]\n\
+         \u{20}         [--estimator clt|ht] [--blocked-filter] [--faults SPEC]\n\
          \u{20}         [--strategy auto|native|repartition|broadcast|bloom|approx|\n\
          \u{20}          bernoulli|universe]\n\
          explain  --sql <QUERY> [--data <SPEC>] [--workers N] [--strategy <S>]\n\
          \u{20}         prints the JoinPlan: input statistics, chosen strategy and\n\
          \u{20}         the full cost ranking, without executing the join\n\
-         compare  [--data <SPEC>] [--workers N] [--threads T]\n\
+         compare  [--data <SPEC>] [--workers N] [--threads T] [--faults SPEC]\n\
          \u{20}         runs every strategy, reporting measured shuffled bytes\n\
          \u{20}         (ledger) next to the cost model's prediction\n\
          stream   [--batches N] [--window W] [--slide S] [--events N]\n\
          \u{20}         [--overlap F] [--fraction F] [--estimator clt|ht]\n\
          \u{20}         [--workers N] [--threads T] [--seed S] [--unfiltered]\n\
          \u{20}         [--blocked-filter] [--variant inner|left|right|full|semi|anti]\n\
+         \u{20}         [--faults SPEC]\n\
          \u{20}         windowed streaming join over the unbounded event\n\
          \u{20}         generator: incremental Bloom sketching (expired tuples\n\
          \u{20}         deleted, never rebuilt), eviction-aware per-stratum\n\
@@ -85,7 +86,7 @@ fn print_help() {
          \u{20}         shuffle ledger\n\
          serve    [--clients N] [--queries N] [--data <SPEC>] [--workers N]\n\
          \u{20}         [--threads T] [--slo SECS] [--hard-limit SECS]\n\
-         \u{20}         [--burst] [--check]\n\
+         \u{20}         [--burst] [--check] [--faults SPEC]\n\
          \u{20}         runs a scripted concurrent workload through the\n\
          \u{20}         multi-tenant Server: one isolated session per client\n\
          \u{20}         (own feedback scope + result cache), one shared sketch\n\
@@ -99,7 +100,7 @@ fn print_help() {
          \u{20}         as WITHIN budgets.\n\
          continuous [--queries N] [--batches N] [--window W] [--threads T]\n\
          \u{20}         [--rows N] [--keyspace K] [--groups G] [--seed S]\n\
-         \u{20}         [--check]\n\
+         \u{20}         [--check] [--faults SPEC]\n\
          \u{20}         registers N standing queries (grouped/ungrouped,\n\
          \u{20}         predicated, SEMI/ANTI mix) on a ContinuousEngine, then\n\
          \u{20}         pushes a deterministic feed of micro-batches through a\n\
@@ -119,6 +120,16 @@ fn print_help() {
          memory access per probe instead of k scattered reads. Results are\n\
          identical (false positives die at the cogroup); the measured fill\n\
          fp rate is reported in the executed plan's explain output.\n\n\
+         --faults SPEC (query|compare|stream|serve|continuous) injects a\n\
+         deterministic chaos plan: comma-separated key=value with keys\n\
+         crash, lost, send (probabilities), straggle=PROB[xFACTOR],\n\
+         retries, backoff, budget, spec-factor, seed — e.g.\n\
+         \u{20}  --faults crash=0.1,lost=0.05,straggle=0.1x4,budget=8,seed=7\n\
+         Faults are recovered by priced retries / lineage re-execution /\n\
+         speculation; past the failure budget, sampled queries drop the\n\
+         dead workers' strata, re-weight the survivors and widen the CI\n\
+         instead of erroring. Same plan + seed => bit-identical faults,\n\
+         recovery traffic and report at any --threads.\n\n\
          The planner picks the strategy from input statistics and the cost\n\
          model (--strategy auto, the default); budget clauses in the query\n\
          (WITHIN ... SECONDS, ERROR ... CONFIDENCE ...) route to the sampled\n\
@@ -170,6 +181,14 @@ fn threads_flag(args: &[String]) -> anyhow::Result<usize> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or_else(approxjoin::runtime::default_parallelism))
+}
+
+/// `--faults SPEC` parses a deterministic fault-injection plan, e.g.
+/// `--faults crash=0.1,lost=0.05,straggle=0.1x4,send=0.2,budget=8,seed=7`.
+fn faults_flag(args: &[String]) -> anyhow::Result<Option<approxjoin::faults::FaultPlan>> {
+    flag(args, "--faults")
+        .map(|spec| approxjoin::faults::FaultPlan::parse(&spec))
+        .transpose()
 }
 
 /// `--blocked-filter` opts into the cache-line-blocked Bloom layout (one
@@ -319,6 +338,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
             estimator,
             parallelism: threads,
             filter_kind: filter_kind_flag(args),
+            faults: faults_flag(args)?,
             ..Default::default()
         },
     )?;
@@ -362,6 +382,27 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
         fmt::duration(out.sim_secs),
         fmt::duration(out.d_dt)
     );
+    if let Some(f) = &out.fault_report {
+        println!(
+            "faults: {} injected, {} recovered ({} speculative), {} past budget; \
+             {} re-fetched, +{} recovery time{}",
+            f.injected,
+            f.recovered,
+            f.speculative,
+            f.degraded,
+            fmt::bytes(f.retry_bytes),
+            fmt::duration(f.extra_sim_secs),
+            if f.is_degraded() {
+                format!(
+                    "; DEGRADED: {} dead worker(s), {} strata dropped, CI widened",
+                    f.dead_workers.len(),
+                    f.dropped_strata
+                )
+            } else {
+                String::new()
+            }
+        );
+    }
     let predicted = out
         .plan
         .as_ref()
@@ -464,7 +505,12 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
     let data = flag(args, "--data").unwrap_or_else(|| "synthetic".into());
     let inputs = load_data(&data, workers)?;
     let tm = approxjoin::cluster::TimeModel::default();
-    let mk = || approxjoin::cluster::SimCluster::new(workers, tm).with_parallelism(threads);
+    let faults = faults_flag(args)?;
+    let mk = || {
+        approxjoin::cluster::SimCluster::new(workers, tm)
+            .with_parallelism(threads)
+            .with_faults(faults)
+    };
     let registry = StrategyRegistry::with_defaults();
     // cost-model predictions, to print next to the measured ledger bytes
     let stats = approxjoin::join::InputStats::collect(&inputs, workers, &tm);
@@ -568,6 +614,7 @@ fn cmd_stream(args: &[String]) -> anyhow::Result<()> {
         estimator,
         seed,
         filter_kind: filter_kind_flag(args),
+        faults: faults_flag(args)?,
         ..Default::default()
     })
     .window(WindowSpec::sliding(wsize, slide))
@@ -657,6 +704,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             workers,
             parallelism: 1,
             filter_kind: filter_kind_flag(args),
+            faults: faults_flag(args)?,
             ..Default::default()
         },
         serve_threads: threads,
@@ -767,8 +815,13 @@ fn cmd_continuous(args: &[String]) -> anyhow::Result<()> {
             ..Default::default()
         },
     };
+    let faults = faults_flag(args)?;
     let server = Server::new(ServeConfig {
         serve_threads: threads,
+        engine: EngineConfig {
+            faults,
+            ..Default::default()
+        },
         ..Default::default()
     });
     println!(
@@ -800,6 +853,10 @@ fn cmd_continuous(args: &[String]) -> anyhow::Result<()> {
     if check {
         let seq = Server::new(ServeConfig {
             serve_threads: 1,
+            engine: EngineConfig {
+                faults,
+                ..Default::default()
+            },
             ..Default::default()
         });
         let replay = seq.run_subscriptions(&sub)?;

@@ -108,6 +108,10 @@ pub struct ServedOutcome {
     pub explain: Option<String>,
     /// Shuffle bytes this execution moved (0 for result-cache hits).
     pub ledger_bytes: u64,
+    /// Faults injected into this execution and how they were recovered;
+    /// `None` when no fault plan is configured (and on result-cache hits,
+    /// which replay a previous execution's bits without re-running it).
+    pub fault_report: Option<crate::faults::FaultReport>,
 }
 
 /// One query's reply, tagged with who asked and where in their script.
@@ -139,6 +143,10 @@ pub struct ServeReport {
     /// Per-stage shuffle traffic, tagged `client{c}/...`.
     pub ledger: ShuffleLedger,
     pub serve_threads: usize,
+    /// Merged fault report over every executed answer — injected /
+    /// recovered / degraded counters and the union of dead workers;
+    /// `None` when the run was fault-free.
+    pub faults: Option<crate::faults::FaultReport>,
 }
 
 impl ServeReport {
@@ -200,7 +208,7 @@ impl ServeReport {
 
     /// Human-readable summary.
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "served {}/{} queries in {:.3}s on {} threads ({:.1} QPS)\n\
              admission: {} admitted, {} degraded, {} rejected ({:.0}% rejection)\n\
              sketch cache: {} cogroup + {} filter hits / {} lookups ({:.0}% hit rate, {} evicted)\n\
@@ -224,7 +232,21 @@ impl ServeReport {
             self.result_lookups,
             100.0 * self.result_hit_rate(),
             self.ledger.total_bytes(),
-        )
+        );
+        if let Some(f) = &self.faults {
+            let _ = write!(
+                s,
+                "\nfaults: {} injected, {} recovered ({} speculative), {} past budget, \
+                 {} retry bytes, {} dead worker(s)",
+                f.injected,
+                f.recovered,
+                f.speculative,
+                f.degraded,
+                f.retry_bytes,
+                f.dead_workers.len(),
+            );
+        }
+        s
     }
 }
 
@@ -241,6 +263,9 @@ pub struct SubscriptionReport {
     pub carried_strata: u64,
     /// Arrival + eviction records spliced through the columnar cogroups.
     pub spliced_rows: u64,
+    /// Standing queries whose state was lost to injected faults and
+    /// rebuilt by window replay (0 without a fault plan).
+    pub recovered_queries: u64,
     /// Final per-query (group, results) tables, in registration order.
     pub finals: Vec<Vec<(Value, Vec<ApproxResult>)>>,
     /// Real wall-clock seconds of the push phase.
@@ -436,6 +461,18 @@ impl Server {
                 else {
                     continue;
                 };
+                // fault-aware admission: expected retry/straggler overhead
+                // consumes lane budget up front, so a chaotic cluster
+                // degrades or rejects sooner — the same dial as load. The
+                // factor is a pure function of the plan, so decisions stay
+                // deterministic.
+                let predicted = predicted
+                    * self
+                        .cfg
+                        .engine
+                        .faults
+                        .map(|p| p.expected_overhead_factor())
+                        .unwrap_or(1.0);
                 match admission.admit(predicted, parsed.budget.latency_secs) {
                     AdmissionDecision::Admit => {}
                     AdmissionDecision::Degrade { budget_secs } => {
@@ -475,6 +512,17 @@ impl Server {
             responses.extend(run.responses);
         }
         let executed = responses.iter().filter(|r| r.outcome.is_ok()).count();
+        let mut faults: Option<crate::faults::FaultReport> = None;
+        for r in &responses {
+            if let Ok(out) = &r.outcome {
+                if let Some(rep) = &out.fault_report {
+                    match faults.as_mut() {
+                        Some(acc) => acc.merge(rep),
+                        None => faults = Some(rep.clone()),
+                    }
+                }
+            }
+        }
         Ok(ServeReport {
             responses,
             wall_secs,
@@ -485,6 +533,7 @@ impl Server {
             result_lookups,
             ledger,
             serve_threads: self.cfg.serve_threads,
+            faults,
         })
     }
 
@@ -506,6 +555,7 @@ impl Server {
         let mut engine = ContinuousEngine::new(ContinuousConfig {
             window_batches: sub.window_batches,
             parallelism: self.cfg.serve_threads.max(1),
+            faults: self.cfg.engine.faults,
             ..ContinuousConfig::default()
         })
         .with_table("a", feed::feed_schema())
@@ -515,14 +565,15 @@ impl Server {
         }
         let mut rows = feed::RowFeed::new(sub.feed_seed, sub.spec.clone());
         let started = std::time::Instant::now();
-        let (mut notifications, mut touched, mut carried, mut spliced) =
-            (0u64, 0u64, 0u64, 0u64);
+        let (mut notifications, mut touched, mut carried, mut spliced, mut recovered) =
+            (0u64, 0u64, 0u64, 0u64, 0u64);
         for _ in 0..sub.batches {
             let up = engine.push_batch(rows.next_batch())?;
             notifications += up.notifications.len() as u64;
             touched += up.touched_strata;
             carried += up.carried_strata;
             spliced += up.spliced_rows;
+            recovered += up.recovered_queries;
         }
         let wall_secs = started.elapsed().as_secs_f64();
         let finals = (0..engine.num_queries())
@@ -540,6 +591,7 @@ impl Server {
             touched_strata: touched,
             carried_strata: carried,
             spliced_rows: spliced,
+            recovered_queries: recovered,
             finals,
             wall_secs,
             serve_threads: self.cfg.serve_threads,
@@ -618,6 +670,7 @@ impl Server {
                 staleness_age: hit.age,
                 explain: None,
                 ledger_bytes: 0,
+                fault_report: None,
             });
         }
         let out = session.query(query).run().map_err(|e| {
@@ -636,6 +689,7 @@ impl Server {
             staleness_age: 0,
             explain: out.plan.map(|p| p.explain()),
             ledger_bytes: out.ledger.total_bytes(),
+            fault_report: out.fault_report,
         })
     }
 }

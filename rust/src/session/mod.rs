@@ -524,7 +524,8 @@ impl QueryBuilder<'_> {
             session.engine.cfg.workers,
             session.engine.cfg.time_model,
         )
-        .with_parallelism(session.engine.cfg.parallelism);
+        .with_parallelism(session.engine.cfg.parallelism)
+        .with_faults(session.engine.cfg.faults);
         let run = strategy.execute_variant(
             &mut cluster,
             &exec_inputs,
@@ -615,6 +616,7 @@ impl QueryBuilder<'_> {
             grouped: None,
             filter_report: run.filter_report,
             join_order,
+            fault_report: run.fault_report,
         })
     }
 }

@@ -192,6 +192,7 @@ struct AggRun {
     ledger: crate::cluster::ShuffleLedger,
     d_dt: f64,
     filter_report: Option<crate::bloom::FilterReport>,
+    fault_report: Option<crate::faults::FaultReport>,
 }
 
 /// Execute the full relational query: one kernel run per aggregate
@@ -240,8 +241,9 @@ pub(crate) fn run_relational(
             query.fingerprint(),
             query.aggregates[ai].render()
         );
-        let mut cluster =
-            SimCluster::new(cfg.workers, cfg.time_model).with_parallelism(cfg.parallelism);
+        let mut cluster = SimCluster::new(cfg.workers, cfg.time_model)
+            .with_parallelism(cfg.parallelism)
+            .with_faults(cfg.faults);
         let run = if budgeted_approx {
             // §3.2 on the lowered inputs: measure filtering, then decide.
             // This path runs the native prober/aggregator with eq-27
@@ -278,7 +280,7 @@ pub(crate) fn run_relational(
                 total_pairs,
                 lowered.per_aggregate.len(),
             );
-            let (strata, draws, sampled) = match mode {
+            let (mut strata, mut draws, sampled) = match mode {
                 ExecutionMode::Exact => {
                     let strata = cross_product_stage(&mut cluster, &filtered, op);
                     (strata, HashMap::new(), false)
@@ -306,6 +308,18 @@ pub(crate) fn run_relational(
                     (strata, draws, true)
                 }
             };
+            // degrade BEFORE estimation: drop unrecoverable strata,
+            // re-weight survivors, widen the CI downstream
+            let mut fault_report = cluster.take_fault_report();
+            if let Some(rep) = fault_report.as_mut() {
+                crate::faults::degrade_strata(
+                    rep,
+                    &mut strata,
+                    &mut draws,
+                    cfg.workers,
+                    sampled,
+                )?;
+            }
             AggRun {
                 strata,
                 draws,
@@ -314,6 +328,7 @@ pub(crate) fn run_relational(
                 ledger: cluster.take_ledger(),
                 d_dt,
                 filter_report: Some(filter_report),
+                fault_report,
             }
         } else {
             let strategy = session
@@ -331,6 +346,7 @@ pub(crate) fn run_relational(
                 ledger: run.ledger,
                 d_dt,
                 filter_report: run.filter_report,
+                fault_report: run.fault_report,
             }
         };
         session.engine.feedback.record(&agg_fp, &run.strata);
@@ -394,6 +410,18 @@ pub(crate) fn run_relational(
         }
     }
 
+    // one report per query: per-aggregate fault reports merge (counters
+    // add, dead-worker sets union) so callers see the combined damage
+    let mut fault_report: Option<crate::faults::FaultReport> = None;
+    for run in &runs {
+        if let Some(rep) = &run.fault_report {
+            match fault_report.as_mut() {
+                Some(acc) => acc.merge(rep),
+                None => fault_report = Some(rep.clone()),
+            }
+        }
+    }
+
     let first = &runs[0];
     let output_cardinality: f64 = first.strata.values().map(|s| s.population).sum();
     let sampled_count: f64 = first.strata.values().map(|s| s.count).sum();
@@ -447,5 +475,6 @@ pub(crate) fn run_relational(
         }),
         filter_report: first.filter_report,
         join_order,
+        fault_report,
     })
 }

@@ -60,6 +60,7 @@ impl StreamingSession {
                 fp_rate: cfg.fp_rate,
                 filter_kind: cfg.filter_kind,
                 sampling: Some(base_sampling.clone()),
+                faults: cfg.faults,
                 ..Default::default()
             },
             base_sampling,
@@ -179,6 +180,7 @@ impl StreamingSession {
             parallelism: self.config.parallelism,
             sampling: self.config.sampling.clone(),
             fp_rate: self.config.fp_rate,
+            faults: self.config.faults,
             ..crate::continuous::ContinuousConfig::default()
         })
     }

@@ -120,6 +120,11 @@ pub struct StreamConfig {
     /// to drop non-joinable records before the shuffle.
     pub variant: JoinVariant,
     pub confidence: f64,
+    /// Deterministic fault injection: every emitted window runs under
+    /// `plan.salted(window_index)`, so each window draws its own faults
+    /// while the whole stream stays a pure function of the plan. `None`
+    /// runs fault-free.
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for StreamConfig {
@@ -138,6 +143,7 @@ impl Default for StreamConfig {
             combine: CombineOp::Sum,
             variant: JoinVariant::Inner,
             confidence: 0.95,
+            faults: None,
         }
     }
 }
@@ -163,6 +169,9 @@ pub struct WindowResult {
     pub refreshed_strata: u64,
     /// Strata whose reservoir carried over unchanged.
     pub carried_strata: u64,
+    /// Faults injected into this window's stages and how they were
+    /// recovered; `None` when the stream runs without a fault plan.
+    pub fault_report: Option<crate::faults::FaultReport>,
 }
 
 impl WindowResult {
@@ -357,7 +366,8 @@ impl StreamingApproxJoin {
         let n = self.n_inputs.expect("emit after at least one batch");
         let k = self.cfg.workers;
         let mut cluster = SimCluster::new(k, self.cfg.time_model)
-            .with_parallelism(self.cfg.parallelism);
+            .with_parallelism(self.cfg.parallelism)
+            .with_faults(self.cfg.faults.map(|p| p.salted(windex)));
         let exec = cluster.exec;
 
         // batches entering / leaving the window since the last emission
@@ -546,7 +556,7 @@ impl StreamingApproxJoin {
             .map(|c| c.estimator)
             .unwrap_or(EstimatorKind::Clt);
         let combine = self.cfg.combine;
-        let (strata, draws, sampled, refreshed, carried) = match &self.cfg.sampling {
+        let (mut strata, mut draws, sampled, refreshed, carried) = match &self.cfg.sampling {
             Some(acfg) => {
                 let mut s = cluster.stage("sample");
                 let prev = &self.reservoirs;
@@ -637,6 +647,19 @@ impl StreamingApproxJoin {
         // hand the columnar buffers back for the next window's rebuild
         self.cogroup_scratch = groups;
 
+        // fault harvest. Sampled windows degrade like batch queries: drop
+        // the dead workers' strata, re-weight survivors, widen the CI (an
+        // all-strata loss leaves an empty, flagged window). Exact windows
+        // keep their strata — the operator retains every live batch in
+        // memory, so a lost worker's share is replayed from the window
+        // buffer rather than dropped.
+        let mut fault_report = cluster.take_fault_report();
+        if let Some(rep) = fault_report.as_mut() {
+            if sampled {
+                let _ = crate::faults::degrade_strata(rep, &mut strata, &mut draws, k, true);
+            }
+        }
+
         let result = crate::coordinator::estimate_result(
             self.cfg.agg,
             sampled,
@@ -664,6 +687,7 @@ impl StreamingApproxJoin {
             ledger,
             refreshed_strata: refreshed,
             carried_strata: carried,
+            fault_report,
         }
     }
 }

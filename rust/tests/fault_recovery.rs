@@ -1,0 +1,376 @@
+//! Chaos harness for the fault-injection and recovery subsystem.
+//!
+//! * **Completion under chaos** — under a plan with crashes and lost
+//!   shuffle partitions, every registered strategy completes with a
+//!   populated [`FaultReport`], and the additive `recovery/` ledger rows
+//!   balance the report's retry bytes exactly.
+//! * **Determinism** — a fixed fault plan injects bit-identical faults at
+//!   1 / 2 / 8 executor threads (fingerprints include the fault report's
+//!   bit-exact signature), and a zero-probability plan is bit-identical
+//!   to running with no plan at all.
+//! * **Accuracy-preserving degradation** — 100 seeded trials with a
+//!   budget small enough that workers die: re-weighted + variance-widened
+//!   95% CIs (CLT and Horvitz-Thompson) still cover the exact-oracle
+//!   truth in >= 85% of completed runs.
+//! * **Chaos fuzz** — randomized plans (including zero-budget kill-all
+//!   plans) never panic; failures surface only as typed [`JoinError`]s.
+
+use approxjoin::cluster::{SimCluster, TimeModel};
+use approxjoin::data::{generate_overlapping, Dataset, SyntheticSpec};
+use approxjoin::faults::{FaultPlan, FaultReport};
+use approxjoin::join::approx::{ApproxConfig, SamplingParams};
+use approxjoin::join::{
+    ApproxJoin, CombineOp, JoinError, JoinRun, JoinStrategy, StrategyRegistry,
+};
+use approxjoin::query::AggFunc;
+use approxjoin::relation::grouped::estimate_slice;
+use approxjoin::stats::{EstimatorKind, StratumAgg};
+use approxjoin::testkit::ExactJoinOracle;
+
+fn cluster(threads: usize, faults: Option<FaultPlan>) -> SimCluster {
+    SimCluster::new(
+        4,
+        TimeModel {
+            bandwidth: 1e9,
+            stage_latency: 0.0,
+            compute_scale: 1.0,
+        },
+    )
+    .with_parallelism(threads)
+    .with_faults(faults)
+}
+
+fn workload(items: usize, overlap: f64, seed: u64) -> Vec<Dataset> {
+    generate_overlapping(&SyntheticSpec {
+        items_per_input: items,
+        overlap_fraction: overlap,
+        lambda: 25.0,
+        partitions: 8,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// The parallel-equivalence fingerprint extended with the fault report:
+/// everything that must be invariant under the executor thread count.
+/// Timings are measurements and stay excluded; the report's
+/// `extra_sim_secs` is priced (virtual) time, so it is included bit-exact
+/// via `FaultReport::signature`.
+fn fingerprint(run: &JoinRun) -> impl PartialEq + std::fmt::Debug {
+    let mut strata: Vec<(u64, u64, u64, u64, u64)> = run
+        .strata
+        .iter()
+        .map(|(&k, a)| {
+            (
+                k,
+                a.population.to_bits(),
+                a.count.to_bits(),
+                a.sum.to_bits(),
+                a.sumsq.to_bits(),
+            )
+        })
+        .collect();
+    strata.sort_unstable();
+    let mut draws: Vec<(u64, u64)> = run
+        .draws
+        .iter()
+        .map(|(&k, d)| (k, d.to_bits()))
+        .collect();
+    draws.sort_unstable();
+    let stages: Vec<(String, u64, u64)> = run
+        .metrics
+        .stages
+        .iter()
+        .map(|s| (s.name.clone(), s.shuffled_bytes, s.items))
+        .collect();
+    let ledger: Vec<(String, Vec<u64>, Vec<u64>)> = run
+        .ledger
+        .stages
+        .iter()
+        .map(|t| (t.stage.clone(), t.bytes_in.clone(), t.bytes_out.clone()))
+        .collect();
+    let faults = run.fault_report.as_ref().map(|f| f.signature());
+    (strata, draws, stages, ledger, run.sampled, faults)
+}
+
+#[test]
+fn every_strategy_completes_under_crash_and_lost_chaos() {
+    // crashes + lost partitions on every stage, budget ample enough that
+    // recovery (not degradation) absorbs them all
+    let plan = FaultPlan {
+        seed: 11,
+        crash_prob: 0.2,
+        lost_prob: 0.2,
+        ..FaultPlan::default()
+    };
+    let inputs = workload(6_000, 0.3, 42);
+    let registry = StrategyRegistry::with_defaults();
+    for strategy in registry.iter() {
+        let run = strategy
+            .execute(&mut cluster(1, Some(plan)), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} failed under chaos: {e}", strategy.name()));
+        let report = run
+            .fault_report
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: no fault report attached", strategy.name()));
+        assert!(
+            report.any_injected(),
+            "{}: plan with p=0.2 per stage injected nothing",
+            strategy.name()
+        );
+        assert!(
+            report.recovered > 0,
+            "{}: injected faults but recovered none",
+            strategy.name()
+        );
+        assert!(
+            !report.is_degraded(),
+            "{}: ample budget must not kill workers",
+            strategy.name()
+        );
+        // recovery is additive and accounted: the recovery/ ledger rows
+        // sum to exactly the report's retry bytes, and each recovery
+        // metrics row stays in lockstep with its ledger row
+        let recovery_ledger: u64 = run
+            .ledger
+            .stages
+            .iter()
+            .filter(|t| t.stage.starts_with("recovery/"))
+            .map(|t| t.total_bytes())
+            .sum();
+        assert_eq!(
+            recovery_ledger,
+            report.retry_bytes,
+            "{}: recovery ledger rows do not balance the report",
+            strategy.name()
+        );
+        let recovery_metrics: u64 = run
+            .metrics
+            .stages
+            .iter()
+            .filter(|s| s.name.starts_with("recovery/"))
+            .map(|s| s.shuffled_bytes)
+            .sum();
+        assert_eq!(recovery_metrics, report.retry_bytes, "{}", strategy.name());
+        assert!(report.extra_sim_secs > 0.0, "{}", strategy.name());
+    }
+}
+
+#[test]
+fn faulted_runs_bit_identical_across_thread_counts() {
+    let plan = FaultPlan {
+        failure_budget: 64,
+        ..FaultPlan::chaos(9)
+    };
+    let inputs = workload(6_000, 0.3, 7);
+    let registry = StrategyRegistry::with_defaults();
+    for strategy in registry.iter() {
+        let reference = strategy
+            .execute(&mut cluster(1, Some(plan)), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} sequential failed: {e}", strategy.name()));
+        assert!(reference.fault_report.is_some(), "{}", strategy.name());
+        for threads in [2, 8] {
+            let parallel = strategy
+                .execute(&mut cluster(threads, Some(plan)), &inputs, CombineOp::Sum)
+                .unwrap_or_else(|e| panic!("{} @ {threads} threads failed: {e}", strategy.name()));
+            assert_eq!(
+                fingerprint(&reference),
+                fingerprint(&parallel),
+                "{} diverges at {threads} threads under a fixed fault plan",
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn degraded_runs_bit_identical_across_thread_counts() {
+    // budget small enough that workers die and degradation re-weights the
+    // strata — the sorted-key accumulation in degrade_strata must make
+    // even the degraded path thread-count invariant. If the plan happens
+    // to be fatal for this workload, it must be identically fatal at
+    // every thread count.
+    let plan = FaultPlan {
+        seed: 5,
+        crash_prob: 0.15,
+        lost_prob: 0.15,
+        failure_budget: 3,
+        ..FaultPlan::default()
+    };
+    let inputs = workload(6_000, 0.3, 13);
+    let strategy = ApproxJoin::with_config(ApproxConfig {
+        params: SamplingParams::Fraction(0.5),
+        estimator: EstimatorKind::Clt,
+        seed: 21,
+    });
+    let reference = strategy.execute(&mut cluster(1, Some(plan)), &inputs, CombineOp::Sum);
+    for threads in [2, 8] {
+        let parallel = strategy.execute(&mut cluster(threads, Some(plan)), &inputs, CombineOp::Sum);
+        match (&reference, &parallel) {
+            (Ok(a), Ok(b)) => {
+                assert!(
+                    a.fault_report.as_ref().is_some_and(|f| f.is_degraded()),
+                    "budget 3 under p=0.15 x 2 kinds should kill at least one worker"
+                );
+                assert_eq!(fingerprint(a), fingerprint(b), "degraded run diverges");
+            }
+            (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+            (a, b) => panic!(
+                "outcome flipped with thread count: {:?} vs {:?}",
+                a.as_ref().map(|_| "ok").map_err(|e| e.to_string()),
+                b.as_ref().map(|_| "ok").map_err(|e| e.to_string()),
+            ),
+        }
+    }
+}
+
+#[test]
+fn zero_fault_plan_is_bit_identical_to_no_plan() {
+    let inputs = workload(6_000, 0.3, 42);
+    let registry = StrategyRegistry::with_defaults();
+    for strategy in registry.iter() {
+        let bare = strategy
+            .execute(&mut cluster(2, None), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", strategy.name()));
+        let zeroed = strategy
+            .execute(&mut cluster(2, Some(FaultPlan::default())), &inputs, CombineOp::Sum)
+            .unwrap_or_else(|e| panic!("{} failed under zero plan: {e}", strategy.name()));
+        assert!(bare.fault_report.is_none(), "{}", strategy.name());
+        assert_eq!(
+            zeroed.fault_report,
+            Some(FaultReport::default()),
+            "{}: zero plan must report nothing",
+            strategy.name()
+        );
+        // strip the report (None vs Some(default) is the only allowed
+        // difference) and require everything else bit-identical
+        let mut stripped = zeroed;
+        stripped.fault_report = None;
+        assert_eq!(
+            fingerprint(&bare),
+            fingerprint(&stripped),
+            "{}: zero-probability plan changed the run",
+            strategy.name()
+        );
+    }
+}
+
+/// Estimator dispatch mirroring the session's scalar result assembly:
+/// ascending-key stratum order, HT draw counts aligned to it.
+fn result_of(run: &JoinRun, estimator: EstimatorKind) -> approxjoin::stats::ApproxResult {
+    let mut keys: Vec<u64> = run.strata.keys().copied().collect();
+    keys.sort_unstable();
+    let strata: Vec<StratumAgg> = keys.iter().map(|k| run.strata[k]).collect();
+    let draws: Vec<f64> = if estimator == EstimatorKind::HorvitzThompson {
+        keys.iter()
+            .map(|k| run.draws.get(k).copied().unwrap_or(0.0))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    estimate_slice(AggFunc::Sum, run.sampled, estimator, &strata, &draws, 0.95)
+}
+
+#[test]
+fn degraded_intervals_cover_truth_at_85_percent() {
+    // 100 seeded trials per estimator with a failure budget small enough
+    // that most runs lose workers: the re-weighted, variance-widened 95%
+    // CIs must still cover the brute-force oracle truth in >= 85% of the
+    // runs that complete. Runs where degradation is unrecoverable (every
+    // stratum lost) return a typed error and are excluded — but they must
+    // stay rare.
+    let reps = 100u32;
+    for estimator in [EstimatorKind::Clt, EstimatorKind::HorvitzThompson] {
+        let mut covered = 0u32;
+        let mut completed = 0u32;
+        let mut degraded = 0u32;
+        for seed in 0..reps as u64 {
+            let inputs = workload(3_000, 0.3, 1000 + seed);
+            let truth = ExactJoinOracle::new(&inputs).sum(CombineOp::Sum, approxjoin::join::JoinVariant::Inner);
+            let plan = FaultPlan {
+                seed: 7000 + seed,
+                crash_prob: 0.1,
+                lost_prob: 0.1,
+                failure_budget: 4,
+                ..FaultPlan::default()
+            };
+            let strategy = ApproxJoin::with_config(ApproxConfig {
+                params: SamplingParams::Fraction(0.5),
+                estimator,
+                seed: 31 + seed,
+            });
+            let run = match strategy.execute(&mut cluster(1, Some(plan)), &inputs, CombineOp::Sum)
+            {
+                Ok(run) => run,
+                Err(JoinError::Degraded { .. }) => continue,
+                Err(e) => panic!("seed {seed}: unexpected error {e}"),
+            };
+            completed += 1;
+            if run.fault_report.as_ref().is_some_and(|f| f.is_degraded()) {
+                degraded += 1;
+            }
+            let res = result_of(&run, estimator);
+            if (res.estimate - truth).abs() <= res.error_bound {
+                covered += 1;
+            }
+        }
+        assert!(
+            completed >= 90,
+            "{estimator:?}: too many unrecoverable runs ({completed}/{reps} completed)"
+        );
+        assert!(
+            degraded >= 10,
+            "{estimator:?}: budget 4 exercised degradation only {degraded}x — not a chaos test"
+        );
+        assert!(
+            covered * 100 >= completed * 85,
+            "{estimator:?}: coverage {covered}/{completed} below 85% ({degraded} degraded)"
+        );
+    }
+}
+
+#[test]
+fn chaos_fuzz_never_panics_only_typed_errors() {
+    // randomized plans — moderate chaos with varying budgets, plus
+    // zero-budget kill-all plans where every fault marks its worker dead.
+    // Nothing may panic; every failure must be a typed JoinError.
+    let registry = StrategyRegistry::with_defaults();
+    let mut completions = 0u32;
+    let mut typed_errors = 0u32;
+    for case in 0..24u64 {
+        let plan = if case % 6 == 5 {
+            FaultPlan {
+                seed: case,
+                crash_prob: 1.0,
+                lost_prob: 1.0,
+                failure_budget: 0,
+                ..FaultPlan::default()
+            }
+        } else {
+            FaultPlan {
+                failure_budget: (case % 12) as u32,
+                ..FaultPlan::chaos(case)
+            }
+        };
+        let inputs = workload(1_500, 0.2, 77 + case);
+        for strategy in registry.iter() {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                strategy.execute(&mut cluster(1, Some(plan)), &inputs, CombineOp::Sum)
+            }));
+            match outcome {
+                Ok(Ok(run)) => {
+                    completions += 1;
+                    assert!(run.fault_report.is_some());
+                }
+                Ok(Err(JoinError::Degraded { .. })) => typed_errors += 1,
+                Ok(Err(e)) => panic!("{} case {case}: non-degradation error {e}", strategy.name()),
+                Err(_) => panic!("{} case {case}: panicked under chaos", strategy.name()),
+            }
+        }
+    }
+    assert!(completions > 0, "no chaos case ever completed");
+    assert!(
+        typed_errors > 0,
+        "zero-budget kill-all plans should surface typed Degraded errors"
+    );
+}
